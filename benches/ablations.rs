@@ -1,0 +1,113 @@
+//! Ablation benches for the design choices DESIGN.md calls out (paper's
+//! "future work: ablation testing to reduce the complexity of AdaPT"):
+//!
+//!  * PushUp combination strategy pinned to min / mean / max vs adaptive
+//!  * buffer bits 2 / 4 / 8
+//!  * gradient normalization on / off
+//!  * KL tolerance (the calibration DESIGN.md documents)
+//!
+//! Each cell trains LeNet-5 on the MNIST substitute for 3 epochs and
+//! reports final eval accuracy, mean word length and sparsity.
+//!
+//!     cargo bench --bench ablations
+
+use std::sync::Arc;
+
+use adapt::coordinator::{train_with_data, Policy, TrainConfig};
+use adapt::data::SyntheticVision;
+use adapt::quant::QuantHyper;
+use adapt::runtime::{artifacts_dir, Engine, LoadedModel};
+
+fn run_cell(
+    model: &LoadedModel,
+    hyper: QuantHyper,
+    gnorm: bool,
+    label: &str,
+) -> anyhow::Result<()> {
+    let mut cfg = TrainConfig::fast("lenet-mnist", Policy::Adapt(hyper));
+    cfg.epochs = 3;
+    cfg.train_size = 768;
+    cfg.eval_size = 160;
+    cfg.hyper.gnorm = gnorm;
+    let data = Arc::new(SyntheticVision::mnist_like(cfg.train_size, cfg.seed));
+    let eval = Arc::new(
+        SyntheticVision::mnist_like(cfg.train_size, cfg.seed).heldout(cfg.train_size, 160),
+    );
+    let t0 = std::time::Instant::now();
+    let out = train_with_data(model, &cfg, data, eval)?;
+    let rec = &out.record;
+    let mean_wl: f64 = rec
+        .layer_wl
+        .last()
+        .unwrap()
+        .iter()
+        .map(|&w| w as f64)
+        .sum::<f64>()
+        / rec.num_layers as f64;
+    println!(
+        "{label:<34} acc {:.3}  mean-WL {:>5.1}  sparsity {:>5.1}%  switches {:>3}  {:>5.1}s",
+        rec.final_eval().unwrap_or(f32::NAN),
+        mean_wl,
+        100.0 * rec.final_model_sparsity(),
+        rec.switches.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_dir()?;
+    let engine = Engine::cpu()?;
+    let model = engine.load_model(&dir, "lenet-mnist")?;
+    let base = QuantHyper::default().scaled(0.2);
+
+    println!("== AdaPT ablations (LeNet-5 / MNIST substitute, 3 epochs) ==\n");
+
+    println!("-- buffer bits (range headroom vs width) --");
+    for buff in [2u8, 4, 8] {
+        run_cell(&model, base.with_buff(buff), true, &format!("buff={buff}"))?;
+    }
+
+    println!("\n-- KL tolerance (PushDown strictness) --");
+    for eps in [1e-2f64, 1e-3, 1e-5] {
+        let mut h = base;
+        h.kl_eps = eps;
+        run_cell(&model, h, true, &format!("kl_eps={eps:.0e}"))?;
+    }
+
+    println!("\n-- PushUp strategy (eq. 4): pinned vs loss-adaptive (eq. 5) --");
+    for st in [
+        adapt::quant::Strategy::Min,
+        adapt::quant::Strategy::Mean,
+        adapt::quant::Strategy::Max,
+    ] {
+        let mut h = base;
+        h.pin_strategy = Some(st);
+        run_cell(&model, h, true, &format!("strategy={} (pinned)", st.name()))?;
+    }
+    run_cell(&model, base, true, "strategy=adaptive")?;
+
+    println!("\n-- gradient normalization (sec. 3.3 range guard) --");
+    run_cell(&model, base, true, "gnorm=on")?;
+    run_cell(&model, base, false, "gnorm=off")?;
+
+    println!("\n-- initial precision (paper starts at <8,4>) --");
+    for (wl, fl) in [(4u8, 2u8), (8, 4), (16, 8)] {
+        let mut h = base;
+        h.initial_wl = wl;
+        h.initial_fl = fl;
+        run_cell(&model, h, true, &format!("init=<{wl},{fl}>"))?;
+    }
+
+    println!("\n-- lookback window bounds (switch cadence) --");
+    for f in [0.1f64, 0.2, 0.4] {
+        run_cell(
+            &model,
+            QuantHyper::default().scaled(f),
+            true,
+            &format!("window-scale={f}"),
+        )?;
+    }
+    println!("\n== done ==");
+    Ok(())
+}

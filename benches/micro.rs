@@ -1,0 +1,140 @@
+//! Micro-benchmarks of the L3 hot paths (hand-rolled harness: the offline
+//! registry has no criterion). Each bench reports median-of-5 wall time.
+//!
+//!     cargo bench --bench micro
+//!
+//! These cover the host-side costs the analytical performance model bounds
+//! with eq. 6/7 (PushDown/PushUp), the literal packing on the PJRT request
+//! path, and the deployed sparse-inference substrate.
+
+use std::time::Instant;
+
+use adapt::data::{Batcher, SyntheticVision};
+use adapt::fixedpoint::{
+    quantization_kl, quantize_nr_slice, quantize_sr_slice, FixedPointFormat, SparseFixedTensor,
+};
+use adapt::quant::{push_down, PushDownScratch, KL_EPS};
+use adapt::util::json::Json;
+use adapt::util::rng::Rng;
+
+/// Run `f` `iters` times per sample, 5 samples, report the median in ms.
+fn bench<F: FnMut()>(name: &str, iters: u32, mut f: F) -> f64 {
+    // warmup
+    f();
+    let mut samples: Vec<f64> = (0..5)
+        .map(|_| {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            t0.elapsed().as_secs_f64() * 1e3 / iters as f64
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = samples[2];
+    println!("{name:<44} {med:>10.4} ms/iter");
+    med
+}
+
+fn main() {
+    println!("== adapt micro benches (median of 5 samples) ==");
+    let mut rng = Rng::seed_from(42);
+    let w_small: Vec<f32> = (0..65_536).map(|_| rng.normal() as f32 * 0.1).collect();
+    let w_large: Vec<f32> = (0..1_048_576).map(|_| rng.normal() as f32 * 0.1).collect();
+    let fmt = FixedPointFormat::initial();
+
+    bench("quantize_nr 64k", 50, || {
+        std::hint::black_box(quantize_nr_slice(&w_small, fmt));
+    });
+    bench("quantize_nr 1M", 5, || {
+        std::hint::black_box(quantize_nr_slice(&w_large, fmt));
+    });
+    let mut sr_rng = Rng::seed_from(7);
+    bench("quantize_sr 64k", 50, || {
+        std::hint::black_box(quantize_sr_slice(&w_small, fmt, &mut sr_rng));
+    });
+
+    let q = quantize_nr_slice(&w_small, fmt);
+    bench("kl_divergence 64k @ r=100", 50, || {
+        std::hint::black_box(quantization_kl(&w_small, &q, 100));
+    });
+
+    let mut scratch = PushDownScratch::default();
+    bench("push_down 64k @ r=100 (full bisection)", 20, || {
+        std::hint::black_box(push_down(&w_small, 100, KL_EPS, &mut scratch));
+    });
+    bench("push_down 1M @ r=100 (full bisection)", 3, || {
+        std::hint::black_box(push_down(&w_large, 100, KL_EPS, &mut scratch));
+    });
+
+    // sparse deployment substrate
+    let dense: Vec<f32> = (0..512 * 512)
+        .map(|i| if i % 3 == 0 { 0.0 } else { 0.05 * (i % 17) as f32 - 0.4 })
+        .collect();
+    let sp = SparseFixedTensor::from_dense(&dense, 512, 512, FixedPointFormat::new(8, 4));
+    let x: Vec<f32> = (0..512).map(|i| (i as f32 * 0.01).sin()).collect();
+    bench("sparse matvec 512x512 (66% dense)", 100, || {
+        std::hint::black_box(sp.matvec(&x));
+    });
+    bench("sparse from_dense 512x512", 20, || {
+        std::hint::black_box(SparseFixedTensor::from_dense(
+            &dense,
+            512,
+            512,
+            FixedPointFormat::new(8, 4),
+        ));
+    });
+
+    // data pipeline
+    let data = std::sync::Arc::new(SyntheticVision::cifar10_like(1024, 0));
+    let mut batcher = Batcher::new(data, 32, 0);
+    bench("synthetic batch assembly 32x32x32x3", 20, || {
+        std::hint::black_box(batcher.next_batch());
+    });
+
+    // manifest parsing (the startup path)
+    if let Ok(dir) = adapt::runtime::artifacts_dir() {
+        if let Ok(text) = std::fs::read_to_string(dir.join("resnet20-c10.manifest.json")) {
+            bench("manifest JSON parse (resnet20)", 50, || {
+                std::hint::black_box(Json::parse(&text).unwrap());
+            });
+        }
+
+        // end-to-end PJRT step latency (the real request path)
+        if let Ok(engine) = adapt::runtime::Engine::cpu() {
+            if let Ok(model) = engine.load_model(&dir, "mlp-mnist") {
+                let man = &model.manifest;
+                let data = SyntheticVision::mnist_like(man.batch * 2, 0);
+                let b = Batcher::eval_batch(&data, man.batch, 0);
+                let mut state = adapt::runtime::TrainState {
+                    params: adapt::init::init_params(
+                        man,
+                        adapt::init::Initializer::Tnvs,
+                        1.0,
+                        0,
+                    ),
+                    gsum: adapt::init::init_gsum(man),
+                    bn: adapt::init::init_bn(man),
+                    step: 0,
+                };
+                let qp: Vec<f32> = (0..2 * man.num_layers)
+                    .flat_map(|_| fmt.qparams_row(1.0))
+                    .collect();
+                let hyper = adapt::runtime::Hyper::default();
+                bench("PJRT train_step mlp (batch 32)", 10, || {
+                    std::hint::black_box(
+                        model.train_step(&mut state, &b.x, &b.y, &qp, &hyper).unwrap(),
+                    );
+                });
+                bench("PJRT infer mlp (batch 32)", 10, || {
+                    std::hint::black_box(
+                        model.infer(&state.params, &state.bn, &b.x, &qp).unwrap(),
+                    );
+                });
+            }
+        }
+    } else {
+        println!("(artifacts not built; PJRT benches skipped)");
+    }
+    println!("== done ==");
+}

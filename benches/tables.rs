@@ -1,0 +1,91 @@
+//! Table/figure regeneration bench: one bench target per paper table and
+//! figure (deliverable d). Prefers cached fast-profile runs (produced by
+//! `adapt run-all --profile fast`); falls back to training tiny-profile
+//! runs so `cargo bench` is self-contained.
+//!
+//!     cargo bench --bench tables
+
+use adapt::bench_support as hs;
+use adapt::metrics::RunRecord;
+use adapt::runtime::{artifacts_dir, Engine};
+
+fn pick_profile() -> hs::Profile {
+    // use the fast-profile cache when all 12 runs exist, else tiny
+    let all = ["alexnet-c10", "alexnet-c100", "resnet20-c10", "resnet20-c100"];
+    let dir = hs::runs_dir(hs::Profile::Fast);
+    let complete = all.iter().all(|a| {
+        ["adapt", "float32", "muppet"]
+            .iter()
+            .all(|m| RunRecord::path_for(&dir, a, m).exists())
+    });
+    if complete {
+        hs::Profile::Fast
+    } else {
+        hs::Profile::Tiny
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = artifacts_dir()?;
+    let engine = Engine::cpu()?;
+    let profile = pick_profile();
+    println!("== paper table/figure regeneration ({} profile runs) ==\n", profile.name());
+
+    let t0 = std::time::Instant::now();
+    println!("=== Table 1 (top-1, CIFAR100) ===");
+    println!("{}", hs::accuracy_table(&engine, &artifacts, profile, "c100")?);
+    println!("=== Table 2 (top-1, CIFAR10) ===");
+    println!("{}", hs::accuracy_table(&engine, &artifacts, profile, "c10")?);
+    println!("=== Table 3 (MEM/SU, CIFAR10) ===");
+    println!("{}", hs::speedup_table(&engine, &artifacts, profile, "c10")?);
+    println!("=== Table 4 (MEM/SU, CIFAR100) ===");
+    println!("{}", hs::speedup_table(&engine, &artifacts, profile, "c100")?);
+    println!("=== Table 5 (sparsity) ===");
+    println!("{}", hs::sparsity_table(&engine, &artifacts, profile)?);
+    println!("=== Table 6 (inference SZ/SU) ===");
+    println!("{}", hs::inference_table(&engine, &artifacts, profile)?);
+
+    // figures: emit summary statistics of each series (full TSVs come from
+    // `adapt figure --id N`)
+    for (fig, artifact) in [(3usize, "resnet20-c100"), (4, "alexnet-c100")] {
+        let run = hs::ensure_run(&engine, &artifacts, profile, artifact, "adapt")?;
+        let wl0: f64 = run.layer_wl[0].iter().map(|&w| w as f64).sum::<f64>()
+            / run.num_layers as f64;
+        let wln: f64 = run.layer_wl.last().unwrap().iter().map(|&w| w as f64).sum::<f64>()
+            / run.num_layers as f64;
+        let wmin = run.layer_wl.iter().flatten().copied().min().unwrap();
+        let wmax = run.layer_wl.iter().flatten().copied().max().unwrap();
+        println!(
+            "=== Figure {fig} (wordlengths {artifact}) === mean {wl0:.1} -> {wln:.1} bit, range [{wmin},{wmax}], {} switches",
+            run.switches.len()
+        );
+    }
+    for (fig, artifact) in [(5usize, "alexnet-c100"), (6, "resnet20-c100")] {
+        let run = hs::ensure_run(&engine, &artifacts, profile, artifact, "adapt")?;
+        let sp0 = 1.0 - run.layer_nz[0].iter().sum::<f32>() / run.num_layers as f32;
+        let spn = run.final_model_sparsity();
+        println!(
+            "=== Figure {fig} (sparsity {artifact}) === model sparsity {:.1}% -> {:.1}%",
+            100.0 * sp0,
+            100.0 * spn
+        );
+    }
+    {
+        let run = hs::ensure_run(&engine, &artifacts, profile, "resnet20-c100", "adapt")?;
+        let mem = adapt::perfmodel::relative_mem_series(&run);
+        let man = hs::manifest_for(&artifacts, "resnet20-c100")?;
+        let cost = adapt::perfmodel::relative_cost_series(&man.layers, &run);
+        println!(
+            "=== Figure 7 (memory vs f32) === resnet20-c100: start {:.2} end {:.2}",
+            mem.first().unwrap(),
+            mem.last().unwrap()
+        );
+        println!(
+            "=== Figure 8 (cost vs f32) === resnet20-c100: start {:.2} end {:.2}",
+            cost.first().unwrap(),
+            cost.last().unwrap()
+        );
+    }
+    println!("\ntotal bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

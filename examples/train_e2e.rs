@@ -1,0 +1,98 @@
+//! End-to-end driver (the repository's headline validation run): train
+//! ResNet-20 with AdaPT on the CIFAR-10 substitute, alongside the float32
+//! baseline on identical data/seeds, and report the paper's headline
+//! metrics: accuracy delta, training speedup (analytical model), memory
+//! ratio, model size and inference speedup. Results are recorded in
+//! EXPERIMENTS.md.
+//!
+//!     make artifacts && cargo run --release --example train_e2e
+//!     ADAPT_E2E_ARTIFACT=alexnet-c10 ADAPT_E2E_EPOCHS=8 … to override
+
+use adapt::coordinator::{train, Policy, TrainConfig};
+use adapt::perfmodel as pm;
+use adapt::quant::QuantHyper;
+use adapt::runtime::{artifacts_dir, Engine, Manifest};
+
+fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let artifact = std::env::var("ADAPT_E2E_ARTIFACT").unwrap_or_else(|_| "resnet20-c10".into());
+    let epochs: usize = env_or("ADAPT_E2E_EPOCHS", 6);
+    let train_size: usize = env_or("ADAPT_E2E_TRAIN", 1024);
+
+    let dir = artifacts_dir()?;
+    let engine = Engine::cpu()?;
+    let man = Manifest::load(&dir.join(format!("{artifact}.manifest.json")))?;
+    println!(
+        "e2e: {artifact} ({} params, {} quantizable layers), {epochs} epochs x {} samples",
+        man.total_params(),
+        man.num_layers,
+        train_size
+    );
+
+    let mk = |policy: Policy| {
+        let mut c = TrainConfig::fast(&artifact, policy);
+        c.epochs = epochs;
+        c.train_size = train_size;
+        c.eval_size = 256;
+        c.log_every = 20;
+        c
+    };
+
+    println!("\n--- float32 baseline ---");
+    let f32_out = train(&engine, &dir, &mk(Policy::Float32))?;
+    println!("\n--- AdaPT ---");
+    let adapt_out = train(
+        &engine,
+        &dir,
+        &mk(Policy::Adapt(QuantHyper::default().scaled(0.25))),
+    )?;
+
+    let fr = &f32_out.record;
+    let ar = &adapt_out.record;
+
+    println!("\n================ e2e summary ================");
+    println!("loss curve (adapt, every 10th step):");
+    for (i, s) in ar.steps.iter().enumerate().step_by(10) {
+        println!("  step {i:>4}: loss {:.4}", s.loss);
+    }
+    let fa = fr.final_eval().unwrap_or(0.0);
+    let aa = ar.final_eval().unwrap_or(0.0);
+    println!("\nfloat32  acc: {:.4}", fa);
+    println!("AdaPT    acc: {:.4}  (Δ {:+.2} pp)", aa, 100.0 * (aa - fa));
+    println!("switches     : {}", ar.switches.len());
+    println!("final WLs    : {:?}", adapt_out.final_wordlengths);
+
+    let layers = &man.layers;
+    let a_cost = pm::train_costs(layers, ar);
+    let a_oh = pm::adapt_overhead(layers, ar);
+    let f_cost = pm::train_costs_float32(layers, fr.steps.len(), fr.accs);
+    println!("\nanalytical performance model (sec. 4.1.2):");
+    println!(
+        "  SU^1 (training speedup)  : {:.2}",
+        pm::speedup(ar.batch, a_cost, a_oh, fr.batch, f_cost)
+    );
+    println!("  MEM  (training memory)   : {:.2}", pm::mem_ratio(ar));
+    println!("  SZ   (final model size)  : {:.2}", pm::size_ratio(ar));
+    println!(
+        "  inference SU             : {:.2}",
+        pm::inference_speedup(layers, ar)
+    );
+    println!(
+        "  final sparsity           : {:.1}% (avg {:.1}%)",
+        100.0 * ar.final_model_sparsity(),
+        100.0 * ar.average_sparsity()
+    );
+    println!(
+        "\nwall time: float32 {:.1}s, adapt {:.1}s ({} steps each)",
+        fr.wall_secs,
+        ar.wall_secs,
+        ar.steps.len()
+    );
+    Ok(())
+}

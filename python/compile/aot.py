@@ -1,0 +1,187 @@
+"""AOT compiler: lower train/infer steps to HLO **text** + a JSON manifest.
+
+HLO text (NOT ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts \
+            [--configs mlp-mnist,resnet20-c10] [--batch 32]
+
+Python runs ONCE here; the Rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .train_step import make_infer, make_train_step
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _f32(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def _io_entry(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def build_manifest(cfg: M.Config, model, batch: int):
+    L = model.num_layers
+    params = [
+        {
+            "name": s.name,
+            "shape": list(s.shape),
+            "kind": s.kind,
+            "layer": s.layer,
+            "fan_in": s.fan_in,
+            "quantizable": s.quantizable,
+        }
+        for s in model.param_specs
+    ]
+    bn = [{"name": s.name, "shape": list(s.shape)} for s in model.bn_specs]
+    layers = [
+        {
+            "name": li.name,
+            "kind": li.kind,
+            "madds": li.madds,
+            "weight_elems": li.weight_elems,
+            "fan_in": li.fan_in,
+        }
+        for li in model.layer_infos
+    ]
+    quant_specs = [s for s in model.param_specs if s.quantizable]
+
+    train_inputs = (
+        [_io_entry(s.name, s.shape) for s in model.param_specs]
+        + [_io_entry(f"gsum.{s.name}", s.shape) for s in quant_specs]
+        + [_io_entry(s.name, s.shape) for s in model.bn_specs]
+        + [
+            _io_entry("x", (batch, *cfg.input_shape)),
+            _io_entry("y", (batch,), "i32"),
+            _io_entry("qparams", (2 * L, 5)),
+            _io_entry("hyper", (8,)),
+        ]
+    )
+    train_outputs = (
+        [_io_entry(s.name, s.shape) for s in model.param_specs]
+        + [_io_entry(f"gsum.{s.name}", s.shape) for s in quant_specs]
+        + [_io_entry(s.name, s.shape) for s in model.bn_specs]
+        + [
+            _io_entry("loss", ()),
+            _io_entry("ce", ()),
+            _io_entry("acc", ()),
+            _io_entry("grad_norm", (L,)),
+            _io_entry("gsum_norm", (L,)),
+            _io_entry("sparsity", (L,)),
+            _io_entry("act_absmax", (L,)),
+        ]
+    )
+    infer_inputs = (
+        [_io_entry(s.name, s.shape) for s in model.param_specs]
+        + [_io_entry(s.name, s.shape) for s in model.bn_specs]
+        + [
+            _io_entry("x", (batch, *cfg.input_shape)),
+            _io_entry("qparams", (2 * L, 5)),
+        ]
+    )
+    infer_outputs = [_io_entry("logits", (batch, cfg.classes))]
+
+    return {
+        "name": cfg.name,
+        "model": cfg.model,
+        "batch": batch,
+        "input_shape": list(cfg.input_shape),
+        "classes": cfg.classes,
+        "num_layers": L,
+        "params": params,
+        "bn_state": bn,
+        "layers": layers,
+        "train_inputs": train_inputs,
+        "train_outputs": train_outputs,
+        "infer_inputs": infer_inputs,
+        "infer_outputs": infer_outputs,
+    }
+
+
+def lower_config(cfg: M.Config, batch: int, out_dir: str, verbose: bool = True):
+    model = M.build_model(cfg)
+    L = model.num_layers
+
+    p_specs = [_f32(s.shape) for s in model.param_specs]
+    g_specs = [_f32(s.shape) for s in model.param_specs if s.quantizable]
+    b_specs = [_f32(s.shape) for s in model.bn_specs]
+    x_spec = _f32((batch, *cfg.input_shape))
+    y_spec = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    qp_spec = _f32((2 * L, 5))
+    hy_spec = _f32((8,))
+
+    step = make_train_step(model)
+    lowered = jax.jit(step).lower(
+        p_specs, g_specs, b_specs, x_spec, y_spec, qp_spec, hy_spec
+    )
+    train_text = to_hlo_text(lowered)
+
+    infer = make_infer(model)
+    lowered_i = jax.jit(infer).lower(p_specs, b_specs, x_spec, qp_spec)
+    infer_text = to_hlo_text(lowered_i)
+
+    manifest = build_manifest(cfg, model, batch)
+    manifest["train_hlo_sha256"] = hashlib.sha256(train_text.encode()).hexdigest()
+    manifest["infer_hlo_sha256"] = hashlib.sha256(infer_text.encode()).hexdigest()
+
+    os.makedirs(out_dir, exist_ok=True)
+    base = os.path.join(out_dir, cfg.name)
+    with open(f"{base}.train.hlo.txt", "w") as f:
+        f.write(train_text)
+    with open(f"{base}.infer.hlo.txt", "w") as f:
+        f.write(infer_text)
+    with open(f"{base}.manifest.json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(
+            f"[aot] {cfg.name}: train={len(train_text)//1024} KiB "
+            f"infer={len(infer_text)//1024} KiB L={L} "
+            f"params={sum(int(jnp.prod(jnp.array(s.shape))) for s in model.param_specs)}"
+        )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default=",".join(M.CONFIGS))
+    ap.add_argument("--batch", type=int, default=32)
+    args = ap.parse_args(argv)
+
+    names = [n for n in args.configs.split(",") if n]
+    for n in names:
+        if n not in M.CONFIGS:
+            print(f"unknown config {n!r}; have {sorted(M.CONFIGS)}", file=sys.stderr)
+            return 1
+    for n in names:
+        lower_config(M.CONFIGS[n], args.batch, args.out)
+    # stamp so `make artifacts` can no-op on unchanged inputs
+    with open(os.path.join(args.out, ".stamp"), "w") as f:
+        f.write("ok\n")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

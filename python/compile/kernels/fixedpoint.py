@@ -1,0 +1,268 @@
+"""L1 — Pallas fixed-point quantization kernels.
+
+These kernels implement the numeric core of AdaPT (sec. 2.1 / 3.2 of the
+paper): signed fixed-point quantization ``<WL, FL>`` with stochastic or
+nearest rounding, simulated in float32 exactly like the paper's QPyTorch
+setup (values are constrained to the fixed-point grid ``q * 2^-FL`` but kept
+in f32 storage so they can flow through any backend).
+
+All kernels are lowered with ``interpret=True`` so they become plain HLO and
+run on the CPU PJRT client (real-TPU Mosaic custom-calls cannot). The tiling
+is still expressed through ``BlockSpec`` so the HBM<->VMEM schedule documented
+in DESIGN.md #Hardware-Adaptation is explicit.
+
+Quantization parameters (scale = 2^FL, clamp bounds, enable flag) are runtime
+*arguments*, never compile-time constants: one compiled artifact serves every
+precision level the Rust coordinator selects.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Elements per grid step for the 1-D elementwise quantizer. 16 Ki f32 values
+# = 64 KiB per operand block; x + u + out = 192 KiB of VMEM per step.
+BLOCK_ELEMS = 16384
+
+# Matmul tile sizes (rows of x / cols of w per grid cell). K is kept whole:
+# at AdaPT model scale (K <= 4096) an (128, 4096) f32 block is 2 MiB.
+MM_BLOCK_M = 128
+MM_BLOCK_N = 256
+
+INTERPRET = True
+
+
+# ---------------------------------------------------------------------------
+# elementwise fixed-point quantize
+# ---------------------------------------------------------------------------
+
+def _quantize_sr_kernel(x_ref, u_ref, s_ref, lo_ref, hi_ref, en_ref, o_ref):
+    """Stochastic-rounding fixed-point quantize of one block.
+
+    q = clamp(floor(x * s + u), lo, hi) / s      with u ~ U[0, 1)
+
+    ``floor(x*s + u)`` realises the paper's SR(x) = floor(x) + [P < frac(x)]:
+    the +1 happens with probability frac(x * s).
+    """
+    x = x_ref[...]
+    s = s_ref[0]
+    q = jnp.floor(x * s + u_ref[...])
+    q = jnp.clip(q, lo_ref[0], hi_ref[0])
+    y = q / s
+    o_ref[...] = jnp.where(en_ref[0] > 0.5, y, x)
+
+
+def _quantize_nr_kernel(x_ref, s_ref, lo_ref, hi_ref, en_ref, o_ref):
+    """Nearest-rounding (round-half-to-even, XLA default) quantize."""
+    x = x_ref[...]
+    s = s_ref[0]
+    q = jnp.round(x * s)
+    q = jnp.clip(q, lo_ref[0], hi_ref[0])
+    y = q / s
+    o_ref[...] = jnp.where(en_ref[0] > 0.5, y, x)
+
+
+def _pad_flat(x, block):
+    """Flatten to 1-D and zero-pad to a multiple of ``block``."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    padded = (n + block - 1) // block * block
+    if padded != n:
+        flat = jnp.pad(flat, (0, padded - n))
+    return flat, n, padded
+
+
+def _scalar_spec():
+    # A (1,)-shaped operand broadcast to every grid step.
+    return pl.BlockSpec((1,), lambda i: (0,))
+
+
+def quantize_sr(x, u, scale, qmin, qmax, enable):
+    """Stochastically-rounded fixed-point quantize (simulated in f32).
+
+    Args:
+      x: any-shape f32 tensor.
+      u: uniform [0,1) noise, same shape as ``x``.
+      scale: scalar f32, ``2^FL``.
+      qmin/qmax: scalar f32 integer-grid clamp bounds
+        (``-2^(WL-1)`` / ``2^(WL-1)-1`` for signed ``<WL, FL>``).
+      enable: scalar f32; <= 0.5 bypasses quantization (float32 baseline).
+
+    Returns f32 tensor of ``x.shape`` on the fixed-point grid.
+    """
+    flat, n, padded = _pad_flat(x, BLOCK_ELEMS)
+    uflat, _, _ = _pad_flat(u, BLOCK_ELEMS)
+    grid = padded // BLOCK_ELEMS
+    out = pl.pallas_call(
+        _quantize_sr_kernel,
+        out_shape=jax.ShapeDtypeStruct((padded,), jnp.float32),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ELEMS,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_ELEMS,), lambda i: (i,)),
+            _scalar_spec(),
+            _scalar_spec(),
+            _scalar_spec(),
+            _scalar_spec(),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ELEMS,), lambda i: (i,)),
+        interpret=INTERPRET,
+    )(
+        flat,
+        uflat,
+        jnp.reshape(scale.astype(jnp.float32), (1,)),
+        jnp.reshape(qmin.astype(jnp.float32), (1,)),
+        jnp.reshape(qmax.astype(jnp.float32), (1,)),
+        jnp.reshape(enable.astype(jnp.float32), (1,)),
+    )
+    return out[:n].reshape(x.shape)
+
+
+def quantize_nr(x, scale, qmin, qmax, enable):
+    """Nearest-rounding fixed-point quantize (deterministic; inference path)."""
+    flat, n, padded = _pad_flat(x, BLOCK_ELEMS)
+    grid = padded // BLOCK_ELEMS
+    out = pl.pallas_call(
+        _quantize_nr_kernel,
+        out_shape=jax.ShapeDtypeStruct((padded,), jnp.float32),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ELEMS,), lambda i: (i,)),
+            _scalar_spec(),
+            _scalar_spec(),
+            _scalar_spec(),
+            _scalar_spec(),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ELEMS,), lambda i: (i,)),
+        interpret=INTERPRET,
+    )(
+        flat,
+        jnp.reshape(scale.astype(jnp.float32), (1,)),
+        jnp.reshape(qmin.astype(jnp.float32), (1,)),
+        jnp.reshape(qmax.astype(jnp.float32), (1,)),
+        jnp.reshape(enable.astype(jnp.float32), (1,)),
+    )
+    return out[:n].reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# straight-through estimator wrappers
+# ---------------------------------------------------------------------------
+#
+# Stochastic rounding is not differentiable; the paper trains "through" the
+# quantizer with the standard STE [Bengio et al.]. The backward pass is the
+# identity masked to the representable range, i.e. gradients for values that
+# were clamped at +-(2^(WL-1))/2^FL are zeroed (clipped STE).
+
+
+@jax.custom_vjp
+def quantize_ste(x, u, scale, qmin, qmax, enable):
+    return quantize_sr(x, u, scale, qmin, qmax, enable)
+
+
+def _ste_fwd(x, u, scale, qmin, qmax, enable):
+    y = quantize_sr(x, u, scale, qmin, qmax, enable)
+    inside = jnp.logical_and(x * scale >= qmin, x * scale <= qmax)
+    mask = jnp.where(enable > 0.5, inside.astype(jnp.float32), 1.0)
+    return y, mask
+
+
+def _ste_bwd(mask, g):
+    return (g * mask, None, None, None, None, None)
+
+
+quantize_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+@jax.custom_vjp
+def quantize_nr_ste(x, scale, qmin, qmax, enable):
+    return quantize_nr(x, scale, qmin, qmax, enable)
+
+
+def _nr_ste_fwd(x, scale, qmin, qmax, enable):
+    y = quantize_nr(x, scale, qmin, qmax, enable)
+    inside = jnp.logical_and(x * scale >= qmin, x * scale <= qmax)
+    mask = jnp.where(enable > 0.5, inside.astype(jnp.float32), 1.0)
+    return y, mask
+
+
+def _nr_ste_bwd(mask, g):
+    return (g * mask, None, None, None, None)
+
+
+quantize_nr_ste.defvjp(_nr_ste_fwd, _nr_ste_bwd)
+
+
+# ---------------------------------------------------------------------------
+# blocked matmul (dense-layer hot path)
+# ---------------------------------------------------------------------------
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _ceil_to(v, m):
+    return (v + m - 1) // m * m
+
+
+def _matmul_pallas(x, w):
+    """(M,K) @ (K,N) tiled pallas matmul; pads M/N to tile multiples."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (k, k2)
+    bm = min(MM_BLOCK_M, _ceil_to(m, 8))
+    bn = min(MM_BLOCK_N, _ceil_to(n, 8))
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, 0))) if mp != m else x
+    wp = jnp.pad(w, ((0, 0), (0, np_ - n))) if np_ != n else w
+    out = pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=INTERPRET,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def qmatmul(x, w):
+    """Pallas-tiled matmul with a hand-written VJP (pallas_call itself is not
+    differentiable); both forward and backward run through the same kernel."""
+    return _matmul_pallas(x, w)
+
+
+def _qmm_fwd(x, w):
+    return _matmul_pallas(x, w), (x, w)
+
+
+def _qmm_bwd(res, g):
+    x, w = res
+    dx = _matmul_pallas(g, w.T)
+    dw = _matmul_pallas(x.T, g)
+    return dx, dw
+
+
+qmatmul.defvjp(_qmm_fwd, _qmm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# convenience: WL/FL -> runtime qparams row
+# ---------------------------------------------------------------------------
+
+def qparams_row(wl: int, fl: int, enable: float = 1.0):
+    """[scale, qmin, qmax, enable, wl] row for a signed <WL, FL> format."""
+    scale = float(2**fl)
+    qmax = float(2 ** (wl - 1) - 1)
+    qmin = float(-(2 ** (wl - 1)))
+    return jnp.array([scale, qmin, qmax, enable, float(wl)], dtype=jnp.float32)

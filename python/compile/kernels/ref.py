@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the Pallas kernels in ``fixedpoint.py``.
+
+Every kernel has a reference here with identical semantics; pytest asserts
+bit-exact (quantize) / allclose (matmul) agreement. This is the CORE
+correctness signal for L1.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_sr_ref(x, u, scale, qmin, qmax, enable):
+    """Stochastic-rounding fixed-point quantize, reference semantics."""
+    q = jnp.floor(x * scale + u)
+    q = jnp.clip(q, qmin, qmax)
+    return jnp.where(enable > 0.5, q / scale, x)
+
+
+def quantize_nr_ref(x, scale, qmin, qmax, enable):
+    """Nearest-rounding (half-to-even) fixed-point quantize."""
+    q = jnp.round(x * scale)
+    q = jnp.clip(q, qmin, qmax)
+    return jnp.where(enable > 0.5, q / scale, x)
+
+
+def matmul_ref(x, w):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def fixed_point_grid_ref(x, wl, fl):
+    """Project onto the signed <WL, FL> grid with nearest rounding — used by
+    property tests to check grid membership of kernel outputs."""
+    scale = 2.0**fl
+    qmax = 2.0 ** (wl - 1) - 1
+    qmin = -(2.0 ** (wl - 1))
+    return jnp.clip(jnp.round(x * scale), qmin, qmax) / scale

@@ -1,0 +1,184 @@
+"""L2 building blocks: quantization-aware layers and the QuantCtx.
+
+Models are written as pure functions over a *flat list* of parameter arrays
+(the order is recorded in ParamSpec lists and exported to the Rust side via
+the manifest). Per-layer quantization parameters arrive at runtime as a
+``f32[2L, 5]`` tensor: rows ``0..L`` quantize weights, rows ``L..2L`` quantize
+activations (AdaPT sets both from the same <WL, FL>; the MuPPET baseline uses
+separate block-floating-point scales for weights and feature maps).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import fixedpoint as fp
+
+
+# ---------------------------------------------------------------------------
+# specs exported through the manifest
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ParamSpec:
+    """One trainable tensor: ordering contract between aot.py and Rust."""
+
+    name: str
+    shape: Tuple[int, ...]
+    kind: str  # 'kernel' | 'bias' | 'gamma' | 'beta'
+    layer: int  # quantizable-layer index, -1 for non-quantized params
+    fan_in: int
+    quantizable: bool
+
+
+@dataclass
+class LayerInfo:
+    """One quantizable layer: input to the analytical performance model."""
+
+    name: str
+    kind: str  # 'conv' | 'dense' | 'downsample'
+    madds: int  # multiply-accumulates per sample (perf model `ops^l`)
+    weight_elems: int  # prod(dim in l) for eqs (6), (7)
+    fan_in: int
+
+
+@dataclass
+class BnSpec:
+    name: str
+    shape: Tuple[int, ...]
+
+
+class ParamCursor:
+    """Sequential reader over the flat param list (order == ParamSpec order)."""
+
+    def __init__(self, params: List[jnp.ndarray]):
+        self._params = params
+        self._i = 0
+
+    def take(self) -> jnp.ndarray:
+        p = self._params[self._i]
+        self._i += 1
+        return p
+
+    def done(self) -> bool:
+        return self._i == len(self._params)
+
+
+class QuantCtx:
+    """Carries runtime qparams and PRNG state through a model's apply().
+
+    Records, per quantizable layer (in call order == layer index order):
+      * sparsity of the quantized weight tensor (fraction of exact zeros)
+      * abs-max of the pre-quantization activations (MuPPET scale source)
+      * the layer's word length (echoed from qparams, for the penalty term)
+    """
+
+    def __init__(self, qparams, key, stochastic: bool, nlayers: int):
+        self.qp = qparams  # f32[2L, 5]: scale, qmin, qmax, enable, wl
+        self.key = key
+        self.stochastic = stochastic
+        self.L = nlayers
+        self.sparsity: List[jnp.ndarray] = []
+        self.act_absmax: List[jnp.ndarray] = []
+        self.wl: List[jnp.ndarray] = []
+
+    def _quantize(self, x, row_idx, fold):
+        row = self.qp[row_idx]
+        if self.stochastic:
+            u = jax.random.uniform(jax.random.fold_in(self.key, fold), x.shape)
+            return fp.quantize_ste(x, u, row[0], row[1], row[2], row[3])
+        return fp.quantize_nr_ste(x, row[0], row[1], row[2], row[3])
+
+    def quant_w(self, li: int, w):
+        wq = self._quantize(w, li, 2 * li)
+        sp = jnp.mean((lax.stop_gradient(wq) == 0.0).astype(jnp.float32))
+        self.sparsity.append(sp)
+        self.wl.append(self.qp[li, 4])
+        return wq
+
+    def quant_a(self, li: int, a):
+        self.act_absmax.append(jnp.max(jnp.abs(lax.stop_gradient(a))))
+        return self._quantize(a, self.L + li, 2 * li + 1)
+
+
+# ---------------------------------------------------------------------------
+# layer ops
+# ---------------------------------------------------------------------------
+
+DIMNUMS = ("NHWC", "HWIO", "NHWC")
+
+
+def qconv(ctx: QuantCtx, li: int, x, w, b=None, stride=1, padding="SAME"):
+    """Conv with fixed-point-quantized weights (layer index ``li``)."""
+    wq = ctx.quant_w(li, w)
+    y = lax.conv_general_dilated(
+        x, wq, (stride, stride), padding, dimension_numbers=DIMNUMS
+    )
+    if b is not None:
+        y = y + b
+    return y
+
+
+def qdense(ctx: QuantCtx, li: int, x, w, b=None):
+    """Dense layer through the Pallas-tiled matmul with quantized weights."""
+    wq = ctx.quant_w(li, w)
+    y = fp.qmatmul(x, wq)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def maxpool(x, k=2, s=2):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, k, k, 1), (1, s, s, 1), "VALID"
+    )
+
+
+def global_avgpool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def batchnorm(x, gamma, beta, rmean, rvar, mom, train: bool, eps=1e-5):
+    """BatchNorm over NHWC (per-channel). Returns (y, new_rmean, new_rvar).
+
+    Training uses batch statistics and updates the running stats with
+    momentum ``mom``; inference uses the running stats and passes them
+    through unchanged. BN params/stats are never quantized (see DESIGN.md).
+    """
+    if train:
+        mean = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        new_rmean = (1.0 - mom) * rmean + mom * lax.stop_gradient(mean)
+        new_rvar = (1.0 - mom) * rvar + mom * lax.stop_gradient(var)
+    else:
+        mean, var = rmean, rvar
+        new_rmean, new_rvar = rmean, rvar
+    y = (x - mean) * lax.rsqrt(var + eps) * gamma + beta
+    return y, new_rmean, new_rvar
+
+
+# ---------------------------------------------------------------------------
+# MAdds helpers (inputs to the analytical performance model)
+# ---------------------------------------------------------------------------
+
+
+def conv_madds(h, w, k, cin, cout, stride=1, padding="SAME"):
+    if padding == "SAME":
+        oh, ow = -(-h // stride), -(-w // stride)
+    else:  # VALID
+        oh, ow = (h - k) // stride + 1, (w - k) // stride + 1
+    return oh * ow * k * k * cin * cout, (oh, ow)
+
+
+def dense_madds(fin, fout):
+    return fin * fout

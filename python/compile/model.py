@@ -1,0 +1,94 @@
+"""L2 glue: named experiment configs, spec construction, test-time init.
+
+The Rust coordinator initialises parameters itself (TNVS & the fig. 2
+initializer zoo live in ``rust/src/init/``); the Python ``init_params`` here
+exists for pytest and for numerical parity tests against the Rust
+implementation.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import models as model_registry
+from .models import ModelDef
+
+
+@dataclass(frozen=True)
+class Config:
+    name: str
+    model: str
+    input_shape: Tuple[int, int, int]
+    classes: int
+
+
+CONFIGS: Dict[str, Config] = {
+    c.name: c
+    for c in [
+        Config("mlp-mnist", "mlp", (28, 28, 1), 10),
+        Config("lenet-mnist", "lenet5", (28, 28, 1), 10),
+        Config("alexnet-c10", "alexnet", (32, 32, 3), 10),
+        Config("alexnet-c100", "alexnet", (32, 32, 3), 100),
+        Config("resnet20-c10", "resnet20", (32, 32, 3), 10),
+        Config("resnet20-c100", "resnet20", (32, 32, 3), 100),
+    ]
+}
+
+
+def build_model(cfg: Config) -> ModelDef:
+    return model_registry.build(cfg.model, cfg.input_shape, cfg.classes)
+
+
+def init_params(model: ModelDef, key, s: float = 1.0) -> List[jnp.ndarray]:
+    """TNVS init (sec. 3.1): W ~ TruncNormal(0, sqrt(s/fan_in), +-sqrt(3s/fan_in));
+    biases/betas zero, gammas one."""
+    out = []
+    for spec in model.param_specs:
+        key, sub = jax.random.split(key)
+        if spec.kind == "kernel":
+            sigma = math.sqrt(s / spec.fan_in)
+            alpha = math.sqrt(3.0 * s / spec.fan_in)
+            w = sigma * jax.random.truncated_normal(
+                sub, -alpha / sigma, alpha / sigma, spec.shape
+            )
+            out.append(w.astype(jnp.float32))
+        elif spec.kind == "gamma":
+            out.append(jnp.ones(spec.shape, jnp.float32))
+        else:  # bias, beta
+            out.append(jnp.zeros(spec.shape, jnp.float32))
+    return out
+
+
+def init_bn_state(model: ModelDef) -> List[jnp.ndarray]:
+    out = []
+    for spec in model.bn_specs:
+        if spec.name.endswith(".var"):
+            out.append(jnp.ones(spec.shape, jnp.float32))
+        else:
+            out.append(jnp.zeros(spec.shape, jnp.float32))
+    return out
+
+
+def init_gsum(model: ModelDef) -> List[jnp.ndarray]:
+    return [
+        jnp.zeros(s.shape, jnp.float32)
+        for s in model.param_specs
+        if s.quantizable
+    ]
+
+
+def default_qparams(model: ModelDef, wl: int = 8, fl: int = 4, enable: float = 1.0):
+    """<8,4> everywhere — the paper's initial quantization (sec. 4.1.1)."""
+    from .kernels.fixedpoint import qparams_row
+
+    row = qparams_row(wl, fl, enable)
+    return jnp.tile(row[None, :], (2 * model.num_layers, 1))
+
+
+def default_hyper(lr=0.05, l1=1e-5, l2=1e-4, pen=1e-3, seed=0, gnorm=1.0, bn_mom=0.1):
+    return jnp.array([lr, l1, l2, pen, float(seed), gnorm, bn_mom, 0.0], jnp.float32)

@@ -1,0 +1,35 @@
+"""Model registry: name -> build(input_shape, num_classes) -> ModelDef."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List
+
+from ..layers import BnSpec, LayerInfo, ParamSpec
+
+
+@dataclass
+class ModelDef:
+    name: str
+    param_specs: List[ParamSpec]
+    bn_specs: List[BnSpec]  # interleaved (mean, var) per batchnorm
+    layer_infos: List[LayerInfo]  # quantizable layers, index order
+    apply: Callable  # (params, bn_state, x, ctx, train) -> (logits, bn')
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.layer_infos)
+
+
+def build(name: str, input_shape, num_classes: int) -> ModelDef:
+    from . import alexnet, lenet, mlp, resnet
+
+    registry = {
+        "mlp": mlp.build,
+        "lenet5": lenet.build,
+        "alexnet": alexnet.build,
+        "resnet20": resnet.build,
+    }
+    if name not in registry:
+        raise KeyError(f"unknown model '{name}', have {sorted(registry)}")
+    return registry[name](tuple(input_shape), num_classes)

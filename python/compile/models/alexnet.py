@@ -1,0 +1,72 @@
+"""AlexNet (CIFAR adaptation) — the paper's tab. 1-4 / fig. 4-5 workload.
+
+The paper trains "AlexNet" on 32x32 CIFAR images without publishing the exact
+downscaling; we use the common CIFAR adaptation (5 conv + 3 fc, 3x3 kernels,
+three 2x2 maxpools), with classifier widths 1024/512 so the model trains in
+reasonable time on the single-core CPU testbed (see DESIGN.md #Substitutions).
+8 quantizable layers; ~5.8M parameters for 10 classes.
+"""
+
+from __future__ import annotations
+
+from .. import layers as L
+
+CONVS = [
+    # (name, cout, pool_after)
+    ("conv0", 64, True),
+    ("conv1", 192, True),
+    ("conv2", 384, False),
+    ("conv3", 256, False),
+    ("conv4", 256, True),
+]
+FCS = [1024, 512]
+
+
+def build(input_shape, num_classes):
+    from . import ModelDef
+
+    h, w, cin = input_shape
+    specs, infos = [], []
+
+    ci, hh, ww = cin, h, w
+    for li, (name, co, pool) in enumerate(CONVS):
+        specs.append(L.ParamSpec(f"{name}.kernel", (3, 3, ci, co), "kernel", li, 9 * ci, True))
+        specs.append(L.ParamSpec(f"{name}.bias", (co,), "bias", -1, 9 * ci, False))
+        madds, (oh, ow) = L.conv_madds(hh, ww, 3, ci, co)
+        infos.append(L.LayerInfo(name, "conv", madds, 9 * ci * co, 9 * ci))
+        hh, ww, ci = oh, ow, co
+        if pool:
+            hh, ww = hh // 2, ww // 2
+
+    flat = hh * ww * ci
+    dims = [flat, *FCS, num_classes]
+    for j in range(len(dims) - 1):
+        li = len(CONVS) + j
+        fi, fo = dims[j], dims[j + 1]
+        specs.append(L.ParamSpec(f"fc{j}.kernel", (fi, fo), "kernel", li, fi, True))
+        specs.append(L.ParamSpec(f"fc{j}.bias", (fo,), "bias", -1, fi, False))
+        infos.append(L.LayerInfo(f"fc{j}", "dense", L.dense_madds(fi, fo), fi * fo, fi))
+
+    n_fc = len(dims) - 1
+
+    def apply(params, bn_state, x, ctx, train):
+        del train
+        P = L.ParamCursor(params)
+        hx = x
+        for li, (_, _, pool) in enumerate(CONVS):
+            hx = L.qconv(ctx, li, hx, P.take(), P.take())
+            hx = L.relu(hx)
+            if pool:
+                hx = L.maxpool(hx)
+            hx = ctx.quant_a(li, hx)
+        hx = hx.reshape(hx.shape[0], -1)
+        for j in range(n_fc):
+            li = len(CONVS) + j
+            hx = L.qdense(ctx, li, hx, P.take(), P.take())
+            if j < n_fc - 1:
+                hx = L.relu(hx)
+            hx = ctx.quant_a(li, hx)
+        assert P.done()
+        return hx, bn_state
+
+    return ModelDef("alexnet", specs, [], infos, apply)

@@ -1,0 +1,54 @@
+"""LeNet-5 (CIFAR/MNIST variant) — used in the fig. 2 initializer study.
+
+conv6@5x5(SAME) -> pool -> conv16@5x5(VALID) -> pool -> fc120 -> fc84 -> fc.
+ReLU nonlinearities, maxpool (modern variant, as the paper trains with Adam
+or ASGD on MNIST/FMNIST).
+"""
+
+from __future__ import annotations
+
+from .. import layers as L
+
+
+def build(input_shape, num_classes):
+    from . import ModelDef
+
+    h, w, cin = input_shape
+    specs, infos = [], []
+
+    def add_conv(name, li, k, ci, co, pad, hh, ww, stride=1):
+        specs.append(L.ParamSpec(f"{name}.kernel", (k, k, ci, co), "kernel", li, k * k * ci, True))
+        specs.append(L.ParamSpec(f"{name}.bias", (co,), "bias", -1, k * k * ci, False))
+        madds, (oh, ow) = L.conv_madds(hh, ww, k, ci, co, stride, pad)
+        infos.append(L.LayerInfo(name, "conv", madds, k * k * ci * co, k * k * ci))
+        return oh, ow
+
+    def add_dense(name, li, fi, fo):
+        specs.append(L.ParamSpec(f"{name}.kernel", (fi, fo), "kernel", li, fi, True))
+        specs.append(L.ParamSpec(f"{name}.bias", (fo,), "bias", -1, fi, False))
+        infos.append(L.LayerInfo(name, "dense", L.dense_madds(fi, fo), fi * fo, fi))
+
+    oh, ow = add_conv("conv0", 0, 5, cin, 6, "SAME", h, w)
+    oh, ow = oh // 2, ow // 2  # pool
+    oh, ow = add_conv("conv1", 1, 5, 6, 16, "VALID", oh, ow)
+    oh, ow = oh // 2, ow // 2  # pool
+    flat = oh * ow * 16
+    add_dense("fc0", 2, flat, 120)
+    add_dense("fc1", 3, 120, 84)
+    add_dense("fc2", 4, 84, num_classes)
+
+    def apply(params, bn_state, x, ctx, train):
+        del train
+        P = L.ParamCursor(params)
+        hx = L.qconv(ctx, 0, x, P.take(), P.take(), padding="SAME")
+        hx = ctx.quant_a(0, L.maxpool(L.relu(hx)))
+        hx = L.qconv(ctx, 1, hx, P.take(), P.take(), padding="VALID")
+        hx = ctx.quant_a(1, L.maxpool(L.relu(hx)))
+        hx = hx.reshape(hx.shape[0], -1)
+        hx = ctx.quant_a(2, L.relu(L.qdense(ctx, 2, hx, P.take(), P.take())))
+        hx = ctx.quant_a(3, L.relu(L.qdense(ctx, 3, hx, P.take(), P.take())))
+        hx = ctx.quant_a(4, L.qdense(ctx, 4, hx, P.take(), P.take()))
+        assert P.done()
+        return hx, bn_state
+
+    return ModelDef("lenet5", specs, [], infos, apply)

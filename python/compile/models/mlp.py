@@ -1,0 +1,45 @@
+"""3-layer MLP — the quickstart model (and the smallest AOT artifact)."""
+
+from __future__ import annotations
+
+import math
+
+from .. import layers as L
+
+
+HIDDEN = (256, 128)
+
+
+def build(input_shape, num_classes):
+    from . import ModelDef
+
+    fin = math.prod(input_shape)
+    dims = [fin, *HIDDEN, num_classes]
+
+    param_specs, layer_infos = [], []
+    for i in range(len(dims) - 1):
+        d_in, d_out = dims[i], dims[i + 1]
+        param_specs.append(
+            L.ParamSpec(f"fc{i}.kernel", (d_in, d_out), "kernel", i, d_in, True)
+        )
+        param_specs.append(L.ParamSpec(f"fc{i}.bias", (d_out,), "bias", -1, d_in, False))
+        layer_infos.append(
+            L.LayerInfo(f"fc{i}", "dense", L.dense_madds(d_in, d_out), d_in * d_out, d_in)
+        )
+
+    n_dense = len(dims) - 1
+
+    def apply(params, bn_state, x, ctx, train):
+        del train
+        P = L.ParamCursor(params)
+        h = x.reshape(x.shape[0], -1)
+        for i in range(n_dense):
+            w, b = P.take(), P.take()
+            h = L.qdense(ctx, i, h, w, b)
+            if i < n_dense - 1:
+                h = L.relu(h)
+            h = ctx.quant_a(i, h)
+        assert P.done()
+        return h, bn_state
+
+    return ModelDef("mlp", param_specs, [], layer_infos, apply)

@@ -1,0 +1,111 @@
+"""ResNet-20 (CIFAR) — the paper's second tab. 1-4 / fig. 3 & 6 workload.
+
+Standard He et al. CIFAR ResNet: conv16 + 3 stages x 3 basic blocks
+(16/32/64 channels) + global avgpool + fc, BatchNorm after every conv,
+projection (1x1 conv, "D" layers in the paper's fig. 3) shortcuts at stage
+transitions. Conv/dense kernels are quantized; BN params/stats are not.
+
+Within a block with a projection the quantizable-layer order is
+(downsample, conv_a, conv_b) so that QuantCtx records per-layer metrics in
+index order (quant_a/quant_w calls must be made in ascending layer index).
+"""
+
+from __future__ import annotations
+
+from .. import layers as L
+
+STAGES = (16, 32, 64)
+BLOCKS_PER_STAGE = 3
+
+
+def build(input_shape, num_classes):
+    from . import ModelDef
+
+    h, w, cin = input_shape
+    specs, infos, bns = [], [], []
+    li = 0
+
+    def add_conv(name, k, ci, co, hh, ww, stride, kind="conv"):
+        nonlocal li
+        specs.append(L.ParamSpec(f"{name}.kernel", (k, k, ci, co), "kernel", li, k * k * ci, True))
+        madds, (oh, ow) = L.conv_madds(hh, ww, k, ci, co, stride, "SAME")
+        infos.append(L.LayerInfo(name, kind, madds, k * k * ci * co, k * k * ci))
+        li += 1
+        return oh, ow
+
+    def add_bn(name, c):
+        specs.append(L.ParamSpec(f"{name}.gamma", (c,), "gamma", -1, c, False))
+        specs.append(L.ParamSpec(f"{name}.beta", (c,), "beta", -1, c, False))
+        bns.append(L.BnSpec(f"{name}.mean", (c,)))
+        bns.append(L.BnSpec(f"{name}.var", (c,)))
+
+    # stem
+    hh, ww = add_conv("conv0", 3, cin, STAGES[0], h, w, 1)
+    add_bn("bn0", STAGES[0])
+
+    # blocks: record (has_down, stride, ci, co) to drive apply()
+    plan = []
+    ci = STAGES[0]
+    for si, co in enumerate(STAGES):
+        for bi in range(BLOCKS_PER_STAGE):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            down = stride != 1 or ci != co
+            name = f"s{si}b{bi}"
+            if down:
+                add_conv(f"{name}.down", 1, ci, co, hh, ww, stride, kind="downsample")
+                add_bn(f"{name}.bn_down", co)
+            oh, ow = add_conv(f"{name}.conv_a", 3, ci, co, hh, ww, stride)
+            add_bn(f"{name}.bn_a", co)
+            add_conv(f"{name}.conv_b", 3, co, co, oh, ow, 1)
+            add_bn(f"{name}.bn_b", co)
+            plan.append((down, stride))
+            hh, ww, ci = oh, ow, co
+
+    fc_li = li
+    specs.append(L.ParamSpec("fc.kernel", (STAGES[-1], num_classes), "kernel", fc_li, STAGES[-1], True))
+    specs.append(L.ParamSpec("fc.bias", (num_classes,), "bias", -1, STAGES[-1], False))
+    infos.append(
+        L.LayerInfo("fc", "dense", L.dense_madds(STAGES[-1], num_classes), STAGES[-1] * num_classes, STAGES[-1])
+    )
+
+    def apply(params, bn_state, x, ctx, train):
+        P = L.ParamCursor(params)
+        bn_out = []
+        bn_i = [0]
+
+        def bn(xx, mom=0.1):
+            gamma, beta = P.take(), P.take()
+            rm, rv = bn_state[bn_i[0]], bn_state[bn_i[0] + 1]
+            bn_i[0] += 2
+            y, nm, nv = L.batchnorm(xx, gamma, beta, rm, rv, mom, train)
+            bn_out.extend([nm, nv])
+            return y
+
+        cur = 0
+        hx = L.qconv(ctx, cur, x, P.take(), None)
+        hx = L.relu(bn(hx))
+        hx = ctx.quant_a(cur, hx)
+        cur += 1
+
+        for down, stride in plan:
+            shortcut = hx
+            if down:
+                shortcut = L.qconv(ctx, cur, hx, P.take(), None, stride=stride)
+                shortcut = bn(shortcut)
+                shortcut = ctx.quant_a(cur, shortcut)
+                cur += 1
+            y = L.qconv(ctx, cur, hx, P.take(), None, stride=stride)
+            y = ctx.quant_a(cur, L.relu(bn(y)))
+            cur += 1
+            y = L.qconv(ctx, cur, y, P.take(), None)
+            y = bn(y)
+            hx = ctx.quant_a(cur, L.relu(y + shortcut))
+            cur += 1
+
+        hx = L.global_avgpool(hx)
+        hx = L.qdense(ctx, cur, hx, P.take(), P.take())
+        hx = ctx.quant_a(cur, hx)
+        assert P.done()
+        return hx, bn_out
+
+    return ModelDef("resnet20", specs, bns, infos, apply)

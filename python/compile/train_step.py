@@ -1,0 +1,123 @@
+"""L2 — the ASGD train step (alg. 1 lines 5-11) and the inference forward.
+
+One jitted step = quantized forward (Pallas kernels inside) + backward via
+STE + SGD update of the float32 master copy + gradient-diversity state
+accumulation. The Rust coordinator (L3) owns everything between steps:
+precision switching (PushDown/PushUp), lookback/resolution/strategy
+adaptation, epoch structure, and evaluation.
+
+Loss (sec. 3.4):   L^ = CE + alpha*||W||_1 + beta/2*||W||_2^2 + P
+with P = pen * sum_l WL_l/32 * sp_l (stop-gradient; it penalises the
+*reported* loss that drives the strategy heuristic).
+
+Gradient normalization (sec. 3.3): kernels' gradients are divided by their
+L2 norm before the SGD update when hyper[gnorm] is set; the *raw* gradients
+feed the diversity state (eq. 3 uses nabla f, not the normalised update).
+
+hyper layout (f32[8]):
+  0: lr   1: l1_decay   2: l2_decay   3: penalty_coef
+  4: seed (step counter; folds the PRNG)   5: gnorm_on   6: bn_momentum
+  7: reserved
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import QuantCtx
+
+EPS = 1e-12
+
+
+def _cross_entropy(logits, y):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def make_train_step(model):
+    """Returns step(params, gsum, bn_state, x, y, qparams, hyper) -> tuple.
+
+    Output tuple order (mirrored in the manifest):
+      new_params...  new_gsum...  new_bn...  loss  ce  acc
+      grad_norm[L]  gsum_norm[L]  sparsity[L]  act_absmax[L]
+    """
+    L = model.num_layers
+    kidx = [i for i, s in enumerate(model.param_specs) if s.quantizable]
+    assert len(kidx) == L, (len(kidx), L)
+
+    def step(params: List, gsum: List, bn_state: List, x, y, qparams, hyper):
+        lr, l1, l2, pen = hyper[0], hyper[1], hyper[2], hyper[3]
+        seed, gnorm_on, bn_mom = hyper[4], hyper[5], hyper[6]
+        key = jax.random.PRNGKey(seed.astype(jnp.int32))
+
+        def loss_fn(ps):
+            ctx = QuantCtx(qparams, key, stochastic=True, nlayers=L)
+            logits, new_bn = model.apply(ps, bn_state, x, ctx, train=True)
+            ce = _cross_entropy(logits, y)
+            reg = 0.0
+            for i in kidx:
+                w = ps[i]
+                reg = reg + l1 * jnp.sum(jnp.abs(w)) + 0.5 * l2 * jnp.sum(w * w)
+            sp = jnp.stack(ctx.sparsity)  # fraction of zeros, per layer
+            wl = jnp.stack(ctx.wl)
+            # paper's P = WL/32 * sp with sp = % non-zero elements
+            penalty = pen * jnp.sum(wl / 32.0 * (1.0 - sp))
+            loss = ce + reg + lax.stop_gradient(penalty)
+            aux = (logits, new_bn, sp, jnp.stack(ctx.act_absmax), ce)
+            return loss, aux
+
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        logits, new_bn, sparsity, act_absmax, ce = aux
+
+        grad_norms, new_gsum = [], []
+        new_params = list(params)
+        gi = 0
+        for i, g in enumerate(grads):
+            if i in set(kidx):
+                gn = jnp.sqrt(jnp.sum(g * g))
+                grad_norms.append(gn)
+                new_gsum.append(gsum[gi] + g)
+                gi += 1
+                gq = jnp.where(gnorm_on > 0.5, g / (gn + EPS), g)
+                new_params[i] = params[i] - lr * gq
+            else:
+                new_params[i] = params[i] - lr * g
+        gsum_norm = [jnp.sqrt(jnp.sum(s * s)) for s in new_gsum]
+
+        acc = jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+
+        out = (
+            *new_params,
+            *new_gsum,
+            *new_bn,
+            loss,
+            ce,
+            acc,
+            jnp.stack(grad_norms),
+            jnp.stack(gsum_norm),
+            sparsity,
+            act_absmax,
+        )
+        return out
+
+    return step
+
+
+def make_infer(model):
+    """Deterministic quantized forward: (params, bn_state, x, qparams) -> logits.
+
+    Nearest rounding (no noise), BN running statistics — the "deployed on
+    ASIC" path of sec. 4.2.2.
+    """
+    L = model.num_layers
+
+    def infer(params: List, bn_state: List, x, qparams):
+        ctx = QuantCtx(qparams, jax.random.PRNGKey(0), stochastic=False, nlayers=L)
+        logits, _ = model.apply(params, bn_state, x, ctx, train=False)
+        return (logits,)
+
+    return infer

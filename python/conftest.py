@@ -1,0 +1,6 @@
+"""Make `pytest python/tests/` work from the repo root as well as from
+python/ (the tests import the `compile` package relative to this dir)."""
+import sys
+import pathlib
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))

@@ -1,0 +1,87 @@
+#!/usr/bin/env python3
+"""Offline plotting for the figure TSVs emitted by `adapt figure --id N`.
+
+Build-time / analysis tooling only (never on the training path). Renders
+the paper's figures 3-8 from runs/<profile>/figures/*.tsv into PNGs.
+
+Usage:  python python/plot.py [runs/fast/figures] [out_dir]
+"""
+
+from __future__ import annotations
+
+import pathlib
+import sys
+
+import matplotlib
+
+matplotlib.use("Agg")
+import matplotlib.pyplot as plt  # noqa: E402
+
+
+def load_tsv(path: pathlib.Path):
+    lines = path.read_text().strip().split("\n")
+    header = lines[0].split("\t")
+    cols = {h: [] for h in header}
+    for line in lines[1:]:
+        for h, v in zip(header, line.split("\t")):
+            cols[h].append(float(v))
+    return header, cols
+
+
+STYLES = {
+    "wordlengths": dict(ylabel="word length (bit)", ylim=(0, 33)),
+    "sparsity": dict(ylabel="sparsity (fraction of zero weights)", ylim=(0, 1)),
+    "memory": dict(ylabel="memory relative to float32", hline=1.0),
+    "cost": dict(ylabel="computational cost relative to float32", hline=1.0),
+}
+
+
+def style_for(name: str):
+    for key, st in STYLES.items():
+        if key in name:
+            return st
+    return {}
+
+
+def plot_tsv(path: pathlib.Path, out_dir: pathlib.Path):
+    header, cols = load_tsv(path)
+    xs = cols[header[0]]
+    fig, ax = plt.subplots(figsize=(8, 4.5))
+    for series in header[1:]:
+        ax.plot(xs, cols[series], label=series, linewidth=1.1)
+    st = style_for(path.stem)
+    ax.set_xlabel("training step")
+    ax.set_ylabel(st.get("ylabel", "value"))
+    if "ylim" in st:
+        ax.set_ylim(*st["ylim"])
+    if "hline" in st:
+        ax.axhline(st["hline"], color="gray", linestyle="--", linewidth=0.8)
+    ax.set_title(path.stem.replace("_", " "))
+    ncol = 2 if len(header) > 12 else 1
+    ax.legend(fontsize=6, ncol=ncol, loc="best")
+    fig.tight_layout()
+    out = out_dir / f"{path.stem}.png"
+    fig.savefig(out, dpi=140)
+    plt.close(fig)
+    print(f"wrote {out}")
+
+
+def main() -> int:
+    src = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else "runs/fast/figures")
+    out = pathlib.Path(sys.argv[2] if len(sys.argv) > 2 else src)
+    if not src.exists():
+        print(f"no TSVs at {src} — run `adapt figure --id 3..8` first", file=sys.stderr)
+        return 1
+    out.mkdir(parents=True, exist_ok=True)
+    found = False
+    for tsv in sorted(src.glob("*.tsv")):
+        plot_tsv(tsv, out)
+        found = True
+    if not found:
+        print(f"no .tsv files in {src}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,75 @@
+"""AOT path: HLO text lowering + manifest consistency (the L2<->L3 contract)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def mlp_artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    aot.lower_config(M.CONFIGS["mlp-mnist"], batch=8, out_dir=str(out), verbose=False)
+    return out
+
+
+def test_hlo_text_parses_as_hlo_module(mlp_artifacts):
+    text = (mlp_artifacts / "mlp-mnist.train.hlo.txt").read_text()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+
+
+def test_manifest_matches_entry_layout(mlp_artifacts):
+    """Every manifest input appears in the HLO entry layout, in order."""
+    man = json.loads((mlp_artifacts / "mlp-mnist.manifest.json").read_text())
+    text = (mlp_artifacts / "mlp-mnist.train.hlo.txt").read_text()
+    header = text.split("->")[0]
+    for e in man["train_inputs"]:
+        dt = {"f32": "f32", "i32": "s32"}[e["dtype"]]
+        dims = ",".join(str(d) for d in e["shape"])
+        assert f"{dt}[{dims}]" in header, e
+
+
+def test_manifest_counts(mlp_artifacts):
+    man = json.loads((mlp_artifacts / "mlp-mnist.manifest.json").read_text())
+    L = man["num_layers"]
+    P = len(man["params"])
+    B = len(man["bn_state"])
+    assert len(man["layers"]) == L
+    assert len(man["train_inputs"]) == P + L + B + 4
+    assert len(man["train_outputs"]) == P + L + B + 7
+    assert len(man["infer_inputs"]) == P + B + 2
+    assert man["train_inputs"][-2]["shape"] == [2 * L, 5]
+
+
+def test_train_output_order_matches_step(mlp_artifacts):
+    """Run the jitted step and compare per-position shapes with the manifest."""
+    man = json.loads((mlp_artifacts / "mlp-mnist.manifest.json").read_text())
+    cfg = M.CONFIGS["mlp-mnist"]
+    model = M.build_model(cfg)
+    from compile.train_step import make_train_step
+
+    params = M.init_params(model, jax.random.PRNGKey(0))
+    out = jax.jit(make_train_step(model))(
+        params,
+        M.init_gsum(model),
+        M.init_bn_state(model),
+        jnp.zeros((8, *cfg.input_shape)),
+        jnp.zeros((8,), jnp.int32),
+        M.default_qparams(model),
+        M.default_hyper(),
+    )
+    assert len(out) == len(man["train_outputs"])
+    for got, want in zip(out, man["train_outputs"]):
+        assert list(got.shape) == want["shape"], want["name"]
+
+
+def test_all_configs_known():
+    for name in ["mlp-mnist", "lenet-mnist", "alexnet-c10", "alexnet-c100",
+                 "resnet20-c10", "resnet20-c100"]:
+        assert name in M.CONFIGS

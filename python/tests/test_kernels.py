@@ -1,0 +1,152 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+The quantize kernels must agree BIT-EXACTLY with the reference; the matmul
+kernel must agree to f32 accumulation tolerance. Hypothesis sweeps shapes
+and <WL, FL> formats.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fixedpoint as fp
+from compile.kernels import ref
+
+
+def _rand(key, shape, scale=4.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+SHAPES = [(7,), (32,), (16385,), (3, 5), (128, 257), (2, 3, 4, 5)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("wl,fl", [(8, 4), (4, 2), (16, 8), (2, 1), (32, 16)])
+def test_quantize_sr_matches_ref(shape, wl, fl):
+    x = _rand(0, shape)
+    u = jax.random.uniform(jax.random.PRNGKey(1), shape)
+    s, lo, hi, en, _ = fp.qparams_row(wl, fl)
+    got = fp.quantize_sr(x, u, s, lo, hi, en)
+    want = ref.quantize_sr_ref(x, u, s, lo, hi, en)
+    assert jnp.all(got == want), f"mismatch at {shape} <{wl},{fl}>"
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("wl,fl", [(8, 4), (6, 3), (12, 6)])
+def test_quantize_nr_matches_ref(shape, wl, fl):
+    x = _rand(2, shape)
+    s, lo, hi, en, _ = fp.qparams_row(wl, fl)
+    got = fp.quantize_nr(x, s, lo, hi, en)
+    want = ref.quantize_nr_ref(x, s, lo, hi, en)
+    assert jnp.all(got == want)
+
+
+def test_quantize_disabled_is_identity():
+    x = _rand(3, (513,))
+    u = jax.random.uniform(jax.random.PRNGKey(4), x.shape)
+    s, lo, hi, _, _ = fp.qparams_row(8, 4)
+    en = jnp.float32(0.0)
+    assert jnp.all(fp.quantize_sr(x, u, s, lo, hi, en) == x)
+    assert jnp.all(fp.quantize_nr(x, s, lo, hi, en) == x)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 2000),
+    wl=st.integers(2, 24),
+    frac=st.integers(0, 23),
+    seed=st.integers(0, 2**20),
+)
+def test_quantize_sr_property(n, wl, frac, seed):
+    """Output lies on the <WL, FL> grid and within one ULP of the input
+    (when the input is inside the representable range)."""
+    fl = min(frac, wl - 1)
+    x = _rand(seed, (n,), scale=2.0)
+    u = jax.random.uniform(jax.random.PRNGKey(seed + 1), (n,))
+    s, lo, hi, en, _ = fp.qparams_row(wl, fl)
+    y = fp.quantize_sr(x, u, s, lo, hi, en)
+    # grid membership: y * 2^FL is integral and clamped
+    q = y * s
+    assert jnp.all(q == jnp.round(q))
+    assert jnp.all(q >= lo) and jnp.all(q <= hi)
+    # one-ULP bound for in-range values
+    ulp = 1.0 / float(s)
+    inside = (x >= float(lo) / float(s)) & (x <= float(hi) / float(s))
+    err = jnp.abs(y - x)
+    assert jnp.all(jnp.where(inside, err <= ulp + 1e-6, True))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 130),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 1000),
+)
+def test_qmatmul_matches_ref(m, k, n, seed):
+    a = _rand(seed, (m, k), scale=1.0)
+    b = _rand(seed + 1, (k, n), scale=1.0)
+    got = fp.qmatmul(a, b)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_qmatmul_large_tiled():
+    a = _rand(10, (300, 500), scale=1.0)
+    b = _rand(11, (500, 300), scale=1.0)
+    np.testing.assert_allclose(fp.qmatmul(a, b), ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_ste_gradient_identity_inside_range():
+    x = jnp.linspace(-0.9, 0.9, 101)  # well inside <8,4> range (+-8)
+    u = jnp.full_like(x, 0.5)
+    s, lo, hi, en, _ = fp.qparams_row(8, 4)
+    g = jax.grad(lambda t: fp.quantize_ste(t, u, s, lo, hi, en).sum())(x)
+    assert jnp.all(g == 1.0)
+
+
+def test_ste_gradient_clipped_outside_range():
+    # <4,2>: representable range is [-8/4, 7/4] = [-2, 1.75]
+    x = jnp.array([-5.0, -2.5, 0.0, 1.0, 3.0])
+    u = jnp.full_like(x, 0.5)
+    s, lo, hi, en, _ = fp.qparams_row(4, 2)
+    g = jax.grad(lambda t: fp.quantize_ste(t, u, s, lo, hi, en).sum())(x)
+    assert list(g) == [0.0, 0.0, 1.0, 1.0, 0.0]
+
+
+def test_ste_gradient_disabled_is_identity():
+    x = jnp.array([-100.0, 100.0])
+    u = jnp.full_like(x, 0.5)
+    s, lo, hi, _, _ = fp.qparams_row(4, 2)
+    g = jax.grad(lambda t: fp.quantize_ste(t, u, s, lo, hi, jnp.float32(0.0)).sum())(x)
+    assert jnp.all(g == 1.0)
+
+
+def test_qmatmul_gradients_match_ref():
+    a = _rand(20, (33, 47), scale=1.0)
+    b = _rand(21, (47, 29), scale=1.0)
+    ga = jax.grad(lambda t: (fp.qmatmul(t, b) ** 2).sum())(a)
+    gr = jax.grad(lambda t: (ref.matmul_ref(t, b) ** 2).sum())(a)
+    np.testing.assert_allclose(ga, gr, rtol=1e-4, atol=1e-4)
+    gb = jax.grad(lambda t: (fp.qmatmul(a, t) ** 2).sum())(b)
+    gbr = jax.grad(lambda t: (ref.matmul_ref(a, t) ** 2).sum())(b)
+    np.testing.assert_allclose(gb, gbr, rtol=1e-4, atol=1e-4)
+
+
+def test_stochastic_rounding_is_unbiased():
+    """E[SR(x)] = x: the statistical property the paper's convergence rests on."""
+    x = jnp.full((20000,), 0.3)  # 0.3 * 16 = 4.8, between grid points 4 and 5
+    s, lo, hi, en, _ = fp.qparams_row(8, 4)
+    u = jax.random.uniform(jax.random.PRNGKey(7), x.shape)
+    y = fp.quantize_sr(x, u, s, lo, hi, en)
+    assert abs(float(y.mean()) - 0.3) < 2e-3
+    # only the two adjacent grid points appear
+    vals = set(np.unique(np.asarray(y)).tolist())
+    assert vals <= {4.0 / 16.0, 5.0 / 16.0}
+
+
+def test_qparams_row_values():
+    row = fp.qparams_row(8, 4)
+    assert list(np.asarray(row)) == [16.0, -128.0, 127.0, 1.0, 8.0]

@@ -1,0 +1,104 @@
+"""L2 model definitions: shapes, spec consistency, quantization-index order."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.layers import QuantCtx
+
+
+ALL = sorted(M.CONFIGS)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_build_and_forward_shapes(name):
+    cfg = M.CONFIGS[name]
+    model = M.build_model(cfg)
+    params = M.init_params(model, jax.random.PRNGKey(0))
+    bn = M.init_bn_state(model)
+    x = jnp.zeros((4, *cfg.input_shape))
+    ctx = QuantCtx(M.default_qparams(model), jax.random.PRNGKey(1), True, model.num_layers)
+    logits, new_bn = model.apply(params, bn, x, ctx, train=True)
+    assert logits.shape == (4, cfg.classes)
+    assert len(new_bn) == len(bn)
+    # ctx recorded one entry per quantizable layer, in order
+    assert len(ctx.sparsity) == model.num_layers
+    assert len(ctx.act_absmax) == model.num_layers
+    assert len(ctx.wl) == model.num_layers
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_param_specs_shapes_match_init(name):
+    cfg = M.CONFIGS[name]
+    model = M.build_model(cfg)
+    params = M.init_params(model, jax.random.PRNGKey(0))
+    assert len(params) == len(model.param_specs)
+    for p, s in zip(params, model.param_specs):
+        assert p.shape == tuple(s.shape), s.name
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_quantizable_layers_are_contiguous(name):
+    """Kernel param layer indices must be 0..L-1 in spec order — the ordering
+    contract the Rust coordinator relies on."""
+    model = M.build_model(M.CONFIGS[name])
+    idx = [s.layer for s in model.param_specs if s.quantizable]
+    assert idx == list(range(model.num_layers))
+    assert len(model.layer_infos) == model.num_layers
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_layer_infos_have_positive_costs(name):
+    model = M.build_model(M.CONFIGS[name])
+    for li in model.layer_infos:
+        assert li.madds > 0
+        assert li.weight_elems > 0
+        assert li.fan_in > 0
+        assert li.kind in ("conv", "dense", "downsample")
+
+
+def test_resnet20_structure():
+    model = M.build_model(M.CONFIGS["resnet20-c10"])
+    kinds = [li.kind for li in model.layer_infos]
+    assert kinds.count("downsample") == 2  # stage 1->2 and 2->3 projections
+    assert kinds.count("dense") == 1
+    assert kinds.count("conv") == 19  # stem + 18 block convs
+    assert model.num_layers == 22
+    n = sum(int(jnp.prod(jnp.array(s.shape))) for s in model.param_specs)
+    assert 0.25e6 < n < 0.3e6  # ~0.27M params, standard ResNet-20
+
+
+def test_alexnet_structure():
+    model = M.build_model(M.CONFIGS["alexnet-c10"])
+    kinds = [li.kind for li in model.layer_infos]
+    assert kinds == ["conv"] * 5 + ["dense"] * 3
+
+
+def test_tnvs_init_statistics():
+    """TNVS: sigma = sqrt(s/fan_in), truncation at +-sqrt(3 s / fan_in)."""
+    model = M.build_model(M.CONFIGS["mlp-mnist"])
+    params = M.init_params(model, jax.random.PRNGKey(0), s=1.0)
+    spec = model.param_specs[0]
+    w = params[0]
+    alpha = (3.0 / spec.fan_in) ** 0.5
+    assert float(jnp.max(jnp.abs(w))) <= alpha + 1e-6
+    assert abs(float(w.mean())) < 1e-3
+    # std of a truncated normal at +-sqrt(3)sigma is ~0.84 sigma... loose check
+    sigma = (1.0 / spec.fan_in) ** 0.5
+    assert 0.5 * sigma < float(w.std()) < 1.05 * sigma
+
+
+def test_infer_deterministic():
+    cfg = M.CONFIGS["lenet-mnist"]
+    model = M.build_model(cfg)
+    params = M.init_params(model, jax.random.PRNGKey(0))
+    bn = M.init_bn_state(model)
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, *cfg.input_shape))
+    qp = M.default_qparams(model)
+    from compile.train_step import make_infer
+
+    infer = jax.jit(make_infer(model))
+    a, = infer(params, bn, x, qp)
+    b, = infer(params, bn, x, qp)
+    assert jnp.all(a == b)

@@ -1,0 +1,177 @@
+"""ASGD train-step semantics: learning, metrics, master-copy contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.train_step import make_train_step, make_infer
+
+
+def _setup(name="mlp-mnist", batch=16, seed=0):
+    cfg = M.CONFIGS[name]
+    model = M.build_model(cfg)
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(model, key)
+    bn = M.init_bn_state(model)
+    gsum = M.init_gsum(model)
+    qp = M.default_qparams(model)
+    # easy separable task: class = sign pattern of the first pixels
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed + 1))
+    x = jax.random.normal(kx, (batch, *cfg.input_shape))
+    y = jax.random.randint(ky, (batch,), 0, cfg.classes)
+    return cfg, model, params, bn, gsum, qp, x, y
+
+
+def _unpack(model, bn, out):
+    P, L, B = len(model.param_specs), model.num_layers, len(bn)
+    new_params = list(out[:P])
+    new_gsum = list(out[P : P + L])
+    new_bn = list(out[P + L : P + L + B])
+    loss, ce, acc = out[P + L + B], out[P + L + B + 1], out[P + L + B + 2]
+    gn, gs, sp, am = out[P + L + B + 3 :]
+    return new_params, new_gsum, new_bn, loss, ce, acc, gn, gs, sp, am
+
+
+def test_memorizes_small_batch():
+    """Overfit one batch: CE must fall substantially under <8,4> quantization."""
+    cfg, model, params, bn, gsum, qp, x, y = _setup()
+    step = jax.jit(make_train_step(model))
+    hyper0 = np.asarray(M.default_hyper(lr=0.1, l1=0.0, l2=0.0, gnorm=1.0))
+    first_ce = None
+    for i in range(60):
+        hy = jnp.asarray(hyper0).at[4].set(float(i))
+        out = step(params, gsum, bn, x, y, qp, hy)
+        params, gsum, bn, loss, ce, acc, *_ = _unpack(model, bn, out)
+        if first_ce is None:
+            first_ce = float(ce)
+    assert float(ce) < 0.5 * first_ce, (first_ce, float(ce))
+    assert float(acc) > 0.8
+
+
+def test_zero_lr_keeps_master_weights():
+    cfg, model, params, bn, gsum, qp, x, y = _setup()
+    step = jax.jit(make_train_step(model))
+    hy = M.default_hyper(lr=0.0, l1=0.0, l2=0.0)
+    out = step(params, gsum, bn, x, y, qp, hy)
+    new_params, *_ = _unpack(model, bn, out)
+    for a, b in zip(params, new_params):
+        assert jnp.all(a == b)
+
+
+def test_metrics_shapes_and_ranges():
+    cfg, model, params, bn, gsum, qp, x, y = _setup("lenet-mnist")
+    step = jax.jit(make_train_step(model))
+    out = step(params, gsum, bn, x, y, qp, M.default_hyper())
+    _, new_gsum, _, loss, ce, acc, gn, gs, sp, am = _unpack(model, bn, out)
+    L = model.num_layers
+    assert gn.shape == gs.shape == sp.shape == am.shape == (L,)
+    assert 0.0 <= float(acc) <= 1.0
+    assert float(ce) > 0 and jnp.isfinite(loss)
+    assert jnp.all(sp >= 0) and jnp.all(sp <= 1)
+    assert jnp.all(am >= 0)
+    assert jnp.all(jnp.isfinite(gn)) and jnp.all(gn >= 0)
+    # gsum accumulated exactly once -> gsum_norm == grad_norm on first step
+    np.testing.assert_allclose(np.asarray(gn), np.asarray(gs), rtol=1e-5)
+
+
+def test_gsum_accumulates():
+    cfg, model, params, bn, gsum, qp, x, y = _setup()
+    step = jax.jit(make_train_step(model))
+    hy = M.default_hyper(lr=0.0)
+    out1 = step(params, gsum, bn, x, y, qp, hy)
+    _, gsum1, *_ = _unpack(model, bn, out1)
+    out2 = step(params, gsum1, bn, x, y, qp, hy)
+    _, gsum2, *_ = _unpack(model, bn, out2)
+    # lr=0, same seed -> identical gradients; gsum2 = 2 * gsum1
+    for a, b in zip(gsum1, gsum2):
+        np.testing.assert_allclose(np.asarray(b), 2 * np.asarray(a), rtol=1e-4, atol=1e-7)
+
+
+def test_disabled_quantization_is_float32_baseline():
+    """enable=0 rows turn the step into plain float32 SGD (the paper's
+    baseline) — quantized sparsity metrics then reflect raw zero counts."""
+    cfg, model, params, bn, gsum, qp, x, y = _setup()
+    qp_off = M.default_qparams(model, enable=0.0)
+    step = jax.jit(make_train_step(model))
+    hy = M.default_hyper(l1=0.0, l2=0.0, gnorm=0.0)
+    out = step(params, gsum, bn, x, y, qp_off, hy)
+    new_params, *_ = _unpack(model, bn, out)
+
+    # reference: pure-jnp forward/backward without any quantization
+    def ref_loss(ps):
+        h = x.reshape(x.shape[0], -1)
+        for i in range(0, 6, 2):
+            h = h @ ps[i] + ps[i + 1]
+            if i < 4:
+                h = jnp.maximum(h, 0)
+        logp = jax.nn.log_softmax(h)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+    g = jax.grad(ref_loss)(params)
+    lr = 0.05
+    for i, (p, gg) in enumerate(zip(params, g)):
+        np.testing.assert_allclose(
+            np.asarray(new_params[i]), np.asarray(p - lr * gg), rtol=2e-3, atol=1e-6
+        )
+
+
+def test_l2_regularization_shrinks_weights():
+    cfg, model, params, bn, gsum, qp, x, y = _setup()
+    step = jax.jit(make_train_step(model))
+    hy_reg = M.default_hyper(lr=0.1, l1=0.0, l2=1.0, gnorm=0.0)
+    hy_off = M.default_hyper(lr=0.1, l1=0.0, l2=0.0, gnorm=0.0)
+    out_r = step(params, gsum, bn, x, y, qp, hy_reg)
+    out_o = step(params, gsum, bn, x, y, qp, hy_off)
+    w_r = out_r[0]
+    w_o = out_o[0]
+    assert float(jnp.sum(w_r**2)) < float(jnp.sum(w_o**2))
+
+
+def test_l1_regularization_induces_sparsity():
+    """Sustained L1 pressure + quantization snap-to-zero => rising sparsity."""
+    cfg, model, params, bn, gsum, qp, x, y = _setup()
+    step = jax.jit(make_train_step(model))
+    sp0 = None
+    for i in range(40):
+        hy = M.default_hyper(lr=0.05, l1=2e-3, l2=0.0, seed=i, gnorm=0.0)
+        out = step(params, gsum, bn, x, y, qp, hy)
+        params, gsum, bn, loss, ce, acc, gn, gs, sp, am = _unpack(model, bn, out)
+        if sp0 is None:
+            sp0 = float(sp.mean())
+    assert float(sp.mean()) > sp0
+
+
+def test_gradient_normalization_bounds_update():
+    cfg, model, params, bn, gsum, qp, x, y = _setup()
+    step = jax.jit(make_train_step(model))
+    out = step(params, gsum, bn, x, y, qp, M.default_hyper(lr=1.0, l1=0, l2=0, gnorm=1.0))
+    new_params, *_ = _unpack(model, bn, out)
+    # normalized kernel update has L2 norm == lr
+    kidx = [i for i, s in enumerate(model.param_specs) if s.quantizable]
+    for i in kidx:
+        d = new_params[i] - params[i]
+        np.testing.assert_allclose(float(jnp.sqrt((d**2).sum())), 1.0, rtol=1e-3)
+
+
+def test_nan_inputs_do_not_crash():
+    """Failure injection: a NaN batch must produce a NaN loss, not an error;
+    the Rust coordinator detects and skips such steps."""
+    cfg, model, params, bn, gsum, qp, x, y = _setup()
+    step = jax.jit(make_train_step(model))
+    x_bad = x.at[0, 0, 0, 0].set(jnp.nan)
+    out = step(params, gsum, bn, x_bad, y, qp, M.default_hyper())
+    loss = out[len(model.param_specs) + model.num_layers + len(bn)]
+    assert bool(jnp.isnan(loss))
+
+
+def test_bn_state_updates_in_training():
+    cfg, model, params, bn, gsum, qp, x, y = _setup("resnet20-c10", batch=4)
+    step = jax.jit(make_train_step(model))
+    out = step(params, gsum, bn, x, y, qp, M.default_hyper())
+    _, _, new_bn, *_ = _unpack(model, bn, out)
+    changed = sum(
+        0 if bool(jnp.all(a == b)) else 1 for a, b in zip(bn, new_bn)
+    )
+    assert changed > 0

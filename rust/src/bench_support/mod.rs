@@ -1,0 +1,544 @@
+//! Experiment harness: runs (or loads cached) training runs and regenerates
+//! every table and figure of the paper's evaluation section (sec. 4.2).
+//!
+//! Conventions: runs are cached under `runs/<profile>/` as
+//! `<artifact>.<mode>.run.json`; tables print as aligned text with the
+//! paper's row/column structure; figures emit TSV series (step, value...)
+//! ready for plotting.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{Policy, TrainConfig};
+use crate::metrics::RunRecord;
+use crate::muppet::MuppetHyper;
+use crate::perfmodel as pm;
+use crate::quant::QuantHyper;
+use crate::runtime::{Engine, Manifest};
+
+/// Run-size profile. `fast` is sized for the single-core CPU testbed;
+/// `tiny` is for smoke tests/benches; `paper` matches sec. 4.1 (100 epochs,
+/// 50k images — only practical on real hardware).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Profile {
+    Tiny,
+    Fast,
+    Paper,
+}
+
+impl Profile {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Profile::Tiny => "tiny",
+            Profile::Fast => "fast",
+            Profile::Paper => "paper",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Profile> {
+        match s {
+            "tiny" => Some(Profile::Tiny),
+            "fast" => Some(Profile::Fast),
+            "paper" => Some(Profile::Paper),
+            _ => None,
+        }
+    }
+
+    pub fn config(&self, artifact: &str, policy: Policy) -> TrainConfig {
+        let mut cfg = match self {
+            Profile::Tiny => {
+                let mut c = TrainConfig::fast(artifact, policy);
+                c.epochs = 2;
+                c.train_size = 256;
+                c.eval_size = 64;
+                c.eval_every = 1;
+                c
+            }
+            Profile::Fast => {
+                let mut c = TrainConfig::fast(artifact, policy);
+                if artifact.starts_with("alexnet") {
+                    // ~3 s/step on the 1-core testbed: keep runs tractable
+                    c.epochs = 4;
+                    c.train_size = 512;
+                    c.eval_size = 128;
+                }
+                c
+            }
+            Profile::Paper => TrainConfig::paper(artifact, policy),
+        };
+        // the paper uses 8 buffer bits for CIFAR-100 runs (sec. 4.1.1)
+        if artifact.ends_with("c100") {
+            if let Policy::Adapt(ref mut h) = cfg.policy {
+                h.buff = 8;
+            }
+        }
+        cfg
+    }
+
+    /// AdaPT window hyperparameters scaled to the profile's epoch length so
+    /// switches still happen several times per run.
+    pub fn quant_hyper(&self) -> QuantHyper {
+        match self {
+            Profile::Tiny => QuantHyper::default().scaled(0.12),
+            Profile::Fast => QuantHyper::default().scaled(0.25),
+            Profile::Paper => QuantHyper::default(),
+        }
+    }
+
+    pub fn muppet_hyper(&self) -> MuppetHyper {
+        match self {
+            Profile::Tiny => MuppetHyper {
+                threshold: 1.02,
+                patience: 1,
+                window: 2,
+                ..Default::default()
+            },
+            Profile::Fast => MuppetHyper {
+                threshold: 1.05,
+                patience: 1,
+                window: 3,
+                ..Default::default()
+            },
+            Profile::Paper => MuppetHyper::default(),
+        }
+    }
+
+    pub fn policy(&self, mode: &str) -> Result<Policy> {
+        Ok(match mode {
+            "adapt" => Policy::Adapt(self.quant_hyper()),
+            "muppet" => Policy::Muppet(self.muppet_hyper()),
+            "float32" => Policy::Float32,
+            _ => return Err(anyhow!("unknown mode '{mode}'")),
+        })
+    }
+}
+
+/// Locate (or create) the runs cache directory.
+pub fn runs_dir(profile: Profile) -> PathBuf {
+    let base = std::env::var("ADAPT_RUNS").unwrap_or_else(|_| "runs".to_string());
+    Path::new(&base).join(profile.name())
+}
+
+thread_local! {
+    /// Compiled-executable cache: XLA compilation of the ResNet-20 train
+    /// step takes minutes on one core; the three policy runs per artifact
+    /// must share one LoadedModel.
+    static MODEL_CACHE: std::cell::RefCell<std::collections::BTreeMap<String, std::rc::Rc<crate::runtime::LoadedModel>>> =
+        std::cell::RefCell::new(std::collections::BTreeMap::new());
+}
+
+/// Load (and memoize) a compiled model.
+pub fn cached_model(
+    engine: &Engine,
+    artifacts: &Path,
+    artifact: &str,
+) -> Result<std::rc::Rc<crate::runtime::LoadedModel>> {
+    MODEL_CACHE.with(|c| {
+        if let Some(m) = c.borrow().get(artifact) {
+            return Ok(m.clone());
+        }
+        eprintln!("[harness] compiling {artifact}…");
+        let m = std::rc::Rc::new(engine.load_model(artifacts, artifact)?);
+        c.borrow_mut().insert(artifact.to_string(), m.clone());
+        Ok(m)
+    })
+}
+
+/// Load a cached run or train it now and cache the record.
+pub fn ensure_run(
+    engine: &Engine,
+    artifacts: &Path,
+    profile: Profile,
+    artifact: &str,
+    mode: &str,
+) -> Result<RunRecord> {
+    let dir = runs_dir(profile);
+    let path = RunRecord::path_for(&dir, artifact, mode);
+    if let Ok(rec) = RunRecord::load(&path) {
+        return Ok(rec);
+    }
+    eprintln!("[harness] training {artifact} / {mode} ({} profile)…", profile.name());
+    let mut cfg = profile.config(artifact, profile.policy(mode)?);
+    cfg.log_every = 50;
+    let model = cached_model(engine, artifacts, artifact)?;
+    let out = crate::coordinator::trainer::train_via_model(&model, &cfg)?;
+    out.record.save(&path)?;
+    Ok(out.record)
+}
+
+pub fn manifest_for(artifacts: &Path, artifact: &str) -> Result<Manifest> {
+    Manifest::load(&artifacts.join(format!("{artifact}.manifest.json")))
+}
+
+fn pct(x: f32) -> String {
+    format!("{:.1}", 100.0 * x)
+}
+
+// ---------------------------------------------------------------------------
+// Tables 1 & 2 — top-1 accuracy, AdaPT vs MuPPET vs float32
+// ---------------------------------------------------------------------------
+
+pub fn accuracy_table(
+    engine: &Engine,
+    artifacts: &Path,
+    profile: Profile,
+    dataset: &str, // "c10" | "c100"
+) -> Result<String> {
+    let mut out = String::new();
+    let title = if dataset == "c10" { "CIFAR10" } else { "CIFAR100" };
+    out.push_str(&format!(
+        "{title} (synthetic substitute, {} profile)\n",
+        profile.name()
+    ));
+    out.push_str(&format!(
+        "{:<18} {:>9} {:>10} {:>7}\n",
+        "", "Float32", "Quantized", "Δ"
+    ));
+    for model in ["alexnet", "resnet20"] {
+        let artifact = format!("{model}-{dataset}");
+        let f32_run = ensure_run(engine, artifacts, profile, &artifact, "float32")?;
+        let adapt_run = ensure_run(engine, artifacts, profile, &artifact, "adapt")?;
+        let muppet_run = ensure_run(engine, artifacts, profile, &artifact, "muppet")?;
+        let f = f32_run.final_eval().unwrap_or(0.0);
+        let a = adapt_run.final_eval().unwrap_or(0.0);
+        let m = muppet_run.final_eval().unwrap_or(0.0);
+        out.push_str(&format!(
+            "{:<18} {:>9} {:>10} {:>+7.1}\n",
+            format!("{model}_AdaPT"),
+            pct(f),
+            pct(a),
+            100.0 * (a - f)
+        ));
+        out.push_str(&format!(
+            "{:<18} {:>9} {:>10} {:>+7.1}\n",
+            format!("{model}_MuPPET"),
+            pct(f),
+            pct(m),
+            100.0 * (m - f)
+        ));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Tables 3 & 4 — MEM, SU^1, SU^2, SU^3
+// ---------------------------------------------------------------------------
+
+/// Truncate a run record after `n` steps (for iso-accuracy SU^2).
+fn truncated(run: &RunRecord, n: usize) -> RunRecord {
+    let mut r = run.clone();
+    let n = n.min(r.steps.len()).max(1);
+    r.steps.truncate(n);
+    r.layer_wl.truncate(n);
+    r.layer_nz.truncate(n);
+    r.layer_lb.truncate(n);
+    r.layer_res.truncate(n);
+    r
+}
+
+/// First step at which the run's eval accuracy reached `target`; None if never.
+fn iso_accuracy_step(run: &RunRecord, target: f32) -> Option<usize> {
+    run.evals
+        .iter()
+        .find(|&&(_, a)| a >= target)
+        .map(|&(s, _)| s as usize)
+}
+
+pub struct SpeedupRow {
+    pub model: String,
+    pub mem: f64,
+    pub su1: f64,
+    pub su2: f64,
+    pub su3: f64,
+}
+
+pub fn speedup_row(
+    engine: &Engine,
+    artifacts: &Path,
+    profile: Profile,
+    artifact: &str,
+) -> Result<SpeedupRow> {
+    let man = manifest_for(artifacts, artifact)?;
+    let f32_run = ensure_run(engine, artifacts, profile, artifact, "float32")?;
+    let adapt_run = ensure_run(engine, artifacts, profile, artifact, "adapt")?;
+
+    let layers = &man.layers;
+    let a_cost = pm::train_costs(layers, &adapt_run);
+    let a_oh = pm::adapt_overhead(layers, &adapt_run);
+    let f_cost = pm::train_costs_float32(layers, f32_run.steps.len(), f32_run.accs);
+
+    // SU^1: AdaPT vs our float32 baseline, identical schedule.
+    let su1 = pm::speedup(adapt_run.batch, a_cost, a_oh, f32_run.batch, f_cost);
+
+    // SU^2: iso-accuracy adjustment — truncate the AdaPT run at the first
+    // eval point where it matches the float32 final accuracy.
+    let su2 = match iso_accuracy_step(&adapt_run, f32_run.final_eval().unwrap_or(1.0)) {
+        Some(n) => {
+            let t = truncated(&adapt_run, n);
+            pm::speedup(
+                t.batch,
+                pm::train_costs(layers, &t),
+                pm::adapt_overhead(layers, &t),
+                f32_run.batch,
+                f_cost,
+            )
+        }
+        None => su1,
+    };
+
+    // SU^3: vs the MuPPET paper's baseline schedule (batch 128, 1.5x epochs).
+    let mup_steps = (f32_run.steps.len() as f64 * 1.5) as usize;
+    let mup_f32_cost = pm::train_costs_float32(layers, mup_steps, f32_run.accs);
+    let su3 = pm::speedup(adapt_run.batch, a_cost, a_oh, 128, mup_f32_cost);
+
+    Ok(SpeedupRow {
+        model: artifact.to_string(),
+        mem: pm::mem_ratio(&adapt_run),
+        su1,
+        su2,
+        su3,
+    })
+}
+
+pub fn speedup_table(
+    engine: &Engine,
+    artifacts: &Path,
+    profile: Profile,
+    dataset: &str,
+) -> Result<String> {
+    let title = if dataset == "c10" { "CIFAR10" } else { "CIFAR100" };
+    let mut out = format!(
+        "{title} training (synthetic substitute, {} profile)\n{:<22} {:>6} {:>7} {:>7} {:>7}\n",
+        profile.name(),
+        "",
+        "MEM",
+        "SU^1",
+        "SU^2",
+        "SU^3"
+    );
+    for model in ["alexnet", "resnet20"] {
+        let row = speedup_row(engine, artifacts, profile, &format!("{model}-{dataset}"))?;
+        out.push_str(&format!(
+            "{:<22} {:>6.2} {:>7.2} {:>7.2} {:>7.2}\n",
+            format!("{model}_AdaPT"),
+            row.mem,
+            row.su1,
+            row.su2,
+            row.su3
+        ));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Table 5 — sparsity
+// ---------------------------------------------------------------------------
+
+pub fn sparsity_table(
+    engine: &Engine,
+    artifacts: &Path,
+    profile: Profile,
+) -> Result<String> {
+    let mut out = format!(
+        "Sparsity (AdaPT training, {} profile)\n{:<22} {:>12} {:>9}\n",
+        profile.name(),
+        "",
+        "Final Model",
+        "Average"
+    );
+    for (model, ds) in [
+        ("alexnet", "c10"),
+        ("resnet20", "c10"),
+        ("alexnet", "c100"),
+        ("resnet20", "c100"),
+    ] {
+        let run = ensure_run(engine, artifacts, profile, &format!("{model}-{ds}"), "adapt")?;
+        out.push_str(&format!(
+            "{:<22} {:>12.2} {:>9.2}\n",
+            format!("{model}_{}", if ds == "c10" { "CIFAR10" } else { "CIFAR100" }),
+            run.final_model_sparsity(),
+            run.average_sparsity()
+        ));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Table 6 — inference SZ + SU
+// ---------------------------------------------------------------------------
+
+pub fn inference_table(
+    engine: &Engine,
+    artifacts: &Path,
+    profile: Profile,
+) -> Result<String> {
+    let mut out = format!(
+        "Inference (AdaPT-trained models, {} profile)\n{:<22} {:>6} {:>7}\n",
+        profile.name(),
+        "",
+        "SZ",
+        "SU"
+    );
+    for (model, ds) in [
+        ("alexnet", "c10"),
+        ("resnet20", "c10"),
+        ("alexnet", "c100"),
+        ("resnet20", "c100"),
+    ] {
+        let artifact = format!("{model}-{ds}");
+        let man = manifest_for(artifacts, &artifact)?;
+        let run = ensure_run(engine, artifacts, profile, &artifact, "adapt")?;
+        out.push_str(&format!(
+            "{:<22} {:>6.2} {:>7.2}\n",
+            format!("{model}_{}", if ds == "c10" { "CIFAR10" } else { "CIFAR100" }),
+            pm::size_ratio(&run),
+            pm::inference_speedup(&man.layers, &run)
+        ));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Figures 3-8 — TSV series
+// ---------------------------------------------------------------------------
+
+/// Fig. 3/4: per-layer word length over steps.
+pub fn figure_wordlengths(run: &RunRecord, man: &Manifest) -> String {
+    let mut out = String::from("step");
+    for l in &man.layers {
+        out.push_str(&format!("\t{}", l.name));
+    }
+    out.push('\n');
+    for (i, row) in run.layer_wl.iter().enumerate() {
+        out.push_str(&i.to_string());
+        for w in row {
+            out.push_str(&format!("\t{w}"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Fig. 5/6: per-layer sparsity over steps.
+pub fn figure_sparsity(run: &RunRecord, man: &Manifest) -> String {
+    let mut out = String::from("step");
+    for l in &man.layers {
+        out.push_str(&format!("\t{}", l.name));
+    }
+    out.push('\n');
+    for (i, row) in run.layer_nz.iter().enumerate() {
+        out.push_str(&i.to_string());
+        for nz in row {
+            out.push_str(&format!("\t{:.4}", 1.0 - nz));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Fig. 7: relative memory over steps (per recorded run vs float32).
+pub fn figure_memory(runs: &[(&str, &RunRecord)]) -> String {
+    let mut out = String::from("step");
+    for (name, _) in runs {
+        out.push_str(&format!("\t{name}"));
+    }
+    out.push('\n');
+    let series: Vec<Vec<f64>> = runs.iter().map(|(_, r)| pm::relative_mem_series(r)).collect();
+    let n = series.iter().map(|s| s.len()).min().unwrap_or(0);
+    for i in 0..n {
+        out.push_str(&i.to_string());
+        for s in &series {
+            out.push_str(&format!("\t{:.4}", s[i]));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Fig. 8: relative computational cost over steps.
+pub fn figure_cost(runs: &[(&str, &RunRecord, &Manifest)]) -> String {
+    let mut out = String::from("step");
+    for (name, _, _) in runs {
+        out.push_str(&format!("\t{name}"));
+    }
+    out.push('\n');
+    let series: Vec<Vec<f64>> = runs
+        .iter()
+        .map(|(_, r, m)| pm::relative_cost_series(&m.layers, r))
+        .collect();
+    let n = series.iter().map(|s| s.len()).min().unwrap_or(0);
+    for i in 0..n {
+        out.push_str(&i.to_string());
+        for s in &series {
+            out.push_str(&format!("\t{:.4}", s[i]));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::StepRow;
+
+    fn rec(n: usize, l: usize) -> RunRecord {
+        RunRecord {
+            name: "x".into(),
+            mode: "adapt".into(),
+            batch: 32,
+            accs: 1,
+            epochs: 1,
+            steps_per_epoch: n,
+            num_layers: l,
+            steps: vec![StepRow { loss: 1.0, ce: 1.0, acc: 0.5 }; n],
+            layer_wl: vec![vec![10; l]; n],
+            layer_nz: vec![vec![0.8; l]; n],
+            layer_lb: vec![vec![10; l]; n],
+            layer_res: vec![vec![50; l]; n],
+            evals: vec![(2, 0.4), (5, 0.6), (8, 0.9)],
+            switches: vec![],
+            wall_secs: 0.0,
+        }
+    }
+
+    #[test]
+    fn truncation_consistency() {
+        let r = rec(10, 3);
+        let t = truncated(&r, 4);
+        assert_eq!(t.steps.len(), 4);
+        assert_eq!(t.layer_wl.len(), 4);
+        assert_eq!(t.layer_lb.len(), 4);
+    }
+
+    #[test]
+    fn iso_accuracy_lookup() {
+        let r = rec(10, 3);
+        assert_eq!(iso_accuracy_step(&r, 0.5), Some(5));
+        assert_eq!(iso_accuracy_step(&r, 0.95), None);
+        assert_eq!(iso_accuracy_step(&r, 0.1), Some(2));
+    }
+
+    #[test]
+    fn profiles_resolve() {
+        for p in ["tiny", "fast", "paper"] {
+            assert!(Profile::from_name(p).is_some());
+        }
+        assert!(Profile::from_name("bogus").is_none());
+        let cfg = Profile::Fast.config("alexnet-c100", Profile::Fast.policy("adapt").unwrap());
+        if let Policy::Adapt(h) = cfg.policy {
+            assert_eq!(h.buff, 8, "c100 must use 8 buffer bits");
+        } else {
+            panic!("wrong policy");
+        }
+    }
+
+    #[test]
+    fn figure_tsvs_have_headers_and_rows() {
+        let r = rec(5, 2);
+        let s = figure_memory(&[("a", &r)]);
+        assert!(s.starts_with("step\ta\n"));
+        assert_eq!(s.lines().count(), 6);
+    }
+}

@@ -1,0 +1,237 @@
+//! Checkpointing: binary snapshots of the full training state (master
+//! weights, gradient accumulators, BN stats, step counter) so long runs
+//! survive interruption and poisoned steps can be rolled back.
+//!
+//! Format (little-endian, versioned):
+//!   magic "ADPT" | u32 version | u64 step | u32 n_sections
+//!   per section: u32 n_tensors, per tensor: u64 len, f32 data...
+//! Sections are (params, gsum, bn). A trailing CRC-like xor checksum guards
+//! against truncation (no external hashing crates offline).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::TrainState;
+
+const MAGIC: &[u8; 4] = b"ADPT";
+const VERSION: u32 = 1;
+
+fn xor_checksum(data: &[f32]) -> u64 {
+    let mut acc = 0xA5A5_5A5A_DEAD_BEEFu64;
+    for (i, &v) in data.iter().enumerate() {
+        acc ^= (v.to_bits() as u64).rotate_left((i % 61) as u32);
+    }
+    acc
+}
+
+fn write_section<W: Write>(w: &mut W, tensors: &[Vec<f32>], sum: &mut u64) -> Result<()> {
+    w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for t in tensors {
+        w.write_all(&(t.len() as u64).to_le_bytes())?;
+        let bytes: &[u8] =
+            unsafe { std::slice::from_raw_parts(t.as_ptr() as *const u8, t.len() * 4) };
+        w.write_all(bytes)?;
+        *sum ^= xor_checksum(t);
+    }
+    Ok(())
+}
+
+fn read_section<R: Read>(r: &mut R, sum: &mut u64) -> Result<Vec<Vec<f32>>> {
+    let mut b4 = [0u8; 4];
+    r.read_exact(&mut b4)?;
+    let n = u32::from_le_bytes(b4) as usize;
+    if n > 1_000_000 {
+        return Err(anyhow!("implausible tensor count {n}"));
+    }
+    let mut out = Vec::with_capacity(n);
+    let mut b8 = [0u8; 8];
+    for _ in 0..n {
+        r.read_exact(&mut b8)?;
+        let len = u64::from_le_bytes(b8) as usize;
+        if len > 1 << 30 {
+            return Err(anyhow!("implausible tensor len {len}"));
+        }
+        let mut t = vec![0f32; len];
+        let bytes: &mut [u8] =
+            unsafe { std::slice::from_raw_parts_mut(t.as_mut_ptr() as *mut u8, len * 4) };
+        r.read_exact(bytes)?;
+        *sum ^= xor_checksum(&t);
+        out.push(t);
+    }
+    Ok(out)
+}
+
+/// Write a checkpoint atomically (tmp + rename).
+pub fn save(state: &TrainState, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(&tmp).with_context(|| format!("create {}", tmp.display()))?,
+        );
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&state.step.to_le_bytes())?;
+        f.write_all(&3u32.to_le_bytes())?;
+        let mut sum = 0u64;
+        write_section(&mut f, &state.params, &mut sum)?;
+        write_section(&mut f, &state.gsum, &mut sum)?;
+        write_section(&mut f, &state.bn, &mut sum)?;
+        f.write_all(&sum.to_le_bytes())?;
+        f.flush()?;
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("rename to {}", path.display()))?;
+    Ok(())
+}
+
+/// Load a checkpoint, verifying magic/version/checksum.
+pub fn load(path: &Path) -> Result<TrainState> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(anyhow!("bad magic {:?}", magic));
+    }
+    let mut b4 = [0u8; 4];
+    f.read_exact(&mut b4)?;
+    let version = u32::from_le_bytes(b4);
+    if version != VERSION {
+        return Err(anyhow!("unsupported checkpoint version {version}"));
+    }
+    let mut b8 = [0u8; 8];
+    f.read_exact(&mut b8)?;
+    let step = u64::from_le_bytes(b8);
+    f.read_exact(&mut b4)?;
+    let n_sections = u32::from_le_bytes(b4);
+    if n_sections != 3 {
+        return Err(anyhow!("expected 3 sections, got {n_sections}"));
+    }
+    let mut sum = 0u64;
+    let params = read_section(&mut f, &mut sum)?;
+    let gsum = read_section(&mut f, &mut sum)?;
+    let bn = read_section(&mut f, &mut sum)?;
+    f.read_exact(&mut b8)?;
+    let want = u64::from_le_bytes(b8);
+    if want != sum {
+        return Err(anyhow!("checksum mismatch: file corrupt/truncated"));
+    }
+    Ok(TrainState {
+        params,
+        gsum,
+        bn,
+        step,
+    })
+}
+
+/// Verify a checkpoint matches a manifest's shapes (guards against loading
+/// a checkpoint into the wrong artifact).
+pub fn validate_against(state: &TrainState, man: &crate::runtime::Manifest) -> Result<()> {
+    if state.params.len() != man.params.len() {
+        return Err(anyhow!(
+            "param count {} != manifest {}",
+            state.params.len(),
+            man.params.len()
+        ));
+    }
+    for (t, spec) in state.params.iter().zip(&man.params) {
+        if t.len() != spec.elems() {
+            return Err(anyhow!(
+                "param {}: {} elems != manifest {}",
+                spec.name,
+                t.len(),
+                spec.elems()
+            ));
+        }
+    }
+    let l = man.num_layers;
+    if state.gsum.len() != l {
+        return Err(anyhow!("gsum count {} != L {l}", state.gsum.len()));
+    }
+    if state.bn.len() != man.bn_state.len() {
+        return Err(anyhow!("bn count mismatch"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_state() -> TrainState {
+        TrainState {
+            params: vec![vec![1.0, -2.5, 3.25], vec![0.0; 7]],
+            gsum: vec![vec![0.5; 3]],
+            bn: vec![vec![0.0; 4], vec![1.0; 4]],
+            step: 1234,
+        }
+    }
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("adapt_ckpt_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn round_trip() {
+        let s = sample_state();
+        let p = tmpfile("rt");
+        save(&s, &p).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(back.step, 1234);
+        assert_eq!(back.params, s.params);
+        assert_eq!(back.gsum, s.gsum);
+        assert_eq!(back.bn, s.bn);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let s = sample_state();
+        let p = tmpfile("trunc");
+        save(&s, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let s = sample_state();
+        let p = tmpfile("corrupt");
+        save(&s, &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load(&p).is_err(), "flipped byte must fail the checksum");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = tmpfile("magic");
+        std::fs::write(&p, b"NOPE12345678").unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn nan_preserved_bitexact() {
+        // snapshots of poisoned states must round-trip NaN payloads
+        let mut s = sample_state();
+        s.params[0][0] = f32::NAN;
+        s.params[0][1] = f32::NEG_INFINITY;
+        let p = tmpfile("nan");
+        save(&s, &p).unwrap();
+        let back = load(&p).unwrap();
+        assert!(back.params[0][0].is_nan());
+        assert_eq!(back.params[0][1], f32::NEG_INFINITY);
+        std::fs::remove_file(&p).ok();
+    }
+}

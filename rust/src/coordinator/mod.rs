@@ -1,0 +1,9 @@
+//! The L3 training coordinator: AdaPT-SGD (alg. 1) driving the compiled L2
+//! train-step through PJRT, with the precision policy fully host-side.
+
+pub mod checkpoint;
+pub mod scheduler;
+pub mod trainer;
+
+pub use scheduler::LrSchedule;
+pub use trainer::{train, train_via_model, train_with_data, Policy, TrainConfig, TrainOutcome};

@@ -1,0 +1,191 @@
+//! Learning-rate schedules. The paper trains with reduce-on-plateau (ROP,
+//! sec. 4.1: "reduce learning rate by a given factor if loss has not
+//! decreased for a given number of epochs"); step decay and cosine are
+//! provided for the hp-search harness.
+
+/// Scheduler state machine; `on_epoch(loss)` returns the lr for the next
+/// epoch.
+#[derive(Debug, Clone)]
+pub enum LrSchedule {
+    Constant {
+        lr: f32,
+    },
+    /// The paper's ROP: multiply by `factor` after `patience` epochs without
+    /// an improvement larger than `threshold` (relative), floored at
+    /// `min_lr`.
+    ReduceOnPlateau {
+        lr: f32,
+        factor: f32,
+        patience: u32,
+        threshold: f32,
+        min_lr: f32,
+        best: f32,
+        bad_epochs: u32,
+    },
+    /// lr * gamma every `every` epochs.
+    StepDecay {
+        lr0: f32,
+        gamma: f32,
+        every: u32,
+        epoch: u32,
+    },
+    /// Half-cosine from lr0 to min_lr over `total` epochs.
+    Cosine {
+        lr0: f32,
+        min_lr: f32,
+        total: u32,
+        epoch: u32,
+    },
+}
+
+impl LrSchedule {
+    /// The paper's configuration knobs with common defaults.
+    pub fn rop(lr: f32, factor: f32, patience: u32, threshold: f32) -> Self {
+        LrSchedule::ReduceOnPlateau {
+            lr,
+            factor,
+            patience,
+            threshold,
+            min_lr: lr * 1e-3,
+            best: f32::INFINITY,
+            bad_epochs: 0,
+        }
+    }
+
+    pub fn current(&self) -> f32 {
+        match self {
+            LrSchedule::Constant { lr } => *lr,
+            LrSchedule::ReduceOnPlateau { lr, .. } => *lr,
+            LrSchedule::StepDecay {
+                lr0,
+                gamma,
+                every,
+                epoch,
+            } => lr0 * gamma.powi((*epoch / *every.max(&1)) as i32),
+            LrSchedule::Cosine {
+                lr0,
+                min_lr,
+                total,
+                epoch,
+            } => {
+                let t = (*epoch as f32 / (*total).max(1) as f32).min(1.0);
+                min_lr + 0.5 * (lr0 - min_lr) * (1.0 + (std::f32::consts::PI * t).cos())
+            }
+        }
+    }
+
+    /// Advance one epoch with its mean training loss; returns the lr to use
+    /// for the NEXT epoch.
+    pub fn on_epoch(&mut self, epoch_loss: f32) -> f32 {
+        match self {
+            LrSchedule::Constant { lr } => *lr,
+            LrSchedule::ReduceOnPlateau {
+                lr,
+                factor,
+                patience,
+                threshold,
+                min_lr,
+                best,
+                bad_epochs,
+            } => {
+                if epoch_loss.is_finite() && epoch_loss < *best * (1.0 - *threshold) {
+                    *best = epoch_loss;
+                    *bad_epochs = 0;
+                } else {
+                    *bad_epochs += 1;
+                    if *bad_epochs > *patience {
+                        *lr = (*lr * *factor).max(*min_lr);
+                        *bad_epochs = 0;
+                    }
+                }
+                *lr
+            }
+            LrSchedule::StepDecay { epoch, .. } => {
+                *epoch += 1;
+                self.current()
+            }
+            LrSchedule::Cosine { epoch, .. } => {
+                *epoch += 1;
+                self.current()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rop_reduces_after_plateau() {
+        let mut s = LrSchedule::rop(0.1, 0.5, 2, 1e-3);
+        // improving: lr stays
+        for l in [1.0f32, 0.9, 0.8] {
+            assert_eq!(s.on_epoch(l), 0.1);
+        }
+        // plateau: patience 2 -> reduced on the 3rd bad epoch
+        assert_eq!(s.on_epoch(0.8), 0.1);
+        assert_eq!(s.on_epoch(0.8), 0.1);
+        assert_eq!(s.on_epoch(0.8), 0.05);
+    }
+
+    #[test]
+    fn rop_floors_at_min_lr() {
+        let mut s = LrSchedule::rop(0.1, 0.1, 0, 1e-3);
+        let mut lr = 0.1;
+        for _ in 0..10 {
+            lr = s.on_epoch(1.0);
+        }
+        assert!((lr - 1e-4).abs() < 1e-9, "{lr}");
+    }
+
+    #[test]
+    fn rop_resets_counter_on_improvement() {
+        let mut s = LrSchedule::rop(0.1, 0.5, 2, 1e-3);
+        s.on_epoch(1.0);
+        s.on_epoch(1.0); // bad 1 (first set best)
+        s.on_epoch(0.5); // improvement resets
+        s.on_epoch(0.5);
+        s.on_epoch(0.5);
+        assert_eq!(s.current(), 0.1, "not reduced yet after reset");
+    }
+
+    #[test]
+    fn nan_loss_counts_as_bad_epoch() {
+        let mut s = LrSchedule::rop(0.1, 0.5, 0, 1e-3);
+        let lr = s.on_epoch(f32::NAN);
+        assert_eq!(lr, 0.05);
+    }
+
+    #[test]
+    fn step_decay() {
+        let mut s = LrSchedule::StepDecay {
+            lr0: 1.0,
+            gamma: 0.1,
+            every: 2,
+            epoch: 0,
+        };
+        assert_eq!(s.current(), 1.0);
+        s.on_epoch(1.0);
+        assert_eq!(s.current(), 1.0);
+        s.on_epoch(1.0);
+        assert!((s.current() - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_monotone_to_floor() {
+        let mut s = LrSchedule::Cosine {
+            lr0: 1.0,
+            min_lr: 0.01,
+            total: 10,
+            epoch: 0,
+        };
+        let mut prev = s.current();
+        for _ in 0..12 {
+            let lr = s.on_epoch(1.0);
+            assert!(lr <= prev + 1e-6);
+            prev = lr;
+        }
+        assert!((prev - 0.01).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,319 @@
+//! The ASGD training loop (alg. 1): batches through the PJRT executable,
+//! precision switching between steps, periodic quantized evaluation,
+//! full metric recording. Batch assembly is prefetched on a side thread.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::{Dataset, PrefetchLoader, SyntheticVision};
+use crate::init::{self, Initializer};
+use crate::metrics::{RunRecord, StepRow, SwitchEventLite};
+use crate::muppet::{MuppetController, MuppetHyper};
+use crate::quant::{AdaptController, Float32Controller, QuantController, QuantHyper};
+use crate::runtime::{Engine, Hyper, LoadedModel, TrainState};
+
+use super::scheduler::LrSchedule;
+
+/// Which precision policy drives the run.
+#[derive(Debug, Clone)]
+pub enum Policy {
+    Adapt(QuantHyper),
+    Muppet(MuppetHyper),
+    Float32,
+}
+
+impl Policy {
+    pub fn mode_name(&self) -> &'static str {
+        match self {
+            Policy::Adapt(_) => "adapt",
+            Policy::Muppet(_) => "muppet",
+            Policy::Float32 => "float32",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Artifact name, e.g. "resnet20-c100".
+    pub artifact: String,
+    pub policy: Policy,
+    pub epochs: usize,
+    /// Training-set size (synthetic datasets are generated to this size).
+    pub train_size: usize,
+    /// Held-out evaluation-set size.
+    pub eval_size: usize,
+    pub hyper: Hyper,
+    pub seed: u64,
+    pub init: Initializer,
+    /// TNVS empirical scaling factor s (sec. 3.1).
+    pub init_scale: f64,
+    /// Evaluate every n epochs (and always at the end).
+    pub eval_every: usize,
+    /// Gradient accumulation steps — perf-model input only (the compiled
+    /// step applies each batch directly; accs scales eq. 8/9 as in §4.1.2).
+    pub accs: u32,
+    /// Print a progress line every n steps (0 = silent).
+    pub log_every: usize,
+    /// Learning-rate schedule; None = constant `hyper.lr`. The paper trains
+    /// with reduce-on-plateau (sec. 4.1).
+    pub lr_schedule: Option<LrSchedule>,
+}
+
+impl TrainConfig {
+    /// Fast profile sized for the single-core CPU testbed.
+    pub fn fast(artifact: &str, policy: Policy) -> Self {
+        TrainConfig {
+            artifact: artifact.to_string(),
+            policy,
+            epochs: 6,
+            train_size: 1024,
+            eval_size: 256,
+            hyper: Hyper::default(),
+            seed: 42,
+            init: Initializer::Tnvs,
+            init_scale: 1.0,
+            eval_every: 2,
+            accs: 1,
+            log_every: 0,
+            lr_schedule: Some(LrSchedule::rop(0.05, 0.5, 1, 1e-3)),
+        }
+    }
+
+    /// The paper's full profile (sec. 4.1): 100 epochs, batch 512 — only
+    /// practical on real hardware; kept for completeness/documentation.
+    pub fn paper(artifact: &str, policy: Policy) -> Self {
+        TrainConfig {
+            artifact: artifact.to_string(),
+            policy,
+            epochs: 100,
+            train_size: 50_000,
+            eval_size: 10_000,
+            hyper: Hyper::default(),
+            seed: 42,
+            init: Initializer::Tnvs,
+            init_scale: 1.0,
+            eval_every: 5,
+            accs: 1,
+            log_every: 50,
+            lr_schedule: Some(LrSchedule::rop(0.05, 0.5, 10, 1e-3)),
+        }
+    }
+}
+
+pub struct TrainOutcome {
+    pub record: RunRecord,
+    pub state: TrainState,
+    pub final_qparams: Vec<f32>,
+    pub final_wordlengths: Vec<u8>,
+}
+
+/// Pick train + held-out datasets matching the artifact's input signature.
+/// The held-out split shares the task (class templates / files) with the
+/// train split but uses disjoint samples. Real CIFAR is used when
+/// $ADAPT_DATA contains the binaries; otherwise the synthetic substitute
+/// (DESIGN.md #Substitutions).
+fn datasets_for(
+    man: &crate::runtime::Manifest,
+    train_len: usize,
+    eval_len: usize,
+    seed: u64,
+) -> Result<(Arc<dyn Dataset>, Arc<dyn Dataset>)> {
+    let shape = (
+        man.input_shape[0],
+        man.input_shape[1],
+        man.input_shape[2],
+    );
+    if let Ok(dir) = std::env::var("ADAPT_DATA") {
+        let dir = std::path::PathBuf::from(dir);
+        if shape == (32, 32, 3) {
+            let pair = if man.classes == 10 {
+                (
+                    crate::data::cifar::CifarDataset::load_cifar10(&dir, true),
+                    crate::data::cifar::CifarDataset::load_cifar10(&dir, false),
+                )
+            } else {
+                (
+                    crate::data::cifar::CifarDataset::load_cifar100(&dir, true),
+                    crate::data::cifar::CifarDataset::load_cifar100(&dir, false),
+                )
+            };
+            if let (Ok(tr), Ok(te)) = pair {
+                return Ok((Arc::new(tr), Arc::new(te)));
+            }
+        }
+    }
+    let (h, w, c) = shape;
+    let noise = if c == 1 { 0.25 } else { 0.35 };
+    let train = SyntheticVision::new(h, w, c, man.classes, train_len, seed, noise);
+    let eval =
+        SyntheticVision::new(h, w, c, man.classes, train_len, seed, noise).heldout(train_len, eval_len);
+    Ok((Arc::new(train), Arc::new(eval)))
+}
+
+fn make_controller(
+    policy: &Policy,
+    man: &crate::runtime::Manifest,
+) -> Box<dyn QuantController> {
+    match policy {
+        Policy::Adapt(h) => Box::new(AdaptController::new(man, *h)),
+        Policy::Muppet(h) => Box::new(MuppetController::new(man, h.clone())),
+        Policy::Float32 => Box::new(Float32Controller::new(man)),
+    }
+}
+
+/// Evaluate quantized top-1 accuracy over the held-out set.
+fn evaluate(
+    model: &LoadedModel,
+    state: &TrainState,
+    qparams: &[f32],
+    eval: &dyn Dataset,
+) -> Result<f32> {
+    let b = model.manifest.batch;
+    let n_batches = (eval.len() / b).max(1);
+    let mut acc = 0.0f32;
+    for k in 0..n_batches {
+        let batch = eval_batch(eval, b, k);
+        acc += model.infer_accuracy(&state.params, &state.bn, &batch.0, &batch.1, qparams)?;
+    }
+    Ok(acc / n_batches as f32)
+}
+
+fn eval_batch(eval: &dyn Dataset, b: usize, k: usize) -> (Vec<f32>, Vec<i32>) {
+    let elems = eval.sample_elems();
+    let n = eval.len();
+    let mut x = vec![0.0f32; b * elems];
+    let mut y = vec![0i32; b];
+    for j in 0..b {
+        let i = (k * b + j) % n;
+        y[j] = eval.fill(i, &mut x[j * elems..(j + 1) * elems]);
+    }
+    (x, y)
+}
+
+/// Train with the dataset chosen from the manifest (synthetic or $ADAPT_DATA).
+pub fn train(engine: &Engine, dir: &std::path::Path, cfg: &TrainConfig) -> Result<TrainOutcome> {
+    let model = engine.load_model(dir, &cfg.artifact)?;
+    train_via_model(&model, cfg)
+}
+
+/// Train against an already-compiled model (XLA compilation of the larger
+/// train steps takes minutes on one core — callers batch several policy
+/// runs over one LoadedModel).
+pub fn train_via_model(model: &LoadedModel, cfg: &TrainConfig) -> Result<TrainOutcome> {
+    let (data, eval) = datasets_for(&model.manifest, cfg.train_size, cfg.eval_size, cfg.seed)?;
+    train_with_data(model, cfg, data, eval)
+}
+
+/// Core loop, dataset-injected (tests use tiny datasets directly).
+pub fn train_with_data(
+    model: &LoadedModel,
+    cfg: &TrainConfig,
+    data: Arc<dyn Dataset>,
+    eval: Arc<dyn Dataset>,
+) -> Result<TrainOutcome> {
+    let man = &model.manifest;
+    if data.input_shape() != (man.input_shape[0], man.input_shape[1], man.input_shape[2]) {
+        return Err(anyhow!("dataset shape mismatch with artifact"));
+    }
+    let batch = man.batch;
+    let steps_per_epoch = (data.len() / batch).max(1);
+    let mut controller = make_controller(&cfg.policy, man);
+
+    let mut state = TrainState {
+        params: init::init_params(man, cfg.init, cfg.init_scale, cfg.seed),
+        gsum: init::init_gsum(man),
+        bn: init::init_bn(man),
+        step: cfg.seed.wrapping_mul(7919) % (1 << 20), // decorrelate PRNG streams
+    };
+
+    let loader = PrefetchLoader::spawn(data, batch, cfg.seed ^ 0xBA7C4, 2);
+    let t0 = Instant::now();
+    let mut hyper = cfg.hyper;
+    let mut schedule = cfg.lr_schedule.clone();
+    if let Some(sch) = &schedule {
+        hyper.lr = sch.current();
+    }
+
+    let mut rec = RunRecord {
+        name: cfg.artifact.clone(),
+        mode: cfg.policy.mode_name().to_string(),
+        batch,
+        accs: cfg.accs,
+        epochs: cfg.epochs,
+        steps_per_epoch,
+        num_layers: man.num_layers,
+        ..Default::default()
+    };
+
+    let mut global_step = 0u64;
+    for epoch in 0..cfg.epochs {
+        for _ in 0..steps_per_epoch {
+            let b = loader.next();
+            let qp = controller.qparams();
+            let m = model.train_step(&mut state, &b.x, &b.y, &qp, &hyper)?;
+            controller.on_step(&mut state, &m);
+            global_step += 1;
+
+            rec.steps.push(StepRow {
+                loss: m.loss,
+                ce: m.ce,
+                acc: m.acc,
+            });
+            rec.layer_wl.push(controller.wordlengths());
+            rec.layer_nz
+                .push(m.sparsity.iter().map(|&s| 1.0 - s).collect());
+            let lb = controller.lookbacks();
+            if !lb.is_empty() {
+                rec.layer_lb.push(lb);
+                rec.layer_res.push(controller.resolutions());
+            }
+            if cfg.log_every > 0 && global_step % cfg.log_every as u64 == 0 {
+                eprintln!(
+                    "[{}/{}] epoch {epoch} step {global_step}: loss {:.4} acc {:.3} wl {:?}",
+                    cfg.artifact,
+                    controller.name(),
+                    m.loss,
+                    m.acc,
+                    controller.wordlengths()
+                );
+            }
+        }
+        controller.on_epoch_end(&mut state, epoch);
+        // ROP scheduling on the epoch's mean training loss (sec. 4.1)
+        if let Some(sch) = &mut schedule {
+            let tail = &rec.steps[rec.steps.len() - steps_per_epoch..];
+            let mean_loss = tail.iter().map(|s| s.loss).sum::<f32>() / tail.len() as f32;
+            hyper.lr = sch.on_epoch(mean_loss);
+        }
+        let last = epoch + 1 == cfg.epochs;
+        if last || (cfg.eval_every > 0 && (epoch + 1) % cfg.eval_every == 0) {
+            let acc = evaluate(model, &state, &controller.qparams(), eval.as_ref())?;
+            rec.evals.push((global_step, acc));
+            if cfg.log_every > 0 {
+                eprintln!(
+                    "[{}/{}] epoch {epoch}: EVAL acc {acc:.4}",
+                    cfg.artifact,
+                    controller.name()
+                );
+            }
+        }
+    }
+
+    rec.switches = controller
+        .take_events()
+        .iter()
+        .map(SwitchEventLite::from)
+        .collect();
+    rec.wall_secs = t0.elapsed().as_secs_f64();
+
+    let final_qparams = controller.qparams();
+    let final_wordlengths = controller.wordlengths();
+    Ok(TrainOutcome {
+        record: rec,
+        state,
+        final_qparams,
+        final_wordlengths,
+    })
+}

@@ -1,0 +1,140 @@
+//! Real CIFAR-10/100 binary-format reader.
+//!
+//! Used automatically when `$ADAPT_DATA` points at a directory containing
+//! the standard `data_batch_*.bin` / `train.bin` files; otherwise the
+//! synthetic substitute is used (no network in this environment).
+//!
+//! Format (CIFAR-10): each record is 1 label byte + 3072 bytes of pixels in
+//! CHW plane order (R plane, G plane, B plane), 10000 records per file.
+//! CIFAR-100: 1 coarse + 1 fine label byte + 3072 pixel bytes.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::Dataset;
+
+pub struct CifarDataset {
+    images: Vec<f32>, // NHWC, standardized
+    labels: Vec<i32>,
+    classes: usize,
+}
+
+const HW: usize = 32 * 32;
+const REC10: usize = 1 + 3 * HW;
+const REC100: usize = 2 + 3 * HW;
+
+fn decode_records(bytes: &[u8], rec: usize, label_off: usize, images: &mut Vec<f32>, labels: &mut Vec<i32>) -> Result<()> {
+    if bytes.len() % rec != 0 {
+        return Err(anyhow!("file size {} not a multiple of record {rec}", bytes.len()));
+    }
+    for chunk in bytes.chunks_exact(rec) {
+        labels.push(chunk[label_off] as i32);
+        let px = &chunk[label_off + 1..];
+        // CHW planes -> HWC, scale to [0,1] then standardize later
+        for i in 0..HW {
+            for ch in 0..3 {
+                images.push(px[ch * HW + i] as f32 / 255.0);
+            }
+        }
+    }
+    Ok(())
+}
+
+impl CifarDataset {
+    pub fn load_cifar10(dir: &Path, train: bool) -> Result<Self> {
+        let files: Vec<String> = if train {
+            (1..=5).map(|i| format!("data_batch_{i}.bin")).collect()
+        } else {
+            vec!["test_batch.bin".to_string()]
+        };
+        let mut images = Vec::new();
+        let mut labels = Vec::new();
+        for f in files {
+            let path = dir.join(&f);
+            let bytes = std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+            decode_records(&bytes, REC10, 0, &mut images, &mut labels)?;
+        }
+        standardize(&mut images);
+        Ok(CifarDataset { images, labels, classes: 10 })
+    }
+
+    pub fn load_cifar100(dir: &Path, train: bool) -> Result<Self> {
+        let f = if train { "train.bin" } else { "test.bin" };
+        let path = dir.join(f);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        let mut images = Vec::new();
+        let mut labels = Vec::new();
+        decode_records(&bytes, REC100, 1, &mut images, &mut labels)?;
+        standardize(&mut images);
+        Ok(CifarDataset { images, labels, classes: 100 })
+    }
+}
+
+fn standardize(v: &mut [f32]) {
+    if v.is_empty() {
+        return;
+    }
+    let n = v.len() as f64;
+    let mean = v.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let var = v.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+    let std = var.sqrt().max(1e-9) as f32;
+    let mean = mean as f32;
+    for x in v {
+        *x = (*x - mean) / std;
+    }
+}
+
+impl Dataset for CifarDataset {
+    fn len(&self) -> usize {
+        self.labels.len()
+    }
+    fn input_shape(&self) -> (usize, usize, usize) {
+        (32, 32, 3)
+    }
+    fn classes(&self) -> usize {
+        self.classes
+    }
+    fn fill(&self, i: usize, out: &mut [f32]) -> i32 {
+        let e = 3 * HW;
+        out.copy_from_slice(&self.images[i * e..(i + 1) * e]);
+        self.labels[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decodes_synthetic_record() {
+        // fabricate two CIFAR-10 records and decode them
+        let mut bytes = vec![0u8; 2 * REC10];
+        bytes[0] = 3; // label of record 0
+        bytes[1] = 255; // R plane pixel 0 of record 0
+        bytes[REC10] = 7; // label of record 1
+        let mut images = Vec::new();
+        let mut labels = Vec::new();
+        decode_records(&bytes, REC10, 0, &mut images, &mut labels).unwrap();
+        assert_eq!(labels, vec![3, 7]);
+        assert_eq!(images.len(), 2 * 3 * HW);
+        assert_eq!(images[0], 1.0); // R channel of pixel (0,0), NHWC
+        assert_eq!(images[1], 0.0);
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let bytes = vec![0u8; REC10 - 1];
+        let mut i = Vec::new();
+        let mut l = Vec::new();
+        assert!(decode_records(&bytes, REC10, 0, &mut i, &mut l).is_err());
+    }
+
+    #[test]
+    fn standardize_zero_mean() {
+        let mut v = vec![1.0f32, 2.0, 3.0, 4.0];
+        standardize(&mut v);
+        let mean: f32 = v.iter().sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-5);
+    }
+}

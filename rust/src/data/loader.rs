@@ -1,0 +1,199 @@
+//! Batch assembly + background prefetch.
+//!
+//! The offline registry has no tokio, so the async data pipeline is a
+//! std::thread producer with a bounded channel (depth 2): batch i+1 is
+//! assembled while the PJRT executable runs batch i — which is all the
+//! parallelism a single-core testbed can use anyway.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+/// One assembled training batch (NHWC flattened x, i32 labels).
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub epoch: usize,
+    pub index: usize,
+}
+
+/// Synchronous batcher: shuffles indices each epoch, assembles batches.
+pub struct Batcher {
+    data: Arc<dyn Dataset>,
+    batch: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    epoch: usize,
+    rng: Rng,
+    drop_last: bool,
+}
+
+impl Batcher {
+    pub fn new(data: Arc<dyn Dataset>, batch: usize, seed: u64) -> Self {
+        let order: Vec<usize> = (0..data.len()).collect();
+        let mut b = Batcher {
+            data,
+            batch,
+            order,
+            cursor: 0,
+            epoch: 0,
+            rng: Rng::seed_from(seed),
+            drop_last: true,
+        };
+        b.rng.shuffle(&mut b.order);
+        b
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        if self.drop_last {
+            self.data.len() / self.batch
+        } else {
+            self.data.len().div_ceil(self.batch)
+        }
+    }
+
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    /// Assemble the next batch, rolling over epochs (reshuffling each time).
+    pub fn next_batch(&mut self) -> Batch {
+        let n = self.data.len();
+        if self.cursor + self.batch > n {
+            self.cursor = 0;
+            self.epoch += 1;
+            self.rng.shuffle(&mut self.order);
+        }
+        let index = self.cursor / self.batch;
+        let elems = self.data.sample_elems();
+        let mut x = vec![0.0f32; self.batch * elems];
+        let mut y = vec![0i32; self.batch];
+        for j in 0..self.batch {
+            let i = self.order[(self.cursor + j) % n];
+            y[j] = self.data.fill(i, &mut x[j * elems..(j + 1) * elems]);
+        }
+        self.cursor += self.batch;
+        Batch {
+            x,
+            y,
+            epoch: self.epoch,
+            index,
+        }
+    }
+
+    /// Assemble a deterministic (unshuffled) evaluation batch `k`.
+    pub fn eval_batch(data: &dyn Dataset, batch: usize, k: usize) -> Batch {
+        let elems = data.sample_elems();
+        let n = data.len();
+        let mut x = vec![0.0f32; batch * elems];
+        let mut y = vec![0i32; batch];
+        for j in 0..batch {
+            let i = (k * batch + j) % n;
+            y[j] = data.fill(i, &mut x[j * elems..(j + 1) * elems]);
+        }
+        Batch {
+            x,
+            y,
+            epoch: 0,
+            index: k,
+        }
+    }
+}
+
+/// Background prefetching wrapper: producer thread keeps up to `depth`
+/// batches ready.
+pub struct PrefetchLoader {
+    rx: mpsc::Receiver<Batch>,
+    handle: Option<thread::JoinHandle<()>>,
+    stop: mpsc::Sender<()>,
+}
+
+impl PrefetchLoader {
+    pub fn spawn(data: Arc<dyn Dataset>, batch: usize, seed: u64, depth: usize) -> Self {
+        let (tx, rx) = mpsc::sync_channel::<Batch>(depth);
+        let (stop_tx, stop_rx) = mpsc::channel::<()>();
+        let handle = thread::spawn(move || {
+            let mut b = Batcher::new(data, batch, seed);
+            loop {
+                if stop_rx.try_recv().is_ok() {
+                    break;
+                }
+                let batch = b.next_batch();
+                if tx.send(batch).is_err() {
+                    break;
+                }
+            }
+        });
+        PrefetchLoader {
+            rx,
+            handle: Some(handle),
+            stop: stop_tx,
+        }
+    }
+
+    pub fn next(&self) -> Batch {
+        self.rx.recv().expect("prefetch thread died")
+    }
+}
+
+impl Drop for PrefetchLoader {
+    fn drop(&mut self) {
+        let _ = self.stop.send(());
+        // drain so the producer unblocks from a full channel, then join
+        while self.rx.try_recv().is_ok() {}
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticVision;
+
+    #[test]
+    fn batches_cover_epoch() {
+        let d = Arc::new(SyntheticVision::mnist_like(64, 0));
+        let mut b = Batcher::new(d, 16, 1);
+        assert_eq!(b.batches_per_epoch(), 4);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..4 {
+            let batch = b.next_batch();
+            assert_eq!(batch.epoch, 0);
+            for &l in &batch.y {
+                assert!((0..10).contains(&l));
+            }
+            seen.insert(batch.index);
+        }
+        assert_eq!(seen.len(), 4);
+        let b5 = b.next_batch();
+        assert_eq!(b5.epoch, 1);
+    }
+
+    #[test]
+    fn prefetch_matches_sync() {
+        let d = Arc::new(SyntheticVision::mnist_like(64, 0));
+        let mut sync = Batcher::new(d.clone(), 8, 42);
+        let pre = PrefetchLoader::spawn(d, 8, 42, 2);
+        for _ in 0..10 {
+            let a = sync.next_batch();
+            let b = pre.next();
+            assert_eq!(a.y, b.y);
+            assert_eq!(a.x, b.x);
+        }
+    }
+
+    #[test]
+    fn eval_batches_deterministic() {
+        let d = SyntheticVision::mnist_like(64, 0);
+        let a = Batcher::eval_batch(&d, 8, 2);
+        let b = Batcher::eval_batch(&d, 8, 2);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+}

@@ -1,0 +1,32 @@
+//! Datasets + batch pipeline.
+//!
+//! No network access in this environment, so CIFAR-10/100 / MNIST / FMNIST
+//! are substituted by `synthetic::SyntheticVision` (see DESIGN.md
+//! #Substitutions): a deterministic class-conditional generator with real
+//! spatial structure so quantization/sparsification effects manifest as in
+//! the paper. If real CIFAR binaries are present under `$ADAPT_DATA`,
+//! `cifar::load_cifar10` is used instead.
+
+pub mod cifar;
+pub mod loader;
+pub mod synthetic;
+
+pub use loader::{Batcher, PrefetchLoader};
+pub use synthetic::SyntheticVision;
+
+/// A supervised vision dataset: deterministic random access.
+pub trait Dataset: Send + Sync {
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    fn input_shape(&self) -> (usize, usize, usize);
+    fn classes(&self) -> usize;
+    /// Write sample `i` into `out` (len = H*W*C) and return its label.
+    fn fill(&self, i: usize, out: &mut [f32]) -> i32;
+
+    fn sample_elems(&self) -> usize {
+        let (h, w, c) = self.input_shape();
+        h * w * c
+    }
+}

@@ -1,0 +1,209 @@
+//! Signed fixed-point format `<WL, FL>` (sec. 2.1 of the paper).
+//!
+//! A value v is stored as an integer q with v = q * 2^-FL and
+//! q in [-2^(WL-1), 2^(WL-1)-1]. WL counts ALL bits (sign + integer +
+//! fraction); FL counts fraction bits. The Rust side mirrors the L1 Pallas
+//! kernel semantics exactly so PushDown candidate evaluation (host-side)
+//! agrees with what the device will compute.
+
+use std::fmt;
+
+pub const WL_MAX: u8 = 32;
+pub const FL_MAX: u8 = 31;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FixedPointFormat {
+    pub wl: u8,
+    pub fl: u8,
+}
+
+impl FixedPointFormat {
+    pub fn new(wl: u8, fl: u8) -> Self {
+        let wl = wl.clamp(2, WL_MAX);
+        let fl = fl.min(FL_MAX).min(wl - 1);
+        FixedPointFormat { wl, fl }
+    }
+
+    /// The paper's initial quantization <8, 4> (sec. 4.1.1).
+    pub fn initial() -> Self {
+        FixedPointFormat { wl: 8, fl: 4 }
+    }
+
+    /// Widest (effectively lossless at f32 master precision).
+    pub fn full() -> Self {
+        FixedPointFormat { wl: 32, fl: 16 }
+    }
+
+    #[inline]
+    pub fn scale(&self) -> f32 {
+        (2.0f32).powi(self.fl as i32)
+    }
+
+    #[inline]
+    pub fn qmin(&self) -> f32 {
+        -((1u64 << (self.wl - 1)) as f32)
+    }
+
+    #[inline]
+    pub fn qmax(&self) -> f32 {
+        ((1u64 << (self.wl - 1)) - 1) as f32
+    }
+
+    /// Smallest representable positive value (one ULP).
+    #[inline]
+    pub fn ulp(&self) -> f32 {
+        1.0 / self.scale()
+    }
+
+    /// Largest representable value.
+    #[inline]
+    pub fn max_value(&self) -> f32 {
+        self.qmax() / self.scale()
+    }
+
+    /// Most negative representable value.
+    #[inline]
+    pub fn min_value(&self) -> f32 {
+        self.qmin() / self.scale()
+    }
+
+    /// Integer bits (excluding sign): WL = 1 + IL + FL.
+    pub fn integer_bits(&self) -> u8 {
+        self.wl - 1 - self.fl.min(self.wl - 1)
+    }
+
+    /// Smallest format whose range covers `max_abs` at fraction length `fl`
+    /// without clamping. If sign + integer + fraction would exceed 32 bits,
+    /// the fraction length is reduced (range wins over precision — clamping
+    /// large weights is catastrophic, losing low bits is graceful).
+    pub fn covering(max_abs: f32, fl: u8) -> Self {
+        let mut il = 0u8;
+        while il < WL_MAX
+            && ((1u64 << il) as f32) <= max_abs + 0.5 / (2.0f32).powi(fl as i32)
+        {
+            il += 1;
+        }
+        let fl = fl.min(WL_MAX - 1 - il.min(WL_MAX - 1));
+        FixedPointFormat::new(1 + il + fl, fl)
+    }
+
+    /// Nearest-rounding quantize of one value (round-half-to-even, matching
+    /// jnp.round in the L1 kernel).
+    #[inline]
+    pub fn quantize_nr(&self, x: f32) -> f32 {
+        let q = round_half_even(x * self.scale());
+        q.clamp(self.qmin(), self.qmax()) / self.scale()
+    }
+
+    /// Stochastic-rounding quantize with external noise u in [0,1):
+    /// floor(x*s + u) — the exact L1 kernel computation.
+    #[inline]
+    pub fn quantize_sr(&self, x: f32, u: f32) -> f32 {
+        let q = (x * self.scale() + u).floor();
+        q.clamp(self.qmin(), self.qmax()) / self.scale()
+    }
+
+    /// Is x exactly representable?
+    pub fn representable(&self, x: f32) -> bool {
+        let q = x * self.scale();
+        q == q.round() && q >= self.qmin() && q <= self.qmax()
+    }
+
+    /// qparams row for the artifact input: [scale, qmin, qmax, enable, wl].
+    pub fn qparams_row(&self, enable: f32) -> [f32; 5] {
+        [self.scale(), self.qmin(), self.qmax(), enable, self.wl as f32]
+    }
+}
+
+/// f32 round-half-to-even (Rust's `round()` rounds half away from zero;
+/// XLA/jnp round half to even, and the L1/L3 implementations must agree).
+#[inline]
+pub fn round_half_even(x: f32) -> f32 {
+    let r = x.round();
+    if (x - x.trunc()).abs() == 0.5 {
+        // exactly .5 -> choose the even neighbour
+        let even = 2.0 * (x / 2.0).round();
+        if (even - x).abs() <= 0.5 {
+            even
+        } else {
+            r
+        }
+    } else {
+        r
+    }
+}
+
+impl fmt::Display for FixedPointFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "<{},{}>", self.wl, self.fl)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_is_8_4() {
+        let f = FixedPointFormat::initial();
+        assert_eq!((f.wl, f.fl), (8, 4));
+        assert_eq!(f.scale(), 16.0);
+        assert_eq!(f.qmin(), -128.0);
+        assert_eq!(f.qmax(), 127.0);
+        assert_eq!(f.max_value(), 127.0 / 16.0);
+    }
+
+    #[test]
+    fn quantize_nr_on_grid() {
+        let f = FixedPointFormat::new(8, 4);
+        for &x in &[0.0f32, 0.06, -0.06, 1.23, -7.9, 100.0, -100.0] {
+            let q = f.quantize_nr(x);
+            assert!(f.representable(q), "{x} -> {q}");
+            if x.abs() <= f.max_value() {
+                assert!((q - x).abs() <= f.ulp() / 2.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_sr_bounds() {
+        let f = FixedPointFormat::new(6, 3);
+        for i in 0..200 {
+            let x = -3.0 + 0.03 * i as f32;
+            for &u in &[0.0f32, 0.25, 0.5, 0.9999] {
+                let q = f.quantize_sr(x, u);
+                assert!(f.representable(q));
+                if x >= f.min_value() && x <= f.max_value() {
+                    assert!((q - x).abs() <= f.ulp() + 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn half_even_matches_ieee() {
+        assert_eq!(round_half_even(0.5), 0.0);
+        assert_eq!(round_half_even(1.5), 2.0);
+        assert_eq!(round_half_even(2.5), 2.0);
+        assert_eq!(round_half_even(-0.5), 0.0);
+        assert_eq!(round_half_even(-1.5), -2.0);
+        assert_eq!(round_half_even(0.4), 0.0);
+        assert_eq!(round_half_even(0.6), 1.0);
+    }
+
+    #[test]
+    fn covering_picks_enough_integer_bits() {
+        let f = FixedPointFormat::covering(5.3, 4);
+        assert!(f.max_value() >= 5.3);
+        let g = FixedPointFormat::covering(0.4, 4);
+        assert!(g.wl <= 6);
+        assert!(g.max_value() >= 0.4);
+    }
+
+    #[test]
+    fn clamp_constructor() {
+        let f = FixedPointFormat::new(40, 60);
+        assert_eq!(f.wl, 32);
+        assert!(f.fl < f.wl);
+    }
+}

@@ -1,0 +1,155 @@
+//! Empirical distribution + discrete Kullback–Leibler divergence.
+//!
+//! The PushDown operation (sec. 3.3) interprets a precision switch as a
+//! change of encoding and measures the information lost via KL(P || Q)
+//! where Q is the distribution of the float32 master weights and P the
+//! distribution of their quantized counterparts, both discretised by
+//! equal-width binning at resolution r^l (eq. 1, 2).
+
+/// Equal-width histogram over [lo, hi] with `bins` buckets.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f32,
+    pub hi: f32,
+    pub counts: Vec<u64>,
+    pub total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f32, hi: f32, bins: usize) -> Self {
+        assert!(bins > 0);
+        let (lo, hi) = if hi > lo { (lo, hi) } else { (lo, lo + 1e-12) };
+        Histogram {
+            lo,
+            hi,
+            counts: vec![0; bins],
+            total: 0,
+        }
+    }
+
+    #[inline]
+    pub fn bin_of(&self, x: f32) -> usize {
+        let b = self.counts.len();
+        let t = ((x - self.lo) / (self.hi - self.lo) * b as f32) as isize;
+        t.clamp(0, b as isize - 1) as usize
+    }
+
+    #[inline]
+    pub fn add(&mut self, x: f32) {
+        let i = self.bin_of(x);
+        self.counts[i] += 1;
+        self.total += 1;
+    }
+
+    pub fn from_slice(xs: &[f32], lo: f32, hi: f32, bins: usize) -> Self {
+        let mut h = Histogram::new(lo, hi, bins);
+        for &x in xs {
+            h.add(x);
+        }
+        h
+    }
+
+    /// Probability of bin i with epsilon flooring (so KL stays finite when a
+    /// bin is empty on one side only — the "information was created" case is
+    /// penalised heavily but finitely).
+    #[inline]
+    pub fn prob(&self, i: usize, eps: f64) -> f64 {
+        (self.counts[i] as f64 + eps) / (self.total as f64 + eps * self.counts.len() as f64)
+    }
+}
+
+/// Discrete KL(P || Q) over two histograms with identical binning (eq. 2).
+/// Returns bits (log base 2) — "the average number of bits lost through
+/// changing the encoding".
+pub fn kl_divergence(p: &Histogram, q: &Histogram, eps: f64) -> f64 {
+    assert_eq!(p.counts.len(), q.counts.len());
+    let mut kl = 0.0;
+    for i in 0..p.counts.len() {
+        let pi = p.prob(i, eps);
+        let qi = q.prob(i, eps);
+        if pi > 0.0 {
+            kl += pi * (pi / qi).log2();
+        }
+    }
+    kl.max(0.0)
+}
+
+/// KL between the EDF of `original` and of `quantized` at resolution `bins`,
+/// binned over the ORIGINAL tensor's range (the encoding being abandoned).
+pub fn quantization_kl(original: &[f32], quantized: &[f32], bins: usize) -> f64 {
+    if original.is_empty() {
+        return 0.0;
+    }
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &x in original {
+        if !x.is_finite() {
+            return f64::INFINITY;
+        }
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    let q = Histogram::from_slice(original, lo, hi, bins);
+    let p = Histogram::from_slice(quantized, lo, hi, bins);
+    kl_divergence(&p, &q, 1e-9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identical_distributions_zero_kl() {
+        let mut r = Rng::seed_from(0);
+        let xs: Vec<f32> = (0..5000).map(|_| r.normal() as f32).collect();
+        let kl = quantization_kl(&xs, &xs, 100);
+        assert!(kl.abs() < 1e-9, "{kl}");
+    }
+
+    #[test]
+    fn kl_nonnegative_and_sensitive() {
+        let mut r = Rng::seed_from(1);
+        let xs: Vec<f32> = (0..5000).map(|_| r.normal() as f32).collect();
+        // coarse quantization -> mass moves between bins -> positive KL
+        let coarse: Vec<f32> = xs.iter().map(|x| (x * 2.0).round() / 2.0).collect();
+        let fine: Vec<f32> = xs.iter().map(|x| (x * 4096.0).round() / 4096.0).collect();
+        let kl_c = quantization_kl(&xs, &coarse, 100);
+        let kl_f = quantization_kl(&xs, &fine, 100);
+        assert!(kl_c > 0.0);
+        assert!(kl_f < kl_c, "fine {kl_f} should lose less than coarse {kl_c}");
+    }
+
+    #[test]
+    fn resolution_controls_sensitivity() {
+        let mut r = Rng::seed_from(2);
+        let xs: Vec<f32> = (0..5000).map(|_| r.normal() as f32).collect();
+        let q: Vec<f32> = xs.iter().map(|x| (x * 8.0).round() / 8.0).collect();
+        let kl_lo = quantization_kl(&xs, &q, 20);
+        let kl_hi = quantization_kl(&xs, &q, 500);
+        // finer binning detects more information loss
+        assert!(kl_hi > kl_lo, "hi {kl_hi} lo {kl_lo}");
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs() {
+        assert_eq!(quantization_kl(&[], &[], 50), 0.0);
+        let xs = vec![1.0f32; 100];
+        assert!(quantization_kl(&xs, &xs, 50) < 1e-12);
+        let with_nan = vec![f32::NAN, 1.0];
+        assert!(quantization_kl(&with_nan, &with_nan, 10).is_infinite());
+    }
+
+    #[test]
+    fn histogram_binning_edges() {
+        let h = Histogram::from_slice(&[0.0, 0.5, 1.0], 0.0, 1.0, 2);
+        assert_eq!(h.total, 3);
+        assert_eq!(h.counts[0], 1); // 0.0
+        assert_eq!(h.counts[1], 2); // 0.5 (lands on the boundary) and 1.0 (clamped)
+        // outside-range values clamp to edge bins
+        let mut h2 = Histogram::new(0.0, 1.0, 4);
+        h2.add(-5.0);
+        h2.add(5.0);
+        assert_eq!(h2.counts[0], 1);
+        assert_eq!(h2.counts[3], 1);
+    }
+}

@@ -1,0 +1,11 @@
+//! Fixed-point arithmetic substrate (host side, mirrors the L1 kernels).
+
+pub mod format;
+pub mod histogram;
+pub mod quantize;
+pub mod sparse;
+
+pub use format::FixedPointFormat;
+pub use histogram::{kl_divergence, quantization_kl, Histogram};
+pub use quantize::{max_abs, quantize_nr_slice, quantize_sr_slice, zero_fraction};
+pub use sparse::SparseFixedTensor;

@@ -1,0 +1,94 @@
+//! Host-side tensor quantization (mirrors the L1 Pallas kernels).
+//!
+//! Used by PushDown candidate evaluation (quantize-then-KL during bisection)
+//! and by the sparse inference path. Semantics match
+//! `python/compile/kernels/fixedpoint.py` exactly; the parity is asserted by
+//! `rust/tests/parity.rs` against the compiled artifacts.
+
+use super::format::FixedPointFormat;
+use crate::util::rng::Rng;
+
+/// Nearest-rounding quantize of a whole tensor (deterministic).
+pub fn quantize_nr_slice(xs: &[f32], fmt: FixedPointFormat) -> Vec<f32> {
+    xs.iter().map(|&x| fmt.quantize_nr(x)).collect()
+}
+
+/// In-place nearest-rounding quantize into a reusable buffer (hot path for
+/// PushDown bisection: avoids an allocation per candidate format).
+pub fn quantize_nr_into(xs: &[f32], fmt: FixedPointFormat, out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(xs.iter().map(|&x| fmt.quantize_nr(x)));
+}
+
+/// Stochastic-rounding quantize with noise from `rng`.
+pub fn quantize_sr_slice(xs: &[f32], fmt: FixedPointFormat, rng: &mut Rng) -> Vec<f32> {
+    xs.iter()
+        .map(|&x| fmt.quantize_sr(x, rng.uniform() as f32))
+        .collect()
+}
+
+/// Fraction of exact zeros (the paper's sparsity; sp in eq. 8/9 is the
+/// complementary non-zero fraction).
+pub fn zero_fraction(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let zeros = xs.iter().filter(|&&x| x == 0.0).count();
+    zeros as f32 / xs.len() as f32
+}
+
+pub fn max_abs(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nr_slice_matches_scalar() {
+        let fmt = FixedPointFormat::new(8, 4);
+        let xs = vec![0.1, -0.37, 5.0, -100.0, 0.0];
+        let q = quantize_nr_slice(&xs, fmt);
+        for (x, qq) in xs.iter().zip(&q) {
+            assert_eq!(*qq, fmt.quantize_nr(*x));
+        }
+    }
+
+    #[test]
+    fn sr_unbiased() {
+        let fmt = FixedPointFormat::new(8, 4);
+        let xs = vec![0.3f32; 50000]; // between grid points 4/16 and 5/16
+        let mut rng = Rng::seed_from(9);
+        let q = quantize_sr_slice(&xs, fmt, &mut rng);
+        let mean: f32 = q.iter().sum::<f32>() / q.len() as f32;
+        assert!((mean - 0.3).abs() < 2e-3, "{mean}");
+    }
+
+    #[test]
+    fn zero_fraction_counts() {
+        assert_eq!(zero_fraction(&[0.0, 1.0, 0.0, 2.0]), 0.5);
+        assert_eq!(zero_fraction(&[]), 0.0);
+    }
+
+    #[test]
+    fn small_values_snap_to_zero() {
+        // <8,4>: ULP = 1/16; values below 1/32 round to zero -> sparsity
+        let fmt = FixedPointFormat::new(8, 4);
+        let xs = vec![0.01f32, -0.02, 0.03, 0.5];
+        let q = quantize_nr_slice(&xs, fmt);
+        assert_eq!(zero_fraction(&q), 0.75);
+    }
+
+    #[test]
+    fn quantize_into_reuses_buffer() {
+        let fmt = FixedPointFormat::new(6, 2);
+        let xs = vec![1.3f32; 100];
+        let mut buf = Vec::new();
+        quantize_nr_into(&xs, fmt, &mut buf);
+        assert_eq!(buf.len(), 100);
+        let cap = buf.capacity();
+        quantize_nr_into(&xs, fmt, &mut buf);
+        assert_eq!(buf.capacity(), cap);
+    }
+}

@@ -1,0 +1,218 @@
+//! Sparse fixed-point tensor format (CSR) for the deployed-inference path.
+//!
+//! The paper's inference advantage (tab. 6) comes from the trained model
+//! being *both* quantized and sparsified: weights are stored at WL bits in a
+//! sparse format. This module implements that storage plus a sparse
+//! matrix-vector product so `examples/inference.rs` can demonstrate the
+//! deployed representation end-to-end, and it supplies the exact
+//! bits-per-model numbers behind the SZ column.
+
+use super::format::FixedPointFormat;
+
+/// CSR matrix of fixed-point values; the integer codes are bit-packed at
+/// WL bits each (the ASIC deployment format the paper targets).
+#[derive(Debug, Clone)]
+pub struct SparseFixedTensor {
+    pub rows: usize,
+    pub cols: usize,
+    pub fmt: FixedPointFormat,
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    /// Bit-packed signed integer codes, WL bits each, little-endian bit order.
+    pub packed: Vec<u64>,
+    pub nnz: usize,
+}
+
+impl SparseFixedTensor {
+    /// Quantize a dense row-major matrix and keep only non-zeros.
+    pub fn from_dense(dense: &[f32], rows: usize, cols: usize, fmt: FixedPointFormat) -> Self {
+        assert_eq!(dense.len(), rows * cols);
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::new();
+        let mut codes: Vec<i64> = Vec::new();
+        row_ptr.push(0u32);
+        for r in 0..rows {
+            for c in 0..cols {
+                let q = fmt.quantize_nr(dense[r * cols + c]);
+                if q != 0.0 {
+                    col_idx.push(c as u32);
+                    codes.push((q * fmt.scale()) as i64);
+                }
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        let nnz = codes.len();
+        let packed = pack_codes(&codes, fmt.wl);
+        SparseFixedTensor {
+            rows,
+            cols,
+            fmt,
+            row_ptr,
+            col_idx,
+            packed,
+            nnz,
+        }
+    }
+
+    /// Decode the i-th stored code back to its f32 value.
+    #[inline]
+    pub fn value(&self, i: usize) -> f32 {
+        unpack_code(&self.packed, i, self.fmt.wl) as f32 / self.fmt.scale()
+    }
+
+    /// y = A x (dense vector input / output).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0f32; self.rows];
+        for r in 0..self.rows {
+            let (s, e) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+            let mut acc = 0.0f32;
+            for i in s..e {
+                acc += self.value(i) * x[self.col_idx[i] as usize];
+            }
+            y[r] = acc;
+        }
+        y
+    }
+
+    /// Reconstruct the dense (quantized) matrix.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut d = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            for i in self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize {
+                d[r * self.cols + self.col_idx[i] as usize] = self.value(i);
+            }
+        }
+        d
+    }
+
+    pub fn density(&self) -> f32 {
+        self.nnz as f32 / (self.rows * self.cols) as f32
+    }
+
+    /// Storage cost in bits: packed values + column indices + row pointers.
+    pub fn storage_bits(&self) -> u64 {
+        (self.nnz as u64) * (self.fmt.wl as u64)
+            + (self.col_idx.len() as u64) * 32
+            + (self.row_ptr.len() as u64) * 32
+    }
+
+    /// Value-only bits (the paper's sz ignores index overhead: sz = sp * WL).
+    pub fn value_bits(&self) -> u64 {
+        (self.nnz as u64) * (self.fmt.wl as u64)
+    }
+}
+
+fn pack_codes(codes: &[i64], wl: u8) -> Vec<u64> {
+    let wl = wl as usize;
+    let total_bits = codes.len() * wl;
+    let mut out = vec![0u64; total_bits.div_ceil(64)];
+    let mask = if wl == 64 { u64::MAX } else { (1u64 << wl) - 1 };
+    for (i, &c) in codes.iter().enumerate() {
+        let bits = (c as u64) & mask;
+        let bit = i * wl;
+        let (w, off) = (bit / 64, bit % 64);
+        out[w] |= bits << off;
+        if off + wl > 64 {
+            out[w + 1] |= bits >> (64 - off);
+        }
+    }
+    out
+}
+
+fn unpack_code(packed: &[u64], i: usize, wl: u8) -> i64 {
+    let wl = wl as usize;
+    let bit = i * wl;
+    let (w, off) = (bit / 64, bit % 64);
+    let mask = if wl == 64 { u64::MAX } else { (1u64 << wl) - 1 };
+    let mut bits = packed[w] >> off;
+    if off + wl > 64 {
+        bits |= packed[w + 1] << (64 - off);
+    }
+    bits &= mask;
+    // sign-extend from WL bits
+    let sign = 1u64 << (wl - 1);
+    if bits & sign != 0 {
+        (bits | !mask) as i64
+    } else {
+        bits as i64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_sparse(rows: usize, cols: usize, density: f64, seed: u64) -> Vec<f32> {
+        let mut r = Rng::seed_from(seed);
+        (0..rows * cols)
+            .map(|_| {
+                if r.uniform() < density {
+                    r.normal() as f32
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn round_trip_dense() {
+        let fmt = FixedPointFormat::new(8, 4);
+        let d = random_sparse(17, 23, 0.3, 1);
+        let s = SparseFixedTensor::from_dense(&d, 17, 23, fmt);
+        let back = s.to_dense();
+        for (a, b) in d.iter().zip(&back) {
+            assert_eq!(fmt.quantize_nr(*a), *b);
+        }
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let fmt = FixedPointFormat::new(12, 8);
+        let d = random_sparse(31, 19, 0.4, 2);
+        let s = SparseFixedTensor::from_dense(&d, 31, 19, fmt);
+        let mut r = Rng::seed_from(3);
+        let x: Vec<f32> = (0..19).map(|_| r.normal() as f32).collect();
+        let y = s.matvec(&x);
+        let qd = s.to_dense();
+        for row in 0..31 {
+            let want: f32 = (0..19).map(|c| qd[row * 19 + c] * x[c]).sum();
+            assert!((y[row] - want).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn bit_packing_all_wordlengths() {
+        for wl in 2..=32u8 {
+            let fmt = FixedPointFormat::new(wl, wl / 2);
+            let lo = -(1i64 << (wl - 1));
+            let hi = (1i64 << (wl - 1)) - 1;
+            let codes = vec![lo, hi, 0, 1, -1, lo + 1, hi - 1];
+            let packed = pack_codes(&codes, wl);
+            for (i, &c) in codes.iter().enumerate() {
+                assert_eq!(unpack_code(&packed, i, wl), c, "wl={wl} i={i}");
+            }
+            let _ = fmt;
+        }
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let fmt = FixedPointFormat::new(8, 4);
+        let d = random_sparse(10, 10, 0.5, 4);
+        let s = SparseFixedTensor::from_dense(&d, 10, 10, fmt);
+        assert_eq!(s.value_bits(), s.nnz as u64 * 8);
+        assert!(s.storage_bits() > s.value_bits());
+        assert!((s.density() - 0.5).abs() < 0.25);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let fmt = FixedPointFormat::new(8, 4);
+        let s = SparseFixedTensor::from_dense(&[0.0; 12], 3, 4, fmt);
+        assert_eq!(s.nnz, 0);
+        assert_eq!(s.matvec(&[1.0; 4]), vec![0.0; 3]);
+    }
+}

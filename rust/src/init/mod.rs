@@ -1,0 +1,226 @@
+//! Weight initializers (sec. 3.1 + the fig. 2 initializer study).
+//!
+//! AdaPT initialises with fan-in truncated-normal variance scaling (TNVS);
+//! the fig. 2 study compares it against the common zoo. All initializers
+//! are implemented from scratch on the in-tree PRNG so runs are fully
+//! deterministic given a seed.
+
+use crate::runtime::manifest::{Manifest, ParamInfo};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Initializer {
+    /// Fan-in truncated normal variance scaling — AdaPT's default (sec. 3.1).
+    Tnvs,
+    RandomNormal,
+    TruncatedNormal,
+    RandomUniform,
+    GlorotNormal,
+    GlorotUniform,
+    HeNormal,
+    HeUniform,
+    LecunNormal,
+    LecunUniform,
+}
+
+pub const ALL_INITIALIZERS: &[Initializer] = &[
+    Initializer::Tnvs,
+    Initializer::RandomNormal,
+    Initializer::TruncatedNormal,
+    Initializer::RandomUniform,
+    Initializer::GlorotNormal,
+    Initializer::GlorotUniform,
+    Initializer::HeNormal,
+    Initializer::HeUniform,
+    Initializer::LecunNormal,
+    Initializer::LecunUniform,
+];
+
+impl Initializer {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Initializer::Tnvs => "tnvs",
+            Initializer::RandomNormal => "random_normal",
+            Initializer::TruncatedNormal => "truncated_normal",
+            Initializer::RandomUniform => "random_uniform",
+            Initializer::GlorotNormal => "glorot_normal",
+            Initializer::GlorotUniform => "glorot_uniform",
+            Initializer::HeNormal => "he_normal",
+            Initializer::HeUniform => "he_uniform",
+            Initializer::LecunNormal => "lecun_normal",
+            Initializer::LecunUniform => "lecun_uniform",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Initializer> {
+        ALL_INITIALIZERS.iter().copied().find(|i| i.name() == s)
+    }
+
+    /// Fill one kernel tensor. `fan_in`/`fan_out` from the param spec;
+    /// `scale` is the TNVS empirical scaling factor s (sec. 3.1).
+    pub fn sample(&self, rng: &mut Rng, n: usize, fan_in: usize, fan_out: usize, scale: f64) -> Vec<f32> {
+        let fi = fan_in.max(1) as f64;
+        let fo = fan_out.max(1) as f64;
+        let mut out = Vec::with_capacity(n);
+        match self {
+            Initializer::Tnvs => {
+                // W ~ N(0, s/fan_in) truncated at +-sqrt(3 s / fan_in)
+                let sigma = (scale / fi).sqrt();
+                let a = (3.0 * scale / fi).sqrt();
+                for _ in 0..n {
+                    out.push(rng.truncated_normal(0.0, sigma, a) as f32);
+                }
+            }
+            Initializer::RandomNormal => {
+                for _ in 0..n {
+                    out.push((rng.normal() * 0.05) as f32);
+                }
+            }
+            Initializer::TruncatedNormal => {
+                for _ in 0..n {
+                    out.push(rng.truncated_normal(0.0, 0.05, 0.1) as f32);
+                }
+            }
+            Initializer::RandomUniform => {
+                for _ in 0..n {
+                    out.push(rng.uniform_in(-0.05, 0.05) as f32);
+                }
+            }
+            Initializer::GlorotNormal => {
+                let sigma = (2.0 / (fi + fo)).sqrt();
+                for _ in 0..n {
+                    out.push((rng.normal() * sigma) as f32);
+                }
+            }
+            Initializer::GlorotUniform => {
+                let a = (6.0 / (fi + fo)).sqrt();
+                for _ in 0..n {
+                    out.push(rng.uniform_in(-a, a) as f32);
+                }
+            }
+            Initializer::HeNormal => {
+                let sigma = (2.0 / fi).sqrt();
+                for _ in 0..n {
+                    out.push((rng.normal() * sigma) as f32);
+                }
+            }
+            Initializer::HeUniform => {
+                let a = (6.0 / fi).sqrt();
+                for _ in 0..n {
+                    out.push(rng.uniform_in(-a, a) as f32);
+                }
+            }
+            Initializer::LecunNormal => {
+                let sigma = (1.0 / fi).sqrt();
+                for _ in 0..n {
+                    out.push((rng.normal() * sigma) as f32);
+                }
+            }
+            Initializer::LecunUniform => {
+                let a = (3.0 / fi).sqrt();
+                for _ in 0..n {
+                    out.push(rng.uniform_in(-a, a) as f32);
+                }
+            }
+        }
+        out
+    }
+}
+
+fn fan_out_of(p: &ParamInfo) -> usize {
+    // conv kernels are HWIO; dense kernels are (in, out)
+    match p.shape.len() {
+        4 => p.shape[0] * p.shape[1] * p.shape[3],
+        2 => p.shape[1],
+        _ => p.elems(),
+    }
+}
+
+/// Initialise the full parameter list of a model per manifest specs.
+/// Kernels use `init`; biases/betas zero; gammas one.
+pub fn init_params(man: &Manifest, init: Initializer, scale: f64, seed: u64) -> Vec<Vec<f32>> {
+    let base = Rng::seed_from(seed);
+    man.params
+        .iter()
+        .enumerate()
+        .map(|(i, p)| match p.kind.as_str() {
+            "kernel" => {
+                let mut rng = base.fold(i as u64 + 1);
+                init.sample(&mut rng, p.elems(), p.fan_in, fan_out_of(p), scale)
+            }
+            "gamma" => vec![1.0; p.elems()],
+            _ => vec![0.0; p.elems()],
+        })
+        .collect()
+}
+
+/// Fresh gradient-diversity accumulators (zeros, one per quantizable kernel).
+pub fn init_gsum(man: &Manifest) -> Vec<Vec<f32>> {
+    man.params
+        .iter()
+        .filter(|p| p.quantizable)
+        .map(|p| vec![0.0; p.elems()])
+        .collect()
+}
+
+/// BN running stats: means zero, vars one.
+pub fn init_bn(man: &Manifest) -> Vec<Vec<f32>> {
+    man.bn_state
+        .iter()
+        .map(|s| {
+            if s.name.ends_with(".var") {
+                vec![1.0; s.elems()]
+            } else {
+                vec![0.0; s.elems()]
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tnvs_respects_truncation() {
+        let mut rng = Rng::seed_from(0);
+        let v = Initializer::Tnvs.sample(&mut rng, 10000, 100, 50, 1.0);
+        let bound = (3.0f64 / 100.0).sqrt() as f32;
+        assert!(v.iter().all(|x| x.abs() <= bound + 1e-6));
+        let mean: f32 = v.iter().sum::<f32>() / v.len() as f32;
+        assert!(mean.abs() < 0.01);
+    }
+
+    #[test]
+    fn he_normal_variance() {
+        let mut rng = Rng::seed_from(1);
+        let v = Initializer::HeNormal.sample(&mut rng, 50000, 64, 64, 1.0);
+        let var: f64 = v.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / v.len() as f64;
+        assert!((var - 2.0 / 64.0).abs() < 0.005, "{var}");
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let mut rng = Rng::seed_from(2);
+        let a = (6.0f64 / (32.0 + 16.0)).sqrt() as f32;
+        let v = Initializer::GlorotUniform.sample(&mut rng, 5000, 32, 16, 1.0);
+        assert!(v.iter().all(|x| x.abs() <= a));
+    }
+
+    #[test]
+    fn name_round_trip() {
+        for &i in ALL_INITIALIZERS {
+            assert_eq!(Initializer::from_name(i.name()), Some(i));
+        }
+        assert_eq!(Initializer::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::seed_from(3);
+        let mut b = Rng::seed_from(3);
+        let va = Initializer::Tnvs.sample(&mut a, 100, 10, 10, 1.0);
+        let vb = Initializer::Tnvs.sample(&mut b, 100, 10, 10, 1.0);
+        assert_eq!(va, vb);
+    }
+}

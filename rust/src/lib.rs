@@ -1,0 +1,29 @@
+//! # AdaPT — Adaptive Precision Training
+//!
+//! Reproduction of *"Adaptive Precision Training (AdaPT): A dynamic fixed
+//! point quantized training approach for DNNs"* (Kummer, Sidak, Reichmann,
+//! Gansterer, 2021) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L1** — Pallas fixed-point quantization kernels (build-time Python,
+//!   `python/compile/kernels/`), lowered into the model HLO.
+//! * **L2** — JAX train/infer graphs per model (MLP, LeNet-5, AlexNet,
+//!   ResNet-20), AOT-compiled to HLO text artifacts.
+//! * **L3** — this crate: the PJRT runtime, the AdaPT precision-switching
+//!   mechanism (PushDown/PushUp, sec. 3.3), the MuPPET + float32 baselines,
+//!   the analytical performance model (sec. 4.1.2) and the experiment
+//!   harness regenerating every table and figure of the paper.
+//!
+//! Python never runs on the training path: `make artifacts` once, then the
+//! `adapt` binary is self-contained. See DESIGN.md for the full map.
+
+pub mod bench_support;
+pub mod coordinator;
+pub mod data;
+pub mod fixedpoint;
+pub mod init;
+pub mod metrics;
+pub mod muppet;
+pub mod perfmodel;
+pub mod quant;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,343 @@
+//! `adapt` — the AdaPT command-line launcher.
+//!
+//! Subcommands (arg parsing is hand-rolled; the offline registry has no clap):
+//!
+//! ```text
+//! adapt info                               artifacts + PJRT platform
+//! adapt train --artifact A --mode M ...    one training run (saves a record)
+//! adapt table --id 1..6 [--profile P]      regenerate a paper table
+//! adapt figure --id 3..8 [--profile P]     regenerate a paper figure (TSV)
+//! adapt run-all [--profile P]              the full experiment suite
+//! adapt bench-step --artifact A            per-step latency probe
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use adapt::bench_support as hs;
+use adapt::coordinator::{train, TrainConfig};
+use adapt::metrics::RunRecord;
+use adapt::perfmodel as pm;
+use adapt::runtime::{artifacts_dir, Engine};
+
+/// Minimal flag parser: --key value pairs after the subcommand.
+struct Args {
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                return Err(anyhow!("unexpected argument '{a}'"));
+            }
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    fn profile(&self) -> hs::Profile {
+        self.get("profile")
+            .and_then(hs::Profile::from_name)
+            .unwrap_or(hs::Profile::Fast)
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = artifacts_dir()?;
+    let engine = Engine::cpu()?;
+    println!("platform : {}", engine.platform());
+    println!("artifacts: {}", dir.display());
+    let mut names: Vec<_> = std::fs::read_dir(&dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|e| e == "json"))
+        .collect();
+    names.sort();
+    for p in names {
+        if let Ok(man) = adapt::runtime::Manifest::load(&p) {
+            println!(
+                "  {:<16} model={:<9} batch={} L={} params={} classes={}",
+                man.name,
+                man.model,
+                man.batch,
+                man.num_layers,
+                man.total_params(),
+                man.classes
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let artifact = args
+        .get("artifact")
+        .ok_or_else(|| anyhow!("--artifact required"))?;
+    let mode = args.get("mode").unwrap_or("adapt");
+    let profile = args.profile();
+    let mut cfg: TrainConfig = profile.config(artifact, profile.policy(mode)?);
+    if let Some(v) = args.get("epochs") {
+        cfg.epochs = v.parse()?;
+    }
+    if let Some(v) = args.get("train-size") {
+        cfg.train_size = v.parse()?;
+    }
+    if let Some(v) = args.get("eval-size") {
+        cfg.eval_size = v.parse()?;
+    }
+    if let Some(v) = args.get("seed") {
+        cfg.seed = v.parse()?;
+    }
+    if let Some(v) = args.get("init") {
+        cfg.init = adapt::init::Initializer::from_name(v)
+            .ok_or_else(|| anyhow!("unknown initializer '{v}'"))?;
+    }
+    cfg.log_every = args.usize_or("log", 25);
+
+    let dir = artifacts_dir()?;
+    let engine = Engine::cpu()?;
+    let out = train(&engine, &dir, &cfg)?;
+    let rec = &out.record;
+    println!(
+        "run complete: {} steps, wall {:.1}s, final eval acc {:.4}",
+        rec.steps.len(),
+        rec.wall_secs,
+        rec.final_eval().unwrap_or(f32::NAN)
+    );
+    println!("final wordlengths: {:?}", out.final_wordlengths);
+    let man = hs::manifest_for(&dir, artifact)?;
+    println!(
+        "perf model: SU^1 {:.2}  MEM {:.2}  SZ {:.2}  inference SU {:.2}",
+        pm::speedup(
+            rec.batch,
+            pm::train_costs(&man.layers, rec),
+            pm::adapt_overhead(&man.layers, rec),
+            rec.batch,
+            pm::train_costs_float32(&man.layers, rec.steps.len(), rec.accs)
+        ),
+        pm::mem_ratio(rec),
+        pm::size_ratio(rec),
+        pm::inference_speedup(&man.layers, rec)
+    );
+    let path = RunRecord::path_for(&hs::runs_dir(profile), artifact, mode);
+    out.record.save(&path)?;
+    println!("record saved: {}", path.display());
+    Ok(())
+}
+
+fn table_text(
+    engine: &Engine,
+    dir: &std::path::Path,
+    profile: hs::Profile,
+    id: usize,
+) -> Result<String> {
+    Ok(match id {
+        1 => hs::accuracy_table(engine, dir, profile, "c100")?,
+        2 => hs::accuracy_table(engine, dir, profile, "c10")?,
+        3 => hs::speedup_table(engine, dir, profile, "c10")?,
+        4 => hs::speedup_table(engine, dir, profile, "c100")?,
+        5 => hs::sparsity_table(engine, dir, profile)?,
+        6 => hs::inference_table(engine, dir, profile)?,
+        _ => return Err(anyhow!("--id must be 1..6")),
+    })
+}
+
+fn cmd_table(args: &Args) -> Result<()> {
+    let id = args.usize_or("id", 0);
+    let profile = args.profile();
+    let dir = artifacts_dir()?;
+    let engine = Engine::cpu()?;
+    let text = table_text(&engine, &dir, profile, id)?;
+    println!("=== Table {id} ===\n{text}");
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let id = args.usize_or("id", 0);
+    let profile = args.profile();
+    let dir = artifacts_dir()?;
+    let engine = Engine::cpu()?;
+    let out_dir = hs::runs_dir(profile).join("figures");
+    std::fs::create_dir_all(&out_dir)?;
+    let (name, tsv) = match id {
+        3 | 4 => {
+            let artifact = if id == 3 { "resnet20-c100" } else { "alexnet-c100" };
+            let run = hs::ensure_run(&engine, &dir, profile, artifact, "adapt")?;
+            let man = hs::manifest_for(&dir, artifact)?;
+            (
+                format!("fig{id}_wordlengths_{artifact}"),
+                hs::figure_wordlengths(&run, &man),
+            )
+        }
+        5 | 6 => {
+            let artifact = if id == 5 { "alexnet-c100" } else { "resnet20-c100" };
+            let run = hs::ensure_run(&engine, &dir, profile, artifact, "adapt")?;
+            let man = hs::manifest_for(&dir, artifact)?;
+            (
+                format!("fig{id}_sparsity_{artifact}"),
+                hs::figure_sparsity(&run, &man),
+            )
+        }
+        7 => {
+            let mut pairs = Vec::new();
+            for a in ["alexnet-c10", "resnet20-c10", "alexnet-c100", "resnet20-c100"] {
+                pairs.push((a, hs::ensure_run(&engine, &dir, profile, a, "adapt")?));
+            }
+            let refs: Vec<(&str, &RunRecord)> = pairs.iter().map(|(a, r)| (*a, r)).collect();
+            ("fig7_memory".to_string(), hs::figure_memory(&refs))
+        }
+        8 => {
+            let mut trips = Vec::new();
+            for a in ["alexnet-c10", "resnet20-c10", "alexnet-c100", "resnet20-c100"] {
+                let run = hs::ensure_run(&engine, &dir, profile, a, "adapt")?;
+                let man = hs::manifest_for(&dir, a)?;
+                trips.push((a, run, man));
+            }
+            let refs: Vec<(&str, &RunRecord, &adapt::runtime::Manifest)> =
+                trips.iter().map(|(a, r, m)| (*a, r, m)).collect();
+            ("fig8_cost".to_string(), hs::figure_cost(&refs))
+        }
+        _ => {
+            return Err(anyhow!(
+                "--id must be 3..8 (fig 2 => cargo run --release --example initializer_study)"
+            ))
+        }
+    };
+    let path = out_dir.join(format!("{name}.tsv"));
+    std::fs::write(&path, &tsv)?;
+    println!("=== Figure {id} -> {} ===", path.display());
+    let lines: Vec<&str> = tsv.lines().collect();
+    for l in lines.iter().take(4) {
+        println!("{l}");
+    }
+    if lines.len() > 8 {
+        println!("... ({} rows)", lines.len() - 1);
+        for l in lines.iter().rev().take(2).rev() {
+            println!("{l}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_run_all(args: &Args) -> Result<()> {
+    let profile = args.profile();
+    let dir = artifacts_dir()?;
+    let engine = Engine::cpu()?;
+    for artifact in ["alexnet-c10", "alexnet-c100", "resnet20-c10", "resnet20-c100"] {
+        for mode in ["float32", "adapt", "muppet"] {
+            let rec = hs::ensure_run(&engine, &dir, profile, artifact, mode)?;
+            println!(
+                "{artifact:<14} {mode:<8} eval {:.4}  wall {:.0}s  steps {}",
+                rec.final_eval().unwrap_or(f32::NAN),
+                rec.wall_secs,
+                rec.steps.len()
+            );
+        }
+    }
+    for id in 1..=6 {
+        println!("=== Table {id} ===\n{}", table_text(&engine, &dir, profile, id)?);
+    }
+    Ok(())
+}
+
+fn cmd_bench_step(args: &Args) -> Result<()> {
+    let artifact = args.get("artifact").unwrap_or("mlp-mnist");
+    let steps = args.usize_or("steps", 20);
+    let dir = artifacts_dir()?;
+    let engine = Engine::cpu()?;
+    let model = engine.load_model(&dir, artifact)?;
+    let man = &model.manifest;
+    let data = adapt::data::SyntheticVision::new(
+        man.input_shape[0],
+        man.input_shape[1],
+        man.input_shape[2],
+        man.classes,
+        man.batch * 4,
+        0,
+        0.3,
+    );
+    use adapt::data::Batcher;
+    let b = Batcher::eval_batch(&data, man.batch, 0);
+    let mut state = adapt::runtime::TrainState {
+        params: adapt::init::init_params(man, adapt::init::Initializer::Tnvs, 1.0, 0),
+        gsum: adapt::init::init_gsum(man),
+        bn: adapt::init::init_bn(man),
+        step: 0,
+    };
+    let qp: Vec<f32> = (0..2 * man.num_layers)
+        .flat_map(|_| adapt::fixedpoint::FixedPointFormat::initial().qparams_row(1.0))
+        .collect();
+    let hyper = adapt::runtime::Hyper::default();
+    model.train_step(&mut state, &b.x, &b.y, &qp, &hyper)?; // warmup
+    let t0 = std::time::Instant::now();
+    for _ in 0..steps {
+        model.train_step(&mut state, &b.x, &b.y, &qp, &hyper)?;
+    }
+    let dt = t0.elapsed().as_secs_f64() / steps as f64;
+    println!(
+        "{artifact}: {:.1} ms/step (batch {}), {:.1} samples/s, params {}",
+        dt * 1e3,
+        man.batch,
+        man.batch as f64 / dt,
+        man.total_params()
+    );
+    Ok(())
+}
+
+const USAGE: &str = "usage: adapt <info|train|table|figure|run-all|bench-step> [--flags]
+  adapt train --artifact resnet20-c10 --mode adapt|muppet|float32 [--profile tiny|fast|paper]
+  adapt table --id 1..6 [--profile fast]
+  adapt figure --id 3..8 [--profile fast]
+  adapt run-all [--profile fast]
+  adapt bench-step --artifact alexnet-c10 [--steps 20]";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        eprintln!("{USAGE}");
+        std::process::exit(2);
+    };
+    let args = match Args::parse(&argv[1..]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let r = match cmd.as_str() {
+        "info" => cmd_info(),
+        "train" => cmd_train(&args),
+        "table" => cmd_table(&args),
+        "figure" => cmd_figure(&args),
+        "run-all" => cmd_run_all(&args),
+        "bench-step" => cmd_bench_step(&args),
+        _ => {
+            eprintln!("unknown command '{cmd}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

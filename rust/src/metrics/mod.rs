@@ -1,0 +1,387 @@
+//! Run records: everything the tables/figures and the analytical performance
+//! model need, serialisable via the in-tree JSON.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::quant::SwitchEvent;
+use crate::util::json::{arr_f32, num, Json};
+
+/// Per-training-step scalars.
+#[derive(Debug, Clone)]
+pub struct StepRow {
+    pub loss: f32,
+    pub ce: f32,
+    pub acc: f32,
+}
+
+/// Full record of one training run.
+#[derive(Debug, Clone, Default)]
+pub struct RunRecord {
+    pub name: String,       // e.g. "alexnet-c100"
+    pub mode: String,       // adapt | muppet | float32
+    pub batch: usize,
+    pub accs: u32,          // gradient accumulation steps (perf model)
+    pub epochs: usize,
+    pub steps_per_epoch: usize,
+    pub num_layers: usize,
+    pub steps: Vec<StepRow>,
+    /// [step][layer] word length
+    pub layer_wl: Vec<Vec<u8>>,
+    /// [step][layer] NON-ZERO fraction (sp in eq. 8/9; 1 - zero-fraction)
+    pub layer_nz: Vec<Vec<f32>>,
+    /// [step][layer] lookback (AdaPT overhead, eq. 7); empty for baselines
+    pub layer_lb: Vec<Vec<u32>>,
+    /// [step][layer] resolution (AdaPT overhead, eq. 6); empty for baselines
+    pub layer_res: Vec<Vec<u32>>,
+    /// (step, top-1 accuracy) evaluation points
+    pub evals: Vec<(u64, f32)>,
+    pub switches: Vec<SwitchEventLite>,
+    pub wall_secs: f64,
+}
+
+/// Compact serialisable form of a SwitchEvent.
+#[derive(Debug, Clone)]
+pub struct SwitchEventLite {
+    pub step: u64,
+    pub layer: i64, // -1 for MuPPET's global switch
+    pub old_wl: u8,
+    pub old_fl: u8,
+    pub new_wl: u8,
+    pub new_fl: u8,
+    pub diversity: f64,
+}
+
+impl From<&SwitchEvent> for SwitchEventLite {
+    fn from(e: &SwitchEvent) -> Self {
+        SwitchEventLite {
+            step: e.step,
+            layer: if e.layer == usize::MAX { -1 } else { e.layer as i64 },
+            old_wl: e.old.wl,
+            old_fl: e.old.fl,
+            new_wl: e.new.wl,
+            new_fl: e.new.fl,
+            diversity: e.diversity,
+        }
+    }
+}
+
+impl RunRecord {
+    pub fn final_eval(&self) -> Option<f32> {
+        self.evals.last().map(|&(_, a)| a)
+    }
+
+    pub fn best_eval(&self) -> Option<f32> {
+        self.evals
+            .iter()
+            .map(|&(_, a)| a)
+            .fold(None, |m, a| Some(m.map_or(a, |mm: f32| mm.max(a))))
+    }
+
+    /// Final-step per-layer zero fraction (sparsity as plotted in fig. 5/6).
+    pub fn final_sparsity(&self) -> Vec<f32> {
+        self.layer_nz
+            .last()
+            .map(|nz| nz.iter().map(|&n| 1.0 - n).collect())
+            .unwrap_or_default()
+    }
+
+    /// Whole-model sparsity at the final step (weighted uniformly per layer,
+    /// as the paper's tab. 5 does).
+    pub fn final_model_sparsity(&self) -> f32 {
+        let s = self.final_sparsity();
+        if s.is_empty() {
+            0.0
+        } else {
+            s.iter().sum::<f32>() / s.len() as f32
+        }
+    }
+
+    /// Average intra-training sparsity (tab. 5 right column).
+    pub fn average_sparsity(&self) -> f32 {
+        if self.layer_nz.is_empty() {
+            return 0.0;
+        }
+        let mut acc = 0.0f64;
+        let mut n = 0usize;
+        for row in &self.layer_nz {
+            for &nz in row {
+                acc += (1.0 - nz) as f64;
+                n += 1;
+            }
+        }
+        (acc / n as f64) as f32
+    }
+
+    // -- (de)serialisation --------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let steps_loss: Vec<f32> = self.steps.iter().map(|s| s.loss).collect();
+        let steps_ce: Vec<f32> = self.steps.iter().map(|s| s.ce).collect();
+        let steps_acc: Vec<f32> = self.steps.iter().map(|s| s.acc).collect();
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        m.insert("mode".into(), Json::Str(self.mode.clone()));
+        m.insert("batch".into(), num(self.batch as f64));
+        m.insert("accs".into(), num(self.accs as f64));
+        m.insert("epochs".into(), num(self.epochs as f64));
+        m.insert("steps_per_epoch".into(), num(self.steps_per_epoch as f64));
+        m.insert("num_layers".into(), num(self.num_layers as f64));
+        m.insert("wall_secs".into(), num(self.wall_secs));
+        m.insert("loss".into(), arr_f32(&steps_loss));
+        m.insert("ce".into(), arr_f32(&steps_ce));
+        m.insert("acc".into(), arr_f32(&steps_acc));
+        m.insert(
+            "layer_wl".into(),
+            Json::Arr(
+                self.layer_wl
+                    .iter()
+                    .map(|r| Json::Arr(r.iter().map(|&w| num(w as f64)).collect()))
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "layer_nz".into(),
+            Json::Arr(self.layer_nz.iter().map(|r| arr_f32(r)).collect()),
+        );
+        m.insert(
+            "layer_lb".into(),
+            Json::Arr(
+                self.layer_lb
+                    .iter()
+                    .map(|r| Json::Arr(r.iter().map(|&w| num(w as f64)).collect()))
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "layer_res".into(),
+            Json::Arr(
+                self.layer_res
+                    .iter()
+                    .map(|r| Json::Arr(r.iter().map(|&w| num(w as f64)).collect()))
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "evals".into(),
+            Json::Arr(
+                self.evals
+                    .iter()
+                    .map(|&(s, a)| Json::Arr(vec![num(s as f64), num(a as f64)]))
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "switches".into(),
+            Json::Arr(
+                self.switches
+                    .iter()
+                    .map(|e| {
+                        Json::Arr(vec![
+                            num(e.step as f64),
+                            num(e.layer as f64),
+                            num(e.old_wl as f64),
+                            num(e.old_fl as f64),
+                            num(e.new_wl as f64),
+                            num(e.new_fl as f64),
+                            num(e.diversity),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunRecord> {
+        let f32s = |k: &str| -> Result<Vec<f32>> {
+            Ok(j.req(k)
+                .map_err(|e| anyhow!("{e}"))?
+                .as_arr()
+                .ok_or_else(|| anyhow!("{k} not arr"))?
+                .iter()
+                .map(|v| v.as_f64().unwrap_or(0.0) as f32)
+                .collect())
+        };
+        let mat = |k: &str| -> Result<Vec<Vec<f32>>> {
+            Ok(j.req(k)
+                .map_err(|e| anyhow!("{e}"))?
+                .as_arr()
+                .ok_or_else(|| anyhow!("{k} not arr"))?
+                .iter()
+                .map(|r| {
+                    r.as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(|v| v.as_f64().unwrap_or(0.0) as f32)
+                        .collect()
+                })
+                .collect())
+        };
+        let loss = f32s("loss")?;
+        let ce = f32s("ce")?;
+        let acc = f32s("acc")?;
+        let steps = loss
+            .iter()
+            .zip(&ce)
+            .zip(&acc)
+            .map(|((&l, &c), &a)| StepRow { loss: l, ce: c, acc: a })
+            .collect();
+        let wl_m = mat("layer_wl")?;
+        let lb_m = mat("layer_lb")?;
+        let res_m = mat("layer_res")?;
+        Ok(RunRecord {
+            name: j.req("name").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or("").into(),
+            mode: j.req("mode").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or("").into(),
+            batch: j.req("batch").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap_or(0),
+            accs: j.req("accs").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap_or(1) as u32,
+            epochs: j.req("epochs").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap_or(0),
+            steps_per_epoch: j
+                .req("steps_per_epoch")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_usize()
+                .unwrap_or(0),
+            num_layers: j.req("num_layers").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap_or(0),
+            steps,
+            layer_wl: wl_m
+                .into_iter()
+                .map(|r| r.into_iter().map(|v| v as u8).collect())
+                .collect(),
+            layer_nz: mat("layer_nz")?,
+            layer_lb: lb_m
+                .into_iter()
+                .map(|r| r.into_iter().map(|v| v as u32).collect())
+                .collect(),
+            layer_res: res_m
+                .into_iter()
+                .map(|r| r.into_iter().map(|v| v as u32).collect())
+                .collect(),
+            evals: j
+                .req("evals")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|p| {
+                    let a = p.as_arr()?;
+                    Some((a[0].as_f64()? as u64, a[1].as_f64()? as f32))
+                })
+                .collect(),
+            switches: j
+                .req("switches")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|p| {
+                    let a = p.as_arr()?;
+                    Some(SwitchEventLite {
+                        step: a[0].as_f64()? as u64,
+                        layer: a[1].as_f64()? as i64,
+                        old_wl: a[2].as_f64()? as u8,
+                        old_fl: a[3].as_f64()? as u8,
+                        new_wl: a[4].as_f64()? as u8,
+                        new_fl: a[5].as_f64()? as u8,
+                        diversity: a[6].as_f64()?,
+                    })
+                })
+                .collect(),
+            wall_secs: j.req("wall_secs").map_err(|e| anyhow!("{e}"))?.as_f64().unwrap_or(0.0),
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<RunRecord> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        RunRecord::from_json(&j)
+    }
+
+    /// Conventional on-disk location for a run.
+    pub fn path_for(dir: &Path, name: &str, mode: &str) -> std::path::PathBuf {
+        dir.join(format!("{name}.{mode}.run.json"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_record() -> RunRecord {
+        RunRecord {
+            name: "mlp-mnist".into(),
+            mode: "adapt".into(),
+            batch: 32,
+            accs: 1,
+            epochs: 2,
+            steps_per_epoch: 3,
+            num_layers: 2,
+            steps: vec![
+                StepRow { loss: 2.0, ce: 1.9, acc: 0.1 },
+                StepRow { loss: 1.5, ce: 1.4, acc: 0.4 },
+            ],
+            layer_wl: vec![vec![8, 8], vec![12, 10]],
+            layer_nz: vec![vec![0.9, 0.8], vec![0.7, 0.6]],
+            layer_lb: vec![vec![50, 50], vec![40, 60]],
+            layer_res: vec![vec![100, 100], vec![99, 101]],
+            evals: vec![(3, 0.5), (6, 0.7)],
+            switches: vec![SwitchEventLite {
+                step: 3,
+                layer: 0,
+                old_wl: 8,
+                old_fl: 4,
+                new_wl: 12,
+                new_fl: 8,
+                diversity: 2.5,
+            }],
+            wall_secs: 1.25,
+        }
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let r = sample_record();
+        let j = r.to_json();
+        let back = RunRecord::from_json(&j).unwrap();
+        assert_eq!(back.name, r.name);
+        assert_eq!(back.layer_wl, r.layer_wl);
+        assert_eq!(back.layer_nz, r.layer_nz);
+        assert_eq!(back.evals, r.evals);
+        assert_eq!(back.switches.len(), 1);
+        assert_eq!(back.switches[0].new_wl, 12);
+        assert_eq!(back.steps.len(), 2);
+    }
+
+    #[test]
+    fn sparsity_helpers() {
+        let r = sample_record();
+        let fs = r.final_sparsity();
+        assert!((fs[0] - 0.3).abs() < 1e-6);
+        assert!((fs[1] - 0.4).abs() < 1e-6);
+        assert!((r.final_model_sparsity() - 0.35).abs() < 1e-6);
+        assert!(r.average_sparsity() > 0.0);
+        assert_eq!(r.final_eval(), Some(0.7));
+        assert_eq!(r.best_eval(), Some(0.7));
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let r = sample_record();
+        let dir = std::env::temp_dir().join("adapt_test_metrics");
+        let path = RunRecord::path_for(&dir, &r.name, &r.mode);
+        r.save(&path).unwrap();
+        let back = RunRecord::load(&path).unwrap();
+        assert_eq!(back.layer_res, r.layer_res);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

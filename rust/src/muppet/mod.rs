@@ -1,0 +1,332 @@
+//! MuPPET baseline (sec. 2.2): block-floating-point mixed-precision training
+//! with a global word-length ladder and inter-epoch gradient-diversity
+//! precision switching. Reimplemented in full (the original codebase was not
+//! executable even for the paper's authors; they simulated it — we run it).
+//!
+//! Differences from AdaPT this baseline exhibits by construction:
+//!  * one global WL for the whole network (no per-layer formats),
+//!  * per-layer power-of-two scale, separate for weights and activations,
+//!  * switches only at epoch boundaries, only upward,
+//!  * final epochs in float32 (so the output model is NOT quantized).
+
+use crate::fixedpoint::quantize::max_abs;
+use crate::quant::qmap::{QuantController, SwitchEvent};
+use crate::quant::Strategy;
+use crate::fixedpoint::format::FixedPointFormat;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::step::{StepMetrics, TrainState};
+
+/// MuPPET hyperparameters (defaults follow Rajagopal et al. 2020).
+#[derive(Debug, Clone)]
+pub struct MuppetHyper {
+    /// The precision ladder (word lengths); after the last rung training
+    /// continues in float32.
+    pub ladder: Vec<u8>,
+    /// Diversity-ratio threshold tau: a violation is p > tau.
+    pub threshold: f64,
+    /// Number of violations that triggers a switch.
+    pub patience: u32,
+    /// Inter-epoch window r for the diversity set S(j).
+    pub window: usize,
+}
+
+impl Default for MuppetHyper {
+    fn default() -> Self {
+        MuppetHyper {
+            ladder: vec![8, 12, 14, 16],
+            threshold: 1.2,
+            patience: 2,
+            window: 5,
+        }
+    }
+}
+
+/// Per-layer block-floating-point scales (weights + activations).
+struct LayerScale {
+    s_weights: i32,
+    s_act: i32,
+}
+
+pub struct MuppetController {
+    hyper: MuppetHyper,
+    rung: usize, // index into ladder; == ladder.len() -> float32 phase
+    scales: Vec<LayerScale>,
+    kernel_param_idx: Vec<usize>,
+    /// per-layer sum of squared per-batch gradient norms (this epoch)
+    sq_norm_sum: Vec<f64>,
+    /// gsum_norm at the most recent step (norm of summed gradients)
+    last_gsum_norm: Vec<f32>,
+    /// history of per-epoch diversities since the current rung started
+    diversity_history: Vec<f64>,
+    violations: u32,
+    events: Vec<SwitchEvent>,
+    step: u64,
+    num_layers: usize,
+}
+
+impl MuppetController {
+    pub fn new(man: &Manifest, hyper: MuppetHyper) -> Self {
+        let l = man.num_layers;
+        MuppetController {
+            hyper,
+            rung: 0,
+            scales: (0..l)
+                .map(|_| LayerScale {
+                    s_weights: 7, // sensible default until first update
+                    s_act: 4,
+                })
+                .collect(),
+            kernel_param_idx: man.kernel_indices(),
+            sq_norm_sum: vec![0.0; l],
+            last_gsum_norm: vec![0.0; l],
+            diversity_history: Vec::new(),
+            violations: 0,
+            events: Vec::new(),
+            step: 0,
+            num_layers: l,
+        }
+    }
+
+    fn wl(&self) -> Option<u8> {
+        self.hyper.ladder.get(self.rung).copied()
+    }
+
+    /// MuPPET scale (sec. 2.2): s = |log2 min((UB+0.5)/Xmax, (LB-0.5)/Xmin)|
+    /// floored to a power of two exponent.
+    fn scale_for(wl: u8, xmax: f32, xmin: f32) -> i32 {
+        let ub = ((1u64 << (wl - 1)) - 1) as f64; // UB
+        let lb = -((1u64 << (wl - 1)) as f64); // LB
+        let xmax = xmax as f64;
+        let xmin = xmin as f64;
+        let a = if xmax > 0.0 {
+            (ub + 0.5) / xmax
+        } else {
+            f64::INFINITY
+        };
+        let b = if xmin < 0.0 {
+            (lb - 0.5) / xmin
+        } else {
+            f64::INFINITY
+        };
+        let m = a.min(b);
+        if !m.is_finite() || m <= 0.0 {
+            return 0;
+        }
+        m.log2().floor() as i32
+    }
+
+    /// Refresh per-layer weight scales from the master copy.
+    fn refresh_weight_scales(&mut self, state: &TrainState) {
+        if let Some(wl) = self.wl() {
+            for (l, &pi) in self.kernel_param_idx.iter().enumerate() {
+                let w = &state.params[pi];
+                let mabs = max_abs(w);
+                let (mut xmax, mut xmin) = (f32::MIN_POSITIVE, -f32::MIN_POSITIVE);
+                for &x in w {
+                    xmax = xmax.max(x);
+                    xmin = xmin.min(x);
+                }
+                let _ = mabs;
+                self.scales[l].s_weights = Self::scale_for(wl, xmax, xmin);
+            }
+        }
+    }
+
+    /// Epoch-level gradient diversity (MuPPET eq.): squared-norm ratio
+    /// averaged over layers.
+    fn epoch_diversity(&self) -> f64 {
+        let mut acc = 0.0;
+        for l in 0..self.num_layers {
+            let denom = (self.last_gsum_norm[l] as f64).powi(2);
+            if denom > 0.0 {
+                acc += self.sq_norm_sum[l] / denom;
+            }
+        }
+        acc / self.num_layers as f64
+    }
+}
+
+impl QuantController for MuppetController {
+    fn name(&self) -> &'static str {
+        "muppet"
+    }
+
+    fn qparams(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(2 * self.num_layers * 5);
+        match self.wl() {
+            Some(wl) => {
+                let qmax = ((1u64 << (wl - 1)) - 1) as f32;
+                let qmin = -((1u64 << (wl - 1)) as f32);
+                for ls in &self.scales {
+                    out.extend([
+                        (2.0f32).powi(ls.s_weights),
+                        qmin,
+                        qmax,
+                        1.0,
+                        wl as f32,
+                    ]);
+                }
+                for ls in &self.scales {
+                    out.extend([(2.0f32).powi(ls.s_act), qmin, qmax, 1.0, wl as f32]);
+                }
+            }
+            None => {
+                // float32 refinement phase
+                let mut row = FixedPointFormat::full().qparams_row(0.0);
+                row[4] = 32.0;
+                for _ in 0..2 * self.num_layers {
+                    out.extend(row);
+                }
+            }
+        }
+        out
+    }
+
+    fn on_step(&mut self, state: &mut TrainState, m: &StepMetrics) {
+        self.step += 1;
+        if !m.loss.is_finite() {
+            return;
+        }
+        for l in 0..self.num_layers {
+            self.sq_norm_sum[l] += (m.grad_norm[l] as f64).powi(2);
+            self.last_gsum_norm[l] = m.gsum_norm[l];
+        }
+        // activation scales track the latest feature-map extrema
+        if let Some(wl) = self.wl() {
+            for l in 0..self.num_layers {
+                let amax = m.act_absmax[l].max(f32::MIN_POSITIVE);
+                self.scales[l].s_act = Self::scale_for(wl, amax, -amax);
+            }
+        }
+        // weight scales track the (already updated) master copy
+        self.refresh_weight_scales(state);
+    }
+
+    fn on_epoch_end(&mut self, state: &mut TrainState, _epoch: usize) {
+        if self.wl().is_none() {
+            return; // float32 phase: nothing to switch
+        }
+        let ds = self.epoch_diversity();
+        if ds.is_finite() && ds > 0.0 {
+            self.diversity_history.push(ds);
+            let window = self.hyper.window.min(self.diversity_history.len());
+            let recent = &self.diversity_history[self.diversity_history.len() - window..];
+            let max_s = recent.iter().cloned().fold(f64::MIN, f64::max);
+            let p = max_s / ds;
+            if p > self.hyper.threshold {
+                self.violations += 1;
+            }
+            if self.violations >= self.hyper.patience {
+                let old_wl = self.wl().unwrap();
+                self.rung += 1;
+                self.violations = 0;
+                self.diversity_history.clear();
+                let new_wl = self.wl().unwrap_or(32);
+                self.events.push(SwitchEvent {
+                    step: self.step,
+                    layer: usize::MAX, // global switch
+                    old: FixedPointFormat::new(old_wl, 0),
+                    new: FixedPointFormat::new(new_wl, 0),
+                    min_fmt: FixedPointFormat::new(new_wl, 0),
+                    diversity: ds,
+                    kl: 0.0,
+                    lookback: 0,
+                    resolution: 0,
+                    strategy: Strategy::Mean,
+                });
+                self.refresh_weight_scales(state);
+            }
+        }
+        // reset the per-epoch accumulators (the diversity window is epochs,
+        // not batches)
+        self.sq_norm_sum.iter_mut().for_each(|v| *v = 0.0);
+        state.zero_gsum();
+    }
+
+    fn wordlengths(&self) -> Vec<u8> {
+        vec![self.wl().unwrap_or(32); self.num_layers]
+    }
+
+    fn fraclengths(&self) -> Vec<u8> {
+        // block-FP has no global FL; report the per-layer weight exponent
+        self.scales
+            .iter()
+            .map(|s| s.s_weights.clamp(0, 31) as u8)
+            .collect()
+    }
+
+    fn take_events(&mut self) -> Vec<SwitchEvent> {
+        std::mem::take(&mut self.events)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_formula_matches_hand_computation() {
+        // WL=8: UB=127, LB=-128. Xmax=0.5, Xmin=-0.5:
+        // min(127.5/0.5, 127.5/0.5) = 255 -> floor(log2 255) = 7
+        assert_eq!(MuppetController::scale_for(8, 0.5, -0.5), 7);
+        // Larger range -> smaller scale
+        assert_eq!(MuppetController::scale_for(8, 64.0, -64.0), 0);
+        // degenerate all-positive tensor
+        assert!(MuppetController::scale_for(8, 1.0, 0.0) >= 6);
+    }
+
+    #[test]
+    fn ladder_walks_upward_under_stalled_diversity() {
+        let dir = crate::runtime::artifacts_dir().expect("artifacts");
+        let man = Manifest::load(&dir.join("mlp-mnist.manifest.json")).unwrap();
+        let mut c = MuppetController::new(&man, MuppetHyper::default());
+        let mut st = TrainState {
+            params: crate::init::init_params(&man, crate::init::Initializer::Tnvs, 1.0, 0),
+            gsum: crate::init::init_gsum(&man),
+            bn: crate::init::init_bn(&man),
+            step: 0,
+        };
+        assert_eq!(c.wordlengths()[0], 8);
+        // stalled: diversity decreasing epoch over epoch => p = max/ds grows
+        for epoch in 0..12 {
+            let ds_scale = 1.0 / (1.0 + epoch as f32); // shrinking diversity
+            for _ in 0..5 {
+                let m = StepMetrics {
+                    loss: 1.0,
+                    ce: 1.0,
+                    acc: 0.5,
+                    grad_norm: vec![1.0; man.num_layers],
+                    gsum_norm: vec![2.0 / ds_scale; man.num_layers],
+                    sparsity: vec![0.0; man.num_layers],
+                    act_absmax: vec![1.0; man.num_layers],
+                };
+                c.on_step(&mut st, &m);
+            }
+            c.on_epoch_end(&mut st, epoch);
+        }
+        assert!(c.rung > 0, "MuPPET never climbed the ladder");
+    }
+
+    #[test]
+    fn float32_phase_after_ladder() {
+        let dir = crate::runtime::artifacts_dir().expect("artifacts");
+        let man = Manifest::load(&dir.join("mlp-mnist.manifest.json")).unwrap();
+        let mut c = MuppetController::new(&man, MuppetHyper::default());
+        c.rung = c.hyper.ladder.len();
+        let qp = c.qparams();
+        assert_eq!(qp[3], 0.0, "enable must be off in float32 phase");
+        assert_eq!(c.wordlengths()[0], 32);
+    }
+
+    #[test]
+    fn qparams_are_powers_of_two() {
+        let dir = crate::runtime::artifacts_dir().expect("artifacts");
+        let man = Manifest::load(&dir.join("mlp-mnist.manifest.json")).unwrap();
+        let c = MuppetController::new(&man, MuppetHyper::default());
+        let qp = c.qparams();
+        for l in 0..2 * man.num_layers {
+            let scale = qp[l * 5];
+            assert_eq!(scale.log2().fract(), 0.0, "scale {scale} not 2^k");
+        }
+    }
+}

@@ -1,0 +1,340 @@
+//! Analytical performance model (sec. 4.1.2, eqs. 6–9).
+//!
+//! The paper's speedups/model sizes/memory are NOT wall-clock: fixed-point
+//! hardware was unavailable to the authors, so costs are computed from
+//! per-layer MAdds weighted by word length and sparsity, exactly as here.
+//! We reimplement the model verbatim (including its stated quirks: sz and
+//! mem ignore tensor dimensions, which cancels in the SZ/MEM ratios when
+//! comparing identical architectures) and add dimension-weighted variants.
+
+use crate::metrics::RunRecord;
+use crate::runtime::manifest::LayerDesc;
+
+/// Eq. 6: PushDown cost bound for one layer at one switch-evaluation:
+/// 2 * log2(32-8) * r * 3 * prod(dims).
+pub fn ops_pushdown(resolution: u32, weight_elems: u64) -> f64 {
+    2.0 * (24.0f64).log2() * resolution as f64 * 3.0 * weight_elems as f64
+}
+
+/// Eq. 7: PushUp cost bound: (lb + 1) * prod(dims) + 1.
+pub fn ops_pushup(lookback: u32, weight_elems: u64) -> f64 {
+    (lookback as f64 + 1.0) * weight_elems as f64 + 1.0
+}
+
+/// Eq. 8: quantized training cost over a recorded run:
+/// sum_i sum_l ops^l * (sp_i^l * WL_i^l + 32/accs).
+/// The float32 baseline is the same formula with sp = 1, WL = 32.
+pub fn train_costs(layers: &[LayerDesc], run: &RunRecord) -> f64 {
+    let accs = run.accs.max(1) as f64;
+    let mut total = 0.0;
+    for (wl_row, nz_row) in run.layer_wl.iter().zip(&run.layer_nz) {
+        for (l, desc) in layers.iter().enumerate() {
+            let wl = wl_row[l] as f64;
+            let sp = nz_row[l] as f64; // non-zero fraction
+            total += desc.madds as f64 * (sp * wl + 32.0 / accs);
+        }
+    }
+    total
+}
+
+/// Float32 baseline cost for the same number of steps (sp=1, WL=32).
+pub fn train_costs_float32(layers: &[LayerDesc], steps: usize, accs: u32) -> f64 {
+    let accs = accs.max(1) as f64;
+    let per_step: f64 = layers
+        .iter()
+        .map(|d| d.madds as f64 * (32.0 + 32.0 / accs))
+        .sum();
+    per_step * steps as f64
+}
+
+/// Eq. 9: AdaPT's own overhead:
+/// sum_i sum_l 32 * (sp * ops_pd + ops_pu) / (accs * lb * bs).
+///
+/// Deviation from the paper (documented in DESIGN.md/EXPERIMENTS.md): the
+/// printed eq. 9 omits the batch-size division, but eq. 8's training cost is
+/// in per-SAMPLE MAdds while PushDown/PushUp run once per BATCH window; read
+/// verbatim, the overhead of a 4M-parameter fc layer would exceed its own
+/// training cost and SU could never reach the paper's reported 1.13–1.42.
+/// Dividing by bs converts the once-per-window host work into the same
+/// per-sample units — the only dimensionally consistent reading that
+/// reproduces the published SU band.
+pub fn adapt_overhead(layers: &[LayerDesc], run: &RunRecord) -> f64 {
+    if run.layer_lb.is_empty() || run.layer_res.is_empty() {
+        return 0.0;
+    }
+    let accs = run.accs.max(1) as f64 * run.batch.max(1) as f64;
+    let mut total = 0.0;
+    for ((lb_row, res_row), nz_row) in run
+        .layer_lb
+        .iter()
+        .zip(&run.layer_res)
+        .zip(&run.layer_nz)
+    {
+        for (l, desc) in layers.iter().enumerate() {
+            let lb = lb_row[l].max(1) as f64;
+            let pd = ops_pushdown(res_row[l], desc.weight_elems);
+            let pu = ops_pushup(lb_row[l], desc.weight_elems);
+            total += 32.0 * (nz_row[l] as f64 * pd + pu) / (accs * lb);
+        }
+    }
+    total
+}
+
+/// Training speedup SU = (bs_other * costs_other) / (bs_ours * costs_ours).
+/// AdaPT's overhead is included in `ours`, never in `other`.
+pub fn speedup(
+    bs_ours: usize,
+    costs_ours: f64,
+    overhead_ours: f64,
+    bs_other: usize,
+    costs_other: f64,
+) -> f64 {
+    (bs_other as f64 * costs_other) / (bs_ours as f64 * (costs_ours + overhead_ours))
+}
+
+/// Paper sz (dimension-free): sum_l sp_n^l * WL_n^l at the final step.
+pub fn model_size_paper(run: &RunRecord) -> f64 {
+    match (run.layer_wl.last(), run.layer_nz.last()) {
+        (Some(wl), Some(nz)) => wl
+            .iter()
+            .zip(nz)
+            .map(|(&w, &s)| s as f64 * w as f64)
+            .sum(),
+        _ => 0.0,
+    }
+}
+
+/// Dimension-weighted model size in bits (what an ASIC would actually store).
+pub fn model_size_bits(layers: &[LayerDesc], run: &RunRecord) -> f64 {
+    match (run.layer_wl.last(), run.layer_nz.last()) {
+        (Some(wl), Some(nz)) => layers
+            .iter()
+            .enumerate()
+            .map(|(l, d)| nz[l] as f64 * wl[l] as f64 * d.weight_elems as f64)
+            .sum(),
+        _ => 0.0,
+    }
+}
+
+/// SZ = sz_ours / sz_float32 (float32: sp=1, WL=32 per layer).
+pub fn size_ratio(run: &RunRecord) -> f64 {
+    let ours = model_size_paper(run);
+    let f32_sz = 32.0 * run.num_layers as f64;
+    ours / f32_sz
+}
+
+/// mem (paper): average over steps of sum_l (sp*WL + 32); the +32 is the
+/// float32 master copy AdaPT keeps during training.
+pub fn mem_paper(run: &RunRecord) -> f64 {
+    if run.layer_wl.is_empty() {
+        return 0.0;
+    }
+    let mut acc = 0.0;
+    for (wl_row, nz_row) in run.layer_wl.iter().zip(&run.layer_nz) {
+        for (w, s) in wl_row.iter().zip(nz_row) {
+            acc += *s as f64 * *w as f64 + 32.0;
+        }
+    }
+    acc / run.layer_wl.len() as f64
+}
+
+/// MEM = mem_ours / mem_float32 where float32 training stores one f32 copy:
+/// mem_f32 = 32 * L. MEM > 1 reflects the master-copy overhead (fig. 7).
+pub fn mem_ratio(run: &RunRecord) -> f64 {
+    mem_paper(run) / (32.0 * run.num_layers as f64)
+}
+
+/// Inference cost: forward MAdds weighted by final WL and sparsity (no
+/// backward pass, no AdaPT overhead — sec. 4.2.2).
+pub fn inference_cost(layers: &[LayerDesc], run: &RunRecord) -> f64 {
+    match (run.layer_wl.last(), run.layer_nz.last()) {
+        (Some(wl), Some(nz)) => layers
+            .iter()
+            .enumerate()
+            .map(|(l, d)| d.madds as f64 * nz[l] as f64 * wl[l] as f64)
+            .sum(),
+        _ => 0.0,
+    }
+}
+
+pub fn inference_cost_float32(layers: &[LayerDesc]) -> f64 {
+    layers.iter().map(|d| d.madds as f64 * 32.0).sum()
+}
+
+/// Inference speedup of the trained quantized+sparse model vs float32.
+pub fn inference_speedup(layers: &[LayerDesc], run: &RunRecord) -> f64 {
+    inference_cost_float32(layers) / inference_cost(layers, run)
+}
+
+/// Per-step relative computational cost series (fig. 8): quantized step cost
+/// divided by the float32 step cost.
+pub fn relative_cost_series(layers: &[LayerDesc], run: &RunRecord) -> Vec<f64> {
+    let accs = run.accs.max(1) as f64;
+    let f32_step: f64 = layers
+        .iter()
+        .map(|d| d.madds as f64 * (32.0 + 32.0 / accs))
+        .sum();
+    run.layer_wl
+        .iter()
+        .zip(&run.layer_nz)
+        .map(|(wl_row, nz_row)| {
+            let c: f64 = layers
+                .iter()
+                .enumerate()
+                .map(|(l, d)| d.madds as f64 * (nz_row[l] as f64 * wl_row[l] as f64 + 32.0 / accs))
+                .sum();
+            c / f32_step
+        })
+        .collect()
+}
+
+/// Per-step relative memory series (fig. 7).
+pub fn relative_mem_series(run: &RunRecord) -> Vec<f64> {
+    let f32_mem = 32.0 * run.num_layers as f64;
+    run.layer_wl
+        .iter()
+        .zip(&run.layer_nz)
+        .map(|(wl_row, nz_row)| {
+            let m: f64 = wl_row
+                .iter()
+                .zip(nz_row)
+                .map(|(&w, &s)| s as f64 * w as f64 + 32.0)
+                .sum();
+            m / f32_mem
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::StepRow;
+
+    fn layers() -> Vec<LayerDesc> {
+        // realistic madds/weight ratios: conv madds = elems * spatial (~1k),
+        // dense madds = elems (the overhead amortisation in eq. 9 relies on
+        // this, exactly as in the paper's AlexNet/ResNet20 workloads)
+        vec![
+            LayerDesc {
+                name: "conv".into(),
+                kind: "conv".into(),
+                madds: 1_024_000, // 1024 output px * 1000 weights
+                weight_elems: 1000,
+                fan_in: 9,
+            },
+            LayerDesc {
+                name: "fc".into(),
+                kind: "dense".into(),
+                madds: 50_000,
+                weight_elems: 50_000,
+                fan_in: 100,
+            },
+        ]
+    }
+
+    fn run(wl: u8, nz: f32, steps: usize) -> RunRecord {
+        RunRecord {
+            name: "t".into(),
+            mode: "adapt".into(),
+            batch: 32,
+            accs: 1,
+            epochs: 1,
+            steps_per_epoch: steps,
+            num_layers: 2,
+            steps: vec![StepRow { loss: 1.0, ce: 1.0, acc: 0.5 }; steps],
+            layer_wl: vec![vec![wl; 2]; steps],
+            layer_nz: vec![vec![nz; 2]; steps],
+            layer_lb: vec![vec![50; 2]; steps],
+            layer_res: vec![vec![100; 2]; steps],
+            evals: vec![],
+            switches: vec![],
+            wall_secs: 0.0,
+        }
+    }
+
+    #[test]
+    fn float32_speedup_is_one() {
+        let l = layers();
+        let r = run(32, 1.0, 10);
+        let ours = train_costs(&l, &r);
+        let other = train_costs_float32(&l, 10, 1);
+        assert!((ours - other).abs() < 1e-9);
+        assert!((speedup(32, ours, 0.0, 32, other) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantized_training_is_cheaper() {
+        let l = layers();
+        let r = run(12, 0.8, 10);
+        let ours = train_costs(&l, &r);
+        let f32c = train_costs_float32(&l, 10, 1);
+        assert!(ours < f32c);
+        let su = speedup(32, ours, adapt_overhead(&l, &r), 32, f32c);
+        assert!(su > 1.0, "SU {su}");
+        // hand check: per step per layer f32 = 32+32=64 units of madds;
+        // ours = 0.8*12 + 32 = 41.6 (+overhead) -> SU in (1, 64/41.6]
+        assert!(su <= 64.0 / 41.6 + 1e-9);
+    }
+
+    #[test]
+    fn overhead_positive_and_small() {
+        let l = layers();
+        let r = run(12, 0.8, 100);
+        let oh = adapt_overhead(&l, &r);
+        let cost = train_costs(&l, &r);
+        assert!(oh > 0.0);
+        assert!(oh < 0.25 * cost, "overhead {oh} vs cost {cost}");
+    }
+
+    #[test]
+    fn baseline_runs_have_zero_overhead() {
+        let l = layers();
+        let mut r = run(32, 1.0, 10);
+        r.layer_lb.clear();
+        r.layer_res.clear();
+        assert_eq!(adapt_overhead(&l, &r), 0.0);
+    }
+
+    #[test]
+    fn ratios_match_hand_computation() {
+        let r = run(16, 0.5, 4);
+        // SZ = sum(0.5*16)/ (32*2) = 16/64 = 0.25
+        assert!((size_ratio(&r) - 0.25).abs() < 1e-12);
+        // MEM = sum(0.5*16+32)/(32*2) = 80/64 = 1.25
+        assert!((mem_ratio(&r) - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inference_speedup_reflects_wl_and_sparsity() {
+        let l = layers();
+        let r = run(8, 0.5, 2);
+        // 32 / (0.5*8) = 8
+        assert!((inference_speedup(&l, &r) - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn series_lengths_and_monotonic_effect() {
+        let l = layers();
+        let r = run(12, 0.8, 7);
+        assert_eq!(relative_cost_series(&l, &r).len(), 7);
+        assert_eq!(relative_mem_series(&r).len(), 7);
+        assert!(relative_cost_series(&l, &r)[0] < 1.0);
+        assert!(relative_mem_series(&r)[0] > 1.0);
+    }
+
+    #[test]
+    fn eq6_eq7_formulas() {
+        assert!((ops_pushdown(100, 10) - 2.0 * (24.0f64).log2() * 100.0 * 30.0).abs() < 1e-9);
+        assert!((ops_pushup(50, 10) - (51.0 * 10.0 + 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gradient_accumulation_reduces_backward_share() {
+        let l = layers();
+        let mut r1 = run(12, 0.8, 10);
+        r1.accs = 1;
+        let mut r4 = run(12, 0.8, 10);
+        r4.accs = 4;
+        assert!(train_costs(&l, &r4) < train_costs(&l, &r1));
+    }
+}

@@ -1,0 +1,186 @@
+//! The PushUp operation (alg. 4): given the minimal lossless format from
+//! PushDown, add enough precision for the network to KEEP learning, based
+//! on the gradient diversity of the last lb^l batches (eq. 3, 4).
+
+use crate::fixedpoint::format::{FixedPointFormat, WL_MAX};
+
+/// Global suggestion-combination strategy (eq. 4), adapted by eq. 5.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    Min,
+    Mean,
+    Max,
+}
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Min => "min",
+            Strategy::Mean => "mean",
+            Strategy::Max => "max",
+        }
+    }
+}
+
+/// Gradient diversity (eq. 3): sum of per-batch gradient L2 norms over the
+/// window divided by the norm of the summed gradient. >= 1 by the triangle
+/// inequality; ~sqrt(window) for uncorrelated gradients; ~1 when gradients
+/// all point the same way (still descending -> low precision suffices).
+pub fn gradient_diversity(sum_of_norms: f32, norm_of_sum: f32) -> f64 {
+    if norm_of_sum <= 0.0 || !norm_of_sum.is_finite() || !sum_of_norms.is_finite() {
+        return f64::INFINITY;
+    }
+    (sum_of_norms / norm_of_sum) as f64
+}
+
+/// log-mapped diversity (the paper's delta-s-tilde): log Δs when finite and
+/// positive, 1 otherwise.
+pub fn log_diversity(ds: f64) -> f64 {
+    if ds > 0.0 && ds.is_finite() {
+        ds.ln()
+    } else {
+        1.0
+    }
+}
+
+/// The two precision-increase suggestions of sec. 3.3.
+pub fn suggestions(ds: f64, fl_min: u8) -> (u32, u32) {
+    let l = log_diversity(ds);
+    // s1 = max(ceil(1 / (log Δs - 1)), 1): blows up near log Δs = 1 (treat
+    // the pole and the negative branch as "smallest possible bump").
+    let s1 = {
+        let d = l - 1.0;
+        if d <= 0.0 {
+            1u32
+        } else {
+            let v = (1.0 / d).ceil();
+            if v.is_finite() {
+                (v as u32).clamp(1, 32)
+            } else {
+                32
+            }
+        }
+    };
+    // s2 = max(min(32·log²Δs − 1, 32) − FL_min, 1)
+    let s2 = {
+        let v = (32.0 * l * l - 1.0).min(32.0) - fl_min as f64;
+        v.max(1.0) as u32
+    };
+    (s1, s2)
+}
+
+/// Combine suggestions per the global strategy (eq. 4).
+pub fn combine(s1: u32, s2: u32, st: Strategy) -> u32 {
+    match st {
+        Strategy::Min => s1.min(s2),
+        Strategy::Mean => (s1 + s2).div_ceil(2),
+        Strategy::Max => s1.max(s2),
+    }
+}
+
+/// Full PushUp: minimal format from PushDown + diversity -> next format.
+/// `buff` buffer bits guard against overflow after weight updates
+/// ("Dealing with Fixed-Points Limited Range").
+pub fn push_up(
+    min_fmt: FixedPointFormat,
+    ds: f64,
+    st: Strategy,
+    buff: u8,
+) -> FixedPointFormat {
+    let l = log_diversity(ds);
+    let s = if l > 0.0 {
+        let (s1, s2) = suggestions(ds, min_fmt.fl);
+        combine(s1, s2, st)
+    } else {
+        1
+    };
+    let fl = (min_fmt.fl as u32 + s).min((WL_MAX - buff.min(WL_MAX - 1)) as u32) as u8;
+    let wl = (fl as u32 + buff as u32)
+        .max(min_fmt.wl as u32)
+        .min(WL_MAX as u32) as u8;
+    FixedPointFormat::new(wl, fl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diversity_basics() {
+        // identical gradients: sum of norms == norm of sum -> Δs = 1
+        assert_eq!(gradient_diversity(10.0, 10.0), 1.0);
+        // opposing gradients: norm of sum small -> huge diversity
+        assert!(gradient_diversity(10.0, 0.1) > 50.0);
+        // degenerate
+        assert!(gradient_diversity(1.0, 0.0).is_infinite());
+        assert!(gradient_diversity(f32::NAN, 1.0).is_infinite());
+    }
+
+    #[test]
+    fn log_diversity_fallback() {
+        assert_eq!(log_diversity(f64::INFINITY), 1.0);
+        assert_eq!(log_diversity(0.0), 1.0);
+        assert_eq!(log_diversity(-3.0), 1.0);
+        assert!((log_diversity(std::f64::consts::E) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn suggestions_bounds() {
+        for &ds in &[1.0, 1.5, 2.0, std::f64::consts::E, 5.0, 50.0, 1e6] {
+            for fl in 0..24u8 {
+                let (s1, s2) = suggestions(ds, fl);
+                assert!((1..=32).contains(&s1), "s1={s1} ds={ds}");
+                assert!((1..=32).contains(&s2), "s2={s2} ds={ds} fl={fl}");
+            }
+        }
+    }
+
+    #[test]
+    fn higher_diversity_asks_for_more_bits() {
+        // noisy gradients (high Δs) => the s2 suggestion grows
+        let (_, lo) = suggestions(1.2, 4);
+        let (_, hi) = suggestions(8.0, 4);
+        assert!(hi >= lo, "{hi} < {lo}");
+    }
+
+    #[test]
+    fn combine_strategies_ordered() {
+        let (s1, s2) = (2u32, 9u32);
+        let mn = combine(s1, s2, Strategy::Min);
+        let me = combine(s1, s2, Strategy::Mean);
+        let mx = combine(s1, s2, Strategy::Max);
+        assert!(mn <= me && me <= mx);
+        assert_eq!(mn, 2);
+        assert_eq!(me, 6);
+        assert_eq!(mx, 9);
+    }
+
+    #[test]
+    fn push_up_respects_bounds_and_buffer() {
+        for &ds in &[1.0, 2.0, 10.0, f64::INFINITY] {
+            for wl_min in 2..=16u8 {
+                for fl_min in 0..wl_min {
+                    let min_fmt = FixedPointFormat::new(wl_min, fl_min);
+                    for &st in &[Strategy::Min, Strategy::Mean, Strategy::Max] {
+                        for &buff in &[4u8, 8] {
+                            let f = push_up(min_fmt, ds, st, buff);
+                            assert!(f.wl <= 32 && f.fl < f.wl);
+                            assert!(f.wl >= min_fmt.wl, "never below lossless width");
+                            assert!(f.fl >= min_fmt.fl.min(32 - buff));
+                            // buffer bits of headroom above the fraction
+                            assert!(f.wl as u32 >= (f.fl as u32 + buff as u32).min(32));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn push_up_strategy_monotone() {
+        let min_fmt = FixedPointFormat::new(6, 4);
+        let f_min = push_up(min_fmt, 6.0, Strategy::Min, 4);
+        let f_max = push_up(min_fmt, 6.0, Strategy::Max, 4);
+        assert!(f_max.fl >= f_min.fl);
+    }
+}

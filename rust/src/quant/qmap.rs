@@ -1,0 +1,375 @@
+//! The quantization mapping Q (alg. 1/2) and the per-layer PrecisionSwitch
+//! driver: this is the paper's central coordination loop, living entirely
+//! in the Rust L3 (the compiled L2 graph takes qparams as runtime inputs).
+
+use crate::fixedpoint::format::FixedPointFormat;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::step::{StepMetrics, TrainState};
+
+use super::pushdown::{push_down, PushDownScratch};
+use super::pushup::{gradient_diversity, push_up, Strategy};
+use super::schedule::{adapt_lookback, adapt_resolution, QuantHyper, StrategyCtl};
+
+/// One precision switch, recorded for figures 3/4 and the perf model.
+#[derive(Debug, Clone)]
+pub struct SwitchEvent {
+    pub step: u64,
+    pub layer: usize,
+    pub old: FixedPointFormat,
+    pub new: FixedPointFormat,
+    pub min_fmt: FixedPointFormat,
+    pub diversity: f64,
+    pub kl: f64,
+    pub lookback: u32,
+    pub resolution: u32,
+    pub strategy: Strategy,
+}
+
+/// Controller interface shared by AdaPT, MuPPET and the float32 baseline —
+/// the trainer is agnostic to which precision policy drives qparams.
+pub trait QuantController: Send {
+    fn name(&self) -> &'static str;
+    /// Current runtime qparams tensor, f32[2L, 5] flattened
+    /// (rows 0..L weights, rows L..2L activations).
+    fn qparams(&self) -> Vec<f32>;
+    /// Observe one completed step; may mutate gsum (window resets).
+    fn on_step(&mut self, state: &mut TrainState, metrics: &StepMetrics);
+    /// Epoch boundary hook (MuPPET switches here).
+    fn on_epoch_end(&mut self, _state: &mut TrainState, _epoch: usize) {}
+    /// Current per-layer word lengths (for metrics + perf model).
+    fn wordlengths(&self) -> Vec<u8>;
+    fn fraclengths(&self) -> Vec<u8>;
+    /// Current per-layer lookbacks/resolutions (AdaPT overhead, eq. 6/7);
+    /// empty for policies with no PushDown/PushUp overhead.
+    fn lookbacks(&self) -> Vec<u32> {
+        Vec::new()
+    }
+    fn resolutions(&self) -> Vec<u32> {
+        Vec::new()
+    }
+    /// Drain recorded switch events.
+    fn take_events(&mut self) -> Vec<SwitchEvent>;
+}
+
+// ---------------------------------------------------------------------------
+// AdaPT
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct LayerState {
+    fmt: FixedPointFormat,
+    lb: u32,
+    res: u32,
+    grad_norm_sum: f32,
+    batches: u32,
+}
+
+/// The AdaPT precision-switching mechanism (alg. 2): per-layer intra-epoch
+/// switches driven by PushDown (KL) + PushUp (gradient diversity).
+pub struct AdaptController {
+    pub hyper: QuantHyper,
+    layers: Vec<LayerState>,
+    kernel_param_idx: Vec<usize>,
+    strategy: StrategyCtl,
+    scratch: PushDownScratch,
+    events: Vec<SwitchEvent>,
+    step: u64,
+}
+
+impl AdaptController {
+    pub fn new(man: &Manifest, hyper: QuantHyper) -> Self {
+        let init = FixedPointFormat::new(hyper.initial_wl, hyper.initial_fl);
+        let mid_lb = (hyper.lb_lwr + hyper.lb_upr) / 2;
+        let mid_r = (hyper.r_lwr + hyper.r_upr) / 2;
+        let layers = (0..man.num_layers)
+            .map(|_| LayerState {
+                fmt: init,
+                lb: mid_lb,
+                res: mid_r,
+                grad_norm_sum: 0.0,
+                batches: 0,
+            })
+            .collect();
+        let strategy = StrategyCtl::new(Strategy::Mean, mid_lb as usize);
+        AdaptController {
+            hyper,
+            layers,
+            kernel_param_idx: man.kernel_indices(),
+            strategy,
+            scratch: PushDownScratch::default(),
+            events: Vec::new(),
+            step: 0,
+        }
+    }
+
+    /// Average lookback over layers — sets the strategy controller's window
+    /// (lb_avg in sec. 3.3).
+    fn avg_lookback(&self) -> usize {
+        (self.layers.iter().map(|l| l.lb as usize).sum::<usize>() / self.layers.len()).max(2)
+    }
+}
+
+impl QuantController for AdaptController {
+    fn name(&self) -> &'static str {
+        "adapt"
+    }
+
+    fn qparams(&self) -> Vec<f32> {
+        let l = self.layers.len();
+        let mut out = Vec::with_capacity(2 * l * 5);
+        for ls in &self.layers {
+            out.extend(ls.fmt.qparams_row(1.0)); // weights row
+        }
+        for ls in &self.layers {
+            out.extend(ls.fmt.qparams_row(1.0)); // activations row (same <WL,FL>)
+        }
+        out
+    }
+
+    fn on_step(&mut self, state: &mut TrainState, m: &StepMetrics) {
+        self.step += 1;
+        // A poisoned batch can surface as a NaN loss OR as NaN gradients
+        // with a finite loss (the quantizer's clamp sanitises NaN values in
+        // the forward pass, but not their gradients).
+        let poisoned = !m.loss.is_finite()
+            || m.grad_norm.iter().any(|g| !g.is_finite())
+            || m.gsum_norm.iter().any(|g| !g.is_finite());
+        if poisoned {
+            // failure injection path: poisoned batch — escalate strategy,
+            // keep formats, reset windows so the bad gradients don't linger.
+            self.strategy.observe(m.loss);
+            for (l, ls) in self.layers.iter_mut().enumerate() {
+                ls.grad_norm_sum = 0.0;
+                ls.batches = 0;
+                state.zero_gsum_layer(l);
+            }
+            return;
+        }
+        let st = match self.hyper.pin_strategy {
+            Some(pinned) => pinned,
+            None => {
+                let st = self.strategy.observe(m.loss);
+                let cap = self.avg_lookback();
+                self.strategy.set_cap(cap);
+                st
+            }
+        };
+
+        for l in 0..self.layers.len() {
+            // split-borrow the layer record
+            let (lb, res, batches, gns) = {
+                let ls = &mut self.layers[l];
+                ls.grad_norm_sum += m.grad_norm[l];
+                ls.batches += 1;
+                // adapt lookback/resolution every batch (alg. 2 ln. 4-5)
+                // using the running partial-window diversity
+                if ls.batches >= 2 {
+                    let ds = gradient_diversity(ls.grad_norm_sum, m.gsum_norm[l]);
+                    ls.lb = adapt_lookback(ls.lb, ds, &self.hyper);
+                    ls.res = adapt_resolution(ls.res, ls.lb, &self.hyper);
+                }
+                (ls.lb, ls.res, ls.batches, ls.grad_norm_sum)
+            };
+            if batches < lb {
+                continue;
+            }
+            // window complete: PrecisionSwitch on this layer (alg. 2 ln. 6-10)
+            let ds = gradient_diversity(gns, m.gsum_norm[l]);
+            let weights = &state.params[self.kernel_param_idx[l]];
+            let pd = push_down(weights, res as usize, self.hyper.kl_eps, &mut self.scratch);
+            let new_fmt = push_up(pd.fmt, ds, st, self.hyper.buff);
+            let ls = &mut self.layers[l];
+            let old = ls.fmt;
+            ls.fmt = new_fmt;
+            ls.grad_norm_sum = 0.0;
+            ls.batches = 0;
+            state.zero_gsum_layer(l);
+            self.events.push(SwitchEvent {
+                step: self.step,
+                layer: l,
+                old,
+                new: new_fmt,
+                min_fmt: pd.fmt,
+                diversity: ds,
+                kl: pd.kl,
+                lookback: lb,
+                resolution: res,
+                strategy: st,
+            });
+        }
+    }
+
+    fn wordlengths(&self) -> Vec<u8> {
+        self.layers.iter().map(|l| l.fmt.wl).collect()
+    }
+
+    fn fraclengths(&self) -> Vec<u8> {
+        self.layers.iter().map(|l| l.fmt.fl).collect()
+    }
+
+    fn lookbacks(&self) -> Vec<u32> {
+        self.layers.iter().map(|l| l.lb).collect()
+    }
+
+    fn resolutions(&self) -> Vec<u32> {
+        self.layers.iter().map(|l| l.res).collect()
+    }
+
+    fn take_events(&mut self) -> Vec<SwitchEvent> {
+        std::mem::take(&mut self.events)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// float32 baseline
+// ---------------------------------------------------------------------------
+
+/// Plain float32 SGD (the paper's baseline): quantization disabled via the
+/// qparams enable flag; the identical artifact executes, so measured
+/// accuracy deltas isolate the quantization policy.
+pub struct Float32Controller {
+    num_layers: usize,
+}
+
+impl Float32Controller {
+    pub fn new(man: &Manifest) -> Self {
+        Float32Controller {
+            num_layers: man.num_layers,
+        }
+    }
+}
+
+impl QuantController for Float32Controller {
+    fn name(&self) -> &'static str {
+        "float32"
+    }
+
+    fn qparams(&self) -> Vec<f32> {
+        let row = FixedPointFormat::full().qparams_row(0.0);
+        let mut row32 = row;
+        row32[4] = 32.0; // report WL=32 for the penalty/perf model
+        (0..2 * self.num_layers).flat_map(|_| row32).collect()
+    }
+
+    fn on_step(&mut self, _state: &mut TrainState, _m: &StepMetrics) {}
+
+    fn wordlengths(&self) -> Vec<u8> {
+        vec![32; self.num_layers]
+    }
+
+    fn fraclengths(&self) -> Vec<u8> {
+        vec![0; self.num_layers]
+    }
+
+    fn take_events(&mut self) -> Vec<SwitchEvent> {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn mlp_manifest() -> Manifest {
+        // reuse the checked-in artifact manifest when present; otherwise a
+        // tiny synthetic one
+        if let Ok(dir) = crate::runtime::artifacts_dir() {
+            if let Ok(m) = Manifest::load(&dir.join("mlp-mnist.manifest.json")) {
+                return m;
+            }
+        }
+        panic!("artifacts required for qmap tests: run `make artifacts`");
+    }
+
+    fn fake_metrics(l: usize, loss: f32, gn: f32, gsn: f32) -> StepMetrics {
+        StepMetrics {
+            loss,
+            ce: loss,
+            acc: 0.5,
+            grad_norm: vec![gn; l],
+            gsum_norm: vec![gsn; l],
+            sparsity: vec![0.1; l],
+            act_absmax: vec![1.0; l],
+        }
+    }
+
+    fn fake_state(man: &Manifest) -> TrainState {
+        TrainState {
+            params: crate::init::init_params(man, crate::init::Initializer::Tnvs, 1.0, 0),
+            gsum: crate::init::init_gsum(man),
+            bn: crate::init::init_bn(man),
+            step: 0,
+        }
+    }
+
+    #[test]
+    fn starts_at_8_4_and_switches_after_window() {
+        let man = mlp_manifest();
+        let h = QuantHyper::default().scaled(0.1); // lb in [3,10]
+        let mut c = AdaptController::new(&man, h);
+        assert_eq!(c.wordlengths(), vec![8; man.num_layers]);
+        let mut st = fake_state(&man);
+        // diverse gradients: sum-of-norms 10x norm-of-sum
+        for i in 0..30 {
+            let m = fake_metrics(man.num_layers, 2.0 - 0.01 * i as f32, 1.0, 3.0);
+            c.on_step(&mut st, &m);
+        }
+        assert!(
+            !c.take_events().is_empty(),
+            "no precision switch after 30 steps with lb<=10"
+        );
+        // formats changed away from the initial guess
+        assert_ne!(c.wordlengths(), vec![8; man.num_layers]);
+    }
+
+    #[test]
+    fn window_resets_gsum_for_switched_layer() {
+        let man = mlp_manifest();
+        let h = QuantHyper::default().scaled(0.08);
+        let mut c = AdaptController::new(&man, h);
+        let mut st = fake_state(&man);
+        st.gsum[0].iter_mut().for_each(|v| *v = 1.0);
+        for i in 0..30 {
+            let m = fake_metrics(man.num_layers, 2.0 - 0.01 * i as f32, 1.0, 2.0);
+            c.on_step(&mut st, &m);
+        }
+        assert!(
+            st.gsum[0].iter().all(|&v| v == 0.0),
+            "gsum not reset after switch"
+        );
+    }
+
+    #[test]
+    fn qparams_layout() {
+        let man = mlp_manifest();
+        let c = AdaptController::new(&man, QuantHyper::default());
+        let qp = c.qparams();
+        assert_eq!(qp.len(), 2 * man.num_layers * 5);
+        // initial <8,4>: scale 16, qmin -128, qmax 127, enable 1, wl 8
+        assert_eq!(&qp[0..5], &[16.0, -128.0, 127.0, 1.0, 8.0]);
+    }
+
+    #[test]
+    fn nan_loss_resets_windows_not_formats() {
+        let man = mlp_manifest();
+        let mut c = AdaptController::new(&man, QuantHyper::default().scaled(0.1));
+        let mut st = fake_state(&man);
+        let wl_before = c.wordlengths();
+        let m = fake_metrics(man.num_layers, f32::NAN, 1.0, 1.0);
+        c.on_step(&mut st, &m);
+        assert_eq!(c.wordlengths(), wl_before);
+        assert_eq!(c.layers[0].batches, 0);
+    }
+
+    #[test]
+    fn float32_controller_is_inert() {
+        let man = mlp_manifest();
+        let mut c = Float32Controller::new(&man);
+        let qp = c.qparams();
+        assert_eq!(qp[3], 0.0, "enable must be off");
+        assert_eq!(qp[4], 32.0);
+        assert_eq!(c.wordlengths(), vec![32; man.num_layers]);
+        assert!(c.take_events().is_empty());
+    }
+}

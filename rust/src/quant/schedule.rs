@@ -1,0 +1,211 @@
+//! Runtime adaptation of strategy, lookback and resolution (sec. 3.3,
+//! "Strategy, Resolution and Lookback").
+
+use super::pushup::Strategy;
+
+/// Hyperparameters of the precision-switching mechanism (sec. 4.1.1 values
+/// as defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct QuantHyper {
+    pub r_lwr: u32,
+    pub r_upr: u32,
+    pub lb_lwr: u32,
+    pub lb_upr: u32,
+    /// lookback momentum gamma in [0,1]
+    pub gamma: f64,
+    pub buff: u8,
+    pub kl_eps: f64,
+    pub initial_wl: u8,
+    pub initial_fl: u8,
+    /// Ablation hook: pin the PushUp combination strategy instead of the
+    /// loss-adaptive schedule of eq. 5 (None = adaptive, the paper default).
+    pub pin_strategy: Option<super::pushup::Strategy>,
+}
+
+impl Default for QuantHyper {
+    fn default() -> Self {
+        QuantHyper {
+            r_lwr: 50,
+            r_upr: 150,
+            lb_lwr: 25,
+            lb_upr: 100,
+            gamma: 0.33,
+            buff: 4,
+            kl_eps: super::pushdown::KL_EPS,
+            initial_wl: 8,
+            initial_fl: 4,
+            pin_strategy: None,
+        }
+    }
+}
+
+impl QuantHyper {
+    /// The paper's CIFAR-100 profile uses 8 buffer bits.
+    pub fn with_buff(mut self, buff: u8) -> Self {
+        self.buff = buff;
+        self
+    }
+
+    /// Scale the windows down for fast-profile runs (fewer batches/epoch)
+    /// while preserving the lb/r ratios.
+    pub fn scaled(mut self, f: f64) -> Self {
+        let s = |v: u32| ((v as f64 * f).round() as u32).max(2);
+        self.r_lwr = s(self.r_lwr);
+        self.r_upr = s(self.r_upr);
+        self.lb_lwr = s(self.lb_lwr);
+        self.lb_upr = s(self.lb_upr);
+        self
+    }
+}
+
+/// Lookback update (sec. 3.3): lb_new from diversity, then momentum.
+pub fn adapt_lookback(lb: u32, ds: f64, h: &QuantHyper) -> u32 {
+    let lb_new = if ds > 0.0 && ds.is_finite() {
+        (((h.lb_upr as f64) / ds).ceil() as u32).clamp(h.lb_lwr, h.lb_upr)
+    } else {
+        h.lb_upr
+    };
+    let blended = (lb_new as f64 * h.gamma + (1.0 - h.gamma) * lb as f64).ceil() as u32;
+    blended.clamp(h.lb_lwr, h.lb_upr)
+}
+
+/// Resolution update (eq. 5 second half): nudge r by +-1 when lookback
+/// saturates at either bound.
+pub fn adapt_resolution(r: u32, lb: u32, h: &QuantHyper) -> u32 {
+    let r = if lb >= h.lb_upr {
+        r + 1
+    } else if lb <= h.lb_lwr {
+        r.saturating_sub(1)
+    } else {
+        r
+    };
+    r.clamp(h.r_lwr, h.r_upr)
+}
+
+/// Global strategy adaptation (eq. 5 first half): escalate when the
+/// averaged recent loss stopped improving, de-escalate when it improves.
+#[derive(Debug)]
+pub struct StrategyCtl {
+    pub st: Strategy,
+    losses: Vec<f32>, // ring of recent batch losses
+    cap: usize,
+}
+
+impl StrategyCtl {
+    pub fn new(initial: Strategy, cap: usize) -> Self {
+        StrategyCtl {
+            st: initial,
+            losses: Vec::new(),
+            cap: cap.max(2),
+        }
+    }
+
+    pub fn set_cap(&mut self, cap: usize) {
+        self.cap = cap.max(2);
+        let n = self.losses.len();
+        if n > self.cap {
+            self.losses.drain(0..n - self.cap);
+        }
+    }
+
+    /// Record a batch loss; returns the (possibly new) strategy.
+    pub fn observe(&mut self, loss: f32) -> Strategy {
+        if !loss.is_finite() {
+            // divergence: demand maximum precision headroom
+            self.st = Strategy::Max;
+            return self.st;
+        }
+        self.losses.push(loss);
+        if self.losses.len() > self.cap {
+            self.losses.remove(0);
+        }
+        if self.losses.len() < self.cap {
+            return self.st;
+        }
+        let avg: f32 = self.losses.iter().sum::<f32>() / self.losses.len() as f32;
+        let latest = *self.losses.last().unwrap();
+        // |L_avg| <= |L_i|: recent loss not below window average -> stalled
+        self.st = if avg.abs() <= latest.abs() {
+            match self.st {
+                Strategy::Min => Strategy::Mean,
+                Strategy::Mean | Strategy::Max => Strategy::Max,
+            }
+        } else {
+            Strategy::Min
+        };
+        self.st
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookback_within_bounds_and_inverse_in_ds() {
+        let h = QuantHyper::default();
+        for &ds in &[0.5, 1.0, 2.0, 4.0, 10.0, 1000.0] {
+            let lb = adapt_lookback(50, ds, &h);
+            assert!((h.lb_lwr..=h.lb_upr).contains(&lb), "lb={lb}");
+        }
+        // higher diversity -> shorter target window (before momentum)
+        let lo = adapt_lookback(100, 8.0, &h);
+        let hi = adapt_lookback(100, 1.01, &h);
+        assert!(lo <= hi, "{lo} > {hi}");
+        // degenerate diversity falls back to the upper bound target
+        assert!(adapt_lookback(25, f64::INFINITY, &h) > 25);
+    }
+
+    #[test]
+    fn lookback_momentum_damps_jumps() {
+        let h = QuantHyper::default();
+        // target says 25 but momentum keeps us near the old 100
+        let lb = adapt_lookback(100, 100.0, &h);
+        assert!(lb > 70, "{lb}");
+    }
+
+    #[test]
+    fn resolution_nudges_and_clamps() {
+        let h = QuantHyper::default();
+        assert_eq!(adapt_resolution(100, h.lb_upr, &h), 101);
+        assert_eq!(adapt_resolution(100, h.lb_lwr, &h), 99);
+        assert_eq!(adapt_resolution(100, 50, &h), 100);
+        assert_eq!(adapt_resolution(h.r_upr, h.lb_upr, &h), h.r_upr);
+        assert_eq!(adapt_resolution(h.r_lwr, h.lb_lwr, &h), h.r_lwr);
+    }
+
+    #[test]
+    fn strategy_escalates_on_plateau() {
+        let mut ctl = StrategyCtl::new(Strategy::Min, 4);
+        for _ in 0..8 {
+            ctl.observe(1.0); // flat loss
+        }
+        assert_eq!(ctl.st, Strategy::Max);
+    }
+
+    #[test]
+    fn strategy_relaxes_when_improving() {
+        let mut ctl = StrategyCtl::new(Strategy::Max, 4);
+        let mut l = 4.0f32;
+        for _ in 0..10 {
+            ctl.observe(l);
+            l *= 0.8;
+        }
+        assert_eq!(ctl.st, Strategy::Min);
+    }
+
+    #[test]
+    fn strategy_max_on_divergence() {
+        let mut ctl = StrategyCtl::new(Strategy::Min, 4);
+        ctl.observe(f32::NAN);
+        assert_eq!(ctl.st, Strategy::Max);
+    }
+
+    #[test]
+    fn scaled_preserves_order() {
+        let h = QuantHyper::default().scaled(0.1);
+        assert!(h.lb_lwr < h.lb_upr);
+        assert!(h.r_lwr < h.r_upr);
+        assert!(h.lb_lwr >= 2);
+    }
+}

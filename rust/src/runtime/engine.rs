@@ -1,0 +1,215 @@
+//! PJRT engine: loads AOT HLO-text artifacts and executes them.
+//!
+//! Interchange is HLO *text* (see DESIGN.md / aot.py): jax >= 0.5 emits
+//! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! `HloModuleProto::from_text_file` reassigns ids and round-trips cleanly.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{Dtype, IoSpec, Manifest};
+
+/// Shared PJRT client (CPU). One per process.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        // ResNet-20's train-step HLO takes >5 min to compile at XLA's default
+        // backend optimization level on one core; level 1 compiles in seconds
+        // with measurably identical step time (see EXPERIMENTS.md §Perf).
+        // Respect an explicit user override.
+        if std::env::var_os("XLA_FLAGS").is_none() {
+            std::env::set_var("XLA_FLAGS", "--xla_backend_optimization_level=1");
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))
+    }
+
+    /// Load one named artifact triple from `dir`:
+    /// `<name>.train.hlo.txt`, `<name>.infer.hlo.txt`, `<name>.manifest.json`.
+    pub fn load_model(&self, dir: &Path, name: &str) -> Result<LoadedModel> {
+        let manifest = Manifest::load(&dir.join(format!("{name}.manifest.json")))?;
+        let train = self.compile_file(&dir.join(format!("{name}.train.hlo.txt")))?;
+        let infer = self.compile_file(&dir.join(format!("{name}.infer.hlo.txt")))?;
+        Ok(LoadedModel {
+            manifest,
+            train,
+            infer,
+        })
+    }
+}
+
+/// A compiled (train, infer) pair plus its manifest.
+pub struct LoadedModel {
+    pub manifest: Manifest,
+    pub train: xla::PjRtLoadedExecutable,
+    pub infer: xla::PjRtLoadedExecutable,
+}
+
+/// Locate the artifacts directory: $ADAPT_ARTIFACTS or ./artifacts upward.
+pub fn artifacts_dir() -> Result<PathBuf> {
+    if let Ok(p) = std::env::var("ADAPT_ARTIFACTS") {
+        return Ok(PathBuf::from(p));
+    }
+    let mut dir = std::env::current_dir()?;
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join(".stamp").exists() || cand.join("mlp-mnist.manifest.json").exists() {
+            return Ok(cand);
+        }
+        if !dir.pop() {
+            return Err(anyhow!(
+                "artifacts/ not found; run `make artifacts` or set ADAPT_ARTIFACTS"
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// literal packing
+// ---------------------------------------------------------------------------
+
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        return Err(anyhow!("literal_f32: {} elems for shape {shape:?}", data.len()));
+    }
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)
+        .map_err(|e| anyhow!("literal_f32: {e:?}"))
+}
+
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        return Err(anyhow!("literal_i32: {} elems for shape {shape:?}", data.len()));
+    }
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, bytes)
+        .map_err(|e| anyhow!("literal_i32: {e:?}"))
+}
+
+/// Execute a compiled module on literal inputs, unwrap the 1-tuple result
+/// (lowered with return_tuple=True) into per-output f32 vectors.
+pub fn execute_f32(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[xla::Literal],
+    out_specs: &[IoSpec],
+) -> Result<Vec<Vec<f32>>> {
+    let result = exe
+        .execute::<xla::Literal>(inputs)
+        .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+    let parts = result.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+    if parts.len() != out_specs.len() {
+        return Err(anyhow!(
+            "got {} outputs, manifest says {}",
+            parts.len(),
+            out_specs.len()
+        ));
+    }
+    parts
+        .into_iter()
+        .zip(out_specs)
+        .map(|(lit, spec)| {
+            let v = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("output {}: {e:?}", spec.name))?;
+            if v.len() != spec.elems() {
+                return Err(anyhow!(
+                    "output {}: {} elems, expected {}",
+                    spec.name,
+                    v.len(),
+                    spec.elems()
+                ));
+            }
+            Ok(v)
+        })
+        .collect()
+}
+
+/// Pack named train-step inputs in manifest order.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_train_inputs(
+    man: &Manifest,
+    params: &[Vec<f32>],
+    gsum: &[Vec<f32>],
+    bn: &[Vec<f32>],
+    x: &[f32],
+    y: &[i32],
+    qparams: &[f32],
+    hyper: &[f32; 8],
+) -> Result<Vec<xla::Literal>> {
+    let l = man.num_layers;
+    let mut lits = Vec::with_capacity(man.train_inputs.len());
+    let mut spec_it = man.train_inputs.iter();
+    for p in params {
+        let spec = spec_it.next().context("spec underflow")?;
+        lits.push(literal_f32(p, &spec.shape)?);
+    }
+    for g in gsum {
+        let spec = spec_it.next().context("spec underflow")?;
+        lits.push(literal_f32(g, &spec.shape)?);
+    }
+    for b in bn {
+        let spec = spec_it.next().context("spec underflow")?;
+        lits.push(literal_f32(b, &spec.shape)?);
+    }
+    let x_spec = spec_it.next().context("x spec")?;
+    lits.push(literal_f32(x, &x_spec.shape)?);
+    let y_spec = spec_it.next().context("y spec")?;
+    debug_assert_eq!(y_spec.dtype, Dtype::I32);
+    lits.push(literal_i32(y, &y_spec.shape)?);
+    let qp_spec = spec_it.next().context("qparams spec")?;
+    if qparams.len() != 2 * l * 5 {
+        return Err(anyhow!("qparams len {} != {}", qparams.len(), 2 * l * 5));
+    }
+    lits.push(literal_f32(qparams, &qp_spec.shape)?);
+    let hy_spec = spec_it.next().context("hyper spec")?;
+    lits.push(literal_f32(hyper, &hy_spec.shape)?);
+    debug_assert!(spec_it.next().is_none());
+    Ok(lits)
+}
+
+pub fn pack_infer_inputs(
+    man: &Manifest,
+    params: &[Vec<f32>],
+    bn: &[Vec<f32>],
+    x: &[f32],
+    qparams: &[f32],
+) -> Result<Vec<xla::Literal>> {
+    let mut lits = Vec::with_capacity(man.infer_inputs.len());
+    let mut spec_it = man.infer_inputs.iter();
+    for p in params {
+        let spec = spec_it.next().context("spec underflow")?;
+        lits.push(literal_f32(p, &spec.shape)?);
+    }
+    for b in bn {
+        let spec = spec_it.next().context("spec underflow")?;
+        lits.push(literal_f32(b, &spec.shape)?);
+    }
+    let x_spec = spec_it.next().context("x spec")?;
+    lits.push(literal_f32(x, &x_spec.shape)?);
+    let qp_spec = spec_it.next().context("qp spec")?;
+    lits.push(literal_f32(qparams, &qp_spec.shape)?);
+    Ok(lits)
+}

@@ -1,0 +1,267 @@
+//! Artifact manifest: the ordering contract between `python/compile/aot.py`
+//! (L2) and the Rust coordinator (L3). Parsed with the in-tree JSON parser.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: String,
+    pub layer: i64,
+    pub fan_in: usize,
+    pub quantizable: bool,
+}
+
+impl ParamInfo {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One quantizable layer — the unit the precision-switching mechanism and
+/// the analytical performance model operate on.
+#[derive(Debug, Clone)]
+pub struct LayerDesc {
+    pub name: String,
+    pub kind: String, // conv | dense | downsample
+    pub madds: u64,   // per-sample multiply-accumulates (perf model ops^l)
+    pub weight_elems: u64,
+    pub fan_in: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub model: String,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub classes: usize,
+    pub num_layers: usize,
+    pub params: Vec<ParamInfo>,
+    pub bn_state: Vec<IoSpec>,
+    pub layers: Vec<LayerDesc>,
+    pub train_inputs: Vec<IoSpec>,
+    pub train_outputs: Vec<IoSpec>,
+    pub infer_inputs: Vec<IoSpec>,
+    pub infer_outputs: Vec<IoSpec>,
+}
+
+fn io_list(j: &Json, key: &str) -> Result<Vec<IoSpec>> {
+    let arr = j
+        .req(key)
+        .map_err(|e| anyhow!("{e}"))?
+        .as_arr()
+        .ok_or_else(|| anyhow!("{key} not an array"))?;
+    arr.iter()
+        .map(|e| {
+            let dtype = match e.get("dtype").and_then(|d| d.as_str()).unwrap_or("f32") {
+                "i32" => Dtype::I32,
+                _ => Dtype::F32,
+            };
+            Ok(IoSpec {
+                name: e
+                    .req("name")
+                    .map_err(|e| anyhow!("{e}"))?
+                    .as_str()
+                    .unwrap_or_default()
+                    .to_string(),
+                shape: e
+                    .req("shape")
+                    .map_err(|e| anyhow!("{e}"))?
+                    .usize_arr()
+                    .unwrap_or_default(),
+                dtype,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let req_str = |k: &str| -> Result<String> {
+            Ok(j.req(k)
+                .map_err(|e| anyhow!("{e}"))?
+                .as_str()
+                .ok_or_else(|| anyhow!("{k} not a string"))?
+                .to_string())
+        };
+        let req_usize = |k: &str| -> Result<usize> {
+            j.req(k)
+                .map_err(|e| anyhow!("{e}"))?
+                .as_usize()
+                .ok_or_else(|| anyhow!("{k} not a number"))
+        };
+
+        let params = j
+            .req("params")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("params not an array"))?
+            .iter()
+            .map(|e| {
+                Ok(ParamInfo {
+                    name: e.req("name").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or_default().into(),
+                    shape: e.req("shape").map_err(|e| anyhow!("{e}"))?.usize_arr().unwrap_or_default(),
+                    kind: e.req("kind").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or_default().into(),
+                    layer: e.req("layer").map_err(|e| anyhow!("{e}"))?.as_i64().unwrap_or(-1),
+                    fan_in: e.req("fan_in").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap_or(1),
+                    quantizable: e.req("quantizable").map_err(|e| anyhow!("{e}"))?.as_bool().unwrap_or(false),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let layers = j
+            .req("layers")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("layers not an array"))?
+            .iter()
+            .map(|e| {
+                Ok(LayerDesc {
+                    name: e.req("name").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or_default().into(),
+                    kind: e.req("kind").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or_default().into(),
+                    madds: e.req("madds").map_err(|e| anyhow!("{e}"))?.as_i64().unwrap_or(0) as u64,
+                    weight_elems: e.req("weight_elems").map_err(|e| anyhow!("{e}"))?.as_i64().unwrap_or(0) as u64,
+                    fan_in: e.req("fan_in").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap_or(1),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let m = Manifest {
+            name: req_str("name")?,
+            model: req_str("model")?,
+            batch: req_usize("batch")?,
+            input_shape: j.req("input_shape").map_err(|e| anyhow!("{e}"))?.usize_arr().unwrap_or_default(),
+            classes: req_usize("classes")?,
+            num_layers: req_usize("num_layers")?,
+            params,
+            bn_state: io_list(&j, "bn_state")?,
+            layers,
+            train_inputs: io_list(&j, "train_inputs")?,
+            train_outputs: io_list(&j, "train_outputs")?,
+            infer_inputs: io_list(&j, "infer_inputs")?,
+            infer_outputs: io_list(&j, "infer_outputs")?,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    /// Structural invariants every artifact must satisfy.
+    pub fn validate(&self) -> Result<()> {
+        let l = self.num_layers;
+        if self.layers.len() != l {
+            return Err(anyhow!("layers len {} != num_layers {l}", self.layers.len()));
+        }
+        let q = self.params.iter().filter(|p| p.quantizable).count();
+        if q != l {
+            return Err(anyhow!("quantizable params {q} != num_layers {l}"));
+        }
+        let want_in = self.params.len() + l + self.bn_state.len() + 4;
+        if self.train_inputs.len() != want_in {
+            return Err(anyhow!(
+                "train_inputs {} != expected {want_in}",
+                self.train_inputs.len()
+            ));
+        }
+        let want_out = self.params.len() + l + self.bn_state.len() + 7;
+        if self.train_outputs.len() != want_out {
+            return Err(anyhow!(
+                "train_outputs {} != expected {want_out}",
+                self.train_outputs.len()
+            ));
+        }
+        // qparams row count must be 2L (weights + activations)
+        let qp = &self.train_inputs[self.train_inputs.len() - 2];
+        if qp.shape != vec![2 * l, 5] {
+            return Err(anyhow!("qparams shape {:?} != [2L,5]", qp.shape));
+        }
+        Ok(())
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(|p| p.elems()).sum()
+    }
+
+    /// Indices (into `params`) of the quantizable kernels, layer order.
+    pub fn kernel_indices(&self) -> Vec<usize> {
+        self.params
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.quantizable)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_manifest() -> String {
+        r#"{
+          "name":"t","model":"mlp","batch":2,"input_shape":[2,2,1],"classes":2,
+          "num_layers":1,
+          "params":[{"name":"w","shape":[4,2],"kind":"kernel","layer":0,"fan_in":4,"quantizable":true},
+                    {"name":"b","shape":[2],"kind":"bias","layer":-1,"fan_in":4,"quantizable":false}],
+          "bn_state":[],
+          "layers":[{"name":"fc","kind":"dense","madds":8,"weight_elems":8,"fan_in":4}],
+          "train_inputs":[{"name":"w","shape":[4,2],"dtype":"f32"},{"name":"b","shape":[2],"dtype":"f32"},
+            {"name":"gsum.w","shape":[4,2],"dtype":"f32"},
+            {"name":"x","shape":[2,2,2,1],"dtype":"f32"},{"name":"y","shape":[2],"dtype":"i32"},
+            {"name":"qparams","shape":[2,5],"dtype":"f32"},{"name":"hyper","shape":[8],"dtype":"f32"}],
+          "train_outputs":[{"name":"w","shape":[4,2],"dtype":"f32"},{"name":"b","shape":[2],"dtype":"f32"},
+            {"name":"gsum.w","shape":[4,2],"dtype":"f32"},
+            {"name":"loss","shape":[],"dtype":"f32"},{"name":"ce","shape":[],"dtype":"f32"},
+            {"name":"acc","shape":[],"dtype":"f32"},{"name":"grad_norm","shape":[1],"dtype":"f32"},
+            {"name":"gsum_norm","shape":[1],"dtype":"f32"},{"name":"sparsity","shape":[1],"dtype":"f32"},
+            {"name":"act_absmax","shape":[1],"dtype":"f32"}],
+          "infer_inputs":[],"infer_outputs":[]
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let m = Manifest::parse(&tiny_manifest()).unwrap();
+        assert_eq!(m.num_layers, 1);
+        assert_eq!(m.total_params(), 10);
+        assert_eq!(m.kernel_indices(), vec![0]);
+    }
+
+    #[test]
+    fn rejects_inconsistent_counts() {
+        let bad = tiny_manifest().replace("\"num_layers\":1", "\"num_layers\":2");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

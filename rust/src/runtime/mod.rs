@@ -1,0 +1,9 @@
+//! L3 <-> artifact runtime: PJRT client, manifest parsing, executable I/O.
+
+pub mod engine;
+pub mod manifest;
+pub mod step;
+
+pub use engine::{artifacts_dir, Engine, LoadedModel};
+pub use manifest::{Dtype, IoSpec, LayerDesc, Manifest, ParamInfo};
+pub use step::{Hyper, StepMetrics, TrainState};

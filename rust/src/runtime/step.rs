@@ -1,0 +1,166 @@
+//! Typed wrappers around the train/infer executables.
+
+use anyhow::Result;
+
+use super::engine::{execute_f32, pack_infer_inputs, pack_train_inputs, LoadedModel};
+
+/// Host-resident training state: the float32 master copy (alg. 1 ln. 3),
+/// gradient-diversity accumulators and BN statistics. Owned by the Rust
+/// coordinator between steps.
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    pub params: Vec<Vec<f32>>,
+    pub gsum: Vec<Vec<f32>>,
+    pub bn: Vec<Vec<f32>>,
+    pub step: u64,
+}
+
+impl TrainState {
+    pub fn zero_gsum(&mut self) {
+        for g in &mut self.gsum {
+            g.iter_mut().for_each(|v| *v = 0.0);
+        }
+    }
+
+    pub fn zero_gsum_layer(&mut self, layer: usize) {
+        self.gsum[layer].iter_mut().for_each(|v| *v = 0.0);
+    }
+}
+
+/// Per-step metrics returned by the train executable (manifest tail).
+#[derive(Debug, Clone)]
+pub struct StepMetrics {
+    pub loss: f32,
+    pub ce: f32,
+    pub acc: f32,
+    pub grad_norm: Vec<f32>,
+    pub gsum_norm: Vec<f32>,
+    pub sparsity: Vec<f32>,
+    pub act_absmax: Vec<f32>,
+}
+
+/// Hyper vector layout (matches train_step.py).
+#[derive(Debug, Clone, Copy)]
+pub struct Hyper {
+    pub lr: f32,
+    pub l1: f32,
+    pub l2: f32,
+    pub penalty: f32,
+    pub gnorm: bool,
+    pub bn_momentum: f32,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        Hyper {
+            lr: 0.05,
+            l1: 2e-4,
+            l2: 1e-4,
+            penalty: 1e-3,
+            gnorm: true,
+            bn_momentum: 0.1,
+        }
+    }
+}
+
+impl Hyper {
+    pub fn to_vec(&self, seed: u64) -> [f32; 8] {
+        [
+            self.lr,
+            self.l1,
+            self.l2,
+            self.penalty,
+            (seed % (1 << 24)) as f32,
+            if self.gnorm { 1.0 } else { 0.0 },
+            self.bn_momentum,
+            0.0,
+        ]
+    }
+}
+
+impl LoadedModel {
+    /// Run one training step, updating `state` in place; returns metrics.
+    pub fn train_step(
+        &self,
+        state: &mut TrainState,
+        x: &[f32],
+        y: &[i32],
+        qparams: &[f32],
+        hyper: &Hyper,
+    ) -> Result<StepMetrics> {
+        let man = &self.manifest;
+        let hy = hyper.to_vec(state.step);
+        let inputs = pack_train_inputs(man, &state.params, &state.gsum, &state.bn, x, y, qparams, &hy)?;
+        let mut outs = execute_f32(&self.train, &inputs, &man.train_outputs)?;
+
+        let l = man.num_layers;
+        let p = man.params.len();
+        let b = man.bn_state.len();
+        // unpack in reverse to pop cheaply
+        let act_absmax = outs.pop().unwrap();
+        let sparsity = outs.pop().unwrap();
+        let gsum_norm = outs.pop().unwrap();
+        let grad_norm = outs.pop().unwrap();
+        let acc = outs.pop().unwrap()[0];
+        let ce = outs.pop().unwrap()[0];
+        let loss = outs.pop().unwrap()[0];
+        debug_assert_eq!(outs.len(), p + l + b);
+        let bn_new = outs.split_off(p + l);
+        let gsum_new = outs.split_off(p);
+        state.params = outs;
+        state.gsum = gsum_new;
+        state.bn = bn_new;
+        state.step += 1;
+
+        Ok(StepMetrics {
+            loss,
+            ce,
+            acc,
+            grad_norm,
+            gsum_norm,
+            sparsity,
+            act_absmax,
+        })
+    }
+
+    /// Forward-only quantized inference; returns logits [batch * classes].
+    pub fn infer(
+        &self,
+        params: &[Vec<f32>],
+        bn: &[Vec<f32>],
+        x: &[f32],
+        qparams: &[f32],
+    ) -> Result<Vec<f32>> {
+        let man = &self.manifest;
+        let inputs = pack_infer_inputs(man, params, bn, x, qparams)?;
+        let outs = execute_f32(&self.infer, &inputs, &man.infer_outputs)?;
+        Ok(outs.into_iter().next().unwrap())
+    }
+
+    /// Accuracy of `infer` on one batch.
+    pub fn infer_accuracy(
+        &self,
+        params: &[Vec<f32>],
+        bn: &[Vec<f32>],
+        x: &[f32],
+        y: &[i32],
+        qparams: &[f32],
+    ) -> Result<f32> {
+        let logits = self.infer(params, bn, x, qparams)?;
+        let c = self.manifest.classes;
+        let mut correct = 0usize;
+        for (i, &label) in y.iter().enumerate() {
+            let row = &logits[i * c..(i + 1) * c];
+            let mut best = 0usize;
+            for j in 1..c {
+                if row[j] > row[best] {
+                    best = j;
+                }
+            }
+            if best == label as usize {
+                correct += 1;
+            }
+        }
+        Ok(correct as f32 / y.len() as f32)
+    }
+}

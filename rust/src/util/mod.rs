@@ -1,0 +1,4 @@
+//! Dependency-free substrates: JSON, PRNG (offline registry has no serde/rand).
+
+pub mod json;
+pub mod rng;

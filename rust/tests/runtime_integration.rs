@@ -1,0 +1,191 @@
+//! Integration: the real PJRT runtime driving real AOT artifacts.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use std::sync::Arc;
+
+use adapt::data::{Batcher, Dataset, SyntheticVision};
+use adapt::fixedpoint::FixedPointFormat;
+use adapt::init;
+use adapt::runtime::{artifacts_dir, Engine, Hyper, TrainState};
+
+fn qparams_uniform(l: usize, fmt: FixedPointFormat, enable: f32) -> Vec<f32> {
+    let row = fmt.qparams_row(enable);
+    (0..2 * l).flat_map(|_| row).collect()
+}
+
+#[test]
+fn mlp_trains_and_infers_through_pjrt() {
+    let dir = match artifacts_dir() {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("SKIP: {e}");
+            return;
+        }
+    };
+    let engine = Engine::cpu().expect("pjrt cpu client");
+    let model = engine.load_model(&dir, "mlp-mnist").expect("load mlp");
+    let man = &model.manifest;
+    assert_eq!(man.num_layers, 3);
+
+    let data = Arc::new(SyntheticVision::mnist_like(256, 0));
+    let mut batcher = Batcher::new(data.clone(), man.batch, 7);
+
+    let mut state = TrainState {
+        params: init::init_params(man, init::Initializer::Tnvs, 1.0, 1),
+        gsum: init::init_gsum(man),
+        bn: init::init_bn(man),
+        step: 0,
+    };
+    let qp = qparams_uniform(man.num_layers, FixedPointFormat::initial(), 1.0);
+    let hyper = Hyper {
+        lr: 0.08,
+        l1: 0.0,
+        l2: 0.0,
+        ..Default::default()
+    };
+
+    let mut first_ce = None;
+    let mut last_ce = 0.0;
+    for _ in 0..40 {
+        let b = batcher.next_batch();
+        let m = model
+            .train_step(&mut state, &b.x, &b.y, &qp, &hyper)
+            .expect("train step");
+        assert!(m.loss.is_finite(), "loss diverged");
+        assert_eq!(m.grad_norm.len(), man.num_layers);
+        assert_eq!(m.sparsity.len(), man.num_layers);
+        if first_ce.is_none() {
+            first_ce = Some(m.ce);
+        }
+        last_ce = m.ce;
+    }
+    let first = first_ce.unwrap();
+    assert!(
+        last_ce < 0.8 * first,
+        "no learning through PJRT: {first} -> {last_ce}"
+    );
+
+    // quantized inference path
+    let eval = Batcher::eval_batch(data.as_ref(), man.batch, 0);
+    let acc = model
+        .infer_accuracy(&state.params, &state.bn, &eval.x, &eval.y, &qp)
+        .expect("infer");
+    assert!(acc > 0.2, "quantized inference acc {acc}");
+}
+
+#[test]
+fn gsum_round_trips_through_device() {
+    let dir = match artifacts_dir() {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("SKIP: {e}");
+            return;
+        }
+    };
+    let engine = Engine::cpu().unwrap();
+    let model = engine.load_model(&dir, "mlp-mnist").unwrap();
+    let man = &model.manifest;
+    let data = SyntheticVision::mnist_like(64, 0);
+    let b = Batcher::eval_batch(&data, man.batch, 0);
+
+    let mut state = TrainState {
+        params: init::init_params(man, init::Initializer::Tnvs, 1.0, 2),
+        gsum: init::init_gsum(man),
+        bn: init::init_bn(man),
+        step: 0,
+    };
+    let qp = qparams_uniform(man.num_layers, FixedPointFormat::initial(), 1.0);
+    let hyper = Hyper {
+        lr: 0.0,
+        l1: 0.0,
+        l2: 0.0,
+        ..Default::default()
+    };
+    // lr = 0, same seed: two steps accumulate the same gradient twice
+    let m1 = model.train_step(&mut state, &b.x, &b.y, &qp, &hyper).unwrap();
+    state.step = 0; // replay same PRNG seed
+    let m2 = model.train_step(&mut state, &b.x, &b.y, &qp, &hyper).unwrap();
+    for (l, (&g1, &g2)) in m1.gsum_norm.iter().zip(&m2.gsum_norm).enumerate() {
+        assert!(
+            (g2 - 2.0 * g1).abs() < 1e-2 * g1.max(1.0),
+            "layer {l}: {g1} then {g2}"
+        );
+    }
+    // host-side reset works
+    state.zero_gsum();
+    assert!(state.gsum.iter().all(|g| g.iter().all(|&v| v == 0.0)));
+}
+
+#[test]
+fn float32_baseline_path_via_enable_flag() {
+    let dir = match artifacts_dir() {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("SKIP: {e}");
+            return;
+        }
+    };
+    let engine = Engine::cpu().unwrap();
+    let model = engine.load_model(&dir, "mlp-mnist").unwrap();
+    let man = &model.manifest;
+    let data = SyntheticVision::mnist_like(64, 0);
+    let b = Batcher::eval_batch(&data, man.batch, 0);
+    let mut state = TrainState {
+        params: init::init_params(man, init::Initializer::Tnvs, 1.0, 3),
+        gsum: init::init_gsum(man),
+        bn: init::init_bn(man),
+        step: 0,
+    };
+    // enable=0 -> sparsity reflects raw float zeros (essentially none)
+    let qp = qparams_uniform(man.num_layers, FixedPointFormat::initial(), 0.0);
+    let m = model
+        .train_step(&mut state, &b.x, &b.y, &qp, &Hyper::default())
+        .unwrap();
+    assert!(m.sparsity.iter().all(|&s| s < 0.01), "{:?}", m.sparsity);
+}
+
+#[test]
+fn host_quantizer_matches_device_quantizer() {
+    // Parity: quantize weights on host with FixedPointFormat (nearest) and
+    // through the infer executable's weight quantization; logits from
+    // pre-quantized weights with quantization DISABLED must equal logits
+    // from raw weights with quantization ENABLED.
+    let dir = match artifacts_dir() {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("SKIP: {e}");
+            return;
+        }
+    };
+    let engine = Engine::cpu().unwrap();
+    let model = engine.load_model(&dir, "mlp-mnist").unwrap();
+    let man = &model.manifest;
+    let data = SyntheticVision::mnist_like(64, 0);
+    let b = Batcher::eval_batch(&data, man.batch, 0);
+    let params = init::init_params(man, init::Initializer::Tnvs, 1.0, 4);
+    let bn = init::init_bn(man);
+    let fmt = FixedPointFormat::new(8, 6);
+
+    let l = man.num_layers;
+    // enabled for weights rows, disabled for activation rows — so the only
+    // quantization is the weight quantization we replicate on the host
+    let mut qp_on = Vec::new();
+    for i in 0..2 * l {
+        qp_on.extend(fmt.qparams_row(if i < l { 1.0 } else { 0.0 }));
+    }
+    let logits_dev = model.infer(&params, &bn, &b.x, &qp_on).unwrap();
+
+    let mut pre_q = params.clone();
+    for (pi, p) in man.params.iter().enumerate() {
+        if p.quantizable {
+            pre_q[pi] = adapt::fixedpoint::quantize_nr_slice(&params[pi], fmt);
+        }
+    }
+    let qp_off = qparams_uniform(l, fmt, 0.0);
+    let logits_host = model.infer(&pre_q, &bn, &b.x, &qp_off).unwrap();
+
+    for (i, (a, c)) in logits_dev.iter().zip(&logits_host).enumerate() {
+        assert!((a - c).abs() < 1e-4, "logit {i}: device {a} vs host {c}");
+    }
+}
