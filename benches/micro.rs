@@ -5,15 +5,23 @@
 //!
 //! These cover the host-side costs the analytical performance model bounds
 //! with eq. 6/7 (PushDown/PushUp), the literal packing on the PJRT request
-//! path, and the deployed sparse-inference substrate.
+//! path, and the deployed sparse-inference substrate. The PushDown section
+//! compares the fused single-pass engine against the naive reference path
+//! (before/after shape) and writes machine-readable medians + derived
+//! speedups to `BENCH_pushdown.json`.
 
 use std::time::Instant;
 
+use adapt::bench_support::{write_bench_json, BenchEntry};
 use adapt::data::{Batcher, SyntheticVision};
 use adapt::fixedpoint::{
-    quantization_kl, quantize_nr_slice, quantize_sr_slice, FixedPointFormat, SparseFixedTensor,
+    quantization_kl, quantize_nr_slice, quantize_sr_into, quantize_sr_slice, FixedPointFormat,
+    SparseFixedTensor,
 };
-use adapt::quant::{push_down, PushDownScratch, KL_EPS};
+use adapt::quant::{
+    format_kl, format_kl_prepared, push_down, push_down_layers, push_down_layers_seq,
+    push_down_naive, PushDownJob, PushDownScratch, KL_EPS,
+};
 use adapt::util::json::Json;
 use adapt::util::rng::Rng;
 
@@ -32,8 +40,45 @@ fn bench<F: FnMut()>(name: &str, iters: u32, mut f: F) -> f64 {
         .collect();
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let med = samples[2];
-    println!("{name:<44} {med:>10.4} ms/iter");
+    println!("{name:<52} {med:>10.4} ms/iter");
     med
+}
+
+fn gaussian(n: usize, sigma: f32, seed: u64) -> Vec<f32> {
+    let mut r = Rng::seed_from(seed);
+    (0..n).map(|_| r.normal() as f32 * sigma).collect()
+}
+
+/// Per-layer weight-tensor sizes of the paper's two conv nets (CIFAR
+/// variants) — the shapes the per-epoch whole-net switch walks over.
+fn alexnet_layer_sizes() -> Vec<usize> {
+    vec![
+        3 * 3 * 3 * 64,      // conv1
+        3 * 3 * 64 * 192,    // conv2
+        3 * 3 * 192 * 384,   // conv3
+        3 * 3 * 384 * 256,   // conv4
+        3 * 3 * 256 * 256,   // conv5
+        4 * 4 * 256 * 1024,  // fc1
+        1024 * 512,          // fc2
+        512 * 10,            // fc3
+    ]
+}
+
+fn resnet20_layer_sizes() -> Vec<usize> {
+    let mut sizes = vec![3 * 3 * 3 * 16]; // stem
+    for _ in 0..6 {
+        sizes.push(3 * 3 * 16 * 16); // stage 1
+    }
+    sizes.push(3 * 3 * 16 * 32);
+    for _ in 0..5 {
+        sizes.push(3 * 3 * 32 * 32); // stage 2
+    }
+    sizes.push(3 * 3 * 32 * 64);
+    for _ in 0..5 {
+        sizes.push(3 * 3 * 64 * 64); // stage 3
+    }
+    sizes.push(64 * 10); // fc
+    sizes
 }
 
 fn main() {
@@ -42,6 +87,14 @@ fn main() {
     let w_small: Vec<f32> = (0..65_536).map(|_| rng.normal() as f32 * 0.1).collect();
     let w_large: Vec<f32> = (0..1_048_576).map(|_| rng.normal() as f32 * 0.1).collect();
     let fmt = FixedPointFormat::initial();
+    let mut entries: Vec<BenchEntry> = Vec::new();
+    let mut derived: Vec<(String, f64)> = Vec::new();
+    let tracked = |entries: &mut Vec<BenchEntry>, name: &str, med: f64| {
+        entries.push(BenchEntry {
+            name: name.to_string(),
+            ms_per_iter: med,
+        });
+    };
 
     bench("quantize_nr 64k", 50, || {
         std::hint::black_box(quantize_nr_slice(&w_small, fmt));
@@ -53,19 +106,114 @@ fn main() {
     bench("quantize_sr 64k", 50, || {
         std::hint::black_box(quantize_sr_slice(&w_small, fmt, &mut sr_rng));
     });
+    let mut sr_buf = Vec::new();
+    bench("quantize_sr_into 64k (reused buffer)", 50, || {
+        quantize_sr_into(&w_small, fmt, &mut sr_rng, &mut sr_buf);
+        std::hint::black_box(sr_buf.len());
+    });
 
     let q = quantize_nr_slice(&w_small, fmt);
     bench("kl_divergence 64k @ r=100", 50, || {
         std::hint::black_box(quantization_kl(&w_small, &q, 100));
     });
 
+    // ---- PushDown: naive reference vs fused single-pass engine -----------
+    println!("-- PushDown engine: naive vs fused ------------------");
     let mut scratch = PushDownScratch::default();
-    bench("push_down 64k @ r=100 (full bisection)", 20, || {
+    let cand = FixedPointFormat::new(12, 9); // representative mid-bisection candidate
+
+    let name = "format_kl naive 64k @ r=100 (per-eval)";
+    let m = bench(name, 20, || {
+        std::hint::black_box(format_kl(&w_small, cand, 100, &mut scratch));
+    });
+    tracked(&mut entries, name, m);
+    let kl_naive = m;
+
+    assert!(scratch.prepare(&w_small, 100));
+    let name = "format_kl fused 64k @ r=100 (per-eval, 1 pass)";
+    let m = bench(name, 20, || {
+        std::hint::black_box(format_kl_prepared(&w_small, cand, &mut scratch));
+    });
+    tracked(&mut entries, name, m);
+    let kl_fused = m;
+
+    let name = "push_down naive 64k @ r=100 (full bisection)";
+    let m = bench(name, 10, || {
+        std::hint::black_box(push_down_naive(&w_small, 100, KL_EPS, &mut scratch));
+    });
+    tracked(&mut entries, name, m);
+    let pd64_naive = m;
+
+    let name = "push_down fused 64k @ r=100 (full bisection)";
+    let m = bench(name, 10, || {
         std::hint::black_box(push_down(&w_small, 100, KL_EPS, &mut scratch));
     });
-    bench("push_down 1M @ r=100 (full bisection)", 3, || {
+    tracked(&mut entries, name, m);
+    let pd64_fused = m;
+
+    let name = "push_down naive 1M @ r=100 (full bisection)";
+    let m = bench(name, 2, || {
+        std::hint::black_box(push_down_naive(&w_large, 100, KL_EPS, &mut scratch));
+    });
+    tracked(&mut entries, name, m);
+    let pd1m_naive = m;
+
+    let name = "push_down fused 1M @ r=100 (full bisection)";
+    let m = bench(name, 2, || {
         std::hint::black_box(push_down(&w_large, 100, KL_EPS, &mut scratch));
     });
+    tracked(&mut entries, name, m);
+    let pd1m_fused = m;
+
+    // ---- whole-net epoch switch: sequential vs parallel ------------------
+    println!("-- whole-net epoch switch (per-layer PushDown) ------");
+    for (net, sizes) in [
+        ("alexnet", alexnet_layer_sizes()),
+        ("resnet20", resnet20_layer_sizes()),
+    ] {
+        let tensors: Vec<Vec<f32>> = sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| gaussian(n, 0.1, 1000 + i as u64))
+            .collect();
+        let jobs: Vec<PushDownJob> = tensors
+            .iter()
+            .map(|w| PushDownJob {
+                weights: w,
+                resolution: 100,
+                eps: KL_EPS,
+            })
+            .collect();
+        let name_seq = format!("epoch switch {net} ({} layers) sequential", jobs.len());
+        let m_seq = bench(&name_seq, 2, || {
+            std::hint::black_box(push_down_layers_seq(&jobs));
+        });
+        tracked(&mut entries, &name_seq, m_seq);
+        let name_par = format!("epoch switch {net} ({} layers) parallel", jobs.len());
+        let m_par = bench(&name_par, 2, || {
+            std::hint::black_box(push_down_layers(&jobs));
+        });
+        tracked(&mut entries, &name_par, m_par);
+        derived.push((format!("epoch_switch_{net}_parallel_speedup"), m_seq / m_par));
+    }
+
+    derived.push(("format_kl_64k_speedup".to_string(), kl_naive / kl_fused));
+    derived.push(("push_down_64k_speedup".to_string(), pd64_naive / pd64_fused));
+    derived.push(("push_down_1m_speedup".to_string(), pd1m_naive / pd1m_fused));
+    println!(
+        "speedups: per-eval KL {:.2}x | push_down 64k {:.2}x | push_down 1M {:.2}x",
+        kl_naive / kl_fused,
+        pd64_naive / pd64_fused,
+        pd1m_naive / pd1m_fused
+    );
+    match write_bench_json(
+        std::path::Path::new("BENCH_pushdown.json"),
+        &entries,
+        &derived,
+    ) {
+        Ok(()) => println!("wrote BENCH_pushdown.json"),
+        Err(e) => eprintln!("could not write BENCH_pushdown.json: {e}"),
+    }
 
     // sparse deployment substrate
     let dense: Vec<f32> = (0..512 * 512)

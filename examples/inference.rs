@@ -83,6 +83,33 @@ fn main() -> anyhow::Result<()> {
         f32_bits as f64 / total_bits as f64
     );
 
+    // the stochastic-rounding exporter on the final layer, for comparison:
+    // SR preserves the weight mean in expectation where NR snaps small
+    // weights to zero (density typically a touch higher, same storage model)
+    {
+        let (pi, s_nr) = sparse_layers.last().unwrap();
+        let p = &man.params[*pi];
+        let w = &out.state.params[*pi];
+        let mut sr_rng = adapt::util::rng::Rng::seed_from(cfg.seed ^ 0x5E);
+        let mut sr_buf = Vec::new();
+        let s_sr = SparseFixedTensor::from_dense_sr(
+            w,
+            s_nr.rows,
+            s_nr.cols,
+            s_nr.fmt,
+            &mut sr_rng,
+            &mut sr_buf,
+        );
+        println!(
+            "  SR export ({:<12}): density {:>5.2} (NR {:>5.2}), {:>8} bits (NR {:>8})",
+            p.name,
+            s_sr.density(),
+            s_nr.density(),
+            s_sr.storage_bits(),
+            s_nr.storage_bits()
+        );
+    }
+
     // -- 2. serve batched requests through PJRT ------------------------------
     println!("\nserving {} batched inference requests…", 16);
     let qp = out.final_qparams.clone();

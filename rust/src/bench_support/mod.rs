@@ -8,7 +8,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::{Policy, TrainConfig};
 use crate::metrics::RunRecord;
@@ -173,6 +173,44 @@ pub fn manifest_for(artifacts: &Path, artifact: &str) -> Result<Manifest> {
 
 fn pct(x: f32) -> String {
     format!("{:.1}", 100.0 * x)
+}
+
+// ---------------------------------------------------------------------------
+// machine-readable micro-bench results
+// ---------------------------------------------------------------------------
+
+/// One named benchmark measurement (milliseconds per iteration).
+#[derive(Debug, Clone)]
+pub struct BenchEntry {
+    pub name: String,
+    pub ms_per_iter: f64,
+}
+
+/// Write micro-bench results as JSON (e.g. `BENCH_pushdown.json`):
+/// `results` maps bench name -> median ms/iter, `derived` carries computed
+/// ratios (speedups) so CI and future sessions can diff without re-parsing
+/// stdout.
+pub fn write_bench_json(
+    path: &Path,
+    entries: &[BenchEntry],
+    derived: &[(String, f64)],
+) -> Result<()> {
+    use crate::util::json::{num, Json};
+    use std::collections::BTreeMap;
+    let mut results = BTreeMap::new();
+    for e in entries {
+        results.insert(e.name.clone(), num(e.ms_per_iter));
+    }
+    let mut der = BTreeMap::new();
+    for (k, v) in derived {
+        der.insert(k.clone(), num(*v));
+    }
+    let mut top = BTreeMap::new();
+    top.insert("unit".to_string(), Json::Str("ms_per_iter".into()));
+    top.insert("results".to_string(), Json::Obj(results));
+    top.insert("derived".to_string(), Json::Obj(der));
+    std::fs::write(path, Json::Obj(top).to_string_pretty())
+        .with_context(|| format!("writing bench results {}", path.display()))
 }
 
 // ---------------------------------------------------------------------------
@@ -500,6 +538,7 @@ mod tests {
             evals: vec![(2, 0.4), (5, 0.6), (8, 0.9)],
             switches: vec![],
             wall_secs: 0.0,
+            switch_secs: 0.0,
         }
     }
 
@@ -532,6 +571,29 @@ mod tests {
         } else {
             panic!("wrong policy");
         }
+    }
+
+    #[test]
+    fn bench_json_round_trips() {
+        use crate::util::json::Json;
+        let dir = std::env::temp_dir().join("adapt_test_bench_json");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        let entries = vec![
+            BenchEntry { name: "a".into(), ms_per_iter: 1.25 },
+            BenchEntry { name: "b".into(), ms_per_iter: 0.5 },
+        ];
+        write_bench_json(&path, &entries, &[("a_over_b".into(), 2.5)]).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(
+            j.req("results").unwrap().req("a").unwrap().as_f64(),
+            Some(1.25)
+        );
+        assert_eq!(
+            j.req("derived").unwrap().req("a_over_b").unwrap().as_f64(),
+            Some(2.5)
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -280,7 +280,24 @@ pub fn train_with_data(
                 );
             }
         }
+        // Epoch boundary: AdaPT's whole-net PushDown re-sync (parallel per
+        // layer) / MuPPET's ladder switch. Wall time is recorded separately —
+        // it is the host-side overhead the perf model bounds with eq. 6/7.
+        let t_sync = Instant::now();
         controller.on_epoch_end(&mut state, epoch);
+        let sync_secs = t_sync.elapsed().as_secs_f64();
+        rec.switch_secs += sync_secs;
+        // only policies with PushDown overhead (non-empty lookbacks) have a
+        // meaningful sync cost to report
+        if cfg.log_every > 0 && !controller.lookbacks().is_empty() {
+            eprintln!(
+                "[{}/{}] epoch {epoch}: boundary sync {:.1} ms, wl {:?}",
+                cfg.artifact,
+                controller.name(),
+                sync_secs * 1e3,
+                controller.wordlengths()
+            );
+        }
         // ROP scheduling on the epoch's mean training loss (sec. 4.1)
         if let Some(sch) = &mut schedule {
             let tail = &rec.steps[rec.steps.len() - steps_per_epoch..];

@@ -115,6 +115,32 @@ impl FixedPointFormat {
     }
 }
 
+/// Branch-light round-half-to-even used by the fused quantize+bin kernel.
+///
+/// For |x| < 2^22 the classic magic-number trick applies: adding 1.5·2^23
+/// forces the intermediate into [2^23, 2^24), where the f32 ULP is exactly 1,
+/// so the IEEE default rounding (ties-to-even) of the addition IS the
+/// round-half-even we need; the subtraction is then exact. The tie parity is
+/// preserved because the magic constant is even. Outside that range the
+/// scalar reference takes over (|x| ≥ 2^23 is already integral; the
+/// [2^22, 2^23) band has representable halves but no valid magic constant).
+///
+/// Agrees with [`round_half_even`] on every input (NaN/±inf included), up to
+/// the sign of a zero result: negatives in (-0.5, -0.0] round to -0.0 via the
+/// scalar path but to +0.0 here. ±0.0 compare equal and scale/bin/clamp
+/// identically, so the fused engine stays count-exact with the naive path —
+/// asserted by the sweep below and the cross-format property tests in
+/// `rust/tests/quant_fused_parallel.rs`.
+#[inline]
+pub fn round_half_even_fast(x: f32) -> f32 {
+    const MAGIC: f32 = 12_582_912.0; // 1.5 * 2^23
+    if x.abs() < 4_194_304.0 {
+        (x + MAGIC) - MAGIC
+    } else {
+        round_half_even(x)
+    }
+}
+
 /// f32 round-half-to-even (Rust's `round()` rounds half away from zero;
 /// XLA/jnp round half to even, and the L1/L3 implementations must agree).
 #[inline]
@@ -189,6 +215,35 @@ mod tests {
         assert_eq!(round_half_even(-1.5), -2.0);
         assert_eq!(round_half_even(0.4), 0.0);
         assert_eq!(round_half_even(0.6), 1.0);
+    }
+
+    #[test]
+    fn fast_matches_reference() {
+        // dense sweep around every regime the magic-number trick must hit:
+        // subnormals, halves, the 2^22 branch point, the 2^23 integrality
+        // threshold, and non-finite inputs
+        let mut probes: Vec<f32> = vec![
+            0.0, -0.0, 0.25, -0.25, 0.5, -0.5, 0.75, -0.75, 1.5, -1.5, 2.5, -2.5,
+            4_194_303.5, -4_194_303.5, 4_194_304.5, -4_194_304.5, 6_291_456.5,
+            8_388_607.5, 8_388_608.0, -8_388_608.0, 1e30, -1e30,
+            f32::INFINITY, f32::NEG_INFINITY, f32::MIN_POSITIVE,
+        ];
+        let mut r = crate::util::rng::Rng::seed_from(17);
+        for _ in 0..20_000 {
+            probes.push((r.uniform_in(-10.0, 10.0)) as f32);
+            probes.push((r.uniform_in(-5e6, 5e6)) as f32);
+            let half = (r.uniform_in(-1e6, 1e6) as f32).trunc() + 0.5;
+            probes.push(half);
+        }
+        for x in probes {
+            let slow = round_half_even(x);
+            let fast = round_half_even_fast(x);
+            assert!(
+                slow == fast || (slow.is_nan() && fast.is_nan()),
+                "{x}: ref {slow} vs fast {fast}"
+            );
+        }
+        assert!(round_half_even_fast(f32::NAN).is_nan());
     }
 
     #[test]

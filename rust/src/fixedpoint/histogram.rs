@@ -15,16 +15,42 @@ pub struct Histogram {
     pub total: u64,
 }
 
+/// Pad a degenerate (hi <= lo) range open on the right. The pad must be
+/// RELATIVE to the magnitude: an absolute `lo + 1e-12` underflows back to
+/// `lo` in f32 for |lo| ≳ 1e-4, yielding a zero-width histogram whose bin
+/// math is 0/0 = NaN whenever a tensor is constant.
+#[inline]
+fn padded_range(lo: f32, hi: f32) -> (f32, f32) {
+    if hi > lo {
+        (lo, hi)
+    } else {
+        (lo, lo + lo.abs().max(1.0) * f32::EPSILON)
+    }
+}
+
 impl Histogram {
     pub fn new(lo: f32, hi: f32, bins: usize) -> Self {
         assert!(bins > 0);
-        let (lo, hi) = if hi > lo { (lo, hi) } else { (lo, lo + 1e-12) };
+        let (lo, hi) = padded_range(lo, hi);
         Histogram {
             lo,
             hi,
             counts: vec![0; bins],
             total: 0,
         }
+    }
+
+    /// Re-initialise in place for a new range/resolution without giving up
+    /// the counts allocation (the PushDown scratch reuses one candidate
+    /// histogram across every bisection eval of every layer).
+    pub fn reset(&mut self, lo: f32, hi: f32, bins: usize) {
+        assert!(bins > 0);
+        let (lo, hi) = padded_range(lo, hi);
+        self.lo = lo;
+        self.hi = hi;
+        self.counts.clear();
+        self.counts.resize(bins, 0);
+        self.total = 0;
     }
 
     #[inline]
@@ -137,6 +163,45 @@ mod tests {
         assert!(quantization_kl(&xs, &xs, 50) < 1e-12);
         let with_nan = vec![f32::NAN, 1.0];
         assert!(quantization_kl(&with_nan, &with_nan, 10).is_infinite());
+    }
+
+    #[test]
+    fn degenerate_range_pads_relative_to_magnitude() {
+        // the old absolute 1e-12 pad underflowed to lo for |lo| >= ~1e-4
+        for &lo in &[0.0f32, 0.25, -0.25, 1.0, -3.5, 1234.5, -1e6, 3e7] {
+            let h = Histogram::new(lo, lo, 8);
+            assert!(h.hi > h.lo, "zero-width histogram at lo={lo}");
+            // a constant tensor must bin cleanly (no NaN bin math)
+            let hc = Histogram::from_slice(&[lo; 64], lo, lo, 8);
+            assert_eq!(hc.total, 64);
+            assert_eq!(hc.counts.iter().sum::<u64>(), 64);
+        }
+    }
+
+    #[test]
+    fn constant_tensor_kl_is_finite() {
+        // regression: <constant 0.25> used to produce a zero-width histogram
+        let xs = vec![0.25f32; 500];
+        let kl = quantization_kl(&xs, &xs, 100);
+        assert!(kl.is_finite());
+        assert!(kl.abs() < 1e-9, "{kl}");
+        let ys = vec![-1234.5f32; 500];
+        assert!(quantization_kl(&ys, &ys, 100) < 1e-9);
+    }
+
+    #[test]
+    fn reset_reuses_allocation_and_matches_new() {
+        let mut h = Histogram::new(0.0, 1.0, 64);
+        for i in 0..64 {
+            h.add(i as f32 / 64.0);
+        }
+        let cap = h.counts.capacity();
+        h.reset(-2.0, 3.0, 32);
+        assert_eq!(h.counts.capacity(), cap, "reset must not reallocate");
+        assert_eq!(h.total, 0);
+        assert!(h.counts.iter().all(|&c| c == 0));
+        let fresh = Histogram::new(-2.0, 3.0, 32);
+        assert_eq!((h.lo, h.hi, h.counts.len()), (fresh.lo, fresh.hi, 32));
     }
 
     #[test]

@@ -7,5 +7,8 @@ pub mod sparse;
 
 pub use format::FixedPointFormat;
 pub use histogram::{kl_divergence, quantization_kl, Histogram};
-pub use quantize::{max_abs, quantize_nr_slice, quantize_sr_slice, zero_fraction};
+pub use quantize::{
+    max_abs, quantize_bin, quantize_nr_into, quantize_nr_slice, quantize_sr_into,
+    quantize_sr_slice, zero_fraction,
+};
 pub use sparse::SparseFixedTensor;

@@ -5,26 +5,61 @@
 //! `python/compile/kernels/fixedpoint.py` exactly; the parity is asserted by
 //! `rust/tests/parity.rs` against the compiled artifacts.
 
-use super::format::FixedPointFormat;
+use super::format::{round_half_even_fast, FixedPointFormat};
+use super::histogram::Histogram;
 use crate::util::rng::Rng;
 
 /// Nearest-rounding quantize of a whole tensor (deterministic).
 pub fn quantize_nr_slice(xs: &[f32], fmt: FixedPointFormat) -> Vec<f32> {
-    xs.iter().map(|&x| fmt.quantize_nr(x)).collect()
+    let mut out = Vec::new();
+    quantize_nr_into(xs, fmt, &mut out);
+    out
 }
 
-/// In-place nearest-rounding quantize into a reusable buffer (hot path for
-/// PushDown bisection: avoids an allocation per candidate format).
+/// In-place nearest-rounding quantize into a reusable buffer (avoids an
+/// allocation per call; the naive-reference PushDown path uses this).
 pub fn quantize_nr_into(xs: &[f32], fmt: FixedPointFormat, out: &mut Vec<f32>) {
     out.clear();
     out.extend(xs.iter().map(|&x| fmt.quantize_nr(x)));
 }
 
+/// Fused quantize + histogram-bin: the single-pass kernel of the PushDown
+/// engine. Each element is quantized in the integer domain (precomputed
+/// `scale`/`inv_scale`, branch-light round-half-even, branchless clamp) and
+/// its quantized value is binned straight into `hist` — the quantized tensor
+/// is never materialized.
+///
+/// Count-exact with the naive two-pass `quantize_nr_into` +
+/// `Histogram::from_slice` for every input (the bin index is computed by the
+/// same `Histogram::bin_of`, and the integer-domain quantize equals
+/// `FixedPointFormat::quantize_nr` element-wise; NaNs follow the same
+/// saturating-cast path into bin 0 on both sides).
+pub fn quantize_bin(xs: &[f32], fmt: FixedPointFormat, hist: &mut Histogram) {
+    let scale = fmt.scale();
+    let inv_scale = 1.0 / scale;
+    let qmin = fmt.qmin();
+    let qmax = fmt.qmax();
+    for &x in xs {
+        let q = round_half_even_fast(x * scale).clamp(qmin, qmax) * inv_scale;
+        let i = hist.bin_of(q);
+        hist.counts[i] += 1;
+    }
+    hist.total += xs.len() as u64;
+}
+
 /// Stochastic-rounding quantize with noise from `rng`.
 pub fn quantize_sr_slice(xs: &[f32], fmt: FixedPointFormat, rng: &mut Rng) -> Vec<f32> {
-    xs.iter()
-        .map(|&x| fmt.quantize_sr(x, rng.uniform() as f32))
-        .collect()
+    let mut out = Vec::new();
+    quantize_sr_into(xs, fmt, rng, &mut out);
+    out
+}
+
+/// In-place stochastic-rounding quantize into a reusable buffer — the SR
+/// twin of [`quantize_nr_into`], used by the sparse deployment export so
+/// repeated per-layer exports stay allocation-free.
+pub fn quantize_sr_into(xs: &[f32], fmt: FixedPointFormat, rng: &mut Rng, out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(xs.iter().map(|&x| fmt.quantize_sr(x, rng.uniform() as f32)));
 }
 
 /// Fraction of exact zeros (the paper's sparsity; sp in eq. 8/9 is the
@@ -90,5 +125,62 @@ mod tests {
         let cap = buf.capacity();
         quantize_nr_into(&xs, fmt, &mut buf);
         assert_eq!(buf.capacity(), cap);
+    }
+
+    #[test]
+    fn sr_into_matches_slice_and_reuses_buffer() {
+        let fmt = FixedPointFormat::new(8, 4);
+        let xs: Vec<f32> = (0..300).map(|i| 0.01 * i as f32 - 1.5).collect();
+        let mut a = Rng::seed_from(21);
+        let mut b = Rng::seed_from(21);
+        let via_slice = quantize_sr_slice(&xs, fmt, &mut a);
+        let mut buf = Vec::new();
+        quantize_sr_into(&xs, fmt, &mut b, &mut buf);
+        assert_eq!(via_slice, buf, "same rng stream must give same values");
+        let cap = buf.capacity();
+        quantize_sr_into(&xs, fmt, &mut b, &mut buf);
+        assert_eq!(buf.capacity(), cap);
+    }
+
+    #[test]
+    fn fused_quantize_bin_matches_naive_two_pass() {
+        use crate::fixedpoint::histogram::Histogram;
+        let mut r = Rng::seed_from(5);
+        let xs: Vec<f32> = (0..4096).map(|_| (r.normal() * 0.3) as f32).collect();
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &x in &xs {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        let mut buf = Vec::new();
+        for (wl, fl) in [(2u8, 1u8), (4, 2), (6, 3), (8, 4), (12, 8), (16, 10), (24, 12)] {
+            let fmt = FixedPointFormat::new(wl, fl);
+            quantize_nr_into(&xs, fmt, &mut buf);
+            let naive = Histogram::from_slice(&buf, lo, hi, 100);
+            let mut fused = Histogram::new(lo, hi, 100);
+            quantize_bin(&xs, fmt, &mut fused);
+            assert_eq!(naive.counts, fused.counts, "<{wl},{fl}>");
+            assert_eq!(naive.total, fused.total);
+        }
+    }
+
+    #[test]
+    fn fused_quantize_bin_handles_constant_and_extremes() {
+        use crate::fixedpoint::histogram::Histogram;
+        let fmt = FixedPointFormat::new(8, 4);
+        // constant tensor: degenerate (padded) range, everything in bin 0
+        let xs = vec![0.25f32; 128];
+        let mut h = Histogram::new(0.25, 0.25, 10);
+        quantize_bin(&xs, fmt, &mut h);
+        assert_eq!(h.total, 128);
+        assert_eq!(h.counts[0], 128);
+        // values far outside the format's range clamp, then bin at the edges
+        let wild = vec![1e9f32, -1e9, 0.0];
+        let mut hw = Histogram::new(-1e9, 1e9, 4);
+        quantize_bin(&wild, fmt, &mut hw);
+        let mut buf = Vec::new();
+        quantize_nr_into(&wild, fmt, &mut buf);
+        let naive = Histogram::from_slice(&buf, -1e9, 1e9, 4);
+        assert_eq!(naive.counts, hw.counts);
     }
 }

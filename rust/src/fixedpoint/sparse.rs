@@ -8,6 +8,8 @@
 //! bits-per-model numbers behind the SZ column.
 
 use super::format::FixedPointFormat;
+use super::quantize::quantize_sr_into;
+use crate::util::rng::Rng;
 
 /// CSR matrix of fixed-point values; the integer codes are bit-packed at
 /// WL bits each (the ASIC deployment format the paper targets).
@@ -24,16 +26,46 @@ pub struct SparseFixedTensor {
 }
 
 impl SparseFixedTensor {
-    /// Quantize a dense row-major matrix and keep only non-zeros.
+    /// Quantize a dense row-major matrix (nearest rounding) and keep only
+    /// non-zeros.
     pub fn from_dense(dense: &[f32], rows: usize, cols: usize, fmt: FixedPointFormat) -> Self {
         assert_eq!(dense.len(), rows * cols);
+        Self::build(rows, cols, fmt, |i| fmt.quantize_nr(dense[i]))
+    }
+
+    /// Stochastic-rounding export: quantizes the whole tensor with the
+    /// allocation-free [`quantize_sr_into`] convention (`buf` is reusable
+    /// across layer exports) and sparsifies the result. SR export preserves
+    /// the tensor mean in expectation, which NR export does not for weights
+    /// sitting between grid points.
+    pub fn from_dense_sr(
+        dense: &[f32],
+        rows: usize,
+        cols: usize,
+        fmt: FixedPointFormat,
+        rng: &mut Rng,
+        buf: &mut Vec<f32>,
+    ) -> Self {
+        assert_eq!(dense.len(), rows * cols);
+        quantize_sr_into(dense, fmt, rng, buf);
+        let q = &*buf;
+        Self::build(rows, cols, fmt, |i| q[i])
+    }
+
+    /// CSR construction from an already-on-grid value source.
+    fn build<F: FnMut(usize) -> f32>(
+        rows: usize,
+        cols: usize,
+        fmt: FixedPointFormat,
+        mut qval: F,
+    ) -> Self {
         let mut row_ptr = Vec::with_capacity(rows + 1);
         let mut col_idx = Vec::new();
         let mut codes: Vec<i64> = Vec::new();
         row_ptr.push(0u32);
         for r in 0..rows {
             for c in 0..cols {
-                let q = fmt.quantize_nr(dense[r * cols + c]);
+                let q = qval(r * cols + c);
                 if q != 0.0 {
                     col_idx.push(c as u32);
                     codes.push((q * fmt.scale()) as i64);
@@ -181,6 +213,31 @@ mod tests {
             let want: f32 = (0..19).map(|c| qd[row * 19 + c] * x[c]).sum();
             assert!((y[row] - want).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn sr_export_stays_on_grid_and_close() {
+        let fmt = FixedPointFormat::new(8, 4);
+        let d = random_sparse(23, 17, 0.5, 7);
+        let mut rng = Rng::seed_from(9);
+        let mut buf = Vec::new();
+        let s = SparseFixedTensor::from_dense_sr(&d, 23, 17, fmt, &mut rng, &mut buf);
+        let back = s.to_dense();
+        for (x, q) in d.iter().zip(&back) {
+            assert!(fmt.representable(*q), "{x} -> {q} off-grid");
+            if x.abs() <= fmt.max_value() {
+                assert!((x - q).abs() <= fmt.ulp() + 1e-6, "{x} -> {q}");
+            }
+        }
+        // buffer is reused allocation-free on a second export
+        let cap = buf.capacity();
+        let _ = SparseFixedTensor::from_dense_sr(&d, 23, 17, fmt, &mut rng, &mut buf);
+        assert_eq!(buf.capacity(), cap);
+        // deterministic given the rng stream
+        let mut r2 = Rng::seed_from(9);
+        let mut b2 = Vec::new();
+        let s2 = SparseFixedTensor::from_dense_sr(&d, 23, 17, fmt, &mut r2, &mut b2);
+        assert_eq!(s.to_dense(), s2.to_dense());
     }
 
     #[test]

@@ -40,6 +40,9 @@ pub struct RunRecord {
     pub evals: Vec<(u64, f32)>,
     pub switches: Vec<SwitchEventLite>,
     pub wall_secs: f64,
+    /// Host-side wall time spent in epoch-boundary precision re-syncs (the
+    /// PushDown/PushUp overhead of eq. 6/7, measured rather than modelled).
+    pub switch_secs: f64,
 }
 
 /// Compact serialisable form of a SwitchEvent.
@@ -130,6 +133,7 @@ impl RunRecord {
         m.insert("steps_per_epoch".into(), num(self.steps_per_epoch as f64));
         m.insert("num_layers".into(), num(self.num_layers as f64));
         m.insert("wall_secs".into(), num(self.wall_secs));
+        m.insert("switch_secs".into(), num(self.switch_secs));
         m.insert("loss".into(), arr_f32(&steps_loss));
         m.insert("ce".into(), arr_f32(&steps_ce));
         m.insert("acc".into(), arr_f32(&steps_acc));
@@ -289,6 +293,8 @@ impl RunRecord {
                 })
                 .collect(),
             wall_secs: j.req("wall_secs").map_err(|e| anyhow!("{e}"))?.as_f64().unwrap_or(0.0),
+            // absent in records written before the fused-engine PR
+            switch_secs: j.get("switch_secs").and_then(|v| v.as_f64()).unwrap_or(0.0),
         })
     }
 
@@ -345,6 +351,7 @@ mod tests {
                 diversity: 2.5,
             }],
             wall_secs: 1.25,
+            switch_secs: 0.125,
         }
     }
 
@@ -360,6 +367,17 @@ mod tests {
         assert_eq!(back.switches.len(), 1);
         assert_eq!(back.switches[0].new_wl, 12);
         assert_eq!(back.steps.len(), 2);
+        assert_eq!(back.switch_secs, r.switch_secs);
+    }
+
+    #[test]
+    fn records_without_switch_secs_still_load() {
+        let mut j = sample_record().to_json();
+        if let crate::util::json::Json::Obj(m) = &mut j {
+            m.remove("switch_secs");
+        }
+        let back = RunRecord::from_json(&j).unwrap();
+        assert_eq!(back.switch_secs, 0.0);
     }
 
     #[test]

@@ -263,6 +263,7 @@ impl QuantController for MuppetController {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::manifest::test_mlp_manifest as mlp_manifest;
 
     #[test]
     fn scale_formula_matches_hand_computation() {
@@ -277,8 +278,7 @@ mod tests {
 
     #[test]
     fn ladder_walks_upward_under_stalled_diversity() {
-        let dir = crate::runtime::artifacts_dir().expect("artifacts");
-        let man = Manifest::load(&dir.join("mlp-mnist.manifest.json")).unwrap();
+        let man = mlp_manifest();
         let mut c = MuppetController::new(&man, MuppetHyper::default());
         let mut st = TrainState {
             params: crate::init::init_params(&man, crate::init::Initializer::Tnvs, 1.0, 0),
@@ -309,8 +309,7 @@ mod tests {
 
     #[test]
     fn float32_phase_after_ladder() {
-        let dir = crate::runtime::artifacts_dir().expect("artifacts");
-        let man = Manifest::load(&dir.join("mlp-mnist.manifest.json")).unwrap();
+        let man = mlp_manifest();
         let mut c = MuppetController::new(&man, MuppetHyper::default());
         c.rung = c.hyper.ladder.len();
         let qp = c.qparams();
@@ -320,8 +319,7 @@ mod tests {
 
     #[test]
     fn qparams_are_powers_of_two() {
-        let dir = crate::runtime::artifacts_dir().expect("artifacts");
-        let man = Manifest::load(&dir.join("mlp-mnist.manifest.json")).unwrap();
+        let man = mlp_manifest();
         let c = MuppetController::new(&man, MuppetHyper::default());
         let qp = c.qparams();
         for l in 0..2 * man.num_layers {

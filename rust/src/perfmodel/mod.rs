@@ -249,6 +249,7 @@ mod tests {
             evals: vec![],
             switches: vec![],
             wall_secs: 0.0,
+            switch_secs: 0.0,
         }
     }
 

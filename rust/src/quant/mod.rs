@@ -1,12 +1,17 @@
 //! The AdaPT precision-switching mechanism (sec. 3.3): PushDown, PushUp,
 //! runtime schedule adaptation and the per-layer quantization mapping.
 
+pub mod parallel;
 pub mod pushdown;
 pub mod pushup;
 pub mod qmap;
 pub mod schedule;
 
-pub use pushdown::{format_kl, push_down, PushDownResult, PushDownScratch, KL_EPS};
+pub use parallel::{push_down_layers, push_down_layers_seq, PushDownJob};
+pub use pushdown::{
+    format_kl, format_kl_prepared, push_down, push_down_naive, PushDownResult, PushDownScratch,
+    KL_EPS,
+};
 pub use pushup::{gradient_diversity, push_up, Strategy};
 pub use qmap::{AdaptController, Float32Controller, QuantController, SwitchEvent};
 pub use schedule::{adapt_lookback, adapt_resolution, QuantHyper, StrategyCtl};

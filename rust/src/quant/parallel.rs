@@ -1,0 +1,143 @@
+//! Parallel per-layer PushDown.
+//!
+//! PushDown calls for different layers are fully independent: each reads one
+//! weight tensor and its own scratch. When several layers need a precision
+//! switch at the same step (or at the epoch-boundary sync), the evaluations
+//! fan out across OS threads with `std::thread::scope` — no external
+//! dependencies, no long-lived pool. Work is handed out by an atomic cursor
+//! so a large conv layer does not serialise behind a string of tiny dense
+//! layers; each worker owns one `PushDownScratch` for its whole run.
+//!
+//! Determinism: every job is computed by exactly one worker with the same
+//! single-threaded `push_down`, so the returned results are bit-identical to
+//! the sequential loop regardless of thread count or scheduling (asserted by
+//! `rust/tests/quant_fused_parallel.rs`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::pushdown::{push_down, PushDownResult, PushDownScratch};
+
+/// One per-layer PushDown work item.
+#[derive(Debug, Clone, Copy)]
+pub struct PushDownJob<'a> {
+    pub weights: &'a [f32],
+    pub resolution: usize,
+    pub eps: f64,
+}
+
+/// Worker-count policy: `ADAPT_THREADS` if set (>=1), else the machine's
+/// available parallelism. The single-core testbed thus degrades to the plain
+/// sequential loop with zero thread overhead.
+pub fn max_threads() -> usize {
+    if let Ok(v) = std::env::var("ADAPT_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Sequential reference: one scratch, jobs in order. The parallel path must
+/// return exactly these results.
+pub fn push_down_layers_seq(jobs: &[PushDownJob<'_>]) -> Vec<PushDownResult> {
+    let mut scratch = PushDownScratch::default();
+    jobs.iter()
+        .map(|j| push_down(j.weights, j.resolution, j.eps, &mut scratch))
+        .collect()
+}
+
+/// Run every job with up to [`max_threads`] workers; results are returned in
+/// job order.
+pub fn push_down_layers(jobs: &[PushDownJob<'_>]) -> Vec<PushDownResult> {
+    push_down_layers_with(jobs, max_threads())
+}
+
+/// Run every job with up to `threads` workers (results in job order).
+pub fn push_down_layers_with(jobs: &[PushDownJob<'_>], threads: usize) -> Vec<PushDownResult> {
+    let threads = threads.min(jobs.len());
+    if threads <= 1 {
+        return push_down_layers_seq(jobs);
+    }
+    let cursor = AtomicUsize::new(0);
+    let mut per_worker: Vec<Vec<(usize, PushDownResult)>> = Vec::with_capacity(threads);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut scratch = PushDownScratch::default();
+                    let mut out = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= jobs.len() {
+                            break;
+                        }
+                        let j = &jobs[i];
+                        out.push((i, push_down(j.weights, j.resolution, j.eps, &mut scratch)));
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            per_worker.push(h.join().expect("push_down worker panicked"));
+        }
+    });
+    let mut results: Vec<Option<PushDownResult>> = vec![None; jobs.len()];
+    for (i, r) in per_worker.into_iter().flatten() {
+        results[i] = Some(r);
+    }
+    // the cursor hands every index to exactly one worker, so all slots filled
+    results.into_iter().map(|r| r.expect("job not computed")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pushdown::KL_EPS;
+    use crate::util::rng::Rng;
+
+    fn layer(n: usize, sigma: f32, seed: u64) -> Vec<f32> {
+        let mut r = Rng::seed_from(seed);
+        (0..n).map(|_| r.normal() as f32 * sigma).collect()
+    }
+
+    #[test]
+    fn parallel_matches_sequential_across_thread_counts() {
+        let tensors: Vec<Vec<f32>> = vec![
+            layer(3000, 0.05, 1),
+            layer(128, 2.0, 2),
+            layer(5000, 0.3, 3),
+            vec![0.5f32; 400], // constant layer
+            layer(64, 8.0, 4),
+            vec![],
+        ];
+        let jobs: Vec<PushDownJob> = tensors
+            .iter()
+            .enumerate()
+            .map(|(i, w)| PushDownJob {
+                weights: w,
+                resolution: 50 + 10 * i,
+                eps: KL_EPS,
+            })
+            .collect();
+        let seq = push_down_layers_seq(&jobs);
+        for threads in [1usize, 2, 3, 8, 32] {
+            let par = push_down_layers_with(&jobs, threads);
+            assert_eq!(par, seq, "threads={threads}");
+        }
+        assert_eq!(push_down_layers(&jobs), seq);
+    }
+
+    #[test]
+    fn empty_job_list() {
+        assert!(push_down_layers(&[]).is_empty());
+        assert!(push_down_layers_with(&[], 8).is_empty());
+    }
+
+    #[test]
+    fn max_threads_is_positive() {
+        assert!(max_threads() >= 1);
+    }
+}

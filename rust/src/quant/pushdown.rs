@@ -8,10 +8,49 @@
 //! A bisection over the fraction length finds the smallest FL with
 //! KL < eps, then the word length is reduced while the (clamping) loss
 //! stays below eps.
+//!
+//! # The fused single-pass engine
+//!
+//! One `push_down` call evaluates ~10–15 candidate formats. Two facts make
+//! most of the naive per-candidate work redundant:
+//!
+//! * the tensor's min/max/max-abs and the master-weight histogram depend
+//!   only on the weights and the resolution — they are **invariant across
+//!   every candidate format of the call** — and
+//! * the candidate-side histogram does not need the quantized tensor, only
+//!   its bin counts.
+//!
+//! The engine therefore hoists the min/max scan and the master `Histogram`
+//! into [`PushDownScratch`] (built once per call by
+//! [`PushDownScratch::prepare`]), and evaluates each candidate with the
+//! fused [`quantize_bin`] kernel: one pass over the weights that quantizes
+//! each element in the integer domain and bins it directly into the reused
+//! candidate histogram. Per candidate that is **exactly one O(n) pass and
+//! zero allocations**, versus the naive path's three-to-four (quantize into
+//! a buffer, re-scan min/max, bin the weights, bin the buffer). The naive
+//! pipeline is kept as [`format_kl`] / [`push_down_naive`]: it is the
+//! reference the property tests and `benches/micro.rs` compare against.
+//!
+//! # Scratch-reuse invariants
+//!
+//! * `prepare` must be called (and return `true`) before
+//!   [`format_kl_prepared`]; it caches `lo`/`hi`/`mabs` and (re)bins the
+//!   master histogram for the given `(weights, resolution)` pair.
+//! * `master` and `cand` always share binning (`lo`, `hi`, bin count), so a
+//!   KL between them is well-formed; `cand` is zeroed at the start of every
+//!   candidate eval, never reallocated while the resolution is stable.
+//! * A scratch may be reused freely across layers and calls — every
+//!   `push_down`/`prepare` fully re-initialises the cached state. It is NOT
+//!   `Sync`; parallel callers give each worker its own scratch
+//!   (see `quant::parallel`).
+//! * Results are bit-identical to the naive path: the candidate histogram
+//!   delegates bin selection to the same `Histogram::bin_of`, and the fused
+//!   integer-domain quantize agrees element-wise with
+//!   `FixedPointFormat::quantize_nr` (see `round_half_even_fast`).
 
 use crate::fixedpoint::format::{FixedPointFormat, FL_MAX, WL_MAX};
 use crate::fixedpoint::histogram::{kl_divergence, Histogram};
-use crate::fixedpoint::quantize::{max_abs, quantize_nr_into};
+use crate::fixedpoint::quantize::{max_abs, quantize_bin, quantize_nr_into};
 
 /// KL threshold counted as "no information loss" at finite resolution.
 ///
@@ -22,14 +61,77 @@ use crate::fixedpoint::quantize::{max_abs, quantize_nr_into};
 /// divergence reproduces the paper's reported word-length band (fig. 3/4).
 pub const KL_EPS: f64 = 1e-3;
 
-/// Reusable scratch to keep the bisection allocation-free on the hot path.
-#[derive(Default)]
+/// Reusable scratch for the PushDown engine: the naive path's quantized
+/// buffer plus the fused path's cached tensor stats and histograms (see the
+/// module docs for the reuse invariants).
 pub struct PushDownScratch {
+    /// Quantized-tensor buffer — used only by the naive reference path.
     buf: Vec<f32>,
+    /// Master-weight histogram, built once per `prepare`.
+    master: Histogram,
+    /// Candidate histogram; shares the master's binning, zeroed per eval.
+    cand: Histogram,
+    lo: f32,
+    hi: f32,
+    mabs: f32,
+}
+
+impl Default for PushDownScratch {
+    fn default() -> Self {
+        PushDownScratch {
+            buf: Vec::new(),
+            master: Histogram::new(0.0, 1.0, 1),
+            cand: Histogram::new(0.0, 1.0, 1),
+            lo: 0.0,
+            hi: 0.0,
+            mabs: 0.0,
+        }
+    }
+}
+
+impl PushDownScratch {
+    /// Run the per-call invariant work: one finiteness + min/max/max-abs
+    /// scan and one binning pass building the master histogram. Returns
+    /// `false` (leaving the scratch unusable for `format_kl_prepared`) if a
+    /// non-finite weight is found.
+    pub fn prepare(&mut self, weights: &[f32], resolution: usize) -> bool {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        let mut mabs = 0.0f32;
+        for &x in weights {
+            if !x.is_finite() {
+                return false;
+            }
+            lo = lo.min(x);
+            hi = hi.max(x);
+            mabs = mabs.max(x.abs());
+        }
+        self.lo = lo;
+        self.hi = hi;
+        self.mabs = mabs;
+        self.master.reset(lo, hi, resolution);
+        for &x in weights {
+            self.master.add(x);
+        }
+        // padded range comes from the master so both histograms agree even
+        // for degenerate (constant-tensor) inputs
+        self.cand.reset(self.master.lo, self.master.hi, resolution);
+        true
+    }
+
+    /// Max |w| of the prepared tensor.
+    pub fn max_abs(&self) -> f32 {
+        self.mabs
+    }
 }
 
 /// KL between weights and their quantization under `fmt`, binned at
 /// `resolution` over the weights' own range.
+///
+/// This is the NAIVE reference pipeline (quantize into a buffer, scan
+/// min/max, build both histograms — three-to-four passes per call); the
+/// engine's hot path is [`format_kl_prepared`]. Kept public as the
+/// ground truth for property tests and the before/after benches.
 pub fn format_kl(
     weights: &[f32],
     fmt: FixedPointFormat,
@@ -53,39 +155,56 @@ pub fn format_kl(
     kl_divergence(&p, &q, 1e-9)
 }
 
+/// Fused candidate evaluation: exactly one pass over the weights, zero
+/// allocations. Requires a successful [`PushDownScratch::prepare`] for this
+/// `weights` tensor; bit-identical to [`format_kl`] at the prepared
+/// resolution.
+pub fn format_kl_prepared(
+    weights: &[f32],
+    fmt: FixedPointFormat,
+    scratch: &mut PushDownScratch,
+) -> f64 {
+    scratch
+        .cand
+        .reset(scratch.master.lo, scratch.master.hi, scratch.master.counts.len());
+    quantize_bin(weights, fmt, &mut scratch.cand);
+    kl_divergence(&scratch.cand, &scratch.master, 1e-9)
+}
+
 /// Result of a PushDown: the minimal lossless format and the KL it achieved.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PushDownResult {
     pub fmt: FixedPointFormat,
     pub kl: f64,
     pub evals: u32,
 }
 
-/// Find the smallest `<WL, FL>` such that KL(EDF(W) || EDF(q(W))) < eps at
-/// the given binning resolution (alg. 3, bisection over FL then WL descent).
-pub fn push_down(
-    weights: &[f32],
-    resolution: usize,
-    eps: f64,
-    scratch: &mut PushDownScratch,
-) -> PushDownResult {
-    if weights.is_empty() || weights.iter().any(|x| !x.is_finite()) {
-        return PushDownResult {
-            fmt: FixedPointFormat::full(),
-            kl: 0.0,
-            evals: 0,
-        };
+fn full_precision_result(evals: u32) -> PushDownResult {
+    PushDownResult {
+        fmt: FixedPointFormat::full(),
+        kl: 0.0,
+        evals,
     }
-    let mabs = max_abs(weights);
+}
+
+/// The bisection schedule of alg. 3, shared by the fused and naive paths so
+/// both evaluate the identical candidate sequence: an FL_MAX sanity probe,
+/// a binary search over the fraction length (KL is monotone non-increasing
+/// in FL — a finer grid loses less), then a word-length descent while the
+/// clamping loss stays below `eps`.
+fn bisect<F: FnMut(FixedPointFormat) -> f64>(
+    mabs: f32,
+    eps: f64,
+    mut kl_of: F,
+) -> PushDownResult {
     let mut evals = 0u32;
 
-    // Phase 1: bisect the fraction length. KL is monotone non-increasing in
-    // FL (finer grid loses less), so binary search applies.
+    // Phase 1: bisect the fraction length.
     let (mut lo, mut hi) = (0u8, FL_MAX);
     // Early exit: if even FL_MAX fails (degenerate data), keep full precision.
     let full = FixedPointFormat::covering(mabs, FL_MAX);
     evals += 1;
-    if format_kl(weights, full, resolution, scratch) >= eps {
+    if kl_of(full) >= eps {
         return PushDownResult {
             fmt: full,
             kl: 0.0,
@@ -96,7 +215,7 @@ pub fn push_down(
         let mid = (lo + hi) / 2;
         let fmt = FixedPointFormat::covering(mabs, mid);
         evals += 1;
-        if format_kl(weights, fmt, resolution, scratch) < eps {
+        if kl_of(fmt) < eps {
             hi = mid;
         } else {
             lo = mid + 1;
@@ -114,7 +233,7 @@ pub fn push_down(
             fl: fl_min,
         };
         evals += 1;
-        let cand_kl = format_kl(weights, cand, resolution, scratch);
+        let cand_kl = kl_of(cand);
         if cand_kl < eps {
             fmt = cand;
             kl = cand_kl;
@@ -124,6 +243,40 @@ pub fn push_down(
     }
     debug_assert!(fmt.wl <= WL_MAX);
     PushDownResult { fmt, kl, evals }
+}
+
+/// Find the smallest `<WL, FL>` such that KL(EDF(W) || EDF(q(W))) < eps at
+/// the given binning resolution (alg. 3), via the fused single-pass engine:
+/// the min/max scan and the master histogram are built once, then every
+/// candidate eval is one fused quantize+bin pass over the weights.
+pub fn push_down(
+    weights: &[f32],
+    resolution: usize,
+    eps: f64,
+    scratch: &mut PushDownScratch,
+) -> PushDownResult {
+    if weights.is_empty() || !scratch.prepare(weights, resolution) {
+        return full_precision_result(0);
+    }
+    let mabs = scratch.mabs;
+    bisect(mabs, eps, |fmt| format_kl_prepared(weights, fmt, scratch))
+}
+
+/// The pre-fusion PushDown: identical bisection, but every candidate eval
+/// re-scans min/max, re-bins the master histogram and materializes the
+/// quantized tensor. Kept as the reference for the bit-parity property
+/// tests and as the "before" side of the `benches/micro.rs` comparison.
+pub fn push_down_naive(
+    weights: &[f32],
+    resolution: usize,
+    eps: f64,
+    scratch: &mut PushDownScratch,
+) -> PushDownResult {
+    if weights.is_empty() || weights.iter().any(|x| !x.is_finite()) {
+        return full_precision_result(0);
+    }
+    let mabs = max_abs(weights);
+    bisect(mabs, eps, |fmt| format_kl(weights, fmt, resolution, scratch))
 }
 
 #[cfg(test)]
@@ -156,6 +309,63 @@ mod tests {
                 "push_down was not minimal in FL"
             );
         }
+    }
+
+    #[test]
+    fn fused_eval_matches_naive_format_kl() {
+        for (sigma, seed) in [(0.05f32, 10u64), (0.5, 11), (4.0, 12)] {
+            let w = gaussian(3000, sigma, seed);
+            for resolution in [50usize, 100, 150] {
+                let mut s = PushDownScratch::default();
+                assert!(s.prepare(&w, resolution));
+                let mabs = s.max_abs();
+                for fl in 0..=16u8 {
+                    let fmt = FixedPointFormat::covering(mabs, fl);
+                    let fused = format_kl_prepared(&w, fmt, &mut s);
+                    let naive = format_kl(&w, fmt, resolution, &mut s);
+                    assert_eq!(
+                        fused.to_bits(),
+                        naive.to_bits(),
+                        "fl={fl} r={resolution} sigma={sigma}: {fused} vs {naive}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_push_down_matches_naive_push_down() {
+        for (n, sigma, seed) in [(100usize, 0.1f32, 20u64), (4000, 0.05, 21), (4000, 8.0, 22)] {
+            let w = gaussian(n, sigma, seed);
+            for resolution in [50usize, 100] {
+                let mut s = PushDownScratch::default();
+                let fused = push_down(&w, resolution, KL_EPS, &mut s);
+                let naive = push_down_naive(&w, resolution, KL_EPS, &mut s);
+                assert_eq!(fused, naive, "n={n} sigma={sigma} r={resolution}");
+            }
+        }
+        // degenerate inputs agree too
+        let mut s = PushDownScratch::default();
+        for w in [vec![], vec![0.25f32; 500], vec![f32::NAN; 8]] {
+            assert_eq!(
+                push_down(&w, 100, KL_EPS, &mut s),
+                push_down_naive(&w, 100, KL_EPS, &mut s)
+            );
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_tensors_is_clean() {
+        // a scratch prepared on one tensor must not leak state into the next
+        let a = gaussian(2000, 0.1, 30);
+        let b = gaussian(700, 3.0, 31);
+        let mut reused = PushDownScratch::default();
+        let ra1 = push_down(&a, 100, KL_EPS, &mut reused);
+        let rb = push_down(&b, 60, KL_EPS, &mut reused);
+        let ra2 = push_down(&a, 100, KL_EPS, &mut reused);
+        assert_eq!(ra1, ra2);
+        let mut fresh = PushDownScratch::default();
+        assert_eq!(rb, push_down(&b, 60, KL_EPS, &mut fresh));
     }
 
     #[test]

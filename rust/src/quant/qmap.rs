@@ -1,12 +1,19 @@
 //! The quantization mapping Q (alg. 1/2) and the per-layer PrecisionSwitch
 //! driver: this is the paper's central coordination loop, living entirely
 //! in the Rust L3 (the compiled L2 graph takes qparams as runtime inputs).
+//!
+//! PushDown evaluations route through the fused single-pass engine
+//! (`quant::pushdown`); when several layers are due at once — same-step
+//! window completions or the epoch-boundary re-sync — they fan out across
+//! threads via `quant::parallel`, which is bit-identical to the sequential
+//! loop.
 
 use crate::fixedpoint::format::FixedPointFormat;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::step::{StepMetrics, TrainState};
 
-use super::pushdown::{push_down, PushDownScratch};
+use super::parallel::{push_down_layers, PushDownJob};
+use super::pushdown::{push_down, PushDownResult, PushDownScratch};
 use super::pushup::{gradient_diversity, push_up, Strategy};
 use super::schedule::{adapt_lookback, adapt_resolution, QuantHyper, StrategyCtl};
 
@@ -34,7 +41,7 @@ pub trait QuantController: Send {
     fn qparams(&self) -> Vec<f32>;
     /// Observe one completed step; may mutate gsum (window resets).
     fn on_step(&mut self, state: &mut TrainState, metrics: &StepMetrics);
-    /// Epoch boundary hook (MuPPET switches here).
+    /// Epoch boundary hook (MuPPET switches here; AdaPT re-syncs here).
     fn on_epoch_end(&mut self, _state: &mut TrainState, _epoch: usize) {}
     /// Current per-layer word lengths (for metrics + perf model).
     fn wordlengths(&self) -> Vec<u8>;
@@ -65,13 +72,17 @@ struct LayerState {
 }
 
 /// The AdaPT precision-switching mechanism (alg. 2): per-layer intra-epoch
-/// switches driven by PushDown (KL) + PushUp (gradient diversity).
+/// switches driven by PushDown (KL) + PushUp (gradient diversity), plus the
+/// per-epoch whole-net re-sync at the coordinator's epoch boundary.
 pub struct AdaptController {
     pub hyper: QuantHyper,
     layers: Vec<LayerState>,
     kernel_param_idx: Vec<usize>,
     strategy: StrategyCtl,
     scratch: PushDownScratch,
+    /// ||sum of gradients|| per layer from the most recent clean step —
+    /// lets the epoch-boundary sync evaluate partial-window diversity.
+    last_gsum_norm: Vec<f32>,
     events: Vec<SwitchEvent>,
     step: u64,
 }
@@ -97,6 +108,7 @@ impl AdaptController {
             kernel_param_idx: man.kernel_indices(),
             strategy,
             scratch: PushDownScratch::default(),
+            last_gsum_norm: vec![0.0; man.num_layers],
             events: Vec::new(),
             step: 0,
         }
@@ -106,6 +118,60 @@ impl AdaptController {
     /// (lb_avg in sec. 3.3).
     fn avg_lookback(&self) -> usize {
         (self.layers.iter().map(|l| l.lb as usize).sum::<usize>() / self.layers.len()).max(2)
+    }
+
+    /// PushDown for a batch of due layers: the persistent scratch serves a
+    /// lone layer allocation-free; two or more fan out across threads.
+    fn push_down_batch(&mut self, state: &TrainState, due: &[usize]) -> Vec<PushDownResult> {
+        let jobs: Vec<PushDownJob> = due
+            .iter()
+            .map(|&l| PushDownJob {
+                weights: &state.params[self.kernel_param_idx[l]],
+                resolution: self.layers[l].res as usize,
+                eps: self.hyper.kl_eps,
+            })
+            .collect();
+        if jobs.len() == 1 {
+            let j = jobs[0];
+            vec![push_down(j.weights, j.resolution, j.eps, &mut self.scratch)]
+        } else {
+            push_down_layers(&jobs)
+        }
+    }
+
+    /// Apply one PushDown result: PushUp, format switch, window reset.
+    #[allow(clippy::too_many_arguments)]
+    fn apply_switch(
+        &mut self,
+        state: &mut TrainState,
+        layer: usize,
+        pd: PushDownResult,
+        ds: f64,
+        st: Strategy,
+        record_unchanged: bool,
+    ) {
+        let new_fmt = push_up(pd.fmt, ds, st, self.hyper.buff);
+        let ls = &mut self.layers[layer];
+        let old = ls.fmt;
+        let (lb, res) = (ls.lb, ls.res);
+        ls.fmt = new_fmt;
+        ls.grad_norm_sum = 0.0;
+        ls.batches = 0;
+        state.zero_gsum_layer(layer);
+        if record_unchanged || new_fmt != old {
+            self.events.push(SwitchEvent {
+                step: self.step,
+                layer,
+                old,
+                new: new_fmt,
+                min_fmt: pd.fmt,
+                diversity: ds,
+                kl: pd.kl,
+                lookback: lb,
+                resolution: res,
+                strategy: st,
+            });
+        }
     }
 }
 
@@ -155,47 +221,63 @@ impl QuantController for AdaptController {
             }
         };
 
-        for l in 0..self.layers.len() {
-            // split-borrow the layer record
-            let (lb, res, batches, gns) = {
-                let ls = &mut self.layers[l];
-                ls.grad_norm_sum += m.grad_norm[l];
-                ls.batches += 1;
-                // adapt lookback/resolution every batch (alg. 2 ln. 4-5)
-                // using the running partial-window diversity
-                if ls.batches >= 2 {
-                    let ds = gradient_diversity(ls.grad_norm_sum, m.gsum_norm[l]);
-                    ls.lb = adapt_lookback(ls.lb, ds, &self.hyper);
-                    ls.res = adapt_resolution(ls.res, ls.lb, &self.hyper);
-                }
-                (ls.lb, ls.res, ls.batches, ls.grad_norm_sum)
-            };
-            if batches < lb {
-                continue;
+        // Phase 1 — window bookkeeping for every layer; collect the layers
+        // whose lookback window completed this step (alg. 2 ln. 4-5).
+        let mut due: Vec<(usize, f64)> = Vec::new();
+        for (l, ls) in self.layers.iter_mut().enumerate() {
+            ls.grad_norm_sum += m.grad_norm[l];
+            ls.batches += 1;
+            self.last_gsum_norm[l] = m.gsum_norm[l];
+            // adapt lookback/resolution every batch (alg. 2 ln. 4-5)
+            // using the running partial-window diversity
+            if ls.batches >= 2 {
+                let ds = gradient_diversity(ls.grad_norm_sum, m.gsum_norm[l]);
+                ls.lb = adapt_lookback(ls.lb, ds, &self.hyper);
+                ls.res = adapt_resolution(ls.res, ls.lb, &self.hyper);
             }
-            // window complete: PrecisionSwitch on this layer (alg. 2 ln. 6-10)
-            let ds = gradient_diversity(gns, m.gsum_norm[l]);
-            let weights = &state.params[self.kernel_param_idx[l]];
-            let pd = push_down(weights, res as usize, self.hyper.kl_eps, &mut self.scratch);
-            let new_fmt = push_up(pd.fmt, ds, st, self.hyper.buff);
-            let ls = &mut self.layers[l];
-            let old = ls.fmt;
-            ls.fmt = new_fmt;
-            ls.grad_norm_sum = 0.0;
-            ls.batches = 0;
-            state.zero_gsum_layer(l);
-            self.events.push(SwitchEvent {
-                step: self.step,
-                layer: l,
-                old,
-                new: new_fmt,
-                min_fmt: pd.fmt,
-                diversity: ds,
-                kl: pd.kl,
-                lookback: lb,
-                resolution: res,
-                strategy: st,
-            });
+            if ls.batches >= ls.lb {
+                due.push((l, gradient_diversity(ls.grad_norm_sum, m.gsum_norm[l])));
+            }
+        }
+        if due.is_empty() {
+            return;
+        }
+
+        // Phase 2 — PushDown for all due layers at once (parallel when >1).
+        let layers_due: Vec<usize> = due.iter().map(|&(l, _)| l).collect();
+        let pds = self.push_down_batch(state, &layers_due);
+
+        // Phase 3 — PrecisionSwitch per due layer (alg. 2 ln. 6-10).
+        for (&(l, ds), pd) in due.iter().zip(pds) {
+            self.apply_switch(state, l, pd, ds, st, true);
+        }
+    }
+
+    /// Epoch-boundary whole-net re-sync (the paper's per-epoch switch):
+    /// every layer with at least a partial gradient window gets a fresh
+    /// PushDown (fanned out in parallel) + PushUp on its partial-window
+    /// diversity. Only actual format changes are recorded as events.
+    fn on_epoch_end(&mut self, state: &mut TrainState, _epoch: usize) {
+        if !self.hyper.epoch_sync {
+            return;
+        }
+        let st = self.hyper.pin_strategy.unwrap_or(self.strategy.st);
+        let synced: Vec<(usize, f64)> = self
+            .layers
+            .iter()
+            .enumerate()
+            .filter(|(_, ls)| ls.batches >= 2)
+            .map(|(l, ls)| {
+                (l, gradient_diversity(ls.grad_norm_sum, self.last_gsum_norm[l]))
+            })
+            .collect();
+        if synced.is_empty() {
+            return;
+        }
+        let layers_due: Vec<usize> = synced.iter().map(|&(l, _)| l).collect();
+        let pds = self.push_down_batch(state, &layers_due);
+        for (&(l, ds), pd) in synced.iter().zip(pds) {
+            self.apply_switch(state, l, pd, ds, st, false);
         }
     }
 
@@ -269,18 +351,7 @@ impl QuantController for Float32Controller {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::manifest::Manifest;
-
-    fn mlp_manifest() -> Manifest {
-        // reuse the checked-in artifact manifest when present; otherwise a
-        // tiny synthetic one
-        if let Ok(dir) = crate::runtime::artifacts_dir() {
-            if let Ok(m) = Manifest::load(&dir.join("mlp-mnist.manifest.json")) {
-                return m;
-            }
-        }
-        panic!("artifacts required for qmap tests: run `make artifacts`");
-    }
+    use crate::runtime::manifest::{test_mlp_manifest as mlp_manifest, Manifest};
 
     fn fake_metrics(l: usize, loss: f32, gn: f32, gsn: f32) -> StepMetrics {
         StepMetrics {
@@ -338,6 +409,55 @@ mod tests {
             st.gsum[0].iter().all(|&v| v == 0.0),
             "gsum not reset after switch"
         );
+    }
+
+    #[test]
+    fn epoch_sync_switches_partial_windows() {
+        let man = mlp_manifest();
+        // huge lookback: intra-epoch windows never complete
+        let mut h = QuantHyper::default();
+        h.lb_lwr = 1000;
+        h.lb_upr = 2000;
+        let mut c = AdaptController::new(&man, h);
+        let mut st = fake_state(&man);
+        for i in 0..5 {
+            let m = fake_metrics(man.num_layers, 2.0 - 0.1 * i as f32, 1.0, 2.5);
+            c.on_step(&mut st, &m);
+        }
+        assert!(c.take_events().is_empty(), "no intra-epoch switch expected");
+        c.on_epoch_end(&mut st, 0);
+        let ev = c.take_events();
+        assert!(!ev.is_empty(), "epoch sync must re-derive formats");
+        assert_ne!(c.wordlengths(), vec![8; man.num_layers]);
+        // windows restarted
+        assert!(c.layers.iter().all(|l| l.batches == 0));
+    }
+
+    #[test]
+    fn epoch_sync_can_be_disabled() {
+        let man = mlp_manifest();
+        let h = QuantHyper::default().with_epoch_sync(false);
+        let mut c = AdaptController::new(&man, h);
+        let mut st = fake_state(&man);
+        for i in 0..5 {
+            let m = fake_metrics(man.num_layers, 2.0 - 0.1 * i as f32, 1.0, 2.5);
+            c.on_step(&mut st, &m);
+        }
+        let wl = c.wordlengths();
+        c.on_epoch_end(&mut st, 0);
+        assert!(c.take_events().is_empty());
+        assert_eq!(c.wordlengths(), wl);
+    }
+
+    #[test]
+    fn epoch_sync_skips_empty_windows() {
+        let man = mlp_manifest();
+        let mut c = AdaptController::new(&man, QuantHyper::default());
+        let mut st = fake_state(&man);
+        // no steps observed: nothing to sync on
+        c.on_epoch_end(&mut st, 0);
+        assert!(c.take_events().is_empty());
+        assert_eq!(c.wordlengths(), vec![8; man.num_layers]);
     }
 
     #[test]

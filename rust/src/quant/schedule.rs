@@ -20,6 +20,11 @@ pub struct QuantHyper {
     /// Ablation hook: pin the PushUp combination strategy instead of the
     /// loss-adaptive schedule of eq. 5 (None = adaptive, the paper default).
     pub pin_strategy: Option<super::pushup::Strategy>,
+    /// Epoch-boundary re-sync: at every epoch end, run PushDown over ALL
+    /// layers (fanned out by `quant::parallel`) and re-derive each layer's
+    /// format — the paper's per-epoch precision switch. Intra-epoch
+    /// window-driven switches are unaffected.
+    pub epoch_sync: bool,
 }
 
 impl Default for QuantHyper {
@@ -35,6 +40,7 @@ impl Default for QuantHyper {
             initial_wl: 8,
             initial_fl: 4,
             pin_strategy: None,
+            epoch_sync: true,
         }
     }
 }
@@ -43,6 +49,12 @@ impl QuantHyper {
     /// The paper's CIFAR-100 profile uses 8 buffer bits.
     pub fn with_buff(mut self, buff: u8) -> Self {
         self.buff = buff;
+        self
+    }
+
+    /// Enable/disable the epoch-boundary whole-net PushDown re-sync.
+    pub fn with_epoch_sync(mut self, on: bool) -> Self {
+        self.epoch_sync = on;
         self
     }
 

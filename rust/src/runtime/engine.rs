@@ -8,6 +8,12 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 
+// The offline registry has no `xla` binding; the API-compatible in-tree stub
+// keeps this module compiling (see `xla_stub` docs). To use a real vendored
+// xla-rs, replace this alias with the external crate — the call sites below
+// are written against the genuine xla-rs surface and need no edits.
+use super::xla_stub as xla;
+
 use super::manifest::{Dtype, IoSpec, Manifest};
 
 /// Shared PJRT client (CPU). One per process.

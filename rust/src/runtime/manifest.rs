@@ -213,6 +213,60 @@ impl Manifest {
         self.params.iter().map(|p| p.elems()).sum()
     }
 
+    /// A synthetic all-dense manifest for tests and benches that must run
+    /// without compiled artifacts: structurally valid for everything the
+    /// precision controllers and initializers touch (params, kernel
+    /// indices, layer descriptors). The executable I/O specs are left
+    /// empty, so it cannot drive PJRT — `validate()` is deliberately not
+    /// applied.
+    pub fn synthetic_dense(name: &str, dims: &[(usize, usize)]) -> Manifest {
+        let mut params = Vec::new();
+        for (i, &(fan_in, fan_out)) in dims.iter().enumerate() {
+            params.push(ParamInfo {
+                name: format!("dense{i}.kernel"),
+                shape: vec![fan_in, fan_out],
+                kind: "kernel".into(),
+                layer: i as i64,
+                fan_in,
+                quantizable: true,
+            });
+            params.push(ParamInfo {
+                name: format!("dense{i}.bias"),
+                shape: vec![fan_out],
+                kind: "bias".into(),
+                layer: -1,
+                fan_in,
+                quantizable: false,
+            });
+        }
+        let layers = dims
+            .iter()
+            .enumerate()
+            .map(|(i, &(fan_in, fan_out))| LayerDesc {
+                name: format!("dense{i}"),
+                kind: "dense".into(),
+                madds: (fan_in * fan_out) as u64,
+                weight_elems: (fan_in * fan_out) as u64,
+                fan_in,
+            })
+            .collect();
+        Manifest {
+            name: name.to_string(),
+            model: "mlp".into(),
+            batch: 32,
+            input_shape: vec![8, 8, 1],
+            classes: dims.last().map(|&(_, o)| o).unwrap_or(1),
+            num_layers: dims.len(),
+            params,
+            bn_state: Vec::new(),
+            layers,
+            train_inputs: Vec::new(),
+            train_outputs: Vec::new(),
+            infer_inputs: Vec::new(),
+            infer_outputs: Vec::new(),
+        }
+    }
+
     /// Indices (into `params`) of the quantizable kernels, layer order.
     pub fn kernel_indices(&self) -> Vec<usize> {
         self.params
@@ -222,6 +276,20 @@ impl Manifest {
             .map(|(i, _)| i)
             .collect()
     }
+}
+
+/// Unit-test support shared by the controller test suites (qmap, muppet):
+/// the real mlp-mnist artifact manifest when `make artifacts` has run,
+/// otherwise a synthetic stand-in with the same controller-visible
+/// structure (3 dense layers, 3 quantizable kernels).
+#[cfg(test)]
+pub(crate) fn test_mlp_manifest() -> Manifest {
+    if let Ok(dir) = crate::runtime::artifacts_dir() {
+        if let Ok(m) = Manifest::load(&dir.join("mlp-mnist.manifest.json")) {
+            return m;
+        }
+    }
+    Manifest::synthetic_dense("synthetic-mlp", &[(64, 32), (32, 32), (32, 10)])
 }
 
 #[cfg(test)]
@@ -263,5 +331,20 @@ mod tests {
     fn rejects_inconsistent_counts() {
         let bad = tiny_manifest().replace("\"num_layers\":1", "\"num_layers\":2");
         assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn synthetic_dense_is_controller_ready() {
+        let m = Manifest::synthetic_dense("t", &[(64, 32), (32, 10)]);
+        assert_eq!(m.num_layers, 2);
+        assert_eq!(m.kernel_indices(), vec![0, 2]);
+        assert_eq!(m.layers.len(), 2);
+        assert_eq!(m.classes, 10);
+        assert_eq!(m.total_params(), 64 * 32 + 32 + 32 * 10 + 10);
+        // initializer plumbing works against it
+        let params = crate::init::init_params(&m, crate::init::Initializer::Tnvs, 1.0, 0);
+        assert_eq!(params.len(), m.params.len());
+        let gsum = crate::init::init_gsum(&m);
+        assert_eq!(gsum.len(), m.num_layers);
     }
 }

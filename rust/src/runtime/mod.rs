@@ -3,6 +3,7 @@
 pub mod engine;
 pub mod manifest;
 pub mod step;
+pub mod xla_stub;
 
 pub use engine::{artifacts_dir, Engine, LoadedModel};
 pub use manifest::{Dtype, IoSpec, LayerDesc, Manifest, ParamInfo};

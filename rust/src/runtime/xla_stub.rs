@@ -1,0 +1,237 @@
+//! In-tree stand-in for the `xla` (xla-rs / PJRT) bindings.
+//!
+//! The offline registry used to build this repository does not carry the
+//! `xla` crate, and the PJRT C API shared library is not present either, so
+//! the runtime layer compiles against this API-compatible stub instead (see
+//! the alias import at the top of `engine.rs`). The stub keeps the whole
+//! coordinator, precision mechanism and experiment harness compiling and
+//! unit-testable; anything that would actually need a device — client
+//! construction, compilation, execution — returns a descriptive `Error`,
+//! which every caller already treats as "artifacts/PJRT unavailable, skip".
+//!
+//! `Literal` is implemented for real (it is pure host-side data), so the
+//! literal packing/unpacking in `engine.rs` stays exercised by tests.
+//!
+//! When a vendored `xla` binding becomes available, delete the alias in
+//! `engine.rs` and add the dependency; no other code changes are needed.
+
+use std::path::Path;
+
+/// Error type mirroring `xla::Error` far enough for `{e:?}` formatting.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT unavailable (built against the in-tree xla stub; \
+         vendor the xla-rs binding to enable device execution)"
+    ))
+}
+
+/// Element types the artifacts use (subset of `xla::ElementType`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    fn byte_size(self) -> usize {
+        4
+    }
+}
+
+/// Marker trait for host types a `Literal` can be read back into.
+pub trait NativeType: Copy + Default {
+    const ELEMENT: ElementType;
+}
+
+impl NativeType for f32 {
+    const ELEMENT: ElementType = ElementType::F32;
+}
+
+impl NativeType for i32 {
+    const ELEMENT: ElementType = ElementType::S32;
+}
+
+/// Host-side literal: dtype + shape + raw little-endian bytes.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    shape: Vec<usize>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        shape: &[usize],
+        bytes: &[u8],
+    ) -> Result<Literal, Error> {
+        let elems: usize = shape.iter().product();
+        if elems * ty.byte_size() != bytes.len() {
+            return Err(Error(format!(
+                "literal: {} bytes for shape {shape:?} of {ty:?}",
+                bytes.len()
+            )));
+        }
+        Ok(Literal {
+            ty,
+            shape: shape.to_vec(),
+            bytes: bytes.to_vec(),
+        })
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Copy the payload out as a typed vector (dtype-checked).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        if self.ty != T::ELEMENT {
+            return Err(Error(format!(
+                "literal dtype mismatch: stored {:?}, requested {:?}",
+                self.ty,
+                T::ELEMENT
+            )));
+        }
+        let n = self.bytes.len() / std::mem::size_of::<T>();
+        let mut out = vec![T::default(); n];
+        // Safety: out has exactly n elements of size_of::<T>() bytes and T is
+        // a plain-old-data Copy type (f32 / i32).
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                self.bytes.as_ptr(),
+                out.as_mut_ptr() as *mut u8,
+                self.bytes.len(),
+            );
+        }
+        Ok(out)
+    }
+
+    /// Destructure a tuple literal. The stub never produces tuples (they only
+    /// come back from device execution), so this is always an error here.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module (the stub only records the source path).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    pub path: String,
+}
+
+impl HloModuleProto {
+    /// The real binding parses HLO text; without a device to compile for
+    /// there is nothing useful to parse into, so this fails loudly rather
+    /// than deferring the error to compile time.
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto, Error> {
+        Err(unavailable(&format!(
+            "HloModuleProto::from_text_file({})",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// An XLA computation handle.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            _proto: proto.clone(),
+        }
+    }
+}
+
+/// Device buffer handle returned by `execute`.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trips_f32() {
+        let data = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.shape(), &[3]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+    }
+
+    #[test]
+    fn literal_round_trips_i32() {
+        let data = [7i32, -9, 0, i32::MAX];
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::S32, &[2, 2], &bytes).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data);
+    }
+
+    #[test]
+    fn literal_rejects_shape_mismatch_and_wrong_dtype() {
+        let bytes = vec![0u8; 8];
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).is_err()
+        );
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &bytes).unwrap();
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn device_paths_fail_gracefully() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nonexistent.hlo.txt").is_err());
+        let err = format!("{:?}", PjRtClient::cpu().unwrap_err());
+        assert!(err.contains("PJRT unavailable"), "{err}");
+    }
+}

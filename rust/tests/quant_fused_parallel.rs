@@ -1,0 +1,180 @@
+//! Property tests gating the fused single-pass PushDown engine and the
+//! parallel per-layer fan-out: both must be bit-identical to the naive
+//! sequential reference paths on arbitrary tensors.
+
+use adapt::fixedpoint::{quantize_bin, quantize_nr_into, FixedPointFormat, Histogram};
+use adapt::quant::{
+    format_kl, format_kl_prepared, push_down, push_down_layers, push_down_layers_seq,
+    push_down_naive, PushDownJob, PushDownScratch, KL_EPS,
+};
+use adapt::util::rng::Rng;
+
+/// A random tensor with a random scale/shape profile drawn from `r`.
+fn random_tensor(r: &mut Rng) -> Vec<f32> {
+    let n = 16 + r.below(6000);
+    let sigma = (10.0f64).powf(r.uniform_in(-2.5, 1.5)) as f32;
+    let style = r.below(4);
+    (0..n)
+        .map(|_| match style {
+            // dense gaussian
+            0 => r.normal() as f32 * sigma,
+            // heavy sparsity (post-L1 weights)
+            1 => {
+                if r.uniform() < 0.7 {
+                    0.0
+                } else {
+                    r.normal() as f32 * sigma
+                }
+            }
+            // already on a coarse grid
+            2 => {
+                let f = FixedPointFormat::new(6, 3);
+                f.quantize_nr(r.normal() as f32 * sigma)
+            }
+            // uniform with outliers
+            _ => {
+                let x = r.uniform_in(-1.0, 1.0) as f32 * sigma;
+                if r.uniform() < 0.01 {
+                    x * 50.0
+                } else {
+                    x
+                }
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn fused_quantize_bin_is_bit_identical_to_two_pass() {
+    let mut r = Rng::seed_from(0xF00D);
+    let mut buf = Vec::new();
+    for trial in 0..25 {
+        let xs = random_tensor(&mut r);
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &x in &xs {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        let bins = 20 + r.below(200);
+        for (wl, fl) in [
+            (2u8, 1u8),
+            (4, 2),
+            (6, 3),
+            (8, 4),
+            (10, 6),
+            (12, 8),
+            (16, 10),
+            (20, 14),
+            (24, 12),
+            (32, 16),
+        ] {
+            let fmt = FixedPointFormat::new(wl, fl);
+            quantize_nr_into(&xs, fmt, &mut buf);
+            let naive = Histogram::from_slice(&buf, lo, hi, bins);
+            let mut fused = Histogram::new(lo, hi, bins);
+            quantize_bin(&xs, fmt, &mut fused);
+            assert_eq!(
+                naive.counts, fused.counts,
+                "trial {trial} <{wl},{fl}> bins {bins}"
+            );
+            assert_eq!(naive.total, fused.total);
+        }
+    }
+}
+
+#[test]
+fn prepared_eval_is_bit_identical_to_naive_format_kl() {
+    let mut r = Rng::seed_from(0xBEEF);
+    for trial in 0..15 {
+        let xs = random_tensor(&mut r);
+        let resolution = 30 + r.below(150);
+        let mut s = PushDownScratch::default();
+        assert!(s.prepare(&xs, resolution));
+        let mabs = s.max_abs();
+        for fl in 0..=20u8 {
+            let fmt = FixedPointFormat::covering(mabs, fl);
+            let fused = format_kl_prepared(&xs, fmt, &mut s);
+            let naive = format_kl(&xs, fmt, resolution, &mut s);
+            assert_eq!(
+                fused.to_bits(),
+                naive.to_bits(),
+                "trial {trial} fl {fl} r {resolution}: {fused} vs {naive}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_push_down_is_identical_to_naive() {
+    let mut r = Rng::seed_from(0xCAFE);
+    let mut s = PushDownScratch::default();
+    for trial in 0..20 {
+        let xs = random_tensor(&mut r);
+        let resolution = 30 + r.below(150);
+        let fused = push_down(&xs, resolution, KL_EPS, &mut s);
+        let naive = push_down_naive(&xs, resolution, KL_EPS, &mut s);
+        assert_eq!(fused, naive, "trial {trial} r {resolution}");
+    }
+    // degenerate shapes
+    for xs in [
+        vec![],
+        vec![0.0f32; 300],
+        vec![42.5f32; 300],
+        vec![-1e-6f32; 64],
+        vec![f32::NAN; 5],
+        vec![1.0, f32::INFINITY],
+    ] {
+        assert_eq!(
+            push_down(&xs, 100, KL_EPS, &mut s),
+            push_down_naive(&xs, 100, KL_EPS, &mut s)
+        );
+    }
+}
+
+#[test]
+fn parallel_push_down_is_identical_to_sequential() {
+    let mut r = Rng::seed_from(0xD00D);
+    // a net-like mix: many small layers, a few large ones, plus degenerates
+    let mut tensors: Vec<Vec<f32>> = (0..14).map(|_| random_tensor(&mut r)).collect();
+    tensors.push(vec![0.5f32; 200]);
+    tensors.push(vec![]);
+    let resolutions: Vec<usize> = (0..tensors.len()).map(|_| 30 + r.below(150)).collect();
+    let jobs: Vec<PushDownJob> = tensors
+        .iter()
+        .zip(&resolutions)
+        .map(|(w, &res)| PushDownJob {
+            weights: w,
+            resolution: res,
+            eps: KL_EPS,
+        })
+        .collect();
+    let seq = push_down_layers_seq(&jobs);
+    assert_eq!(seq.len(), jobs.len());
+    for threads in [1usize, 2, 4, 7, 16, 64] {
+        let par = adapt::quant::parallel::push_down_layers_with(&jobs, threads);
+        assert_eq!(par, seq, "threads={threads}");
+    }
+    // the default policy path too
+    assert_eq!(push_down_layers(&jobs), seq);
+}
+
+#[test]
+fn parallel_results_match_per_layer_singles() {
+    // fan-out must not share or leak scratch state between layers
+    let mut r = Rng::seed_from(0xABCD);
+    let tensors: Vec<Vec<f32>> = (0..6).map(|_| random_tensor(&mut r)).collect();
+    let jobs: Vec<PushDownJob> = tensors
+        .iter()
+        .map(|w| PushDownJob {
+            weights: w,
+            resolution: 100,
+            eps: KL_EPS,
+        })
+        .collect();
+    let par = push_down_layers(&jobs);
+    for (j, want) in jobs.iter().zip(&par) {
+        let mut fresh = PushDownScratch::default();
+        let single = push_down(j.weights, j.resolution, j.eps, &mut fresh);
+        assert_eq!(single, *want);
+    }
+}

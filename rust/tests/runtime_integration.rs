@@ -14,16 +14,30 @@ fn qparams_uniform(l: usize, fmt: FixedPointFormat, enable: f32) -> Vec<f32> {
     (0..2 * l).flat_map(|_| row).collect()
 }
 
-#[test]
-fn mlp_trains_and_infers_through_pjrt() {
+/// Artifacts present AND a PJRT client available (the crate may be built
+/// against the xla stub, where client creation fails) — else skip.
+fn engine_and_dir() -> Option<(Engine, std::path::PathBuf)> {
     let dir = match artifacts_dir() {
         Ok(d) => d,
         Err(e) => {
             eprintln!("SKIP: {e}");
-            return;
+            return None;
         }
     };
-    let engine = Engine::cpu().expect("pjrt cpu client");
+    match Engine::cpu() {
+        Ok(e) => Some((e, dir)),
+        Err(e) => {
+            eprintln!("SKIP: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn mlp_trains_and_infers_through_pjrt() {
+    let Some((engine, dir)) = engine_and_dir() else {
+        return;
+    };
     let model = engine.load_model(&dir, "mlp-mnist").expect("load mlp");
     let man = &model.manifest;
     assert_eq!(man.num_layers, 3);
@@ -76,14 +90,9 @@ fn mlp_trains_and_infers_through_pjrt() {
 
 #[test]
 fn gsum_round_trips_through_device() {
-    let dir = match artifacts_dir() {
-        Ok(d) => d,
-        Err(e) => {
-            eprintln!("SKIP: {e}");
-            return;
-        }
+    let Some((engine, dir)) = engine_and_dir() else {
+        return;
     };
-    let engine = Engine::cpu().unwrap();
     let model = engine.load_model(&dir, "mlp-mnist").unwrap();
     let man = &model.manifest;
     let data = SyntheticVision::mnist_like(64, 0);
@@ -119,14 +128,9 @@ fn gsum_round_trips_through_device() {
 
 #[test]
 fn float32_baseline_path_via_enable_flag() {
-    let dir = match artifacts_dir() {
-        Ok(d) => d,
-        Err(e) => {
-            eprintln!("SKIP: {e}");
-            return;
-        }
+    let Some((engine, dir)) = engine_and_dir() else {
+        return;
     };
-    let engine = Engine::cpu().unwrap();
     let model = engine.load_model(&dir, "mlp-mnist").unwrap();
     let man = &model.manifest;
     let data = SyntheticVision::mnist_like(64, 0);
@@ -151,14 +155,9 @@ fn host_quantizer_matches_device_quantizer() {
     // through the infer executable's weight quantization; logits from
     // pre-quantized weights with quantization DISABLED must equal logits
     // from raw weights with quantization ENABLED.
-    let dir = match artifacts_dir() {
-        Ok(d) => d,
-        Err(e) => {
-            eprintln!("SKIP: {e}");
-            return;
-        }
+    let Some((engine, dir)) = engine_and_dir() else {
+        return;
     };
-    let engine = Engine::cpu().unwrap();
     let model = engine.load_model(&dir, "mlp-mnist").unwrap();
     let man = &model.manifest;
     let data = SyntheticVision::mnist_like(64, 0);
