@@ -15,12 +15,12 @@ use std::time::Instant;
 use adapt::bench_support::{write_bench_json, BenchEntry};
 use adapt::data::{Batcher, SyntheticVision};
 use adapt::fixedpoint::{
-    quantization_kl, quantize_nr_slice, quantize_sr_into, quantize_sr_slice, FixedPointFormat,
-    SparseFixedTensor,
+    quantization_kl, quantize_bin, quantize_bin_scalar, quantize_nr_slice, quantize_sr_into,
+    quantize_sr_slice, FixedPointFormat, Histogram, SparseFixedTensor,
 };
 use adapt::quant::{
     format_kl, format_kl_prepared, push_down, push_down_layers, push_down_layers_seq,
-    push_down_naive, PushDownJob, PushDownScratch, KL_EPS,
+    push_down_naive, PushDownJob, PushDownScratch, QuantPool, KL_EPS,
 };
 use adapt::util::json::Json;
 use adapt::util::rng::Rng;
@@ -117,6 +117,31 @@ fn main() {
         std::hint::black_box(quantization_kl(&w_small, &q, 100));
     });
 
+    // ---- quantize_bin: scalar kernel vs chunked SIMD-friendly kernel -----
+    println!("-- quantize_bin kernel: scalar vs chunked -----------");
+    let (mut qb_lo, mut qb_hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &x in &w_small {
+        qb_lo = qb_lo.min(x);
+        qb_hi = qb_hi.max(x);
+    }
+    let mut qb_hist = Histogram::new(qb_lo, qb_hi, 100);
+    let name = "quantize_bin scalar 64k @ r=100";
+    let m = bench(name, 50, || {
+        qb_hist.reset(qb_lo, qb_hi, 100);
+        std::hint::black_box(quantize_bin_scalar(&w_small, fmt, &mut qb_hist));
+    });
+    tracked(&mut entries, name, m);
+    let qb_scalar = m;
+
+    let name = "quantize_bin chunked 64k @ r=100";
+    let m = bench(name, 50, || {
+        qb_hist.reset(qb_lo, qb_hi, 100);
+        std::hint::black_box(quantize_bin(&w_small, fmt, &mut qb_hist));
+    });
+    tracked(&mut entries, name, m);
+    let qb_chunked = m;
+    derived.push(("quantize_bin_chunked_speedup".to_string(), qb_scalar / qb_chunked));
+
     // ---- PushDown: naive reference vs fused single-pass engine -----------
     println!("-- PushDown engine: naive vs fused ------------------");
     let mut scratch = PushDownScratch::default();
@@ -165,8 +190,10 @@ fn main() {
     tracked(&mut entries, name, m);
     let pd1m_fused = m;
 
-    // ---- whole-net epoch switch: sequential vs parallel ------------------
+    // ---- whole-net epoch switch: sequential vs scoped spawn vs pool ------
     println!("-- whole-net epoch switch (per-layer PushDown) ------");
+    let pool = QuantPool::with_default_threads();
+    let mut pool_scratch = PushDownScratch::default();
     for (net, sizes) in [
         ("alexnet", alexnet_layer_sizes()),
         ("resnet20", resnet20_layer_sizes()),
@@ -189,19 +216,30 @@ fn main() {
             std::hint::black_box(push_down_layers_seq(&jobs));
         });
         tracked(&mut entries, &name_seq, m_seq);
-        let name_par = format!("epoch switch {net} ({} layers) parallel", jobs.len());
+        // PR 1 fan-out: fresh std::thread::scope team per call
+        let name_par = format!("epoch switch {net} ({} layers) scoped spawn", jobs.len());
         let m_par = bench(&name_par, 2, || {
             std::hint::black_box(push_down_layers(&jobs));
         });
         tracked(&mut entries, &name_par, m_par);
+        // persistent pool: workers + scratches live across calls
+        let name_pool = format!("epoch switch {net} ({} layers) pool", jobs.len());
+        let m_pool = bench(&name_pool, 2, || {
+            std::hint::black_box(pool.push_down_layers(&jobs, &mut pool_scratch));
+        });
+        tracked(&mut entries, &name_pool, m_pool);
         derived.push((format!("epoch_switch_{net}_parallel_speedup"), m_seq / m_par));
+        derived.push((format!("epoch_switch_{net}_pool_speedup"), m_seq / m_pool));
+        derived.push((format!("epoch_switch_{net}_pool_vs_scoped"), m_par / m_pool));
     }
 
     derived.push(("format_kl_64k_speedup".to_string(), kl_naive / kl_fused));
     derived.push(("push_down_64k_speedup".to_string(), pd64_naive / pd64_fused));
     derived.push(("push_down_1m_speedup".to_string(), pd1m_naive / pd1m_fused));
     println!(
-        "speedups: per-eval KL {:.2}x | push_down 64k {:.2}x | push_down 1M {:.2}x",
+        "speedups: quantize_bin chunked {:.2}x | per-eval KL {:.2}x | \
+         push_down 64k {:.2}x | push_down 1M {:.2}x",
+        qb_scalar / qb_chunked,
         kl_naive / kl_fused,
         pd64_naive / pd64_fused,
         pd1m_naive / pd1m_fused

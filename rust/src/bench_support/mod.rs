@@ -270,6 +270,8 @@ fn truncated(run: &RunRecord, n: usize) -> RunRecord {
     r.steps.truncate(n);
     r.layer_wl.truncate(n);
     r.layer_nz.truncate(n);
+    r.layer_wnz.truncate(n);
+    r.layer_wmax.truncate(n);
     r.layer_lb.truncate(n);
     r.layer_res.truncate(n);
     r
@@ -533,12 +535,12 @@ mod tests {
             steps: vec![StepRow { loss: 1.0, ce: 1.0, acc: 0.5 }; n],
             layer_wl: vec![vec![10; l]; n],
             layer_nz: vec![vec![0.8; l]; n],
+            layer_wnz: vec![vec![0.9; l]; n],
+            layer_wmax: vec![vec![1.0; l]; n],
             layer_lb: vec![vec![10; l]; n],
             layer_res: vec![vec![50; l]; n],
             evals: vec![(2, 0.4), (5, 0.6), (8, 0.9)],
-            switches: vec![],
-            wall_secs: 0.0,
-            switch_secs: 0.0,
+            ..Default::default()
         }
     }
 
@@ -548,6 +550,8 @@ mod tests {
         let t = truncated(&r, 4);
         assert_eq!(t.steps.len(), 4);
         assert_eq!(t.layer_wl.len(), 4);
+        assert_eq!(t.layer_wnz.len(), 4);
+        assert_eq!(t.layer_wmax.len(), 4);
         assert_eq!(t.layer_lb.len(), 4);
     }
 

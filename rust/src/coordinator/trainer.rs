@@ -11,7 +11,7 @@ use crate::data::{Dataset, PrefetchLoader, SyntheticVision};
 use crate::init::{self, Initializer};
 use crate::metrics::{RunRecord, StepRow, SwitchEventLite};
 use crate::muppet::{MuppetController, MuppetHyper};
-use crate::quant::{AdaptController, Float32Controller, QuantController, QuantHyper};
+use crate::quant::{AdaptController, Float32Controller, QuantController, QuantHyper, QuantPool};
 use crate::runtime::{Engine, Hyper, LoadedModel, TrainState};
 
 use super::scheduler::LrSchedule;
@@ -155,9 +155,15 @@ fn datasets_for(
 fn make_controller(
     policy: &Policy,
     man: &crate::runtime::Manifest,
+    pool: &Option<Arc<QuantPool>>,
 ) -> Box<dyn QuantController> {
     match policy {
-        Policy::Adapt(h) => Box::new(AdaptController::new(man, *h)),
+        Policy::Adapt(h) => {
+            let pool = pool
+                .clone()
+                .unwrap_or_else(|| Arc::new(QuantPool::with_default_threads()));
+            Box::new(AdaptController::with_pool(man, *h, pool))
+        }
         Policy::Muppet(h) => Box::new(MuppetController::new(man, h.clone())),
         Policy::Float32 => Box::new(Float32Controller::new(man)),
     }
@@ -219,7 +225,16 @@ pub fn train_with_data(
     }
     let batch = man.batch;
     let steps_per_epoch = (data.len() / batch).max(1);
-    let mut controller = make_controller(&cfg.policy, man);
+    // The trainer owns the persistent quantization worker pool; the
+    // controller shares it for on-step window batches, the epoch-boundary
+    // re-sync and the PushUp lookback fan-out. Workers spawn once per run,
+    // not once per precision switch — and only for policies that actually
+    // fan work out (baselines never submit a job, so they get no threads).
+    let pool: Option<Arc<QuantPool>> = match &cfg.policy {
+        Policy::Adapt(_) => Some(Arc::new(QuantPool::with_default_threads())),
+        _ => None,
+    };
+    let mut controller = make_controller(&cfg.policy, man, &pool);
 
     let mut state = TrainState {
         params: init::init_params(man, cfg.init, cfg.init_scale, cfg.seed),
@@ -268,6 +283,14 @@ pub fn train_with_data(
             if !lb.is_empty() {
                 rec.layer_lb.push(lb);
                 rec.layer_res.push(controller.resolutions());
+            }
+            // PushDown-measured weight stats (sp / max|w| from the fused
+            // pass) — the perf model prefers these over the device-reported
+            // sparsity; empty for policies that never measure them.
+            let wnz = controller.weight_nz();
+            if !wnz.is_empty() {
+                rec.layer_wnz.push(wnz);
+                rec.layer_wmax.push(controller.weight_max_abs());
             }
             if cfg.log_every > 0 && global_step % cfg.log_every as u64 == 0 {
                 eprintln!(

@@ -11,6 +11,17 @@ use std::fmt;
 pub const WL_MAX: u8 = 32;
 pub const FL_MAX: u8 = 31;
 
+/// A `<WL, FL>` pair: total word length (sign + integer + fraction bits)
+/// and fraction length.
+///
+/// ```
+/// use adapt::fixedpoint::FixedPointFormat;
+///
+/// let fmt = FixedPointFormat::new(8, 4); // the paper's initial format
+/// assert_eq!(fmt.quantize_nr(0.3), 0.3125); // snaps to the 1/16 grid
+/// assert_eq!(fmt.max_value(), 127.0 / 16.0); // q in [-128, 127]
+/// assert!(fmt.representable(-0.5));
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct FixedPointFormat {
     pub wl: u8,
@@ -115,15 +126,25 @@ impl FixedPointFormat {
     }
 }
 
+/// Magic constant of the round-to-nearest-even trick: 1.5·2^23. Adding it
+/// forces an |x| < 2^22 intermediate into [2^23, 2^24), where the f32 ULP is
+/// exactly 1, so IEEE default rounding of the addition IS round-half-even.
+/// Shared with the chunked `quantize_bin` kernel so both compute
+/// bit-identical lanes.
+pub const RNE_MAGIC: f32 = 12_582_912.0;
+
+/// |x| bound (2^22) below which the magic-number RNE is exact. Above it the
+/// slow scalar [`round_half_even`] must be used: |x| ≥ 2^23 is already
+/// integral, and the [2^22, 2^23) band has representable halves but no valid
+/// magic constant.
+pub const RNE_FAST_LIMIT: f32 = 4_194_304.0;
+
 /// Branch-light round-half-to-even used by the fused quantize+bin kernel.
 ///
-/// For |x| < 2^22 the classic magic-number trick applies: adding 1.5·2^23
-/// forces the intermediate into [2^23, 2^24), where the f32 ULP is exactly 1,
-/// so the IEEE default rounding (ties-to-even) of the addition IS the
-/// round-half-even we need; the subtraction is then exact. The tie parity is
+/// For |x| < [`RNE_FAST_LIMIT`] the classic magic-number trick applies (see
+/// [`RNE_MAGIC`]); the subtraction is then exact, and the tie parity is
 /// preserved because the magic constant is even. Outside that range the
-/// scalar reference takes over (|x| ≥ 2^23 is already integral; the
-/// [2^22, 2^23) band has representable halves but no valid magic constant).
+/// scalar reference takes over.
 ///
 /// Agrees with [`round_half_even`] on every input (NaN/±inf included), up to
 /// the sign of a zero result: negatives in (-0.5, -0.0] round to -0.0 via the
@@ -133,9 +154,8 @@ impl FixedPointFormat {
 /// `rust/tests/quant_fused_parallel.rs`.
 #[inline]
 pub fn round_half_even_fast(x: f32) -> f32 {
-    const MAGIC: f32 = 12_582_912.0; // 1.5 * 2^23
-    if x.abs() < 4_194_304.0 {
-        (x + MAGIC) - MAGIC
+    if x.abs() < RNE_FAST_LIMIT {
+        (x + RNE_MAGIC) - RNE_MAGIC
     } else {
         round_half_even(x)
     }

@@ -1,4 +1,15 @@
 //! Fixed-point arithmetic substrate (host side, mirrors the L1 kernels).
+//!
+//! * [`format`] — the `<WL, FL>` signed fixed-point format (sec. 2.1) with
+//!   nearest (round-half-even) and stochastic rounding, plus the
+//!   magic-number RNE constants shared by the scalar and chunked kernels.
+//! * [`histogram`] — equal-width empirical distributions and the discrete
+//!   KL divergence of eq. 1/2.
+//! * [`quantize`] — whole-tensor quantization, including the fused chunked
+//!   [`quantize_bin`] kernel (quantize + bin + zero-count in one pass) that
+//!   powers the PushDown engine.
+//! * [`sparse`] — the CSR-ish deployment substrate for quantized sparse
+//!   inference.
 
 pub mod format;
 pub mod histogram;
@@ -8,7 +19,7 @@ pub mod sparse;
 pub use format::FixedPointFormat;
 pub use histogram::{kl_divergence, quantization_kl, Histogram};
 pub use quantize::{
-    max_abs, quantize_bin, quantize_nr_into, quantize_nr_slice, quantize_sr_into,
-    quantize_sr_slice, zero_fraction,
+    max_abs, quantize_bin, quantize_bin_scalar, quantize_nr_into, quantize_nr_slice,
+    quantize_sr_into, quantize_sr_slice, zero_fraction, QUANTIZE_LANES,
 };
 pub use sparse::SparseFixedTensor;

@@ -4,8 +4,23 @@
 //! and by the sparse inference path. Semantics match
 //! `python/compile/kernels/fixedpoint.py` exactly; the parity is asserted by
 //! `rust/tests/parity.rs` against the compiled artifacts.
+//!
+//! The hot path is the fused, chunked [`quantize_bin`] kernel, which
+//! quantizes, histogram-bins and zero-counts a tensor in one pass:
+//!
+//! ```
+//! use adapt::fixedpoint::{quantize_bin, FixedPointFormat, Histogram};
+//!
+//! let xs = [0.0f32, 0.26, -0.7, 0.02];
+//! let mut hist = Histogram::new(-1.0, 1.0, 8);
+//! let zeros = quantize_bin(&xs, FixedPointFormat::new(8, 4), &mut hist);
+//! assert_eq!(hist.total, 4);
+//! assert_eq!(zeros, 2); // 0.0 and 0.02 both snap to zero on the 1/16 grid
+//! ```
 
-use super::format::{round_half_even_fast, FixedPointFormat};
+use super::format::{
+    round_half_even, round_half_even_fast, FixedPointFormat, RNE_FAST_LIMIT, RNE_MAGIC,
+};
 use super::histogram::Histogram;
 use crate::util::rng::Rng;
 
@@ -23,28 +38,102 @@ pub fn quantize_nr_into(xs: &[f32], fmt: FixedPointFormat, out: &mut Vec<f32>) {
     out.extend(xs.iter().map(|&x| fmt.quantize_nr(x)));
 }
 
-/// Fused quantize + histogram-bin: the single-pass kernel of the PushDown
-/// engine. Each element is quantized in the integer domain (precomputed
-/// `scale`/`inv_scale`, branch-light round-half-even, branchless clamp) and
-/// its quantized value is binned straight into `hist` — the quantized tensor
-/// is never materialized.
+/// Lane width of the chunked [`quantize_bin`] kernel: wide enough to fill
+/// full SIMD registers at any common vector width (SSE2 f32x4 through
+/// AVX-512 f32x16) once the autovectorizer unrolls the quantize phase.
+pub const QUANTIZE_LANES: usize = 16;
+
+/// Fused quantize + histogram-bin + zero-count: the single-pass kernel of
+/// the PushDown engine. Returns the number of quantized values that are
+/// exactly zero (the complement of the paper's sp in eq. 8/9), measured in
+/// the same pass — the quantized tensor is never materialized and no extra
+/// scan is needed for the sparsity statistic.
+///
+/// # SIMD-friendly structure
+///
+/// The kernel walks the tensor in [`QUANTIZE_LANES`]-wide chunks. Phase A
+/// quantizes a whole chunk into a stack lane buffer with straight-line,
+/// branch-free arithmetic — `x * scale`, the magic-number round-to-nearest-
+/// even (`(s + RNE_MAGIC) - RNE_MAGIC`), a two-sided clamp and the rescale —
+/// which LLVM autovectorizes (verified via `cargo bench --bench micro`:
+/// chunked-vs-scalar medians land in `BENCH_pushdown.json`). The magic
+/// trick is only exact for |s| < [`RNE_FAST_LIMIT`]; phase A also reduces an
+/// `all_fast` lane mask, and the rare chunk containing a larger (or
+/// non-finite) scaled value gets those lanes recomputed through the scalar
+/// [`round_half_even`] fallback, preserving bit-parity. Phase B then bins
+/// the lane buffer — a scatter, inherently scalar, but operating on
+/// register/L1-resident values.
 ///
 /// Count-exact with the naive two-pass `quantize_nr_into` +
 /// `Histogram::from_slice` for every input (the bin index is computed by the
-/// same `Histogram::bin_of`, and the integer-domain quantize equals
-/// `FixedPointFormat::quantize_nr` element-wise; NaNs follow the same
-/// saturating-cast path into bin 0 on both sides).
-pub fn quantize_bin(xs: &[f32], fmt: FixedPointFormat, hist: &mut Histogram) {
+/// same `Histogram::bin_of`, and the quantize agrees element-wise with
+/// `FixedPointFormat::quantize_nr` up to the sign of zero; NaNs follow the
+/// same saturating-cast path into bin 0 on both sides). Bit-parity with the
+/// kept scalar reference [`quantize_bin_scalar`] is gated by the property
+/// tests in `rust/tests/quant_fused_parallel.rs`.
+pub fn quantize_bin(xs: &[f32], fmt: FixedPointFormat, hist: &mut Histogram) -> u64 {
     let scale = fmt.scale();
     let inv_scale = 1.0 / scale;
     let qmin = fmt.qmin();
     let qmax = fmt.qmax();
-    for &x in xs {
+    let mut zeros = 0u64;
+    let mut lane = [0.0f32; QUANTIZE_LANES];
+    let mut chunks = xs.chunks_exact(QUANTIZE_LANES);
+    for chunk in &mut chunks {
+        // Phase A: branch-free quantize of the whole chunk (vectorizable).
+        let mut all_fast = true;
+        for (q, &x) in lane.iter_mut().zip(chunk) {
+            let s = x * scale;
+            let r = (s + RNE_MAGIC) - RNE_MAGIC;
+            all_fast &= s.abs() < RNE_FAST_LIMIT; // false for NaN too
+            *q = r.clamp(qmin, qmax) * inv_scale;
+        }
+        if !all_fast {
+            // Rare: huge scaled values (or NaN/inf) where the magic-number
+            // rounding is invalid — redo exactly those lanes via the scalar
+            // reference so the result stays bit-identical to quantize_nr.
+            for (q, &x) in lane.iter_mut().zip(chunk) {
+                let s = x * scale;
+                if !(s.abs() < RNE_FAST_LIMIT) {
+                    *q = round_half_even(s).clamp(qmin, qmax) * inv_scale;
+                }
+            }
+        }
+        // Phase B: scalar scatter of the lane buffer into the histogram.
+        for &q in &lane {
+            zeros += u64::from(q == 0.0);
+            let i = hist.bin_of(q);
+            hist.counts[i] += 1;
+        }
+    }
+    for &x in chunks.remainder() {
         let q = round_half_even_fast(x * scale).clamp(qmin, qmax) * inv_scale;
+        zeros += u64::from(q == 0.0);
         let i = hist.bin_of(q);
         hist.counts[i] += 1;
     }
     hist.total += xs.len() as u64;
+    zeros
+}
+
+/// The pre-chunking scalar fused kernel (PR 1): one element at a time
+/// through [`round_half_even_fast`]. Kept as the bit-parity reference for
+/// the chunked [`quantize_bin`] and as the "before" side of the
+/// chunked-vs-scalar comparison in `benches/micro.rs`.
+pub fn quantize_bin_scalar(xs: &[f32], fmt: FixedPointFormat, hist: &mut Histogram) -> u64 {
+    let scale = fmt.scale();
+    let inv_scale = 1.0 / scale;
+    let qmin = fmt.qmin();
+    let qmax = fmt.qmax();
+    let mut zeros = 0u64;
+    for &x in xs {
+        let q = round_half_even_fast(x * scale).clamp(qmin, qmax) * inv_scale;
+        zeros += u64::from(q == 0.0);
+        let i = hist.bin_of(q);
+        hist.counts[i] += 1;
+    }
+    hist.total += xs.len() as u64;
+    zeros
 }
 
 /// Stochastic-rounding quantize with noise from `rng`.
@@ -158,9 +247,39 @@ mod tests {
             quantize_nr_into(&xs, fmt, &mut buf);
             let naive = Histogram::from_slice(&buf, lo, hi, 100);
             let mut fused = Histogram::new(lo, hi, 100);
-            quantize_bin(&xs, fmt, &mut fused);
+            let zeros = quantize_bin(&xs, fmt, &mut fused);
             assert_eq!(naive.counts, fused.counts, "<{wl},{fl}>");
             assert_eq!(naive.total, fused.total);
+            // the ridden-along zero count equals a recount of the quantized buffer
+            let recount = buf.iter().filter(|&&q| q == 0.0).count() as u64;
+            assert_eq!(zeros, recount, "<{wl},{fl}>");
+        }
+    }
+
+    #[test]
+    fn chunked_matches_scalar_reference_bit_for_bit() {
+        let mut r = Rng::seed_from(77);
+        // lengths straddling the lane width, incl. remainder-only tensors
+        for n in [0usize, 1, 7, 15, 16, 17, 31, 33, 1000, 4096 + 5] {
+            let mut xs: Vec<f32> = (0..n).map(|_| (r.normal() * 0.4) as f32).collect();
+            // salt with values that force the slow rounding path and NaN bins
+            if n >= 16 {
+                xs[3] = 1e9;
+                xs[5] = -1e9;
+                xs[9] = f32::NAN;
+                xs[12] = f32::INFINITY;
+            }
+            let (lo, hi) = (-2.0f32, 2.0f32);
+            for (wl, fl) in [(4u8, 2u8), (8, 4), (16, 10), (32, 16)] {
+                let fmt = FixedPointFormat::new(wl, fl);
+                let mut a = Histogram::new(lo, hi, 64);
+                let mut b = Histogram::new(lo, hi, 64);
+                let za = quantize_bin(&xs, fmt, &mut a);
+                let zb = quantize_bin_scalar(&xs, fmt, &mut b);
+                assert_eq!(a.counts, b.counts, "n={n} <{wl},{fl}>");
+                assert_eq!(a.total, b.total);
+                assert_eq!(za, zb, "n={n} <{wl},{fl}>");
+            }
         }
     }
 
@@ -171,13 +290,15 @@ mod tests {
         // constant tensor: degenerate (padded) range, everything in bin 0
         let xs = vec![0.25f32; 128];
         let mut h = Histogram::new(0.25, 0.25, 10);
-        quantize_bin(&xs, fmt, &mut h);
+        let zeros = quantize_bin(&xs, fmt, &mut h);
         assert_eq!(h.total, 128);
         assert_eq!(h.counts[0], 128);
+        assert_eq!(zeros, 0, "0.25 is on the <8,4> grid, not zero");
         // values far outside the format's range clamp, then bin at the edges
         let wild = vec![1e9f32, -1e9, 0.0];
         let mut hw = Histogram::new(-1e9, 1e9, 4);
-        quantize_bin(&wild, fmt, &mut hw);
+        let zw = quantize_bin(&wild, fmt, &mut hw);
+        assert_eq!(zw, 1);
         let mut buf = Vec::new();
         quantize_nr_into(&wild, fmt, &mut buf);
         let naive = Histogram::from_slice(&buf, -1e9, 1e9, 4);

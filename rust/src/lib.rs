@@ -14,7 +14,10 @@
 //!   harness regenerating every table and figure of the paper.
 //!
 //! Python never runs on the training path: `make artifacts` once, then the
-//! `adapt` binary is self-contained. See DESIGN.md for the full map.
+//! `adapt` binary is self-contained. See DESIGN.md for the full design
+//! rationale and `ARCHITECTURE.md` for the paper↔code map (equation /
+//! algorithm → module / function) plus the data-flow of the precision
+//! switching hot path (trainer → qmap → pool → pushdown/pushup).
 
 pub mod bench_support;
 pub mod coordinator;

@@ -36,6 +36,13 @@ pub struct RunRecord {
     pub layer_lb: Vec<Vec<u32>>,
     /// [step][layer] resolution (AdaPT overhead, eq. 6); empty for baselines
     pub layer_res: Vec<Vec<u32>>,
+    /// [step][layer] weight NON-ZERO fraction measured by the fused PushDown
+    /// pass (sampled at switches, held constant in between; 1.0 before a
+    /// layer's first switch). Empty for policies that never measure it.
+    /// When present, the perf model prefers these rows over `layer_nz`.
+    pub layer_wnz: Vec<Vec<f32>>,
+    /// [step][layer] max |w| from the same measurement; empty for baselines.
+    pub layer_wmax: Vec<Vec<f32>>,
     /// (step, top-1 accuracy) evaluation points
     pub evals: Vec<(u64, f32)>,
     pub switches: Vec<SwitchEventLite>,
@@ -151,6 +158,14 @@ impl RunRecord {
             Json::Arr(self.layer_nz.iter().map(|r| arr_f32(r)).collect()),
         );
         m.insert(
+            "layer_wnz".into(),
+            Json::Arr(self.layer_wnz.iter().map(|r| arr_f32(r)).collect()),
+        );
+        m.insert(
+            "layer_wmax".into(),
+            Json::Arr(self.layer_wmax.iter().map(|r| arr_f32(r)).collect()),
+        );
+        m.insert(
             "layer_lb".into(),
             Json::Arr(
                 self.layer_lb
@@ -224,6 +239,25 @@ impl RunRecord {
                 })
                 .collect())
         };
+        // optional [step][layer] f32 matrix: absent in records written
+        // before the field existed -> empty (callers treat empty as
+        // "not measured")
+        let opt_mat = |k: &str| -> Vec<Vec<f32>> {
+            j.get(k)
+                .and_then(|v| v.as_arr())
+                .map(|rows| {
+                    rows.iter()
+                        .map(|r| {
+                            r.as_arr()
+                                .unwrap_or(&[])
+                                .iter()
+                                .map(|v| v.as_f64().unwrap_or(0.0) as f32)
+                                .collect()
+                        })
+                        .collect()
+                })
+                .unwrap_or_default()
+        };
         let loss = f32s("loss")?;
         let ce = f32s("ce")?;
         let acc = f32s("acc")?;
@@ -254,6 +288,9 @@ impl RunRecord {
                 .map(|r| r.into_iter().map(|v| v as u8).collect())
                 .collect(),
             layer_nz: mat("layer_nz")?,
+            // absent in records written before the stats-threading PR
+            layer_wnz: opt_mat("layer_wnz"),
+            layer_wmax: opt_mat("layer_wmax"),
             layer_lb: lb_m
                 .into_iter()
                 .map(|r| r.into_iter().map(|v| v as u32).collect())
@@ -338,6 +375,8 @@ mod tests {
             ],
             layer_wl: vec![vec![8, 8], vec![12, 10]],
             layer_nz: vec![vec![0.9, 0.8], vec![0.7, 0.6]],
+            layer_wnz: vec![vec![1.0, 1.0], vec![0.75, 0.625]],
+            layer_wmax: vec![vec![0.0, 0.0], vec![1.5, 2.25]],
             layer_lb: vec![vec![50, 50], vec![40, 60]],
             layer_res: vec![vec![100, 100], vec![99, 101]],
             evals: vec![(3, 0.5), (6, 0.7)],
@@ -363,6 +402,8 @@ mod tests {
         assert_eq!(back.name, r.name);
         assert_eq!(back.layer_wl, r.layer_wl);
         assert_eq!(back.layer_nz, r.layer_nz);
+        assert_eq!(back.layer_wnz, r.layer_wnz);
+        assert_eq!(back.layer_wmax, r.layer_wmax);
         assert_eq!(back.evals, r.evals);
         assert_eq!(back.switches.len(), 1);
         assert_eq!(back.switches[0].new_wl, 12);
@@ -378,6 +419,19 @@ mod tests {
         }
         let back = RunRecord::from_json(&j).unwrap();
         assert_eq!(back.switch_secs, 0.0);
+    }
+
+    #[test]
+    fn records_without_measured_weight_stats_still_load() {
+        // records written before the stats-threading PR lack both matrices
+        let mut j = sample_record().to_json();
+        if let crate::util::json::Json::Obj(m) = &mut j {
+            m.remove("layer_wnz");
+            m.remove("layer_wmax");
+        }
+        let back = RunRecord::from_json(&j).unwrap();
+        assert!(back.layer_wnz.is_empty());
+        assert!(back.layer_wmax.is_empty());
     }
 
     #[test]

@@ -6,9 +6,40 @@
 //! We reimplement the model verbatim (including its stated quirks: sz and
 //! mem ignore tensor dimensions, which cancels in the SZ/MEM ratios when
 //! comparing identical architectures) and add dimension-weighted variants.
+//!
+//! # Where sp comes from
+//!
+//! Every cost formula weights a layer's MAdds by its weight non-zero
+//! fraction sp. When a run recorded measured statistics
+//! (`RunRecord::layer_wnz`: the controller's per-switch zero counts at the
+//! format each layer actually runs at, threaded through the trainer), those
+//! are used; otherwise the model falls back to the device-reported
+//! `layer_nz` rows, exactly as before.
+//!
+//! ```
+//! use adapt::perfmodel::speedup;
+//!
+//! // SU = (bs_other · costs_other) / (bs_ours · (costs_ours + overhead));
+//! // a policy with identical cost and no overhead is exactly 1x
+//! assert!((speedup(32, 100.0, 0.0, 32, 100.0) - 1.0).abs() < 1e-12);
+//! // half the cost (e.g. sp·WL = 16 vs WL = 32) with a 10% overhead
+//! let su = speedup(32, 50.0, 5.0, 32, 100.0);
+//! assert!(su > 1.8 && su < 1.82);
+//! ```
 
 use crate::metrics::RunRecord;
 use crate::runtime::manifest::LayerDesc;
+
+/// Per-step sp rows for the cost formulas: the PushDown-measured weight
+/// non-zero fractions when the run recorded them for every step, else the
+/// device-reported `layer_nz`.
+fn sp_rows(run: &RunRecord) -> &[Vec<f32>] {
+    if !run.layer_wnz.is_empty() && run.layer_wnz.len() == run.layer_wl.len() {
+        &run.layer_wnz
+    } else {
+        &run.layer_nz
+    }
+}
 
 /// Eq. 6: PushDown cost bound for one layer at one switch-evaluation:
 /// 2 * log2(32-8) * r * 3 * prod(dims).
@@ -27,7 +58,7 @@ pub fn ops_pushup(lookback: u32, weight_elems: u64) -> f64 {
 pub fn train_costs(layers: &[LayerDesc], run: &RunRecord) -> f64 {
     let accs = run.accs.max(1) as f64;
     let mut total = 0.0;
-    for (wl_row, nz_row) in run.layer_wl.iter().zip(&run.layer_nz) {
+    for (wl_row, nz_row) in run.layer_wl.iter().zip(sp_rows(run)) {
         for (l, desc) in layers.iter().enumerate() {
             let wl = wl_row[l] as f64;
             let sp = nz_row[l] as f64; // non-zero fraction
@@ -68,7 +99,7 @@ pub fn adapt_overhead(layers: &[LayerDesc], run: &RunRecord) -> f64 {
         .layer_lb
         .iter()
         .zip(&run.layer_res)
-        .zip(&run.layer_nz)
+        .zip(sp_rows(run))
     {
         for (l, desc) in layers.iter().enumerate() {
             let lb = lb_row[l].max(1) as f64;
@@ -94,7 +125,7 @@ pub fn speedup(
 
 /// Paper sz (dimension-free): sum_l sp_n^l * WL_n^l at the final step.
 pub fn model_size_paper(run: &RunRecord) -> f64 {
-    match (run.layer_wl.last(), run.layer_nz.last()) {
+    match (run.layer_wl.last(), sp_rows(run).last()) {
         (Some(wl), Some(nz)) => wl
             .iter()
             .zip(nz)
@@ -106,7 +137,7 @@ pub fn model_size_paper(run: &RunRecord) -> f64 {
 
 /// Dimension-weighted model size in bits (what an ASIC would actually store).
 pub fn model_size_bits(layers: &[LayerDesc], run: &RunRecord) -> f64 {
-    match (run.layer_wl.last(), run.layer_nz.last()) {
+    match (run.layer_wl.last(), sp_rows(run).last()) {
         (Some(wl), Some(nz)) => layers
             .iter()
             .enumerate()
@@ -130,7 +161,7 @@ pub fn mem_paper(run: &RunRecord) -> f64 {
         return 0.0;
     }
     let mut acc = 0.0;
-    for (wl_row, nz_row) in run.layer_wl.iter().zip(&run.layer_nz) {
+    for (wl_row, nz_row) in run.layer_wl.iter().zip(sp_rows(run)) {
         for (w, s) in wl_row.iter().zip(nz_row) {
             acc += *s as f64 * *w as f64 + 32.0;
         }
@@ -147,7 +178,7 @@ pub fn mem_ratio(run: &RunRecord) -> f64 {
 /// Inference cost: forward MAdds weighted by final WL and sparsity (no
 /// backward pass, no AdaPT overhead — sec. 4.2.2).
 pub fn inference_cost(layers: &[LayerDesc], run: &RunRecord) -> f64 {
-    match (run.layer_wl.last(), run.layer_nz.last()) {
+    match (run.layer_wl.last(), sp_rows(run).last()) {
         (Some(wl), Some(nz)) => layers
             .iter()
             .enumerate()
@@ -176,7 +207,7 @@ pub fn relative_cost_series(layers: &[LayerDesc], run: &RunRecord) -> Vec<f64> {
         .sum();
     run.layer_wl
         .iter()
-        .zip(&run.layer_nz)
+        .zip(sp_rows(run))
         .map(|(wl_row, nz_row)| {
             let c: f64 = layers
                 .iter()
@@ -193,7 +224,7 @@ pub fn relative_mem_series(run: &RunRecord) -> Vec<f64> {
     let f32_mem = 32.0 * run.num_layers as f64;
     run.layer_wl
         .iter()
-        .zip(&run.layer_nz)
+        .zip(sp_rows(run))
         .map(|(wl_row, nz_row)| {
             let m: f64 = wl_row
                 .iter()
@@ -246,10 +277,7 @@ mod tests {
             layer_nz: vec![vec![nz; 2]; steps],
             layer_lb: vec![vec![50; 2]; steps],
             layer_res: vec![vec![100; 2]; steps],
-            evals: vec![],
-            switches: vec![],
-            wall_secs: 0.0,
-            switch_secs: 0.0,
+            ..Default::default()
         }
     }
 
@@ -327,6 +355,31 @@ mod tests {
     fn eq6_eq7_formulas() {
         assert!((ops_pushdown(100, 10) - 2.0 * (24.0f64).log2() * 100.0 * 30.0).abs() < 1e-9);
         assert!((ops_pushup(50, 10) - (51.0 * 10.0 + 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn measured_weight_stats_take_precedence() {
+        let l = layers();
+        let mut r = run(16, 1.0, 5); // device reports fully dense
+        let base = train_costs(&l, &r);
+        // PushDown measured half the weights quantized to zero
+        r.layer_wnz = vec![vec![0.5; 2]; 5];
+        r.layer_wmax = vec![vec![1.0; 2]; 5];
+        let measured = train_costs(&l, &r);
+        assert!(measured < base, "{measured} vs {base}");
+        // per layer-step: 0.5*16 + 32 = 40 vs 1.0*16 + 32 = 48
+        assert!((measured / base - 40.0 / 48.0).abs() < 1e-12);
+        // size/mem/inference follow the same preference
+        assert!((size_ratio(&r) - 0.5 * 16.0 * 2.0 / 64.0).abs() < 1e-12);
+        let inf_measured = inference_cost(&l, &r);
+        r.layer_wnz.clear();
+        r.layer_wmax.clear();
+        let inf_device = inference_cost(&l, &r);
+        assert!(inf_measured < inf_device);
+        // a partially recorded matrix (length mismatch) falls back cleanly
+        let mut p = run(16, 1.0, 5);
+        p.layer_wnz = vec![vec![0.5; 2]; 2];
+        assert_eq!(train_costs(&l, &p), base);
     }
 
     #[test]

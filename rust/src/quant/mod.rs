@@ -1,17 +1,39 @@
 //! The AdaPT precision-switching mechanism (sec. 3.3): PushDown, PushUp,
 //! runtime schedule adaptation and the per-layer quantization mapping.
+//!
+//! Module map (see `ARCHITECTURE.md` for the full paper↔code table):
+//!
+//! * [`pushdown`] — alg. 3: smallest lossless `<WL, FL>` via KL bisection,
+//!   run by the fused single-pass engine; also measures per-tensor sp and
+//!   max |w| for the performance model.
+//! * [`pushup`] — alg. 4 / eq. 3–5: gradient-diversity-driven precision
+//!   bump, plus the batched lookback-evaluation jobs.
+//! * [`pool`] — the persistent [`QuantPool`] worker team all multi-layer
+//!   fan-outs (on-step window batches, epoch-boundary re-sync, PushUp
+//!   lookback evals) share.
+//! * [`parallel`] — the PR 1 scoped-spawn fan-out, kept as the parallel
+//!   reference implementation for tests and benches.
+//! * [`qmap`] — alg. 1/2: the per-layer `PrecisionSwitch` controller
+//!   driving qparams into the compiled step.
+//! * [`schedule`] — sec. 3.3 runtime adaptation of strategy, lookback and
+//!   resolution.
 
 pub mod parallel;
+pub mod pool;
 pub mod pushdown;
 pub mod pushup;
 pub mod qmap;
 pub mod schedule;
 
 pub use parallel::{push_down_layers, push_down_layers_seq, PushDownJob};
+pub use pool::QuantPool;
 pub use pushdown::{
     format_kl, format_kl_prepared, push_down, push_down_naive, PushDownResult, PushDownScratch,
     KL_EPS,
 };
-pub use pushup::{gradient_diversity, push_up, Strategy};
+pub use pushup::{
+    evaluate_push_up, gradient_diversity, gsum_norm, push_up, push_up_layers_seq, PushUpEval,
+    PushUpJob, Strategy, WindowGrad,
+};
 pub use qmap::{AdaptController, Float32Controller, QuantController, SwitchEvent};
 pub use schedule::{adapt_lookback, adapt_resolution, QuantHyper, StrategyCtl};

@@ -1,12 +1,16 @@
-//! Parallel per-layer PushDown.
+//! Scoped-spawn parallel per-layer PushDown (the PR 1 fan-out, kept as the
+//! reference implementation).
 //!
 //! PushDown calls for different layers are fully independent: each reads one
-//! weight tensor and its own scratch. When several layers need a precision
-//! switch at the same step (or at the epoch-boundary sync), the evaluations
-//! fan out across OS threads with `std::thread::scope` — no external
-//! dependencies, no long-lived pool. Work is handed out by an atomic cursor
-//! so a large conv layer does not serialise behind a string of tiny dense
-//! layers; each worker owns one `PushDownScratch` for its whole run.
+//! weight tensor and its own scratch, with work handed out by an atomic
+//! cursor so a large conv layer does not serialise behind a string of tiny
+//! dense layers. This module fans the evaluations out with a fresh
+//! `std::thread::scope` team per call — the **production path is the
+//! persistent [`crate::quant::pool::QuantPool`]**, which amortises the
+//! thread spawns and scratch allocations this version pays on every call.
+//! The scoped version stays as (a) the simplest correct parallel reference
+//! the pool's property tests compare against and (b) the "before" side of
+//! the pool-vs-scoped comparison in `benches/micro.rs`.
 //!
 //! Determinism: every job is computed by exactly one worker with the same
 //! single-threaded `push_down`, so the returned results are bit-identical to

@@ -1,0 +1,406 @@
+//! Persistent quantization worker pool.
+//!
+//! PR 1 fanned per-layer PushDown evaluations out with `std::thread::scope`
+//! (`quant::parallel`), which re-spawns an OS thread team — and re-allocates
+//! every worker's [`PushDownScratch`] — on every call. This module replaces
+//! that per-call spawn with a long-lived pool: workers are spawned once,
+//! each owns one scratch for its whole lifetime, and batches of jobs are fed
+//! through a channel. The pool is owned by the trainer and shared by the
+//! on-step window batches, the epoch-boundary whole-net re-sync, and the
+//! PushUp lookback fan-out (`quant::pushup::PushUpJob`).
+//!
+//! # Execution model
+//!
+//! [`QuantPool::new(parallelism)`](QuantPool::new) spawns `parallelism - 1`
+//! helper threads: the caller of a batch always participates in draining the
+//! shared job cursor with its own scratch, so a pool built with
+//! `parallelism == 1` (the single-core testbed) degrades to the plain
+//! sequential loop with zero cross-thread traffic, and progress never
+//! depends on helper scheduling. Work is handed out by an atomic cursor —
+//! exactly as in `quant::parallel` — so a large conv layer does not
+//! serialise behind a string of tiny dense layers.
+//!
+//! # Determinism
+//!
+//! Every job index is claimed by exactly one runner and computed with the
+//! same single-threaded kernel, and results are returned in job order, so
+//! the output is bit-identical to the sequential reference regardless of
+//! thread count or scheduling (asserted by `rust/tests/quant_fused_parallel.rs`).
+//!
+//! # Panic behaviour
+//!
+//! A panicking job marks the batch and the panic is re-raised on the caller
+//! once every outstanding task has finished; helper threads survive (they
+//! catch the unwind and replace their scratch), so the pool stays usable.
+//!
+//! ```
+//! use adapt::quant::{PushDownJob, PushDownScratch, QuantPool, KL_EPS};
+//!
+//! let pool = QuantPool::new(2);
+//! let weights: Vec<f32> = (0..256).map(|i| 0.01 * (i as f32) - 1.25).collect();
+//! let jobs = [PushDownJob { weights: &weights, resolution: 60, eps: KL_EPS }];
+//! let mut scratch = PushDownScratch::default();
+//! let results = pool.push_down_layers(&jobs, &mut scratch);
+//! assert_eq!(results.len(), 1);
+//! assert!(results[0].sp > 0.0 && results[0].sp <= 1.0);
+//! ```
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+use super::parallel::{max_threads, PushDownJob};
+use super::pushdown::{push_down, PushDownResult, PushDownScratch};
+use super::pushup::{evaluate_push_up, PushUpEval, PushUpJob};
+
+/// A type-erased unit of pool work. Tasks are erased to `'static` when
+/// submitted; [`QuantPool::run_indexed`] guarantees they are joined before
+/// the borrows they carry go out of scope.
+type Task = Box<dyn FnOnce(&mut PushDownScratch) + Send + 'static>;
+
+/// Acquire a mutex even if a previous holder panicked: every structure the
+/// pool protects is either re-initialised per batch or append-only, so a
+/// poisoned lock carries no torn state worth refusing over.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Long-lived worker team for quantization fan-outs (see the module docs).
+pub struct QuantPool {
+    /// `None` only during shutdown (Drop takes the sender to close the
+    /// channel). Behind a mutex so submission works from `&self` on every
+    /// rustc the repo supports, independent of `mpsc::Sender: Sync`.
+    tx: Mutex<Option<Sender<Task>>>,
+    workers: Vec<JoinHandle<()>>,
+    parallelism: usize,
+}
+
+/// Shared per-batch state, stack-allocated in [`QuantPool::run_indexed`] and
+/// borrowed by the (lifetime-erased) helper tasks.
+struct Batch<'env, T, F> {
+    f: &'env F,
+    n: usize,
+    cursor: AtomicUsize,
+    /// (index, result) pairs merged in one lock acquisition per runner.
+    collected: Mutex<Vec<(usize, T)>>,
+    /// Helper tasks still running or queued for this batch.
+    outstanding: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl<T, F> Batch<'_, T, F>
+where
+    T: Send,
+    F: Fn(usize, &mut PushDownScratch) -> T + Sync,
+{
+    /// Claim indices off the shared cursor until the batch is exhausted.
+    fn drain(&self, scratch: &mut PushDownScratch) {
+        let mut local: Vec<(usize, T)> = Vec::new();
+        loop {
+            let i = self.cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                break;
+            }
+            local.push((i, (self.f)(i, scratch)));
+        }
+        if !local.is_empty() {
+            lock_unpoisoned(&self.collected).extend(local);
+        }
+    }
+}
+
+/// Signals one helper task's completion (run on drop, so a panicking job
+/// still releases the batch latch instead of deadlocking the caller).
+struct TaskGuard<'a> {
+    outstanding: &'a Mutex<usize>,
+    done: &'a Condvar,
+    panicked: &'a AtomicBool,
+}
+
+impl Drop for TaskGuard<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.panicked.store(true, Ordering::SeqCst);
+        }
+        let mut left = lock_unpoisoned(self.outstanding);
+        *left -= 1;
+        self.done.notify_all();
+    }
+}
+
+/// Blocks — also while unwinding — until every helper task of a batch has
+/// signalled. This is what makes the lifetime erasure in `run_indexed`
+/// sound: the batch state (and the job borrows inside it) cannot be freed
+/// while any task still references them.
+struct WaitGuard<'a> {
+    outstanding: &'a Mutex<usize>,
+    done: &'a Condvar,
+}
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        let mut left = lock_unpoisoned(self.outstanding);
+        while *left > 0 {
+            left = match self.done.wait(left) {
+                Ok(guard) => guard,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+        }
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Task>>>) {
+    // One scratch per worker for its whole lifetime: the allocation reuse
+    // the scoped-spawn path only got within a single call now spans every
+    // batch the pool ever runs.
+    let mut scratch = PushDownScratch::default();
+    loop {
+        let task = {
+            let guard = lock_unpoisoned(&rx);
+            guard.recv()
+        };
+        let Ok(task) = task else {
+            break; // channel closed: pool is shutting down
+        };
+        if catch_unwind(AssertUnwindSafe(|| task(&mut scratch))).is_err() {
+            // prepare() re-derives all cached state, but a fresh scratch
+            // guarantees nothing torn survives the unwind
+            scratch = PushDownScratch::default();
+        }
+    }
+}
+
+impl QuantPool {
+    /// Build a pool with the given total parallelism (caller + helpers).
+    /// `parallelism <= 1` spawns no threads at all.
+    pub fn new(parallelism: usize) -> QuantPool {
+        let parallelism = parallelism.max(1);
+        let (tx, rx) = channel::<Task>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers: Vec<JoinHandle<()>> = (1..parallelism)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name("adapt-quant-worker".into())
+                    .spawn(move || worker_loop(rx))
+                    .expect("spawning quant pool worker")
+            })
+            .collect();
+        QuantPool {
+            tx: Mutex::new(Some(tx)),
+            workers,
+            parallelism,
+        }
+    }
+
+    /// Pool sized by the `ADAPT_THREADS` / available-parallelism policy of
+    /// [`max_threads`].
+    pub fn with_default_threads() -> QuantPool {
+        QuantPool::new(max_threads())
+    }
+
+    /// Total parallelism of a batch run (caller + helper threads).
+    pub fn parallelism(&self) -> usize {
+        self.parallelism
+    }
+
+    /// Evaluate `f(0..n)` across the pool; results in index order. The
+    /// caller participates with `caller_scratch`; helpers use their own
+    /// long-lived scratches. Panics (after joining the batch) if any job
+    /// panicked.
+    pub fn run_indexed<T, F>(&self, n: usize, caller_scratch: &mut PushDownScratch, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize, &mut PushDownScratch) -> T + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        let helpers = self.parallelism.min(n).saturating_sub(1);
+        if helpers == 0 {
+            return (0..n).map(|i| f(i, &mut *caller_scratch)).collect();
+        }
+        let batch = Batch {
+            f: &f,
+            n,
+            cursor: AtomicUsize::new(0),
+            collected: Mutex::new(Vec::with_capacity(n)),
+            // counted UP per successfully queued task, under the lock, so
+            // the latch only ever waits for tasks that truly exist
+            outstanding: Mutex::new(0),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        };
+        {
+            // Installed BEFORE the first task is queued: whatever unwinds
+            // past this point (a send failure, a panicking job on the
+            // caller's own drain) blocks here until every queued task has
+            // dropped its TaskGuard — the soundness anchor for the
+            // lifetime erasure below.
+            let _rejoin = WaitGuard {
+                outstanding: &batch.outstanding,
+                done: &batch.done,
+            };
+            {
+                let tx_slot = lock_unpoisoned(&self.tx);
+                let tx = tx_slot.as_ref().expect("QuantPool used after shutdown");
+                for _ in 0..helpers {
+                    let b = &batch;
+                    let task: Box<dyn FnOnce(&mut PushDownScratch) + Send + '_> =
+                        Box::new(move |scratch| {
+                            let _signal = TaskGuard {
+                                outstanding: &b.outstanding,
+                                done: &b.done,
+                                panicked: &b.panicked,
+                            };
+                            b.drain(scratch);
+                        });
+                    // SAFETY: `task` borrows `batch` (and, through
+                    // `batch.f`, the caller's closure and job data). The
+                    // WaitGuard installed above blocks — including during
+                    // unwinding — until every queued task has dropped its
+                    // TaskGuard, so no task can outlive the borrows it
+                    // carries.
+                    let task: Task = unsafe {
+                        std::mem::transmute::<
+                            Box<dyn FnOnce(&mut PushDownScratch) + Send + '_>,
+                            Task,
+                        >(task)
+                    };
+                    *lock_unpoisoned(&batch.outstanding) += 1;
+                    if tx.send(task).is_err() {
+                        // workers gone (process already tearing down
+                        // abnormally): undo the claim; the caller drains
+                        // every remaining job itself below
+                        *lock_unpoisoned(&batch.outstanding) -= 1;
+                        break;
+                    }
+                }
+            }
+            batch.drain(caller_scratch);
+        }
+        if batch.panicked.load(Ordering::SeqCst) {
+            panic!("QuantPool worker task panicked");
+        }
+        let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        for (i, v) in lock_unpoisoned(&batch.collected).drain(..) {
+            slots[i] = Some(v);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("pool cursor hands every index to exactly one runner"))
+            .collect()
+    }
+
+    /// Per-layer PushDown across the pool; results in job order,
+    /// bit-identical to `push_down_layers_seq`.
+    pub fn push_down_layers(
+        &self,
+        jobs: &[PushDownJob<'_>],
+        scratch: &mut PushDownScratch,
+    ) -> Vec<PushDownResult> {
+        self.run_indexed(jobs.len(), scratch, |i, s| {
+            let j = &jobs[i];
+            push_down(j.weights, j.resolution, j.eps, s)
+        })
+    }
+
+    /// Per-layer PushUp lookback evaluation across the pool (the O(dim)
+    /// window-gradient norm scans of eq. 7 are the parallel payload);
+    /// results in job order, identical to `push_up_layers_seq`.
+    pub fn push_up_layers(
+        &self,
+        jobs: &[PushUpJob<'_>],
+        scratch: &mut PushDownScratch,
+    ) -> Vec<PushUpEval> {
+        self.run_indexed(jobs.len(), scratch, |i, _s| evaluate_push_up(&jobs[i]))
+    }
+}
+
+impl Drop for QuantPool {
+    fn drop(&mut self) {
+        lock_unpoisoned(&self.tx).take(); // closes the channel
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::parallel::push_down_layers_seq;
+    use crate::quant::pushdown::KL_EPS;
+    use crate::util::rng::Rng;
+
+    fn layer(n: usize, sigma: f32, seed: u64) -> Vec<f32> {
+        let mut r = Rng::seed_from(seed);
+        (0..n).map(|_| r.normal() as f32 * sigma).collect()
+    }
+
+    #[test]
+    fn run_indexed_returns_in_order() {
+        let pool = QuantPool::new(4);
+        let mut scratch = PushDownScratch::default();
+        let out = pool.run_indexed(100, &mut scratch, |i, _| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_batch_and_single_parallelism() {
+        let pool = QuantPool::new(1);
+        assert!(pool.workers.is_empty(), "parallelism 1 must spawn nothing");
+        let mut scratch = PushDownScratch::default();
+        let out: Vec<usize> = pool.run_indexed(0, &mut scratch, |i, _| i);
+        assert!(out.is_empty());
+        assert_eq!(pool.run_indexed(5, &mut scratch, |i, _| i + 1), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn pool_push_down_matches_sequential() {
+        let tensors: Vec<Vec<f32>> = vec![
+            layer(3000, 0.05, 1),
+            layer(128, 2.0, 2),
+            layer(5000, 0.3, 3),
+            vec![0.5f32; 400],
+            vec![],
+        ];
+        let jobs: Vec<PushDownJob> = tensors
+            .iter()
+            .enumerate()
+            .map(|(i, w)| PushDownJob {
+                weights: w,
+                resolution: 50 + 10 * i,
+                eps: KL_EPS,
+            })
+            .collect();
+        let seq = push_down_layers_seq(&jobs);
+        for parallelism in [1usize, 2, 3, 8] {
+            let pool = QuantPool::new(parallelism);
+            let mut scratch = PushDownScratch::default();
+            assert_eq!(pool.push_down_layers(&jobs, &mut scratch), seq, "p={parallelism}");
+        }
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_job_and_stays_usable() {
+        let pool = QuantPool::new(4);
+        let mut scratch = PushDownScratch::default();
+        let boom = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_indexed(16, &mut scratch, |i, _| {
+                if i == 7 {
+                    panic!("job 7 exploded");
+                }
+                i
+            })
+        }));
+        assert!(boom.is_err(), "panic must propagate to the caller");
+        // workers caught the unwind; the pool keeps serving batches
+        let out = pool.run_indexed(8, &mut scratch, |i, _| 2 * i);
+        assert_eq!(out, vec![0, 2, 4, 6, 8, 10, 12, 14]);
+    }
+}

@@ -47,6 +47,29 @@
 //!   delegates bin selection to the same `Histogram::bin_of`, and the fused
 //!   integer-domain quantize agrees element-wise with
 //!   `FixedPointFormat::quantize_nr` (see `round_half_even_fast`).
+//!
+//! # Ridden-along per-tensor statistics
+//!
+//! Every fused candidate eval also returns the exact zero count of the
+//! quantized tensor (see [`quantize_bin`]); the scratch remembers it per
+//! format, and [`push_down`] reports the chosen format's non-zero fraction
+//! as [`PushDownResult::sp`] together with the tensor's
+//! [`PushDownResult::max_abs`] from the prepare scan. These are the sp and
+//! range statistics the analytical performance model (eq. 8/9,
+//! `crate::perfmodel`) consumes — measured inside the passes the engine
+//! already makes, not by extra O(n) scans.
+//!
+//! ```
+//! use adapt::quant::{push_down, PushDownScratch, KL_EPS};
+//!
+//! let w: Vec<f32> = (0..512).map(|i| (i as f32 * 0.1).sin() * 0.2).collect();
+//! let mut scratch = PushDownScratch::default();
+//! let res = push_down(&w, 100, KL_EPS, &mut scratch);
+//! assert!(res.kl < KL_EPS); // minimal format that still loses < eps bits
+//! assert!(res.fmt.wl <= 32);
+//! assert!(res.sp > 0.0 && res.sp <= 1.0); // measured, not assumed
+//! assert!((res.max_abs - 0.2).abs() < 0.05);
+//! ```
 
 use crate::fixedpoint::format::{FixedPointFormat, FL_MAX, WL_MAX};
 use crate::fixedpoint::histogram::{kl_divergence, Histogram};
@@ -74,6 +97,13 @@ pub struct PushDownScratch {
     lo: f32,
     hi: f32,
     mabs: f32,
+    /// Length of the tensor the current call is evaluating (for sp).
+    len: usize,
+    /// (candidate format, exact zeros among its quantized values) for every
+    /// candidate evaluated since the last `begin`/`prepare` — lets the
+    /// drivers recover the chosen format's sparsity statistic without a
+    /// final re-quantization pass.
+    cand_zeros: Vec<(FixedPointFormat, u64)>,
 }
 
 impl Default for PushDownScratch {
@@ -85,16 +115,41 @@ impl Default for PushDownScratch {
             lo: 0.0,
             hi: 0.0,
             mabs: 0.0,
+            len: 0,
+            cand_zeros: Vec::new(),
         }
     }
 }
 
 impl PushDownScratch {
+    /// Start a new per-tensor call: reset the ridden-along statistics. The
+    /// fused path runs this from `prepare`; the naive driver calls it
+    /// directly (it has no prepare step).
+    fn begin(&mut self, len: usize) {
+        self.len = len;
+        self.cand_zeros.clear();
+    }
+
+    /// Non-zero fraction of the tensor quantized at `fmt`, recovered from
+    /// the candidate evaluations since the last `begin` (newest wins).
+    /// `None` if that format was never evaluated or the tensor was empty.
+    fn sp_for(&self, fmt: FixedPointFormat) -> Option<f32> {
+        if self.len == 0 {
+            return None;
+        }
+        self.cand_zeros
+            .iter()
+            .rev()
+            .find(|(f, _)| *f == fmt)
+            .map(|&(_, zeros)| 1.0 - zeros as f32 / self.len as f32)
+    }
+
     /// Run the per-call invariant work: one finiteness + min/max/max-abs
     /// scan and one binning pass building the master histogram. Returns
     /// `false` (leaving the scratch unusable for `format_kl_prepared`) if a
     /// non-finite weight is found.
     pub fn prepare(&mut self, weights: &[f32], resolution: usize) -> bool {
+        self.begin(weights.len());
         let mut lo = f32::INFINITY;
         let mut hi = f32::NEG_INFINITY;
         let mut mabs = 0.0f32;
@@ -150,6 +205,10 @@ pub fn format_kl(
         hi = hi.max(x);
     }
     quantize_nr_into(weights, fmt, &mut scratch.buf);
+    // record the zero count so push_down_naive's sp matches the fused path
+    // (an extra pass, but this is the reference pipeline)
+    let zeros = scratch.buf.iter().filter(|&&q| q == 0.0).count() as u64;
+    scratch.cand_zeros.push((fmt, zeros));
     let q = Histogram::from_slice(weights, lo, hi, resolution);
     let p = Histogram::from_slice(&scratch.buf, lo, hi, resolution);
     kl_divergence(&p, &q, 1e-9)
@@ -167,16 +226,24 @@ pub fn format_kl_prepared(
     scratch
         .cand
         .reset(scratch.master.lo, scratch.master.hi, scratch.master.counts.len());
-    quantize_bin(weights, fmt, &mut scratch.cand);
+    let zeros = quantize_bin(weights, fmt, &mut scratch.cand);
+    scratch.cand_zeros.push((fmt, zeros));
     kl_divergence(&scratch.cand, &scratch.master, 1e-9)
 }
 
-/// Result of a PushDown: the minimal lossless format and the KL it achieved.
+/// Result of a PushDown: the minimal lossless format, the KL it achieved,
+/// and the per-tensor statistics measured inside the fused pass.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PushDownResult {
     pub fmt: FixedPointFormat,
     pub kl: f64,
     pub evals: u32,
+    /// Non-zero fraction of the tensor quantized at `fmt` — the paper's sp
+    /// in eq. 8/9, ridden along in the fused candidate evaluation (no extra
+    /// pass). 1.0 for degenerate tensors (empty / non-finite).
+    pub sp: f32,
+    /// Max |w| of the evaluated tensor (0.0 for degenerate tensors).
+    pub max_abs: f32,
 }
 
 fn full_precision_result(evals: u32) -> PushDownResult {
@@ -184,6 +251,8 @@ fn full_precision_result(evals: u32) -> PushDownResult {
         fmt: FixedPointFormat::full(),
         kl: 0.0,
         evals,
+        sp: 1.0,
+        max_abs: 0.0,
     }
 }
 
@@ -205,10 +274,13 @@ fn bisect<F: FnMut(FixedPointFormat) -> f64>(
     let full = FixedPointFormat::covering(mabs, FL_MAX);
     evals += 1;
     if kl_of(full) >= eps {
+        // sp/max_abs are patched in by the drivers after bisection
         return PushDownResult {
             fmt: full,
             kl: 0.0,
             evals,
+            sp: 1.0,
+            max_abs: 0.0,
         };
     }
     while lo < hi {
@@ -242,7 +314,13 @@ fn bisect<F: FnMut(FixedPointFormat) -> f64>(
         }
     }
     debug_assert!(fmt.wl <= WL_MAX);
-    PushDownResult { fmt, kl, evals }
+    PushDownResult {
+        fmt,
+        kl,
+        evals,
+        sp: 1.0,
+        max_abs: 0.0,
+    }
 }
 
 /// Find the smallest `<WL, FL>` such that KL(EDF(W) || EDF(q(W))) < eps at
@@ -259,7 +337,29 @@ pub fn push_down(
         return full_precision_result(0);
     }
     let mabs = scratch.mabs;
-    bisect(mabs, eps, |fmt| format_kl_prepared(weights, fmt, scratch))
+    let mut res = bisect(mabs, eps, |fmt| format_kl_prepared(weights, fmt, scratch));
+    // The chosen format was always among the evaluated candidates (the
+    // bisection endpoint or a successful WL-descent step), so its ridden-
+    // along zero count is in the scratch — sp costs no extra pass.
+    res.sp = scratch.sp_for(res.fmt).unwrap_or(1.0);
+    res.max_abs = mabs;
+    res
+}
+
+/// Exact zero count of `xs` quantized at `fmt`, without materializing the
+/// quantized tensor or binning a histogram — one branch-free pass. Agrees
+/// element-for-element with counting `fmt.quantize_nr(x) == 0.0`: a value
+/// quantizes to zero iff its scaled rounding is zero (the clamp bounds are
+/// never zero since WL >= 2, and NaN compares unequal on both sides).
+///
+/// Used by the controller to re-measure a layer's sp at the format PushUp
+/// actually settled on (which usually has more fraction bits — hence fewer
+/// zeros — than the minimal PushDown format the fused pass measured).
+pub fn quantized_zero_count(xs: &[f32], fmt: FixedPointFormat) -> u64 {
+    let scale = fmt.scale();
+    xs.iter()
+        .filter(|&&x| crate::fixedpoint::format::round_half_even_fast(x * scale) == 0.0)
+        .count() as u64
 }
 
 /// The pre-fusion PushDown: identical bisection, but every candidate eval
@@ -275,8 +375,12 @@ pub fn push_down_naive(
     if weights.is_empty() || weights.iter().any(|x| !x.is_finite()) {
         return full_precision_result(0);
     }
+    scratch.begin(weights.len());
     let mabs = max_abs(weights);
-    bisect(mabs, eps, |fmt| format_kl(weights, fmt, resolution, scratch))
+    let mut res = bisect(mabs, eps, |fmt| format_kl(weights, fmt, resolution, scratch));
+    res.sp = scratch.sp_for(res.fmt).unwrap_or(1.0);
+    res.max_abs = mabs;
+    res
 }
 
 #[cfg(test)]

@@ -1,6 +1,14 @@
 //! The PushUp operation (alg. 4): given the minimal lossless format from
 //! PushDown, add enough precision for the network to KEEP learning, based
 //! on the gradient diversity of the last lb^l batches (eq. 3, 4).
+//!
+//! The scalar pieces (`suggestions`, `combine`, `push_up`) are O(1); the
+//! data-sized share of eq. 7's `(lb + 1) · dim` cost bound is the L2 norm of
+//! the summed window gradient — the denominator of eq. 3. The batch types at
+//! the bottom ([`PushUpJob`], [`evaluate_push_up`], [`push_up_layers_seq`])
+//! package one lookback evaluation per layer so the epoch-boundary re-sync
+//! can fan those norm scans out across `quant::pool::QuantPool`, exactly as
+//! the PushDown evals do.
 
 use crate::fixedpoint::format::{FixedPointFormat, WL_MAX};
 
@@ -101,6 +109,75 @@ pub fn push_up(
     FixedPointFormat::new(wl, fl)
 }
 
+// ---------------------------------------------------------------------------
+// Batched lookback evaluation (the pool-parallel PushUp path)
+// ---------------------------------------------------------------------------
+
+/// How the norm of the summed window gradient (the denominator of eq. 3)
+/// reaches a lookback evaluation.
+#[derive(Debug, Clone, Copy)]
+pub enum WindowGrad<'a> {
+    /// Norm already measured (e.g. by the compiled step's metric tail) —
+    /// the evaluation is O(1).
+    Norm(f32),
+    /// Raw summed-gradient tensor; the evaluation computes its L2 norm,
+    /// the O(dim) share of eq. 7. This is what the epoch-boundary re-sync
+    /// hands over: the live accumulator, not a stale cached norm.
+    Tensor(&'a [f32]),
+}
+
+/// One per-layer PushUp lookback-evaluation work item.
+#[derive(Debug, Clone, Copy)]
+pub struct PushUpJob<'a> {
+    /// Minimal lossless format from this layer's PushDown.
+    pub min_fmt: FixedPointFormat,
+    /// Sum of per-batch gradient L2 norms over the window (eq. 3 numerator).
+    pub sum_of_norms: f32,
+    pub window: WindowGrad<'a>,
+    pub strategy: Strategy,
+    pub buff: u8,
+}
+
+/// Outcome of one lookback evaluation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PushUpEval {
+    /// The format PushUp settled on (min_fmt plus the diversity-driven bump).
+    pub fmt: FixedPointFormat,
+    /// The gradient diversity the bump was derived from.
+    pub diversity: f64,
+}
+
+/// L2 norm of a summed-gradient tensor (f64 accumulator: window sums over
+/// thousands of f32 gradients would otherwise lose low bits, and the
+/// diversity ratio is taken in f64 anyway).
+pub fn gsum_norm(gsum: &[f32]) -> f32 {
+    let mut acc = 0.0f64;
+    for &g in gsum {
+        acc += g as f64 * g as f64;
+    }
+    acc.sqrt() as f32
+}
+
+/// Evaluate one job: resolve the window norm, form eq. 3's diversity, run
+/// [`push_up`]. Deterministic per job, so batches may run in any order or
+/// thread (`QuantPool::push_up_layers` relies on this).
+pub fn evaluate_push_up(job: &PushUpJob<'_>) -> PushUpEval {
+    let norm = match job.window {
+        WindowGrad::Norm(n) => n,
+        WindowGrad::Tensor(g) => gsum_norm(g),
+    };
+    let ds = gradient_diversity(job.sum_of_norms, norm);
+    PushUpEval {
+        fmt: push_up(job.min_fmt, ds, job.strategy, job.buff),
+        diversity: ds,
+    }
+}
+
+/// Sequential reference for the pool fan-out (results in job order).
+pub fn push_up_layers_seq(jobs: &[PushUpJob<'_>]) -> Vec<PushUpEval> {
+    jobs.iter().map(evaluate_push_up).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -182,5 +259,56 @@ mod tests {
         let f_min = push_up(min_fmt, 6.0, Strategy::Min, 4);
         let f_max = push_up(min_fmt, 6.0, Strategy::Max, 4);
         assert!(f_max.fl >= f_min.fl);
+    }
+
+    #[test]
+    fn gsum_norm_matches_hand_computation() {
+        assert_eq!(gsum_norm(&[]), 0.0);
+        assert_eq!(gsum_norm(&[3.0, 4.0]), 5.0);
+        // f64 accumulation: many small values must not collapse
+        let xs = vec![1e-3f32; 1_000_000];
+        let n = gsum_norm(&xs);
+        assert!((n - 1.0).abs() < 1e-4, "{n}");
+    }
+
+    #[test]
+    fn tensor_window_agrees_with_measured_norm() {
+        let g = vec![0.6f32, -0.8, 0.0, 0.0];
+        let base = PushUpJob {
+            min_fmt: FixedPointFormat::new(6, 3),
+            sum_of_norms: 4.0,
+            window: WindowGrad::Tensor(&g),
+            strategy: Strategy::Mean,
+            buff: 4,
+        };
+        let via_tensor = evaluate_push_up(&base);
+        let via_norm = evaluate_push_up(&PushUpJob {
+            window: WindowGrad::Norm(1.0), // ||(0.6, -0.8)|| = 1
+            ..base
+        });
+        assert_eq!(via_tensor, via_norm);
+        assert!((via_tensor.diversity - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn batched_seq_preserves_job_order() {
+        let gs: Vec<Vec<f32>> = (1..=5).map(|k| vec![k as f32; 8]).collect();
+        let jobs: Vec<PushUpJob> = gs
+            .iter()
+            .map(|g| PushUpJob {
+                min_fmt: FixedPointFormat::new(8, 4),
+                sum_of_norms: 30.0,
+                window: WindowGrad::Tensor(g),
+                strategy: Strategy::Max,
+                buff: 4,
+            })
+            .collect();
+        let evals = push_up_layers_seq(&jobs);
+        assert_eq!(evals.len(), jobs.len());
+        for (job, ev) in jobs.iter().zip(&evals) {
+            assert_eq!(*ev, evaluate_push_up(job));
+        }
+        // diversity falls as the summed gradient grows (same numerator)
+        assert!(evals[0].diversity > evals[4].diversity);
     }
 }

@@ -5,16 +5,26 @@
 //! PushDown evaluations route through the fused single-pass engine
 //! (`quant::pushdown`); when several layers are due at once — same-step
 //! window completions or the epoch-boundary re-sync — they fan out across
-//! threads via `quant::parallel`, which is bit-identical to the sequential
-//! loop.
+//! the persistent [`QuantPool`] shared with the trainer, which is
+//! bit-identical to the sequential loop. The epoch-boundary re-sync also
+//! fans its PushUp lookback evaluations (live window-gradient norm scans)
+//! out on the same pool. Measured per-tensor statistics (`sp` at the format
+//! the layer actually runs at, max |w| from the PushDown prepare scan) are
+//! cached per layer and exposed through [`QuantController::weight_nz`] /
+//! [`QuantController::weight_max_abs`] so the trainer can record them for
+//! the performance model (eq. 8/9); the only work beyond the passes the
+//! engine already makes is one branch-free zero-count per applied switch.
+
+use std::sync::Arc;
 
 use crate::fixedpoint::format::FixedPointFormat;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::step::{StepMetrics, TrainState};
 
-use super::parallel::{push_down_layers, PushDownJob};
-use super::pushdown::{push_down, PushDownResult, PushDownScratch};
-use super::pushup::{gradient_diversity, push_up, Strategy};
+use super::parallel::PushDownJob;
+use super::pool::QuantPool;
+use super::pushdown::{push_down, quantized_zero_count, PushDownResult, PushDownScratch};
+use super::pushup::{gradient_diversity, push_up, PushUpJob, Strategy, WindowGrad};
 use super::schedule::{adapt_lookback, adapt_resolution, QuantHyper, StrategyCtl};
 
 /// One precision switch, recorded for figures 3/4 and the perf model.
@@ -54,6 +64,19 @@ pub trait QuantController: Send {
     fn resolutions(&self) -> Vec<u32> {
         Vec::new()
     }
+    /// Per-layer weight NON-ZERO fraction (the paper's sp in eq. 8/9),
+    /// measured at each switch at the format the layer actually runs at and
+    /// held constant between switches; 1.0 before a layer's first switch.
+    /// Empty for policies that never measure it — the perf model then falls
+    /// back to the device-reported sparsity.
+    fn weight_nz(&self) -> Vec<f32> {
+        Vec::new()
+    }
+    /// Per-layer max |w| from the same measurement (0.0 before the first
+    /// switch); empty for policies that never measure it.
+    fn weight_max_abs(&self) -> Vec<f32> {
+        Vec::new()
+    }
     /// Drain recorded switch events.
     fn take_events(&mut self) -> Vec<SwitchEvent>;
 }
@@ -69,6 +92,13 @@ struct LayerState {
     res: u32,
     grad_norm_sum: f32,
     batches: u32,
+    /// Measured weight non-zero fraction at the format the layer actually
+    /// runs at, refreshed at every switch (1.0 until the first switch —
+    /// conservative for the perf model).
+    sp: f32,
+    /// Measured max |w| from the latest PushDown (0.0 until the first
+    /// switch).
+    mabs: f32,
 }
 
 /// The AdaPT precision-switching mechanism (alg. 2): per-layer intra-epoch
@@ -80,15 +110,22 @@ pub struct AdaptController {
     kernel_param_idx: Vec<usize>,
     strategy: StrategyCtl,
     scratch: PushDownScratch,
-    /// ||sum of gradients|| per layer from the most recent clean step —
-    /// lets the epoch-boundary sync evaluate partial-window diversity.
-    last_gsum_norm: Vec<f32>,
+    /// Persistent worker team for multi-layer fan-outs; shared with (and
+    /// usually owned by) the trainer.
+    pool: Arc<QuantPool>,
     events: Vec<SwitchEvent>,
     step: u64,
 }
 
 impl AdaptController {
+    /// Controller with a private worker pool sized by the default policy.
     pub fn new(man: &Manifest, hyper: QuantHyper) -> Self {
+        AdaptController::with_pool(man, hyper, Arc::new(QuantPool::with_default_threads()))
+    }
+
+    /// Controller sharing an existing pool (the trainer owns one and hands
+    /// it to whichever controller the policy selects).
+    pub fn with_pool(man: &Manifest, hyper: QuantHyper, pool: Arc<QuantPool>) -> Self {
         let init = FixedPointFormat::new(hyper.initial_wl, hyper.initial_fl);
         let mid_lb = (hyper.lb_lwr + hyper.lb_upr) / 2;
         let mid_r = (hyper.r_lwr + hyper.r_upr) / 2;
@@ -99,6 +136,8 @@ impl AdaptController {
                 res: mid_r,
                 grad_norm_sum: 0.0,
                 batches: 0,
+                sp: 1.0,
+                mabs: 0.0,
             })
             .collect();
         let strategy = StrategyCtl::new(Strategy::Mean, mid_lb as usize);
@@ -108,7 +147,7 @@ impl AdaptController {
             kernel_param_idx: man.kernel_indices(),
             strategy,
             scratch: PushDownScratch::default(),
-            last_gsum_norm: vec![0.0; man.num_layers],
+            pool,
             events: Vec::new(),
             step: 0,
         }
@@ -121,7 +160,8 @@ impl AdaptController {
     }
 
     /// PushDown for a batch of due layers: the persistent scratch serves a
-    /// lone layer allocation-free; two or more fan out across threads.
+    /// lone layer allocation-free; two or more fan out across the pool
+    /// (where the caller participates with this same scratch).
     fn push_down_batch(&mut self, state: &TrainState, due: &[usize]) -> Vec<PushDownResult> {
         let jobs: Vec<PushDownJob> = due
             .iter()
@@ -135,26 +175,44 @@ impl AdaptController {
             let j = jobs[0];
             vec![push_down(j.weights, j.resolution, j.eps, &mut self.scratch)]
         } else {
-            push_down_layers(&jobs)
+            self.pool.push_down_layers(&jobs, &mut self.scratch)
         }
     }
 
-    /// Apply one PushDown result: PushUp, format switch, window reset.
+    /// Apply one PushDown + PushUp outcome: format switch, stats cache
+    /// update, window reset.
     #[allow(clippy::too_many_arguments)]
     fn apply_switch(
         &mut self,
         state: &mut TrainState,
         layer: usize,
         pd: PushDownResult,
+        new_fmt: FixedPointFormat,
         ds: f64,
         st: Strategy,
         record_unchanged: bool,
     ) {
-        let new_fmt = push_up(pd.fmt, ds, st, self.hyper.buff);
+        // pd.sp was measured at the MINIMAL PushDown format; the layer will
+        // actually run at the PushUp-bumped format, whose finer grid snaps
+        // fewer weights to zero. Re-count at the real format (one cheap
+        // branch-free pass, no histogram) so the perf model sees the sp of
+        // the format in effect, not an understated one.
+        let sp = if new_fmt == pd.fmt {
+            pd.sp
+        } else {
+            let weights = &state.params[self.kernel_param_idx[layer]];
+            if weights.is_empty() {
+                pd.sp
+            } else {
+                1.0 - quantized_zero_count(weights, new_fmt) as f32 / weights.len() as f32
+            }
+        };
         let ls = &mut self.layers[layer];
         let old = ls.fmt;
         let (lb, res) = (ls.lb, ls.res);
         ls.fmt = new_fmt;
+        ls.sp = sp;
+        ls.mabs = pd.max_abs;
         ls.grad_norm_sum = 0.0;
         ls.batches = 0;
         state.zero_gsum_layer(layer);
@@ -227,7 +285,6 @@ impl QuantController for AdaptController {
         for (l, ls) in self.layers.iter_mut().enumerate() {
             ls.grad_norm_sum += m.grad_norm[l];
             ls.batches += 1;
-            self.last_gsum_norm[l] = m.gsum_norm[l];
             // adapt lookback/resolution every batch (alg. 2 ln. 4-5)
             // using the running partial-window diversity
             if ls.batches >= 2 {
@@ -243,41 +300,58 @@ impl QuantController for AdaptController {
             return;
         }
 
-        // Phase 2 — PushDown for all due layers at once (parallel when >1).
+        // Phase 2 — PushDown for all due layers at once (pooled when >1).
         let layers_due: Vec<usize> = due.iter().map(|&(l, _)| l).collect();
         let pds = self.push_down_batch(state, &layers_due);
 
-        // Phase 3 — PrecisionSwitch per due layer (alg. 2 ln. 6-10).
+        // Phase 3 — PrecisionSwitch per due layer (alg. 2 ln. 6-10); the
+        // diversity was already measured from the step metrics, so PushUp
+        // here is O(1) per layer.
         for (&(l, ds), pd) in due.iter().zip(pds) {
-            self.apply_switch(state, l, pd, ds, st, true);
+            let new_fmt = push_up(pd.fmt, ds, st, self.hyper.buff);
+            self.apply_switch(state, l, pd, new_fmt, ds, st, true);
         }
     }
 
     /// Epoch-boundary whole-net re-sync (the paper's per-epoch switch):
     /// every layer with at least a partial gradient window gets a fresh
-    /// PushDown (fanned out in parallel) + PushUp on its partial-window
-    /// diversity. Only actual format changes are recorded as events.
+    /// PushDown (fanned out on the pool) + PushUp on its partial-window
+    /// diversity. The diversity denominator is the L2 norm of the LIVE
+    /// summed-gradient tensor — not a cached last-step norm, which can be
+    /// stale when the window advanced past the last clean step — and those
+    /// O(dim) norm scans fan out on the same pool as the PushDown evals.
+    /// Only actual format changes are recorded as events.
     fn on_epoch_end(&mut self, state: &mut TrainState, _epoch: usize) {
         if !self.hyper.epoch_sync {
             return;
         }
         let st = self.hyper.pin_strategy.unwrap_or(self.strategy.st);
-        let synced: Vec<(usize, f64)> = self
+        let synced: Vec<usize> = self
             .layers
             .iter()
             .enumerate()
             .filter(|(_, ls)| ls.batches >= 2)
-            .map(|(l, ls)| {
-                (l, gradient_diversity(ls.grad_norm_sum, self.last_gsum_norm[l]))
-            })
+            .map(|(l, _)| l)
             .collect();
         if synced.is_empty() {
             return;
         }
-        let layers_due: Vec<usize> = synced.iter().map(|&(l, _)| l).collect();
-        let pds = self.push_down_batch(state, &layers_due);
-        for (&(l, ds), pd) in synced.iter().zip(pds) {
-            self.apply_switch(state, l, pd, ds, st, false);
+        let pds = self.push_down_batch(state, &synced);
+        let pu_jobs: Vec<PushUpJob> = synced
+            .iter()
+            .zip(&pds)
+            .map(|(&l, pd)| PushUpJob {
+                min_fmt: pd.fmt,
+                sum_of_norms: self.layers[l].grad_norm_sum,
+                window: WindowGrad::Tensor(&state.gsum[l]),
+                strategy: st,
+                buff: self.hyper.buff,
+            })
+            .collect();
+        let evals = self.pool.push_up_layers(&pu_jobs, &mut self.scratch);
+        drop(pu_jobs); // release the &state.gsum borrows before mutating state
+        for ((&l, pd), ev) in synced.iter().zip(pds).zip(evals) {
+            self.apply_switch(state, l, pd, ev.fmt, ev.diversity, st, false);
         }
     }
 
@@ -295,6 +369,14 @@ impl QuantController for AdaptController {
 
     fn resolutions(&self) -> Vec<u32> {
         self.layers.iter().map(|l| l.res).collect()
+    }
+
+    fn weight_nz(&self) -> Vec<f32> {
+        self.layers.iter().map(|l| l.sp).collect()
+    }
+
+    fn weight_max_abs(&self) -> Vec<f32> {
+        self.layers.iter().map(|l| l.mabs).collect()
     }
 
     fn take_events(&mut self) -> Vec<SwitchEvent> {
@@ -480,6 +562,58 @@ mod tests {
         c.on_step(&mut st, &m);
         assert_eq!(c.wordlengths(), wl_before);
         assert_eq!(c.layers[0].batches, 0);
+    }
+
+    #[test]
+    fn measured_weight_stats_populate_after_switches() {
+        let man = mlp_manifest();
+        let mut c = AdaptController::new(&man, QuantHyper::default().scaled(0.1));
+        // before any switch: conservative defaults (sp 1, max|w| 0)
+        assert_eq!(c.weight_nz(), vec![1.0; man.num_layers]);
+        assert_eq!(c.weight_max_abs(), vec![0.0; man.num_layers]);
+        let mut st = fake_state(&man);
+        for i in 0..30 {
+            let m = fake_metrics(man.num_layers, 2.0 - 0.01 * i as f32, 1.0, 3.0);
+            c.on_step(&mut st, &m);
+        }
+        assert!(!c.take_events().is_empty(), "no switch in 30 steps");
+        for (l, (&sp, &mabs)) in c.weight_nz().iter().zip(&c.weight_max_abs()).enumerate() {
+            assert!(sp > 0.0 && sp <= 1.0, "layer {l} sp {sp}");
+            assert!(mabs > 0.0, "layer {l}: TNVS weights must have max|w| > 0");
+        }
+        // sp must describe the format the layer actually runs at (the
+        // PushUp-bumped one), not PushDown's minimal format
+        let idx = man.kernel_indices();
+        let (wl, fl, nz) = (c.wordlengths(), c.fraclengths(), c.weight_nz());
+        for l in 0..man.num_layers {
+            let fmt = crate::fixedpoint::FixedPointFormat::new(wl[l], fl[l]);
+            let q = crate::fixedpoint::quantize_nr_slice(&st.params[idx[l]], fmt);
+            let expected = 1.0 - crate::fixedpoint::zero_fraction(&q);
+            assert_eq!(nz[l], expected, "layer {l} at {fmt}");
+        }
+    }
+
+    #[test]
+    fn controllers_share_one_pool_deterministically() {
+        let man = mlp_manifest();
+        let pool = std::sync::Arc::new(QuantPool::new(3));
+        let h = QuantHyper::default().scaled(0.1);
+        let mut a = AdaptController::with_pool(&man, h, std::sync::Arc::clone(&pool));
+        let mut b = AdaptController::with_pool(&man, h, std::sync::Arc::clone(&pool));
+        let mut sa = fake_state(&man);
+        let mut sb = fake_state(&man);
+        for i in 0..30 {
+            let m = fake_metrics(man.num_layers, 2.0 - 0.01 * i as f32, 1.0, 3.0);
+            a.on_step(&mut sa, &m);
+            b.on_step(&mut sb, &m);
+        }
+        a.on_epoch_end(&mut sa, 0);
+        b.on_epoch_end(&mut sb, 0);
+        // identical inputs through one shared pool stay bit-deterministic
+        assert_eq!(a.wordlengths(), b.wordlengths());
+        assert_eq!(a.fraclengths(), b.fraclengths());
+        assert_eq!(a.weight_nz(), b.weight_nz());
+        assert_eq!(a.weight_max_abs(), b.weight_max_abs());
     }
 
     #[test]

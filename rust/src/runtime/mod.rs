@@ -1,4 +1,30 @@
 //! L3 <-> artifact runtime: PJRT client, manifest parsing, executable I/O.
+//!
+//! The trainer never touches Python at run time: `make artifacts` AOT-
+//! compiles the L2 JAX graphs to HLO text once, and this module loads and
+//! executes them through PJRT ([`engine`]), describes their I/O contract
+//! ([`manifest`]) and wraps the train/infer calls in typed helpers
+//! ([`step`]).
+//!
+//! # Swapping in a real `xla` binding
+//!
+//! The offline build compiles against the in-tree API stub [`xla_stub`]: a
+//! faithful subset of the xla-rs surface whose host-side pieces (`Literal`
+//! packing/unpacking) are real, while anything needing a device — client
+//! construction, compilation, execution — returns a descriptive error that
+//! every caller already treats as "artifacts/PJRT unavailable, skip". To
+//! re-enable device execution:
+//!
+//! 1. vendor an xla-rs/PJRT binding and add it to `Cargo.toml`;
+//! 2. in `rust/src/runtime/engine.rs`, replace the single alias line
+//!    `use super::xla_stub as xla;` with `use xla;` (or the vendored crate
+//!    name) — the call sites are written against the genuine xla-rs
+//!    surface and need no edits;
+//! 3. ship the PJRT CPU plugin shared library next to the binary.
+//!
+//! Nothing else in the crate changes: the precision mechanism, perf model
+//! and experiment harness are device-agnostic (they consume `StepMetrics`,
+//! not buffers).
 
 pub mod engine;
 pub mod manifest;

@@ -1,11 +1,17 @@
-//! Property tests gating the fused single-pass PushDown engine and the
-//! parallel per-layer fan-out: both must be bit-identical to the naive
-//! sequential reference paths on arbitrary tensors.
+//! Property tests gating the fused single-pass PushDown engine, the
+//! chunked quantize kernel, the per-layer fan-outs (scoped-spawn reference
+//! and persistent pool) and the ridden-along per-tensor statistics: all must
+//! be bit-identical to the naive sequential reference paths on arbitrary
+//! tensors.
 
-use adapt::fixedpoint::{quantize_bin, quantize_nr_into, FixedPointFormat, Histogram};
+use adapt::fixedpoint::{
+    max_abs, quantize_bin, quantize_bin_scalar, quantize_nr_into, quantize_nr_slice,
+    zero_fraction, FixedPointFormat, Histogram,
+};
 use adapt::quant::{
     format_kl, format_kl_prepared, push_down, push_down_layers, push_down_layers_seq,
-    push_down_naive, PushDownJob, PushDownScratch, KL_EPS,
+    push_down_naive, push_up_layers_seq, PushDownJob, PushDownScratch, PushUpJob, QuantPool,
+    Strategy, WindowGrad, KL_EPS,
 };
 use adapt::util::rng::Rng;
 
@@ -72,12 +78,21 @@ fn fused_quantize_bin_is_bit_identical_to_two_pass() {
             quantize_nr_into(&xs, fmt, &mut buf);
             let naive = Histogram::from_slice(&buf, lo, hi, bins);
             let mut fused = Histogram::new(lo, hi, bins);
-            quantize_bin(&xs, fmt, &mut fused);
+            let zeros = quantize_bin(&xs, fmt, &mut fused);
             assert_eq!(
                 naive.counts, fused.counts,
                 "trial {trial} <{wl},{fl}> bins {bins}"
             );
             assert_eq!(naive.total, fused.total);
+            // the ridden-along zero count matches a recount of the
+            // materialized quantized tensor
+            let recount = buf.iter().filter(|&&q| q == 0.0).count() as u64;
+            assert_eq!(zeros, recount, "trial {trial} <{wl},{fl}>");
+            // and the chunked kernel is bit-identical to the scalar one
+            let mut scalar = Histogram::new(lo, hi, bins);
+            let zeros_scalar = quantize_bin_scalar(&xs, fmt, &mut scalar);
+            assert_eq!(scalar.counts, fused.counts);
+            assert_eq!(zeros_scalar, zeros);
         }
     }
 }
@@ -177,4 +192,120 @@ fn parallel_results_match_per_layer_singles() {
         let single = push_down(j.weights, j.resolution, j.eps, &mut fresh);
         assert_eq!(single, *want);
     }
+}
+
+#[test]
+fn pool_push_down_is_identical_to_sequential_across_sizes() {
+    let mut r = Rng::seed_from(0x600D);
+    // a net-like mix: many small layers, a few large ones, plus degenerates
+    let mut tensors: Vec<Vec<f32>> = (0..14).map(|_| random_tensor(&mut r)).collect();
+    tensors.push(vec![0.5f32; 200]);
+    tensors.push(vec![]);
+    let resolutions: Vec<usize> = (0..tensors.len()).map(|_| 30 + r.below(150)).collect();
+    let jobs: Vec<PushDownJob> = tensors
+        .iter()
+        .zip(&resolutions)
+        .map(|(w, &res)| PushDownJob {
+            weights: w,
+            resolution: res,
+            eps: KL_EPS,
+        })
+        .collect();
+    let seq = push_down_layers_seq(&jobs);
+    for parallelism in [1usize, 2, 3, 8, 32] {
+        let pool = QuantPool::new(parallelism);
+        let mut scratch = PushDownScratch::default();
+        let via_pool = pool.push_down_layers(&jobs, &mut scratch);
+        assert_eq!(via_pool, seq, "parallelism={parallelism}");
+    }
+}
+
+#[test]
+fn pool_reuse_across_window_batches_and_epoch_sync_shapes() {
+    // One pool serving many batches back-to-back (the trainer's lifecycle:
+    // small on-step window batches interleaved with whole-net re-syncs and
+    // PushUp lookback evals) must keep returning reference-exact results.
+    let mut r = Rng::seed_from(0x5EED);
+    let pool = QuantPool::with_default_threads();
+    let mut scratch = PushDownScratch::default();
+    let net: Vec<Vec<f32>> = (0..12).map(|_| random_tensor(&mut r)).collect();
+    for round in 0..3 {
+        // a) small window batch (2 layers due at once)
+        let window: Vec<PushDownJob> = net[round..round + 2]
+            .iter()
+            .map(|w| PushDownJob {
+                weights: w,
+                resolution: 80,
+                eps: KL_EPS,
+            })
+            .collect();
+        assert_eq!(
+            pool.push_down_layers(&window, &mut scratch),
+            push_down_layers_seq(&window),
+            "round {round} window batch"
+        );
+        // b) whole-net epoch re-sync
+        let sync: Vec<PushDownJob> = net
+            .iter()
+            .map(|w| PushDownJob {
+                weights: w,
+                resolution: 100,
+                eps: KL_EPS,
+            })
+            .collect();
+        let pds = pool.push_down_layers(&sync, &mut scratch);
+        assert_eq!(pds, push_down_layers_seq(&sync), "round {round} epoch sync");
+        // c) PushUp lookback evals fed by the same PushDown results
+        let pu: Vec<PushUpJob> = net
+            .iter()
+            .zip(&pds)
+            .map(|(g, pd)| PushUpJob {
+                min_fmt: pd.fmt,
+                sum_of_norms: 12.5,
+                window: WindowGrad::Tensor(g),
+                strategy: Strategy::Mean,
+                buff: 4,
+            })
+            .collect();
+        assert_eq!(
+            pool.push_up_layers(&pu, &mut scratch),
+            push_up_layers_seq(&pu),
+            "round {round} pushup"
+        );
+    }
+}
+
+#[test]
+fn ridden_along_sp_and_max_abs_match_naive_recount() {
+    // the per-tensor stats measured inside the fused pass must equal an
+    // explicit quantize-and-count of the chosen format
+    let mut r = Rng::seed_from(0x57A7);
+    let mut scratch = PushDownScratch::default();
+    for trial in 0..20 {
+        let w = random_tensor(&mut r);
+        let resolution = 30 + r.below(150);
+        let res = push_down(&w, resolution, KL_EPS, &mut scratch);
+        let q = quantize_nr_slice(&w, res.fmt);
+        assert_eq!(
+            res.sp,
+            1.0 - zero_fraction(&q),
+            "trial {trial}: sp mismatch at {}",
+            res.fmt
+        );
+        assert_eq!(res.max_abs, max_abs(&w), "trial {trial}");
+        // the naive driver reports the identical stats
+        let naive = push_down_naive(&w, resolution, KL_EPS, &mut scratch);
+        assert_eq!(naive.sp, res.sp);
+        assert_eq!(naive.max_abs, res.max_abs);
+    }
+    // degenerate tensors: conservative constants on every path
+    for w in [vec![], vec![f32::NAN; 8]] {
+        let res = push_down(&w, 100, KL_EPS, &mut scratch);
+        assert_eq!((res.sp, res.max_abs), (1.0, 0.0));
+        assert_eq!(push_down_naive(&w, 100, KL_EPS, &mut scratch), res);
+    }
+    // all-zero tensor: sp must be exactly 0
+    let res = push_down(&vec![0.0f32; 300], 100, KL_EPS, &mut scratch);
+    assert_eq!(res.sp, 0.0);
+    assert_eq!(res.max_abs, 0.0);
 }
