@@ -1,21 +1,43 @@
 //! Quickstart: train a small MLP with AdaPT on synthetic MNIST-like data,
 //! watch the per-layer precision adapt, then run quantized inference.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
+//!
+//! Runs out of the box on the native CPU backend (no artifacts needed);
+//! with `make artifacts` + a PJRT binding it drives the compiled mlp-mnist
+//! instead.
 
-use adapt::coordinator::{train, Policy, TrainConfig};
+use adapt::coordinator::{train_via_model, Policy, TrainConfig};
 use adapt::quant::QuantHyper;
-use adapt::runtime::{artifacts_dir, Engine};
+use adapt::runtime::{artifacts_dir, Engine, Manifest};
 
 fn main() -> anyhow::Result<()> {
-    let dir = artifacts_dir()?;
     let engine = Engine::cpu()?;
-    println!("PJRT platform: {}", engine.platform());
+    println!("execution backend: {}", engine.platform());
+
+    // Compiled artifacts when present, otherwise the synthetic MLP on the
+    // native interpreter — same controller, same training loop.
+    let model = match artifacts_dir() {
+        Ok(dir) => {
+            println!("loading compiled mlp-mnist from {}", dir.display());
+            engine.load_model(&dir, "mlp-mnist")?
+        }
+        Err(_) => {
+            println!("no artifacts; compiling the synthetic MLP natively");
+            engine.compile_manifest(Manifest::synthetic_mlp(
+                "mlp-native",
+                [8, 8, 1],
+                10,
+                &[32, 16],
+                16,
+            ))?
+        }
+    };
 
     // AdaPT with the paper's hyperparameters, windows scaled to this
     // short run so several precision switches happen.
     let mut cfg = TrainConfig::fast(
-        "mlp-mnist",
+        &model.manifest.name,
         Policy::Adapt(QuantHyper::default().scaled(0.2)),
     );
     cfg.epochs = 4;
@@ -23,8 +45,11 @@ fn main() -> anyhow::Result<()> {
     cfg.eval_size = 256;
     cfg.log_every = 16;
 
-    println!("training mlp-mnist with AdaPT (initial precision <8,4>)…");
-    let out = train(&engine, &dir, &cfg)?;
+    println!(
+        "training {} with AdaPT (initial precision <8,4>)…",
+        model.manifest.name
+    );
+    let out = train_via_model(&model, &cfg)?;
     let rec = &out.record;
 
     println!("\nloss curve (every 8th step):");

@@ -1,0 +1,506 @@
+"""Reference simulation of the Rust native backend (runtime/native).
+
+Re-implements, operation for operation, the chain that produces the first
+training-step CE values of the native-backend golden test
+(rust/tests/native_backend.rs): the in-tree xoshiro256++ PRNG, the
+SyntheticVision generator, TNVS initialization, the Batcher shuffle and the
+native train step (NR fake-quant + STE, forward, softmax-CE, backward, ASGD
+with gradient normalization) at the constant initial <8,4> format.
+
+The first precision switch cannot fire before the 5th step (lookback lower
+bound), so the first four CEs are exactly the constant-<8,4> trajectory and
+this script regenerates the committed golden values:
+
+    python3 python/tools/native_golden.py golden
+
+f32 arithmetic is mirrored with numpy float32 in the same operation order;
+the only expected deviations from the Rust binary are 1-ULP differences in
+libm transcendentals (sin/cos/exp/log), far below the golden tolerance.
+
+    python3 python/tools/native_golden.py learncheck
+
+runs the fast e2e profile (4 epochs x 512 samples) without precision
+switching (constant <8,4> — a lower bound on what AdaPT achieves, since
+switches only ever ADD precision) and reports the CE trend and held-out
+accuracy backing the e2e test thresholds.
+"""
+
+import math
+import sys
+
+import numpy as np
+
+M64 = (1 << 64) - 1
+F32 = np.float32
+
+
+def _splitmix64(x):
+    x = (x + 0x9E3779B97F4A7C15) & M64
+    z = x
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+    return x, z ^ (z >> 31)
+
+
+def _rotl(v, k):
+    return ((v << k) | (v >> (64 - k))) & M64
+
+
+class Rng:
+    """util/rng.rs: xoshiro256++ seeded via splitmix64."""
+
+    def __init__(self, seed=None, state=None):
+        if state is not None:
+            self.s = list(state)
+        else:
+            s = []
+            x = seed & M64
+            for _ in range(4):
+                x, z = _splitmix64(x)
+                s.append(z)
+            self.s = s
+        self.cached_normal = None
+
+    def fold(self, salt):
+        x = self.s[0] ^ self.s[2] ^ ((salt * 0x9E3779B97F4A7C15) & M64)
+        _, z = _splitmix64(x)
+        return Rng(seed=z)
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[0] + s[3]) & M64, 23) + s[0]) & M64
+        t = (s[1] << 17) & M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def uniform(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def uniform_in(self, lo, hi):
+        return lo + (hi - lo) * self.uniform()
+
+    def below(self, n):
+        while True:
+            x = self.next_u64()
+            m = x * n
+            lo = m & M64
+            if lo >= n:
+                return m >> 64
+            t = ((1 << 64) - n) % n
+            if lo >= t:
+                return m >> 64
+
+    def normal(self):
+        if self.cached_normal is not None:
+            z = self.cached_normal
+            self.cached_normal = None
+            return z
+        while True:
+            u1 = self.uniform()
+            if u1 <= 2.2250738585072014e-308:
+                continue
+            u2 = self.uniform()
+            r = math.sqrt(-2.0 * math.log(u1))
+            a = 2.0 * math.pi * u2
+            s, c = math.sin(a), math.cos(a)
+            self.cached_normal = r * s
+            return r * c
+
+    def truncated_normal(self, mu, sigma, a):
+        if sigma == 0.0 or a == 0.0:
+            return mu
+        while True:
+            z = self.normal() * sigma
+            if abs(z) <= a:
+                return mu + z
+
+    def shuffle(self, v):
+        for i in range(len(v) - 1, 0, -1):
+            j = self.below(i + 1)
+            v[i], v[j] = v[j], v[i]
+
+
+def f32(x):
+    return F32(x)
+
+
+def seq_sum_f32(arr):
+    acc = F32(0.0)
+    for v in arr:
+        acc = F32(acc + F32(v))
+    return acc
+
+
+PI32 = F32(np.float64(math.pi))  # std::f32::consts::PI == (f32)pi
+
+
+class SyntheticVision:
+    """data/synthetic.rs, f32 op order mirrored."""
+
+    def __init__(self, h, w, c, classes, length, seed, noise):
+        self.h, self.w, self.c = h, w, c
+        self.classes = classes
+        self.len = length
+        self.seed = seed
+        self.noise = F32(noise)
+        self.max_shift = 3
+        self.offset = 0
+        base = Rng(seed=seed)
+        self.templates = []
+        for cls in range(classes):
+            rng = base.fold(cls + 0x1000)
+            n_blobs = 3 + rng.below(3)
+            blobs = []
+            for _ in range(n_blobs):
+                cx = F32(rng.uniform_in(0.2, 0.8)) * F32(w)
+                cy = F32(rng.uniform_in(0.2, 0.8)) * F32(h)
+                sx = F32(rng.uniform_in(0.08, 0.25)) * F32(w)
+                sy = F32(rng.uniform_in(0.08, 0.25)) * F32(h)
+                theta = F32(rng.uniform_in(0.0, math.pi))
+                amp = [F32(rng.uniform_in(-1.2, 1.2)) for _ in range(3)]
+                blobs.append((cx, cy, sx, sy, theta, amp))
+            fx = F32(rng.uniform_in(0.5, 3.0))
+            fy = F32(rng.uniform_in(0.5, 3.0))
+            phase = F32(rng.uniform_in(0.0, 6.28))
+            gamp = F32(rng.uniform_in(0.1, 0.45))
+            self.templates.append(
+                self._render(h, w, c, blobs, (fx, fy, phase, gamp))
+            )
+
+    @staticmethod
+    def _render(h, w, c, blobs, grating):
+        fx, fy, phase, gamp = grating
+        img = np.zeros(h * w * c, dtype=np.float32)
+        for y in range(h):
+            for x in range(w):
+                arg = F32(
+                    F32(PI32 * F32(2.0))
+                    * F32(F32(F32(fx * F32(x)) / F32(w)) + F32(F32(fy * F32(y)) / F32(h)))
+                    + phase
+                )
+                grate = F32(gamp * F32(math.sin(float(arg))))
+                for ch in range(c):
+                    v = grate
+                    for (cx, cy, sx, sy, theta, amp) in blobs:
+                        dx = F32(F32(x) - cx)
+                        dy = F32(F32(y) - cy)
+                        s = F32(math.sin(float(theta)))
+                        co = F32(math.cos(float(theta)))
+                        u = F32(F32(co * dx) + F32(s * dy))
+                        t = F32(F32(-s) * dx + F32(co * dy))
+                        us = F32(u / sx)
+                        ts = F32(t / sy)
+                        d = F32(F32(us * us) + F32(ts * ts))
+                        e = F32(math.exp(float(F32(F32(-0.5) * d))))
+                        v = F32(v + F32(amp[ch % 3] * e))
+                    img[(y * w + x) * c + ch] = v
+        n = F32(len(img))
+        mean = F32(seq_sum_f32(img) / n)
+        var = F32(seq_sum_f32([F32(F32(v - mean) * F32(v - mean)) for v in img]) / n)
+        std = max(F32(math.sqrt(float(var))), F32(1e-6))
+        return np.array([F32(F32(v - mean) / std) for v in img], dtype=np.float32)
+
+    def heldout(self, offset, length):
+        self.offset = offset
+        self.len = length
+        return self
+
+    def fill(self, i):
+        i = i + self.offset
+        rng = Rng(seed=self.seed).fold(i + 0x90000000)
+        cls = i % self.classes
+        tpl = self.templates[cls]
+        dx = rng.below(2 * self.max_shift + 1) - self.max_shift
+        dy = rng.below(2 * self.max_shift + 1) - self.max_shift
+        gain = F32(rng.uniform_in(0.8, 1.2))
+        h, w, c = self.h, self.w, self.c
+        out = np.zeros(h * w * c, dtype=np.float32)
+        for y in range(h):
+            for x in range(w):
+                sy = min(max(y + dy, 0), h - 1)
+                sx = min(max(x + dx, 0), w - 1)
+                for ch in range(c):
+                    t = tpl[(sy * w + sx) * c + ch]
+                    noise = F32(F32(rng.normal()) * self.noise)
+                    out[(y * w + x) * c + ch] = F32(F32(gain * t) + noise)
+        return out, cls
+
+
+def init_params(dims, seed):
+    """init/mod.rs init_params for the synthetic_dense param layout."""
+    base = Rng(seed=seed)
+    params = []
+    for li, (fi, fo) in enumerate(dims):
+        i = 2 * li  # kernel param index
+        rng = base.fold(i + 1)
+        sigma = math.sqrt(1.0 / fi)
+        a = math.sqrt(3.0 / fi)
+        k = np.array(
+            [F32(rng.truncated_normal(0.0, sigma, a)) for _ in range(fi * fo)],
+            dtype=np.float32,
+        ).reshape(fi, fo)
+        params.append(k)
+        params.append(np.zeros(fo, dtype=np.float32))
+    return params
+
+
+class Batcher:
+    """data/loader.rs Batcher (the PrefetchLoader produces the same stream)."""
+
+    def __init__(self, data, batch, seed):
+        self.data = data
+        self.batch = batch
+        self.order = list(range(data.len))
+        self.cursor = 0
+        self.rng = Rng(seed=seed)
+        self.rng.shuffle(self.order)
+
+    def next_batch(self):
+        n = self.data.len
+        if self.cursor + self.batch > n:
+            self.cursor = 0
+            self.rng.shuffle(self.order)
+        xs, ys = [], []
+        for j in range(self.batch):
+            i = self.order[(self.cursor + j) % n]
+            x, y = self.data.fill(i)
+            xs.append(x)
+            ys.append(y)
+        self.cursor += self.batch
+        return np.stack(xs), np.array(ys, dtype=np.int64)
+
+
+def quant_ste(x, scale, qmin, qmax):
+    s = (x * F32(scale)).astype(np.float32)
+    r = np.clip(np.rint(s), F32(qmin), F32(qmax)).astype(np.float32)
+    q = (r * F32(1.0 / scale)).astype(np.float32)
+    mask = ((s >= F32(qmin)) & (s <= F32(qmax))).astype(np.float32)
+    return q, mask
+
+
+def matmul_seq(a, b):
+    """f32 matmul with k-ascending accumulation (matches ops::matmul)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    acc = np.zeros((m, n), dtype=np.float32)
+    for kk in range(k):
+        acc += np.outer(a[:, kk], b[kk, :]).astype(np.float32)
+    return acc
+
+
+def matmul_at_b_seq(a, g):
+    """Aᵀ@G with m-ascending accumulation (matches ops::matmul_at_b)."""
+    m, k = a.shape
+    m2, n = g.shape
+    assert m == m2
+    acc = np.zeros((k, n), dtype=np.float32)
+    for mm in range(m):
+        acc += np.outer(a[mm, :], g[mm, :]).astype(np.float32)
+    return acc
+
+
+def matmul_a_bt_seq(g, w):
+    """G@Wᵀ with n-ascending accumulation (matches ops::matmul_a_bt)."""
+    m, n = g.shape
+    k, n2 = w.shape
+    assert n == n2
+    acc = np.zeros((m, k), dtype=np.float32)
+    for nn in range(n):
+        acc += np.outer(g[:, nn], w[:, nn]).astype(np.float32)
+    return acc
+
+
+def native_step(params, gsum, x, y, fmt, enable, hyper):
+    """runtime/native/step.rs train step; fmt = (scale, qmin, qmax)."""
+    lr, l1, l2, pen, gnorm = hyper
+    L = len(params) // 2
+    scale, qmin, qmax = fmt
+    b = len(y)
+    c = params[2 * (L - 1)].shape[1]
+
+    wq, mask_w, sparsity = [], [], []
+    for i in range(L):
+        w = params[2 * i]
+        if enable:
+            q, mk = quant_ste(w, scale, qmin, qmax)
+            zeros = int(np.count_nonzero(q == 0.0))
+        else:
+            q, mk = w.copy(), np.ones_like(w)
+            zeros = int(np.count_nonzero(w == 0.0))
+        wq.append(q)
+        mask_w.append(mk)
+        sparsity.append(F32(zeros) / F32(w.size))
+
+    acts = [x.reshape(b, -1).astype(np.float32)]
+    pre_q, mask_a = [], []
+    for i in range(L):
+        z = matmul_seq(acts[i], wq[i])
+        z = (z + params[2 * i + 1]).astype(np.float32)
+        if i + 1 < L:
+            z = np.maximum(z, F32(0.0))
+        if enable:
+            q, mk = quant_ste(z, scale, qmin, qmax)
+        else:
+            q, mk = z.copy(), np.ones_like(z)
+        pre_q.append(z)
+        mask_a.append(mk)
+        acts.append(q)
+
+    logits = acts[L]
+    g = np.zeros((b, c), dtype=np.float32)
+    ce_sum = 0.0
+    correct = 0
+    inv_b = F32(1.0 / b)
+    for r in range(b):
+        row = logits[r]
+        mx = F32(np.max(row))
+        se = F32(0.0)
+        for j in range(c):
+            se = F32(se + F32(np.exp(F32(row[j] - mx))))
+        lse = F32(mx + F32(np.log(se)))
+        ce_sum += float(F32(lse - row[y[r]]))
+        if int(np.argmax(row)) == y[r]:
+            correct += 1
+        for j in range(c):
+            p = F32(np.exp(F32(row[j] - lse)))
+            oh = F32(1.0) if j == y[r] else F32(0.0)
+            g[r, j] = F32(F32(p - oh) * inv_b)
+    ce = F32(ce_sum / b)
+    acc = correct / b
+
+    reg = F32(0.0)
+    for i in range(L):
+        w = params[2 * i].astype(np.float64)
+        s1 = float(np.sum(np.abs(w)))
+        s2 = float(np.sum(w * w))
+        reg = F32(reg + F32(F32(F32(l1) * F32(s1)) + F32(F32(0.5) * F32(F32(l2) * F32(s2)))))
+    # penalty (stop-gradient, enters the reported loss only)
+    wl32 = F32(8.0 / 32.0) if enable else F32(32.0 / 32.0)
+    penalty = F32(0.0)
+    for i in range(L):
+        penalty = F32(penalty + F32(F32(pen) * F32(wl32 * F32(F32(1.0) - sparsity[i]))))
+    loss = F32(F32(ce + reg) + penalty)
+
+    grad_norm = [None] * L
+    gsum_norm = [None] * L
+    for i in range(L - 1, -1, -1):
+        g = (g * mask_a[i]).astype(np.float32)
+        if i + 1 < L:
+            g = np.where(pre_q[i] > 0.0, g, F32(0.0)).astype(np.float32)
+        db = np.zeros(g.shape[1], dtype=np.float32)
+        for r in range(b):
+            db = (db + g[r]).astype(np.float32)
+        dw = matmul_at_b_seq(acts[i], g)
+        dw = (dw * mask_w[i]).astype(np.float32)
+        w = params[2 * i]
+        dw = (dw + (F32(l1) * np.sign(w) + F32(l2) * w).astype(np.float32)).astype(
+            np.float32
+        )
+        if i > 0:
+            g = matmul_a_bt_seq(g, wq[i])
+        gn = F32(math.sqrt(float(np.sum(dw.astype(np.float64) ** 2))))
+        grad_norm[i] = gn
+        gsum[i] = (gsum[i] + dw).astype(np.float32)
+        gsum_norm[i] = F32(math.sqrt(float(np.sum(gsum[i].astype(np.float64) ** 2))))
+        denom = F32(gn + F32(1e-12))
+        if gnorm:
+            params[2 * i] = (w - F32(lr) * (dw / denom).astype(np.float32)).astype(
+                np.float32
+            )
+        else:
+            params[2 * i] = (w - F32(lr) * dw).astype(np.float32)
+        params[2 * i + 1] = (params[2 * i + 1] - F32(lr) * db).astype(np.float32)
+    return loss, ce, acc
+
+
+def infer_accuracy(params, data, fmt, enable, batch, n_batches):
+    L = len(params) // 2
+    scale, qmin, qmax = fmt
+    wq = []
+    for i in range(L):
+        if enable:
+            q, _ = quant_ste(params[2 * i], scale, qmin, qmax)
+        else:
+            q = params[2 * i]
+        wq.append(q)
+    accs = []
+    for k in range(n_batches):
+        xs, ys = [], []
+        for j in range(batch):
+            i = (k * batch + j) % data.len
+            x, y = data.fill(i)
+            xs.append(x)
+            ys.append(y)
+        h = np.stack(xs).reshape(batch, -1).astype(np.float32)
+        for i in range(L):
+            z = matmul_seq(h, wq[i])
+            z = (z + params[2 * i + 1]).astype(np.float32)
+            if i + 1 < L:
+                z = np.maximum(z, F32(0.0))
+            if enable:
+                h, _ = quant_ste(z, scale, qmin, qmax)
+            else:
+                h = z
+        accs.append(float(np.mean(np.argmax(h, axis=1) == ys)))
+    return sum(accs) / len(accs)
+
+
+DIMS = [(64, 32), (32, 16), (16, 10)]
+FMT_8_4 = (16.0, -128.0, 127.0)
+HYPER = (0.05, 2e-4, 1e-4, 1e-3, True)  # lr, l1, l2, pen, gnorm
+SEED = 42
+
+
+def run(train_size, eval_size, steps, enable=True, report_every=0):
+    data = SyntheticVision(8, 8, 1, 10, train_size, SEED, 0.25)
+    evald = SyntheticVision(8, 8, 1, 10, train_size, SEED, 0.25).heldout(
+        train_size, eval_size
+    )
+    params = init_params(DIMS, SEED)
+    gsum = [np.zeros(d, dtype=np.float32) for d in [(64, 32), (32, 16), (16, 10)]]
+    batcher = Batcher(data, 16, SEED ^ 0xBA7C4)
+    ces = []
+    for t in range(steps):
+        x, y = batcher.next_batch()
+        loss, ce, acc = native_step(params, gsum, x, y, FMT_8_4, enable, HYPER)
+        ces.append(float(ce))
+        if report_every and (t + 1) % report_every == 0:
+            print(f"  step {t + 1:4d}: ce {ce:.6f} acc {acc:.3f}")
+    ev = infer_accuracy(params, evald, FMT_8_4, enable, 16, max(eval_size // 16, 1))
+    return ces, ev
+
+
+def main():
+    mode = sys.argv[1] if len(sys.argv) > 1 else "golden"
+    if mode == "golden":
+        # the golden-test config: epochs=1, train_size=128 -> 8 steps; the
+        # first 4 CEs are switch-free by the lookback lower bound
+        ces, _ = run(128, 32, 8)
+        print("first 8 CE values (golden = first 4):")
+        for i, ce in enumerate(ces):
+            print(f"  step {i}: {ce:.6f}")
+        print("golden json snippet:", [round(c, 6) for c in ces[:4]])
+    elif mode == "learncheck":
+        # the fast e2e profile at constant <8,4> — a lower bound on AdaPT
+        print("quantized <8,4>, 4 epochs x 512 samples (128 steps):")
+        ces, ev = run(512, 128, 128, enable=True, report_every=16)
+        first = sum(ces[:4]) / 4.0
+        last = sum(ces[-4:]) / 4.0
+        print(f"  CE {first:.4f} -> {last:.4f}; held-out acc {ev:.4f}")
+        print("float32 baseline (enable=0), 2 epochs (64 steps):")
+        ces, ev = run(512, 128, 64, enable=False, report_every=16)
+        first = sum(ces[:4]) / 4.0
+        last = sum(ces[-4:]) / 4.0
+        print(f"  CE {first:.4f} -> {last:.4f}; held-out acc {ev:.4f}")
+    else:
+        raise SystemExit(f"unknown mode {mode}")
+
+
+if __name__ == "__main__":
+    main()

@@ -225,13 +225,20 @@ pub fn train_with_data(
     }
     let batch = man.batch;
     let steps_per_epoch = (data.len() / batch).max(1);
-    // The trainer owns the persistent quantization worker pool; the
-    // controller shares it for on-step window batches, the epoch-boundary
-    // re-sync and the PushUp lookback fan-out. Workers spawn once per run,
-    // not once per precision switch — and only for policies that actually
-    // fan work out (baselines never submit a job, so they get no threads).
+    // The persistent quantization worker pool the controller shares for
+    // on-step window batches, the epoch-boundary re-sync and the PushUp
+    // lookback fan-out. When the execution backend owns a team already (the
+    // native interpreter fans its matmuls out on one), reuse it instead of
+    // spawning a second; otherwise workers spawn once per run, not once per
+    // precision switch — and only for policies that actually fan work out
+    // (baselines never submit a job, so they get no extra threads).
     let pool: Option<Arc<QuantPool>> = match &cfg.policy {
-        Policy::Adapt(_) => Some(Arc::new(QuantPool::with_default_threads())),
+        Policy::Adapt(_) => Some(
+            model
+                .pool
+                .clone()
+                .unwrap_or_else(|| Arc::new(QuantPool::with_default_threads())),
+        ),
         _ => None,
     };
     let mut controller = make_controller(&cfg.policy, man, &pool);

@@ -124,6 +124,34 @@ impl FixedPointFormat {
     pub fn qparams_row(&self, enable: f32) -> [f32; 5] {
         [self.scale(), self.qmin(), self.qmax(), enable, self.wl as f32]
     }
+
+    /// Inverse of [`qparams_row`](Self::qparams_row): recover `(format,
+    /// enable)` from a runtime qparams row. Returns `None` when the row does
+    /// not describe a signed power-of-two `<WL, FL>` grid (e.g. a corrupted
+    /// tensor); rows produced by `qparams_row` always round-trip. Used by
+    /// the native backend tests to cross-check the interpreter's generic
+    /// row arithmetic against the typed format kernels.
+    pub fn from_qparams_row(row: &[f32; 5]) -> Option<(FixedPointFormat, bool)> {
+        let wl = row[4];
+        if !(2.0..=WL_MAX as f32).contains(&wl) || wl.fract() != 0.0 {
+            return None;
+        }
+        // scale must be an exact positive power of two 2^FL with FL >= 0:
+        // inspect the bits rather than trusting log2 rounding.
+        let bits = row[0].to_bits();
+        if bits >> 31 != 0 || bits & 0x007F_FFFF != 0 {
+            return None;
+        }
+        let fl = ((bits >> 23) & 0xFF) as i32 - 127;
+        if !(0..=FL_MAX as i32).contains(&fl) {
+            return None;
+        }
+        let fmt = FixedPointFormat::new(wl as u8, fl as u8);
+        if fmt.scale() != row[0] || fmt.qmin() != row[1] || fmt.qmax() != row[2] {
+            return None;
+        }
+        Some((fmt, row[3] > 0.5))
+    }
 }
 
 /// Magic constant of the round-to-nearest-even trick: 1.5·2^23. Adding it
@@ -273,6 +301,41 @@ mod tests {
         let g = FixedPointFormat::covering(0.4, 4);
         assert!(g.wl <= 6);
         assert!(g.max_value() >= 0.4);
+    }
+
+    #[test]
+    fn qparams_row_round_trips() {
+        for (wl, fl) in [(2u8, 1u8), (8, 4), (12, 8), (16, 10), (24, 12), (32, 16)] {
+            let fmt = FixedPointFormat::new(wl, fl);
+            for enable in [0.0f32, 1.0] {
+                let row = fmt.qparams_row(enable);
+                assert_eq!(
+                    FixedPointFormat::from_qparams_row(&row),
+                    Some((fmt, enable > 0.5)),
+                    "<{wl},{fl}> enable={enable}"
+                );
+            }
+        }
+        // rows that do not describe a plain signed <WL,FL> grid are rejected
+        assert_eq!(
+            FixedPointFormat::from_qparams_row(&[3.0, -128.0, 127.0, 1.0, 8.0]),
+            None,
+            "non-power-of-two scale"
+        );
+        assert_eq!(
+            FixedPointFormat::from_qparams_row(&[16.0, -100.0, 127.0, 1.0, 8.0]),
+            None,
+            "clamp bounds off the signed grid"
+        );
+        assert_eq!(
+            FixedPointFormat::from_qparams_row(&[0.125, -128.0, 127.0, 1.0, 8.0]),
+            None,
+            "negative-power scale (block floating point, not <WL,FL>)"
+        );
+        assert_eq!(
+            FixedPointFormat::from_qparams_row(&[0.0, -128.0, 127.0, 1.0, 8.0]),
+            None
+        );
     }
 
     #[test]

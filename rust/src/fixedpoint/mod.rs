@@ -19,7 +19,8 @@ pub mod sparse;
 pub use format::FixedPointFormat;
 pub use histogram::{kl_divergence, quantization_kl, Histogram};
 pub use quantize::{
-    max_abs, quantize_bin, quantize_bin_scalar, quantize_nr_into, quantize_nr_slice,
-    quantize_sr_into, quantize_sr_slice, zero_fraction, QUANTIZE_LANES,
+    max_abs, quantize_bin, quantize_bin_scalar, quantize_nr_count, quantize_nr_into,
+    quantize_nr_slice, quantize_nr_ste, quantize_sr_into, quantize_sr_slice, zero_fraction,
+    QUANTIZE_LANES,
 };
 pub use sparse::SparseFixedTensor;

@@ -136,6 +136,59 @@ pub fn quantize_bin_scalar(xs: &[f32], fmt: FixedPointFormat, hist: &mut Histogr
     zeros
 }
 
+/// Fused nearest-rounding fake-quant + clipped-STE mask + zero count — the
+/// training quantizer of the native CPU backend (`runtime::native`). One
+/// pass computes, per element:
+///
+/// * `q[i]` — the quantized value, bit-identical to [`quantize_bin_scalar`]'s
+///   quantization (`round_half_even_fast(x·s)`, two-sided clamp, rescale by
+///   the exact reciprocal of the power-of-two scale);
+/// * `mask[i]` — the clipped straight-through-estimator gradient mask of the
+///   L1 kernels (`python/compile/kernels/fixedpoint.py`): 1.0 where `x·s`
+///   lies inside `[qmin, qmax]`, 0.0 where the value was clamped away (or is
+///   NaN, which fails both comparisons);
+/// * the returned count of exact zeros (complement of the paper's sp).
+///
+/// `scale` must be a positive power of two (every `<WL, FL>` grid satisfies
+/// this, as do MuPPET's block-floating-point scales), so `* (1/scale)` and
+/// `/ scale` agree bit-for-bit. `q` and `mask` must match `xs` in length.
+pub fn quantize_nr_ste(
+    xs: &[f32],
+    scale: f32,
+    qmin: f32,
+    qmax: f32,
+    q: &mut [f32],
+    mask: &mut [f32],
+) -> u64 {
+    assert_eq!(xs.len(), q.len(), "quantize_nr_ste: q length");
+    assert_eq!(xs.len(), mask.len(), "quantize_nr_ste: mask length");
+    let inv_scale = 1.0 / scale;
+    let mut zeros = 0u64;
+    for ((qv, mv), &x) in q.iter_mut().zip(mask.iter_mut()).zip(xs) {
+        let s = x * scale;
+        let r = round_half_even_fast(s).clamp(qmin, qmax) * inv_scale;
+        *qv = r;
+        zeros += u64::from(r == 0.0);
+        *mv = if s >= qmin && s <= qmax { 1.0 } else { 0.0 };
+    }
+    zeros
+}
+
+/// The mask-free sibling of [`quantize_nr_ste`] for forward-only passes
+/// (the native backend's inference path): identical quantization and zero
+/// count, no STE mask to allocate or fill.
+pub fn quantize_nr_count(xs: &[f32], scale: f32, qmin: f32, qmax: f32, q: &mut [f32]) -> u64 {
+    assert_eq!(xs.len(), q.len(), "quantize_nr_count: q length");
+    let inv_scale = 1.0 / scale;
+    let mut zeros = 0u64;
+    for (qv, &x) in q.iter_mut().zip(xs) {
+        let r = round_half_even_fast(x * scale).clamp(qmin, qmax) * inv_scale;
+        *qv = r;
+        zeros += u64::from(r == 0.0);
+    }
+    zeros
+}
+
 /// Stochastic-rounding quantize with noise from `rng`.
 pub fn quantize_sr_slice(xs: &[f32], fmt: FixedPointFormat, rng: &mut Rng) -> Vec<f32> {
     let mut out = Vec::new();
@@ -279,6 +332,43 @@ mod tests {
                 assert_eq!(a.counts, b.counts, "n={n} <{wl},{fl}>");
                 assert_eq!(a.total, b.total);
                 assert_eq!(za, zb, "n={n} <{wl},{fl}>");
+            }
+        }
+    }
+
+    #[test]
+    fn nr_ste_matches_format_quantizer_and_masks_clamped() {
+        let mut r = Rng::seed_from(31);
+        let mut xs: Vec<f32> = (0..513).map(|_| (r.normal() * 2.0) as f32).collect();
+        xs.extend_from_slice(&[0.0, -0.0, 100.0, -100.0, 1e9, -1e9, f32::NAN]);
+        for (wl, fl) in [(4u8, 2u8), (6, 3), (8, 4), (16, 10), (32, 16)] {
+            let fmt = FixedPointFormat::new(wl, fl);
+            let mut q = vec![0.0f32; xs.len()];
+            let mut m = vec![0.0f32; xs.len()];
+            let zeros = quantize_nr_ste(&xs, fmt.scale(), fmt.qmin(), fmt.qmax(), &mut q, &mut m);
+            let mut recount = 0u64;
+            for (i, &x) in xs.iter().enumerate() {
+                if x.is_nan() {
+                    assert!(q[i].is_nan());
+                    assert_eq!(m[i], 0.0, "NaN must be masked out of the gradient");
+                    continue;
+                }
+                assert_eq!(q[i], fmt.quantize_nr(x), "<{wl},{fl}> x={x}");
+                let s = x * fmt.scale();
+                let inside = s >= fmt.qmin() && s <= fmt.qmax();
+                assert_eq!(m[i], if inside { 1.0 } else { 0.0 }, "<{wl},{fl}> x={x}");
+                recount += u64::from(q[i] == 0.0);
+            }
+            assert_eq!(zeros, recount, "<{wl},{fl}>");
+            // and the zero count agrees with the fused PushDown kernel's
+            let mut hist = Histogram::new(-4.0, 4.0, 32);
+            assert_eq!(zeros, quantize_bin_scalar(&xs, fmt, &mut hist), "<{wl},{fl}>");
+            // the mask-free sibling produces identical values and count
+            let mut q2 = vec![0.0f32; xs.len()];
+            let zeros2 = quantize_nr_count(&xs, fmt.scale(), fmt.qmin(), fmt.qmax(), &mut q2);
+            assert_eq!(zeros2, zeros, "<{wl},{fl}>");
+            for (a, b) in q.iter().zip(&q2) {
+                assert!(a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan()));
             }
         }
     }

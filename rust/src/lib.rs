@@ -8,7 +8,8 @@
 //!   `python/compile/kernels/`), lowered into the model HLO.
 //! * **L2** — JAX train/infer graphs per model (MLP, LeNet-5, AlexNet,
 //!   ResNet-20), AOT-compiled to HLO text artifacts.
-//! * **L3** — this crate: the PJRT runtime, the AdaPT precision-switching
+//! * **L3** — this crate: the execution runtime (PJRT artifacts or the
+//!   native CPU interpreter, see [`runtime`]), the AdaPT precision-switching
 //!   mechanism (PushDown/PushUp, sec. 3.3), the MuPPET + float32 baselines,
 //!   the analytical performance model (sec. 4.1.2) and the experiment
 //!   harness regenerating every table and figure of the paper.

@@ -28,8 +28,8 @@ pub mod schedule;
 pub use parallel::{push_down_layers, push_down_layers_seq, PushDownJob};
 pub use pool::QuantPool;
 pub use pushdown::{
-    format_kl, format_kl_prepared, push_down, push_down_naive, PushDownResult, PushDownScratch,
-    KL_EPS,
+    format_kl, format_kl_prepared, push_down, push_down_naive, quantized_zero_count,
+    PushDownResult, PushDownScratch, KL_EPS,
 };
 pub use pushup::{
     evaluate_push_up, gradient_diversity, gsum_norm, push_up, push_up_layers_seq, PushUpEval,

@@ -296,6 +296,20 @@ impl QuantPool {
             .collect()
     }
 
+    /// Scratch-free fan-out for callers whose jobs don't touch the PushDown
+    /// scratch (e.g. the native backend's matmul row blocks): same ordering,
+    /// determinism and panic guarantees as [`run_indexed`](Self::run_indexed).
+    /// The workers' per-thread scratches still exist (they are part of the
+    /// pool), but the caller no longer has to fabricate one.
+    pub fn run_indexed_plain<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let mut scratch = PushDownScratch::default();
+        self.run_indexed(n, &mut scratch, |i, _| f(i))
+    }
+
     /// Per-layer PushDown across the pool; results in job order,
     /// bit-identical to `push_down_layers_seq`.
     pub fn push_down_layers(
@@ -348,6 +362,8 @@ mod tests {
         let mut scratch = PushDownScratch::default();
         let out = pool.run_indexed(100, &mut scratch, |i, _| i * i);
         assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+        // the scratch-free variant gives the same ordering guarantees
+        assert_eq!(pool.run_indexed_plain(100, |i| i * i), out);
     }
 
     #[test]

@@ -550,6 +550,17 @@ mod tests {
         assert_eq!(qp.len(), 2 * man.num_layers * 5);
         // initial <8,4>: scale 16, qmin -128, qmax 127, enable 1, wl 8
         assert_eq!(&qp[0..5], &[16.0, -128.0, 127.0, 1.0, 8.0]);
+        // every emitted row round-trips through the typed format — the
+        // contract the native backend's generic row interpreter relies on
+        for l in 0..2 * man.num_layers {
+            let row: [f32; 5] = qp[l * 5..(l + 1) * 5].try_into().unwrap();
+            let (fmt, enable) = crate::fixedpoint::FixedPointFormat::from_qparams_row(&row)
+                .expect("AdaPT rows are plain <WL,FL> grids");
+            assert!(enable);
+            let li = l % man.num_layers;
+            assert_eq!(fmt.wl, c.wordlengths()[li]);
+            assert_eq!(fmt.fl, c.fraclengths()[li]);
+        }
     }
 
     #[test]

@@ -1,41 +1,130 @@
-//! PJRT engine: loads AOT HLO-text artifacts and executes them.
+//! Execution engines: backend selection, artifact loading, literal packing.
 //!
-//! Interchange is HLO *text* (see DESIGN.md / aot.py): jax >= 0.5 emits
-//! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
-//! `HloModuleProto::from_text_file` reassigns ids and round-trips cleanly.
+//! Two [`ExecBackend`] implementations live behind the [`Engine`] facade:
+//!
+//! * [`PjrtBackend`] — loads AOT HLO-text artifacts and executes them
+//!   through PJRT. Interchange is HLO *text* (see DESIGN.md / aot.py):
+//!   jax >= 0.5 emits protos with 64-bit instruction ids that
+//!   xla_extension 0.5.1 rejects; `HloModuleProto::from_text_file`
+//!   reassigns ids and round-trips cleanly.
+//! * [`super::native::NativeBackend`] — a pure-Rust interpreter for the
+//!   all-dense MLP manifests; needs no artifacts, no Python, no PJRT.
+//!
+//! `Engine::cpu()` honours `$ADAPT_BACKEND` (`"pjrt"` / `"native"`) and,
+//! when unset, tries PJRT first and falls back to the native interpreter —
+//! so the e2e training loop runs under plain `cargo test` even in the
+//! offline build that compiles against the `xla` stub.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
 // The offline registry has no `xla` binding; the API-compatible in-tree stub
 // keeps this module compiling (see `xla_stub` docs). To use a real vendored
 // xla-rs, replace this alias with the external crate — the call sites below
-// are written against the genuine xla-rs surface and need no edits.
-use super::xla_stub as xla;
+// are written against the genuine xla-rs surface and need no edits. The
+// alias is `pub(crate)` so the native backend shares the same `Literal`.
+pub(crate) use super::xla_stub as xla;
 
 use super::manifest::{Dtype, IoSpec, Manifest};
+use super::native::NativeBackend;
+use crate::quant::QuantPool;
 
-/// Shared PJRT client (CPU). One per process.
-pub struct Engine {
+/// One compiled (or interpreted) executable: consumes inputs packed as
+/// [`Literal`](super::xla_stub::Literal)s in manifest order and produces
+/// per-output f32 vectors, also in manifest order. Implementations: the
+/// PJRT executable wrapper and the native train/infer interpreters.
+pub trait ExecModule: Send + Sync {
+    fn execute_f32(&self, inputs: &[xla::Literal], out_specs: &[IoSpec]) -> Result<Vec<Vec<f32>>>;
+}
+
+/// An execution backend: compiles the (train, infer) executable pair for a
+/// model. `Engine` dispatches through a boxed backend so the trainer and
+/// every harness stay backend-agnostic.
+///
+/// ```
+/// use adapt::runtime::{Engine, Manifest};
+///
+/// // The native backend needs no artifacts directory: a synthetic manifest
+/// // compiles straight into a runnable (train, infer) pair.
+/// let engine = Engine::native();
+/// let man = Manifest::synthetic_mlp("demo-mlp", [4, 4, 1], 4, &[8], 8);
+/// let model = engine.compile_manifest(man).unwrap();
+/// assert_eq!(model.manifest.num_layers, 2);
+/// assert_eq!(engine.platform(), "native-cpu");
+/// ```
+pub trait ExecBackend: Send + Sync {
+    /// Human-readable platform name (e.g. `"cpu"` under PJRT,
+    /// `"native-cpu"` for the interpreter).
+    fn platform_name(&self) -> String;
+
+    /// Compile the train + infer executables for `manifest`. `dir`/`name`
+    /// locate on-disk HLO artifacts for backends that need them (PJRT);
+    /// the native interpreter works from the manifest alone and accepts
+    /// `dir = None`.
+    fn compile(
+        &self,
+        dir: Option<&Path>,
+        name: &str,
+        manifest: &Manifest,
+    ) -> Result<(Box<dyn ExecModule>, Box<dyn ExecModule>)>;
+
+    /// The persistent quantization worker pool this backend owns, if any.
+    /// The trainer reuses it for precision-switch fan-outs instead of
+    /// spawning a second thread team.
+    fn quant_pool(&self) -> Option<Arc<QuantPool>> {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend
+// ---------------------------------------------------------------------------
+
+/// The PJRT-client backend: compiles `<name>.{train,infer}.hlo.txt` from the
+/// artifacts directory. One client per process.
+pub struct PjrtBackend {
     client: xla::PjRtClient,
 }
 
-impl Engine {
-    pub fn cpu() -> Result<Engine> {
+impl PjrtBackend {
+    pub fn cpu() -> Result<PjrtBackend> {
         // ResNet-20's train-step HLO takes >5 min to compile at XLA's default
         // backend optimization level on one core; level 1 compiles in seconds
         // with measurably identical step time (see EXPERIMENTS.md §Perf).
-        // Respect an explicit user override.
-        if std::env::var_os("XLA_FLAGS").is_none() {
+        // Respect an explicit user override. The flag must be in place
+        // before client creation to take effect, but it must only SURVIVE
+        // when PJRT is actually selected: if the client cannot be built
+        // (stub build, missing plugin) the native fallback runs instead, and
+        // it must not inherit a mutated environment.
+        //
+        // Environment mutation is not thread-safe on POSIX, so the probe —
+        // the only place this crate ever writes the environment — runs at
+        // most once per process: the outcome is cached under a mutex, and
+        // every later call reuses it without touching `XLA_FLAGS` again.
+        static PROBE: std::sync::Mutex<Option<bool>> = std::sync::Mutex::new(None);
+        let mut probe = PROBE.lock().unwrap_or_else(|p| p.into_inner());
+        if *probe == Some(false) {
+            return Err(anyhow!("pjrt cpu: unavailable (cached probe result)"));
+        }
+        let flags_were_unset = probe.is_none() && std::env::var_os("XLA_FLAGS").is_none();
+        if flags_were_unset {
             std::env::set_var("XLA_FLAGS", "--xla_backend_optimization_level=1");
         }
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
-        Ok(Engine { client })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match xla::PjRtClient::cpu() {
+            Ok(client) => {
+                *probe = Some(true);
+                Ok(PjrtBackend { client })
+            }
+            Err(e) => {
+                if flags_were_unset {
+                    std::env::remove_var("XLA_FLAGS");
+                }
+                *probe = Some(false);
+                Err(anyhow!("pjrt cpu: {e:?}"))
+            }
+        }
     }
 
     fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
@@ -46,17 +135,158 @@ impl Engine {
             .compile(&comp)
             .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))
     }
+}
 
-    /// Load one named artifact triple from `dir`:
-    /// `<name>.train.hlo.txt`, `<name>.infer.hlo.txt`, `<name>.manifest.json`.
-    pub fn load_model(&self, dir: &Path, name: &str) -> Result<LoadedModel> {
-        let manifest = Manifest::load(&dir.join(format!("{name}.manifest.json")))?;
+impl ExecBackend for PjrtBackend {
+    fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(
+        &self,
+        dir: Option<&Path>,
+        name: &str,
+        _manifest: &Manifest,
+    ) -> Result<(Box<dyn ExecModule>, Box<dyn ExecModule>)> {
+        let dir = dir.ok_or_else(|| {
+            anyhow!("the PJRT backend requires an artifacts directory (HLO text files)")
+        })?;
         let train = self.compile_file(&dir.join(format!("{name}.train.hlo.txt")))?;
         let infer = self.compile_file(&dir.join(format!("{name}.infer.hlo.txt")))?;
+        Ok((
+            Box::new(PjrtModule { exe: train }),
+            Box::new(PjrtModule { exe: infer }),
+        ))
+    }
+}
+
+/// A compiled PJRT executable behind the [`ExecModule`] contract.
+struct PjrtModule {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl ExecModule for PjrtModule {
+    /// Execute on literal inputs, unwrap the 1-tuple result (lowered with
+    /// return_tuple=True) into per-output f32 vectors.
+    fn execute_f32(&self, inputs: &[xla::Literal], out_specs: &[IoSpec]) -> Result<Vec<Vec<f32>>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        if parts.len() != out_specs.len() {
+            return Err(anyhow!(
+                "got {} outputs, manifest says {}",
+                parts.len(),
+                out_specs.len()
+            ));
+        }
+        parts
+            .into_iter()
+            .zip(out_specs)
+            .map(|(lit, spec)| {
+                let v = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("output {}: {e:?}", spec.name))?;
+                if v.len() != spec.elems() {
+                    return Err(anyhow!(
+                        "output {}: {} elems, expected {}",
+                        spec.name,
+                        v.len(),
+                        spec.elems()
+                    ));
+                }
+                Ok(v)
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine facade
+// ---------------------------------------------------------------------------
+
+/// Shared execution engine: a boxed [`ExecBackend`], selected once per
+/// process (PJRT when available, otherwise the native interpreter).
+pub struct Engine {
+    backend: Box<dyn ExecBackend>,
+}
+
+impl Engine {
+    /// Backend selection for the CPU testbed, honouring `$ADAPT_BACKEND`:
+    ///
+    /// * `"pjrt"` — force PJRT; fails when no client is available (e.g. the
+    ///   offline build against the xla stub).
+    /// * `"native"` — force the pure-Rust interpreter.
+    /// * unset — try PJRT first, fall back to native.
+    pub fn cpu() -> Result<Engine> {
+        match std::env::var("ADAPT_BACKEND").ok().as_deref() {
+            Some("pjrt") => Ok(Engine {
+                backend: Box::new(PjrtBackend::cpu()?),
+            }),
+            Some("native") => Ok(Engine::native()),
+            Some(other) => Err(anyhow!(
+                "unknown ADAPT_BACKEND {other:?} (expected \"pjrt\" or \"native\")"
+            )),
+            None => Ok(match PjrtBackend::cpu() {
+                Ok(b) => Engine { backend: Box::new(b) },
+                Err(_) => Engine::native(),
+            }),
+        }
+    }
+
+    /// The native CPU interpreter backend (infallible: needs no device, no
+    /// artifacts).
+    pub fn native() -> Engine {
+        Engine {
+            backend: Box::new(NativeBackend::with_default_threads()),
+        }
+    }
+
+    /// Build an engine around an explicit backend (tests, embedders).
+    pub fn with_backend(backend: Box<dyn ExecBackend>) -> Engine {
+        Engine { backend }
+    }
+
+    pub fn platform(&self) -> String {
+        self.backend.platform_name()
+    }
+
+    /// The backend's persistent quantization worker pool, if it owns one.
+    pub fn quant_pool(&self) -> Option<Arc<QuantPool>> {
+        self.backend.quant_pool()
+    }
+
+    /// Load one named artifact triple from `dir`:
+    /// `<name>.manifest.json` plus, for backends that execute compiled HLO,
+    /// `<name>.train.hlo.txt` / `<name>.infer.hlo.txt`.
+    pub fn load_model(&self, dir: &Path, name: &str) -> Result<LoadedModel> {
+        let manifest = Manifest::load(&dir.join(format!("{name}.manifest.json")))?;
+        self.build_model(Some(dir), name, manifest)
+    }
+
+    /// Compile a manifest directly — no artifacts directory involved. This
+    /// is how the native backend runs fully synthetic models (see
+    /// [`Manifest::synthetic_mlp`]); the PJRT backend rejects it.
+    pub fn compile_manifest(&self, manifest: Manifest) -> Result<LoadedModel> {
+        let name = manifest.name.clone();
+        self.build_model(None, &name, manifest)
+    }
+
+    fn build_model(
+        &self,
+        dir: Option<&Path>,
+        name: &str,
+        manifest: Manifest,
+    ) -> Result<LoadedModel> {
+        let (train, infer) = self.backend.compile(dir, name, &manifest)?;
         Ok(LoadedModel {
             manifest,
             train,
             infer,
+            pool: self.backend.quant_pool(),
         })
     }
 }
@@ -64,8 +294,12 @@ impl Engine {
 /// A compiled (train, infer) pair plus its manifest.
 pub struct LoadedModel {
     pub manifest: Manifest,
-    pub train: xla::PjRtLoadedExecutable,
-    pub infer: xla::PjRtLoadedExecutable,
+    pub train: Box<dyn ExecModule>,
+    pub infer: Box<dyn ExecModule>,
+    /// Worker pool of the backend that built this model (None for PJRT).
+    /// The trainer shares it with the precision controllers so one thread
+    /// team serves both the interpreter's matmuls and the switch fan-outs.
+    pub pool: Option<Arc<QuantPool>>,
 }
 
 /// Locate the artifacts directory: $ADAPT_ARTIFACTS or ./artifacts upward.
@@ -111,46 +345,6 @@ pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, bytes)
         .map_err(|e| anyhow!("literal_i32: {e:?}"))
-}
-
-/// Execute a compiled module on literal inputs, unwrap the 1-tuple result
-/// (lowered with return_tuple=True) into per-output f32 vectors.
-pub fn execute_f32(
-    exe: &xla::PjRtLoadedExecutable,
-    inputs: &[xla::Literal],
-    out_specs: &[IoSpec],
-) -> Result<Vec<Vec<f32>>> {
-    let result = exe
-        .execute::<xla::Literal>(inputs)
-        .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
-        .to_literal_sync()
-        .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-    let parts = result.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
-    if parts.len() != out_specs.len() {
-        return Err(anyhow!(
-            "got {} outputs, manifest says {}",
-            parts.len(),
-            out_specs.len()
-        ));
-    }
-    parts
-        .into_iter()
-        .zip(out_specs)
-        .map(|(lit, spec)| {
-            let v = lit
-                .to_vec::<f32>()
-                .map_err(|e| anyhow!("output {}: {e:?}", spec.name))?;
-            if v.len() != spec.elems() {
-                return Err(anyhow!(
-                    "output {}: {} elems, expected {}",
-                    spec.name,
-                    v.len(),
-                    spec.elems()
-                ));
-            }
-            Ok(v)
-        })
-        .collect()
 }
 
 /// Pack named train-step inputs in manifest order.

@@ -267,6 +267,102 @@ impl Manifest {
         }
     }
 
+    /// A fully-executable synthetic MLP manifest: unlike
+    /// [`synthetic_dense`](Self::synthetic_dense) it carries the complete
+    /// train/infer I/O contract (mirroring what `python/compile/aot.py`
+    /// emits for the `mlp` model), so [`validate`](Self::validate) holds and
+    /// `Engine::compile_manifest` can build a runnable model on the native
+    /// backend with **no artifacts directory at all**.
+    ///
+    /// `input_shape` is `[h, w, c]`; the layer chain is
+    /// `h·w·c -> hidden... -> classes`.
+    ///
+    /// ```
+    /// use adapt::runtime::Manifest;
+    ///
+    /// let man = Manifest::synthetic_mlp("mlp-native", [8, 8, 1], 10, &[32, 16], 16);
+    /// assert_eq!(man.num_layers, 3);
+    /// assert_eq!(man.batch, 16);
+    /// assert!(man.validate().is_ok());
+    /// ```
+    pub fn synthetic_mlp(
+        name: &str,
+        input_shape: [usize; 3],
+        classes: usize,
+        hidden: &[usize],
+        batch: usize,
+    ) -> Manifest {
+        let [h, w, c] = input_shape;
+        let fin = h * w * c;
+        let mut dims = Vec::with_capacity(hidden.len() + 1);
+        let mut d_in = fin;
+        for &d_out in hidden.iter().chain(std::iter::once(&classes)) {
+            dims.push((d_in, d_out));
+            d_in = d_out;
+        }
+        let mut man = Manifest::synthetic_dense(name, &dims);
+        man.batch = batch;
+        man.input_shape = vec![h, w, c];
+        man.classes = classes;
+        let l = dims.len();
+        let f32_spec = |name: String, shape: Vec<usize>| IoSpec {
+            name,
+            shape,
+            dtype: Dtype::F32,
+        };
+        let param_specs = |out: &mut Vec<IoSpec>, params: &[ParamInfo]| {
+            for p in params {
+                out.push(IoSpec {
+                    name: p.name.clone(),
+                    shape: p.shape.clone(),
+                    dtype: Dtype::F32,
+                });
+            }
+        };
+        let gsum_specs = |out: &mut Vec<IoSpec>| {
+            for (i, &(di, do_)) in dims.iter().enumerate() {
+                out.push(f32_spec(format!("gsum.dense{i}.kernel"), vec![di, do_]));
+            }
+        };
+
+        let mut train_inputs = Vec::with_capacity(3 * l + 4);
+        param_specs(&mut train_inputs, &man.params);
+        gsum_specs(&mut train_inputs);
+        train_inputs.push(f32_spec("x".into(), vec![batch, h, w, c]));
+        train_inputs.push(IoSpec {
+            name: "y".into(),
+            shape: vec![batch],
+            dtype: Dtype::I32,
+        });
+        train_inputs.push(f32_spec("qparams".into(), vec![2 * l, 5]));
+        train_inputs.push(f32_spec("hyper".into(), vec![8]));
+
+        let mut train_outputs = Vec::with_capacity(3 * l + 7);
+        param_specs(&mut train_outputs, &man.params);
+        gsum_specs(&mut train_outputs);
+        train_outputs.push(f32_spec("loss".into(), vec![]));
+        train_outputs.push(f32_spec("ce".into(), vec![]));
+        train_outputs.push(f32_spec("acc".into(), vec![]));
+        train_outputs.push(f32_spec("grad_norm".into(), vec![l]));
+        train_outputs.push(f32_spec("gsum_norm".into(), vec![l]));
+        train_outputs.push(f32_spec("sparsity".into(), vec![l]));
+        train_outputs.push(f32_spec("act_absmax".into(), vec![l]));
+
+        let mut infer_inputs = Vec::with_capacity(2 * l + 2);
+        param_specs(&mut infer_inputs, &man.params);
+        infer_inputs.push(f32_spec("x".into(), vec![batch, h, w, c]));
+        infer_inputs.push(f32_spec("qparams".into(), vec![2 * l, 5]));
+        let infer_outputs = vec![f32_spec("logits".into(), vec![batch, classes])];
+
+        man.train_inputs = train_inputs;
+        man.train_outputs = train_outputs;
+        man.infer_inputs = infer_inputs;
+        man.infer_outputs = infer_outputs;
+        man.validate()
+            .expect("synthetic_mlp construction satisfies the manifest invariants");
+        man
+    }
+
     /// Indices (into `params`) of the quantizable kernels, layer order.
     pub fn kernel_indices(&self) -> Vec<usize> {
         self.params
@@ -331,6 +427,24 @@ mod tests {
     fn rejects_inconsistent_counts() {
         let bad = tiny_manifest().replace("\"num_layers\":1", "\"num_layers\":2");
         assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn synthetic_mlp_is_fully_executable() {
+        let m = Manifest::synthetic_mlp("mlp-native", [8, 8, 1], 10, &[32, 16], 16);
+        m.validate().expect("full I/O contract");
+        assert_eq!(m.num_layers, 3);
+        assert_eq!(m.kernel_indices(), vec![0, 2, 4]);
+        assert_eq!(m.train_inputs.len(), m.params.len() + 3 + 4);
+        assert_eq!(m.train_outputs.len(), m.params.len() + 3 + 7);
+        assert_eq!(m.infer_inputs.len(), m.params.len() + 2);
+        // qparams row-count contract
+        let qp = &m.train_inputs[m.train_inputs.len() - 2];
+        assert_eq!(qp.shape, vec![6, 5]);
+        // y is the only integer input
+        let y = &m.train_inputs[m.train_inputs.len() - 3];
+        assert_eq!(y.dtype, Dtype::I32);
+        assert_eq!(y.shape, vec![16]);
     }
 
     #[test]

@@ -1,25 +1,37 @@
-//! L3 <-> artifact runtime: PJRT client, manifest parsing, executable I/O.
+//! L3 <-> artifact runtime: execution backends, manifest parsing,
+//! executable I/O.
 //!
 //! The trainer never touches Python at run time: `make artifacts` AOT-
 //! compiles the L2 JAX graphs to HLO text once, and this module loads and
-//! executes them through PJRT ([`engine`]), describes their I/O contract
-//! ([`manifest`]) and wraps the train/infer calls in typed helpers
-//! ([`step`]).
+//! executes them through an [`ExecBackend`] ([`engine`]), describes their
+//! I/O contract ([`manifest`]) and wraps the train/infer calls in typed
+//! helpers ([`step`]).
+//!
+//! # Backends
+//!
+//! Two implementations sit behind `Engine`:
+//!
+//! * **PJRT** ([`engine::PjrtBackend`]) — compiles the `<name>.*.hlo.txt`
+//!   artifacts through the `xla` binding and executes on the device. In the
+//!   offline build the binding is the in-tree API stub [`xla_stub`], whose
+//!   host-side pieces (`Literal` packing/unpacking) are real while anything
+//!   needing a device returns a descriptive error.
+//! * **Native** ([`native::NativeBackend`]) — a pure-Rust interpreter for
+//!   all-dense MLP manifests (quantized forward/backward/ASGD on the host,
+//!   fanned out on the shared `QuantPool`). Needs no artifacts: see
+//!   [`Manifest::synthetic_mlp`].
+//!
+//! `Engine::cpu()` selects per `$ADAPT_BACKEND` ("pjrt" / "native"), trying
+//! PJRT and falling back to native when unset — which is what makes the e2e
+//! suite run (not skip) under plain `cargo test -q`.
 //!
 //! # Swapping in a real `xla` binding
 //!
-//! The offline build compiles against the in-tree API stub [`xla_stub`]: a
-//! faithful subset of the xla-rs surface whose host-side pieces (`Literal`
-//! packing/unpacking) are real, while anything needing a device — client
-//! construction, compilation, execution — returns a descriptive error that
-//! every caller already treats as "artifacts/PJRT unavailable, skip". To
-//! re-enable device execution:
-//!
 //! 1. vendor an xla-rs/PJRT binding and add it to `Cargo.toml`;
 //! 2. in `rust/src/runtime/engine.rs`, replace the single alias line
-//!    `use super::xla_stub as xla;` with `use xla;` (or the vendored crate
-//!    name) — the call sites are written against the genuine xla-rs
-//!    surface and need no edits;
+//!    `pub(crate) use super::xla_stub as xla;` with a re-export of the
+//!    vendored crate — the call sites are written against the genuine
+//!    xla-rs surface and need no edits;
 //! 3. ship the PJRT CPU plugin shared library next to the binary.
 //!
 //! Nothing else in the crate changes: the precision mechanism, perf model
@@ -28,9 +40,11 @@
 
 pub mod engine;
 pub mod manifest;
+pub mod native;
 pub mod step;
 pub mod xla_stub;
 
-pub use engine::{artifacts_dir, Engine, LoadedModel};
+pub use engine::{artifacts_dir, Engine, ExecBackend, ExecModule, LoadedModel, PjrtBackend};
 pub use manifest::{Dtype, IoSpec, LayerDesc, Manifest, ParamInfo};
+pub use native::{NativeBackend, NativeModel};
 pub use step::{Hyper, StepMetrics, TrainState};

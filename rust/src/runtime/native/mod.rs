@@ -1,0 +1,120 @@
+//! The native CPU execution backend: a pure-Rust interpreter for the
+//! all-dense MLP manifests, behind the same [`ExecBackend`]/[`ExecModule`]
+//! contract as the PJRT path.
+//!
+//! # Why it exists
+//!
+//! The offline build compiles against the in-tree `xla` stub, where every
+//! device operation fails — so before this backend, the whole e2e tier
+//! (trainer loops, precision switching under load, quantized evaluation)
+//! printed `SKIP`. The interpreter executes the manifest's train/infer
+//! contract directly on the host: quantized forward (matmul + bias + ReLU +
+//! fake-quant from the runtime qparams rows), softmax cross-entropy,
+//! backward through the clipped STE, the ASGD update with gradient-diversity
+//! accumulation, and the full metric tail. `train(&engine, …)` with
+//! `Policy::Adapt` now runs end-to-end — losses drop, PushDown/PushUp
+//! switches fire, quantized evals record — inside plain `cargo test -q`.
+//!
+//! # Fidelity
+//!
+//! The math mirrors `python/compile/train_step.py` + `models/mlp.py`
+//! operation for operation, with two substitutions: weights/activations are
+//! fake-quantized with deterministic nearest rounding (round-half-even, the
+//! same `quantize_nr_ste` kernel the PushDown engine's scalar reference
+//! uses) instead of the device PRNG's stochastic rounding, and the ReLU
+//! backward passes zero gradient at exactly-zero pre-activations (XLA's
+//! `maximum` VJP splits tie gradients between its operands — a measure-zero
+//! event that only occurs when a pre-activation lands exactly on the bias).
+//! Runs are bit-reproducible given a seed, and bit-identical across worker
+//! counts: all parallel fan-outs partition output rows, never reductions.
+//!
+//! # Scope
+//!
+//! Dense-only, BN-free models (the `mlp-*` artifacts and
+//! [`Manifest::synthetic_mlp`](crate::runtime::Manifest::synthetic_mlp)).
+//! Conv models (LeNet/AlexNet/ResNet) still need a PJRT binding —
+//! `NativeModel::from_manifest` rejects their manifests with a clear error
+//! rather than silently mis-executing them.
+//!
+//! ```
+//! use adapt::runtime::{Engine, Manifest};
+//!
+//! let engine = Engine::native();
+//! let man = Manifest::synthetic_mlp("doc-mlp", [4, 4, 1], 4, &[8], 8);
+//! let model = engine.compile_manifest(man).unwrap();
+//! // the model is directly trainable: one step through the typed wrapper
+//! let mut state = adapt::runtime::TrainState {
+//!     params: adapt::init::init_params(&model.manifest, adapt::init::Initializer::Tnvs, 1.0, 0),
+//!     gsum: adapt::init::init_gsum(&model.manifest),
+//!     bn: adapt::init::init_bn(&model.manifest),
+//!     step: 0,
+//! };
+//! let x = vec![0.1f32; 8 * 16];
+//! let y = vec![0i32, 1, 2, 3, 0, 1, 2, 3];
+//! let qp: Vec<f32> = (0..2 * model.manifest.num_layers)
+//!     .flat_map(|_| adapt::fixedpoint::FixedPointFormat::initial().qparams_row(1.0))
+//!     .collect();
+//! let metrics = model
+//!     .train_step(&mut state, &x, &y, &qp, &adapt::runtime::Hyper::default())
+//!     .unwrap();
+//! assert!(metrics.loss.is_finite());
+//! ```
+
+mod ops;
+mod step;
+
+pub use ops::{fake_quant, fake_quant_ste, QRow};
+pub use step::NativeModel;
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::engine::{ExecBackend, ExecModule};
+use super::manifest::Manifest;
+use crate::quant::QuantPool;
+
+/// The native interpreter backend. Owns the persistent [`QuantPool`] its
+/// matmuls fan out on; [`ExecBackend::quant_pool`] exposes it so the trainer
+/// shares the same team for precision-switch fan-outs.
+pub struct NativeBackend {
+    pool: Arc<QuantPool>,
+}
+
+impl NativeBackend {
+    pub fn new(pool: Arc<QuantPool>) -> NativeBackend {
+        NativeBackend { pool }
+    }
+
+    /// Pool sized by the `ADAPT_THREADS` / available-parallelism policy.
+    pub fn with_default_threads() -> NativeBackend {
+        NativeBackend::new(Arc::new(QuantPool::with_default_threads()))
+    }
+}
+
+impl ExecBackend for NativeBackend {
+    fn platform_name(&self) -> String {
+        "native-cpu".to_string()
+    }
+
+    fn compile(
+        &self,
+        _dir: Option<&Path>,
+        _name: &str,
+        manifest: &Manifest,
+    ) -> Result<(Box<dyn ExecModule>, Box<dyn ExecModule>)> {
+        let model = Arc::new(NativeModel::from_manifest(
+            manifest.clone(),
+            Arc::clone(&self.pool),
+        )?);
+        Ok((
+            Box::new(step::NativeTrainStep(Arc::clone(&model))),
+            Box::new(step::NativeInfer(model)),
+        ))
+    }
+
+    fn quant_pool(&self) -> Option<Arc<QuantPool>> {
+        Some(Arc::clone(&self.pool))
+    }
+}

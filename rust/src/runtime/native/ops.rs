@@ -1,0 +1,425 @@
+//! Numeric kernels of the native CPU backend.
+//!
+//! Everything here is deterministic by construction: matrix products fan
+//! out over *row blocks* on the shared [`QuantPool`], and every output
+//! element is computed by exactly one runner with a fixed ascending
+//! accumulation order — so results are bit-identical for any worker count,
+//! including the degenerate single-threaded pool of the one-core testbed.
+//!
+//! The quantizers delegate to the fixedpoint kernels
+//! ([`crate::fixedpoint::quantize_nr_ste`]) so the interpreter's fake-quant
+//! is bit-identical to the PushDown engine's `quantize_bin_scalar` math —
+//! the property the native-backend test suite pins down.
+
+use anyhow::{anyhow, Result};
+
+use crate::fixedpoint::{quantize_nr_count, quantize_nr_ste};
+use crate::quant::QuantPool;
+
+/// The ASGD update epsilon of the L2 train step (`train_step.py`: EPS).
+pub const UPDATE_EPS: f32 = 1e-12;
+
+/// One parsed row of the runtime qparams tensor
+/// (`[scale, qmin, qmax, enable, wl]`, see `FixedPointFormat::qparams_row`).
+#[derive(Debug, Clone, Copy)]
+pub struct QRow {
+    pub scale: f32,
+    pub qmin: f32,
+    pub qmax: f32,
+    pub enable: bool,
+    pub wl: f32,
+}
+
+impl QRow {
+    /// Parse row `row` of a flattened `f32[2L, 5]` qparams tensor.
+    pub fn parse(qparams: &[f32], row: usize) -> Result<QRow> {
+        let o = row * 5;
+        let s = qparams
+            .get(o..o + 5)
+            .ok_or_else(|| anyhow!("qparams row {row} out of range (len {})", qparams.len()))?;
+        Ok(QRow {
+            scale: s[0],
+            qmin: s[1],
+            qmax: s[2],
+            enable: s[3] > 0.5,
+            wl: s[4],
+        })
+    }
+}
+
+/// Fake-quant one tensor under a runtime qparams row: quantized values into
+/// `q`, returns the exact-zero count. Disabled rows (enable <= 0.5, the
+/// float32 baseline) pass values through unchanged, mirroring the L1
+/// kernels' `jnp.where(enable > 0.5, y, x)`.
+pub fn fake_quant(xs: &[f32], row: &QRow, q: &mut [f32]) -> u64 {
+    debug_assert_eq!(xs.len(), q.len());
+    if !row.enable {
+        q.copy_from_slice(xs);
+        return xs.iter().filter(|&&x| x == 0.0).count() as u64;
+    }
+    quantize_nr_count(xs, row.scale, row.qmin, row.qmax, q)
+}
+
+/// Fake-quant + clipped-STE gradient mask (1.0 inside the representable
+/// range, 0.0 where clamped); returns the exact-zero count of `q`.
+pub fn fake_quant_ste(xs: &[f32], row: &QRow, q: &mut [f32], mask: &mut [f32]) -> u64 {
+    debug_assert_eq!(xs.len(), q.len());
+    debug_assert_eq!(xs.len(), mask.len());
+    if !row.enable {
+        q.copy_from_slice(xs);
+        mask.fill(1.0);
+        return xs.iter().filter(|&&x| x == 0.0).count() as u64;
+    }
+    quantize_nr_ste(xs, row.scale, row.qmin, row.qmax, q, mask)
+}
+
+/// Partition `rows` output rows of width `width` into one contiguous block
+/// per pool runner, compute each block into its own buffer via `f(row,
+/// out_row)`, and stitch the blocks back in order. `f` must fill `out_row`
+/// from zeros. Bit-deterministic: each row is produced by exactly one call
+/// to `f`, independent of the block partition. The per-block buffer + final
+/// stitch copies each result once more than strictly necessary; writing
+/// blocks in place would need hand-rolled aliasing guarantees across the
+/// type-erased pool tasks, which the MLP-scale buffers here don't justify.
+fn run_row_blocks<F>(pool: &QuantPool, rows: usize, width: usize, f: F) -> Vec<f32>
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    if rows == 0 || width == 0 {
+        return vec![0.0; rows * width];
+    }
+    let runners = pool.parallelism().min(rows).max(1);
+    let per = rows.div_ceil(runners);
+    let blocks = rows.div_ceil(per);
+    let out_blocks = pool.run_indexed_plain(blocks, |bi| {
+        let r0 = bi * per;
+        let r1 = ((bi + 1) * per).min(rows);
+        let mut buf = vec![0.0f32; (r1 - r0) * width];
+        for r in r0..r1 {
+            f(r, &mut buf[(r - r0) * width..(r - r0 + 1) * width]);
+        }
+        buf
+    });
+    let mut out = Vec::with_capacity(rows * width);
+    for b in out_blocks {
+        out.extend_from_slice(&b);
+    }
+    out
+}
+
+/// C = A @ B with A row-major m×k and B row-major k×n; pool-parallel over
+/// rows of A. Accumulation is k-ascending per output element.
+pub fn matmul(pool: &QuantPool, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    run_row_blocks(pool, m, n, |r, out_row| {
+        let arow = &a[r * k..(r + 1) * k];
+        for (kk, &av) in arow.iter().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in out_row.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    })
+}
+
+/// C = Aᵀ @ G with A m×k and G m×n (the weight-gradient product h_{i-1}ᵀ·g);
+/// result k×n, pool-parallel over rows of C, m-ascending accumulation.
+pub fn matmul_at_b(
+    pool: &QuantPool,
+    a: &[f32],
+    g: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(g.len(), m * n);
+    run_row_blocks(pool, k, n, |kk, out_row| {
+        for mm in 0..m {
+            let av = a[mm * k + kk];
+            let grow = &g[mm * n..(mm + 1) * n];
+            for (o, &gv) in out_row.iter_mut().zip(grow) {
+                *o += av * gv;
+            }
+        }
+    })
+}
+
+/// C = G @ Wᵀ with G m×n and W k×n (the input-gradient product g·wᵀ);
+/// result m×k, pool-parallel over rows of G, n-ascending dot products.
+pub fn matmul_a_bt(
+    pool: &QuantPool,
+    g: &[f32],
+    w: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(g.len(), m * n);
+    debug_assert_eq!(w.len(), k * n);
+    run_row_blocks(pool, m, k, |r, out_row| {
+        let grow = &g[r * n..(r + 1) * n];
+        for (kk, o) in out_row.iter_mut().enumerate() {
+            let wrow = &w[kk * n..(kk + 1) * n];
+            let mut acc = 0.0f32;
+            for (&gv, &wv) in grow.iter().zip(wrow) {
+                acc += gv * wv;
+            }
+            *o = acc;
+        }
+    })
+}
+
+/// z += bias, broadcast over `rows` rows.
+pub fn add_bias_inplace(z: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
+    debug_assert_eq!(z.len(), rows * cols);
+    debug_assert_eq!(bias.len(), cols);
+    for r in 0..rows {
+        for (v, &b) in z[r * cols..(r + 1) * cols].iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+pub fn relu_inplace(z: &mut [f32]) {
+    for v in z.iter_mut() {
+        *v = v.max(0.0);
+    }
+}
+
+/// Zero the gradient where the forward ReLU output was zero (`a = max(z, 0)`
+/// so `a > 0` iff `z > 0`).
+pub fn relu_backward_inplace(g: &mut [f32], a: &[f32]) {
+    debug_assert_eq!(g.len(), a.len());
+    for (gv, &av) in g.iter_mut().zip(a) {
+        if av <= 0.0 {
+            *gv = 0.0;
+        }
+    }
+}
+
+/// dst *= m elementwise (STE mask application).
+pub fn mul_inplace(dst: &mut [f32], m: &[f32]) {
+    debug_assert_eq!(dst.len(), m.len());
+    for (d, &v) in dst.iter_mut().zip(m) {
+        *d *= v;
+    }
+}
+
+/// Column sums of a rows×cols matrix (the bias gradient), row-ascending.
+pub fn col_sums(g: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    debug_assert_eq!(g.len(), rows * cols);
+    let mut out = vec![0.0f32; cols];
+    for r in 0..rows {
+        for (o, &v) in out.iter_mut().zip(&g[r * cols..(r + 1) * cols]) {
+            *o += v;
+        }
+    }
+    out
+}
+
+/// L2 norm with an f64 accumulator (matches `quant::pushup::gsum_norm`).
+pub fn l2_norm(xs: &[f32]) -> f32 {
+    let mut acc = 0.0f64;
+    for &x in xs {
+        acc += x as f64 * x as f64;
+    }
+    acc.sqrt() as f32
+}
+
+/// Sequential f64 sums of |x| and x² (the L1/L2 regularizer terms).
+pub fn abs_and_sq_sums(xs: &[f32]) -> (f64, f64) {
+    let (mut s1, mut s2) = (0.0f64, 0.0f64);
+    for &x in xs {
+        s1 += x.abs() as f64;
+        s2 += x as f64 * x as f64;
+    }
+    (s1, s2)
+}
+
+/// d|x|/dx with sign(0) = 0 (matches `jnp.sign`, which JAX uses as the
+/// gradient of `jnp.abs`). NaN also maps to 0 — the poisoned-batch guard in
+/// the controller handles non-finite gradients downstream.
+pub fn sign(x: f32) -> f32 {
+    if x > 0.0 {
+        1.0
+    } else if x < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+/// Softmax cross-entropy with logits: returns (mean CE, top-1 accuracy,
+/// dCE/dlogits). The gradient is `(softmax - onehot) / batch`, i.e. the
+/// gradient of the MEAN cross-entropy, matching the compiled L2 step.
+/// Rows use a max-shifted log-sum-exp; the CE mean accumulates in f64.
+pub fn softmax_ce_grad(
+    logits: &[f32],
+    y: &[i32],
+    b: usize,
+    c: usize,
+) -> Result<(f32, f32, Vec<f32>)> {
+    debug_assert_eq!(logits.len(), b * c);
+    let mut g = vec![0.0f32; b * c];
+    let mut ce_sum = 0.0f64;
+    let mut correct = 0usize;
+    let inv_b = 1.0 / b as f32;
+    for r in 0..b {
+        let row = &logits[r * c..(r + 1) * c];
+        let label = y[r];
+        if label < 0 || label as usize >= c {
+            return Err(anyhow!("label {label} out of range for {c} classes"));
+        }
+        let label = label as usize;
+        let mut mx = f32::NEG_INFINITY;
+        for &v in row {
+            mx = mx.max(v);
+        }
+        let mut se = 0.0f32;
+        for &v in row {
+            se += (v - mx).exp();
+        }
+        let lse = mx + se.ln();
+        ce_sum += (lse - row[label]) as f64;
+        let mut best = 0usize;
+        for j in 1..c {
+            if row[j] > row[best] {
+                best = j;
+            }
+        }
+        if best == label {
+            correct += 1;
+        }
+        let grow = &mut g[r * c..(r + 1) * c];
+        for (j, &v) in row.iter().enumerate() {
+            let p = (v - lse).exp();
+            grow[j] = (p - if j == label { 1.0 } else { 0.0 }) * inv_b;
+        }
+    }
+    Ok(((ce_sum / b as f64) as f32, correct as f32 / b as f32, g))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::FixedPointFormat;
+
+    fn pool() -> QuantPool {
+        QuantPool::new(3)
+    }
+
+    #[test]
+    fn matmul_matches_hand_result() {
+        // A = [[1,2],[3,4]], B = [[5,6],[7,8]] -> [[19,22],[43,50]]
+        let p = pool();
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [5.0f32, 6.0, 7.0, 8.0];
+        assert_eq!(matmul(&p, &a, &b, 2, 2, 2), vec![19.0, 22.0, 43.0, 50.0]);
+        // transposed variants agree with explicit transposition
+        let at_b = matmul_at_b(&p, &a, &b, 2, 2, 2); // Aᵀ@B
+        assert_eq!(at_b, vec![26.0, 30.0, 38.0, 44.0]);
+        let a_bt = matmul_a_bt(&p, &a, &b, 2, 2, 2); // A@Bᵀ
+        assert_eq!(a_bt, vec![17.0, 23.0, 39.0, 53.0]);
+    }
+
+    #[test]
+    fn matmul_deterministic_across_pool_sizes() {
+        let mut r = crate::util::rng::Rng::seed_from(11);
+        let m = 13;
+        let k = 37;
+        let n = 17;
+        let a: Vec<f32> = (0..m * k).map(|_| r.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| r.normal() as f32).collect();
+        let g: Vec<f32> = (0..m * n).map(|_| r.normal() as f32).collect();
+        let p1 = QuantPool::new(1);
+        let mm_ref = matmul(&p1, &a, &b, m, k, n);
+        let at_ref = matmul_at_b(&p1, &a, &g, m, k, n);
+        let bt_ref = matmul_a_bt(&p1, &g, &b, m, n, k);
+        for threads in [2usize, 3, 8] {
+            let p = QuantPool::new(threads);
+            assert_eq!(matmul(&p, &a, &b, m, k, n), mm_ref, "threads={threads}");
+            assert_eq!(matmul_at_b(&p, &a, &g, m, k, n), at_ref, "threads={threads}");
+            assert_eq!(matmul_a_bt(&p, &g, &b, m, n, k), bt_ref, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn softmax_ce_grad_basics() {
+        // uniform logits: CE = ln(c), grad rows sum to ~0
+        let b = 4;
+        let c = 5;
+        let logits = vec![0.0f32; b * c];
+        let y = vec![0i32, 1, 2, 3];
+        let (ce, acc, g) = softmax_ce_grad(&logits, &y, b, c).unwrap();
+        assert!((ce - (c as f32).ln()).abs() < 1e-6, "{ce}");
+        assert!(acc <= 1.0);
+        for r in 0..b {
+            let s: f32 = g[r * c..(r + 1) * c].iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+        // confident correct prediction: tiny CE, acc 1
+        let logits = vec![10.0f32, 0.0, 0.0, 0.0, 0.0];
+        let (ce, acc, _) = softmax_ce_grad(&logits, &[0], 1, c).unwrap();
+        assert!(ce < 1e-3);
+        assert_eq!(acc, 1.0);
+        // out-of-range label is an error, not UB
+        assert!(softmax_ce_grad(&logits, &[7], 1, c).is_err());
+    }
+
+    #[test]
+    fn fake_quant_disabled_passes_through() {
+        let row = QRow {
+            scale: 16.0,
+            qmin: -128.0,
+            qmax: 127.0,
+            enable: false,
+            wl: 8.0,
+        };
+        let xs = [0.013f32, -5.0, 0.0, 2.7];
+        let mut q = [0.0f32; 4];
+        let mut m = [0.0f32; 4];
+        let zeros = fake_quant_ste(&xs, &row, &mut q, &mut m);
+        assert_eq!(q, xs);
+        assert_eq!(m, [1.0; 4]);
+        assert_eq!(zeros, 1, "raw zeros still counted when disabled");
+    }
+
+    #[test]
+    fn fake_quant_matches_format_kernel() {
+        let fmt = FixedPointFormat::new(8, 4);
+        let qp = fmt.qparams_row(1.0);
+        let row = QRow::parse(&qp, 0).unwrap();
+        let xs = [0.02f32, 0.3, -0.3, 100.0, -100.0];
+        let mut q = [0.0f32; 5];
+        let zeros = fake_quant(&xs, &row, &mut q);
+        for (x, qq) in xs.iter().zip(&q) {
+            assert_eq!(*qq, fmt.quantize_nr(*x));
+        }
+        assert_eq!(zeros, 1);
+    }
+
+    #[test]
+    fn elementwise_helpers() {
+        let mut z = vec![1.0f32, -2.0, 3.0, -4.0];
+        relu_inplace(&mut z);
+        assert_eq!(z, vec![1.0, 0.0, 3.0, 0.0]);
+        let mut g = vec![1.0f32; 4];
+        relu_backward_inplace(&mut g, &z);
+        assert_eq!(g, vec![1.0, 0.0, 1.0, 0.0]);
+        let mut d = vec![2.0f32, 2.0];
+        mul_inplace(&mut d, &[0.0, 1.0]);
+        assert_eq!(d, vec![0.0, 2.0]);
+        assert_eq!(col_sums(&[1.0, 2.0, 3.0, 4.0], 2, 2), vec![4.0, 6.0]);
+        assert_eq!(l2_norm(&[3.0, 4.0]), 5.0);
+        let (s1, s2) = abs_and_sq_sums(&[-1.0, 2.0]);
+        assert_eq!((s1, s2), (3.0, 5.0));
+        assert_eq!(sign(-3.0), -1.0);
+        assert_eq!(sign(0.0), 0.0);
+        assert_eq!(sign(f32::NAN), 0.0);
+        let mut zb = vec![0.0f32; 4];
+        add_bias_inplace(&mut zb, &[1.0, 2.0], 2, 2);
+        assert_eq!(zb, vec![1.0, 2.0, 1.0, 2.0]);
+    }
+}

@@ -1,0 +1,486 @@
+//! The native train/infer interpreters: a faithful CPU re-implementation of
+//! the compiled L2 MLP step (`python/compile/train_step.py` +
+//! `models/mlp.py`), driven directly by the manifest.
+//!
+//! Per step (alg. 1 ln. 5-11):
+//!
+//! 1. fake-quant every kernel under its qparams row (clipped STE);
+//! 2. forward: `h = Q_a(relu(h·W_q + b))` per layer (no ReLU after the
+//!    last layer; activations — logits included — are quantized);
+//! 3. loss = CE + α‖W‖₁ + β/2‖W‖₂² + P (P is the stop-gradient WL/32·sp
+//!    penalty of sec. 3.4);
+//! 4. backward through the STE masks and ReLU;
+//! 5. ASGD update: kernels optionally gradient-normalized (sec. 3.3),
+//!    gsum accumulates the RAW gradients (eq. 3 uses ∇f, not the
+//!    normalized update);
+//! 6. metric tail: loss, ce, acc, grad_norm[L], gsum_norm[L], sparsity[L],
+//!    act_absmax[L] — exactly the manifest's train-output contract.
+//!
+//! One deliberate substitution: training quantization uses deterministic
+//! nearest rounding (round-half-even) instead of the stochastic rounding of
+//! the L1 Pallas kernels — the interpreter has no device PRNG to mirror, NR
+//! keeps runs bit-reproducible, and the STE gradient is identical either
+//! way. Inference matches the device semantics exactly (it is NR there
+//! too).
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::super::engine::{xla, ExecModule};
+use super::super::manifest::{IoSpec, Manifest};
+use super::ops;
+use crate::quant::QuantPool;
+
+/// An MLP manifest lowered to the interpreter's layer view, plus the shared
+/// worker pool the matmuls fan out on.
+pub struct NativeModel {
+    pub(crate) man: Manifest,
+    /// (fan_in, fan_out) per dense layer, input to output.
+    pub(crate) dims: Vec<(usize, usize)>,
+    pub(crate) pool: Arc<QuantPool>,
+}
+
+impl NativeModel {
+    /// Validate that `man` describes a model the interpreter supports — an
+    /// all-dense, BN-free MLP with the canonical (kernel, bias) parameter
+    /// interleaving — and lower it.
+    pub fn from_manifest(man: Manifest, pool: Arc<QuantPool>) -> Result<NativeModel> {
+        let l = man.num_layers;
+        if l == 0 {
+            return Err(anyhow!("manifest {} has no quantizable layers", man.name));
+        }
+        if !man.bn_state.is_empty() {
+            return Err(anyhow!(
+                "native backend supports only BN-free MLPs ({} bn tensors in {})",
+                man.bn_state.len(),
+                man.name
+            ));
+        }
+        if man.params.len() != 2 * l {
+            return Err(anyhow!(
+                "native backend expects (kernel, bias) per layer: {} params for {l} layers",
+                man.params.len()
+            ));
+        }
+        let mut dims = Vec::with_capacity(l);
+        let mut d_in = man.input_shape.iter().product::<usize>();
+        for i in 0..l {
+            let kind = &man.layers[i].kind;
+            if kind != "dense" {
+                return Err(anyhow!(
+                    "native backend supports only dense layers; layer {i} of {} is {kind:?}",
+                    man.name
+                ));
+            }
+            let kernel = &man.params[2 * i];
+            let bias = &man.params[2 * i + 1];
+            if !kernel.quantizable || kernel.layer != i as i64 || kernel.shape.len() != 2 {
+                return Err(anyhow!("param {} is not the layer-{i} dense kernel", kernel.name));
+            }
+            let (fan_in, fan_out) = (kernel.shape[0], kernel.shape[1]);
+            if fan_in != d_in {
+                return Err(anyhow!("layer {i} fan_in {fan_in} != upstream width {d_in}"));
+            }
+            if bias.quantizable || bias.shape != vec![fan_out] {
+                return Err(anyhow!("param {} is not the layer-{i} bias", bias.name));
+            }
+            dims.push((fan_in, fan_out));
+            d_in = fan_out;
+        }
+        if d_in != man.classes {
+            return Err(anyhow!("final layer width {d_in} != {} classes", man.classes));
+        }
+        Ok(NativeModel { man, dims, pool })
+    }
+
+    /// Quantized forward pass shared by train and infer.
+    ///
+    /// Returns `(activations, pre_quant, act_masks, act_absmax)`:
+    /// `activations[0]` is the input and `activations[i+1]` the quantized
+    /// output of layer i; the per-layer STE state (`pre_quant`, `act_masks`)
+    /// is only recorded when `for_training` is set (infer skips those
+    /// allocations).
+    #[allow(clippy::type_complexity)]
+    fn forward(
+        &self,
+        wq: &[Vec<f32>],
+        biases: &[&[f32]],
+        x: Vec<f32>,
+        qparams: &[f32],
+        for_training: bool,
+    ) -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<f32>)> {
+        let l = self.dims.len();
+        let b = x.len() / self.dims[0].0;
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(l + 1);
+        let mut pre_q: Vec<Vec<f32>> = Vec::with_capacity(if for_training { l } else { 0 });
+        let mut mask_a: Vec<Vec<f32>> = Vec::with_capacity(if for_training { l } else { 0 });
+        let mut act_absmax = Vec::with_capacity(l);
+        acts.push(x);
+        for i in 0..l {
+            let (di, do_) = self.dims[i];
+            let mut z = ops::matmul(&self.pool, &acts[i], &wq[i], b, di, do_);
+            ops::add_bias_inplace(&mut z, biases[i], b, do_);
+            if i + 1 < l {
+                ops::relu_inplace(&mut z);
+            }
+            act_absmax.push(crate::fixedpoint::max_abs(&z));
+            let row = ops::QRow::parse(qparams, l + i)?;
+            let mut q = vec![0.0f32; z.len()];
+            if for_training {
+                let mut mk = vec![0.0f32; z.len()];
+                ops::fake_quant_ste(&z, &row, &mut q, &mut mk);
+                pre_q.push(z);
+                mask_a.push(mk);
+            } else {
+                ops::fake_quant(&z, &row, &mut q);
+            }
+            acts.push(q);
+        }
+        Ok((acts, pre_q, mask_a, act_absmax))
+    }
+}
+
+fn f32_input(lit: &xla::Literal, what: &str) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("{what}: {e:?}"))
+}
+
+fn check_outputs(outs: &[Vec<f32>], out_specs: &[IoSpec]) -> Result<()> {
+    if outs.len() != out_specs.len() {
+        return Err(anyhow!(
+            "native step produced {} outputs, manifest says {}",
+            outs.len(),
+            out_specs.len()
+        ));
+    }
+    for (o, spec) in outs.iter().zip(out_specs) {
+        if o.len() != spec.elems() {
+            return Err(anyhow!(
+                "output {}: {} elems, expected {}",
+                spec.name,
+                o.len(),
+                spec.elems()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// The native training step behind the [`ExecModule`] contract.
+pub(crate) struct NativeTrainStep(pub(crate) Arc<NativeModel>);
+
+impl ExecModule for NativeTrainStep {
+    fn execute_f32(&self, inputs: &[xla::Literal], out_specs: &[IoSpec]) -> Result<Vec<Vec<f32>>> {
+        let m = &*self.0;
+        let l = m.dims.len();
+        if inputs.len() != 3 * l + 4 {
+            return Err(anyhow!(
+                "native train step: {} inputs, expected {}",
+                inputs.len(),
+                3 * l + 4
+            ));
+        }
+        // unpack in manifest order: params (2L), gsum (L), x, y, qparams, hyper
+        let mut params: Vec<Vec<f32>> = Vec::with_capacity(2 * l);
+        for (i, lit) in inputs[..2 * l].iter().enumerate() {
+            params.push(f32_input(lit, &m.man.params[i].name)?);
+        }
+        let mut gsum: Vec<Vec<f32>> = Vec::with_capacity(l);
+        for lit in &inputs[2 * l..3 * l] {
+            gsum.push(f32_input(lit, "gsum")?);
+        }
+        let x = f32_input(&inputs[3 * l], "x")?;
+        let y = inputs[3 * l + 1]
+            .to_vec::<i32>()
+            .map_err(|e| anyhow!("y: {e:?}"))?;
+        let qparams = f32_input(&inputs[3 * l + 2], "qparams")?;
+        let hyper = f32_input(&inputs[3 * l + 3], "hyper")?;
+        if qparams.len() != 2 * l * 5 {
+            return Err(anyhow!("qparams len {} != {}", qparams.len(), 2 * l * 5));
+        }
+        if hyper.len() != 8 {
+            return Err(anyhow!("hyper len {} != 8", hyper.len()));
+        }
+        let b = y.len();
+        if b == 0 || x.len() != b * m.dims[0].0 {
+            return Err(anyhow!(
+                "batch mismatch: x has {} elems for {} labels × fan_in {}",
+                x.len(),
+                b,
+                m.dims[0].0
+            ));
+        }
+        for (i, p) in params.iter().enumerate() {
+            if p.len() != m.man.params[i].elems() {
+                return Err(anyhow!("param {} size mismatch", m.man.params[i].name));
+            }
+        }
+        for (i, g) in gsum.iter().enumerate() {
+            if g.len() != m.dims[i].0 * m.dims[i].1 {
+                return Err(anyhow!("gsum {i} size mismatch"));
+            }
+        }
+
+        let (lr, l1, l2, pen) = (hyper[0], hyper[1], hyper[2], hyper[3]);
+        let gnorm_on = hyper[5] > 0.5;
+
+        // -- 1. weight fake-quant (STE) -----------------------------------
+        let mut wq: Vec<Vec<f32>> = Vec::with_capacity(l);
+        let mut mask_w: Vec<Vec<f32>> = Vec::with_capacity(l);
+        let mut sparsity = Vec::with_capacity(l);
+        for i in 0..l {
+            let row = ops::QRow::parse(&qparams, i)?;
+            let w = &params[2 * i];
+            let mut q = vec![0.0f32; w.len()];
+            let mut mk = vec![0.0f32; w.len()];
+            let zeros = ops::fake_quant_ste(w, &row, &mut q, &mut mk);
+            sparsity.push(zeros as f32 / w.len().max(1) as f32);
+            wq.push(q);
+            mask_w.push(mk);
+        }
+
+        // -- 2. forward ---------------------------------------------------
+        let biases: Vec<&[f32]> = (0..l).map(|i| params[2 * i + 1].as_slice()).collect();
+        let (acts, pre_q, mask_a, act_absmax) = m.forward(&wq, &biases, x, &qparams, true)?;
+
+        // -- 3. loss ------------------------------------------------------
+        let c = m.man.classes;
+        let (ce, acc, mut g) = ops::softmax_ce_grad(&acts[l], &y, b, c)?;
+        let mut reg = 0.0f32;
+        for i in 0..l {
+            let (s_abs, s_sq) = ops::abs_and_sq_sums(&params[2 * i]);
+            reg += l1 * s_abs as f32 + 0.5 * l2 * s_sq as f32;
+        }
+        let mut penalty = 0.0f32;
+        for (i, sp) in sparsity.iter().enumerate() {
+            let row = ops::QRow::parse(&qparams, i)?;
+            penalty += pen * (row.wl / 32.0) * (1.0 - sp);
+        }
+        let loss = ce + reg + penalty;
+
+        // -- 4./5. backward + ASGD update ---------------------------------
+        let mut grad_norm = vec![0.0f32; l];
+        let mut gsum_norm = vec![0.0f32; l];
+        for i in (0..l).rev() {
+            let (di, do_) = m.dims[i];
+            // through the activation quantizer, then the ReLU (forward was
+            // h = Q_a(relu(z)); the last layer has no ReLU)
+            ops::mul_inplace(&mut g, &mask_a[i]);
+            if i + 1 < l {
+                ops::relu_backward_inplace(&mut g, &pre_q[i]);
+            }
+            let db = ops::col_sums(&g, b, do_);
+            let mut dw = ops::matmul_at_b(&m.pool, &acts[i], &g, b, di, do_);
+            ops::mul_inplace(&mut dw, &mask_w[i]);
+            // L1/L2 regularizer gradients act on the raw master weights
+            for (d, &wv) in dw.iter_mut().zip(&params[2 * i]) {
+                *d += l1 * ops::sign(wv) + l2 * wv;
+            }
+            // propagate to the previous layer's output before updating
+            if i > 0 {
+                g = ops::matmul_a_bt(&m.pool, &g, &wq[i], b, do_, di);
+            }
+            // gradient-diversity state uses the RAW gradient (eq. 3)
+            let gn = ops::l2_norm(&dw);
+            grad_norm[i] = gn;
+            for (s, &d) in gsum[i].iter_mut().zip(&dw) {
+                *s += d;
+            }
+            gsum_norm[i] = ops::l2_norm(&gsum[i]);
+            // ASGD update: kernels optionally normalized, biases plain
+            let denom = gn + ops::UPDATE_EPS;
+            for (wv, &d) in params[2 * i].iter_mut().zip(&dw) {
+                *wv -= lr * if gnorm_on { d / denom } else { d };
+            }
+            for (bv, &d) in params[2 * i + 1].iter_mut().zip(&db) {
+                *bv -= lr * d;
+            }
+        }
+
+        // -- 6. outputs in manifest order ---------------------------------
+        let mut outs: Vec<Vec<f32>> = Vec::with_capacity(3 * l + 7);
+        outs.extend(params);
+        outs.extend(gsum);
+        outs.push(vec![loss]);
+        outs.push(vec![ce]);
+        outs.push(vec![acc]);
+        outs.push(grad_norm);
+        outs.push(gsum_norm);
+        outs.push(sparsity);
+        outs.push(act_absmax);
+        check_outputs(&outs, out_specs)?;
+        Ok(outs)
+    }
+}
+
+/// The native inference pass (deterministic NR quantization, the "deployed
+/// on ASIC" path of sec. 4.2.2) behind the [`ExecModule`] contract.
+pub(crate) struct NativeInfer(pub(crate) Arc<NativeModel>);
+
+impl ExecModule for NativeInfer {
+    fn execute_f32(&self, inputs: &[xla::Literal], out_specs: &[IoSpec]) -> Result<Vec<Vec<f32>>> {
+        let m = &*self.0;
+        let l = m.dims.len();
+        if inputs.len() != 2 * l + 2 {
+            return Err(anyhow!(
+                "native infer: {} inputs, expected {}",
+                inputs.len(),
+                2 * l + 2
+            ));
+        }
+        let mut params: Vec<Vec<f32>> = Vec::with_capacity(2 * l);
+        for (i, lit) in inputs[..2 * l].iter().enumerate() {
+            params.push(f32_input(lit, &m.man.params[i].name)?);
+        }
+        let x = f32_input(&inputs[2 * l], "x")?;
+        let qparams = f32_input(&inputs[2 * l + 1], "qparams")?;
+        if qparams.len() != 2 * l * 5 {
+            return Err(anyhow!("qparams len {} != {}", qparams.len(), 2 * l * 5));
+        }
+        // fail fast with the real cause: the manifest's infer contract is
+        // fixed-batch (check_outputs would otherwise reject the logits with
+        // a misleading output-shape error after a full forward pass)
+        if x.len() != m.man.batch * m.dims[0].0 {
+            return Err(anyhow!(
+                "x has {} elems; the {} manifest infers batches of {} × fan_in {}",
+                x.len(),
+                m.man.name,
+                m.man.batch,
+                m.dims[0].0
+            ));
+        }
+        let mut wq: Vec<Vec<f32>> = Vec::with_capacity(l);
+        for i in 0..l {
+            let row = ops::QRow::parse(&qparams, i)?;
+            let w = &params[2 * i];
+            let mut q = vec![0.0f32; w.len()];
+            ops::fake_quant(w, &row, &mut q);
+            wq.push(q);
+        }
+        let biases: Vec<&[f32]> = (0..l).map(|i| params[2 * i + 1].as_slice()).collect();
+        let (mut acts, _, _, _) = m.forward(&wq, &biases, x, &qparams, false)?;
+        let outs = vec![acts.pop().expect("forward always yields logits")];
+        check_outputs(&outs, out_specs)?;
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::FixedPointFormat;
+    use crate::runtime::engine::{pack_infer_inputs, pack_train_inputs};
+    use crate::runtime::manifest::Manifest;
+
+    fn tiny_model() -> (Arc<NativeModel>, Manifest) {
+        let man = Manifest::synthetic_mlp("tiny", [2, 2, 1], 3, &[5], 4);
+        let model = Arc::new(
+            NativeModel::from_manifest(man.clone(), Arc::new(QuantPool::new(2))).unwrap(),
+        );
+        (model, man)
+    }
+
+    fn qp_uniform(l: usize, fmt: FixedPointFormat, enable: f32) -> Vec<f32> {
+        (0..2 * l).flat_map(|_| fmt.qparams_row(enable)).collect()
+    }
+
+    #[test]
+    fn rejects_unsupported_manifests() {
+        let mut man = Manifest::synthetic_mlp("bad", [2, 2, 1], 3, &[5], 4);
+        man.layers[0].kind = "conv".into();
+        assert!(NativeModel::from_manifest(man, Arc::new(QuantPool::new(1))).is_err());
+        let mut man2 = Manifest::synthetic_mlp("bad2", [2, 2, 1], 3, &[5], 4);
+        man2.bn_state.push(crate::runtime::manifest::IoSpec {
+            name: "bn.mean".into(),
+            shape: vec![5],
+            dtype: crate::runtime::manifest::Dtype::F32,
+        });
+        assert!(NativeModel::from_manifest(man2, Arc::new(QuantPool::new(1))).is_err());
+    }
+
+    #[test]
+    fn train_step_shapes_and_learning_signal() {
+        let (model, man) = tiny_model();
+        let l = man.num_layers;
+        let params = crate::init::init_params(&man, crate::init::Initializer::Tnvs, 1.0, 7);
+        let gsum = crate::init::init_gsum(&man);
+        let bn: Vec<Vec<f32>> = Vec::new();
+        let x: Vec<f32> = (0..4 * 4).map(|i| (i as f32 * 0.37).sin()).collect();
+        let y = vec![0i32, 1, 2, 0];
+        let qp = qp_uniform(l, FixedPointFormat::initial(), 1.0);
+        let hyper = [0.1f32, 0.0, 0.0, 0.0, 0.0, 1.0, 0.1, 0.0];
+        let step = NativeTrainStep(Arc::clone(&model));
+
+        let mut p = params.clone();
+        let mut gs = gsum.clone();
+        let mut last_ce = f32::INFINITY;
+        for it in 0..30 {
+            let inputs = pack_train_inputs(&man, &p, &gs, &bn, &x, &y, &qp, &hyper).unwrap();
+            let outs = step.execute_f32(&inputs, &man.train_outputs).unwrap();
+            assert_eq!(outs.len(), man.train_outputs.len());
+            // unpack: params, gsum, loss, ce, acc, 4 metric vectors
+            p = outs[..2 * l].to_vec();
+            gs = outs[2 * l..3 * l].to_vec();
+            let ce = outs[3 * l + 1][0];
+            assert!(ce.is_finite(), "iter {it}");
+            last_ce = ce;
+            // metric tails have one entry per layer
+            assert_eq!(outs[3 * l + 3].len(), l);
+            assert_eq!(outs[3 * l + 6].len(), l);
+        }
+        // the tiny batch is memorized within a few dozen steps
+        assert!(
+            last_ce < (3.0f32).ln() * 0.8,
+            "no learning on the native step: ce {last_ce}"
+        );
+        // gsum accumulated something
+        assert!(gs.iter().any(|g| g.iter().any(|&v| v != 0.0)));
+    }
+
+    #[test]
+    fn infer_matches_train_forward_logits() {
+        // lr = 0: the train step must leave params unchanged, and a
+        // pre-quantized infer must see the same data the train forward saw
+        let (model, man) = tiny_model();
+        let l = man.num_layers;
+        let params = crate::init::init_params(&man, crate::init::Initializer::Tnvs, 1.0, 3);
+        let gsum = crate::init::init_gsum(&man);
+        let bn: Vec<Vec<f32>> = Vec::new();
+        let x: Vec<f32> = (0..16).map(|i| (i as f32 * 0.11).cos()).collect();
+        let y = vec![0i32, 1, 2, 1];
+        let qp = qp_uniform(l, FixedPointFormat::new(12, 8), 1.0);
+        let hyper = [0.0f32, 0.0, 0.0, 0.0, 0.0, 1.0, 0.1, 0.0];
+
+        let step = NativeTrainStep(Arc::clone(&model));
+        let inputs = pack_train_inputs(&man, &params, &gsum, &bn, &x, &y, &qp, &hyper).unwrap();
+        let outs = step.execute_f32(&inputs, &man.train_outputs).unwrap();
+        for i in 0..2 * l {
+            assert_eq!(outs[i], params[i], "lr=0 must not move param {i}");
+        }
+
+        let infer = NativeInfer(model);
+        let iin = pack_infer_inputs(&man, &params, &bn, &x, &qp).unwrap();
+        let logits = infer.execute_f32(&iin, &man.infer_outputs).unwrap();
+        assert_eq!(logits[0].len(), 4 * man.classes);
+        assert!(logits[0].iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn disabled_quantization_is_plain_float32() {
+        let (model, man) = tiny_model();
+        let l = man.num_layers;
+        let params = crate::init::init_params(&man, crate::init::Initializer::Tnvs, 1.0, 5);
+        let gsum = crate::init::init_gsum(&man);
+        let bn: Vec<Vec<f32>> = Vec::new();
+        let x: Vec<f32> = (0..16).map(|i| 0.05 * i as f32 - 0.4).collect();
+        let y = vec![2i32, 0, 1, 2];
+        let qp = qp_uniform(l, FixedPointFormat::initial(), 0.0);
+        let hyper = [0.05f32, 0.0, 0.0, 0.0, 0.0, 1.0, 0.1, 0.0];
+        let step = NativeTrainStep(model);
+        let inputs = pack_train_inputs(&man, &params, &gsum, &bn, &x, &y, &qp, &hyper).unwrap();
+        let outs = step.execute_f32(&inputs, &man.train_outputs).unwrap();
+        // sparsity reflects raw float zeros — TNVS weights have none
+        let sparsity = &outs[3 * l + 5];
+        assert!(sparsity.iter().all(|&s| s == 0.0), "{sparsity:?}");
+    }
+}

@@ -2,7 +2,7 @@
 
 use anyhow::Result;
 
-use super::engine::{execute_f32, pack_infer_inputs, pack_train_inputs, LoadedModel};
+use super::engine::{pack_infer_inputs, pack_train_inputs, ExecModule, LoadedModel};
 
 /// Host-resident training state: the float32 master copy (alg. 1 ln. 3),
 /// gradient-diversity accumulators and BN statistics. Owned by the Rust
@@ -91,7 +91,7 @@ impl LoadedModel {
         let man = &self.manifest;
         let hy = hyper.to_vec(state.step);
         let inputs = pack_train_inputs(man, &state.params, &state.gsum, &state.bn, x, y, qparams, &hy)?;
-        let mut outs = execute_f32(&self.train, &inputs, &man.train_outputs)?;
+        let mut outs = self.train.execute_f32(&inputs, &man.train_outputs)?;
 
         let l = man.num_layers;
         let p = man.params.len();
@@ -133,7 +133,7 @@ impl LoadedModel {
     ) -> Result<Vec<f32>> {
         let man = &self.manifest;
         let inputs = pack_infer_inputs(man, params, bn, x, qparams)?;
-        let outs = execute_f32(&self.infer, &inputs, &man.infer_outputs)?;
+        let outs = self.infer.execute_f32(&inputs, &man.infer_outputs)?;
         Ok(outs.into_iter().next().unwrap())
     }
 

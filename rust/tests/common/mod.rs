@@ -1,0 +1,30 @@
+//! Shared fixtures for the integration-test binaries.
+//!
+//! The synthetic MLP config below is THE golden config:
+//! `rust/tests/golden/mlp_native_ce.json` (its "config" string) and
+//! `python/tools/native_golden.py` (`DIMS`, batch, seed) restate it for the
+//! cross-language golden check — change it in all three places or not at
+//! all.
+#![allow(dead_code)] // each test binary compiles this module independently
+
+use adapt::fixedpoint::FixedPointFormat;
+use adapt::runtime::{Engine, LoadedModel, Manifest};
+
+/// The fast native MLP every e2e/golden test trains: 8x8x1 inputs,
+/// 64-32-16-10 dense chain, batch 16.
+pub fn native_mlp_manifest() -> Manifest {
+    Manifest::synthetic_mlp("mlp-native", [8, 8, 1], 10, &[32, 16], 16)
+}
+
+/// The manifest above compiled on the native backend.
+pub fn native_mlp_model() -> LoadedModel {
+    Engine::native()
+        .compile_manifest(native_mlp_manifest())
+        .expect("native backend compiles the synthetic MLP")
+}
+
+/// Uniform qparams tensor: every weight/activation row at `fmt`.
+pub fn qparams_uniform(l: usize, fmt: FixedPointFormat, enable: f32) -> Vec<f32> {
+    let row = fmt.qparams_row(enable);
+    (0..2 * l).flat_map(|_| row).collect()
+}

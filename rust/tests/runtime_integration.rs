@@ -1,18 +1,18 @@
-//! Integration: the real PJRT runtime driving real AOT artifacts.
+//! Integration: execution backends driving the typed train/infer wrappers.
 //!
-//! Requires `make artifacts` (skipped with a message otherwise).
+//! The native-backend tests (bottom half) always run — they need no
+//! artifacts. The PJRT tests require `make artifacts` plus a real xla
+//! binding (skipped with a message otherwise).
 
 use std::sync::Arc;
 
 use adapt::data::{Batcher, Dataset, SyntheticVision};
 use adapt::fixedpoint::FixedPointFormat;
 use adapt::init;
-use adapt::runtime::{artifacts_dir, Engine, Hyper, TrainState};
+use adapt::runtime::{artifacts_dir, Engine, Hyper, LoadedModel, Manifest, TrainState};
 
-fn qparams_uniform(l: usize, fmt: FixedPointFormat, enable: f32) -> Vec<f32> {
-    let row = fmt.qparams_row(enable);
-    (0..2 * l).flat_map(|_| row).collect()
-}
+mod common;
+use common::qparams_uniform;
 
 /// Artifacts present AND a PJRT client available (the crate may be built
 /// against the xla stub, where client creation fails) — else skip.
@@ -147,6 +147,146 @@ fn float32_baseline_path_via_enable_flag() {
         .train_step(&mut state, &b.x, &b.y, &qp, &Hyper::default())
         .unwrap();
     assert!(m.sparsity.iter().all(|&s| s < 0.01), "{:?}", m.sparsity);
+}
+
+// ---------------------------------------------------------------------------
+// native backend (always runs: no artifacts, no PJRT)
+// ---------------------------------------------------------------------------
+
+fn native_model() -> LoadedModel {
+    common::native_mlp_model()
+}
+
+fn fresh_state(man: &Manifest, seed: u64) -> TrainState {
+    TrainState {
+        params: init::init_params(man, init::Initializer::Tnvs, 1.0, seed),
+        gsum: init::init_gsum(man),
+        bn: init::init_bn(man),
+        step: 0,
+    }
+}
+
+#[test]
+fn mlp_trains_and_infers_through_native_backend() {
+    let model = native_model();
+    let man = &model.manifest;
+    assert_eq!(man.num_layers, 3);
+
+    let data = Arc::new(SyntheticVision::new(8, 8, 1, 10, 256, 0, 0.25));
+    let mut batcher = Batcher::new(data.clone(), man.batch, 7);
+    let mut state = fresh_state(man, 1);
+    let qp = qparams_uniform(man.num_layers, FixedPointFormat::initial(), 1.0);
+    let hyper = Hyper {
+        lr: 0.08,
+        l1: 0.0,
+        l2: 0.0,
+        ..Default::default()
+    };
+
+    let mut ces = Vec::new();
+    for _ in 0..60 {
+        let b = batcher.next_batch();
+        let m = model
+            .train_step(&mut state, &b.x, &b.y, &qp, &hyper)
+            .expect("train step");
+        assert!(m.loss.is_finite(), "loss diverged");
+        assert_eq!(m.grad_norm.len(), man.num_layers);
+        assert_eq!(m.gsum_norm.len(), man.num_layers);
+        assert_eq!(m.sparsity.len(), man.num_layers);
+        assert_eq!(m.act_absmax.len(), man.num_layers);
+        ces.push(m.ce);
+    }
+    let first: f32 = ces[..5].iter().sum::<f32>() / 5.0;
+    let last: f32 = ces[ces.len() - 5..].iter().sum::<f32>() / 5.0;
+    assert!(
+        last < 0.85 * first,
+        "no learning through the native backend: {first} -> {last}"
+    );
+
+    // quantized inference path
+    let eval = Batcher::eval_batch(data.as_ref(), man.batch, 0);
+    let acc = model
+        .infer_accuracy(&state.params, &state.bn, &eval.x, &eval.y, &qp)
+        .expect("infer");
+    assert!(acc > 0.2, "quantized inference acc {acc}");
+}
+
+#[test]
+fn native_gsum_accumulates_and_resets() {
+    let model = native_model();
+    let man = &model.manifest;
+    let data = SyntheticVision::new(8, 8, 1, 10, 64, 0, 0.25);
+    let b = Batcher::eval_batch(&data, man.batch, 0);
+    let mut state = fresh_state(man, 2);
+    let qp = qparams_uniform(man.num_layers, FixedPointFormat::initial(), 1.0);
+    let hyper = Hyper {
+        lr: 0.0,
+        l1: 0.0,
+        l2: 0.0,
+        ..Default::default()
+    };
+    // lr = 0: two identical steps accumulate the same gradient twice
+    let m1 = model.train_step(&mut state, &b.x, &b.y, &qp, &hyper).unwrap();
+    let m2 = model.train_step(&mut state, &b.x, &b.y, &qp, &hyper).unwrap();
+    for (l, (&g1, &g2)) in m1.gsum_norm.iter().zip(&m2.gsum_norm).enumerate() {
+        assert!(
+            (g2 - 2.0 * g1).abs() < 1e-2 * g1.max(1.0),
+            "layer {l}: {g1} then {g2}"
+        );
+        assert_eq!(m1.grad_norm[l], m2.grad_norm[l], "identical steps");
+    }
+    state.zero_gsum();
+    assert!(state.gsum.iter().all(|g| g.iter().all(|&v| v == 0.0)));
+}
+
+#[test]
+fn native_float32_path_via_enable_flag() {
+    let model = native_model();
+    let man = &model.manifest;
+    let data = SyntheticVision::new(8, 8, 1, 10, 64, 0, 0.25);
+    let b = Batcher::eval_batch(&data, man.batch, 0);
+    let mut state = fresh_state(man, 3);
+    // enable=0 -> sparsity reflects raw float zeros (essentially none)
+    let qp = qparams_uniform(man.num_layers, FixedPointFormat::initial(), 0.0);
+    let m = model
+        .train_step(&mut state, &b.x, &b.y, &qp, &Hyper::default())
+        .unwrap();
+    assert!(m.sparsity.iter().all(|&s| s < 0.01), "{:?}", m.sparsity);
+}
+
+#[test]
+fn native_host_quantizer_parity() {
+    // Pre-quantizing the weights on the host with quantization DISABLED
+    // must give bit-identical logits to raw weights with weight-row
+    // quantization ENABLED — the native twin of the PJRT parity test.
+    let model = native_model();
+    let man = &model.manifest;
+    let data = SyntheticVision::new(8, 8, 1, 10, 64, 0, 0.25);
+    let b = Batcher::eval_batch(&data, man.batch, 0);
+    let params = init::init_params(man, init::Initializer::Tnvs, 1.0, 4);
+    let bn = init::init_bn(man);
+    let fmt = FixedPointFormat::new(8, 6);
+
+    let l = man.num_layers;
+    // enabled for weight rows, disabled for activation rows
+    let mut qp_on = Vec::new();
+    for i in 0..2 * l {
+        qp_on.extend(fmt.qparams_row(if i < l { 1.0 } else { 0.0 }));
+    }
+    let logits_native = model.infer(&params, &bn, &b.x, &qp_on).unwrap();
+
+    let mut pre_q = params.clone();
+    for (pi, p) in man.params.iter().enumerate() {
+        if p.quantizable {
+            pre_q[pi] = adapt::fixedpoint::quantize_nr_slice(&params[pi], fmt);
+        }
+    }
+    let qp_off = qparams_uniform(l, fmt, 0.0);
+    let logits_host = model.infer(&pre_q, &bn, &b.x, &qp_off).unwrap();
+    assert_eq!(
+        logits_native, logits_host,
+        "host pre-quantization must match the interpreter's quantizer"
+    );
 }
 
 #[test]
