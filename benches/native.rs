@@ -1,0 +1,259 @@
+//! Native-kernel benchmarks (hand-rolled harness: the offline registry has
+//! no criterion). Median-of-5 wall times for the blocked+packed GEMM suite
+//! vs the naive reference kernels, the sparse-vs-dense inference kernels
+//! across sparsity levels, and the scratch-arena alloc-churn ablation.
+//!
+//!     cargo bench --bench native
+//!
+//! Writes machine-readable medians + derived speedups to
+//! `BENCH_native.json`, including the `calibration_*` rates
+//! `perfmodel::KernelCalibration` consumes and the measured
+//! `sparse_crossover_density` that informs the `ADAPT_SPARSE_CROSSOVER`
+//! default (`runtime::native::SPARSE_CROSSOVER_DEFAULT`).
+
+use std::time::Instant;
+
+use adapt::bench_support::{write_bench_json, BenchEntry};
+use adapt::fixedpoint::{FixedPointFormat, SparseFixedTensor};
+use adapt::quant::QuantPool;
+use adapt::runtime::native::gemm::{self, PackBuf};
+use adapt::runtime::native::{ops, QRow};
+use adapt::util::rng::Rng;
+
+/// Run `f` `iters` times per sample, 5 samples, report the median in ms.
+fn bench<F: FnMut()>(name: &str, iters: u32, mut f: F) -> f64 {
+    f(); // warmup
+    let mut samples: Vec<f64> = (0..5)
+        .map(|_| {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            t0.elapsed().as_secs_f64() * 1e3 / iters as f64
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = samples[2];
+    println!("{name:<56} {med:>10.4} ms/iter");
+    med
+}
+
+fn gaussian(n: usize, sigma: f32, seed: u64) -> Vec<f32> {
+    let mut r = Rng::seed_from(seed);
+    (0..n).map(|_| r.normal() as f32 * sigma).collect()
+}
+
+/// An on-grid weight matrix with (approximately) the given non-zero
+/// fraction at `fmt` — the shape of a PushDown-sparsified kernel.
+fn sparse_weights(n: usize, density: f64, fmt: FixedPointFormat, seed: u64) -> Vec<f32> {
+    let mut r = Rng::seed_from(seed);
+    (0..n)
+        .map(|_| {
+            if r.uniform() < density {
+                // quantize a clearly-nonzero draw so density stays exact
+                let v = fmt.quantize_nr(0.25 + r.uniform() as f32);
+                if v == 0.0 {
+                    fmt.ulp()
+                } else {
+                    v
+                }
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    println!("== adapt native kernel benches (median of 5 samples) ==");
+    let pool = QuantPool::with_default_threads();
+    let mut entries: Vec<BenchEntry> = Vec::new();
+    let mut derived: Vec<(String, f64)> = Vec::new();
+    let tracked = |entries: &mut Vec<BenchEntry>, name: &str, med: f64| {
+        entries.push(BenchEntry {
+            name: name.to_string(),
+            ms_per_iter: med,
+        });
+    };
+
+    // ---- naive vs blocked, all three GEMM variants ----------------------
+    // e2e MLP shapes (the golden-config layers at batch 16) + larger ones
+    // where cache blocking matters.
+    println!("-- GEMM: naive reference vs blocked+packed ----------");
+    let shapes: &[(usize, usize, usize, u32)] = &[
+        (16, 64, 32, 200),  // golden MLP layer 0
+        (16, 32, 16, 400),  // golden MLP layer 1
+        (16, 16, 10, 600),  // golden MLP head
+        (64, 256, 256, 20),
+        (128, 512, 512, 4),
+    ];
+    let mut pack = PackBuf::default();
+    for &(m, k, n, iters) in shapes {
+        let a = gaussian(m * k, 0.5, 1);
+        let b = gaussian(k * n, 0.5, 2);
+        let g = gaussian(m * n, 0.5, 3);
+        let tag = format!("m{m}_k{k}_n{n}");
+
+        let name = format!("matmul naive {tag}");
+        let mn = bench(&name, iters, || {
+            std::hint::black_box(ops::matmul_naive(&pool, &a, &b, m, k, n));
+        });
+        tracked(&mut entries, &name, mn);
+
+        let mut out = vec![0.0f32; m * n];
+        let name = format!("matmul blocked {tag}");
+        let mb = bench(&name, iters, || {
+            gemm::matmul_into(&pool, &a, &b, m, k, n, &mut pack, &mut out);
+            std::hint::black_box(&out);
+        });
+        tracked(&mut entries, &name, mb);
+        derived.push((format!("gemm_blocked_speedup_{tag}"), mn / mb));
+
+        let name = format!("matmul_at_b naive {tag}");
+        let atn = bench(&name, iters, || {
+            std::hint::black_box(ops::matmul_at_b_naive(&pool, &a, &g, m, k, n));
+        });
+        tracked(&mut entries, &name, atn);
+
+        let mut out_at = vec![0.0f32; k * n];
+        let name = format!("matmul_at_b blocked {tag}");
+        let atb = bench(&name, iters, || {
+            gemm::matmul_at_b_into(&pool, &a, &g, m, k, n, &mut pack, &mut out_at);
+            std::hint::black_box(&out_at);
+        });
+        tracked(&mut entries, &name, atb);
+        derived.push((format!("gemm_at_b_blocked_speedup_{tag}"), atn / atb));
+
+        let name = format!("matmul_a_bt naive {tag}");
+        let btn = bench(&name, iters, || {
+            std::hint::black_box(ops::matmul_a_bt_naive(&pool, &g, &b, m, n, k));
+        });
+        tracked(&mut entries, &name, btn);
+
+        let mut out_bt = vec![0.0f32; m * k];
+        let name = format!("matmul_a_bt blocked {tag}");
+        let btb = bench(&name, iters, || {
+            gemm::matmul_a_bt_into(&pool, &g, &b, m, n, k, &mut pack, &mut out_bt);
+            std::hint::black_box(&out_bt);
+        });
+        tracked(&mut entries, &name, btb);
+        derived.push((format!("gemm_a_bt_blocked_speedup_{tag}"), btn / btb));
+    }
+
+    // ---- alloc-churn ablation -------------------------------------------
+    // Same blocked kernel, fresh buffers per call (the pre-arena shape of
+    // the hot path) vs the reused PackBuf + output of the step arena.
+    println!("-- alloc churn: fresh buffers vs scratch arena ------");
+    {
+        let (m, k, n) = (16usize, 64usize, 32usize);
+        let a = gaussian(m * k, 0.5, 7);
+        let b = gaussian(k * n, 0.5, 8);
+        let name = "matmul blocked fresh-buffers m16_k64_n32";
+        let fresh = bench(name, 400, || {
+            std::hint::black_box(ops::matmul(&pool, &a, &b, m, k, n));
+        });
+        tracked(&mut entries, name, fresh);
+        let mut out = vec![0.0f32; m * n];
+        let name = "matmul blocked arena m16_k64_n32";
+        let arena = bench(name, 400, || {
+            gemm::matmul_into(&pool, &a, &b, m, k, n, &mut pack, &mut out);
+            std::hint::black_box(&out);
+        });
+        tracked(&mut entries, name, arena);
+        derived.push(("arena_alloc_churn_speedup".to_string(), fresh / arena));
+    }
+
+    // ---- dense vs sparse inference across sparsity levels ---------------
+    println!("-- inference layer: dense blocked vs sparse CSR -----");
+    let (b, di, do_) = (32usize, 512usize, 512usize);
+    let fmt = FixedPointFormat::initial();
+    let qrow = QRow::parse(&fmt.qparams_row(1.0), 0).expect("qparams row");
+    let x = gaussian(b * di, 0.5, 11);
+    let bias = gaussian(do_, 0.1, 12);
+    let madds = (b * di * do_) as f64;
+    let mut crossover = 0.0f64;
+    let mut cal_dense_rate = 0.0f64;
+    for pct in [5u32, 10, 20, 30, 50, 70, 100] {
+        let density = pct as f64 / 100.0;
+        let wq = sparse_weights(di * do_, density, fmt, 1000 + pct as u64);
+        let mut z = vec![0.0f32; b * do_];
+        let mut q = vec![0.0f32; b * do_];
+
+        let name = format!("infer layer dense 32x512x512 d{pct:02}");
+        let dn = bench(&name, 10, || {
+            gemm::pack_a_rows(&x, b, di, &mut pack.a);
+            gemm::pack_b_cols(&wq, di, do_, &mut pack.b);
+            let r = gemm::gemm_quant_into(
+                &pool, b, do_, di, &pack.a, &pack.b, &bias, true, &qrow, &mut z, &mut q, None,
+            );
+            std::hint::black_box(r);
+        });
+        tracked(&mut entries, &name, dn);
+        if pct == 100 {
+            // the d100 row of the SAME fused infer kernel/shape is the dense
+            // calibration rate, so KernelCalibration's dense and sparse
+            // rates (and the crossover) are mutually consistent
+            cal_dense_rate = madds / dn;
+        }
+
+        let st = SparseFixedTensor::from_quantized(&wq, di, do_, fmt);
+        let mut vals = Vec::new();
+        st.decode_values_into(&mut vals);
+        let name = format!("infer layer sparse 32x512x512 d{pct:02}");
+        let sp = bench(&name, 10, || {
+            let r = gemm::sparse_forward_quant_into(
+                &pool, &x, b, di, do_, &st.row_ptr, &st.col_idx, &vals, &bias, true, &qrow,
+                &mut z, &mut q,
+            );
+            std::hint::black_box(r);
+        });
+        tracked(&mut entries, &name, sp);
+        derived.push((format!("sparse_vs_dense_speedup_d{pct:02}"), dn / sp));
+        derived.push((format!("calibration_sparse_madds_per_ms_d{pct:02}"), madds / sp));
+        if sp <= dn {
+            crossover = crossover.max(density);
+        }
+    }
+    derived.push(("calibration_dense_madds_per_ms".to_string(), cal_dense_rate));
+    derived.push(("sparse_crossover_density".to_string(), crossover));
+    println!("measured sparse/dense crossover density: {crossover:.2}");
+
+    // ---- end-to-end native step/infer on the golden MLP config ----------
+    println!("-- e2e native step (golden MLP config) --------------");
+    let engine = adapt::runtime::Engine::native();
+    let man = adapt::runtime::Manifest::synthetic_mlp("bench-mlp", [8, 8, 1], 10, &[32, 16], 16);
+    let model = engine.compile_manifest(man).expect("native compile");
+    let man = &model.manifest;
+    let mut state = adapt::runtime::TrainState {
+        params: adapt::init::init_params(man, adapt::init::Initializer::Tnvs, 1.0, 0),
+        gsum: adapt::init::init_gsum(man),
+        bn: adapt::init::init_bn(man),
+        step: 0,
+    };
+    let xb: Vec<f32> = gaussian(man.batch * 64, 0.5, 21);
+    let yb: Vec<i32> = (0..man.batch as i32).map(|i| i % man.classes as i32).collect();
+    let qp: Vec<f32> = (0..2 * man.num_layers)
+        .flat_map(|_| fmt.qparams_row(1.0))
+        .collect();
+    let hyper = adapt::runtime::Hyper::default();
+    let name = "native train_step mlp (batch 16)";
+    let med = bench(name, 50, || {
+        std::hint::black_box(model.train_step(&mut state, &xb, &yb, &qp, &hyper).unwrap());
+    });
+    tracked(&mut entries, name, med);
+    let name = "native infer mlp (batch 16)";
+    let med = bench(name, 50, || {
+        std::hint::black_box(model.infer(&state.params, &state.bn, &xb, &qp).unwrap());
+    });
+    tracked(&mut entries, name, med);
+
+    match write_bench_json(
+        std::path::Path::new("BENCH_native.json"),
+        &entries,
+        &derived,
+    ) {
+        Ok(()) => println!("wrote BENCH_native.json"),
+        Err(e) => eprintln!("could not write BENCH_native.json: {e}"),
+    }
+    println!("== done ==");
+}

@@ -52,6 +52,21 @@ impl SparseFixedTensor {
         Self::build(rows, cols, fmt, |i| q[i])
     }
 
+    /// CSR from a dense matrix whose values are ALREADY on the `fmt` grid
+    /// (e.g. the native backend's fake-quantized kernels): no re-rounding
+    /// happens, so every stored non-zero code decodes bit-exactly to its
+    /// input value (zeros — including a quantized `-0.0` — are simply not
+    /// stored). This is the contract the sparse inference path relies on
+    /// for its parity with the dense kernels.
+    pub fn from_quantized(dense_q: &[f32], rows: usize, cols: usize, fmt: FixedPointFormat) -> Self {
+        assert_eq!(dense_q.len(), rows * cols);
+        debug_assert!(
+            dense_q.iter().all(|&q| fmt.representable(q)),
+            "from_quantized requires on-grid values"
+        );
+        Self::build(rows, cols, fmt, |i| dense_q[i])
+    }
+
     /// CSR construction from an already-on-grid value source.
     fn build<F: FnMut(usize) -> f32>(
         rows: usize,
@@ -90,6 +105,18 @@ impl SparseFixedTensor {
     #[inline]
     pub fn value(&self, i: usize) -> f32 {
         unpack_code(&self.packed, i, self.fmt.wl) as f32 / self.fmt.scale()
+    }
+
+    /// Decode ALL stored codes into a reusable f32 buffer (cleared, then
+    /// filled in storage order — `out[i] == self.value(i)`). Compute kernels
+    /// decode once up front instead of bit-unpacking per multiply; the
+    /// WL-bit packed words remain the deployment/storage representation.
+    pub fn decode_values_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(self.nnz);
+        for i in 0..self.nnz {
+            out.push(self.value(i));
+        }
     }
 
     /// y = A x (dense vector input / output).
@@ -252,6 +279,34 @@ mod tests {
                 assert_eq!(unpack_code(&packed, i, wl), c, "wl={wl} i={i}");
             }
             let _ = fmt;
+        }
+    }
+
+    #[test]
+    fn from_quantized_decodes_bit_exactly() {
+        use crate::fixedpoint::quantize_nr_slice;
+        for (wl, fl) in [(4u8, 2u8), (8, 4), (16, 10), (24, 12), (32, 16)] {
+            let fmt = FixedPointFormat::new(wl, fl);
+            let d = random_sparse(19, 13, 0.4, 11);
+            let q = quantize_nr_slice(&d, fmt);
+            let s = SparseFixedTensor::from_quantized(&q, 19, 13, fmt);
+            // every stored (non-zero) value decodes to the exact input bits;
+            // zeros are dropped from CSR, so a quantized -0.0 round-trips as
+            // +0.0 — indistinguishable to the compute kernels
+            let back = s.to_dense();
+            for (a, b) in q.iter().zip(&back) {
+                assert!(
+                    a.to_bits() == b.to_bits() || (*a == 0.0 && *b == 0.0),
+                    "<{wl},{fl}>: {a} vs {b}"
+                );
+            }
+            // decode_values_into matches value(i) in storage order
+            let mut vals = Vec::new();
+            s.decode_values_into(&mut vals);
+            assert_eq!(vals.len(), s.nnz);
+            for (i, v) in vals.iter().enumerate() {
+                assert_eq!(v.to_bits(), s.value(i).to_bits());
+            }
         }
     }
 

@@ -1,0 +1,275 @@
+//! Measured-kernel calibration for the analytical performance model.
+//!
+//! The paper's speedups (eq. 8/9, tab. 3/4/6) are *modelled*: they assume
+//! hardware whose multiply cost scales with the word length WL and whose
+//! sparse layers skip zero weights for free. The native backend now has
+//! measured kernels — `benches/native.rs` times the dense blocked GEMM and
+//! the sparse inference kernel across sparsity levels and records the rates
+//! in `BENCH_native.json` — so the model's predictions can be sanity-checked
+//! against what the CPU kernels actually deliver.
+//!
+//! The two deliberately differ: a CPU multiplies f32 at one speed whatever
+//! WL says, so the *measured* inference speedup comes from sparsity alone,
+//! while the *modelled* one (`perfmodel::inference_speedup`) also credits
+//! the WL reduction an ASIC would exploit. Comparing the two quantifies how
+//! much of the paper's claimed speedup needs bespoke hardware and how much
+//! the zeros already buy on stock CPUs.
+//!
+//! `BENCH_native.json` carries the rates as `derived` entries (written by
+//! `benches/native.rs`):
+//!
+//! * `calibration_dense_madds_per_ms` — dense rate, measured as the
+//!   density-1.0 row of the same fused infer-layer sweep as the sparse
+//!   rates;
+//! * `calibration_sparse_madds_per_ms_d<DD>` — sparse kernel rate at
+//!   density `DD`% (e.g. `_d30` is a 0.30 non-zero fraction);
+//! * `sparse_crossover_density` — highest measured density where the
+//!   sparse kernel still beats the dense one.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::sp_rows;
+use crate::metrics::RunRecord;
+use crate::runtime::manifest::LayerDesc;
+use crate::util::json::Json;
+
+/// Measured native-kernel throughput, parsed from `BENCH_native.json`.
+#[derive(Debug, Clone)]
+pub struct KernelCalibration {
+    /// Dense rate in MAdds per millisecond — the density-1.0 row of the
+    /// SAME fused infer-layer sweep the sparse rates come from, so the two
+    /// sides (and the crossover derived from them) are mutually consistent.
+    pub dense_madds_per_ms: f64,
+    /// `(density, MAdds/ms)` rows for the sparse inference kernel,
+    /// density-ascending. The MAdd count is the DENSE madds of the layer —
+    /// the rate already folds in the skipped zeros, which is what makes
+    /// sparse rates exceed the dense rate at low density.
+    pub sparse_rates: Vec<(f64, f64)>,
+    /// Highest measured density at which the sparse kernel still beat the
+    /// dense one (the bench's recommendation for `ADAPT_SPARSE_CROSSOVER`).
+    pub crossover_density: f64,
+}
+
+impl KernelCalibration {
+    /// Parse a `BENCH_native.json` produced by `cargo bench --bench native`.
+    pub fn from_bench_json(path: &Path) -> Result<KernelCalibration> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("parsing bench json: {e:?}"))?;
+        let derived = json.req("derived").map_err(|e| anyhow!("{e:?}"))?;
+        let Json::Obj(map) = derived else {
+            return Err(anyhow!("'derived' is not an object"));
+        };
+        let dense = map
+            .get("calibration_dense_madds_per_ms")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("calibration_dense_madds_per_ms missing"))?;
+        let mut sparse_rates = Vec::new();
+        for (k, v) in map {
+            if let Some(suffix) = k.strip_prefix("calibration_sparse_madds_per_ms_d") {
+                let pct: u32 = suffix
+                    .parse()
+                    .with_context(|| format!("bad density suffix in '{k}'"))?;
+                let rate = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("'{k}' is not a number"))?;
+                sparse_rates.push((pct as f64 / 100.0, rate));
+            }
+        }
+        if sparse_rates.is_empty() {
+            return Err(anyhow!("no calibration_sparse_madds_per_ms_d* entries"));
+        }
+        sparse_rates.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite densities"));
+        // a missing key must be an error, not a silent 0.0 — crossover 0
+        // would route every layer dense and make the parsed sparse rates
+        // unreachable (a bench that measured "sparse never wins" records an
+        // explicit 0.0 instead)
+        let crossover_density = map
+            .get("sparse_crossover_density")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("sparse_crossover_density missing"))?;
+        Ok(KernelCalibration {
+            dense_madds_per_ms: dense,
+            sparse_rates,
+            crossover_density,
+        })
+    }
+
+    /// Sparse-kernel rate at `density`, linearly interpolated between the
+    /// measured rows and clamped to the measured range. `None` only when no
+    /// rows exist (the constructor rejects that).
+    pub fn sparse_rate_at(&self, density: f64) -> Option<f64> {
+        let rows = &self.sparse_rates;
+        let (first, last) = (rows.first()?, rows.last()?);
+        if density <= first.0 {
+            return Some(first.1);
+        }
+        if density >= last.0 {
+            return Some(last.1);
+        }
+        for pair in rows.windows(2) {
+            let (d0, r0) = pair[0];
+            let (d1, r1) = pair[1];
+            if density <= d1 {
+                let t = if d1 > d0 { (density - d0) / (d1 - d0) } else { 0.0 };
+                return Some(r0 + t * (r1 - r0));
+            }
+        }
+        Some(last.1)
+    }
+
+    /// Wall-clock inference speedup the MEASURED kernels predict for a
+    /// trained run: each layer runs sparse (at its final measured density)
+    /// when that density is at or below the benched crossover, else dense;
+    /// the float32 baseline runs everything dense. Compare against
+    /// `perfmodel::inference_speedup` to see how much of the modelled
+    /// speedup survives on hardware that cannot exploit reduced WL.
+    pub fn measured_inference_speedup(
+        &self,
+        layers: &[LayerDesc],
+        run: &RunRecord,
+    ) -> Option<f64> {
+        let nz = sp_rows(run).last()?;
+        if nz.len() < layers.len() || self.dense_madds_per_ms <= 0.0 {
+            return None;
+        }
+        let mut t_f32 = 0.0f64;
+        let mut t_q = 0.0f64;
+        for (l, desc) in layers.iter().enumerate() {
+            let madds = desc.madds as f64;
+            t_f32 += madds / self.dense_madds_per_ms;
+            let density = nz[l] as f64;
+            let rate = if density <= self.crossover_density {
+                self.sparse_rate_at(density)?
+            } else {
+                self.dense_madds_per_ms
+            };
+            if rate <= 0.0 {
+                return None;
+            }
+            t_q += madds / rate;
+        }
+        if t_q > 0.0 {
+            Some(t_f32 / t_q)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::StepRow;
+
+    fn write_bench(dir: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_native.json");
+        // the shape benches/native.rs emits via write_bench_json
+        let text = r#"{
+  "derived": {
+    "calibration_dense_madds_per_ms": 1000.0,
+    "calibration_sparse_madds_per_ms_d10": 4000.0,
+    "calibration_sparse_madds_per_ms_d30": 1500.0,
+    "calibration_sparse_madds_per_ms_d50": 900.0,
+    "sparse_crossover_density": 0.3
+  },
+  "results": {},
+  "unit": "ms_per_iter"
+}"#;
+        std::fs::write(&path, text).unwrap();
+        path
+    }
+
+    fn run_with_density(nz: f32) -> RunRecord {
+        RunRecord {
+            name: "t".into(),
+            mode: "adapt".into(),
+            batch: 32,
+            accs: 1,
+            epochs: 1,
+            steps_per_epoch: 1,
+            num_layers: 2,
+            steps: vec![StepRow { loss: 1.0, ce: 1.0, acc: 0.5 }],
+            layer_wl: vec![vec![8; 2]],
+            layer_nz: vec![vec![nz; 2]],
+            ..Default::default()
+        }
+    }
+
+    fn layers() -> Vec<LayerDesc> {
+        vec![
+            LayerDesc {
+                name: "fc1".into(),
+                kind: "dense".into(),
+                madds: 100_000,
+                weight_elems: 100_000,
+                fan_in: 100,
+            },
+            LayerDesc {
+                name: "fc2".into(),
+                kind: "dense".into(),
+                madds: 50_000,
+                weight_elems: 50_000,
+                fan_in: 100,
+            },
+        ]
+    }
+
+    #[test]
+    fn parses_and_interpolates() {
+        let path = write_bench("adapt_test_calibration_a");
+        let cal = KernelCalibration::from_bench_json(&path).unwrap();
+        assert_eq!(cal.dense_madds_per_ms, 1000.0);
+        assert_eq!(cal.sparse_rates.len(), 3);
+        assert_eq!(cal.crossover_density, 0.3);
+        // clamped below/above the measured range
+        assert_eq!(cal.sparse_rate_at(0.0), Some(4000.0));
+        assert_eq!(cal.sparse_rate_at(0.9), Some(900.0));
+        // midpoint of (0.10, 4000) .. (0.30, 1500)
+        let mid = cal.sparse_rate_at(0.20).unwrap();
+        assert!((mid - 2750.0).abs() < 1e-9, "{mid}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn measured_speedup_uses_sparse_only_below_crossover() {
+        let path = write_bench("adapt_test_calibration_b");
+        let cal = KernelCalibration::from_bench_json(&path).unwrap();
+        let l = layers();
+        // dense-territory density: measured speedup is exactly 1 (the CPU
+        // cannot cash in WL reduction)
+        let su_dense = cal
+            .measured_inference_speedup(&l, &run_with_density(0.8))
+            .unwrap();
+        assert!((su_dense - 1.0).abs() < 1e-12, "{su_dense}");
+        // high sparsity: sparse rate 4000 vs dense 1000 -> 4x
+        let su_sparse = cal
+            .measured_inference_speedup(&l, &run_with_density(0.1))
+            .unwrap();
+        assert!((su_sparse - 4.0).abs() < 1e-9, "{su_sparse}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_sections_are_errors() {
+        let dir = std::env::temp_dir().join("adapt_test_calibration_c");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_native.json");
+        std::fs::write(&path, r#"{"derived": {}, "results": {}}"#).unwrap();
+        assert!(KernelCalibration::from_bench_json(&path).is_err());
+        // rates present but no measured crossover: also an error, never a
+        // silent crossover of 0.0
+        std::fs::write(
+            &path,
+            r#"{"derived": {"calibration_dense_madds_per_ms": 1000.0,
+                "calibration_sparse_madds_per_ms_d10": 4000.0}, "results": {}}"#,
+        )
+        .unwrap();
+        assert!(KernelCalibration::from_bench_json(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -7,6 +7,11 @@
 //! mem ignore tensor dimensions, which cancels in the SZ/MEM ratios when
 //! comparing identical architectures) and add dimension-weighted variants.
 //!
+//! Since the native blocked/sparse kernel suite exists, the model can also
+//! be sanity-checked against MEASURED kernel throughput: see
+//! [`calibration::KernelCalibration`], which consumes the rates
+//! `benches/native.rs` writes to `BENCH_native.json`.
+//!
 //! # Where sp comes from
 //!
 //! Every cost formula weights a layer's MAdds by its weight non-zero
@@ -27,13 +32,17 @@
 //! assert!(su > 1.8 && su < 1.82);
 //! ```
 
+pub mod calibration;
+
+pub use calibration::KernelCalibration;
+
 use crate::metrics::RunRecord;
 use crate::runtime::manifest::LayerDesc;
 
 /// Per-step sp rows for the cost formulas: the PushDown-measured weight
 /// non-zero fractions when the run recorded them for every step, else the
 /// device-reported `layer_nz`.
-fn sp_rows(run: &RunRecord) -> &[Vec<f32>] {
+pub(crate) fn sp_rows(run: &RunRecord) -> &[Vec<f32>] {
     if !run.layer_wnz.is_empty() && run.layer_wnz.len() == run.layer_wl.len() {
         &run.layer_wnz
     } else {

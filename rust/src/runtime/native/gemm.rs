@@ -1,0 +1,690 @@
+//! Blocked, packed GEMM kernel suite of the native CPU backend.
+//!
+//! PR 3's kernels (`super::ops::matmul_naive` and friends) are plain triple
+//! loops: correct, deterministic, but they stream the whole B (or a strided
+//! Aᵀ) through cache for every output row and re-load/store each output row
+//! once per depth step. This module is the performance rewrite behind the
+//! same numeric contract:
+//!
+//! * **Packing** — the left operand is repacked into [`MR`]-row strips and
+//!   the right operand into [`NR`]-column strips, both depth-major, so the
+//!   micro-kernel reads two contiguous streams (the transposed variants pack
+//!   the transpose directly, eliminating `matmul_at_b_naive`'s strided inner
+//!   loop). Partial edge strips are zero-padded: the micro-kernel always
+//!   runs full tiles and the write-back simply drops padded lanes.
+//! * **Register-blocked micro-kernel** — an [`MR`]×[`NR`] accumulator tile
+//!   lives in registers across the entire depth loop, so each output element
+//!   costs `MR + NR` loads per `MR·NR` multiply-adds instead of the naive
+//!   path's load/store of the output row at every depth step.
+//! * **Cache blocking** — within a worker's strip range the column strips
+//!   are walked in blocks of [`NC`] columns, keeping one packed B block
+//!   L2-resident while the (much smaller) packed A strip is re-read.
+//! * **Fused epilogues** — bias add, ReLU and the activation fake-quant
+//!   (+ STE mask in training) happen in the write-back / post-pass of the
+//!   same parallel task that produced the rows, instead of as separate
+//!   sequential sweeps over the output tensor.
+//!
+//! # Determinism invariant
+//!
+//! Every output element is produced by **one** accumulator that sums its
+//! full depth (k) extent in ascending order — the exact fold the naive
+//! kernels perform — and the parallel fan-out over the shared
+//! [`QuantPool`] partitions output *rows*, never the depth dimension. Rust
+//! f32 `mul` + `add` never fuse or reassociate, so results are bit-identical
+//! to the naive reference for any worker count and any blocking parameters
+//! (property-tested in `rust/tests/native_kernels.rs`; the e2e golden CE
+//! file `rust/tests/golden/mlp_native_ce.json` is unchanged from PR 3).
+//!
+//! Reductions that ride along (activation zero counts, |z| maxima) are
+//! order-independent (u64 sums, f32 max with NaN-ignoring semantics), so
+//! they too are stable across worker counts.
+//!
+//! ```
+//! use adapt::quant::QuantPool;
+//! use adapt::runtime::native::gemm::{matmul_into, PackBuf};
+//!
+//! let pool = QuantPool::new(2);
+//! let mut pack = PackBuf::default();
+//! // C = A·B with A 2×2, B 2×2
+//! let a = [1.0f32, 2.0, 3.0, 4.0];
+//! let b = [5.0f32, 6.0, 7.0, 8.0];
+//! let mut c = vec![0.0f32; 4];
+//! matmul_into(&pool, &a, &b, 2, 2, 2, &mut pack, &mut c);
+//! assert_eq!(c, vec![19.0, 22.0, 43.0, 50.0]);
+//! ```
+
+use crate::fixedpoint::max_abs;
+use crate::quant::QuantPool;
+
+use super::ops::{fake_quant, fake_quant_ste, QRow};
+
+/// Micro-tile rows (left-operand strip width).
+pub const MR: usize = 4;
+/// Micro-tile columns (right-operand strip width). `MR·NR` f32 accumulators
+/// fit the 16 baseline x86-64 SSE registers with room for the two streams.
+pub const NR: usize = 8;
+/// Columns per cache block: one packed B block of `NC` columns at the e2e
+/// depths stays well inside L2 while a worker re-reads its A strips.
+pub const NC: usize = 256;
+
+/// Reusable packing arena: one buffer per operand side. Callers thread one
+/// `PackBuf` through repeated GEMM calls so steady-state packing performs no
+/// allocation (the buffers only ever grow to the largest layer).
+#[derive(Default)]
+pub struct PackBuf {
+    pub(crate) a: Vec<f32>,
+    pub(crate) b: Vec<f32>,
+}
+
+/// `buf.clear()` + zero-fill to `n` without shrinking capacity. The packers
+/// only write the non-padded entries afterwards, so the unconditional
+/// zero-fill IS the tile padding — two packs of equal total size but
+/// different shapes would otherwise leave stale values in the padded lanes
+/// the micro-kernel multiplies. (The step arena's fully-overwritten buffers
+/// use a skip-if-same-length variant instead; this one must not.)
+fn reuse(buf: &mut Vec<f32>, n: usize) {
+    buf.clear();
+    buf.resize(n, 0.0);
+}
+
+// ---------------------------------------------------------------------------
+// packing
+// ---------------------------------------------------------------------------
+
+/// Pack row-major `a` (m×k) into ⌈m/MR⌉ strips of MR rows, depth-major:
+/// `out[(s·k + kk)·MR + mr] = a[(s·MR + mr)·k + kk]`; rows ≥ m are zero.
+pub fn pack_a_rows(a: &[f32], m: usize, k: usize, out: &mut Vec<f32>) {
+    debug_assert_eq!(a.len(), m * k);
+    let strips = m.div_ceil(MR);
+    reuse(out, strips * k * MR);
+    for s in 0..strips {
+        let base = s * k * MR;
+        for mr in 0..MR.min(m - s * MR) {
+            let row = &a[(s * MR + mr) * k..(s * MR + mr + 1) * k];
+            for (kk, &v) in row.iter().enumerate() {
+                out[base + kk * MR + mr] = v;
+            }
+        }
+    }
+}
+
+/// Pack the TRANSPOSE of row-major `a` (m×k) for products whose output rows
+/// run along a's columns (`C = Aᵀ·B`): strip s covers k-indices
+/// `s·MR..s·MR+MR`, depth-major over m —
+/// `out[(s·m + mm)·MR + mr] = a[mm·k + s·MR + mr]`.
+/// The inner copy is contiguous in `a`, so packing replaces the naive
+/// kernel's k-strided inner loop with one sequential sweep.
+pub fn pack_at_rows(a: &[f32], m: usize, k: usize, out: &mut Vec<f32>) {
+    debug_assert_eq!(a.len(), m * k);
+    let strips = k.div_ceil(MR);
+    reuse(out, strips * m * MR);
+    for s in 0..strips {
+        let base = s * m * MR;
+        let c0 = s * MR;
+        let w = MR.min(k - c0);
+        for mm in 0..m {
+            out[base + mm * MR..base + mm * MR + w]
+                .copy_from_slice(&a[mm * k + c0..mm * k + c0 + w]);
+        }
+    }
+}
+
+/// Pack row-major `b` (k×n) into ⌈n/NR⌉ strips of NR columns, depth-major:
+/// `out[(t·k + kk)·NR + jr] = b[kk·n + t·NR + jr]`; columns ≥ n are zero.
+pub fn pack_b_cols(b: &[f32], k: usize, n: usize, out: &mut Vec<f32>) {
+    debug_assert_eq!(b.len(), k * n);
+    let strips = n.div_ceil(NR);
+    reuse(out, strips * k * NR);
+    for t in 0..strips {
+        let base = t * k * NR;
+        let c0 = t * NR;
+        let w = NR.min(n - c0);
+        for kk in 0..k {
+            out[base + kk * NR..base + kk * NR + w]
+                .copy_from_slice(&b[kk * n + c0..kk * n + c0 + w]);
+        }
+    }
+}
+
+/// Pack the TRANSPOSE of row-major `w` (q×n) as the right operand of
+/// `C = G·Wᵀ`: strip t covers w-ROWS `t·NR..t·NR+NR` (the output columns),
+/// depth-major over n — `out[(t·n + nn)·NR + jr] = w[(t·NR + jr)·n + nn]`.
+pub fn pack_bt_rows(w: &[f32], q: usize, n: usize, out: &mut Vec<f32>) {
+    debug_assert_eq!(w.len(), q * n);
+    let strips = q.div_ceil(NR);
+    reuse(out, strips * n * NR);
+    for t in 0..strips {
+        let base = t * n * NR;
+        for jr in 0..NR.min(q - t * NR) {
+            let row = &w[(t * NR + jr) * n..(t * NR + jr + 1) * n];
+            for (nn, &v) in row.iter().enumerate() {
+                out[base + nn * NR + jr] = v;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// micro-kernel
+// ---------------------------------------------------------------------------
+
+/// Compute one MR×NR register tile over the full depth extent. Each
+/// accumulator sums its products in ascending depth order — the determinism
+/// invariant of the module docs lives exactly here.
+#[inline]
+fn microkernel(kdim: usize, ap: &[f32], bp: &[f32]) -> [[f32; NR]; MR] {
+    debug_assert!(ap.len() >= kdim * MR);
+    debug_assert!(bp.len() >= kdim * NR);
+    let mut acc = [[0.0f32; NR]; MR];
+    for kk in 0..kdim {
+        let a: &[f32; MR] = ap[kk * MR..kk * MR + MR].try_into().expect("packed A lane");
+        let b: &[f32; NR] = bp[kk * NR..kk * NR + NR].try_into().expect("packed B lane");
+        for mr in 0..MR {
+            let av = a[mr];
+            for (c, &bv) in acc[mr].iter_mut().zip(b) {
+                *c += av * bv;
+            }
+        }
+    }
+    acc
+}
+
+// ---------------------------------------------------------------------------
+// drivers
+// ---------------------------------------------------------------------------
+
+/// Raw mutable f32 pointer that may cross the pool's task boundary.
+///
+/// SAFETY: tasks derive disjoint row ranges from it (each strip-block index
+/// is claimed by exactly one runner), and [`QuantPool::run_indexed_plain`]
+/// joins every task before returning, so the pointee outlives all uses and
+/// no two tasks alias.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Contiguous strip-range partition of `strips` across the pool, mirroring
+/// the naive kernels' row-block partition: `(per-block strips, blocks)`.
+fn strip_blocks(pool: &QuantPool, strips: usize) -> (usize, usize) {
+    let runners = pool.parallelism().min(strips).max(1);
+    let per = strips.div_ceil(runners);
+    (per, strips.div_ceil(per))
+}
+
+/// The shared tile loop: compute rows `row0..row1` (strips `s0..s1`) of the
+/// packed product into `out_rows` (a `(row1-row0)×ndim` row-major slice),
+/// applying the bias/ReLU epilogue in the write-back.
+#[allow(clippy::too_many_arguments)]
+fn tile_range(
+    mdim: usize,
+    ndim: usize,
+    kdim: usize,
+    apack: &[f32],
+    bpack: &[f32],
+    bias: Option<&[f32]>,
+    relu: bool,
+    s0: usize,
+    s1: usize,
+    out_rows: &mut [f32],
+) {
+    let row0 = s0 * MR;
+    let col_strips = ndim.div_ceil(NR);
+    let ncs = (NC / NR).max(1);
+    let mut tb0 = 0;
+    while tb0 < col_strips {
+        let tb1 = (tb0 + ncs).min(col_strips);
+        for s in s0..s1 {
+            let ap = &apack[s * kdim * MR..(s + 1) * kdim * MR];
+            let rows = MR.min(mdim - s * MR);
+            for t in tb0..tb1 {
+                let bp = &bpack[t * kdim * NR..(t + 1) * kdim * NR];
+                let acc = microkernel(kdim, ap, bp);
+                let col0 = t * NR;
+                let cols = NR.min(ndim - col0);
+                for (mr, arow) in acc.iter().enumerate().take(rows) {
+                    let r = s * MR + mr - row0;
+                    let dst = &mut out_rows[r * ndim + col0..r * ndim + col0 + cols];
+                    match bias {
+                        Some(bias) => {
+                            let brow = &bias[col0..col0 + cols];
+                            for ((d, &v), &bv) in dst.iter_mut().zip(arow).zip(brow) {
+                                let x = v + bv;
+                                *d = if relu { x.max(0.0) } else { x };
+                            }
+                        }
+                        None => {
+                            for (d, &v) in dst.iter_mut().zip(arow) {
+                                *d = if relu { v.max(0.0) } else { v };
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        tb0 = tb1;
+    }
+}
+
+/// Blocked GEMM over pre-packed operands: `out = unpack(apack)·unpack(bpack)
+/// (+ bias) (then ReLU)`, written in place (`out` is fully overwritten; no
+/// zeroing required). Pool-parallel over MR-row strips.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_packed_into(
+    pool: &QuantPool,
+    mdim: usize,
+    ndim: usize,
+    kdim: usize,
+    apack: &[f32],
+    bpack: &[f32],
+    bias: Option<&[f32]>,
+    relu: bool,
+    out: &mut [f32],
+) {
+    assert_eq!(out.len(), mdim * ndim, "gemm output shape");
+    if mdim == 0 || ndim == 0 {
+        return;
+    }
+    let strips = mdim.div_ceil(MR);
+    let (per, blocks) = strip_blocks(pool, strips);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    pool.run_indexed_plain(blocks, |bi| {
+        let s0 = bi * per;
+        let s1 = ((bi + 1) * per).min(strips);
+        let row0 = s0 * MR;
+        let row1 = (s1 * MR).min(mdim);
+        // SAFETY: see SendPtr — row ranges of distinct blocks are disjoint
+        // and the caller's `out` borrow outlives the joined batch.
+        let out_rows: &mut [f32] = unsafe {
+            std::slice::from_raw_parts_mut(out_ptr.0.add(row0 * ndim), (row1 - row0) * ndim)
+        };
+        tile_range(mdim, ndim, kdim, apack, bpack, bias, relu, s0, s1, out_rows);
+    });
+}
+
+/// Blocked GEMM with the FULL forward-layer epilogue fused into the same
+/// parallel tasks: `z = unpack(apack)·unpack(bpack) + bias (then ReLU)`,
+/// then the activation fake-quant of `z` into `q` under `row` (with the
+/// clipped-STE `mask` when training). Returns `(exact zero count of q,
+/// max |z|)` — both combined order-independently, so the results are
+/// bit-stable across worker counts.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_quant_into(
+    pool: &QuantPool,
+    mdim: usize,
+    ndim: usize,
+    kdim: usize,
+    apack: &[f32],
+    bpack: &[f32],
+    bias: &[f32],
+    relu: bool,
+    row: &QRow,
+    z: &mut [f32],
+    q: &mut [f32],
+    mask: Option<&mut [f32]>,
+) -> (u64, f32) {
+    assert_eq!(z.len(), mdim * ndim, "gemm z shape");
+    assert_eq!(q.len(), mdim * ndim, "gemm q shape");
+    if mdim == 0 || ndim == 0 {
+        return (0, 0.0);
+    }
+    let strips = mdim.div_ceil(MR);
+    let (per, blocks) = strip_blocks(pool, strips);
+    let z_ptr = SendPtr(z.as_mut_ptr());
+    let q_ptr = SendPtr(q.as_mut_ptr());
+    let mask_ptr = mask.map(|m| {
+        assert_eq!(m.len(), mdim * ndim, "gemm mask shape");
+        SendPtr(m.as_mut_ptr())
+    });
+    let parts = pool.run_indexed_plain(blocks, |bi| {
+        let s0 = bi * per;
+        let s1 = ((bi + 1) * per).min(strips);
+        let row0 = s0 * MR;
+        let row1 = (s1 * MR).min(mdim);
+        let len = (row1 - row0) * ndim;
+        // SAFETY: see SendPtr — disjoint row ranges, batch joined before
+        // the caller's borrows end.
+        let z_rows: &mut [f32] =
+            unsafe { std::slice::from_raw_parts_mut(z_ptr.0.add(row0 * ndim), len) };
+        tile_range(mdim, ndim, kdim, apack, bpack, Some(bias), relu, s0, s1, z_rows);
+        let q_rows: &mut [f32] =
+            unsafe { std::slice::from_raw_parts_mut(q_ptr.0.add(row0 * ndim), len) };
+        let zeros = match mask_ptr {
+            Some(mp) => {
+                let mask_rows: &mut [f32] =
+                    unsafe { std::slice::from_raw_parts_mut(mp.0.add(row0 * ndim), len) };
+                fake_quant_ste(z_rows, row, q_rows, mask_rows)
+            }
+            None => fake_quant(z_rows, row, q_rows),
+        };
+        (zeros, max_abs(z_rows))
+    });
+    let mut zeros = 0u64;
+    let mut absmax = 0.0f32;
+    for (zc, mx) in parts {
+        zeros += zc;
+        absmax = absmax.max(mx);
+    }
+    (zeros, absmax)
+}
+
+/// Sparse sibling of [`gemm_quant_into`] for the frozen-weight inference
+/// path: `z = x·W + bias (then ReLU)` with W given in CSR over its fan-in
+/// rows (`row_ptr`/`col_idx`/`vals`, `vals` pre-decoded to f32), followed by
+/// the same fused fake-quant epilogue into `q`. Pool-parallel over batch
+/// rows; returns `(zero count of q, max |z|)`.
+///
+/// Per output element the stored products accumulate in ascending fan-in
+/// order — the dense kernels' fold with the exact-zero weight terms
+/// skipped. For finite inputs that is value-identical: a skipped `x·0` term
+/// can only flip the sign of an exact-zero partial sum, and ±0 are
+/// indistinguishable to the bias add and normalized to +0 by the
+/// quantizer's magic-constant rounding (asserted against the dense path in
+/// `rust/tests/native_kernels.rs`). Non-finite activations would differ
+/// (`∞·0 = NaN` in the dense fold) — the trainer's poisoned-batch guards
+/// keep those out of the serving path.
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_forward_quant_into(
+    pool: &QuantPool,
+    x: &[f32],
+    b: usize,
+    di: usize,
+    do_: usize,
+    row_ptr: &[u32],
+    col_idx: &[u32],
+    vals: &[f32],
+    bias: &[f32],
+    relu: bool,
+    row: &QRow,
+    z: &mut [f32],
+    q: &mut [f32],
+) -> (u64, f32) {
+    assert_eq!(x.len(), b * di, "sparse forward x shape");
+    assert_eq!(row_ptr.len(), di + 1, "sparse forward row_ptr");
+    assert_eq!(col_idx.len(), vals.len(), "sparse forward nnz");
+    assert_eq!(z.len(), b * do_, "sparse forward z shape");
+    assert_eq!(q.len(), b * do_, "sparse forward q shape");
+    assert_eq!(bias.len(), do_, "sparse forward bias");
+    if b == 0 || do_ == 0 {
+        return (0, 0.0);
+    }
+    let runners = pool.parallelism().min(b).max(1);
+    let per = b.div_ceil(runners);
+    let blocks = b.div_ceil(per);
+    let z_ptr = SendPtr(z.as_mut_ptr());
+    let q_ptr = SendPtr(q.as_mut_ptr());
+    let parts = pool.run_indexed_plain(blocks, |bi| {
+        let r0 = bi * per;
+        let r1 = ((bi + 1) * per).min(b);
+        let len = (r1 - r0) * do_;
+        // SAFETY: see SendPtr — disjoint batch-row ranges, batch joined
+        // before the caller's borrows end.
+        let z_rows: &mut [f32] =
+            unsafe { std::slice::from_raw_parts_mut(z_ptr.0.add(r0 * do_), len) };
+        for r in r0..r1 {
+            let zrow = &mut z_rows[(r - r0) * do_..(r - r0 + 1) * do_];
+            zrow.fill(0.0);
+            let xrow = &x[r * di..(r + 1) * di];
+            for (kk, &xv) in xrow.iter().enumerate() {
+                let s = row_ptr[kk] as usize;
+                let e = row_ptr[kk + 1] as usize;
+                for (ci, &wv) in col_idx[s..e].iter().zip(&vals[s..e]) {
+                    zrow[*ci as usize] += xv * wv;
+                }
+            }
+            for (v, &bv) in zrow.iter_mut().zip(bias) {
+                let biased = *v + bv;
+                *v = if relu { biased.max(0.0) } else { biased };
+            }
+        }
+        let q_rows: &mut [f32] =
+            unsafe { std::slice::from_raw_parts_mut(q_ptr.0.add(r0 * do_), len) };
+        (fake_quant(z_rows, row, q_rows), max_abs(z_rows))
+    });
+    let mut zeros = 0u64;
+    let mut absmax = 0.0f32;
+    for (zc, mx) in parts {
+        zeros += zc;
+        absmax = absmax.max(mx);
+    }
+    (zeros, absmax)
+}
+
+// ---------------------------------------------------------------------------
+// the three GEMM variants of the MLP step
+// ---------------------------------------------------------------------------
+
+/// `out = A·B` with A m×k and B k×n, blocked+packed; bit-identical to
+/// [`super::ops::matmul_naive`].
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_into(
+    pool: &QuantPool,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    pack: &mut PackBuf,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    pack_a_rows(a, m, k, &mut pack.a);
+    pack_b_cols(b, k, n, &mut pack.b);
+    gemm_packed_into(pool, m, n, k, &pack.a, &pack.b, None, false, out);
+}
+
+/// `out = Aᵀ·G` with A m×k and G m×n (the k×n weight-gradient product),
+/// blocked with a packed Aᵀ; bit-identical to
+/// [`super::ops::matmul_at_b_naive`].
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_at_b_into(
+    pool: &QuantPool,
+    a: &[f32],
+    g: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    pack: &mut PackBuf,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(g.len(), m * n);
+    pack_at_rows(a, m, k, &mut pack.a);
+    pack_b_cols(g, m, n, &mut pack.b);
+    gemm_packed_into(pool, k, n, m, &pack.a, &pack.b, None, false, out);
+}
+
+/// `out = G·Wᵀ` with G m×n and W q×n (the m×q input-gradient product),
+/// blocked with a packed Wᵀ; bit-identical to
+/// [`super::ops::matmul_a_bt_naive`].
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_a_bt_into(
+    pool: &QuantPool,
+    g: &[f32],
+    w: &[f32],
+    m: usize,
+    n: usize,
+    q: usize,
+    pack: &mut PackBuf,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(g.len(), m * n);
+    debug_assert_eq!(w.len(), q * n);
+    pack_a_rows(g, m, n, &mut pack.a);
+    pack_bt_rows(w, q, n, &mut pack.b);
+    gemm_packed_into(pool, m, q, n, &pack.a, &pack.b, None, false, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ops;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn pool() -> QuantPool {
+        QuantPool::new(3)
+    }
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::seed_from(seed);
+        (0..n).map(|_| r.normal() as f32).collect()
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn packing_round_trips_through_the_microkernel_layout() {
+        // 5×3 A: strip 1 holds row 4 plus three zero rows
+        let a: Vec<f32> = (0..15).map(|i| i as f32).collect();
+        let mut out = Vec::new();
+        pack_a_rows(&a, 5, 3, &mut out);
+        assert_eq!(out.len(), 2 * 3 * MR);
+        assert_eq!(out[0], a[0]); // (s0, k0, mr0)
+        assert_eq!(out[MR], a[1]); // (s0, k1, mr0)
+        assert_eq!(out[1], a[3]); // (s0, k0, mr1) = row 1
+        assert_eq!(out[3 * MR], a[12]); // strip 1, row 4
+        assert_eq!(out[3 * MR + 1], 0.0, "padded row");
+
+        // 3×10 B: strip 1 holds cols 8..10 plus six zero lanes
+        let b: Vec<f32> = (0..30).map(|i| i as f32).collect();
+        pack_b_cols(&b, 3, 10, &mut out);
+        assert_eq!(out.len(), 2 * 3 * NR);
+        assert_eq!(out[0], b[0]);
+        assert_eq!(out[NR], b[10]); // (t0, k1, jr0)
+        assert_eq!(out[3 * NR], b[8]); // strip 1, col 8
+        assert_eq!(out[3 * NR + 2], 0.0, "padded column");
+    }
+
+    #[test]
+    fn blocked_variants_bit_match_naive() {
+        let p = pool();
+        let mut pack = PackBuf::default();
+        for (m, k, n, seed) in [
+            (16usize, 64usize, 32usize, 1u64),
+            (1, 1, 1, 2),
+            (3, 5, 7, 3),
+            (4, 8, 8, 4),
+            (13, 37, 17, 5),
+            (33, 9, 65, 6),
+        ] {
+            let a = randv(m * k, seed);
+            let b = randv(k * n, seed + 100);
+            let g = randv(m * n, seed + 200);
+            let mut out = vec![0.0f32; m * n];
+            matmul_into(&p, &a, &b, m, k, n, &mut pack, &mut out);
+            assert_eq!(bits(&out), bits(&ops::matmul_naive(&p, &a, &b, m, k, n)), "mm {m}x{k}x{n}");
+            let mut out = vec![0.0f32; k * n];
+            matmul_at_b_into(&p, &a, &g, m, k, n, &mut pack, &mut out);
+            assert_eq!(
+                bits(&out),
+                bits(&ops::matmul_at_b_naive(&p, &a, &g, m, k, n)),
+                "atb {m}x{k}x{n}"
+            );
+            let mut out = vec![0.0f32; m * k];
+            matmul_a_bt_into(&p, &g, &b, m, n, k, &mut pack, &mut out);
+            assert_eq!(
+                bits(&out),
+                bits(&ops::matmul_a_bt_naive(&p, &g, &b, m, n, k)),
+                "abt {m}x{k}x{n}"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_epilogue_matches_separate_sweeps() {
+        let p = pool();
+        let mut pack = PackBuf::default();
+        let (m, k, n) = (7usize, 19usize, 11usize);
+        let a = randv(m * k, 9);
+        let b = randv(k * n, 10);
+        let bias = randv(n, 11);
+        // reference: naive matmul + separate bias/relu sweeps
+        let mut want = ops::matmul_naive(&p, &a, &b, m, k, n);
+        ops::add_bias_inplace(&mut want, &bias, m, n);
+        ops::relu_inplace(&mut want);
+        pack_a_rows(&a, m, k, &mut pack.a);
+        pack_b_cols(&b, k, n, &mut pack.b);
+        let mut got = vec![0.0f32; m * n];
+        gemm_packed_into(&p, m, n, k, &pack.a, &pack.b, Some(&bias), true, &mut got);
+        assert_eq!(bits(&got), bits(&want));
+    }
+
+    #[test]
+    fn fused_quant_epilogue_matches_separate_kernels() {
+        use crate::fixedpoint::FixedPointFormat;
+        let p = pool();
+        let mut pack = PackBuf::default();
+        let (m, k, n) = (9usize, 21usize, 13usize);
+        let a = randv(m * k, 21);
+        let b = randv(k * n, 22);
+        let bias = randv(n, 23);
+        let fmt = FixedPointFormat::new(8, 4);
+        let row = ops::QRow::parse(&fmt.qparams_row(1.0), 0).unwrap();
+        // reference: the PR 3 sequence
+        let mut zr = ops::matmul_naive(&p, &a, &b, m, k, n);
+        ops::add_bias_inplace(&mut zr, &bias, m, n);
+        ops::relu_inplace(&mut zr);
+        let absmax_ref = crate::fixedpoint::max_abs(&zr);
+        let mut qr = vec![0.0f32; m * n];
+        let mut mr_ = vec![0.0f32; m * n];
+        let zeros_ref = ops::fake_quant_ste(&zr, &row, &mut qr, &mut mr_);
+        // fused
+        pack_a_rows(&a, m, k, &mut pack.a);
+        pack_b_cols(&b, k, n, &mut pack.b);
+        let (mut z, mut q, mut mask) =
+            (vec![0.0f32; m * n], vec![0.0f32; m * n], vec![0.0f32; m * n]);
+        let (zeros, absmax) = gemm_quant_into(
+            &p, m, n, k, &pack.a, &pack.b, &bias, true, &row, &mut z, &mut q, Some(&mut mask),
+        );
+        assert_eq!(bits(&z), bits(&zr));
+        assert_eq!(bits(&q), bits(&qr));
+        assert_eq!(bits(&mask), bits(&mr_));
+        assert_eq!(zeros, zeros_ref);
+        assert_eq!(absmax.to_bits(), absmax_ref.to_bits());
+    }
+
+    #[test]
+    fn deterministic_across_pool_sizes_with_epilogues() {
+        use crate::fixedpoint::FixedPointFormat;
+        let (m, k, n) = (13usize, 29usize, 10usize);
+        let a = randv(m * k, 31);
+        let b = randv(k * n, 32);
+        let bias = randv(n, 33);
+        let fmt = FixedPointFormat::new(12, 8);
+        let row = ops::QRow::parse(&fmt.qparams_row(1.0), 0).unwrap();
+        let mut reference: Option<(Vec<u32>, Vec<u32>, u64, u32)> = None;
+        for threads in [1usize, 2, 3, 8] {
+            let p = QuantPool::new(threads);
+            let mut pack = PackBuf::default();
+            pack_a_rows(&a, m, k, &mut pack.a);
+            pack_b_cols(&b, k, n, &mut pack.b);
+            let (mut z, mut q) = (vec![0.0f32; m * n], vec![0.0f32; m * n]);
+            let (zeros, absmax) = gemm_quant_into(
+                &p, m, n, k, &pack.a, &pack.b, &bias, true, &row, &mut z, &mut q, None,
+            );
+            let got = (bits(&z), bits(&q), zeros, absmax.to_bits());
+            match &reference {
+                None => reference = Some(got),
+                Some(want) => assert_eq!(&got, want, "threads={threads}"),
+            }
+        }
+    }
+
+    #[test]
+    fn pack_buffers_are_reused_without_reallocation() {
+        let p = pool();
+        let mut pack = PackBuf::default();
+        let (m, k, n) = (8usize, 16usize, 8usize);
+        let a = randv(m * k, 41);
+        let b = randv(k * n, 42);
+        let mut out = vec![0.0f32; m * n];
+        matmul_into(&p, &a, &b, m, k, n, &mut pack, &mut out);
+        let (ca, cb) = (pack.a.capacity(), pack.b.capacity());
+        matmul_into(&p, &a, &b, m, k, n, &mut pack, &mut out);
+        assert_eq!(pack.a.capacity(), ca);
+        assert_eq!(pack.b.capacity(), cb);
+    }
+}

@@ -28,6 +28,19 @@
 //! Runs are bit-reproducible given a seed, and bit-identical across worker
 //! counts: all parallel fan-outs partition output rows, never reductions.
 //!
+//! # Kernels
+//!
+//! The matrix products run on the blocked+packed GEMM suite in [`gemm`]
+//! (MR×NR register tiles over zero-padded packed panels, fused bias/ReLU/
+//! fake-quant epilogues, a reusable per-model scratch arena); the PR 3
+//! triple loops survive in [`ops`] as the `*_naive` bit-parity references.
+//! Both compute the identical ascending-depth per-element fold, so the
+//! rewrite changed no numerics — the committed golden CEs are untouched.
+//! Inference additionally dispatches layers whose measured quantized
+//! density falls at or below [`sparse_crossover()`] onto a CSR kernel that
+//! skips the zeros PushDown produced (see the `step` module docs and the
+//! ARCHITECTURE.md kernel-design section).
+//!
 //! # Scope
 //!
 //! Dense-only, BN-free models (the `mlp-*` artifacts and
@@ -60,11 +73,12 @@
 //! assert!(metrics.loss.is_finite());
 //! ```
 
-mod ops;
+pub mod gemm;
+pub mod ops;
 mod step;
 
 pub use ops::{fake_quant, fake_quant_ste, QRow};
-pub use step::NativeModel;
+pub use step::{sparse_crossover, NativeModel, SPARSE_CROSSOVER_DEFAULT};
 
 use std::path::Path;
 use std::sync::Arc;

@@ -6,6 +6,14 @@
 //! accumulation order — so results are bit-identical for any worker count,
 //! including the degenerate single-threaded pool of the one-core testbed.
 //!
+//! Since the blocked+packed rewrite, the public [`matmul`] /
+//! [`matmul_at_b`] / [`matmul_a_bt`] entry points delegate to the
+//! cache-blocked, register-tiled suite in [`super::gemm`]; the PR 3 triple
+//! loops are kept as the `*_naive` reference kernels — the bit-parity
+//! anchor of the property tests and the "before" side of
+//! `benches/native.rs`. Both sides compute the exact same per-element
+//! ascending-depth fold, so they agree bit-for-bit.
+//!
 //! The quantizers delegate to the fixedpoint kernels
 //! ([`crate::fixedpoint::quantize_nr_ste`]) so the interpreter's fake-quant
 //! is bit-identical to the PushDown engine's `quantize_bin_scalar` math —
@@ -13,6 +21,7 @@
 
 use anyhow::{anyhow, Result};
 
+use super::gemm::{self, PackBuf};
 use crate::fixedpoint::{quantize_nr_count, quantize_nr_ste};
 use crate::quant::QuantPool;
 
@@ -78,9 +87,9 @@ pub fn fake_quant_ste(xs: &[f32], row: &QRow, q: &mut [f32], mask: &mut [f32]) -
 /// out_row)`, and stitch the blocks back in order. `f` must fill `out_row`
 /// from zeros. Bit-deterministic: each row is produced by exactly one call
 /// to `f`, independent of the block partition. The per-block buffer + final
-/// stitch copies each result once more than strictly necessary; writing
-/// blocks in place would need hand-rolled aliasing guarantees across the
-/// type-erased pool tasks, which the MLP-scale buffers here don't justify.
+/// stitch allocate and copy per call — exactly the churn the blocked suite
+/// eliminates with in-place disjoint-row writes (`gemm::SendPtr`); this
+/// shape is kept verbatim as the "before" side of the alloc ablation.
 fn run_row_blocks<F>(pool: &QuantPool, rows: usize, width: usize, f: F) -> Vec<f32>
 where
     F: Fn(usize, &mut [f32]) + Sync,
@@ -107,9 +116,18 @@ where
     out
 }
 
-/// C = A @ B with A row-major m×k and B row-major k×n; pool-parallel over
-/// rows of A. Accumulation is k-ascending per output element.
-pub fn matmul(pool: &QuantPool, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+/// C = A @ B with A row-major m×k and B row-major k×n — the PR 3 reference
+/// kernel: pool-parallel over rows of A, k-ascending accumulation, one
+/// freshly allocated buffer per row block plus a final stitch. Kept as the
+/// bit-parity anchor and the "before" side of `benches/native.rs`.
+pub fn matmul_naive(
+    pool: &QuantPool,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     run_row_blocks(pool, m, n, |r, out_row| {
@@ -123,9 +141,10 @@ pub fn matmul(pool: &QuantPool, a: &[f32], b: &[f32], m: usize, k: usize, n: usi
     })
 }
 
-/// C = Aᵀ @ G with A m×k and G m×n (the weight-gradient product h_{i-1}ᵀ·g);
-/// result k×n, pool-parallel over rows of C, m-ascending accumulation.
-pub fn matmul_at_b(
+/// C = Aᵀ @ G with A m×k and G m×n (the weight-gradient product h_{i-1}ᵀ·g)
+/// — reference kernel; result k×n, pool-parallel over rows of C,
+/// m-ascending accumulation with a k-strided read of A.
+pub fn matmul_at_b_naive(
     pool: &QuantPool,
     a: &[f32],
     g: &[f32],
@@ -146,9 +165,10 @@ pub fn matmul_at_b(
     })
 }
 
-/// C = G @ Wᵀ with G m×n and W k×n (the input-gradient product g·wᵀ);
-/// result m×k, pool-parallel over rows of G, n-ascending dot products.
-pub fn matmul_a_bt(
+/// C = G @ Wᵀ with G m×n and W k×n (the input-gradient product g·wᵀ) —
+/// reference kernel; result m×k, pool-parallel over rows of G, n-ascending
+/// dot products.
+pub fn matmul_a_bt_naive(
     pool: &QuantPool,
     g: &[f32],
     w: &[f32],
@@ -169,6 +189,50 @@ pub fn matmul_a_bt(
             *o = acc;
         }
     })
+}
+
+/// C = A @ B with A row-major m×k and B row-major k×n, through the blocked
+/// +packed suite ([`gemm::matmul_into`]); bit-identical to
+/// [`matmul_naive`] for any worker count. Allocates packing buffers and the
+/// result — the hot interpreter path uses the `_into` variants with the
+/// step arena instead.
+pub fn matmul(pool: &QuantPool, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut pack = PackBuf::default();
+    let mut out = vec![0.0f32; m * n];
+    gemm::matmul_into(pool, a, b, m, k, n, &mut pack, &mut out);
+    out
+}
+
+/// C = Aᵀ @ G (k×n), blocked with a packed Aᵀ; bit-identical to
+/// [`matmul_at_b_naive`]. See [`matmul`] for the allocation caveat.
+pub fn matmul_at_b(
+    pool: &QuantPool,
+    a: &[f32],
+    g: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    let mut pack = PackBuf::default();
+    let mut out = vec![0.0f32; k * n];
+    gemm::matmul_at_b_into(pool, a, g, m, k, n, &mut pack, &mut out);
+    out
+}
+
+/// C = G @ Wᵀ (m×k), blocked with a packed Wᵀ; bit-identical to
+/// [`matmul_a_bt_naive`]. See [`matmul`] for the allocation caveat.
+pub fn matmul_a_bt(
+    pool: &QuantPool,
+    g: &[f32],
+    w: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+) -> Vec<f32> {
+    let mut pack = PackBuf::default();
+    let mut out = vec![0.0f32; m * k];
+    gemm::matmul_a_bt_into(pool, g, w, m, n, k, &mut pack, &mut out);
+    out
 }
 
 /// z += bias, broadcast over `rows` rows.
@@ -209,14 +273,22 @@ pub fn mul_inplace(dst: &mut [f32], m: &[f32]) {
 
 /// Column sums of a rows×cols matrix (the bias gradient), row-ascending.
 pub fn col_sums(g: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    col_sums_into(g, rows, cols, &mut out);
+    out
+}
+
+/// [`col_sums`] into a reusable buffer (cleared and refilled; capacity is
+/// kept, so the step arena's bias-gradient buffer never reallocates).
+pub fn col_sums_into(g: &[f32], rows: usize, cols: usize, out: &mut Vec<f32>) {
     debug_assert_eq!(g.len(), rows * cols);
-    let mut out = vec![0.0f32; cols];
+    out.clear();
+    out.resize(cols, 0.0);
     for r in 0..rows {
         for (o, &v) in out.iter_mut().zip(&g[r * cols..(r + 1) * cols]) {
             *o += v;
         }
     }
-    out
 }
 
 /// L2 norm with an f64 accumulator (matches `quant::pushup::gsum_norm`).
@@ -261,8 +333,23 @@ pub fn softmax_ce_grad(
     b: usize,
     c: usize,
 ) -> Result<(f32, f32, Vec<f32>)> {
+    let mut g = Vec::new();
+    let (ce, acc) = softmax_ce_grad_into(logits, y, b, c, &mut g)?;
+    Ok((ce, acc, g))
+}
+
+/// [`softmax_ce_grad`] into a reusable gradient buffer (the step arena's
+/// ping-pong gradient); returns `(mean CE, top-1 accuracy)`.
+pub fn softmax_ce_grad_into(
+    logits: &[f32],
+    y: &[i32],
+    b: usize,
+    c: usize,
+    g: &mut Vec<f32>,
+) -> Result<(f32, f32)> {
     debug_assert_eq!(logits.len(), b * c);
-    let mut g = vec![0.0f32; b * c];
+    g.clear();
+    g.resize(b * c, 0.0);
     let mut ce_sum = 0.0f64;
     let mut correct = 0usize;
     let inv_b = 1.0 / b as f32;
@@ -298,7 +385,7 @@ pub fn softmax_ce_grad(
             grow[j] = (p - if j == label { 1.0 } else { 0.0 }) * inv_b;
         }
     }
-    Ok(((ce_sum / b as f64) as f32, correct as f32 / b as f32, g))
+    Ok(((ce_sum / b as f64) as f32, correct as f32 / b as f32))
 }
 
 #[cfg(test)]
@@ -317,13 +404,19 @@ mod tests {
         let a = [1.0f32, 2.0, 3.0, 4.0];
         let b = [5.0f32, 6.0, 7.0, 8.0];
         assert_eq!(matmul(&p, &a, &b, 2, 2, 2), vec![19.0, 22.0, 43.0, 50.0]);
+        assert_eq!(matmul_naive(&p, &a, &b, 2, 2, 2), vec![19.0, 22.0, 43.0, 50.0]);
         // transposed variants agree with explicit transposition
         let at_b = matmul_at_b(&p, &a, &b, 2, 2, 2); // Aᵀ@B
         assert_eq!(at_b, vec![26.0, 30.0, 38.0, 44.0]);
+        assert_eq!(matmul_at_b_naive(&p, &a, &b, 2, 2, 2), at_b);
         let a_bt = matmul_a_bt(&p, &a, &b, 2, 2, 2); // A@Bᵀ
         assert_eq!(a_bt, vec![17.0, 23.0, 39.0, 53.0]);
+        assert_eq!(matmul_a_bt_naive(&p, &a, &b, 2, 2, 2), a_bt);
     }
 
+    /// All three GEMM variants — blocked AND naive reference — are
+    /// bit-identical across pool sizes, and blocked == naive at every size
+    /// (the full determinism contract of the kernel layer).
     #[test]
     fn matmul_deterministic_across_pool_sizes() {
         let mut r = crate::util::rng::Rng::seed_from(11);
@@ -334,14 +427,19 @@ mod tests {
         let b: Vec<f32> = (0..k * n).map(|_| r.normal() as f32).collect();
         let g: Vec<f32> = (0..m * n).map(|_| r.normal() as f32).collect();
         let p1 = QuantPool::new(1);
-        let mm_ref = matmul(&p1, &a, &b, m, k, n);
-        let at_ref = matmul_at_b(&p1, &a, &g, m, k, n);
-        let bt_ref = matmul_a_bt(&p1, &g, &b, m, n, k);
-        for threads in [2usize, 3, 8] {
+        let mm_ref = matmul_naive(&p1, &a, &b, m, k, n);
+        let at_ref = matmul_at_b_naive(&p1, &a, &g, m, k, n);
+        let bt_ref = matmul_a_bt_naive(&p1, &g, &b, m, n, k);
+        for threads in [1usize, 2, 3, 8] {
             let p = QuantPool::new(threads);
-            assert_eq!(matmul(&p, &a, &b, m, k, n), mm_ref, "threads={threads}");
-            assert_eq!(matmul_at_b(&p, &a, &g, m, k, n), at_ref, "threads={threads}");
-            assert_eq!(matmul_a_bt(&p, &g, &b, m, n, k), bt_ref, "threads={threads}");
+            assert_eq!(matmul_naive(&p, &a, &b, m, k, n), mm_ref, "threads={threads}");
+            assert_eq!(matmul_at_b_naive(&p, &a, &g, m, k, n), at_ref, "threads={threads}");
+            assert_eq!(matmul_a_bt_naive(&p, &g, &b, m, n, k), bt_ref, "threads={threads}");
+            // the blocked suite matches the single-threaded naive reference
+            // bit-for-bit at every worker count
+            assert_eq!(matmul(&p, &a, &b, m, k, n), mm_ref, "blocked threads={threads}");
+            assert_eq!(matmul_at_b(&p, &a, &g, m, k, n), at_ref, "blocked threads={threads}");
+            assert_eq!(matmul_a_bt(&p, &g, &b, m, n, k), bt_ref, "blocked threads={threads}");
         }
     }
 
@@ -412,6 +510,13 @@ mod tests {
         mul_inplace(&mut d, &[0.0, 1.0]);
         assert_eq!(d, vec![0.0, 2.0]);
         assert_eq!(col_sums(&[1.0, 2.0, 3.0, 4.0], 2, 2), vec![4.0, 6.0]);
+        let mut cs = Vec::new();
+        col_sums_into(&[1.0, 2.0, 3.0, 4.0], 2, 2, &mut cs);
+        assert_eq!(cs, vec![4.0, 6.0]);
+        let cap = cs.capacity();
+        col_sums_into(&[1.0, 1.0], 1, 2, &mut cs);
+        assert_eq!(cs, vec![1.0, 1.0]);
+        assert_eq!(cs.capacity(), cap, "bias-gradient buffer must be reused");
         assert_eq!(l2_norm(&[3.0, 4.0]), 5.0);
         let (s1, s2) = abs_and_sq_sums(&[-1.0, 2.0]);
         assert_eq!((s1, s2), (3.0, 5.0));

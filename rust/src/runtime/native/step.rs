@@ -6,7 +6,9 @@
 //!
 //! 1. fake-quant every kernel under its qparams row (clipped STE);
 //! 2. forward: `h = Q_a(relu(h·W_q + b))` per layer (no ReLU after the
-//!    last layer; activations — logits included — are quantized);
+//!    last layer; activations — logits included — are quantized), run on
+//!    the blocked+packed GEMM suite ([`super::gemm`]) with the bias/ReLU/
+//!    fake-quant epilogue fused into the same parallel tasks;
 //! 3. loss = CE + α‖W‖₁ + β/2‖W‖₂² + P (P is the stop-gradient WL/32·sp
 //!    penalty of sec. 3.4);
 //! 4. backward through the STE masks and ReLU;
@@ -16,6 +18,30 @@
 //! 6. metric tail: loss, ce, acc, grad_norm[L], gsum_norm[L], sparsity[L],
 //!    act_absmax[L] — exactly the manifest's train-output contract.
 //!
+//! # Scratch arena
+//!
+//! Every intermediate tensor — quantized kernels, STE masks, the activation
+//! chain, gradient ping-pong buffers, GEMM packing panels, the sparse CSR
+//! packs — lives in a per-model [`StepArena`] behind a mutex, so repeated
+//! steps/infers perform no per-call buffer allocations once warm (measured
+//! by the alloc-churn ablation in `benches/native.rs`). Only the manifest
+//! I/O contract still allocates: inputs are unpacked from `Literal`s and
+//! outputs are owned `Vec`s by definition.
+//!
+//! # Sparse inference dispatch
+//!
+//! At `infer` time the weights are frozen, so each layer's quantized kernel
+//! is packed ONCE per call: when the measured non-zero fraction (the
+//! paper's sp, counted exactly during the fake-quant pass) is at or below
+//! [`sparse_crossover()`], the kernel is converted to CSR through
+//! [`SparseFixedTensor::from_quantized`] (WL-bit packed codes — the
+//! deployment format — decoded once for compute) and the layer runs on
+//! [`gemm::sparse_forward_quant_into`], skipping every zero weight. Denser
+//! layers stay on the dense blocked path. This is where the trained
+//! sparsity the controllers measure becomes wall-clock inference speedup;
+//! the crossover default comes from `BENCH_native.json` and can be tuned
+//! per deployment with `ADAPT_SPARSE_CROSSOVER`.
+//!
 //! One deliberate substitution: training quantization uses deterministic
 //! nearest rounding (round-half-even) instead of the stochastic rounding of
 //! the L1 Pallas kernels — the interpreter has no device PRNG to mirror, NR
@@ -23,22 +49,106 @@
 //! way. Inference matches the device semantics exactly (it is NR there
 //! too).
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
 use super::super::engine::{xla, ExecModule};
 use super::super::manifest::{IoSpec, Manifest};
+use super::gemm::{self, PackBuf};
 use super::ops;
+use crate::fixedpoint::{FixedPointFormat, SparseFixedTensor};
 use crate::quant::QuantPool;
 
+/// Default sparse-dispatch crossover: the quantized-kernel non-zero
+/// fraction (density) at or below which the sparse inference path beats the
+/// dense blocked GEMM. The shipped value is chosen from the dense-vs-sparse
+/// sweep `benches/native.rs` writes to `BENCH_native.json` (sparse wins
+/// clearly from sp ≥ 0.7, i.e. density ≤ 0.3, across the e2e shapes);
+/// re-run the bench on the deployment hardware and override with
+/// `ADAPT_SPARSE_CROSSOVER` if its crossover lands elsewhere.
+pub const SPARSE_CROSSOVER_DEFAULT: f32 = 0.30;
+
+/// The active sparse-dispatch crossover density: `ADAPT_SPARSE_CROSSOVER`
+/// (a float in [0, 1]; 0 disables the sparse path, 1 forces it whenever the
+/// format permits), else [`SPARSE_CROSSOVER_DEFAULT`].
+pub fn sparse_crossover() -> f32 {
+    std::env::var("ADAPT_SPARSE_CROSSOVER")
+        .ok()
+        .and_then(|v| v.parse::<f32>().ok())
+        .filter(|v| v.is_finite() && (0.0..=1.0).contains(v))
+        .unwrap_or(SPARSE_CROSSOVER_DEFAULT)
+}
+
+/// One layer's frozen sparse kernel, decoded for compute (see the module
+/// docs): CSR over the fan-in rows with f32 values.
+#[derive(Default)]
+pub(crate) struct CsrPack {
+    active: bool,
+    row_ptr: Vec<u32>,
+    col_idx: Vec<u32>,
+    vals: Vec<f32>,
+}
+
+/// Reusable per-model scratch: all intermediate tensors of the train/infer
+/// interpreters. Buffers are cleared and re-sized (never shrunk) per call,
+/// so steady-state steps allocate nothing here.
+#[derive(Default)]
+pub(crate) struct StepArena {
+    /// GEMM packing panels (both operand sides).
+    pack: PackBuf,
+    /// Per-layer quantized kernels.
+    wq: Vec<Vec<f32>>,
+    /// Per-layer weight STE masks (training).
+    mask_w: Vec<Vec<f32>>,
+    /// Activation chain: `acts[0]` the input, `acts[i+1]` layer i's
+    /// quantized output.
+    acts: Vec<Vec<f32>>,
+    /// Pre-quant (post-bias/ReLU) activations, training only.
+    pre_q: Vec<Vec<f32>>,
+    /// Activation STE masks, training only.
+    mask_a: Vec<Vec<f32>>,
+    /// Gradient ping-pong buffers for the backward sweep.
+    g: Vec<f32>,
+    g_prev: Vec<f32>,
+    /// Weight/bias gradient buffers.
+    dw: Vec<f32>,
+    db: Vec<f32>,
+    /// Pre-quant activation buffer for inference (no STE state kept).
+    z_infer: Vec<f32>,
+    /// Per-layer sparse kernels (inference only; `active` gates dispatch).
+    csr: Vec<CsrPack>,
+}
+
+/// Grow a slot vector to `n` default entries without dropping existing
+/// (capacity-holding) slots.
+fn ensure_slots<T: Default>(slots: &mut Vec<T>, n: usize) {
+    if slots.len() < n {
+        slots.resize_with(n, T::default);
+    }
+}
+
+/// Size a reusable buffer to `n` elements for a kernel that OVERWRITES
+/// every element (all arena consumers do): when the length already matches
+/// — the steady state of a training loop — this is a no-op, skipping even
+/// the memset; otherwise clear + zero-fill without shrinking capacity.
+/// (The GEMM packing buffers deliberately do NOT use this: their zero
+/// padding is load-bearing, see `gemm::reuse`.)
+fn reuse(buf: &mut Vec<f32>, n: usize) {
+    if buf.len() != n {
+        buf.clear();
+        buf.resize(n, 0.0);
+    }
+}
+
 /// An MLP manifest lowered to the interpreter's layer view, plus the shared
-/// worker pool the matmuls fan out on.
+/// worker pool the matmuls fan out on and the per-model scratch arena.
 pub struct NativeModel {
     pub(crate) man: Manifest,
     /// (fan_in, fan_out) per dense layer, input to output.
     pub(crate) dims: Vec<(usize, usize)>,
     pub(crate) pool: Arc<QuantPool>,
+    pub(crate) scratch: Mutex<StepArena>,
 }
 
 impl NativeModel {
@@ -91,53 +201,105 @@ impl NativeModel {
         if d_in != man.classes {
             return Err(anyhow!("final layer width {d_in} != {} classes", man.classes));
         }
-        Ok(NativeModel { man, dims, pool })
+        Ok(NativeModel {
+            man,
+            dims,
+            pool,
+            scratch: Mutex::new(StepArena::default()),
+        })
     }
 
-    /// Quantized forward pass shared by train and infer.
-    ///
-    /// Returns `(activations, pre_quant, act_masks, act_absmax)`:
-    /// `activations[0]` is the input and `activations[i+1]` the quantized
-    /// output of layer i; the per-layer STE state (`pre_quant`, `act_masks`)
-    /// is only recorded when `for_training` is set (infer skips those
-    /// allocations).
-    #[allow(clippy::type_complexity)]
-    fn forward(
+    /// Quantized forward pass shared by train and infer, entirely on arena
+    /// buffers: expects `ar.wq` filled per layer and `ar.acts[0]` holding
+    /// the input batch; leaves `ar.acts[i+1]` holding layer i's quantized
+    /// output and (when training) `ar.pre_q`/`ar.mask_a` the STE state.
+    /// Appends max |z| per layer to `act_absmax`. Inference dispatches each
+    /// layer to the dense blocked or sparse kernel per `ar.csr[i].active`.
+    fn forward_arena(
         &self,
-        wq: &[Vec<f32>],
+        ar: &mut StepArena,
         biases: &[&[f32]],
-        x: Vec<f32>,
         qparams: &[f32],
+        b: usize,
         for_training: bool,
-    ) -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<f32>)> {
+        act_absmax: &mut Vec<f32>,
+    ) -> Result<()> {
         let l = self.dims.len();
-        let b = x.len() / self.dims[0].0;
-        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(l + 1);
-        let mut pre_q: Vec<Vec<f32>> = Vec::with_capacity(if for_training { l } else { 0 });
-        let mut mask_a: Vec<Vec<f32>> = Vec::with_capacity(if for_training { l } else { 0 });
-        let mut act_absmax = Vec::with_capacity(l);
-        acts.push(x);
+        if for_training {
+            ensure_slots(&mut ar.pre_q, l);
+            ensure_slots(&mut ar.mask_a, l);
+        }
         for i in 0..l {
             let (di, do_) = self.dims[i];
-            let mut z = ops::matmul(&self.pool, &acts[i], &wq[i], b, di, do_);
-            ops::add_bias_inplace(&mut z, biases[i], b, do_);
-            if i + 1 < l {
-                ops::relu_inplace(&mut z);
-            }
-            act_absmax.push(crate::fixedpoint::max_abs(&z));
             let row = ops::QRow::parse(qparams, l + i)?;
-            let mut q = vec![0.0f32; z.len()];
-            if for_training {
-                let mut mk = vec![0.0f32; z.len()];
-                ops::fake_quant_ste(&z, &row, &mut q, &mut mk);
-                pre_q.push(z);
-                mask_a.push(mk);
+            let relu = i + 1 < l;
+            let (head, tail) = ar.acts.split_at_mut(i + 1);
+            let x_in: &[f32] = &head[i];
+            let out = &mut tail[0];
+            reuse(out, b * do_);
+            let use_sparse = !for_training && ar.csr[i].active;
+            let absmax = if use_sparse {
+                let csr = &ar.csr[i];
+                reuse(&mut ar.z_infer, b * do_);
+                let (_zeros, mx) = gemm::sparse_forward_quant_into(
+                    &self.pool,
+                    x_in,
+                    b,
+                    di,
+                    do_,
+                    &csr.row_ptr,
+                    &csr.col_idx,
+                    &csr.vals,
+                    biases[i],
+                    relu,
+                    &row,
+                    &mut ar.z_infer,
+                    out,
+                );
+                mx
             } else {
-                ops::fake_quant(&z, &row, &mut q);
-            }
-            acts.push(q);
+                gemm::pack_a_rows(x_in, b, di, &mut ar.pack.a);
+                gemm::pack_b_cols(&ar.wq[i], di, do_, &mut ar.pack.b);
+                if for_training {
+                    reuse(&mut ar.pre_q[i], b * do_);
+                    reuse(&mut ar.mask_a[i], b * do_);
+                    let (_zeros, mx) = gemm::gemm_quant_into(
+                        &self.pool,
+                        b,
+                        do_,
+                        di,
+                        &ar.pack.a,
+                        &ar.pack.b,
+                        biases[i],
+                        relu,
+                        &row,
+                        &mut ar.pre_q[i],
+                        out,
+                        Some(&mut ar.mask_a[i]),
+                    );
+                    mx
+                } else {
+                    reuse(&mut ar.z_infer, b * do_);
+                    let (_zeros, mx) = gemm::gemm_quant_into(
+                        &self.pool,
+                        b,
+                        do_,
+                        di,
+                        &ar.pack.a,
+                        &ar.pack.b,
+                        biases[i],
+                        relu,
+                        &row,
+                        &mut ar.z_infer,
+                        out,
+                        None,
+                    );
+                    mx
+                }
+            };
+            act_absmax.push(absmax);
         }
-        Ok((acts, pre_q, mask_a, act_absmax))
+        Ok(())
     }
 }
 
@@ -224,28 +386,36 @@ impl ExecModule for NativeTrainStep {
         let (lr, l1, l2, pen) = (hyper[0], hyper[1], hyper[2], hyper[3]);
         let gnorm_on = hyper[5] > 0.5;
 
-        // -- 1. weight fake-quant (STE) -----------------------------------
-        let mut wq: Vec<Vec<f32>> = Vec::with_capacity(l);
-        let mut mask_w: Vec<Vec<f32>> = Vec::with_capacity(l);
+        let mut guard = m.scratch.lock().unwrap_or_else(|p| p.into_inner());
+        let ar = &mut *guard;
+        ensure_slots(&mut ar.wq, l);
+        ensure_slots(&mut ar.mask_w, l);
+        ensure_slots(&mut ar.acts, l + 1);
+
+        // -- 1. weight fake-quant (STE) into the arena --------------------
         let mut sparsity = Vec::with_capacity(l);
         for i in 0..l {
             let row = ops::QRow::parse(&qparams, i)?;
             let w = &params[2 * i];
-            let mut q = vec![0.0f32; w.len()];
-            let mut mk = vec![0.0f32; w.len()];
-            let zeros = ops::fake_quant_ste(w, &row, &mut q, &mut mk);
+            reuse(&mut ar.wq[i], w.len());
+            reuse(&mut ar.mask_w[i], w.len());
+            let zeros = ops::fake_quant_ste(w, &row, &mut ar.wq[i], &mut ar.mask_w[i]);
             sparsity.push(zeros as f32 / w.len().max(1) as f32);
-            wq.push(q);
-            mask_w.push(mk);
         }
 
-        // -- 2. forward ---------------------------------------------------
+        // -- 2. forward (fused bias/ReLU/fake-quant epilogues) ------------
         let biases: Vec<&[f32]> = (0..l).map(|i| params[2 * i + 1].as_slice()).collect();
-        let (acts, pre_q, mask_a, act_absmax) = m.forward(&wq, &biases, x, &qparams, true)?;
+        {
+            let a0 = &mut ar.acts[0];
+            a0.clear();
+            a0.extend_from_slice(&x);
+        }
+        let mut act_absmax = Vec::with_capacity(l);
+        m.forward_arena(ar, &biases, &qparams, b, true, &mut act_absmax)?;
 
         // -- 3. loss ------------------------------------------------------
         let c = m.man.classes;
-        let (ce, acc, mut g) = ops::softmax_ce_grad(&acts[l], &y, b, c)?;
+        let (ce, acc) = ops::softmax_ce_grad_into(&ar.acts[l], &y, b, c, &mut ar.g)?;
         let mut reg = 0.0f32;
         for i in 0..l {
             let (s_abs, s_sq) = ops::abs_and_sq_sums(&params[2 * i]);
@@ -265,35 +435,44 @@ impl ExecModule for NativeTrainStep {
             let (di, do_) = m.dims[i];
             // through the activation quantizer, then the ReLU (forward was
             // h = Q_a(relu(z)); the last layer has no ReLU)
-            ops::mul_inplace(&mut g, &mask_a[i]);
+            ops::mul_inplace(&mut ar.g, &ar.mask_a[i]);
             if i + 1 < l {
-                ops::relu_backward_inplace(&mut g, &pre_q[i]);
+                ops::relu_backward_inplace(&mut ar.g, &ar.pre_q[i]);
             }
-            let db = ops::col_sums(&g, b, do_);
-            let mut dw = ops::matmul_at_b(&m.pool, &acts[i], &g, b, di, do_);
-            ops::mul_inplace(&mut dw, &mask_w[i]);
+            ops::col_sums_into(&ar.g, b, do_, &mut ar.db);
+            reuse(&mut ar.dw, di * do_);
+            gemm::matmul_at_b_into(
+                &m.pool, &ar.acts[i], &ar.g, b, di, do_, &mut ar.pack, &mut ar.dw,
+            );
+            ops::mul_inplace(&mut ar.dw, &ar.mask_w[i]);
             // L1/L2 regularizer gradients act on the raw master weights
-            for (d, &wv) in dw.iter_mut().zip(&params[2 * i]) {
+            for (d, &wv) in ar.dw.iter_mut().zip(&params[2 * i]) {
                 *d += l1 * ops::sign(wv) + l2 * wv;
             }
             // propagate to the previous layer's output before updating
             if i > 0 {
-                g = ops::matmul_a_bt(&m.pool, &g, &wq[i], b, do_, di);
+                reuse(&mut ar.g_prev, b * di);
+                gemm::matmul_a_bt_into(
+                    &m.pool, &ar.g, &ar.wq[i], b, do_, di, &mut ar.pack, &mut ar.g_prev,
+                );
             }
             // gradient-diversity state uses the RAW gradient (eq. 3)
-            let gn = ops::l2_norm(&dw);
+            let gn = ops::l2_norm(&ar.dw);
             grad_norm[i] = gn;
-            for (s, &d) in gsum[i].iter_mut().zip(&dw) {
+            for (s, &d) in gsum[i].iter_mut().zip(&ar.dw) {
                 *s += d;
             }
             gsum_norm[i] = ops::l2_norm(&gsum[i]);
             // ASGD update: kernels optionally normalized, biases plain
             let denom = gn + ops::UPDATE_EPS;
-            for (wv, &d) in params[2 * i].iter_mut().zip(&dw) {
+            for (wv, &d) in params[2 * i].iter_mut().zip(&ar.dw) {
                 *wv -= lr * if gnorm_on { d / denom } else { d };
             }
-            for (bv, &d) in params[2 * i + 1].iter_mut().zip(&db) {
+            for (bv, &d) in params[2 * i + 1].iter_mut().zip(&ar.db) {
                 *bv -= lr * d;
+            }
+            if i > 0 {
+                std::mem::swap(&mut ar.g, &mut ar.g_prev);
             }
         }
 
@@ -314,7 +493,9 @@ impl ExecModule for NativeTrainStep {
 }
 
 /// The native inference pass (deterministic NR quantization, the "deployed
-/// on ASIC" path of sec. 4.2.2) behind the [`ExecModule`] contract.
+/// on ASIC" path of sec. 4.2.2) behind the [`ExecModule`] contract. Each
+/// layer's frozen quantized kernel is packed once per call and dispatched
+/// dense-blocked or sparse per the measured sp row (module docs).
 pub(crate) struct NativeInfer(pub(crate) Arc<NativeModel>);
 
 impl ExecModule for NativeInfer {
@@ -349,17 +530,64 @@ impl ExecModule for NativeInfer {
                 m.dims[0].0
             ));
         }
-        let mut wq: Vec<Vec<f32>> = Vec::with_capacity(l);
+        for (i, p) in params.iter().enumerate() {
+            if p.len() != m.man.params[i].elems() {
+                return Err(anyhow!("param {} size mismatch", m.man.params[i].name));
+            }
+        }
+        let b = m.man.batch;
+
+        let mut guard = m.scratch.lock().unwrap_or_else(|p| p.into_inner());
+        let ar = &mut *guard;
+        ensure_slots(&mut ar.wq, l);
+        ensure_slots(&mut ar.csr, l);
+        ensure_slots(&mut ar.acts, l + 1);
+        let crossover = sparse_crossover();
+
+        // quantize + pack each frozen kernel once, choosing its path from
+        // the measured density
         for i in 0..l {
             let row = ops::QRow::parse(&qparams, i)?;
             let w = &params[2 * i];
-            let mut q = vec![0.0f32; w.len()];
-            ops::fake_quant(w, &row, &mut q);
-            wq.push(q);
+            reuse(&mut ar.wq[i], w.len());
+            let zeros = ops::fake_quant(w, &row, &mut ar.wq[i]);
+            let density = if w.is_empty() {
+                0.0
+            } else {
+                1.0 - zeros as f32 / w.len() as f32
+            };
+            let csr = &mut ar.csr[i];
+            csr.active = false;
+            // crossover == 0 fully disables the sparse path (the documented
+            // contract) — without the strict guard a 100%-pruned layer
+            // (density exactly 0.0) would still dispatch CSR
+            if row.enable && crossover > 0.0 && density <= crossover {
+                let arr: [f32; 5] = qparams[i * 5..(i + 1) * 5]
+                    .try_into()
+                    .expect("qparams row width");
+                // only rows describing a true <WL,FL> grid can be packed to
+                // WL-bit CSR codes; others (disabled/raw rows) stay dense
+                if let Some((fmt, true)) = FixedPointFormat::from_qparams_row(&arr) {
+                    let (di, do_) = m.dims[i];
+                    let st = SparseFixedTensor::from_quantized(&ar.wq[i], di, do_, fmt);
+                    st.decode_values_into(&mut csr.vals);
+                    let SparseFixedTensor { row_ptr, col_idx, .. } = st;
+                    csr.row_ptr = row_ptr;
+                    csr.col_idx = col_idx;
+                    csr.active = true;
+                }
+            }
         }
+
         let biases: Vec<&[f32]> = (0..l).map(|i| params[2 * i + 1].as_slice()).collect();
-        let (mut acts, _, _, _) = m.forward(&wq, &biases, x, &qparams, false)?;
-        let outs = vec![acts.pop().expect("forward always yields logits")];
+        {
+            let a0 = &mut ar.acts[0];
+            a0.clear();
+            a0.extend_from_slice(&x);
+        }
+        let mut act_absmax = Vec::with_capacity(l);
+        m.forward_arena(ar, &biases, &qparams, b, false, &mut act_absmax)?;
+        let outs = vec![ar.acts[l].clone()];
         check_outputs(&outs, out_specs)?;
         Ok(outs)
     }
@@ -396,6 +624,15 @@ mod tests {
             dtype: crate::runtime::manifest::Dtype::F32,
         });
         assert!(NativeModel::from_manifest(man2, Arc::new(QuantPool::new(1))).is_err());
+    }
+
+    #[test]
+    fn sparse_crossover_default_applies_when_unset() {
+        if std::env::var_os("ADAPT_SPARSE_CROSSOVER").is_some() {
+            eprintln!("SKIP: ADAPT_SPARSE_CROSSOVER preset by the environment");
+            return;
+        }
+        assert_eq!(sparse_crossover(), SPARSE_CROSSOVER_DEFAULT);
     }
 
     #[test]
@@ -482,5 +719,34 @@ mod tests {
         // sparsity reflects raw float zeros — TNVS weights have none
         let sparsity = &outs[3 * l + 5];
         assert!(sparsity.iter().all(|&s| s == 0.0), "{sparsity:?}");
+    }
+
+    /// Mostly-zero kernels must dispatch the sparse path (density well under
+    /// the default crossover) and still produce exactly the logits of a
+    /// repeat infer — the packs are rebuilt per call and stay deterministic.
+    #[test]
+    fn sparse_dispatch_is_deterministic_across_calls() {
+        let (model, man) = tiny_model();
+        let l = man.num_layers;
+        let mut params = crate::init::init_params(&man, crate::init::Initializer::Tnvs, 1.0, 9);
+        // zero out ~90% of each kernel so every layer crosses the threshold
+        for i in 0..l {
+            for (j, w) in params[2 * i].iter_mut().enumerate() {
+                if j % 10 != 0 {
+                    *w = 0.0;
+                }
+            }
+        }
+        let bn: Vec<Vec<f32>> = Vec::new();
+        let x: Vec<f32> = (0..16).map(|i| (i as f32 * 0.21).sin()).collect();
+        let qp = qp_uniform(l, FixedPointFormat::initial(), 1.0);
+        let infer = NativeInfer(model);
+        let iin = pack_infer_inputs(&man, &params, &bn, &x, &qp).unwrap();
+        let a = infer.execute_f32(&iin, &man.infer_outputs).unwrap();
+        let b = infer.execute_f32(&iin, &man.infer_outputs).unwrap();
+        let bits =
+            |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a[0]), bits(&b[0]));
+        assert!(a[0].iter().all(|v| v.is_finite()));
     }
 }
