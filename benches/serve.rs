@@ -1,0 +1,161 @@
+//! Serving benchmarks (hand-rolled harness, same conventions as
+//! `benches/native.rs`): end-to-end throughput of the registry → queue →
+//! worker pipeline across a `max_batch` × worker-count grid, plus the
+//! cached-vs-rebuilt pack ablation that quantifies the persistent pack/CSR
+//! cache.
+//!
+//!     cargo bench --bench serve
+//!
+//! Writes `BENCH_serve.json`: per-cell mean request latency under
+//! `results`, and under `derived` the `serve_samples_per_ms_b<B>_w<W>`
+//! rates `perfmodel::ServeCalibration` consumes, next to
+//! `serve_pack_cache_speedup`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use adapt::bench_support::{write_bench_json, BenchEntry};
+use adapt::fixedpoint::FixedPointFormat;
+use adapt::quant::QuantPool;
+use adapt::runtime::native::InferScratch;
+use adapt::runtime::Manifest;
+use adapt::serve::{ModelRegistry, ServeConfig, ServeServer, ServedModel};
+use adapt::util::rng::Rng;
+
+/// Samples pushed through the pipeline per measured cell.
+const REQUESTS: usize = 256;
+
+fn main() {
+    println!("== adapt serving benches (median of 3 samples) ==");
+    let man = Manifest::synthetic_mlp("serve-bench", [8, 8, 1], 10, &[128, 64], 32);
+    let d_in = 64usize;
+    let mut params = adapt::init::init_params(&man, adapt::init::Initializer::Tnvs, 1.0, 5);
+    // sparsify the big hidden layer to ~10% density — the serving workload
+    // should cash trained sparsity in through the CSR dispatch
+    for (j, w) in params[2].iter_mut().enumerate() {
+        if j % 10 != 0 {
+            *w = 0.0;
+        }
+    }
+    let qp: Vec<f32> = (0..2 * man.num_layers)
+        .flat_map(|_| FixedPointFormat::initial().qparams_row(1.0))
+        .collect();
+    let mut rng = Rng::seed_from(17);
+    let inputs: Vec<Vec<f32>> = (0..REQUESTS)
+        .map(|_| (0..d_in).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let pool = Arc::new(QuantPool::with_default_threads());
+
+    let mut entries: Vec<BenchEntry> = Vec::new();
+    let mut derived: Vec<(String, f64)> = Vec::new();
+
+    // ---- throughput grid: max_batch × workers ---------------------------
+    println!("-- end-to-end single-sample flood: {REQUESTS} requests ----");
+    for &max_batch in &[1usize, 8, 32] {
+        for &workers in &[1usize, 2, 4] {
+            let registry = Arc::new(ModelRegistry::new());
+            registry.publish(
+                ServedModel::freeze("serve-bench", &man, &params, &qp).expect("freeze"),
+            );
+            let mut samples_ms: Vec<f64> = (0..3)
+                .map(|_| {
+                    let server = ServeServer::start(
+                        Arc::clone(&registry),
+                        Arc::clone(&pool),
+                        ServeConfig {
+                            max_batch,
+                            max_wait: Duration::from_millis(1),
+                            queue_capacity: REQUESTS + 1,
+                            workers,
+                        },
+                    );
+                    let handle = server.handle();
+                    let t0 = Instant::now();
+                    let tickets: Vec<_> = inputs
+                        .iter()
+                        .map(|x| {
+                            handle
+                                .submit_blocking("serve-bench", x.clone(), 1)
+                                .expect("submit")
+                        })
+                        .collect();
+                    for t in tickets {
+                        t.wait().expect("response");
+                    }
+                    let ms = t0.elapsed().as_secs_f64() * 1e3;
+                    server.shutdown();
+                    ms
+                })
+                .collect();
+            samples_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let med_ms = samples_ms[1];
+            let name = format!("serve flood {REQUESTS}x1 b{max_batch:02} w{workers}");
+            let per_req = med_ms / REQUESTS as f64;
+            println!("{name:<56} {per_req:>10.4} ms/req");
+            entries.push(BenchEntry {
+                name,
+                ms_per_iter: per_req,
+            });
+            derived.push((
+                format!("serve_samples_per_ms_b{max_batch}_w{workers}"),
+                REQUESTS as f64 / med_ms,
+            ));
+        }
+    }
+
+    // ---- cached vs rebuilt packs ----------------------------------------
+    // The persistent cache means a served model packs once at freeze time;
+    // the "before" shape packed every layer on every call. Same forward,
+    // same pool — the delta is pure pack/CSR construction.
+    println!("-- pack cache ablation (batch 32 forward) -----------");
+    let served = ServedModel::freeze("serve-bench", &man, &params, &qp).expect("freeze");
+    let b = man.batch;
+    let xb: Vec<f32> = (0..b * d_in).map(|i| (i as f32 * 0.013).sin()).collect();
+    let mut scratch = InferScratch::default();
+    let mut out = Vec::new();
+    let bench = |name: &str, iters: u32, f: &mut dyn FnMut()| -> f64 {
+        f();
+        let mut samples: Vec<f64> = (0..3)
+            .map(|_| {
+                let t0 = Instant::now();
+                for _ in 0..iters {
+                    f();
+                }
+                t0.elapsed().as_secs_f64() * 1e3 / iters as f64
+            })
+            .collect();
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = samples[1];
+        println!("{name:<56} {med:>10.4} ms/iter");
+        med
+    };
+    let cached = bench("serve infer cached packs b32", 50, &mut || {
+        served
+            .infer_into(&pool, &xb, b, &mut scratch, &mut out)
+            .expect("cached infer");
+        std::hint::black_box(&out);
+    });
+    entries.push(BenchEntry {
+        name: "serve infer cached packs b32".into(),
+        ms_per_iter: cached,
+    });
+    let rebuilt = bench("serve infer rebuilt packs b32", 50, &mut || {
+        let fresh = ServedModel::freeze("serve-bench", &man, &params, &qp).expect("freeze");
+        fresh
+            .infer_into(&pool, &xb, b, &mut scratch, &mut out)
+            .expect("rebuilt infer");
+        std::hint::black_box(&out);
+    });
+    entries.push(BenchEntry {
+        name: "serve infer rebuilt packs b32".into(),
+        ms_per_iter: rebuilt,
+    });
+    derived.push(("serve_pack_cache_speedup".to_string(), rebuilt / cached));
+    println!("pack cache speedup: {:.2}x", rebuilt / cached);
+
+    match write_bench_json(std::path::Path::new("BENCH_serve.json"), &entries, &derived) {
+        Ok(()) => println!("wrote BENCH_serve.json"),
+        Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
+    }
+    println!("== done ==");
+}

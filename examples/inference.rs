@@ -1,42 +1,46 @@
-//! Deployed-inference demo (sec. 4.2.2): train LeNet-5 with AdaPT, then
+//! Deployed-inference demo (sec. 4.2.2), artifact-free: train an MLP with
+//! AdaPT on the native backend, then
 //!
 //!  1. export every quantized layer to the bit-packed sparse fixed-point
 //!     deployment format (`SparseFixedTensor`) and report the storage,
-//!  2. serve batched quantized inference through PJRT and report
-//!     latency/throughput,
+//!  2. freeze + publish the trained model and serve batched quantized
+//!     inference through the `serve` subsystem (registry → micro-batching
+//!     queue → worker team), reporting latency/throughput/occupancy and
+//!     asserting served logits are bit-identical to a direct infer,
 //!  3. cross-check the deployment format: the sparse host matvec of the
-//!     final fc layer must agree with the PJRT path.
+//!     final fc layer must agree with the dense quantized reference.
 //!
 //!     cargo run --release --example inference
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::Duration;
 
 use adapt::coordinator::{train_with_data, Policy, TrainConfig};
 use adapt::data::{Batcher, SyntheticVision};
 use adapt::fixedpoint::{FixedPointFormat, SparseFixedTensor};
-use adapt::quant::QuantHyper;
-use adapt::runtime::{artifacts_dir, Engine};
+use adapt::quant::{QuantHyper, QuantPool};
+use adapt::runtime::{Engine, Manifest};
+use adapt::serve::{ModelRegistry, ServeConfig, ServeServer, ServedModel};
 
 fn main() -> anyhow::Result<()> {
-    let dir = artifacts_dir()?;
-    let engine = Engine::cpu()?;
-    let model = engine.load_model(&dir, "lenet-mnist")?;
+    // fully synthetic: no artifacts directory, no PJRT — the native
+    // interpreter compiles the manifest directly
+    let engine = Engine::native();
+    let man = Manifest::synthetic_mlp("mlp-serve", [8, 8, 1], 10, &[64, 32], 32);
+    let model = engine.compile_manifest(man)?;
     let man = &model.manifest;
 
     // -- train with AdaPT ---------------------------------------------------
-    let mut cfg = TrainConfig::fast(
-        "lenet-mnist",
-        Policy::Adapt(QuantHyper::default().scaled(0.2)),
-    );
+    let mut cfg = TrainConfig::fast("mlp-serve", Policy::Adapt(QuantHyper::default().scaled(0.2)));
     cfg.epochs = 5;
     cfg.train_size = 1024;
     cfg.eval_size = 256;
-    let data = Arc::new(SyntheticVision::mnist_like(cfg.train_size, cfg.seed));
+    let data = Arc::new(SyntheticVision::new(8, 8, 1, man.classes, cfg.train_size, cfg.seed, 0.25));
     let eval = Arc::new(
-        SyntheticVision::mnist_like(cfg.train_size, cfg.seed).heldout(cfg.train_size, 256),
+        SyntheticVision::new(8, 8, 1, man.classes, cfg.train_size, cfg.seed, 0.25)
+            .heldout(cfg.train_size, cfg.eval_size),
     );
-    println!("training lenet-mnist with AdaPT…");
+    println!("training {} with AdaPT on {}…", man.name, engine.platform());
     let out = train_with_data(&model, &cfg, data, eval.clone())?;
     println!(
         "trained: eval acc {:.3}, final WLs {:?}",
@@ -56,14 +60,10 @@ fn main() -> anyhow::Result<()> {
         let wl = out.final_wordlengths[l];
         let fl = wl / 2; // deploy at the trained format's fraction split
         let fmt = FixedPointFormat::new(wl, fl);
-        let (rows, cols) = match p.shape.len() {
-            2 => (p.shape[0], p.shape[1]),
-            4 => (p.shape[0] * p.shape[1] * p.shape[2], p.shape[3]),
-            _ => (1, p.elems()),
-        };
+        let (rows, cols) = (p.shape[0], p.shape[1]);
         let s = SparseFixedTensor::from_dense(w, rows, cols, fmt);
         println!(
-            "  {:<12} <{:>2},{:>2}>  {:>7} weights  density {:>5.2}  {:>8} -> {:>8} bits",
+            "  {:<14} <{:>2},{:>2}>  {:>6} weights  density {:>5.2}  {:>8} -> {:>8} bits",
             p.name,
             fmt.wl,
             fmt.fl,
@@ -83,59 +83,100 @@ fn main() -> anyhow::Result<()> {
         f32_bits as f64 / total_bits as f64
     );
 
-    // the stochastic-rounding exporter on the final layer, for comparison:
-    // SR preserves the weight mean in expectation where NR snaps small
-    // weights to zero (density typically a touch higher, same storage model)
-    {
-        let (pi, s_nr) = sparse_layers.last().unwrap();
-        let p = &man.params[*pi];
-        let w = &out.state.params[*pi];
-        let mut sr_rng = adapt::util::rng::Rng::seed_from(cfg.seed ^ 0x5E);
-        let mut sr_buf = Vec::new();
-        let s_sr = SparseFixedTensor::from_dense_sr(
-            w,
-            s_nr.rows,
-            s_nr.cols,
-            s_nr.fmt,
-            &mut sr_rng,
-            &mut sr_buf,
-        );
-        println!(
-            "  SR export ({:<12}): density {:>5.2} (NR {:>5.2}), {:>8} bits (NR {:>8})",
-            p.name,
-            s_sr.density(),
-            s_nr.density(),
-            s_sr.storage_bits(),
-            s_nr.storage_bits()
-        );
-    }
+    // -- 2. freeze, publish, serve ------------------------------------------
+    let servable = out.servable(man);
+    let served = ServedModel::from_servable(&servable)?;
+    let sparse_dispatch: Vec<bool> = (0..man.num_layers)
+        .map(|i| served.snapshot().layer_is_sparse(i))
+        .collect();
+    println!(
+        "\nfreezing for serving: per-layer density {:?}, CSR dispatch {:?}",
+        served.snapshot().layer_density(),
+        sparse_dispatch
+    );
+    let registry = Arc::new(ModelRegistry::new());
+    registry.publish(served);
+    let pool = engine
+        .quant_pool()
+        .unwrap_or_else(|| Arc::new(QuantPool::with_default_threads()));
+    let server = ServeServer::start(
+        Arc::clone(&registry),
+        pool,
+        ServeConfig {
+            max_batch: man.batch,
+            max_wait: Duration::from_millis(1),
+            queue_capacity: 4096,
+            workers: 2,
+        },
+    );
+    let handle = server.handle();
 
-    // -- 2. serve batched requests through PJRT ------------------------------
-    println!("\nserving {} batched inference requests…", 16);
-    let qp = out.final_qparams.clone();
-    let mut lat = Vec::new();
+    // submit 16 eval batches: even batches as one request, odd batches as
+    // single-sample requests — coalescing must not change a single bit
+    let n_batches = 16usize;
+    println!("serving {} batches ({} samples)…", n_batches, n_batches * man.batch);
+    let elems: usize = man.input_shape.iter().product(); // per-sample width
+    let mut tickets = Vec::new();
+    for k in 0..n_batches {
+        let b = Batcher::eval_batch(eval.as_ref(), man.batch, k);
+        if k % 2 == 0 {
+            let t = handle.submit_blocking("mlp-serve", b.x.clone(), man.batch)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            tickets.push((t, b.y.clone(), b.x));
+        } else {
+            for j in 0..man.batch {
+                let xs = b.x[j * elems..(j + 1) * elems].to_vec();
+                let t = handle
+                    .submit_blocking("mlp-serve", xs.clone(), 1)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                tickets.push((t, vec![b.y[j]], xs));
+            }
+        }
+    }
     let mut correct = 0usize;
     let mut seen = 0usize;
-    for k in 0..16 {
-        let b = Batcher::eval_batch(eval.as_ref(), man.batch, k);
-        let t0 = Instant::now();
-        let acc = model.infer_accuracy(&out.state.params, &out.state.bn, &b.x, &b.y, &qp)?;
-        lat.push(t0.elapsed().as_secs_f64() * 1e3);
-        correct += (acc * man.batch as f32).round() as usize;
-        seen += man.batch;
+    let c = man.classes;
+    let mut served_first_batch: Option<Vec<f32>> = None;
+    for (t, labels, _x) in tickets {
+        let resp = t.wait().map_err(|e| anyhow::anyhow!("{e}"))?;
+        if served_first_batch.is_none() && resp.n == man.batch {
+            served_first_batch = Some(resp.logits.clone());
+        }
+        for (j, &label) in labels.iter().enumerate() {
+            let row = &resp.logits[j * c..(j + 1) * c];
+            let best = (0..c).max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap()).unwrap();
+            if best == label as usize {
+                correct += 1;
+            }
+            seen += 1;
+        }
     }
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let p50 = lat[lat.len() / 2];
-    let p95 = lat[(lat.len() * 95) / 100];
-    let mean = lat.iter().sum::<f64>() / lat.len() as f64;
+    let stats = server.shutdown();
     println!(
-        "  latency p50 {:.2} ms  p95 {:.2} ms  mean {:.2} ms  throughput {:.0} img/s  acc {:.3}",
-        p50,
-        p95,
-        mean,
-        man.batch as f64 / (mean / 1e3),
+        "  served {} requests / {} samples in {} micro-batches (occupancy {:.2})",
+        stats.requests, stats.samples, stats.micro_batches, stats.occupancy
+    );
+    println!(
+        "  queue   p50 {:.2} ms  p95 {:.2} ms  |  service p50 {:.2} ms  p95 {:.2} ms",
+        stats.queue.p50_ms, stats.queue.p95_ms, stats.service.p50_ms, stats.service.p95_ms
+    );
+    println!(
+        "  throughput {:.1} samples/ms (busy) / {:.1} samples/ms (wall)  acc {:.3}",
+        stats.busy_samples_per_ms,
+        stats.wall_samples_per_ms,
         correct as f32 / seen as f32
     );
+
+    // served output must be bit-identical to a direct infer of batch 0
+    let b0 = Batcher::eval_batch(eval.as_ref(), man.batch, 0);
+    let direct = model.infer(&out.state.params, &out.state.bn, &b0.x, &out.final_qparams)?;
+    let served0 = served_first_batch.expect("batch 0 was submitted whole");
+    assert_eq!(
+        served0.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        direct.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "served logits must be bit-identical to direct infer"
+    );
+    println!("  bit-parity with direct NativeModel::infer: OK");
 
     // -- 3. deployment-format cross-check ------------------------------------
     // final fc layer: bit-packed sparse matvec vs dense quantized reference
@@ -145,8 +186,8 @@ fn main() -> anyhow::Result<()> {
     let y_sparse = s.matvec(&x);
     let mut y_ref = vec![0.0f32; s.rows];
     for r in 0..s.rows {
-        for c in 0..s.cols {
-            y_ref[r] += dense_q[r * s.cols + c] * x[c];
+        for cc in 0..s.cols {
+            y_ref[r] += dense_q[r * s.cols + cc] * x[cc];
         }
     }
     let max_err = y_sparse

@@ -6,4 +6,6 @@ pub mod scheduler;
 pub mod trainer;
 
 pub use scheduler::LrSchedule;
-pub use trainer::{train, train_via_model, train_with_data, Policy, TrainConfig, TrainOutcome};
+pub use trainer::{
+    train, train_via_model, train_with_data, Policy, ServableModel, TrainConfig, TrainOutcome,
+};

@@ -109,6 +109,39 @@ pub struct TrainOutcome {
     pub final_wordlengths: Vec<u8>,
 }
 
+/// A self-contained export of a finished run — everything the serving
+/// registry needs to freeze and publish the model
+/// ([`ServedModel::from_servable`](crate::serve::ServedModel::from_servable)):
+/// the manifest, the trained float32 master weights and the final runtime
+/// qparams tensor (whose weight rows pin the deployed `<WL, FL>` formats).
+#[derive(Debug, Clone)]
+pub struct ServableModel {
+    /// Serving name (defaults to the run's artifact name).
+    pub name: String,
+    pub manifest: crate::runtime::Manifest,
+    /// Full (kernel, bias) parameter interleaving, trained.
+    pub params: Vec<Vec<f32>>,
+    /// The `[2L, 5]` runtime qparams tensor at the end of the run.
+    pub qparams: Vec<f32>,
+    /// Final per-layer word lengths (reporting/size accounting).
+    pub wordlengths: Vec<u8>,
+}
+
+impl TrainOutcome {
+    /// Export this outcome for serving. `manifest` must be the manifest the
+    /// run trained against (the trainer never owns it — callers hold the
+    /// [`LoadedModel`]).
+    pub fn servable(&self, manifest: &crate::runtime::Manifest) -> ServableModel {
+        ServableModel {
+            name: self.record.name.clone(),
+            manifest: manifest.clone(),
+            params: self.state.params.clone(),
+            qparams: self.final_qparams.clone(),
+            wordlengths: self.final_wordlengths.clone(),
+        }
+    }
+}
+
 /// Pick train + held-out datasets matching the artifact's input signature.
 /// The held-out split shares the task (class templates / files) with the
 /// train split but uses disjoint samples. Real CIFAR is used when

@@ -119,6 +119,22 @@ impl SparseFixedTensor {
         }
     }
 
+    /// Consume the tensor into the compute-ready CSR triple
+    /// `(row_ptr, col_idx, values)` with the stored codes decoded to f32 in
+    /// storage order — the layout the native sparse inference kernel
+    /// ([`sparse_forward_quant_into`]) and the serving snapshot consume.
+    /// The WL-bit packed words are dropped: callers that keep the tensor as
+    /// the storage/deployment representation should use
+    /// [`decode_values_into`](Self::decode_values_into) instead.
+    ///
+    /// [`sparse_forward_quant_into`]: crate::runtime::native::gemm::sparse_forward_quant_into
+    pub fn into_csr_f32(self) -> (Vec<u32>, Vec<u32>, Vec<f32>) {
+        let mut vals = Vec::new();
+        self.decode_values_into(&mut vals);
+        let SparseFixedTensor { row_ptr, col_idx, .. } = self;
+        (row_ptr, col_idx, vals)
+    }
+
     /// y = A x (dense vector input / output).
     pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
         assert_eq!(x.len(), self.cols);
@@ -307,6 +323,23 @@ mod tests {
             for (i, v) in vals.iter().enumerate() {
                 assert_eq!(v.to_bits(), s.value(i).to_bits());
             }
+        }
+    }
+
+    #[test]
+    fn into_csr_f32_matches_storage_order() {
+        let fmt = FixedPointFormat::new(8, 4);
+        let d = random_sparse(9, 14, 0.3, 21);
+        let s = SparseFixedTensor::from_dense(&d, 9, 14, fmt);
+        let mut want = Vec::new();
+        s.decode_values_into(&mut want);
+        let (rp, ci) = (s.row_ptr.clone(), s.col_idx.clone());
+        let (row_ptr, col_idx, vals) = s.into_csr_f32();
+        assert_eq!(row_ptr, rp);
+        assert_eq!(col_idx, ci);
+        assert_eq!(vals.len(), want.len());
+        for (a, b) in vals.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 

@@ -11,8 +11,10 @@
 //! * **L3** — this crate: the execution runtime (PJRT artifacts or the
 //!   native CPU interpreter, see [`runtime`]), the AdaPT precision-switching
 //!   mechanism (PushDown/PushUp, sec. 3.3), the MuPPET + float32 baselines,
-//!   the analytical performance model (sec. 4.1.2) and the experiment
-//!   harness regenerating every table and figure of the paper.
+//!   the batched quantized-inference serving subsystem ([`serve`], the
+//!   deployment workload of sec. 4.2.2), the analytical performance model
+//!   (sec. 4.1.2) and the experiment harness regenerating every table and
+//!   figure of the paper.
 //!
 //! Python never runs on the training path: `make artifacts` once, then the
 //! `adapt` binary is self-contained. See DESIGN.md for the full design
@@ -30,4 +32,5 @@ pub mod muppet;
 pub mod perfmodel;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod util;

@@ -25,6 +25,20 @@
 //!   density `DD`% (e.g. `_d30` is a 0.30 non-zero fraction);
 //! * `sparse_crossover_density` — highest measured density where the
 //!   sparse kernel still beats the dense one.
+//!
+//! Since the serving subsystem exists, a second measured source sits next
+//! to the kernel rates: `benches/serve.rs` drives the full
+//! registry→queue→worker pipeline and records end-to-end serving
+//! throughput per `(max_batch, workers)` cell into `BENCH_serve.json`
+//! (`serve_samples_per_ms_b<B>_w<W>` derived entries, plus the
+//! cached-vs-rebuilt pack ablation `serve_pack_cache_speedup`).
+//! [`ServeCalibration`] parses those — or folds a live
+//! [`ServeStatsSnapshot`](crate::serve::ServeStatsSnapshot) via
+//! [`ServeRate::from_snapshot`] — so the serving stack's delivered rate can
+//! be compared against the raw kernel rate it schedules
+//! ([`ServeCalibration::kernel_fraction`]): the gap is pure
+//! batching/queueing/scatter overhead, which no WL or sparsity model
+//! accounts for.
 
 use std::path::Path;
 
@@ -159,6 +173,117 @@ impl KernelCalibration {
     }
 }
 
+/// One measured serving-throughput cell: end-to-end samples/ms through the
+/// registry→queue→worker pipeline at a `(max_batch, workers)` setting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeRate {
+    pub max_batch: u32,
+    pub workers: u32,
+    pub samples_per_ms: f64,
+}
+
+impl ServeRate {
+    /// Fold a live recorder snapshot into a calibration row (wall-clock
+    /// throughput — the externally observable rate, matching what the
+    /// bench records).
+    pub fn from_snapshot(
+        max_batch: u32,
+        workers: u32,
+        snap: &crate::serve::ServeStatsSnapshot,
+    ) -> ServeRate {
+        ServeRate {
+            max_batch,
+            workers,
+            samples_per_ms: snap.wall_samples_per_ms,
+        }
+    }
+}
+
+/// Measured serving throughput, parsed from `BENCH_serve.json` (module
+/// docs) or accumulated from live [`ServeRate`] rows.
+#[derive(Debug, Clone)]
+pub struct ServeCalibration {
+    /// `(max_batch, workers)` cells, as measured.
+    pub rates: Vec<ServeRate>,
+    /// Cached-snapshot vs rebuild-per-call ablation factor, when the bench
+    /// recorded it (how much the persistent pack/CSR cache buys).
+    pub pack_cache_speedup: Option<f64>,
+}
+
+impl ServeCalibration {
+    /// Parse a `BENCH_serve.json` produced by `cargo bench --bench serve`:
+    /// requires at least one `serve_samples_per_ms_b<B>_w<W>` derived
+    /// entry.
+    pub fn from_bench_json(path: &Path) -> Result<ServeCalibration> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("parsing bench json: {e:?}"))?;
+        let derived = json.req("derived").map_err(|e| anyhow!("{e:?}"))?;
+        let Json::Obj(map) = derived else {
+            return Err(anyhow!("'derived' is not an object"));
+        };
+        let mut rates = Vec::new();
+        for (k, v) in map {
+            if let Some(suffix) = k.strip_prefix("serve_samples_per_ms_b") {
+                let (b_str, w_str) = suffix
+                    .split_once("_w")
+                    .ok_or_else(|| anyhow!("bad serve rate key '{k}'"))?;
+                let max_batch: u32 = b_str
+                    .parse()
+                    .with_context(|| format!("bad max_batch in '{k}'"))?;
+                let workers: u32 = w_str
+                    .parse()
+                    .with_context(|| format!("bad workers in '{k}'"))?;
+                let samples_per_ms = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("'{k}' is not a number"))?;
+                rates.push(ServeRate {
+                    max_batch,
+                    workers,
+                    samples_per_ms,
+                });
+            }
+        }
+        if rates.is_empty() {
+            return Err(anyhow!("no serve_samples_per_ms_b*_w* entries"));
+        }
+        rates.sort_by_key(|r| (r.max_batch, r.workers));
+        let pack_cache_speedup = map.get("serve_pack_cache_speedup").and_then(|v| v.as_f64());
+        Ok(ServeCalibration {
+            rates,
+            pack_cache_speedup,
+        })
+    }
+
+    /// The best measured cell (highest throughput). `None` never occurs for
+    /// parsed calibrations (the constructor rejects empty rate sets).
+    pub fn best(&self) -> Option<&ServeRate> {
+        self.rates.iter().max_by(|a, b| {
+            a.samples_per_ms
+                .partial_cmp(&b.samples_per_ms)
+                .expect("finite serve rates")
+        })
+    }
+
+    /// The serving stack's best delivered rate expressed in the kernel
+    /// calibration's units (MAdds/ms, via the model's per-sample MAdds),
+    /// divided by the measured dense kernel rate: the fraction of raw
+    /// kernel throughput that survives batching, queueing and scatter. A
+    /// value near 1.0 means the serving layer is free; well above 1.0
+    /// means sparse dispatch is winning back more than the pipeline costs.
+    pub fn kernel_fraction(
+        &self,
+        kernels: &KernelCalibration,
+        madds_per_sample: f64,
+    ) -> Option<f64> {
+        if kernels.dense_madds_per_ms <= 0.0 || madds_per_sample <= 0.0 {
+            return None;
+        }
+        let best = self.best()?;
+        Some(best.samples_per_ms * madds_per_sample / kernels.dense_madds_per_ms)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -252,6 +377,58 @@ mod tests {
             .unwrap();
         assert!((su_sparse - 4.0).abs() < 1e-9, "{su_sparse}");
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn serve_calibration_parses_and_compares() {
+        let dir = std::env::temp_dir().join("adapt_test_calibration_serve");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_serve.json");
+        std::fs::write(
+            &path,
+            r#"{
+  "derived": {
+    "serve_samples_per_ms_b1_w1": 2.0,
+    "serve_samples_per_ms_b32_w1": 8.0,
+    "serve_samples_per_ms_b32_w4": 20.0,
+    "serve_pack_cache_speedup": 3.5
+  },
+  "results": {},
+  "unit": "ms_per_iter"
+}"#,
+        )
+        .unwrap();
+        let cal = ServeCalibration::from_bench_json(&path).unwrap();
+        assert_eq!(cal.rates.len(), 3);
+        assert_eq!(cal.pack_cache_speedup, Some(3.5));
+        let best = cal.best().unwrap();
+        assert_eq!((best.max_batch, best.workers), (32, 4));
+        // kernel comparison: 20 samples/ms × 100 madds/sample over a
+        // 1000 madds/ms dense kernel -> the stack delivers 2x the dense
+        // kernel rate (sparse dispatch winning back more than overhead)
+        let kpath = write_bench("adapt_test_calibration_serve_k");
+        let kc = KernelCalibration::from_bench_json(&kpath).unwrap();
+        let frac = cal.kernel_fraction(&kc, 100.0).unwrap();
+        assert!((frac - 2.0).abs() < 1e-12, "{frac}");
+        std::fs::remove_file(&kpath).ok();
+
+        // no serve entries at all -> error, never an empty calibration
+        std::fs::write(&path, r#"{"derived": {"other": 1.0}, "results": {}}"#).unwrap();
+        assert!(ServeCalibration::from_bench_json(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn serve_rate_from_snapshot_uses_wall_rate() {
+        let snap = crate::serve::ServeStatsSnapshot {
+            samples: 100,
+            wall_samples_per_ms: 12.5,
+            ..Default::default()
+        };
+        let r = ServeRate::from_snapshot(16, 2, &snap);
+        assert_eq!(r.max_batch, 16);
+        assert_eq!(r.workers, 2);
+        assert_eq!(r.samples_per_ms, 12.5);
     }
 
     #[test]

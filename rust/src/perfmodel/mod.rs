@@ -34,7 +34,7 @@
 
 pub mod calibration;
 
-pub use calibration::KernelCalibration;
+pub use calibration::{KernelCalibration, ServeCalibration, ServeRate};
 
 use crate::metrics::RunRecord;
 use crate::runtime::manifest::LayerDesc;

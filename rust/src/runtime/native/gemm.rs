@@ -91,6 +91,21 @@ fn reuse(buf: &mut Vec<f32>, n: usize) {
 // packing
 // ---------------------------------------------------------------------------
 
+/// Length of the left-operand panel [`pack_a_rows`] produces for an m×k
+/// operand (⌈m/MR⌉ zero-padded strips of MR rows). Callers that snapshot a
+/// panel for cross-call reuse (the serving pack cache) size and validate
+/// against this.
+pub fn packed_a_len(m: usize, k: usize) -> usize {
+    m.div_ceil(MR) * k * MR
+}
+
+/// Length of the right-operand panel [`pack_b_cols`] produces for a k×n
+/// operand (⌈n/NR⌉ zero-padded strips of NR columns). A frozen weight panel
+/// of this length is the dense half of the persistent pack/CSR cache.
+pub fn packed_b_len(k: usize, n: usize) -> usize {
+    n.div_ceil(NR) * k * NR
+}
+
 /// Pack row-major `a` (m×k) into ⌈m/MR⌉ strips of MR rows, depth-major:
 /// `out[(s·k + kk)·MR + mr] = a[(s·MR + mr)·k + kk]`; rows ≥ m are zero.
 pub fn pack_a_rows(a: &[f32], m: usize, k: usize, out: &mut Vec<f32>) {
@@ -282,6 +297,8 @@ pub fn gemm_packed_into(
     out: &mut [f32],
 ) {
     assert_eq!(out.len(), mdim * ndim, "gemm output shape");
+    debug_assert_eq!(apack.len(), packed_a_len(mdim, kdim), "packed A panel length");
+    debug_assert_eq!(bpack.len(), packed_b_len(kdim, ndim), "packed B panel length");
     if mdim == 0 || ndim == 0 {
         return;
     }
@@ -325,6 +342,8 @@ pub fn gemm_quant_into(
 ) -> (u64, f32) {
     assert_eq!(z.len(), mdim * ndim, "gemm z shape");
     assert_eq!(q.len(), mdim * ndim, "gemm q shape");
+    debug_assert_eq!(apack.len(), packed_a_len(mdim, kdim), "packed A panel length");
+    debug_assert_eq!(bpack.len(), packed_b_len(kdim, ndim), "packed B panel length");
     if mdim == 0 || ndim == 0 {
         return (0, 0.0);
     }
@@ -542,6 +561,7 @@ mod tests {
         let mut out = Vec::new();
         pack_a_rows(&a, 5, 3, &mut out);
         assert_eq!(out.len(), 2 * 3 * MR);
+        assert_eq!(out.len(), packed_a_len(5, 3));
         assert_eq!(out[0], a[0]); // (s0, k0, mr0)
         assert_eq!(out[MR], a[1]); // (s0, k1, mr0)
         assert_eq!(out[1], a[3]); // (s0, k0, mr1) = row 1
@@ -552,6 +572,7 @@ mod tests {
         let b: Vec<f32> = (0..30).map(|i| i as f32).collect();
         pack_b_cols(&b, 3, 10, &mut out);
         assert_eq!(out.len(), 2 * 3 * NR);
+        assert_eq!(out.len(), packed_b_len(3, 10));
         assert_eq!(out[0], b[0]);
         assert_eq!(out[NR], b[10]); // (t0, k1, jr0)
         assert_eq!(out[3 * NR], b[8]); // strip 1, col 8

@@ -38,8 +38,12 @@
 //! rewrite changed no numerics — the committed golden CEs are untouched.
 //! Inference additionally dispatches layers whose measured quantized
 //! density falls at or below [`sparse_crossover()`] onto a CSR kernel that
-//! skips the zeros PushDown produced (see the `step` module docs and the
-//! ARCHITECTURE.md kernel-design section).
+//! skips the zeros PushDown produced, and since the serving PR the chosen
+//! packs live in a persistent cross-call [`ModelSnapshot`] cache — packs
+//! are rebuilt only when the kernel bits, the weight qparams rows or the
+//! crossover change, never per call (see the `step` module docs and the
+//! ARCHITECTURE.md kernel-design + serving sections). The same snapshot
+//! type is the frozen-model unit of the [`crate::serve`] subsystem.
 //!
 //! # Scope
 //!
@@ -78,7 +82,10 @@ pub mod ops;
 mod step;
 
 pub use ops::{fake_quant, fake_quant_ste, QRow};
-pub use step::{sparse_crossover, NativeModel, SPARSE_CROSSOVER_DEFAULT};
+pub use step::{
+    mlp_dims, sparse_crossover, InferScratch, ModelSnapshot, NativeModel,
+    SPARSE_CROSSOVER_DEFAULT,
+};
 
 use std::path::Path;
 use std::sync::Arc;

@@ -21,26 +21,44 @@
 //! # Scratch arena
 //!
 //! Every intermediate tensor — quantized kernels, STE masks, the activation
-//! chain, gradient ping-pong buffers, GEMM packing panels, the sparse CSR
-//! packs — lives in a per-model [`StepArena`] behind a mutex, so repeated
-//! steps/infers perform no per-call buffer allocations once warm (measured
-//! by the alloc-churn ablation in `benches/native.rs`). Only the manifest
-//! I/O contract still allocates: inputs are unpacked from `Literal`s and
-//! outputs are owned `Vec`s by definition.
+//! chain, gradient ping-pong buffers, GEMM packing panels — lives in a
+//! per-model [`StepArena`] behind a mutex, so repeated steps/infers perform
+//! no per-call buffer allocations once warm (measured by the alloc-churn
+//! ablation in `benches/native.rs`). Only the manifest I/O contract still
+//! allocates: inputs are unpacked from `Literal`s and outputs are owned
+//! `Vec`s by definition.
 //!
-//! # Sparse inference dispatch
+//! # The persistent pack/CSR cache ([`ModelSnapshot`])
 //!
-//! At `infer` time the weights are frozen, so each layer's quantized kernel
-//! is packed ONCE per call: when the measured non-zero fraction (the
-//! paper's sp, counted exactly during the fake-quant pass) is at or below
-//! [`sparse_crossover()`], the kernel is converted to CSR through
+//! At `infer` time the weights are frozen for the duration of the call, so
+//! each layer's quantized kernel can be packed ONCE — into the blocked-GEMM
+//! panel layout, or, when the measured non-zero fraction (the paper's sp,
+//! counted exactly during the fake-quant pass) is at or below
+//! [`sparse_crossover()`], into CSR through
 //! [`SparseFixedTensor::from_quantized`] (WL-bit packed codes — the
-//! deployment format — decoded once for compute) and the layer runs on
-//! [`gemm::sparse_forward_quant_into`], skipping every zero weight. Denser
-//! layers stay on the dense blocked path. This is where the trained
-//! sparsity the controllers measure becomes wall-clock inference speedup;
-//! the crossover default comes from `BENCH_native.json` and can be tuned
-//! per deployment with `ADAPT_SPARSE_CROSSOVER`.
+//! deployment format — decoded once for compute). A [`ModelSnapshot`] holds
+//! exactly those frozen per-layer packs and runs batched forward passes of
+//! ANY batch size over them; it is the unit the serving subsystem
+//! ([`crate::serve`]) registers and the structure `NativeModel`'s own infer
+//! path caches ACROSS calls:
+//!
+//! * the cached snapshot is keyed on the exact bits of every kernel, every
+//!   weight qparams row and the active crossover, so a hit is only possible
+//!   for bit-identical inputs — **stale packs are impossible by
+//!   construction** (a precision switch changes the qparams row bits, a
+//!   weight update changes the kernel bits; either forces a rebuild);
+//! * the training step drops the cache eagerly after its ASGD update (its
+//!   whole purpose is to change the weights), so train→infer alternation
+//!   never pays the O(model) key comparison for a doomed match.
+//!
+//! Biases and activation qparams rows are NOT baked into the snapshot: they
+//! enter the fused epilogue directly from each call's inputs, so the packs
+//! stay valid under bias-only or activation-row-only changes.
+//!
+//! This is where the trained sparsity the controllers measure becomes
+//! wall-clock inference speedup; the crossover default comes from
+//! `BENCH_native.json` and can be tuned per deployment with
+//! `ADAPT_SPARSE_CROSSOVER`.
 //!
 //! One deliberate substitution: training quantization uses deterministic
 //! nearest rounding (round-half-even) instead of the stochastic rounding of
@@ -80,14 +98,313 @@ pub fn sparse_crossover() -> f32 {
         .unwrap_or(SPARSE_CROSSOVER_DEFAULT)
 }
 
-/// One layer's frozen sparse kernel, decoded for compute (see the module
-/// docs): CSR over the fan-in rows with f32 values.
+/// Validate that `man` describes a model the native interpreter supports —
+/// an all-dense, BN-free MLP with the canonical (kernel, bias) parameter
+/// interleaving — and lower it to the per-layer `(fan_in, fan_out)` view.
+/// Shared by [`NativeModel::from_manifest`] and the serving registry's
+/// [`freeze`](crate::serve::ServedModel::freeze), which snapshots models
+/// without instantiating an interpreter.
+pub fn mlp_dims(man: &Manifest) -> Result<Vec<(usize, usize)>> {
+    let l = man.num_layers;
+    if l == 0 {
+        return Err(anyhow!("manifest {} has no quantizable layers", man.name));
+    }
+    if !man.bn_state.is_empty() {
+        return Err(anyhow!(
+            "native backend supports only BN-free MLPs ({} bn tensors in {})",
+            man.bn_state.len(),
+            man.name
+        ));
+    }
+    if man.params.len() != 2 * l {
+        return Err(anyhow!(
+            "native backend expects (kernel, bias) per layer: {} params for {l} layers",
+            man.params.len()
+        ));
+    }
+    let mut dims = Vec::with_capacity(l);
+    let mut d_in = man.input_shape.iter().product::<usize>();
+    for i in 0..l {
+        let kind = &man.layers[i].kind;
+        if kind != "dense" {
+            return Err(anyhow!(
+                "native backend supports only dense layers; layer {i} of {} is {kind:?}",
+                man.name
+            ));
+        }
+        let kernel = &man.params[2 * i];
+        let bias = &man.params[2 * i + 1];
+        if !kernel.quantizable || kernel.layer != i as i64 || kernel.shape.len() != 2 {
+            return Err(anyhow!("param {} is not the layer-{i} dense kernel", kernel.name));
+        }
+        let (fan_in, fan_out) = (kernel.shape[0], kernel.shape[1]);
+        if fan_in != d_in {
+            return Err(anyhow!("layer {i} fan_in {fan_in} != upstream width {d_in}"));
+        }
+        if bias.quantizable || bias.shape != vec![fan_out] {
+            return Err(anyhow!("param {} is not the layer-{i} bias", bias.name));
+        }
+        dims.push((fan_in, fan_out));
+        d_in = fan_out;
+    }
+    if d_in != man.classes {
+        return Err(anyhow!("final layer width {d_in} != {} classes", man.classes));
+    }
+    Ok(dims)
+}
+
+/// One layer's frozen kernel inside a [`ModelSnapshot`]: either the
+/// blocked-GEMM right-operand panel or the decoded CSR triple, chosen at
+/// build time from the measured density.
+pub(crate) enum SnapKernel {
+    Dense {
+        panel: Vec<f32>,
+    },
+    Csr {
+        row_ptr: Vec<u32>,
+        col_idx: Vec<u32>,
+        vals: Vec<f32>,
+    },
+}
+
+/// A frozen, compute-ready snapshot of a model's quantized kernels: the
+/// persistent pack/CSR cache (module docs). Built once per (weights,
+/// weight-qparams, crossover) combination; every forward pass afterwards
+/// reuses the packs. Batch size is a per-call property — the same snapshot
+/// serves single-sample requests and coalesced micro-batches, and because
+/// every kernel computes each output row as an independent ascending-depth
+/// fold, the per-sample results are bit-identical for ANY batch
+/// composition (the serving determinism anchor, asserted in
+/// `rust/tests/serve.rs`).
+pub struct ModelSnapshot {
+    pub(crate) dims: Vec<(usize, usize)>,
+    pub(crate) kernels: Vec<SnapKernel>,
+    /// Measured per-layer density (non-zero fraction) at build time.
+    pub(crate) density: Vec<f32>,
+}
+
+/// Reusable scratch for snapshot forward passes: the packed activation
+/// panel, the pre-quant buffer and the activation ping-pong pair. One per
+/// serving worker (or per arena); buffers grow to the largest layer and are
+/// then reused allocation-free.
 #[derive(Default)]
-pub(crate) struct CsrPack {
-    active: bool,
-    row_ptr: Vec<u32>,
-    col_idx: Vec<u32>,
-    vals: Vec<f32>,
+pub struct InferScratch {
+    apack: Vec<f32>,
+    z: Vec<f32>,
+    ping: Vec<f32>,
+    pong: Vec<f32>,
+}
+
+impl ModelSnapshot {
+    /// Quantize `kernels[i]` under qparams row i and pack each layer once:
+    /// CSR when the row is enabled, describes a true `<WL, FL>` grid and
+    /// the measured density is at or below `crossover`; the dense blocked
+    /// panel otherwise. `dims` is the [`mlp_dims`] lowering; `qparams` is
+    /// the full `[2L, 5]` tensor (only the L weight rows are consumed
+    /// here — activation rows are read per forward call).
+    pub fn build(
+        dims: &[(usize, usize)],
+        kernels: &[&[f32]],
+        qparams: &[f32],
+        crossover: f32,
+    ) -> Result<ModelSnapshot> {
+        let l = dims.len();
+        if kernels.len() != l {
+            return Err(anyhow!("snapshot: {} kernels for {l} layers", kernels.len()));
+        }
+        if qparams.len() < 2 * l * 5 {
+            return Err(anyhow!("snapshot: qparams len {} < {}", qparams.len(), 2 * l * 5));
+        }
+        let mut wq: Vec<f32> = Vec::new();
+        let mut packed = Vec::with_capacity(l);
+        let mut density = Vec::with_capacity(l);
+        for i in 0..l {
+            let (di, do_) = dims[i];
+            let w = kernels[i];
+            if w.len() != di * do_ {
+                return Err(anyhow!(
+                    "snapshot: layer {i} kernel has {} elems, dims say {di}x{do_}",
+                    w.len()
+                ));
+            }
+            let row = ops::QRow::parse(qparams, i)?;
+            wq.clear();
+            wq.resize(w.len(), 0.0);
+            let zeros = ops::fake_quant(w, &row, &mut wq);
+            let dens = if w.is_empty() {
+                0.0
+            } else {
+                1.0 - zeros as f32 / w.len() as f32
+            };
+            density.push(dens);
+            let mut kernel = None;
+            // crossover == 0 fully disables the sparse path (the documented
+            // contract) — without the strict guard a 100%-pruned layer
+            // (density exactly 0.0) would still dispatch CSR
+            if row.enable && crossover > 0.0 && dens <= crossover {
+                let arr: [f32; 5] = qparams[i * 5..(i + 1) * 5]
+                    .try_into()
+                    .expect("qparams row width");
+                // only rows describing a true <WL,FL> grid can be packed to
+                // WL-bit CSR codes; others (disabled/raw rows) stay dense
+                if let Some((fmt, true)) = FixedPointFormat::from_qparams_row(&arr) {
+                    let st = SparseFixedTensor::from_quantized(&wq, di, do_, fmt);
+                    let (row_ptr, col_idx, vals) = st.into_csr_f32();
+                    kernel = Some(SnapKernel::Csr { row_ptr, col_idx, vals });
+                }
+            }
+            packed.push(kernel.unwrap_or_else(|| {
+                let mut panel = Vec::new();
+                gemm::pack_b_cols(&wq, di, do_, &mut panel);
+                SnapKernel::Dense { panel }
+            }));
+        }
+        Ok(ModelSnapshot {
+            dims: dims.to_vec(),
+            kernels: packed,
+            density,
+        })
+    }
+
+    /// Number of layers.
+    pub fn num_layers(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Input width (layer-0 fan-in).
+    pub fn d_in(&self) -> usize {
+        self.dims[0].0
+    }
+
+    /// Output width (last-layer fan-out).
+    pub fn d_out(&self) -> usize {
+        self.dims[self.dims.len() - 1].1
+    }
+
+    /// Measured per-layer density (non-zero fraction) at build time.
+    pub fn layer_density(&self) -> &[f32] {
+        &self.density
+    }
+
+    /// Does layer `i` run on the sparse CSR kernel?
+    pub fn layer_is_sparse(&self, i: usize) -> bool {
+        matches!(self.kernels[i], SnapKernel::Csr { .. })
+    }
+
+    /// Batched quantized forward over the frozen packs: `b` samples from
+    /// `x` (row-major `b × d_in`) into `out` (cleared and filled with the
+    /// `b × d_out` logits). `biases` is one slice per layer; `qparams` the
+    /// full `[2L, 5]` tensor (activation rows `L..2L` drive the fused
+    /// fake-quant epilogues). Any `b ≥ 1` works — the fixed-batch manifest
+    /// contract applies to the `ExecModule` wrapper, not to the snapshot.
+    ///
+    /// Bit-identical to `NativeModel`'s infer on the same weights/qparams
+    /// for every sample row, for any worker count and any batch
+    /// composition (see the type docs).
+    pub fn infer_into(
+        &self,
+        pool: &QuantPool,
+        biases: &[&[f32]],
+        qparams: &[f32],
+        x: &[f32],
+        b: usize,
+        s: &mut InferScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let l = self.dims.len();
+        if b == 0 {
+            return Err(anyhow!("snapshot infer: empty batch"));
+        }
+        if x.len() != b * self.d_in() {
+            return Err(anyhow!(
+                "snapshot infer: x has {} elems for batch {b} × fan_in {}",
+                x.len(),
+                self.d_in()
+            ));
+        }
+        if biases.len() != l {
+            return Err(anyhow!("snapshot infer: {} biases for {l} layers", biases.len()));
+        }
+        if qparams.len() < 2 * l * 5 {
+            return Err(anyhow!("snapshot infer: qparams len {}", qparams.len()));
+        }
+        for i in 0..l {
+            let (di, do_) = self.dims[i];
+            if biases[i].len() != do_ {
+                return Err(anyhow!("snapshot infer: layer {i} bias width"));
+            }
+            let row = ops::QRow::parse(qparams, l + i)?;
+            let relu = i + 1 < l;
+            let src: &[f32] = if i == 0 { x } else { &s.ping };
+            let dst: &mut Vec<f32> = if i + 1 == l { &mut *out } else { &mut s.pong };
+            reuse(dst, b * do_);
+            reuse(&mut s.z, b * do_);
+            match &self.kernels[i] {
+                SnapKernel::Dense { panel } => {
+                    gemm::pack_a_rows(src, b, di, &mut s.apack);
+                    gemm::gemm_quant_into(
+                        pool, b, do_, di, &s.apack, panel, biases[i], relu, &row, &mut s.z,
+                        dst, None,
+                    );
+                }
+                SnapKernel::Csr { row_ptr, col_idx, vals } => {
+                    gemm::sparse_forward_quant_into(
+                        pool, src, b, di, do_, row_ptr, col_idx, vals, biases[i], relu, &row,
+                        &mut s.z, dst,
+                    );
+                }
+            }
+            if i + 1 < l {
+                std::mem::swap(&mut s.ping, &mut s.pong);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The arena-resident cross-call cache entry: a snapshot plus the exact
+/// bits it was built from (crossover, weight qparams rows, kernels — in
+/// that order). A cache hit requires every bit to match, so serving stale
+/// packs after a weight update or precision switch is impossible by
+/// construction.
+pub(crate) struct PackCacheEntry {
+    key: Vec<u32>,
+    snap: ModelSnapshot,
+}
+
+fn cache_key_build(crossover: f32, kernels: &[&[f32]], qparams: &[f32], l: usize) -> Vec<u32> {
+    let n: usize = 1 + 5 * l + kernels.iter().map(|k| k.len()).sum::<usize>();
+    let mut key = Vec::with_capacity(n);
+    key.push(crossover.to_bits());
+    for i in 0..l {
+        for v in &qparams[i * 5..(i + 1) * 5] {
+            key.push(v.to_bits());
+        }
+        for v in kernels[i] {
+            key.push(v.to_bits());
+        }
+    }
+    key
+}
+
+fn cache_key_matches(key: &[u32], crossover: f32, kernels: &[&[f32]], qparams: &[f32], l: usize) -> bool {
+    let mut it = key.iter();
+    if it.next().copied() != Some(crossover.to_bits()) {
+        return false;
+    }
+    for i in 0..l {
+        for v in &qparams[i * 5..(i + 1) * 5] {
+            if it.next().copied() != Some(v.to_bits()) {
+                return false;
+            }
+        }
+        for v in kernels[i] {
+            if it.next().copied() != Some(v.to_bits()) {
+                return false;
+            }
+        }
+    }
+    it.next().is_none()
 }
 
 /// Reusable per-model scratch: all intermediate tensors of the train/infer
@@ -95,14 +412,14 @@ pub(crate) struct CsrPack {
 /// so steady-state steps allocate nothing here.
 #[derive(Default)]
 pub(crate) struct StepArena {
-    /// GEMM packing panels (both operand sides).
+    /// GEMM packing panels (both operand sides), training path.
     pack: PackBuf,
-    /// Per-layer quantized kernels.
+    /// Per-layer quantized kernels (training).
     wq: Vec<Vec<f32>>,
     /// Per-layer weight STE masks (training).
     mask_w: Vec<Vec<f32>>,
     /// Activation chain: `acts[0]` the input, `acts[i+1]` layer i's
-    /// quantized output.
+    /// quantized output (training keeps the whole chain for backward).
     acts: Vec<Vec<f32>>,
     /// Pre-quant (post-bias/ReLU) activations, training only.
     pre_q: Vec<Vec<f32>>,
@@ -114,10 +431,11 @@ pub(crate) struct StepArena {
     /// Weight/bias gradient buffers.
     dw: Vec<f32>,
     db: Vec<f32>,
-    /// Pre-quant activation buffer for inference (no STE state kept).
-    z_infer: Vec<f32>,
-    /// Per-layer sparse kernels (inference only; `active` gates dispatch).
-    csr: Vec<CsrPack>,
+    /// Snapshot forward scratch (inference).
+    infer: InferScratch,
+    /// The persistent cross-call pack/CSR cache (module docs). `None`
+    /// until the first infer and after every train step.
+    cache: Option<PackCacheEntry>,
 }
 
 /// Grow a slot vector to `n` default entries without dropping existing
@@ -152,55 +470,9 @@ pub struct NativeModel {
 }
 
 impl NativeModel {
-    /// Validate that `man` describes a model the interpreter supports — an
-    /// all-dense, BN-free MLP with the canonical (kernel, bias) parameter
-    /// interleaving — and lower it.
+    /// Validate and lower `man` (see [`mlp_dims`]).
     pub fn from_manifest(man: Manifest, pool: Arc<QuantPool>) -> Result<NativeModel> {
-        let l = man.num_layers;
-        if l == 0 {
-            return Err(anyhow!("manifest {} has no quantizable layers", man.name));
-        }
-        if !man.bn_state.is_empty() {
-            return Err(anyhow!(
-                "native backend supports only BN-free MLPs ({} bn tensors in {})",
-                man.bn_state.len(),
-                man.name
-            ));
-        }
-        if man.params.len() != 2 * l {
-            return Err(anyhow!(
-                "native backend expects (kernel, bias) per layer: {} params for {l} layers",
-                man.params.len()
-            ));
-        }
-        let mut dims = Vec::with_capacity(l);
-        let mut d_in = man.input_shape.iter().product::<usize>();
-        for i in 0..l {
-            let kind = &man.layers[i].kind;
-            if kind != "dense" {
-                return Err(anyhow!(
-                    "native backend supports only dense layers; layer {i} of {} is {kind:?}",
-                    man.name
-                ));
-            }
-            let kernel = &man.params[2 * i];
-            let bias = &man.params[2 * i + 1];
-            if !kernel.quantizable || kernel.layer != i as i64 || kernel.shape.len() != 2 {
-                return Err(anyhow!("param {} is not the layer-{i} dense kernel", kernel.name));
-            }
-            let (fan_in, fan_out) = (kernel.shape[0], kernel.shape[1]);
-            if fan_in != d_in {
-                return Err(anyhow!("layer {i} fan_in {fan_in} != upstream width {d_in}"));
-            }
-            if bias.quantizable || bias.shape != vec![fan_out] {
-                return Err(anyhow!("param {} is not the layer-{i} bias", bias.name));
-            }
-            dims.push((fan_in, fan_out));
-            d_in = fan_out;
-        }
-        if d_in != man.classes {
-            return Err(anyhow!("final layer width {d_in} != {} classes", man.classes));
-        }
+        let dims = mlp_dims(&man)?;
         Ok(NativeModel {
             man,
             dims,
@@ -209,26 +481,22 @@ impl NativeModel {
         })
     }
 
-    /// Quantized forward pass shared by train and infer, entirely on arena
-    /// buffers: expects `ar.wq` filled per layer and `ar.acts[0]` holding
-    /// the input batch; leaves `ar.acts[i+1]` holding layer i's quantized
-    /// output and (when training) `ar.pre_q`/`ar.mask_a` the STE state.
-    /// Appends max |z| per layer to `act_absmax`. Inference dispatches each
-    /// layer to the dense blocked or sparse kernel per `ar.csr[i].active`.
-    fn forward_arena(
+    /// Training forward pass, entirely on arena buffers: expects `ar.wq`
+    /// filled per layer and `ar.acts[0]` holding the input batch; leaves
+    /// `ar.acts[i+1]` holding layer i's quantized output and
+    /// `ar.pre_q`/`ar.mask_a` the STE state. Appends max |z| per layer to
+    /// `act_absmax`.
+    fn forward_train_arena(
         &self,
         ar: &mut StepArena,
         biases: &[&[f32]],
         qparams: &[f32],
         b: usize,
-        for_training: bool,
         act_absmax: &mut Vec<f32>,
     ) -> Result<()> {
         let l = self.dims.len();
-        if for_training {
-            ensure_slots(&mut ar.pre_q, l);
-            ensure_slots(&mut ar.mask_a, l);
-        }
+        ensure_slots(&mut ar.pre_q, l);
+        ensure_slots(&mut ar.mask_a, l);
         for i in 0..l {
             let (di, do_) = self.dims[i];
             let row = ops::QRow::parse(qparams, l + i)?;
@@ -237,67 +505,25 @@ impl NativeModel {
             let x_in: &[f32] = &head[i];
             let out = &mut tail[0];
             reuse(out, b * do_);
-            let use_sparse = !for_training && ar.csr[i].active;
-            let absmax = if use_sparse {
-                let csr = &ar.csr[i];
-                reuse(&mut ar.z_infer, b * do_);
-                let (_zeros, mx) = gemm::sparse_forward_quant_into(
-                    &self.pool,
-                    x_in,
-                    b,
-                    di,
-                    do_,
-                    &csr.row_ptr,
-                    &csr.col_idx,
-                    &csr.vals,
-                    biases[i],
-                    relu,
-                    &row,
-                    &mut ar.z_infer,
-                    out,
-                );
-                mx
-            } else {
-                gemm::pack_a_rows(x_in, b, di, &mut ar.pack.a);
-                gemm::pack_b_cols(&ar.wq[i], di, do_, &mut ar.pack.b);
-                if for_training {
-                    reuse(&mut ar.pre_q[i], b * do_);
-                    reuse(&mut ar.mask_a[i], b * do_);
-                    let (_zeros, mx) = gemm::gemm_quant_into(
-                        &self.pool,
-                        b,
-                        do_,
-                        di,
-                        &ar.pack.a,
-                        &ar.pack.b,
-                        biases[i],
-                        relu,
-                        &row,
-                        &mut ar.pre_q[i],
-                        out,
-                        Some(&mut ar.mask_a[i]),
-                    );
-                    mx
-                } else {
-                    reuse(&mut ar.z_infer, b * do_);
-                    let (_zeros, mx) = gemm::gemm_quant_into(
-                        &self.pool,
-                        b,
-                        do_,
-                        di,
-                        &ar.pack.a,
-                        &ar.pack.b,
-                        biases[i],
-                        relu,
-                        &row,
-                        &mut ar.z_infer,
-                        out,
-                        None,
-                    );
-                    mx
-                }
-            };
-            act_absmax.push(absmax);
+            gemm::pack_a_rows(x_in, b, di, &mut ar.pack.a);
+            gemm::pack_b_cols(&ar.wq[i], di, do_, &mut ar.pack.b);
+            reuse(&mut ar.pre_q[i], b * do_);
+            reuse(&mut ar.mask_a[i], b * do_);
+            let (_zeros, mx) = gemm::gemm_quant_into(
+                &self.pool,
+                b,
+                do_,
+                di,
+                &ar.pack.a,
+                &ar.pack.b,
+                biases[i],
+                relu,
+                &row,
+                &mut ar.pre_q[i],
+                out,
+                Some(&mut ar.mask_a[i]),
+            );
+            act_absmax.push(mx);
         }
         Ok(())
     }
@@ -411,7 +637,7 @@ impl ExecModule for NativeTrainStep {
             a0.extend_from_slice(&x);
         }
         let mut act_absmax = Vec::with_capacity(l);
-        m.forward_arena(ar, &biases, &qparams, b, true, &mut act_absmax)?;
+        m.forward_train_arena(ar, &biases, &qparams, b, &mut act_absmax)?;
 
         // -- 3. loss ------------------------------------------------------
         let c = m.man.classes;
@@ -476,6 +702,11 @@ impl ExecModule for NativeTrainStep {
             }
         }
 
+        // the step's whole purpose is to move the weights: drop the infer
+        // pack cache now so the next infer rebuilds without first paying a
+        // full key comparison that is doomed to miss
+        ar.cache = None;
+
         // -- 6. outputs in manifest order ---------------------------------
         let mut outs: Vec<Vec<f32>> = Vec::with_capacity(3 * l + 7);
         outs.extend(params);
@@ -493,9 +724,10 @@ impl ExecModule for NativeTrainStep {
 }
 
 /// The native inference pass (deterministic NR quantization, the "deployed
-/// on ASIC" path of sec. 4.2.2) behind the [`ExecModule`] contract. Each
-/// layer's frozen quantized kernel is packed once per call and dispatched
-/// dense-blocked or sparse per the measured sp row (module docs).
+/// on ASIC" path of sec. 4.2.2) behind the [`ExecModule`] contract. Runs
+/// over the persistent pack/CSR cache: each layer's frozen quantized kernel
+/// is packed once per (weights, weight-qparams, crossover) combination and
+/// reused across calls until any of those bits change (module docs).
 pub(crate) struct NativeInfer(pub(crate) Arc<NativeModel>);
 
 impl ExecModule for NativeInfer {
@@ -536,58 +768,33 @@ impl ExecModule for NativeInfer {
             }
         }
         let b = m.man.batch;
+        let crossover = sparse_crossover();
+        let kernels: Vec<&[f32]> = (0..l).map(|i| params[2 * i].as_slice()).collect();
+        let biases: Vec<&[f32]> = (0..l).map(|i| params[2 * i + 1].as_slice()).collect();
 
         let mut guard = m.scratch.lock().unwrap_or_else(|p| p.into_inner());
         let ar = &mut *guard;
-        ensure_slots(&mut ar.wq, l);
-        ensure_slots(&mut ar.csr, l);
-        ensure_slots(&mut ar.acts, l + 1);
-        let crossover = sparse_crossover();
 
-        // quantize + pack each frozen kernel once, choosing its path from
-        // the measured density
-        for i in 0..l {
-            let row = ops::QRow::parse(&qparams, i)?;
-            let w = &params[2 * i];
-            reuse(&mut ar.wq[i], w.len());
-            let zeros = ops::fake_quant(w, &row, &mut ar.wq[i]);
-            let density = if w.is_empty() {
-                0.0
-            } else {
-                1.0 - zeros as f32 / w.len() as f32
-            };
-            let csr = &mut ar.csr[i];
-            csr.active = false;
-            // crossover == 0 fully disables the sparse path (the documented
-            // contract) — without the strict guard a 100%-pruned layer
-            // (density exactly 0.0) would still dispatch CSR
-            if row.enable && crossover > 0.0 && density <= crossover {
-                let arr: [f32; 5] = qparams[i * 5..(i + 1) * 5]
-                    .try_into()
-                    .expect("qparams row width");
-                // only rows describing a true <WL,FL> grid can be packed to
-                // WL-bit CSR codes; others (disabled/raw rows) stay dense
-                if let Some((fmt, true)) = FixedPointFormat::from_qparams_row(&arr) {
-                    let (di, do_) = m.dims[i];
-                    let st = SparseFixedTensor::from_quantized(&ar.wq[i], di, do_, fmt);
-                    st.decode_values_into(&mut csr.vals);
-                    let SparseFixedTensor { row_ptr, col_idx, .. } = st;
-                    csr.row_ptr = row_ptr;
-                    csr.col_idx = col_idx;
-                    csr.active = true;
-                }
-            }
+        // cross-call pack/CSR cache: hit only on bit-identical
+        // (crossover, weight rows, kernels) — see the module docs
+        let hit = matches!(
+            &ar.cache,
+            Some(entry) if cache_key_matches(&entry.key, crossover, &kernels, &qparams, l)
+        );
+        if !hit {
+            let snap = ModelSnapshot::build(&m.dims, &kernels, &qparams, crossover)?;
+            ar.cache = Some(PackCacheEntry {
+                key: cache_key_build(crossover, &kernels, &qparams, l),
+                snap,
+            });
         }
-
-        let biases: Vec<&[f32]> = (0..l).map(|i| params[2 * i + 1].as_slice()).collect();
-        {
-            let a0 = &mut ar.acts[0];
-            a0.clear();
-            a0.extend_from_slice(&x);
-        }
-        let mut act_absmax = Vec::with_capacity(l);
-        m.forward_arena(ar, &biases, &qparams, b, false, &mut act_absmax)?;
-        let outs = vec![ar.acts[l].clone()];
+        let StepArena { cache, infer, .. } = ar;
+        let entry = cache.as_ref().expect("cache populated above");
+        let mut logits: Vec<f32> = Vec::new();
+        entry
+            .snap
+            .infer_into(&m.pool, &biases, &qparams, &x, b, infer, &mut logits)?;
+        let outs = vec![logits];
         check_outputs(&outs, out_specs)?;
         Ok(outs)
     }
@@ -723,7 +930,7 @@ mod tests {
 
     /// Mostly-zero kernels must dispatch the sparse path (density well under
     /// the default crossover) and still produce exactly the logits of a
-    /// repeat infer — the packs are rebuilt per call and stay deterministic.
+    /// repeat infer — now served from the persistent cache.
     #[test]
     fn sparse_dispatch_is_deterministic_across_calls() {
         let (model, man) = tiny_model();
@@ -748,5 +955,149 @@ mod tests {
             |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&a[0]), bits(&b[0]));
         assert!(a[0].iter().all(|v| v.is_finite()));
+    }
+
+    /// The persistent cache is reused across identical calls (same pack
+    /// buffers, no rebuild) and invalidated by any weight-bit or
+    /// weight-qparams-row change.
+    #[test]
+    fn infer_pack_cache_reuses_and_invalidates() {
+        let (model, man) = tiny_model();
+        let l = man.num_layers;
+        let params = crate::init::init_params(&man, crate::init::Initializer::Tnvs, 1.0, 13);
+        let bn: Vec<Vec<f32>> = Vec::new();
+        let x: Vec<f32> = (0..16).map(|i| (i as f32 * 0.13).sin()).collect();
+        let qp_a = qp_uniform(l, FixedPointFormat::new(12, 8), 1.0);
+        let qp_b = qp_uniform(l, FixedPointFormat::new(8, 4), 1.0);
+
+        // observe the cached layer-0 pack allocation across calls
+        let pack_ptr = |m: &NativeModel| -> Option<usize> {
+            let guard = m.scratch.lock().unwrap_or_else(|p| p.into_inner());
+            guard.cache.as_ref().map(|e| match &e.snap.kernels[0] {
+                SnapKernel::Dense { panel } => panel.as_ptr() as usize,
+                SnapKernel::Csr { vals, .. } => vals.as_ptr() as usize,
+            })
+        };
+
+        let infer = NativeInfer(Arc::clone(&model));
+        let iin_a = pack_infer_inputs(&man, &params, &bn, &x, &qp_a).unwrap();
+        let la1 = infer.execute_f32(&iin_a, &man.infer_outputs).unwrap();
+        let ptr1 = pack_ptr(&model).expect("cache populated");
+        let la2 = infer.execute_f32(&iin_a, &man.infer_outputs).unwrap();
+        let ptr2 = pack_ptr(&model).expect("cache still populated");
+        assert_eq!(ptr1, ptr2, "identical call must reuse the cached packs");
+        assert_eq!(la1, la2);
+
+        // precision switch: new format bits -> rebuild, and the result must
+        // equal a fresh model's (cache-cold) answer bit for bit
+        let iin_b = pack_infer_inputs(&man, &params, &bn, &x, &qp_b).unwrap();
+        let lb = infer.execute_f32(&iin_b, &man.infer_outputs).unwrap();
+        let (fresh, _) = tiny_model();
+        let lb_fresh = NativeInfer(fresh)
+            .execute_f32(&iin_b, &man.infer_outputs)
+            .unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&lb[0]), bits(&lb_fresh[0]), "stale pack after format switch");
+
+        // weight change: one-bit kernel edit -> rebuild, fresh-model parity
+        let mut params2 = params.clone();
+        params2[0][0] += 0.5;
+        let iin_c = pack_infer_inputs(&man, &params2, &bn, &x, &qp_b).unwrap();
+        let lc = infer.execute_f32(&iin_c, &man.infer_outputs).unwrap();
+        let (fresh2, _) = tiny_model();
+        let lc_fresh = NativeInfer(fresh2)
+            .execute_f32(&iin_c, &man.infer_outputs)
+            .unwrap();
+        assert_eq!(bits(&lc[0]), bits(&lc_fresh[0]), "stale pack after weight change");
+    }
+
+    /// A train step drops the infer cache (weights moved), and the next
+    /// infer rebuilds against the updated weights.
+    #[test]
+    fn train_step_invalidates_infer_cache() {
+        let (model, man) = tiny_model();
+        let l = man.num_layers;
+        let params = crate::init::init_params(&man, crate::init::Initializer::Tnvs, 1.0, 19);
+        let gsum = crate::init::init_gsum(&man);
+        let bn: Vec<Vec<f32>> = Vec::new();
+        let x: Vec<f32> = (0..16).map(|i| (i as f32 * 0.29).cos()).collect();
+        let y = vec![0i32, 1, 2, 0];
+        let qp = qp_uniform(l, FixedPointFormat::initial(), 1.0);
+        let hyper = [0.1f32, 0.0, 0.0, 0.0, 0.0, 1.0, 0.1, 0.0];
+
+        let infer = NativeInfer(Arc::clone(&model));
+        let iin = pack_infer_inputs(&man, &params, &bn, &x, &qp).unwrap();
+        infer.execute_f32(&iin, &man.infer_outputs).unwrap();
+        {
+            let guard = model.scratch.lock().unwrap_or_else(|p| p.into_inner());
+            assert!(guard.cache.is_some(), "infer populates the cache");
+        }
+        let step = NativeTrainStep(Arc::clone(&model));
+        let tin = pack_train_inputs(&man, &params, &gsum, &bn, &x, &y, &qp, &hyper).unwrap();
+        let outs = step.execute_f32(&tin, &man.train_outputs).unwrap();
+        {
+            let guard = model.scratch.lock().unwrap_or_else(|p| p.into_inner());
+            assert!(guard.cache.is_none(), "train step must drop the cache");
+        }
+        // post-step infer runs against the UPDATED weights
+        let new_params = outs[..2 * l].to_vec();
+        let iin2 = pack_infer_inputs(&man, &new_params, &bn, &x, &qp).unwrap();
+        let l2 = infer.execute_f32(&iin2, &man.infer_outputs).unwrap();
+        assert!(l2[0].iter().all(|v| v.is_finite()));
+    }
+
+    /// The snapshot forward is bit-identical to the ExecModule infer for
+    /// arbitrary batch sizes, including sizes the manifest contract itself
+    /// would reject.
+    #[test]
+    fn snapshot_infer_matches_module_infer_rowwise() {
+        let (model, man) = tiny_model();
+        let l = man.num_layers;
+        let mut params = crate::init::init_params(&man, crate::init::Initializer::Tnvs, 1.0, 23);
+        // sparsify layer 0 so both kernel kinds are covered
+        for (j, w) in params[0].iter_mut().enumerate() {
+            if j % 8 != 0 {
+                *w = 0.0;
+            }
+        }
+        let bn: Vec<Vec<f32>> = Vec::new();
+        let qp = qp_uniform(l, FixedPointFormat::initial(), 1.0);
+        let x: Vec<f32> = (0..16).map(|i| (i as f32 * 0.31).sin()).collect();
+        let infer = NativeInfer(Arc::clone(&model));
+        let iin = pack_infer_inputs(&man, &params, &bn, &x, &qp).unwrap();
+        let want = infer.execute_f32(&iin, &man.infer_outputs).unwrap();
+
+        let kernels: Vec<&[f32]> = (0..l).map(|i| params[2 * i].as_slice()).collect();
+        let biases: Vec<&[f32]> = (0..l).map(|i| params[2 * i + 1].as_slice()).collect();
+        let snap =
+            ModelSnapshot::build(&model.dims, &kernels, &qp, sparse_crossover()).unwrap();
+        // row-wise parity holds for any crossover; the dispatch-shape
+        // assert assumes the shipped default
+        if std::env::var_os("ADAPT_SPARSE_CROSSOVER").is_none() {
+            assert!(snap.layer_is_sparse(0), "layer 0 should dispatch CSR");
+        }
+        let mut scratch = InferScratch::default();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        // full batch in one call
+        let mut out = Vec::new();
+        snap.infer_into(&model.pool, &biases, &qp, &x, 4, &mut scratch, &mut out)
+            .unwrap();
+        assert_eq!(bits(&out), bits(&want[0]));
+        // one sample at a time: per-row identity regardless of composition
+        let c = man.classes;
+        for r in 0..4 {
+            let mut row_out = Vec::new();
+            snap.infer_into(
+                &model.pool,
+                &biases,
+                &qp,
+                &x[r * 4..(r + 1) * 4],
+                1,
+                &mut scratch,
+                &mut row_out,
+            )
+            .unwrap();
+            assert_eq!(bits(&row_out), bits(&want[0][r * c..(r + 1) * c]), "row {r}");
+        }
     }
 }

@@ -1,0 +1,236 @@
+//! Batched quantized-inference serving on the native backend.
+//!
+//! The paper's deployment claim (sec. 4.2.2, tab. 6) is that the nets
+//! AdaPT produces — fully quantized AND sparsified — are cheaper to
+//! *serve*: 2.33× mean inference speedup at 0.52 model size. This
+//! subsystem is the workload that cashes that in on the native kernel
+//! suite, mirroring the deployment framing of AdaBits (Jin et al., 2019)
+//! where the adaptively-quantized model is the unit of deployment:
+//!
+//! * [`registry`] — [`ModelRegistry`]: named, frozen [`ServedModel`]s.
+//!   Freezing pre-packs every quantized kernel ONCE (blocked-GEMM panel or
+//!   CSR by measured density), so the per-call re-packing the ROADMAP
+//!   flagged is gone from the serving path entirely.
+//! * [`queue`] — the bounded intake that coalesces single- and
+//!   multi-sample requests into dynamic micro-batches (`max_batch` /
+//!   `max_wait`), with backpressure ([`ServeError::QueueFull`]) and
+//!   graceful drain on shutdown.
+//! * [`worker`] — the worker team: per-worker scratch, batched forward on
+//!   the shared [`QuantPool`], row-disjoint scatter of the logits back to
+//!   the submitters.
+//! * [`stats`] — [`ServeStats`]: latency/throughput/occupancy recorder
+//!   whose rates sit next to the kernel calibration in
+//!   [`crate::perfmodel::calibration`].
+//!
+//! # Determinism
+//!
+//! Served logits are **bit-identical** to a direct `NativeModel` infer of
+//! the same samples, regardless of how requests were coalesced into
+//! micro-batches and how many workers run: every kernel computes each
+//! output row as one ascending-depth fold over that row's inputs alone,
+//! and batch composition only decides WHICH rows sit in a tensor, never
+//! what any single row accumulates. `rust/tests/serve.rs` pins this across
+//! coalescing patterns × worker counts.
+//!
+//! See the doc-example on [`ModelRegistry`] for the end-to-end flow, and
+//! ARCHITECTURE.md §Serving for the data-flow diagram.
+
+pub mod queue;
+pub mod registry;
+pub mod stats;
+pub mod worker;
+
+pub use queue::{Response, ServeError, Ticket};
+pub use registry::{ModelRegistry, ServedModel};
+pub use stats::{LatencySummary, ServeStats, ServeStatsSnapshot};
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::quant::QuantPool;
+
+use queue::{BatchQueue, Request};
+
+/// Tunables of one serving instance.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Samples per micro-batch ceiling; a single larger request still runs,
+    /// alone.
+    pub max_batch: usize,
+    /// How long a partial batch waits for stragglers before dispatching.
+    pub max_wait: Duration,
+    /// Bounded intake: queued requests beyond this are rejected
+    /// ([`ServeError::QueueFull`]) or block ([`ServeHandle::submit_blocking`]).
+    pub queue_capacity: usize,
+    /// Worker threads. Zero is allowed (nothing is served until shutdown
+    /// cancels the queue) but only useful in tests.
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            queue_capacity: 1024,
+            workers: 2,
+        }
+    }
+}
+
+/// A running serving instance: the worker team plus the shared queue,
+/// registry and stats. Create with [`start`](Self::start), submit through
+/// [`handle`](Self::handle), stop with [`shutdown`](Self::shutdown)
+/// (dropping the server shuts it down too).
+pub struct ServeServer {
+    registry: Arc<ModelRegistry>,
+    queue: Arc<BatchQueue>,
+    stats: Arc<ServeStats>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ServeServer {
+    /// Spawn the worker team. All GEMM fan-out inside the workers runs on
+    /// `pool` — pass the backend's pool to keep one thread team per
+    /// process.
+    pub fn start(registry: Arc<ModelRegistry>, pool: Arc<QuantPool>, cfg: ServeConfig) -> ServeServer {
+        let queue = Arc::new(BatchQueue::new(cfg.max_batch, cfg.max_wait, cfg.queue_capacity));
+        let stats = Arc::new(ServeStats::new(cfg.max_batch));
+        let workers = (0..cfg.workers)
+            .map(|i| {
+                let q = Arc::clone(&queue);
+                let p = Arc::clone(&pool);
+                let s = Arc::clone(&stats);
+                std::thread::Builder::new()
+                    .name(format!("adapt-serve-{i}"))
+                    .spawn(move || worker::worker_loop(q, p, s))
+                    .expect("spawning serve worker")
+            })
+            .collect();
+        ServeServer {
+            registry,
+            queue,
+            stats,
+            workers,
+        }
+    }
+
+    /// A cloneable submission handle.
+    pub fn handle(&self) -> ServeHandle {
+        ServeHandle {
+            registry: Arc::clone(&self.registry),
+            queue: Arc::clone(&self.queue),
+            stats: Arc::clone(&self.stats),
+        }
+    }
+
+    /// The registry this server resolves names against (models can be
+    /// published while serving; latest wins per name).
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    /// Snapshot the recorder without stopping.
+    pub fn stats(&self) -> ServeStatsSnapshot {
+        self.stats.snapshot()
+    }
+
+    /// Graceful stop: refuse new requests, drain and answer everything
+    /// already accepted, join the workers; returns the final stats.
+    pub fn shutdown(mut self) -> ServeStatsSnapshot {
+        self.shutdown_impl();
+        self.stats.snapshot()
+    }
+
+    fn shutdown_impl(&mut self) {
+        self.queue.shutdown();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        // with a zero-worker config (or a panicked team) requests may
+        // remain: answer them rather than leaving tickets hanging
+        self.queue.drain_cancel();
+    }
+}
+
+impl Drop for ServeServer {
+    fn drop(&mut self) {
+        self.shutdown_impl();
+    }
+}
+
+/// Cloneable request submitter bound to one [`ServeServer`].
+#[derive(Clone)]
+pub struct ServeHandle {
+    registry: Arc<ModelRegistry>,
+    queue: Arc<BatchQueue>,
+    stats: Arc<ServeStats>,
+}
+
+impl ServeHandle {
+    /// Submit `n` samples (`x.len() == n × d_in`) for `model`; returns a
+    /// [`Ticket`] to wait on. Non-blocking: a full queue rejects with
+    /// [`ServeError::QueueFull`].
+    pub fn submit(&self, model: &str, x: Vec<f32>, n: usize) -> Result<Ticket, ServeError> {
+        self.submit_inner(model, x, n, false)
+    }
+
+    /// [`submit`](Self::submit), but parking the caller while the queue is
+    /// at capacity instead of rejecting.
+    pub fn submit_blocking(&self, model: &str, x: Vec<f32>, n: usize) -> Result<Ticket, ServeError> {
+        self.submit_inner(model, x, n, true)
+    }
+
+    /// Convenience round-trip: blocking submit + wait.
+    pub fn infer_blocking(&self, model: &str, x: Vec<f32>, n: usize) -> Result<Response, ServeError> {
+        self.submit_blocking(model, x, n)?.wait()
+    }
+
+    fn submit_inner(
+        &self,
+        model: &str,
+        x: Vec<f32>,
+        n: usize,
+        blocking: bool,
+    ) -> Result<Ticket, ServeError> {
+        let m = self
+            .registry
+            .get(model)
+            .ok_or_else(|| ServeError::UnknownModel(model.to_string()))?;
+        if n == 0 {
+            return Err(ServeError::BadRequest("empty request".to_string()));
+        }
+        if x.len() != n * m.d_in() {
+            return Err(ServeError::BadRequest(format!(
+                "x has {} elems for {n} samples × d_in {}",
+                x.len(),
+                m.d_in()
+            )));
+        }
+        let (tx, rx) = channel();
+        let req = Request {
+            model: m,
+            x,
+            n,
+            tx,
+            enqueued: Instant::now(),
+        };
+        let pushed = if blocking {
+            self.queue.push_blocking(req)
+        } else {
+            self.queue.push(req)
+        };
+        if let Err(e) = pushed {
+            self.stats.record_rejected();
+            return Err(e);
+        }
+        Ok(Ticket { rx })
+    }
+
+    /// Live stats of the server this handle feeds.
+    pub fn stats(&self) -> ServeStatsSnapshot {
+        self.stats.snapshot()
+    }
+}

@@ -1,0 +1,389 @@
+//! Request intake and dynamic micro-batching.
+//!
+//! Clients hand requests to the (crate-internal) `BatchQueue` through
+//! [`ServeHandle`](super::ServeHandle); workers pull *micro-batches* out of
+//! it. A micro-batch is a run of same-model requests coalesced up to
+//! `max_batch` total samples: the first request is dispatched immediately
+//! when enough peers are already queued, and otherwise the queue waits at
+//! most `max_wait` for stragglers before dispatching a partial batch — so
+//! tail requests never starve behind an unfilled batch, and a hot queue
+//! always serves full batches.
+//!
+//! Coalescing is a pure throughput optimisation: every inference kernel
+//! computes each sample row as an independent ascending fold, so the
+//! response bits do not depend on which micro-batch a request rode in (the
+//! serving determinism invariant, asserted in `rust/tests/serve.rs`).
+//!
+//! # Backpressure and shutdown
+//!
+//! The queue holds at most `capacity` requests. A non-blocking submit
+//! rejects with [`ServeError::QueueFull`] when full (the caller decides to
+//! retry, shed or block); the blocking variant parks the caller until
+//! space frees. After shutdown, new submissions fail with
+//! [`ServeError::ShutDown`] while already-accepted requests are still
+//! drained and answered by the workers — a graceful drain, not a drop.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use super::registry::ServedModel;
+
+/// Why a serving call failed. Carried on tickets and returned from
+/// submission; `Failed` wraps an execution error message (the original
+/// error is not `Clone`, and one failure fans out to every request of the
+/// micro-batch).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The bounded queue is at capacity; retry, shed or use the blocking
+    /// submit.
+    QueueFull,
+    /// The server no longer accepts requests.
+    ShutDown,
+    /// No model of that name is published in the registry.
+    UnknownModel(String),
+    /// Malformed request (empty, or input length not `n × d_in`).
+    BadRequest(String),
+    /// The forward pass itself errored.
+    Failed(String),
+    /// The worker side disappeared without answering (a worker panic).
+    Canceled,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::QueueFull => write!(f, "serve queue full"),
+            ServeError::ShutDown => write!(f, "serve server shut down"),
+            ServeError::UnknownModel(m) => write!(f, "unknown served model {m:?}"),
+            ServeError::BadRequest(why) => write!(f, "bad request: {why}"),
+            ServeError::Failed(why) => write!(f, "inference failed: {why}"),
+            ServeError::Canceled => write!(f, "request canceled"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// One answered request: the `n × classes` logits plus the timings the
+/// recorder aggregates.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// Row-major `n × classes` logits, bit-identical to a direct
+    /// `NativeModel` infer of the same samples.
+    pub logits: Vec<f32>,
+    /// Samples in this request.
+    pub n: usize,
+    /// Milliseconds spent queued before the executing micro-batch started.
+    pub queue_ms: f64,
+    /// Total samples of the micro-batch this request was coalesced into.
+    pub batch_samples: usize,
+}
+
+/// A queued unit of work: the resolved model (looked up at submit time, so
+/// unknown names fail fast and workers group by pointer identity), the
+/// input rows and the response channel.
+pub(crate) struct Request {
+    pub(crate) model: Arc<ServedModel>,
+    pub(crate) x: Vec<f32>,
+    pub(crate) n: usize,
+    pub(crate) tx: Sender<Result<Response, ServeError>>,
+    pub(crate) enqueued: Instant,
+}
+
+/// The caller's side of a submitted request. [`wait`](Ticket::wait) blocks
+/// until the response arrives (or the server is torn down).
+#[derive(Debug)]
+pub struct Ticket {
+    pub(crate) rx: Receiver<Result<Response, ServeError>>,
+}
+
+impl Ticket {
+    /// Block until the request is answered.
+    pub fn wait(self) -> Result<Response, ServeError> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(ServeError::Canceled),
+        }
+    }
+
+    /// Non-blocking poll: `None` while the request is still in flight.
+    pub fn try_wait(&self) -> Option<Result<Response, ServeError>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => Some(Err(ServeError::Canceled)),
+        }
+    }
+}
+
+struct QueueState {
+    q: VecDeque<Request>,
+    open: bool,
+}
+
+/// The bounded, condvar-driven micro-batching queue (module docs).
+pub(crate) struct BatchQueue {
+    state: Mutex<QueueState>,
+    /// Signaled on push and shutdown (workers wait here).
+    work: Condvar,
+    /// Signaled on pop and shutdown (blocking submitters wait here).
+    space: Condvar,
+    max_batch: usize,
+    max_wait: Duration,
+    capacity: usize,
+}
+
+impl BatchQueue {
+    pub(crate) fn new(max_batch: usize, max_wait: Duration, capacity: usize) -> BatchQueue {
+        BatchQueue {
+            state: Mutex::new(QueueState {
+                q: VecDeque::new(),
+                open: true,
+            }),
+            work: Condvar::new(),
+            space: Condvar::new(),
+            max_batch: max_batch.max(1),
+            max_wait,
+            capacity: capacity.max(1),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, QueueState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Non-blocking enqueue; [`ServeError::QueueFull`] when at capacity.
+    pub(crate) fn push(&self, req: Request) -> Result<(), ServeError> {
+        {
+            let mut st = self.lock();
+            if !st.open {
+                return Err(ServeError::ShutDown);
+            }
+            if st.q.len() >= self.capacity {
+                return Err(ServeError::QueueFull);
+            }
+            st.q.push_back(req);
+        }
+        self.work.notify_one();
+        Ok(())
+    }
+
+    /// Enqueue, parking the caller until the queue has space (the
+    /// backpressure-tolerant variant).
+    pub(crate) fn push_blocking(&self, req: Request) -> Result<(), ServeError> {
+        {
+            let mut st = self.lock();
+            loop {
+                if !st.open {
+                    return Err(ServeError::ShutDown);
+                }
+                if st.q.len() < self.capacity {
+                    break;
+                }
+                st = self.space.wait(st).unwrap_or_else(|p| p.into_inner());
+            }
+            st.q.push_back(req);
+        }
+        self.work.notify_one();
+        Ok(())
+    }
+
+    /// Worker side: block for the next micro-batch. Returns `None` only
+    /// when the queue is shut down AND fully drained — accepted requests
+    /// are always served. The batch is a non-empty FIFO run of same-model
+    /// requests totalling at most `max_batch` samples (a single oversized
+    /// request forms its own batch).
+    pub(crate) fn next_batch(&self) -> Option<Vec<Request>> {
+        let mut st = self.lock();
+        loop {
+            if !st.q.is_empty() {
+                break;
+            }
+            if !st.open {
+                return None;
+            }
+            st = self.work.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+        let first = st.q.pop_front().expect("queue checked non-empty");
+        let mut total = first.n;
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.max_wait;
+        loop {
+            // greedily absorb immediately-available compatible requests
+            while total < self.max_batch {
+                let compatible = matches!(
+                    st.q.front(),
+                    Some(r) if Arc::ptr_eq(&r.model, &batch[0].model)
+                        && total + r.n <= self.max_batch
+                );
+                if !compatible {
+                    break;
+                }
+                let r = st.q.pop_front().expect("front just matched");
+                total += r.n;
+                batch.push(r);
+            }
+            if total >= self.max_batch {
+                break;
+            }
+            // partial batch: dispatch now if the head is incompatible (a
+            // different model, or it would overflow), the queue is closed,
+            // or the wait budget is spent; otherwise wait for stragglers
+            if !st.q.is_empty() || !st.open {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, timeout) = self
+                .work
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(|p| p.into_inner());
+            st = guard;
+            if timeout.timed_out() && st.q.is_empty() {
+                break;
+            }
+        }
+        drop(st);
+        self.space.notify_all();
+        Some(batch)
+    }
+
+    /// Stop accepting new requests. Queued requests remain and are drained
+    /// by the workers ([`next_batch`](Self::next_batch) keeps yielding
+    /// until empty).
+    pub(crate) fn shutdown(&self) {
+        self.lock().open = false;
+        self.work.notify_all();
+        self.space.notify_all();
+    }
+
+    /// Answer whatever is still queued with [`ServeError::ShutDown`]. Run
+    /// after the workers have exited: with at least one worker the queue is
+    /// already empty, but a zero-worker server (or a panicked worker team)
+    /// must not leave tickets hanging forever.
+    pub(crate) fn drain_cancel(&self) {
+        let leftover: Vec<Request> = {
+            let mut st = self.lock();
+            st.q.drain(..).collect()
+        };
+        for r in leftover {
+            let _ = r.tx.send(Err(ServeError::ShutDown));
+        }
+        self.space.notify_all();
+    }
+
+    #[cfg(test)]
+    pub(crate) fn queued(&self) -> usize {
+        self.lock().q.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use std::sync::mpsc::channel;
+
+    fn test_model() -> Arc<ServedModel> {
+        let man = Manifest::synthetic_mlp("q-test", [2, 1, 1], 2, &[3], 2);
+        let params = crate::init::init_params(&man, crate::init::Initializer::Tnvs, 1.0, 1);
+        let qp: Vec<f32> = (0..2 * man.num_layers)
+            .flat_map(|_| crate::fixedpoint::FixedPointFormat::initial().qparams_row(1.0))
+            .collect();
+        Arc::new(ServedModel::freeze("q-test", &man, &params, &qp).unwrap())
+    }
+
+    fn req(model: &Arc<ServedModel>, n: usize) -> (Request, Receiver<Result<Response, ServeError>>) {
+        let (tx, rx) = channel();
+        (
+            Request {
+                model: Arc::clone(model),
+                x: vec![0.0; n * model.d_in()],
+                n,
+                tx,
+                enqueued: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn coalesces_up_to_max_batch_in_fifo_order() {
+        let m = test_model();
+        let q = BatchQueue::new(8, Duration::ZERO, 64);
+        let mut rxs = Vec::new();
+        for n in [3usize, 4, 2, 8, 1] {
+            let (r, rx) = req(&m, n);
+            rxs.push(rx); // keep receivers alive until the end of the test
+            q.push(r).unwrap();
+        }
+        // 3+4 fits 8, 2 would overflow -> first batch [3,4]
+        let b1 = q.next_batch().unwrap();
+        assert_eq!(b1.iter().map(|r| r.n).collect::<Vec<_>>(), vec![3, 4]);
+        // 2 alone (8 would overflow), then 8, then 1
+        assert_eq!(q.next_batch().unwrap().iter().map(|r| r.n).collect::<Vec<_>>(), vec![2]);
+        assert_eq!(q.next_batch().unwrap().iter().map(|r| r.n).collect::<Vec<_>>(), vec![8]);
+        assert_eq!(q.next_batch().unwrap().iter().map(|r| r.n).collect::<Vec<_>>(), vec![1]);
+    }
+
+    #[test]
+    fn oversized_request_forms_its_own_batch() {
+        let m = test_model();
+        let q = BatchQueue::new(4, Duration::ZERO, 64);
+        let (r, _rx) = req(&m, 10);
+        q.push(r).unwrap();
+        let b = q.next_batch().unwrap();
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].n, 10);
+        drop(_rx);
+    }
+
+    #[test]
+    fn capacity_backpressure_and_shutdown() {
+        let m = test_model();
+        let q = BatchQueue::new(4, Duration::ZERO, 2);
+        let (r1, rx1) = req(&m, 1);
+        let (r2, rx2) = req(&m, 1);
+        q.push(r1).unwrap();
+        q.push(r2).unwrap();
+        let (r3, _rx3) = req(&m, 1);
+        assert_eq!(q.push(r3).unwrap_err(), ServeError::QueueFull);
+        q.shutdown();
+        let (r4, _rx4) = req(&m, 1);
+        assert_eq!(q.push(r4).unwrap_err(), ServeError::ShutDown);
+        // accepted requests still drain after shutdown...
+        assert_eq!(q.next_batch().unwrap().len(), 2);
+        // ...then the queue reports exhaustion
+        assert!(q.next_batch().is_none());
+        assert_eq!(q.queued(), 0);
+        drop((rx1, rx2));
+    }
+
+    #[test]
+    fn drain_cancel_answers_leftovers() {
+        let m = test_model();
+        let q = BatchQueue::new(4, Duration::ZERO, 8);
+        let (r, rx) = req(&m, 1);
+        q.push(r).unwrap();
+        q.shutdown();
+        q.drain_cancel();
+        assert_eq!(rx.recv().unwrap().unwrap_err(), ServeError::ShutDown);
+    }
+
+    #[test]
+    fn max_wait_zero_dispatches_immediately() {
+        let m = test_model();
+        let q = BatchQueue::new(64, Duration::ZERO, 8);
+        let (r, _rx) = req(&m, 2);
+        q.push(r).unwrap();
+        let t0 = Instant::now();
+        let b = q.next_batch().unwrap();
+        assert_eq!(b.len(), 1);
+        assert!(t0.elapsed() < Duration::from_millis(250), "must not wait for a full batch");
+        drop(_rx);
+    }
+}

@@ -1,0 +1,259 @@
+//! The registry of frozen served models.
+//!
+//! A [`ServedModel`] is an immutable, compute-ready snapshot of a trained
+//! model: every quantized kernel pre-packed ONCE — into the blocked-GEMM
+//! panel layout, or CSR when its measured density sits at or below the
+//! [`sparse_crossover`](crate::runtime::native::sparse_crossover) — plus
+//! the biases and the qparams tensor the fused epilogues read. Freezing
+//! makes the ROADMAP's "persistent cross-call CSR cache for the serving
+//! workload" a first-class structure: the packs are built at publish time
+//! and every request afterwards only packs its activations.
+//!
+//! The [`ModelRegistry`] maps names to published models. Publishing
+//! replaces any same-named model atomically (latest wins); in-flight
+//! requests that already resolved the old `Arc` finish against the
+//! snapshot they started with — a served model is never mutated.
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::ServableModel;
+use crate::quant::QuantPool;
+use crate::runtime::native::{mlp_dims, sparse_crossover, InferScratch, ModelSnapshot};
+use crate::runtime::Manifest;
+
+/// A frozen, immutable served model (module docs). Built once with
+/// [`freeze`](Self::freeze); all serving traffic shares it through an
+/// `Arc`.
+pub struct ServedModel {
+    name: String,
+    classes: usize,
+    biases: Vec<Vec<f32>>,
+    qparams: Vec<f32>,
+    snap: ModelSnapshot,
+}
+
+impl ServedModel {
+    /// Validate `man` (same [`mlp_dims`] contract as the native backend),
+    /// quantize every kernel under its qparams row and pack each layer
+    /// once, choosing panel vs CSR from the measured density and the
+    /// active crossover. `params` is the full (kernel, bias) interleaving;
+    /// `qparams` the `[2L, 5]` runtime tensor of the finished run.
+    pub fn freeze(
+        name: &str,
+        man: &Manifest,
+        params: &[Vec<f32>],
+        qparams: &[f32],
+    ) -> Result<ServedModel> {
+        let dims = mlp_dims(man)?;
+        let l = dims.len();
+        if params.len() != 2 * l {
+            return Err(anyhow!(
+                "freeze {name}: {} params for {l} layers (want kernel+bias each)",
+                params.len()
+            ));
+        }
+        if qparams.len() != 2 * l * 5 {
+            return Err(anyhow!(
+                "freeze {name}: qparams len {} != {}",
+                qparams.len(),
+                2 * l * 5
+            ));
+        }
+        for (i, p) in params.iter().enumerate() {
+            if p.len() != man.params[i].elems() {
+                return Err(anyhow!("freeze {name}: param {} size mismatch", man.params[i].name));
+            }
+        }
+        let kernels: Vec<&[f32]> = (0..l).map(|i| params[2 * i].as_slice()).collect();
+        let snap = ModelSnapshot::build(&dims, &kernels, qparams, sparse_crossover())?;
+        let biases: Vec<Vec<f32>> = (0..l).map(|i| params[2 * i + 1].clone()).collect();
+        Ok(ServedModel {
+            name: name.to_string(),
+            classes: man.classes,
+            biases,
+            qparams: qparams.to_vec(),
+            snap,
+        })
+    }
+
+    /// Freeze the export of a finished training run
+    /// ([`TrainOutcome::servable`](crate::coordinator::TrainOutcome::servable)).
+    pub fn from_servable(s: &ServableModel) -> Result<ServedModel> {
+        ServedModel::freeze(&s.name, &s.manifest, &s.params, &s.qparams)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Input width one sample occupies (layer-0 fan-in).
+    pub fn d_in(&self) -> usize {
+        self.snap.d_in()
+    }
+
+    /// Logit width per sample.
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    /// The frozen pack/CSR snapshot (per-layer densities, sparse dispatch).
+    pub fn snapshot(&self) -> &ModelSnapshot {
+        &self.snap
+    }
+
+    /// Batched quantized forward over the frozen packs: `b` samples from
+    /// `x` into `out` (cleared and filled with `b × classes` logits).
+    /// Bit-identical per sample row to a direct `NativeModel` infer of the
+    /// same weights/qparams, for any batch composition and worker count.
+    pub fn infer_into(
+        &self,
+        pool: &QuantPool,
+        x: &[f32],
+        b: usize,
+        scratch: &mut InferScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let biases: Vec<&[f32]> = self.biases.iter().map(|v| v.as_slice()).collect();
+        self.snap.infer_into(pool, &biases, &self.qparams, x, b, scratch, out)
+    }
+}
+
+/// Name → published [`ServedModel`] map shared by every serving handle.
+///
+/// ```
+/// use std::sync::Arc;
+/// use std::time::Duration;
+/// use adapt::fixedpoint::FixedPointFormat;
+/// use adapt::quant::QuantPool;
+/// use adapt::runtime::Manifest;
+/// use adapt::serve::{ModelRegistry, ServeConfig, ServeServer, ServedModel};
+///
+/// // freeze a (here: untrained) model and publish it
+/// let man = Manifest::synthetic_mlp("doc-serve", [2, 2, 1], 3, &[4], 4);
+/// let params = adapt::init::init_params(&man, adapt::init::Initializer::Tnvs, 1.0, 0);
+/// let qp: Vec<f32> = (0..2 * man.num_layers)
+///     .flat_map(|_| FixedPointFormat::initial().qparams_row(1.0))
+///     .collect();
+/// let registry = Arc::new(ModelRegistry::new());
+/// registry.publish(ServedModel::freeze("doc-serve", &man, &params, &qp).unwrap());
+///
+/// // serve one single-sample request through the batching pipeline
+/// let cfg = ServeConfig { workers: 1, max_wait: Duration::ZERO, ..ServeConfig::default() };
+/// let server = ServeServer::start(Arc::clone(&registry), Arc::new(QuantPool::new(2)), cfg);
+/// let ticket = server.handle().submit("doc-serve", vec![0.1; 4], 1).unwrap();
+/// let resp = ticket.wait().unwrap();
+/// assert_eq!(resp.logits.len(), 3);
+/// let stats = server.shutdown();
+/// assert_eq!(stats.requests, 1);
+/// ```
+pub struct ModelRegistry {
+    models: RwLock<HashMap<String, Arc<ServedModel>>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry {
+            models: RwLock::new(HashMap::new()),
+        }
+    }
+
+    fn read(&self) -> RwLockReadGuard<'_, HashMap<String, Arc<ServedModel>>> {
+        self.models.read().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn write(&self) -> RwLockWriteGuard<'_, HashMap<String, Arc<ServedModel>>> {
+        self.models.write().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Publish under the model's own name, replacing any previous holder
+    /// (latest wins; in-flight requests finish on the model they
+    /// resolved). Returns the shared handle.
+    pub fn publish(&self, model: ServedModel) -> Arc<ServedModel> {
+        let m = Arc::new(model);
+        self.write().insert(m.name().to_string(), Arc::clone(&m));
+        m
+    }
+
+    /// Resolve a published model by name.
+    pub fn get(&self, name: &str) -> Option<Arc<ServedModel>> {
+        self.read().get(name).cloned()
+    }
+
+    /// Remove a model from the registry; later submissions fail with
+    /// `UnknownModel`, in-flight requests are unaffected.
+    pub fn unpublish(&self, name: &str) -> Option<Arc<ServedModel>> {
+        self.write().remove(name)
+    }
+
+    /// Published names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.read().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.read().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.read().is_empty()
+    }
+}
+
+impl Default for ModelRegistry {
+    fn default() -> Self {
+        ModelRegistry::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::FixedPointFormat;
+
+    fn frozen(name: &str, seed: u64) -> ServedModel {
+        let man = Manifest::synthetic_mlp(name, [2, 2, 1], 3, &[5], 4);
+        let params = crate::init::init_params(&man, crate::init::Initializer::Tnvs, 1.0, seed);
+        let qp: Vec<f32> = (0..2 * man.num_layers)
+            .flat_map(|_| FixedPointFormat::initial().qparams_row(1.0))
+            .collect();
+        ServedModel::freeze(name, &man, &params, &qp).unwrap()
+    }
+
+    #[test]
+    fn publish_get_replace_unpublish() {
+        let reg = ModelRegistry::new();
+        assert!(reg.is_empty());
+        let a1 = reg.publish(frozen("a", 1));
+        reg.publish(frozen("b", 2));
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.names(), vec!["a".to_string(), "b".to_string()]);
+        assert!(Arc::ptr_eq(&reg.get("a").unwrap(), &a1));
+        // latest wins; the old Arc stays valid for in-flight work
+        let a2 = reg.publish(frozen("a", 3));
+        assert!(!Arc::ptr_eq(&reg.get("a").unwrap(), &a1));
+        assert!(Arc::ptr_eq(&reg.get("a").unwrap(), &a2));
+        assert!(reg.unpublish("a").is_some());
+        assert!(reg.get("a").is_none());
+        assert!(reg.unpublish("a").is_none());
+    }
+
+    #[test]
+    fn freeze_validates_inputs() {
+        let man = Manifest::synthetic_mlp("v", [2, 2, 1], 3, &[5], 4);
+        let params = crate::init::init_params(&man, crate::init::Initializer::Tnvs, 1.0, 1);
+        let qp: Vec<f32> = (0..2 * man.num_layers)
+            .flat_map(|_| FixedPointFormat::initial().qparams_row(1.0))
+            .collect();
+        assert!(ServedModel::freeze("v", &man, &params[..1], &qp).is_err());
+        assert!(ServedModel::freeze("v", &man, &params, &qp[..5]).is_err());
+        let m = ServedModel::freeze("v", &man, &params, &qp).unwrap();
+        assert_eq!(m.d_in(), 4);
+        assert_eq!(m.classes(), 3);
+        assert_eq!(m.snapshot().num_layers(), 2);
+    }
+}

@@ -1,0 +1,219 @@
+//! Serving telemetry: latency, throughput and batch-occupancy recording.
+//!
+//! Workers record one row per executed micro-batch (size, service time,
+//! the per-request queue waits); rejected submissions are counted at the
+//! handle. [`ServeStats::snapshot`] folds the rows into a
+//! [`ServeStatsSnapshot`] — p50/p95/mean/max latency summaries, mean batch
+//! size, occupancy against `max_batch`, and two throughput rates:
+//!
+//! * `busy_samples_per_ms` — samples over summed micro-batch service time:
+//!   the per-worker kernel-side serving rate, directly comparable to the
+//!   `calibration_*` MAdd rates of `BENCH_native.json` (see
+//!   [`ServeRate`](crate::perfmodel::calibration::ServeRate), which
+//!   converts a snapshot into the perf model's units);
+//! * `wall_samples_per_ms` — samples over wall time since the recorder
+//!   started: the externally observable throughput including queueing and
+//!   idle gaps.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Order statistics of one latency population, in milliseconds.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencySummary {
+    pub count: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LatencySummary {
+    fn from_values(values: &[f64]) -> LatencySummary {
+        if values.is_empty() {
+            return LatencySummary::default();
+        }
+        let mut v = values.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+        let n = v.len();
+        LatencySummary {
+            count: n as u64,
+            mean_ms: v.iter().sum::<f64>() / n as f64,
+            p50_ms: v[n / 2],
+            p95_ms: v[(n * 95) / 100],
+            max_ms: v[n - 1],
+        }
+    }
+}
+
+/// One folded view of everything recorded so far (field docs in the module
+/// docs).
+#[derive(Debug, Clone, Default)]
+pub struct ServeStatsSnapshot {
+    /// Requests answered with logits. Failed batches count under
+    /// `failed`, never here — served counts and the throughput rates
+    /// below describe delivered work only.
+    pub requests: u64,
+    pub samples: u64,
+    pub micro_batches: u64,
+    pub rejected: u64,
+    /// Requests answered with an execution error (their batches are
+    /// excluded from every served count and rate).
+    pub failed: u64,
+    /// Mean samples per executed micro-batch.
+    pub mean_batch: f64,
+    /// `mean_batch / max_batch`: 1.0 means every batch dispatched full.
+    pub occupancy: f64,
+    /// Per-request time spent queued before its micro-batch started.
+    pub queue: LatencySummary,
+    /// Per-micro-batch forward-pass service time.
+    pub service: LatencySummary,
+    pub busy_samples_per_ms: f64,
+    pub wall_samples_per_ms: f64,
+}
+
+struct StatsInner {
+    queue_ms: Vec<f64>,
+    service_ms: Vec<f64>,
+    last_record: Option<Instant>,
+}
+
+/// The shared recorder (module docs). Counters are atomics so the hot path
+/// never blocks on the latency vectors' mutex longer than one push batch.
+pub struct ServeStats {
+    max_batch: usize,
+    started: Instant,
+    requests: AtomicU64,
+    samples: AtomicU64,
+    batches: AtomicU64,
+    rejected: AtomicU64,
+    failed: AtomicU64,
+    inner: Mutex<StatsInner>,
+}
+
+impl ServeStats {
+    pub fn new(max_batch: usize) -> ServeStats {
+        ServeStats {
+            max_batch: max_batch.max(1),
+            started: Instant::now(),
+            requests: AtomicU64::new(0),
+            samples: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            inner: Mutex::new(StatsInner {
+                queue_ms: Vec::new(),
+                service_ms: Vec::new(),
+                last_record: None,
+            }),
+        }
+    }
+
+    /// One executed micro-batch: total samples, constituent request count,
+    /// forward wall time and each request's queue wait.
+    pub(crate) fn record_batch(
+        &self,
+        samples: usize,
+        requests: usize,
+        service_ms: f64,
+        queue_ms: &[f64],
+    ) {
+        self.requests.fetch_add(requests as u64, Ordering::Relaxed);
+        self.samples.fetch_add(samples as u64, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        inner.queue_ms.extend_from_slice(queue_ms);
+        inner.service_ms.push(service_ms);
+        inner.last_record = Some(Instant::now());
+    }
+
+    pub(crate) fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One micro-batch whose forward pass errored: its `requests` count as
+    /// failed and contribute to NO served count or rate.
+    pub(crate) fn record_failed(&self, requests: usize) {
+        self.failed.fetch_add(requests as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> ServeStatsSnapshot {
+        let inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let samples = self.samples.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let busy_ms: f64 = inner.service_ms.iter().sum();
+        let wall_ms = inner
+            .last_record
+            .map(|t| t.duration_since(self.started).as_secs_f64() * 1e3)
+            .unwrap_or(0.0);
+        ServeStatsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            samples,
+            micro_batches: batches,
+            rejected: self.rejected.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            mean_batch: if batches > 0 {
+                samples as f64 / batches as f64
+            } else {
+                0.0
+            },
+            occupancy: if batches > 0 {
+                samples as f64 / (batches as f64 * self.max_batch as f64)
+            } else {
+                0.0
+            },
+            queue: LatencySummary::from_values(&inner.queue_ms),
+            service: LatencySummary::from_values(&inner.service_ms),
+            busy_samples_per_ms: if busy_ms > 0.0 {
+                samples as f64 / busy_ms
+            } else {
+                0.0
+            },
+            wall_samples_per_ms: if wall_ms > 0.0 {
+                samples as f64 / wall_ms
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn folds_batches_into_rates_and_occupancy() {
+        let s = ServeStats::new(8);
+        s.record_batch(8, 3, 2.0, &[0.5, 1.0, 1.5]);
+        s.record_batch(4, 1, 2.0, &[0.25]);
+        s.record_rejected();
+        // failed batches must not leak into the served counts or rates
+        s.record_failed(2);
+        let snap = s.snapshot();
+        assert_eq!(snap.requests, 4);
+        assert_eq!(snap.samples, 12);
+        assert_eq!(snap.micro_batches, 2);
+        assert_eq!(snap.rejected, 1);
+        assert_eq!(snap.failed, 2);
+        assert!((snap.mean_batch - 6.0).abs() < 1e-12);
+        assert!((snap.occupancy - 0.75).abs() < 1e-12);
+        assert_eq!(snap.queue.count, 4);
+        assert_eq!(snap.service.count, 2);
+        assert!((snap.busy_samples_per_ms - 3.0).abs() < 1e-12);
+        assert!(snap.wall_samples_per_ms > 0.0);
+        assert!(snap.queue.max_ms >= snap.queue.p50_ms);
+    }
+
+    #[test]
+    fn empty_snapshot_is_all_zero() {
+        let snap = ServeStats::new(4).snapshot();
+        assert_eq!(snap.requests, 0);
+        assert_eq!(snap.mean_batch, 0.0);
+        assert_eq!(snap.occupancy, 0.0);
+        assert_eq!(snap.busy_samples_per_ms, 0.0);
+        assert_eq!(snap.wall_samples_per_ms, 0.0);
+        assert_eq!(snap.queue.count, 0);
+    }
+}

@@ -1,0 +1,93 @@
+//! The serving worker team.
+//!
+//! Each worker owns one [`InferScratch`] plus reusable input/logit buffers
+//! for its whole lifetime (the serving counterpart of the trainer's step
+//! arena — steady-state batches allocate only the per-request response
+//! vectors the channel contract requires) and loops on the queue's
+//! `next_batch`: coalesce the requests' rows into one input
+//! tensor, run the frozen model's batched forward — whose GEMMs fan out on
+//! the SHARED [`QuantPool`], so one thread team serves every worker — and
+//! scatter the logit rows back to the per-request response channels.
+//!
+//! Row-disjoint writes and per-row ascending folds make the scatter exact:
+//! request r's logits are the same bits whether it rode alone or coalesced
+//! with neighbours (the determinism invariant `rust/tests/serve.rs` pins).
+//! A failed forward fans the error out to every request of the batch; the
+//! worker itself survives and keeps serving.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::quant::QuantPool;
+use crate::runtime::native::InferScratch;
+
+use super::queue::{BatchQueue, Request, Response, ServeError};
+use super::stats::ServeStats;
+
+pub(crate) fn worker_loop(queue: Arc<BatchQueue>, pool: Arc<QuantPool>, stats: Arc<ServeStats>) {
+    let mut scratch = InferScratch::default();
+    let mut xbuf: Vec<f32> = Vec::new();
+    let mut logits: Vec<f32> = Vec::new();
+    while let Some(batch) = queue.next_batch() {
+        serve_batch(&pool, &stats, batch, &mut scratch, &mut xbuf, &mut logits);
+    }
+}
+
+/// Execute one coalesced micro-batch and answer its requests.
+fn serve_batch(
+    pool: &QuantPool,
+    stats: &ServeStats,
+    batch: Vec<Request>,
+    scratch: &mut InferScratch,
+    xbuf: &mut Vec<f32>,
+    logits: &mut Vec<f32>,
+) {
+    debug_assert!(!batch.is_empty(), "queue yields non-empty batches");
+    let model = Arc::clone(&batch[0].model);
+    let n_requests = batch.len();
+    let total: usize = batch.iter().map(|r| r.n).sum();
+    let c = model.classes();
+
+    // gather: request rows become consecutive batch rows, request order
+    xbuf.clear();
+    xbuf.reserve(total * model.d_in());
+    for r in &batch {
+        xbuf.extend_from_slice(&r.x);
+    }
+
+    let t0 = Instant::now();
+    let result = model.infer_into(pool, xbuf, total, scratch, logits);
+    let service_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let queue_ms: Vec<f64> = batch
+        .iter()
+        .map(|r| t0.duration_since(r.enqueued).as_secs_f64() * 1e3)
+        .collect();
+
+    // scatter: row-disjoint slices back to the submitters (a dropped
+    // receiver just means the client stopped waiting; ignore)
+    match result {
+        Ok(()) => {
+            let mut row0 = 0usize;
+            for (r, &qms) in batch.into_iter().zip(queue_ms.iter()) {
+                let rows = logits[row0 * c..(row0 + r.n) * c].to_vec();
+                row0 += r.n;
+                let _ = r.tx.send(Ok(Response {
+                    logits: rows,
+                    n: r.n,
+                    queue_ms: qms,
+                    batch_samples: total,
+                }));
+            }
+            stats.record_batch(total, n_requests, service_ms, &queue_ms);
+        }
+        Err(e) => {
+            // a failed batch is NOT served work: it must not inflate the
+            // throughput/latency numbers the calibration consumes
+            let msg = e.to_string();
+            for r in batch {
+                let _ = r.tx.send(Err(ServeError::Failed(msg.clone())));
+            }
+            stats.record_failed(n_requests);
+        }
+    }
+}
