@@ -14,7 +14,7 @@
 use std::time::Instant;
 
 use adapt::bench_support::{write_bench_json, BenchEntry};
-use adapt::fixedpoint::{FixedPointFormat, SparseFixedTensor};
+use adapt::fixedpoint::{quantize_nr_slice, FixedPointFormat, SparseFixedTensor};
 use adapt::quant::QuantPool;
 use adapt::runtime::native::gemm::{self, PackBuf};
 use adapt::runtime::native::{ops, QRow};
@@ -41,6 +41,38 @@ fn bench<F: FnMut()>(name: &str, iters: u32, mut f: F) -> f64 {
 fn gaussian(n: usize, sigma: f32, seed: u64) -> Vec<f32> {
     let mut r = Rng::seed_from(seed);
     (0..n).map(|_| r.normal() as f32 * sigma).collect()
+}
+
+/// One timed cell of the integer-GEMM grid: B pre-packed as `T` codes
+/// outside the timer (the frozen-serving shape), A packed per call inside
+/// it — mirroring what the f32 cell times, so the ratio is pure
+/// compute-width. Returns the median ms/iter.
+#[allow(clippy::too_many_arguments)]
+fn bench_int_cell<T: gemm::IntKernel>(
+    pool: &QuantPool,
+    name: &str,
+    iters: u32,
+    (m, k, n): (usize, usize, usize),
+    a: &[f32],
+    wq: &[f32],
+    bias: &[f32],
+    ifmt: FixedPointFormat,
+    qrow: &QRow,
+) -> f64 {
+    let simd = gemm::IntSimd::detect();
+    let inv = 1.0 / (ifmt.scale() * ifmt.scale());
+    let mut bp: Vec<T> = Vec::new();
+    gemm::pack_b_cols_q::<T>(wq, ifmt.scale(), k, n, &mut bp);
+    let mut ap: Vec<T> = Vec::new();
+    let mut z = vec![0.0f32; m * n];
+    let mut q = vec![0.0f32; m * n];
+    bench(name, iters, || {
+        gemm::pack_a_rows_q::<T>(a, ifmt.scale(), m, k, &mut ap);
+        let r = gemm::gemm_int_quant_into::<T>(
+            pool, simd, m, n, k, &ap, &bp, inv, bias, true, qrow, &mut z, &mut q,
+        );
+        std::hint::black_box(r);
+    })
 }
 
 /// An on-grid weight matrix with (approximately) the given non-zero
@@ -217,6 +249,51 @@ fn main() {
     derived.push(("calibration_dense_madds_per_ms".to_string(), cal_dense_rate));
     derived.push(("sparse_crossover_density".to_string(), crossover));
     println!("measured sparse/dense crossover density: {crossover:.2}");
+
+    // ---- integer GEMM path: i8/i16 code panels vs the f32 fused kernel --
+    // Both cells pre-pack B (the frozen serving weights) outside the timer
+    // and pack A per call inside it, so the ratio isolates compute width.
+    // The per-WL madds rates feed `KernelCalibration::dense_rate_for_wl`.
+    println!("-- integer GEMM: packed i8/i16 vs f32 fused ---------");
+    println!("int SIMD backend: {:?}", gemm::IntSimd::detect());
+    let int_shapes: &[(usize, usize, usize, u32)] = &[(32, 256, 256, 20), (32, 512, 512, 10)];
+    for &(wl, fl) in &[(8u8, 4u8), (16u8, 10u8)] {
+        let ifmt = FixedPointFormat::new(wl, fl);
+        for &(m, k, n, iters) in int_shapes {
+            let a = quantize_nr_slice(&gaussian(m * k, 0.5, 31 + wl as u64), ifmt);
+            let wq = quantize_nr_slice(&gaussian(k * n, 0.5, 47 + wl as u64), ifmt);
+            let bias = gaussian(n, 0.1, 53);
+            let tag = format!("m{m}_k{k}_n{n}");
+            let mut z = vec![0.0f32; m * n];
+            let mut q = vec![0.0f32; m * n];
+
+            gemm::pack_b_cols(&wq, k, n, &mut pack.b);
+            let name = format!("int grid f32 fused wl{wl:02} {tag}");
+            let f32_ms = bench(&name, iters, || {
+                gemm::pack_a_rows(&a, m, k, &mut pack.a);
+                let r = gemm::gemm_quant_into(
+                    &pool, m, n, k, &pack.a, &pack.b, &bias, true, &qrow, &mut z, &mut q, None,
+                );
+                std::hint::black_box(r);
+            });
+            tracked(&mut entries, &name, f32_ms);
+
+            let name = format!("int grid i{wl} packed wl{wl:02} {tag}");
+            let int_ms = if wl <= 8 {
+                bench_int_cell::<i8>(&pool, &name, iters, (m, k, n), &a, &wq, &bias, ifmt, &qrow)
+            } else {
+                bench_int_cell::<i16>(&pool, &name, iters, (m, k, n), &a, &wq, &bias, ifmt, &qrow)
+            };
+            tracked(&mut entries, &name, int_ms);
+            derived.push((format!("int{wl}_vs_f32_speedup_{tag}"), f32_ms / int_ms));
+            if (m, k, n) == (32, 512, 512) {
+                derived.push((
+                    format!("calibration_int_madds_per_ms_wl{wl:02}"),
+                    (m * k * n) as f64 / int_ms,
+                ));
+            }
+        }
+    }
 
     // ---- end-to-end native step/infer on the golden MLP config ----------
     println!("-- e2e native step (golden MLP config) --------------");

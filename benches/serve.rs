@@ -7,14 +7,16 @@
 //!     cargo bench --bench serve
 //!
 //! Writes `BENCH_serve.json`: per-cell mean request latency under
-//! `results`, and under `derived` the `serve_samples_per_ms_b<B>_w<W>`
-//! rates `perfmodel::ServeCalibration` consumes, next to
-//! `serve_pack_cache_speedup`.
+//! `results`, under `derived` the `serve_samples_per_ms_b<B>_w<W>` rates
+//! `perfmodel::ServeCalibration` consumes next to
+//! `serve_pack_cache_speedup`, and under `serve_stats` the full
+//! `ServeStatsSnapshot::to_json` dump (queue/service latency histograms
+//! included) of one instrumented flood.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use adapt::bench_support::{write_bench_json, BenchEntry};
+use adapt::bench_support::{write_bench_json_sections, BenchEntry};
 use adapt::fixedpoint::FixedPointFormat;
 use adapt::quant::QuantPool;
 use adapt::runtime::native::InferScratch;
@@ -153,7 +155,51 @@ fn main() {
     derived.push(("serve_pack_cache_speedup".to_string(), rebuilt / cached));
     println!("pack cache speedup: {:.2}x", rebuilt / cached);
 
-    match write_bench_json(std::path::Path::new("BENCH_serve.json"), &entries, &derived) {
+    // ---- one instrumented flood: latency-histogram export ---------------
+    // Re-run a representative grid cell and keep its telemetry: the
+    // shutdown snapshot (histograms included) goes into BENCH_serve.json
+    // verbatim so latency-distribution shifts are diffable from CI.
+    println!("-- instrumented flood (b32 w2): stats export --------");
+    let stats = {
+        let registry = Arc::new(ModelRegistry::new());
+        registry
+            .publish(ServedModel::freeze("serve-bench", &man, &params, &qp).expect("freeze"));
+        let server = ServeServer::start(
+            Arc::clone(&registry),
+            Arc::clone(&pool),
+            ServeConfig {
+                max_batch: 32,
+                max_wait: Duration::from_millis(1),
+                queue_capacity: REQUESTS + 1,
+                workers: 2,
+            },
+        );
+        let handle = server.handle();
+        let tickets: Vec<_> = inputs
+            .iter()
+            .map(|x| {
+                handle
+                    .submit_blocking("serve-bench", x.clone(), 1)
+                    .expect("submit")
+            })
+            .collect();
+        for t in tickets {
+            t.wait().expect("response");
+        }
+        server.shutdown()
+    };
+    println!(
+        "served {} samples, queue p95 {:.3} ms, service p95 {:.3} ms",
+        stats.samples, stats.queue.p95_ms, stats.service.p95_ms
+    );
+    let sections = vec![("serve_stats".to_string(), stats.to_json())];
+
+    match write_bench_json_sections(
+        std::path::Path::new("BENCH_serve.json"),
+        &entries,
+        &derived,
+        &sections,
+    ) {
         Ok(()) => println!("wrote BENCH_serve.json"),
         Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
     }

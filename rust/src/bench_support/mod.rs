@@ -195,6 +195,19 @@ pub fn write_bench_json(
     entries: &[BenchEntry],
     derived: &[(String, f64)],
 ) -> Result<()> {
+    write_bench_json_sections(path, entries, derived, &[])
+}
+
+/// [`write_bench_json`] plus extra top-level sections: each `(key, json)`
+/// pair is parsed and embedded verbatim under `key` — e.g. the serving
+/// bench attaches the full `ServeStatsSnapshot::to_json` dump (latency
+/// histograms included) next to its timing results.
+pub fn write_bench_json_sections(
+    path: &Path,
+    entries: &[BenchEntry],
+    derived: &[(String, f64)],
+    sections: &[(String, String)],
+) -> Result<()> {
     use crate::util::json::{num, Json};
     use std::collections::BTreeMap;
     let mut results = BTreeMap::new();
@@ -209,6 +222,11 @@ pub fn write_bench_json(
     top.insert("unit".to_string(), Json::Str("ms_per_iter".into()));
     top.insert("results".to_string(), Json::Obj(results));
     top.insert("derived".to_string(), Json::Obj(der));
+    for (k, raw) in sections {
+        let parsed = Json::parse(raw)
+            .map_err(|e| anyhow!("bench section '{k}' is not valid JSON: {e:?}"))?;
+        top.insert(k.clone(), parsed);
+    }
     std::fs::write(path, Json::Obj(top).to_string_pretty())
         .with_context(|| format!("writing bench results {}", path.display()))
 }
@@ -597,6 +615,34 @@ mod tests {
             j.req("derived").unwrap().req("a_over_b").unwrap().as_f64(),
             Some(2.5)
         );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bench_json_sections_embed_verbatim() {
+        use crate::util::json::Json;
+        let dir = std::env::temp_dir().join("adapt_test_bench_json_sections");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        let entries = vec![BenchEntry {
+            name: "a".into(),
+            ms_per_iter: 1.0,
+        }];
+        write_bench_json_sections(
+            &path,
+            &entries,
+            &[],
+            &[("serve_stats".into(), "{\"samples\": 7}".into())],
+        )
+        .unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(
+            j.req("serve_stats").unwrap().req("samples").unwrap().as_f64(),
+            Some(7.0)
+        );
+        // invalid sections are rejected, not silently dropped
+        let bad = write_bench_json_sections(&path, &entries, &[], &[("x".into(), "nope".into())]);
+        assert!(bad.is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -10,11 +10,14 @@
 //!   powers the PushDown engine.
 //! * [`sparse`] — the CSR-ish deployment substrate for quantized sparse
 //!   inference.
+//! * [`value`] — the precision-generic storage trait ([`QuantValue`])
+//!   behind the native backend's real i8/i16 integer GEMM panels.
 
 pub mod format;
 pub mod histogram;
 pub mod quantize;
 pub mod sparse;
+pub mod value;
 
 pub use format::FixedPointFormat;
 pub use histogram::{kl_divergence, quantization_kl, Histogram};
@@ -24,3 +27,4 @@ pub use quantize::{
     QUANTIZE_LANES,
 };
 pub use sparse::SparseFixedTensor;
+pub use value::QuantValue;

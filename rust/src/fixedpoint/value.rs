@@ -1,0 +1,229 @@
+//! Precision-generic storage values for the real integer compute path.
+//!
+//! A fake-quantized tensor under a `<WL, FL>` row holds values `m · 2^-FL`
+//! with integral `m ∈ [qmin, qmax]` — every value IS an integer code times a
+//! power-of-two scale. [`QuantValue`] abstracts over how that code is
+//! *stored* and *accumulated*: `f32` keeps today's float passthrough
+//! (codes-at-scale, float accumulation — bit-identical to the existing
+//! kernels), while `i8`/`i16` store the raw code in 8/16 bits and
+//! accumulate in a widened integer type where every multiply-add is exact.
+//!
+//! The split matters for the GEMM panels in `runtime::native::gemm`: an
+//! `i8` panel packs 4× more codes per cache line than the f32 panel before
+//! any SIMD, and the widened dot product is the TRUE fixed-point sum — the
+//! paper's "execute at the selected word length" claim (eq. 8/9) made
+//! runnable instead of merely modelled by `perfmodel`.
+//!
+//! # Accumulator widths
+//!
+//! * `i8 × i8 → i32`: each product is bounded by `2^7 · 2^7 = 2^14`, so a
+//!   depth-`k` sum stays inside `i32` for every `k ≤ 2^16` (the native
+//!   snapshot dispatch enforces that depth bound before choosing `i8`).
+//! * `i16 × i16 → i64`: a single product can reach `2^30`; two already
+//!   overflow `i32`, so the `i16` path MUST widen to `i64` (where sums are
+//!   safe beyond any realistic fan-in).
+//! * `f32` "widens" to `f32` — the identity passthrough used to prove the
+//!   generic kernels reproduce the float fold bit for bit.
+//!
+//! ```
+//! use adapt::fixedpoint::{FixedPointFormat, QuantValue};
+//!
+//! let fmt = FixedPointFormat::new(8, 4);
+//! // 0.3125 on the <8,4> grid is the integer code 5
+//! let code = <i8 as QuantValue>::from_code(0.3125 * fmt.scale());
+//! assert_eq!(code, 5);
+//! assert!(<i8 as QuantValue>::fits(fmt));
+//! // widening multiply-accumulate is exact: 5·5 + 0 = 25
+//! assert_eq!(<i8 as QuantValue>::mul_acc(code, code, 0), 25);
+//! ```
+
+use super::format::FixedPointFormat;
+
+/// A storage type for fixed-point integer codes plus its widened
+/// accumulator (module docs). Implemented for `f32` (zero-cost float
+/// passthrough), `i8` and `i16` (saturating narrow storage, exact widened
+/// accumulation).
+pub trait QuantValue: Copy + Send + Sync + 'static {
+    /// Widened accumulator: exact for every depth the dispatch admits.
+    type Acc: Copy + Send + Sync + 'static;
+    /// Storage width in bits.
+    const BITS: u8;
+    /// The zero code (panel padding).
+    const ZERO: Self;
+    /// The empty accumulator.
+    const ZERO_ACC: Self::Acc;
+
+    /// Store an integer code given as f32 (`value · 2^FL`, already
+    /// integral for on-grid inputs). Out-of-range codes saturate; NaN
+    /// stores zero — the semantics of Rust's float→int `as` cast.
+    fn from_code(code: f32) -> Self;
+
+    /// The stored code back as f32 (exact: every code fits f32's mantissa).
+    fn to_f32(self) -> f32;
+
+    /// `acc + a·b`, widening before the multiply so the result is exact
+    /// for the integer impls (and the plain float fold for `f32`).
+    fn mul_acc(a: Self, b: Self, acc: Self::Acc) -> Self::Acc;
+
+    /// Fold an accumulator back to f32 for the requant epilogue.
+    fn acc_to_f32(acc: Self::Acc) -> f32;
+
+    /// Can every code of `fmt` be stored losslessly in this type?
+    fn fits(fmt: FixedPointFormat) -> bool;
+}
+
+/// Zero-cost float passthrough: codes are stored at their original scale
+/// and accumulated with the exact `acc + a * b` fold of the f32 GEMM
+/// micro-kernel, so generic kernels instantiated at `f32` are bit-identical
+/// to the hand-written float path.
+impl QuantValue for f32 {
+    type Acc = f32;
+    const BITS: u8 = 32;
+    const ZERO: f32 = 0.0;
+    const ZERO_ACC: f32 = 0.0;
+
+    #[inline]
+    fn from_code(code: f32) -> f32 {
+        code
+    }
+
+    #[inline]
+    fn to_f32(self) -> f32 {
+        self
+    }
+
+    #[inline]
+    fn mul_acc(a: f32, b: f32, acc: f32) -> f32 {
+        acc + a * b
+    }
+
+    #[inline]
+    fn acc_to_f32(acc: f32) -> f32 {
+        acc
+    }
+
+    #[inline]
+    fn fits(_fmt: FixedPointFormat) -> bool {
+        true
+    }
+}
+
+impl QuantValue for i8 {
+    type Acc = i32;
+    const BITS: u8 = 8;
+    const ZERO: i8 = 0;
+    const ZERO_ACC: i32 = 0;
+
+    #[inline]
+    fn from_code(code: f32) -> i8 {
+        code as i8
+    }
+
+    #[inline]
+    fn to_f32(self) -> f32 {
+        self as f32
+    }
+
+    #[inline]
+    fn mul_acc(a: i8, b: i8, acc: i32) -> i32 {
+        acc + a as i32 * b as i32
+    }
+
+    #[inline]
+    fn acc_to_f32(acc: i32) -> f32 {
+        acc as f32
+    }
+
+    #[inline]
+    fn fits(fmt: FixedPointFormat) -> bool {
+        fmt.wl <= 8
+    }
+}
+
+impl QuantValue for i16 {
+    type Acc = i64;
+    const BITS: u8 = 16;
+    const ZERO: i16 = 0;
+    const ZERO_ACC: i64 = 0;
+
+    #[inline]
+    fn from_code(code: f32) -> i16 {
+        code as i16
+    }
+
+    #[inline]
+    fn to_f32(self) -> f32 {
+        self as f32
+    }
+
+    #[inline]
+    fn mul_acc(a: i16, b: i16, acc: i64) -> i64 {
+        // the product itself is exact in i32 (|p| <= 2^30) but the SUM is
+        // not — widen before accumulating (module docs)
+        acc + a as i64 * b as i64
+    }
+
+    #[inline]
+    fn acc_to_f32(acc: i64) -> f32 {
+        acc as f32
+    }
+
+    #[inline]
+    fn fits(fmt: FixedPointFormat) -> bool {
+        fmt.wl <= 16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn narrow_storage_saturates_and_round_trips() {
+        assert_eq!(<i8 as QuantValue>::from_code(5.0), 5);
+        assert_eq!(<i8 as QuantValue>::from_code(-128.0), -128);
+        assert_eq!(<i8 as QuantValue>::from_code(127.0), 127);
+        assert_eq!(<i8 as QuantValue>::from_code(200.0), 127, "saturate high");
+        assert_eq!(<i8 as QuantValue>::from_code(-200.0), -128, "saturate low");
+        assert_eq!(<i8 as QuantValue>::from_code(f32::NAN), 0, "NaN stores zero");
+        assert_eq!(<i16 as QuantValue>::from_code(-32768.0), -32768);
+        assert_eq!(<i16 as QuantValue>::from_code(1e9), 32767, "saturate high");
+        for c in [-128i8, -1, 0, 1, 127] {
+            assert_eq!(c.to_f32(), c as f32);
+        }
+    }
+
+    #[test]
+    fn accumulation_is_exact_at_the_extremes() {
+        // i8: the worst single product and a long sum of it
+        let p = <i8 as QuantValue>::mul_acc(-128, -128, 0);
+        assert_eq!(p, 16384);
+        let mut acc = 0i32;
+        for _ in 0..1 << 16 {
+            acc = <i8 as QuantValue>::mul_acc(-128, 127, acc);
+        }
+        assert_eq!(acc, -(128 * 127) * (1 << 16));
+        // i16: one extreme product already needs more than half of i32
+        let p = <i16 as QuantValue>::mul_acc(-32768, -32768, 0);
+        assert_eq!(p, 1 << 30);
+        let two = <i16 as QuantValue>::mul_acc(-32768, -32768, p);
+        assert_eq!(two, 1i64 << 31, "two extreme products exceed i32");
+    }
+
+    #[test]
+    fn f32_passthrough_matches_the_float_fold() {
+        let (a, b, acc) = (1.1f32, -2.3f32, 0.7f32);
+        let got = <f32 as QuantValue>::mul_acc(a, b, acc);
+        assert_eq!(got.to_bits(), (acc + a * b).to_bits());
+        assert_eq!(<f32 as QuantValue>::from_code(1.25), 1.25);
+    }
+
+    #[test]
+    fn fits_follows_word_length() {
+        assert!(<i8 as QuantValue>::fits(FixedPointFormat::new(8, 4)));
+        assert!(!<i8 as QuantValue>::fits(FixedPointFormat::new(9, 4)));
+        assert!(<i16 as QuantValue>::fits(FixedPointFormat::new(16, 10)));
+        assert!(!<i16 as QuantValue>::fits(FixedPointFormat::new(17, 10)));
+        assert!(<f32 as QuantValue>::fits(FixedPointFormat::new(32, 16)));
+    }
+}

@@ -23,8 +23,17 @@
 //!   rates;
 //! * `calibration_sparse_madds_per_ms_d<DD>` — sparse kernel rate at
 //!   density `DD`% (e.g. `_d30` is a 0.30 non-zero fraction);
+//! * `calibration_int_madds_per_ms_wl<WL>` — integer-GEMM rate with
+//!   panels stored at width `WL` (the i8/i16 paths; optional — dumps from
+//!   before the integer path carry none, and the model then charges every
+//!   dense layer the f32 rate);
 //! * `sparse_crossover_density` — highest measured density where the
 //!   sparse kernel still beats the dense one.
+//!
+//! With the integer keys present the measured model stops assuming "a CPU
+//! multiplies f32 at one speed whatever WL says": layers whose final word
+//! length fits i8/i16 storage are charged the measured integer rate, the
+//! same dispatch `runtime::native::ModelSnapshot` applies at pack time.
 //!
 //! Since the serving subsystem exists, a second measured source sits next
 //! to the kernel rates: `benches/serve.rs` drives the full
@@ -64,6 +73,12 @@ pub struct KernelCalibration {
     /// Highest measured density at which the sparse kernel still beat the
     /// dense one (the bench's recommendation for `ADAPT_SPARSE_CROSSOVER`).
     pub crossover_density: f64,
+    /// `(storage WL, MAdds/ms)` rows for the integer GEMM path,
+    /// width-ascending (`calibration_int_madds_per_ms_wl<WL>` entries).
+    /// Optional: empty for dumps that predate the integer path, in which
+    /// case [`dense_rate_for_wl`](Self::dense_rate_for_wl) always answers
+    /// the f32 rate.
+    pub int_rates: Vec<(u32, f64)>,
 }
 
 impl KernelCalibration {
@@ -81,6 +96,7 @@ impl KernelCalibration {
             .and_then(|v| v.as_f64())
             .ok_or_else(|| anyhow!("calibration_dense_madds_per_ms missing"))?;
         let mut sparse_rates = Vec::new();
+        let mut int_rates = Vec::new();
         for (k, v) in map {
             if let Some(suffix) = k.strip_prefix("calibration_sparse_madds_per_ms_d") {
                 let pct: u32 = suffix
@@ -90,12 +106,21 @@ impl KernelCalibration {
                     .as_f64()
                     .ok_or_else(|| anyhow!("'{k}' is not a number"))?;
                 sparse_rates.push((pct as f64 / 100.0, rate));
+            } else if let Some(suffix) = k.strip_prefix("calibration_int_madds_per_ms_wl") {
+                let wl: u32 = suffix
+                    .parse()
+                    .with_context(|| format!("bad word-length suffix in '{k}'"))?;
+                let rate = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("'{k}' is not a number"))?;
+                int_rates.push((wl, rate));
             }
         }
         if sparse_rates.is_empty() {
             return Err(anyhow!("no calibration_sparse_madds_per_ms_d* entries"));
         }
         sparse_rates.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite densities"));
+        int_rates.sort_by_key(|r| r.0);
         // a missing key must be an error, not a silent 0.0 — crossover 0
         // would route every layer dense and make the parsed sparse rates
         // unreachable (a bench that measured "sparse never wins" records an
@@ -108,7 +133,21 @@ impl KernelCalibration {
             dense_madds_per_ms: dense,
             sparse_rates,
             crossover_density,
+            int_rates,
         })
+    }
+
+    /// Dense-path rate for a layer whose AdaPT word length is `wl`: the
+    /// narrowest measured integer rate whose storage width still fits
+    /// (the wl08 row covers WL ≤ 8, wl16 covers WL ≤ 16 — the same
+    /// width-boundary dispatch `ModelSnapshot` applies at pack time),
+    /// else the f32 dense rate.
+    pub fn dense_rate_for_wl(&self, wl: u32) -> f64 {
+        self.int_rates
+            .iter()
+            .find(|&&(w, _)| wl <= w)
+            .map(|&(_, r)| r)
+            .unwrap_or(self.dense_madds_per_ms)
     }
 
     /// Sparse-kernel rate at `density`, linearly interpolated between the
@@ -136,10 +175,13 @@ impl KernelCalibration {
 
     /// Wall-clock inference speedup the MEASURED kernels predict for a
     /// trained run: each layer runs sparse (at its final measured density)
-    /// when that density is at or below the benched crossover, else dense;
-    /// the float32 baseline runs everything dense. Compare against
+    /// when that density is at or below the benched crossover, else on the
+    /// dense path at the rate its final word length earns
+    /// ([`dense_rate_for_wl`](Self::dense_rate_for_wl) — i8/i16 when the
+    /// bench recorded integer rates, f32 otherwise); the float32 baseline
+    /// runs everything dense at the f32 rate. Compare against
     /// `perfmodel::inference_speedup` to see how much of the modelled
-    /// speedup survives on hardware that cannot exploit reduced WL.
+    /// speedup survives on the measured kernels.
     pub fn measured_inference_speedup(
         &self,
         layers: &[LayerDesc],
@@ -149,16 +191,18 @@ impl KernelCalibration {
         if nz.len() < layers.len() || self.dense_madds_per_ms <= 0.0 {
             return None;
         }
+        let wls = run.layer_wl.last();
         let mut t_f32 = 0.0f64;
         let mut t_q = 0.0f64;
         for (l, desc) in layers.iter().enumerate() {
             let madds = desc.madds as f64;
             t_f32 += madds / self.dense_madds_per_ms;
             let density = nz[l] as f64;
+            let wl = wls.and_then(|w| w.get(l)).map(|&w| w as u32).unwrap_or(32);
             let rate = if density <= self.crossover_density {
                 self.sparse_rate_at(density)?
             } else {
-                self.dense_madds_per_ms
+                self.dense_rate_for_wl(wl)
             };
             if rate <= 0.0 {
                 return None;
@@ -357,6 +401,55 @@ mod tests {
         // midpoint of (0.10, 4000) .. (0.30, 1500)
         let mid = cal.sparse_rate_at(0.20).unwrap();
         assert!((mid - 2750.0).abs() < 1e-9, "{mid}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    fn write_bench_with_int_rates(dir: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_native.json");
+        let text = r#"{
+  "derived": {
+    "calibration_dense_madds_per_ms": 1000.0,
+    "calibration_int_madds_per_ms_wl08": 3000.0,
+    "calibration_int_madds_per_ms_wl16": 1500.0,
+    "calibration_sparse_madds_per_ms_d10": 4000.0,
+    "calibration_sparse_madds_per_ms_d30": 1500.0,
+    "calibration_sparse_madds_per_ms_d50": 900.0,
+    "sparse_crossover_density": 0.3
+  },
+  "results": {},
+  "unit": "ms_per_iter"
+}"#;
+        std::fs::write(&path, text).unwrap();
+        path
+    }
+
+    #[test]
+    fn int_rates_are_optional_and_route_by_width_boundary() {
+        // a dump from before the integer path: no int keys, every dense
+        // layer charges the f32 rate whatever WL says
+        let path = write_bench("adapt_test_calibration_noint");
+        let cal = KernelCalibration::from_bench_json(&path).unwrap();
+        assert!(cal.int_rates.is_empty());
+        assert_eq!(cal.dense_rate_for_wl(8), 1000.0);
+        std::fs::remove_file(&path).ok();
+
+        let path = write_bench_with_int_rates("adapt_test_calibration_int");
+        let cal = KernelCalibration::from_bench_json(&path).unwrap();
+        assert_eq!(cal.int_rates, vec![(8, 3000.0), (16, 1500.0)]);
+        // same width-boundary dispatch as ModelSnapshot: ≤8 → i8 rate,
+        // ≤16 → i16 rate, wider → f32
+        assert_eq!(cal.dense_rate_for_wl(6), 3000.0);
+        assert_eq!(cal.dense_rate_for_wl(8), 3000.0);
+        assert_eq!(cal.dense_rate_for_wl(12), 1500.0);
+        assert_eq!(cal.dense_rate_for_wl(24), 1000.0);
+        // dense-territory density with final WL 8: the measured model now
+        // credits the i8 path, 3000 vs 1000 -> 3x
+        let su = cal
+            .measured_inference_speedup(&layers(), &run_with_density(0.8))
+            .unwrap();
+        assert!((su - 3.0).abs() < 1e-9, "{su}");
         std::fs::remove_file(&path).ok();
     }
 

@@ -23,6 +23,19 @@
 //!   (+ STE mask in training) happen in the write-back / post-pass of the
 //!   same parallel task that produced the rows, instead of as separate
 //!   sequential sweeps over the output tensor.
+//! * **Integer panels** — inference layers whose AdaPT-selected formats fit
+//!   8 (resp. 16) bits skip f32 compute entirely: [`pack_a_rows_q`] /
+//!   [`pack_b_cols_q`] store raw fixed-point CODES in `i8`/`i16` panels
+//!   (4×/2× more values per cache line than f32) and
+//!   [`gemm_int_quant_into`] accumulates them in widened integers
+//!   (`i8×i8→i32`, `i16×i16→i64` — every multiply-add exact), rescaling
+//!   once by the exact power of two `2^-(FL_a+FL_w)` in the fused epilogue.
+//!   AVX2/NEON kernels sit behind [`IntSimd`] runtime feature detection;
+//!   the scalar generic kernel is their bit-parity oracle
+//!   (`super::ops::*_naive` stays the f32 oracle). Integer addition is
+//!   associative, so the int path is bit-deterministic across worker
+//!   counts AND SIMD backends by construction — stronger than the f32
+//!   path's fixed-fold guarantee (`rust/tests/int_kernels.rs`).
 //!
 //! # Determinism invariant
 //!
@@ -53,7 +66,9 @@
 //! assert_eq!(c, vec![19.0, 22.0, 43.0, 50.0]);
 //! ```
 
-use crate::fixedpoint::max_abs;
+use std::sync::OnceLock;
+
+use crate::fixedpoint::{max_abs, QuantValue};
 use crate::quant::QuantPool;
 
 use super::ops::{fake_quant, fake_quant_ste, QRow};
@@ -180,6 +195,90 @@ pub fn pack_bt_rows(w: &[f32], q: usize, n: usize, out: &mut Vec<f32>) {
 }
 
 // ---------------------------------------------------------------------------
+// integer packing
+// ---------------------------------------------------------------------------
+
+/// Zero-code sibling of [`reuse`] for integer panels: the unconditional
+/// zero-fill IS the tile padding (a zero code multiplies to a zero product,
+/// exactly like the f32 packers' padded lanes).
+fn reuse_q<T: QuantValue>(buf: &mut Vec<T>, n: usize) {
+    buf.clear();
+    buf.resize(n, T::ZERO);
+}
+
+/// [`pack_a_rows`] with on-the-fly code extraction: `a` is fake-quantized
+/// under a `<WL, FL>` row with `scale = 2^FL`, so `v · scale` is an exact
+/// integer (a power-of-two multiply only shifts the exponent) that
+/// [`QuantValue::from_code`] stores losslessly whenever the format fits the
+/// storage width. Identical strip layout to the f32 packer, zero-padded.
+pub fn pack_a_rows_q<T: QuantValue>(a: &[f32], scale: f32, m: usize, k: usize, out: &mut Vec<T>) {
+    debug_assert_eq!(a.len(), m * k);
+    let strips = m.div_ceil(MR);
+    reuse_q(out, strips * k * MR);
+    for s in 0..strips {
+        let base = s * k * MR;
+        for mr in 0..MR.min(m - s * MR) {
+            let row = &a[(s * MR + mr) * k..(s * MR + mr + 1) * k];
+            for (kk, &v) in row.iter().enumerate() {
+                out[base + kk * MR + mr] = T::from_code(v * scale);
+            }
+        }
+    }
+}
+
+/// [`pack_b_cols`] with on-the-fly code extraction (see [`pack_a_rows_q`]
+/// for the exactness argument). This is the frozen-weight half of the
+/// integer path: the snapshot packs each eligible kernel once.
+pub fn pack_b_cols_q<T: QuantValue>(b: &[f32], scale: f32, k: usize, n: usize, out: &mut Vec<T>) {
+    debug_assert_eq!(b.len(), k * n);
+    let strips = n.div_ceil(NR);
+    reuse_q(out, strips * k * NR);
+    for t in 0..strips {
+        let base = t * k * NR;
+        let c0 = t * NR;
+        let w = NR.min(n - c0);
+        for kk in 0..k {
+            for jr in 0..w {
+                out[base + kk * NR + jr] = T::from_code(b[kk * n + c0 + jr] * scale);
+            }
+        }
+    }
+}
+
+/// `pack_a_rows_q::<i8>` under its width-specific name.
+pub fn pack_a_rows_i8(a: &[f32], scale: f32, m: usize, k: usize, out: &mut Vec<i8>) {
+    pack_a_rows_q(a, scale, m, k, out)
+}
+
+/// `pack_b_cols_q::<i8>` under its width-specific name.
+pub fn pack_b_cols_i8(b: &[f32], scale: f32, k: usize, n: usize, out: &mut Vec<i8>) {
+    pack_b_cols_q(b, scale, k, n, out)
+}
+
+/// `pack_a_rows_q::<i16>` under its width-specific name.
+pub fn pack_a_rows_i16(a: &[f32], scale: f32, m: usize, k: usize, out: &mut Vec<i16>) {
+    pack_a_rows_q(a, scale, m, k, out)
+}
+
+/// `pack_b_cols_q::<i16>` under its width-specific name.
+pub fn pack_b_cols_i16(b: &[f32], scale: f32, k: usize, n: usize, out: &mut Vec<i16>) {
+    pack_b_cols_q(b, scale, k, n, out)
+}
+
+/// Decode an integer panel back to the exact f32 panel it encodes
+/// (`code / scale`, a power-of-two division — exact). This is the
+/// correctness fallback when a call-time activation row disagrees with the
+/// row a frozen int pack assumed: the decoded panel is bit-identical to
+/// what [`pack_b_cols`] would produce from the fake-quantized kernel,
+/// padding included.
+pub fn decode_panel_q<T: QuantValue>(panel: &[T], scale: f32, out: &mut Vec<f32>) {
+    reuse(out, panel.len());
+    for (o, &c) in out.iter_mut().zip(panel) {
+        *o = c.to_f32() / scale;
+    }
+}
+
+// ---------------------------------------------------------------------------
 // micro-kernel
 // ---------------------------------------------------------------------------
 
@@ -202,6 +301,186 @@ fn microkernel(kdim: usize, ap: &[f32], bp: &[f32]) -> [[f32; NR]; MR] {
         }
     }
     acc
+}
+
+// ---------------------------------------------------------------------------
+// integer micro-kernels + SIMD dispatch
+// ---------------------------------------------------------------------------
+
+/// Integer micro-kernel backend. All backends produce bit-identical
+/// accumulators (integer arithmetic is exact and associative), so the
+/// choice only affects speed; `Scalar` is the oracle the SIMD paths are
+/// property-tested against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IntSimd {
+    /// Portable generic kernel — always available, the bit-parity oracle.
+    Scalar,
+    /// AVX2 (x86-64): 8 sign-extended i32 lanes per accumulator row.
+    Avx2,
+    /// NEON (aarch64): widening i16 multiply-accumulate into 2×4 i32 lanes.
+    Neon,
+}
+
+static HW_SIMD: OnceLock<IntSimd> = OnceLock::new();
+
+impl IntSimd {
+    /// Runtime backend selection. Setting `ADAPT_NO_SIMD` (any value)
+    /// forces the scalar oracle — checked on every call so tests and CI can
+    /// gate it; the hardware probe itself runs once per process. Passing a
+    /// backend the host does not support to a kernel is undefined behavior;
+    /// only hand backends from `detect`/[`IntSimd::supported`] to the
+    /// drivers.
+    pub fn detect() -> IntSimd {
+        if std::env::var_os("ADAPT_NO_SIMD").is_some() {
+            return IntSimd::Scalar;
+        }
+        *HW_SIMD.get_or_init(Self::probe)
+    }
+
+    #[allow(unreachable_code)]
+    fn probe() -> IntSimd {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::is_x86_feature_detected!("avx2") {
+                return IntSimd::Avx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            return IntSimd::Neon;
+        }
+        IntSimd::Scalar
+    }
+
+    /// Every backend that is safe on this host under the current
+    /// environment (always starts with `Scalar`). Parity tests iterate this
+    /// instead of mutating `ADAPT_NO_SIMD`, which would race across
+    /// threads.
+    pub fn supported() -> Vec<IntSimd> {
+        let mut v = vec![IntSimd::Scalar];
+        let hw = IntSimd::detect();
+        if hw != IntSimd::Scalar {
+            v.push(hw);
+        }
+        v
+    }
+}
+
+/// Generic scalar integer micro-kernel: one MR×NR tile over the full depth
+/// extent, accumulating with the widening exact [`QuantValue::mul_acc`].
+/// The `f32` instantiation performs bit-for-bit the fold of [`microkernel`]
+/// (asserted in the unit tests); the `i8`/`i16` instantiations are the
+/// oracle the SIMD kernels must match exactly.
+#[inline]
+fn microkernel_q<T: QuantValue>(kdim: usize, ap: &[T], bp: &[T]) -> [[T::Acc; NR]; MR] {
+    debug_assert!(ap.len() >= kdim * MR);
+    debug_assert!(bp.len() >= kdim * NR);
+    let mut acc = [[T::ZERO_ACC; NR]; MR];
+    for kk in 0..kdim {
+        let a: &[T; MR] = ap[kk * MR..kk * MR + MR].try_into().expect("packed A lane");
+        let b: &[T; NR] = bp[kk * NR..kk * NR + NR].try_into().expect("packed B lane");
+        for mr in 0..MR {
+            let av = a[mr];
+            for (c, &bv) in acc[mr].iter_mut().zip(b) {
+                *c = T::mul_acc(av, bv, *c);
+            }
+        }
+    }
+    acc
+}
+
+/// AVX2 i8 micro-kernel: per depth step the NR=8 B codes load as one 64-bit
+/// lane and sign-extend to 8 i32 lanes; each of the MR broadcast A codes
+/// multiplies into its own 8-lane accumulator. Same integer sums as
+/// `microkernel_q::<i8>` — i32 lane arithmetic is exact under the driver's
+/// depth bound — hence bit-identical results.
+///
+/// # Safety
+/// AVX2 must be available (only reachable via [`IntSimd::Avx2`], which
+/// [`IntSimd::detect`] hands out after a feature probe), and the panels
+/// must hold at least `kdim` full lanes (guaranteed by the packers).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn microkernel_i8_avx2(kdim: usize, ap: &[i8], bp: &[i8]) -> [[i32; NR]; MR] {
+    use std::arch::x86_64::*;
+    debug_assert!(ap.len() >= kdim * MR);
+    debug_assert!(bp.len() >= kdim * NR);
+    let mut acc = [_mm256_setzero_si256(); MR];
+    for kk in 0..kdim {
+        let b8 = _mm_loadl_epi64(bp.as_ptr().add(kk * NR) as *const __m128i);
+        let b32 = _mm256_cvtepi8_epi32(b8);
+        for (mr, accr) in acc.iter_mut().enumerate() {
+            let av = _mm256_set1_epi32(*ap.get_unchecked(kk * MR + mr) as i32);
+            *accr = _mm256_add_epi32(*accr, _mm256_mullo_epi32(av, b32));
+        }
+    }
+    let mut out = [[0i32; NR]; MR];
+    for (row, accr) in out.iter_mut().zip(&acc) {
+        _mm256_storeu_si256(row.as_mut_ptr() as *mut __m256i, *accr);
+    }
+    out
+}
+
+/// NEON i8 micro-kernel: B codes widen to i16 once per depth step, then a
+/// widening multiply-accumulate (`vmlal_s16`) folds each broadcast A code
+/// into two 4-lane i32 accumulators per tile row. Bit-identical to the
+/// scalar oracle for the same reason as the AVX2 path.
+///
+/// # Safety
+/// NEON is baseline on aarch64 targets; panels must hold `kdim` full lanes.
+#[cfg(target_arch = "aarch64")]
+unsafe fn microkernel_i8_neon(kdim: usize, ap: &[i8], bp: &[i8]) -> [[i32; NR]; MR] {
+    use std::arch::aarch64::*;
+    debug_assert!(ap.len() >= kdim * MR);
+    debug_assert!(bp.len() >= kdim * NR);
+    let mut lo = [vdupq_n_s32(0); MR];
+    let mut hi = [vdupq_n_s32(0); MR];
+    for kk in 0..kdim {
+        let b16 = vmovl_s8(vld1_s8(bp.as_ptr().add(kk * NR)));
+        for mr in 0..MR {
+            let av = vdup_n_s16(*ap.get_unchecked(kk * MR + mr) as i16);
+            lo[mr] = vmlal_s16(lo[mr], av, vget_low_s16(b16));
+            hi[mr] = vmlal_s16(hi[mr], av, vget_high_s16(b16));
+        }
+    }
+    let mut out = [[0i32; NR]; MR];
+    for mr in 0..MR {
+        vst1q_s32(out[mr].as_mut_ptr(), lo[mr]);
+        vst1q_s32(out[mr].as_mut_ptr().add(4), hi[mr]);
+    }
+    out
+}
+
+/// Tile dispatch for the integer GEMM driver. Lives here rather than on
+/// [`QuantValue`] so the fixed-point layer stays free of kernel-shape
+/// (MR/NR) details: every width defaults to the scalar generic kernel and
+/// `i8` overrides with the SIMD paths. The i16 kernel stays scalar — i64
+/// accumulator lanes buy nothing at NR=8 on AVX2/NEON — but i16 panels
+/// still halve memory traffic versus f32.
+pub trait IntKernel: QuantValue {
+    /// Compute one MR×NR tile; all backends return bit-identical
+    /// accumulators.
+    fn tile(simd: IntSimd, kdim: usize, ap: &[Self], bp: &[Self]) -> [[Self::Acc; NR]; MR];
+}
+
+impl IntKernel for i8 {
+    fn tile(simd: IntSimd, kdim: usize, ap: &[i8], bp: &[i8]) -> [[i32; NR]; MR] {
+        match simd {
+            // SAFETY: detect()/supported() only hand out backends the host
+            // passed the feature probe for (IntSimd::detect docs).
+            #[cfg(target_arch = "x86_64")]
+            IntSimd::Avx2 => unsafe { microkernel_i8_avx2(kdim, ap, bp) },
+            #[cfg(target_arch = "aarch64")]
+            IntSimd::Neon => unsafe { microkernel_i8_neon(kdim, ap, bp) },
+            _ => microkernel_q::<i8>(kdim, ap, bp),
+        }
+    }
+}
+
+impl IntKernel for i16 {
+    fn tile(_simd: IntSimd, kdim: usize, ap: &[i16], bp: &[i16]) -> [[i64; NR]; MR] {
+        microkernel_q::<i16>(kdim, ap, bp)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -377,6 +656,147 @@ pub fn gemm_quant_into(
             None => fake_quant(z_rows, row, q_rows),
         };
         (zeros, max_abs(z_rows))
+    });
+    let mut zeros = 0u64;
+    let mut absmax = 0.0f32;
+    for (zc, mx) in parts {
+        zeros += zc;
+        absmax = absmax.max(mx);
+    }
+    (zeros, absmax)
+}
+
+/// The integer tile loop: [`tile_range`]'s blocking with the requant
+/// epilogue fused into the write-back — `z = acc · inv_scale + bias (then
+/// ReLU)`. `inv_scale = 2^-(FL_a + FL_w)` is an exact power of two, so the
+/// rescale of an in-range accumulator is exact: the int path computes the
+/// TRUE fixed-point product where the f32 kernels may round intermediate
+/// sums.
+#[allow(clippy::too_many_arguments)]
+fn tile_range_q<T: IntKernel>(
+    simd: IntSimd,
+    mdim: usize,
+    ndim: usize,
+    kdim: usize,
+    apack: &[T],
+    bpack: &[T],
+    inv_scale: f32,
+    bias: &[f32],
+    relu: bool,
+    s0: usize,
+    s1: usize,
+    out_rows: &mut [f32],
+) {
+    let row0 = s0 * MR;
+    let col_strips = ndim.div_ceil(NR);
+    let ncs = (NC / NR).max(1);
+    let mut tb0 = 0;
+    while tb0 < col_strips {
+        let tb1 = (tb0 + ncs).min(col_strips);
+        for s in s0..s1 {
+            let ap = &apack[s * kdim * MR..(s + 1) * kdim * MR];
+            let rows = MR.min(mdim - s * MR);
+            for t in tb0..tb1 {
+                let bp = &bpack[t * kdim * NR..(t + 1) * kdim * NR];
+                let acc = T::tile(simd, kdim, ap, bp);
+                let col0 = t * NR;
+                let cols = NR.min(ndim - col0);
+                for (mr, arow) in acc.iter().enumerate().take(rows) {
+                    let r = s * MR + mr - row0;
+                    let dst = &mut out_rows[r * ndim + col0..r * ndim + col0 + cols];
+                    let brow = &bias[col0..col0 + cols];
+                    for ((d, &v), &bv) in dst.iter_mut().zip(arow).zip(brow) {
+                        let x = T::acc_to_f32(v) * inv_scale + bv;
+                        *d = if relu { x.max(0.0) } else { x };
+                    }
+                }
+            }
+        }
+        tb0 = tb1;
+    }
+}
+
+/// Integer sibling of [`gemm_quant_into`] for the frozen-weight inference
+/// path: both operands are packed CODE panels (activations at `2^FL_a`,
+/// weights at `2^FL_w`), the micro-kernel accumulates in widened integers,
+/// and the epilogue rescales by `inv_scale = 2^-(FL_a+FL_w)`, adds bias,
+/// applies ReLU and fake-quantizes `z` into `q` under `row` — all in the
+/// same parallel task. Returns `(exact zero count of q, max |z|)`, both
+/// order-independent.
+///
+/// For `i8` the i32 accumulator bound `|Σ| ≤ kdim · 2^14` requires
+/// `kdim ≤ 2^16`; the snapshot dispatch enforces this before choosing the
+/// i8 pack (debug-asserted here). The `i16` path accumulates in i64 and has
+/// no practical depth limit.
+///
+/// ```
+/// use adapt::fixedpoint::FixedPointFormat;
+/// use adapt::quant::QuantPool;
+/// use adapt::runtime::native::gemm::{self, IntSimd};
+/// use adapt::runtime::native::QRow;
+///
+/// let pool = QuantPool::new(2);
+/// let fmt = FixedPointFormat::new(8, 4);
+/// // one 2×2 layer with everything on the <8,4> grid
+/// let x = [0.5f32, -1.25, 2.0, 0.0625];
+/// let w = [1.0f32, -0.5, 0.25, 2.0];
+/// let (mut ap, mut bp) = (Vec::new(), Vec::new());
+/// gemm::pack_a_rows_q::<i8>(&x, fmt.scale(), 2, 2, &mut ap);
+/// gemm::pack_b_cols_q::<i8>(&w, fmt.scale(), 2, 2, &mut bp);
+/// let row = QRow::parse(&fmt.qparams_row(1.0), 0).unwrap();
+/// let inv = 1.0 / (fmt.scale() * fmt.scale());
+/// let (mut z, mut q) = (vec![0.0f32; 4], vec![0.0f32; 4]);
+/// gemm::gemm_int_quant_into::<i8>(
+///     &pool, IntSimd::Scalar, 2, 2, 2, &ap, &bp, inv, &[0.0, 0.0], false, &row, &mut z,
+///     &mut q,
+/// );
+/// // exact fixed-point dot product: 0.5·1.0 + (-1.25)·0.25 = 0.1875
+/// assert_eq!(z[0], 0.1875);
+/// assert_eq!(q[0], 0.1875);
+/// ```
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_int_quant_into<T: IntKernel>(
+    pool: &QuantPool,
+    simd: IntSimd,
+    mdim: usize,
+    ndim: usize,
+    kdim: usize,
+    apack: &[T],
+    bpack: &[T],
+    inv_scale: f32,
+    bias: &[f32],
+    relu: bool,
+    row: &QRow,
+    z: &mut [f32],
+    q: &mut [f32],
+) -> (u64, f32) {
+    assert_eq!(z.len(), mdim * ndim, "int gemm z shape");
+    assert_eq!(q.len(), mdim * ndim, "int gemm q shape");
+    assert_eq!(bias.len(), ndim, "int gemm bias shape");
+    debug_assert_eq!(apack.len(), packed_a_len(mdim, kdim), "packed int A panel length");
+    debug_assert_eq!(bpack.len(), packed_b_len(kdim, ndim), "packed int B panel length");
+    debug_assert!(T::BITS > 8 || kdim <= 1 << 16, "i8 accumulator depth bound");
+    if mdim == 0 || ndim == 0 {
+        return (0, 0.0);
+    }
+    let strips = mdim.div_ceil(MR);
+    let (per, blocks) = strip_blocks(pool, strips);
+    let z_ptr = SendPtr(z.as_mut_ptr());
+    let q_ptr = SendPtr(q.as_mut_ptr());
+    let parts = pool.run_indexed_plain(blocks, |bi| {
+        let s0 = bi * per;
+        let s1 = ((bi + 1) * per).min(strips);
+        let row0 = s0 * MR;
+        let row1 = (s1 * MR).min(mdim);
+        let len = (row1 - row0) * ndim;
+        // SAFETY: see SendPtr — disjoint row ranges, batch joined before
+        // the caller's borrows end.
+        let z_rows: &mut [f32] =
+            unsafe { std::slice::from_raw_parts_mut(z_ptr.0.add(row0 * ndim), len) };
+        tile_range_q(simd, mdim, ndim, kdim, apack, bpack, inv_scale, bias, relu, s0, s1, z_rows);
+        let q_rows: &mut [f32] =
+            unsafe { std::slice::from_raw_parts_mut(q_ptr.0.add(row0 * ndim), len) };
+        (fake_quant(z_rows, row, q_rows), max_abs(z_rows))
     });
     let mut zeros = 0u64;
     let mut absmax = 0.0f32;
@@ -707,5 +1127,171 @@ mod tests {
         matmul_into(&p, &a, &b, m, k, n, &mut pack, &mut out);
         assert_eq!(pack.a.capacity(), ca);
         assert_eq!(pack.b.capacity(), cb);
+    }
+
+    // ---- integer path ----------------------------------------------------
+
+    use crate::fixedpoint::FixedPointFormat;
+
+    /// Random tensor snapped to `fmt`'s grid (exactly representable).
+    fn gridv(n: usize, seed: u64, fmt: FixedPointFormat) -> Vec<f32> {
+        randv(n, seed).iter().map(|&v| fmt.quantize_nr(v)).collect()
+    }
+
+    fn rand_codes_i8(n: usize, seed: u64) -> Vec<i8> {
+        let mut r = Rng::seed_from(seed);
+        (0..n).map(|_| (r.next_u64() & 0xff) as u8 as i8).collect()
+    }
+
+    #[test]
+    fn int_packers_mirror_the_f32_strip_layout() {
+        let fmt = FixedPointFormat::new(8, 4);
+        let a = gridv(5 * 3, 51, fmt);
+        let mut fa = Vec::new();
+        pack_a_rows(&a, 5, 3, &mut fa);
+        let mut qa: Vec<i8> = Vec::new();
+        pack_a_rows_q(&a, fmt.scale(), 5, 3, &mut qa);
+        assert_eq!(qa.len(), fa.len());
+        for (q, f) in qa.iter().zip(&fa) {
+            assert_eq!(*q as f32, f * fmt.scale(), "code mismatch");
+        }
+        let fmt16 = FixedPointFormat::new(12, 8);
+        let b = gridv(3 * 10, 52, fmt16);
+        let mut fb = Vec::new();
+        pack_b_cols(&b, 3, 10, &mut fb);
+        let mut qb: Vec<i16> = Vec::new();
+        pack_b_cols_i16(&b, fmt16.scale(), 3, 10, &mut qb);
+        assert_eq!(qb.len(), fb.len());
+        for (q, f) in qb.iter().zip(&fb) {
+            assert_eq!(*q as f32, f * fmt16.scale(), "code mismatch");
+        }
+        // decoding an int panel reproduces the f32 panel bit for bit
+        let mut dec = Vec::new();
+        decode_panel_q(&qb, fmt16.scale(), &mut dec);
+        assert_eq!(bits(&dec), bits(&fb));
+    }
+
+    #[test]
+    fn generic_f32_microkernel_bit_matches_the_float_kernel() {
+        for (k, seed) in [(1usize, 61u64), (7, 62), (64, 63)] {
+            let ap = randv(k * MR, seed);
+            let bp = randv(k * NR, seed + 10);
+            let want = microkernel(k, &ap, &bp);
+            let got = microkernel_q::<f32>(k, &ap, &bp);
+            for (wr, gr) in want.iter().zip(&got) {
+                assert_eq!(bits(wr), bits(gr), "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_tiles_bit_match_the_scalar_oracle() {
+        for (k, seed) in [(1usize, 71u64), (7, 72), (64, 73), (333, 74)] {
+            let mut ap = rand_codes_i8(k * MR, seed);
+            let mut bp = rand_codes_i8(k * NR, seed + 10);
+            // force the extremes into the streams
+            ap[0] = -128;
+            bp[0] = -128;
+            if k > 1 {
+                ap[MR] = 127;
+                bp[NR] = -128;
+            }
+            let want = microkernel_q::<i8>(k, &ap, &bp);
+            for simd in IntSimd::supported() {
+                let got = <i8 as IntKernel>::tile(simd, k, &ap, &bp);
+                assert_eq!(want, got, "simd={simd:?} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn int_driver_matches_a_naive_integer_reference() {
+        let p = pool();
+        let fmt_a = FixedPointFormat::new(8, 4);
+        let fmt_w = FixedPointFormat::new(8, 5);
+        let out_fmt = FixedPointFormat::new(12, 8);
+        let row = ops::QRow::parse(&out_fmt.qparams_row(1.0), 0).unwrap();
+        let inv = 1.0 / (fmt_a.scale() * fmt_w.scale());
+        for (m, k, n, seed) in [(1usize, 1usize, 1usize, 81u64), (3, 5, 7, 82), (13, 37, 17, 83)] {
+            let a = gridv(m * k, seed, fmt_a);
+            let w = gridv(k * n, seed + 10, fmt_w);
+            let bias = randv(n, seed + 20);
+            // reference: exact i32 sums from the unpacked operands
+            let mut zr = vec![0.0f32; m * n];
+            for r in 0..m {
+                for c in 0..n {
+                    let mut acc = 0i32;
+                    for kk in 0..k {
+                        let ac = (a[r * k + kk] * fmt_a.scale()) as i32;
+                        let wc = (w[kk * n + c] * fmt_w.scale()) as i32;
+                        acc += ac * wc;
+                    }
+                    zr[r * n + c] = (acc as f32 * inv + bias[c]).max(0.0);
+                }
+            }
+            let mut qr = vec![0.0f32; m * n];
+            let zeros_ref = ops::fake_quant(&zr, &row, &mut qr);
+            let (mut ap, mut bp): (Vec<i8>, Vec<i8>) = (Vec::new(), Vec::new());
+            pack_a_rows_q(&a, fmt_a.scale(), m, k, &mut ap);
+            pack_b_cols_q(&w, fmt_w.scale(), k, n, &mut bp);
+            let (mut z, mut q) = (vec![0.0f32; m * n], vec![0.0f32; m * n]);
+            for simd in IntSimd::supported() {
+                let (zeros, absmax) = gemm_int_quant_into::<i8>(
+                    &p, simd, m, n, k, &ap, &bp, inv, &bias, true, &row, &mut z, &mut q,
+                );
+                assert_eq!(bits(&z), bits(&zr), "z {m}x{k}x{n} {simd:?}");
+                assert_eq!(bits(&q), bits(&qr), "q {m}x{k}x{n} {simd:?}");
+                assert_eq!(zeros, zeros_ref);
+                assert_eq!(absmax.to_bits(), max_abs(&zr).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn i16_driver_handles_wide_products_exactly() {
+        let p = pool();
+        let fmt = FixedPointFormat::new(16, 10);
+        let out_fmt = FixedPointFormat::new(16, 10);
+        let row = ops::QRow::parse(&out_fmt.qparams_row(1.0), 0).unwrap();
+        let inv = 1.0 / (fmt.scale() * fmt.scale());
+        let (m, k, n) = (5usize, 23usize, 9usize);
+        let a = gridv(m * k, 91, fmt);
+        let w = gridv(k * n, 92, fmt);
+        let bias = vec![0.0f32; n];
+        let mut zr = vec![0.0f32; m * n];
+        for r in 0..m {
+            for c in 0..n {
+                let mut acc = 0i64;
+                for kk in 0..k {
+                    let ac = (a[r * k + kk] * fmt.scale()) as i64;
+                    let wc = (w[kk * n + c] * fmt.scale()) as i64;
+                    acc += ac * wc;
+                }
+                zr[r * n + c] = acc as f32 * inv;
+            }
+        }
+        let mut qr = vec![0.0f32; m * n];
+        ops::fake_quant(&zr, &row, &mut qr);
+        let (mut ap, mut bp): (Vec<i16>, Vec<i16>) = (Vec::new(), Vec::new());
+        pack_a_rows_i16(&a, fmt.scale(), m, k, &mut ap);
+        pack_b_cols_i16(&w, fmt.scale(), k, n, &mut bp);
+        let (mut z, mut q) = (vec![0.0f32; m * n], vec![0.0f32; m * n]);
+        gemm_int_quant_into::<i16>(
+            &p,
+            IntSimd::Scalar,
+            m,
+            n,
+            k,
+            &ap,
+            &bp,
+            inv,
+            &bias,
+            false,
+            &row,
+            &mut z,
+            &mut q,
+        );
+        assert_eq!(bits(&z), bits(&zr));
+        assert_eq!(bits(&q), bits(&qr));
     }
 }

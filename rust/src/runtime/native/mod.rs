@@ -38,12 +38,17 @@
 //! rewrite changed no numerics — the committed golden CEs are untouched.
 //! Inference additionally dispatches layers whose measured quantized
 //! density falls at or below [`sparse_crossover()`] onto a CSR kernel that
-//! skips the zeros PushDown produced, and since the serving PR the chosen
-//! packs live in a persistent cross-call [`ModelSnapshot`] cache — packs
-//! are rebuilt only when the kernel bits, the weight qparams rows or the
-//! crossover change, never per call (see the `step` module docs and the
-//! ARCHITECTURE.md kernel-design + serving sections). The same snapshot
-//! type is the frozen-model unit of the [`crate::serve`] subsystem.
+//! skips the zeros PushDown produced, and — since the integer-GEMM PR —
+//! packs layers whose AdaPT-selected weight and activation formats both
+//! fit 8 (resp. 16) bits as raw `i8`/`i16` codes, running them on widening
+//! exact integer micro-kernels with AVX2/NEON fast paths behind runtime
+//! feature detection ([`IntSimd`]; `ADAPT_NO_SIMD=1` forces the scalar
+//! oracle). The chosen packs live in a persistent cross-call
+//! [`ModelSnapshot`] cache keyed per layer — a precision switch re-packs
+//! exactly the layers whose inputs changed, never the whole model and
+//! never per call (see the `step` module docs and the ARCHITECTURE.md
+//! kernel-design + serving sections). The same snapshot type is the
+//! frozen-model unit of the [`crate::serve`] subsystem.
 //!
 //! # Scope
 //!
@@ -81,6 +86,7 @@ pub mod gemm;
 pub mod ops;
 mod step;
 
+pub use gemm::IntSimd;
 pub use ops::{fake_quant, fake_quant_ste, QRow};
 pub use step::{
     mlp_dims, sparse_crossover, InferScratch, ModelSnapshot, NativeModel,

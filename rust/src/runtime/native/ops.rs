@@ -12,7 +12,11 @@
 //! loops are kept as the `*_naive` reference kernels — the bit-parity
 //! anchor of the property tests and the "before" side of
 //! `benches/native.rs`. Both sides compute the exact same per-element
-//! ascending-depth fold, so they agree bit-for-bit.
+//! ascending-depth fold, so they agree bit-for-bit. (The `*_naive` loops
+//! are the oracle of the FLOAT path only: the integer i8/i16 path in
+//! [`super::gemm`] computes a different — exact — fixed-point sum, and its
+//! oracle is the generic scalar `microkernel_q` tile the SIMD kernels must
+//! bit-match.)
 //!
 //! The quantizers delegate to the fixedpoint kernels
 //! ([`crate::fixedpoint::quantize_nr_ste`]) so the interpreter's fake-quant

@@ -36,24 +36,39 @@
 //! counted exactly during the fake-quant pass) is at or below
 //! [`sparse_crossover()`], into CSR through
 //! [`SparseFixedTensor::from_quantized`] (WL-bit packed codes — the
-//! deployment format — decoded once for compute). A [`ModelSnapshot`] holds
-//! exactly those frozen per-layer packs and runs batched forward passes of
-//! ANY batch size over them; it is the unit the serving subsystem
+//! deployment format — decoded once for compute). Dense layers past the
+//! first whose weight AND input-activation rows both describe true
+//! `<WL, FL>` grids fitting 8 (resp. 16) bits pack as raw `i8`/`i16`
+//! integer CODES instead and run the widening exact integer kernels of
+//! [`super::gemm`] — the paper's low-bit inference claim (eq. 8/9)
+//! actually executed, not just modelled. A [`ModelSnapshot`] holds exactly
+//! those frozen per-layer packs and runs batched forward passes of ANY
+//! batch size over them; it is the unit the serving subsystem
 //! ([`crate::serve`]) registers and the structure `NativeModel`'s own infer
 //! path caches ACROSS calls:
 //!
-//! * the cached snapshot is keyed on the exact bits of every kernel, every
-//!   weight qparams row and the active crossover, so a hit is only possible
-//!   for bit-identical inputs — **stale packs are impossible by
-//!   construction** (a precision switch changes the qparams row bits, a
-//!   weight update changes the kernel bits; either forces a rebuild);
+//! * the cache is keyed PER LAYER on the exact bits of that layer's
+//!   kernel, its weight qparams row and (for layers past the first) the
+//!   input activation row an integer pack would freeze, plus the active
+//!   crossover — a hit is only possible for bit-identical inputs, so
+//!   **stale packs are impossible by construction**;
+//! * a partial match re-packs exactly the changed layers and MOVES the
+//!   untouched layers' packs out of the previous snapshot
+//!   (`ModelSnapshot::build_reusing`): a precision switch that crosses a
+//!   storage-width boundary on one layer re-packs that layer alone;
 //! * the training step drops the cache eagerly after its ASGD update (its
 //!   whole purpose is to change the weights), so train→infer alternation
 //!   never pays the O(model) key comparison for a doomed match.
 //!
-//! Biases and activation qparams rows are NOT baked into the snapshot: they
-//! enter the fused epilogue directly from each call's inputs, so the packs
-//! stay valid under bias-only or activation-row-only changes.
+//! Biases are never baked into the snapshot: bias-only changes reuse every
+//! pack. Activation rows enter the fused epilogues from each call's
+//! inputs, but a layer's INPUT activation row is additionally frozen into
+//! its integer pack (the stored codes assume that row's `2^FL_a` grid), so
+//! changing activation row `l+i-1` re-packs downstream layer `i` — and
+//! only it. Calling a snapshot directly with a different activation row
+//! than it was built for stays correct without a rebuild: the int layer
+//! decodes its codes back to the exact f32 panel and takes the dense path
+//! ([`gemm::decode_panel_q`]).
 //!
 //! This is where the trained sparsity the controllers measure becomes
 //! wall-clock inference speedup; the crossover default comes from
@@ -153,18 +168,55 @@ pub fn mlp_dims(man: &Manifest) -> Result<Vec<(usize, usize)>> {
     Ok(dims)
 }
 
-/// One layer's frozen kernel inside a [`ModelSnapshot`]: either the
-/// blocked-GEMM right-operand panel or the decoded CSR triple, chosen at
-/// build time from the measured density.
+/// One layer's frozen kernel inside a [`ModelSnapshot`]: the f32
+/// blocked-GEMM panel, an integer code panel (i8/i16), or the decoded CSR
+/// triple — chosen at build time from the measured density and the frozen
+/// `<WL, FL>` formats (see [`ModelSnapshot::build`] for the dispatch
+/// order).
 pub(crate) enum SnapKernel {
     Dense {
         panel: Vec<f32>,
+    },
+    /// Weight and input-activation grids both fit 8 bits: i8 codes,
+    /// exact i32 accumulation.
+    Int8 {
+        panel: Vec<i8>,
+        /// Weight-row scale `2^FL_w` (decodes the panel on the fallback
+        /// path).
+        w_scale: f32,
+        /// Bit pattern of the input activation qparams row the pack
+        /// assumed; `infer_into` verifies the call's row against it before
+        /// taking the integer path.
+        in_row: [u32; 5],
+        /// Exact requant factor `2^-(FL_a + FL_w)`.
+        inv_scale: f32,
+    },
+    /// Grids fit 16 bits (but not 8): i16 codes, exact i64 accumulation.
+    Int16 {
+        panel: Vec<i16>,
+        w_scale: f32,
+        in_row: [u32; 5],
+        inv_scale: f32,
     },
     Csr {
         row_ptr: Vec<u32>,
         col_idx: Vec<u32>,
         vals: Vec<f32>,
     },
+}
+
+/// Maximum fan-in the i8 path accepts: beyond this depth the i32
+/// accumulator bound of `gemm::gemm_int_quant_into` no longer holds.
+const INT8_DEPTH_MAX: usize = 1 << 16;
+
+/// Bit pattern of qparams row `idx` (cache keys, frozen int-pack
+/// assumptions).
+fn row_bits(qparams: &[f32], idx: usize) -> [u32; 5] {
+    let mut out = [0u32; 5];
+    for (o, v) in out.iter_mut().zip(&qparams[idx * 5..idx * 5 + 5]) {
+        *o = v.to_bits();
+    }
+    out
 }
 
 /// A frozen, compute-ready snapshot of a model's quantized kernels: the
@@ -190,18 +242,122 @@ pub struct ModelSnapshot {
 #[derive(Default)]
 pub struct InferScratch {
     apack: Vec<f32>,
+    /// Activation code panels of the integer path.
+    apack_i8: Vec<i8>,
+    apack_i16: Vec<i16>,
+    /// Decoded f32 weight panel for the int→dense fallback (stale
+    /// activation row, see the module docs).
+    wpanel: Vec<f32>,
     z: Vec<f32>,
     ping: Vec<f32>,
     pong: Vec<f32>,
 }
 
+/// Quantize and pack ONE layer (the per-layer body of
+/// [`ModelSnapshot::build`]), returning the chosen kernel and the measured
+/// density. Dispatch order:
+///
+/// 1. **CSR** — weight row enabled, `crossover > 0` and measured density at
+///    or below it, and the row describes a true `<WL, FL>` grid;
+/// 2. **Int8 / Int16** — layers past the first whose weight row AND input
+///    activation row (`l + i - 1`) both describe enabled true grids: the
+///    wider of the two word lengths picks the storage width (≤8 bits and
+///    fan-in within [`INT8_DEPTH_MAX`] → i8; ≤16 bits → i16). Layer 0 never
+///    packs integer — its input is the raw f32 batch, on no grid;
+/// 3. **Dense f32 panel** — everything else.
+fn pack_layer(
+    dims: &[(usize, usize)],
+    kernels: &[&[f32]],
+    qparams: &[f32],
+    crossover: f32,
+    i: usize,
+    wq: &mut Vec<f32>,
+) -> Result<(SnapKernel, f32)> {
+    let l = dims.len();
+    let (di, do_) = dims[i];
+    let w = kernels[i];
+    if w.len() != di * do_ {
+        return Err(anyhow!(
+            "snapshot: layer {i} kernel has {} elems, dims say {di}x{do_}",
+            w.len()
+        ));
+    }
+    let row = ops::QRow::parse(qparams, i)?;
+    wq.clear();
+    wq.resize(w.len(), 0.0);
+    let zeros = ops::fake_quant(w, &row, wq);
+    let dens = if w.is_empty() {
+        0.0
+    } else {
+        1.0 - zeros as f32 / w.len() as f32
+    };
+    let warr: [f32; 5] = qparams[i * 5..(i + 1) * 5]
+        .try_into()
+        .expect("qparams row width");
+    // only rows describing a true <WL,FL> grid can be packed to integer or
+    // WL-bit CSR codes; others (disabled/raw rows) stay dense f32
+    let fmt_w = FixedPointFormat::from_qparams_row(&warr);
+    // crossover == 0 fully disables the sparse path (the documented
+    // contract) — without the strict guard a 100%-pruned layer (density
+    // exactly 0.0) would still dispatch CSR
+    if row.enable && crossover > 0.0 && dens <= crossover {
+        if let Some((fmt, true)) = fmt_w {
+            let st = SparseFixedTensor::from_quantized(wq, di, do_, fmt);
+            let (row_ptr, col_idx, vals) = st.into_csr_f32();
+            return Ok((SnapKernel::Csr { row_ptr, col_idx, vals }, dens));
+        }
+    }
+    if i >= 1 {
+        if let Some((fw, true)) = fmt_w {
+            let aarr: [f32; 5] = qparams[(l + i - 1) * 5..(l + i) * 5]
+                .try_into()
+                .expect("qparams row width");
+            if let Some((fa, true)) = FixedPointFormat::from_qparams_row(&aarr) {
+                let wide = fw.wl.max(fa.wl);
+                let in_row = row_bits(qparams, l + i - 1);
+                // 2^(FL_w + FL_a) ≤ 2^62: exact, and so is its reciprocal
+                let inv_scale = 1.0 / (fw.scale() * fa.scale());
+                if wide <= 8 && di <= INT8_DEPTH_MAX {
+                    let mut panel = Vec::new();
+                    gemm::pack_b_cols_q::<i8>(wq, fw.scale(), di, do_, &mut panel);
+                    let kern = SnapKernel::Int8 { panel, w_scale: fw.scale(), in_row, inv_scale };
+                    return Ok((kern, dens));
+                }
+                if wide <= 16 {
+                    let mut panel = Vec::new();
+                    gemm::pack_b_cols_q::<i16>(wq, fw.scale(), di, do_, &mut panel);
+                    let kern = SnapKernel::Int16 { panel, w_scale: fw.scale(), in_row, inv_scale };
+                    return Ok((kern, dens));
+                }
+            }
+        }
+    }
+    let mut panel = Vec::new();
+    gemm::pack_b_cols(wq, di, do_, &mut panel);
+    Ok((SnapKernel::Dense { panel }, dens))
+}
+
+fn validate_snapshot_inputs(
+    dims: &[(usize, usize)],
+    kernels: &[&[f32]],
+    qparams: &[f32],
+) -> Result<()> {
+    let l = dims.len();
+    if kernels.len() != l {
+        return Err(anyhow!("snapshot: {} kernels for {l} layers", kernels.len()));
+    }
+    if qparams.len() < 2 * l * 5 {
+        return Err(anyhow!("snapshot: qparams len {} < {}", qparams.len(), 2 * l * 5));
+    }
+    Ok(())
+}
+
 impl ModelSnapshot {
-    /// Quantize `kernels[i]` under qparams row i and pack each layer once:
-    /// CSR when the row is enabled, describes a true `<WL, FL>` grid and
-    /// the measured density is at or below `crossover`; the dense blocked
-    /// panel otherwise. `dims` is the [`mlp_dims`] lowering; `qparams` is
-    /// the full `[2L, 5]` tensor (only the L weight rows are consumed
-    /// here — activation rows are read per forward call).
+    /// Quantize `kernels[i]` under qparams row i and pack each layer once
+    /// (see [`pack_layer`] for the CSR / Int8 / Int16 / dense dispatch
+    /// order). `dims` is the [`mlp_dims`] lowering; `qparams` is the full
+    /// `[2L, 5]` tensor (weight rows always; a layer's input activation row
+    /// is additionally frozen into its integer pack).
     pub fn build(
         dims: &[(usize, usize)],
         kernels: &[&[f32]],
@@ -209,55 +365,55 @@ impl ModelSnapshot {
         crossover: f32,
     ) -> Result<ModelSnapshot> {
         let l = dims.len();
-        if kernels.len() != l {
-            return Err(anyhow!("snapshot: {} kernels for {l} layers", kernels.len()));
-        }
-        if qparams.len() < 2 * l * 5 {
-            return Err(anyhow!("snapshot: qparams len {} < {}", qparams.len(), 2 * l * 5));
-        }
+        validate_snapshot_inputs(dims, kernels, qparams)?;
         let mut wq: Vec<f32> = Vec::new();
         let mut packed = Vec::with_capacity(l);
         let mut density = Vec::with_capacity(l);
         for i in 0..l {
-            let (di, do_) = dims[i];
-            let w = kernels[i];
-            if w.len() != di * do_ {
-                return Err(anyhow!(
-                    "snapshot: layer {i} kernel has {} elems, dims say {di}x{do_}",
-                    w.len()
-                ));
-            }
-            let row = ops::QRow::parse(qparams, i)?;
-            wq.clear();
-            wq.resize(w.len(), 0.0);
-            let zeros = ops::fake_quant(w, &row, &mut wq);
-            let dens = if w.is_empty() {
-                0.0
-            } else {
-                1.0 - zeros as f32 / w.len() as f32
-            };
+            let (kern, dens) = pack_layer(dims, kernels, qparams, crossover, i, &mut wq)?;
+            packed.push(kern);
             density.push(dens);
-            let mut kernel = None;
-            // crossover == 0 fully disables the sparse path (the documented
-            // contract) — without the strict guard a 100%-pruned layer
-            // (density exactly 0.0) would still dispatch CSR
-            if row.enable && crossover > 0.0 && dens <= crossover {
-                let arr: [f32; 5] = qparams[i * 5..(i + 1) * 5]
-                    .try_into()
-                    .expect("qparams row width");
-                // only rows describing a true <WL,FL> grid can be packed to
-                // WL-bit CSR codes; others (disabled/raw rows) stay dense
-                if let Some((fmt, true)) = FixedPointFormat::from_qparams_row(&arr) {
-                    let st = SparseFixedTensor::from_quantized(&wq, di, do_, fmt);
-                    let (row_ptr, col_idx, vals) = st.into_csr_f32();
-                    kernel = Some(SnapKernel::Csr { row_ptr, col_idx, vals });
-                }
+        }
+        Ok(ModelSnapshot {
+            dims: dims.to_vec(),
+            kernels: packed,
+            density,
+        })
+    }
+
+    /// [`ModelSnapshot::build`], but MOVE the packs of layers marked
+    /// `keep[i]` out of `prev` instead of re-packing them — the
+    /// layer-granular half of the pack cache. The caller (the arena cache)
+    /// guarantees a kept layer's kernel bits, weight row and frozen input
+    /// activation row are bit-identical to what `prev` was built from, so
+    /// moving the pack is exact; only the changed layers pay quantize +
+    /// pack again.
+    pub(crate) fn build_reusing(
+        dims: &[(usize, usize)],
+        kernels: &[&[f32]],
+        qparams: &[f32],
+        crossover: f32,
+        prev: ModelSnapshot,
+        keep: &[bool],
+    ) -> Result<ModelSnapshot> {
+        let l = dims.len();
+        validate_snapshot_inputs(dims, kernels, qparams)?;
+        debug_assert_eq!(prev.dims, dims, "cache entry for a different model");
+        debug_assert_eq!(keep.len(), l);
+        let ModelSnapshot { kernels: prev_kernels, density: prev_density, .. } = prev;
+        let mut old: Vec<Option<SnapKernel>> = prev_kernels.into_iter().map(Some).collect();
+        let mut wq: Vec<f32> = Vec::new();
+        let mut packed = Vec::with_capacity(l);
+        let mut density = Vec::with_capacity(l);
+        for i in 0..l {
+            if keep[i] {
+                packed.push(old[i].take().expect("kept layer present in prev"));
+                density.push(prev_density[i]);
+            } else {
+                let (kern, dens) = pack_layer(dims, kernels, qparams, crossover, i, &mut wq)?;
+                packed.push(kern);
+                density.push(dens);
             }
-            packed.push(kernel.unwrap_or_else(|| {
-                let mut panel = Vec::new();
-                gemm::pack_b_cols(&wq, di, do_, &mut panel);
-                SnapKernel::Dense { panel }
-            }));
         }
         Ok(ModelSnapshot {
             dims: dims.to_vec(),
@@ -289,6 +445,21 @@ impl ModelSnapshot {
     /// Does layer `i` run on the sparse CSR kernel?
     pub fn layer_is_sparse(&self, i: usize) -> bool {
         matches!(self.kernels[i], SnapKernel::Csr { .. })
+    }
+
+    /// Does layer `i` run on a real integer (i8/i16) kernel?
+    pub fn layer_is_int(&self, i: usize) -> bool {
+        matches!(self.kernels[i], SnapKernel::Int8 { .. } | SnapKernel::Int16 { .. })
+    }
+
+    /// Storage width of layer `i`'s pack in bits: 8, 16, or 32 (dense f32
+    /// and CSR both store decoded f32 values).
+    pub fn layer_bits(&self, i: usize) -> u8 {
+        match self.kernels[i] {
+            SnapKernel::Int8 { .. } => 8,
+            SnapKernel::Int16 { .. } => 16,
+            _ => 32,
+        }
     }
 
     /// Batched quantized forward over the frozen packs: `b` samples from
@@ -347,6 +518,67 @@ impl ModelSnapshot {
                         dst, None,
                     );
                 }
+                SnapKernel::Int8 { panel, w_scale, in_row, inv_scale } => {
+                    if row_bits(qparams, l + i - 1) == *in_row {
+                        // the call's input grid matches the frozen pack:
+                        // quantize activations to i8 codes and run the
+                        // exact widening integer kernel
+                        let a_scale = f32::from_bits(in_row[0]);
+                        gemm::pack_a_rows_q::<i8>(src, a_scale, b, di, &mut s.apack_i8);
+                        gemm::gemm_int_quant_into::<i8>(
+                            pool,
+                            gemm::IntSimd::detect(),
+                            b,
+                            do_,
+                            di,
+                            &s.apack_i8,
+                            panel,
+                            *inv_scale,
+                            biases[i],
+                            relu,
+                            &row,
+                            &mut s.z,
+                            dst,
+                        );
+                    } else {
+                        // stale activation row: decode the codes back to
+                        // the exact f32 panel and take the dense path
+                        gemm::decode_panel_q(panel, *w_scale, &mut s.wpanel);
+                        gemm::pack_a_rows(src, b, di, &mut s.apack);
+                        gemm::gemm_quant_into(
+                            pool, b, do_, di, &s.apack, &s.wpanel, biases[i], relu, &row,
+                            &mut s.z, dst, None,
+                        );
+                    }
+                }
+                SnapKernel::Int16 { panel, w_scale, in_row, inv_scale } => {
+                    if row_bits(qparams, l + i - 1) == *in_row {
+                        let a_scale = f32::from_bits(in_row[0]);
+                        gemm::pack_a_rows_q::<i16>(src, a_scale, b, di, &mut s.apack_i16);
+                        gemm::gemm_int_quant_into::<i16>(
+                            pool,
+                            gemm::IntSimd::detect(),
+                            b,
+                            do_,
+                            di,
+                            &s.apack_i16,
+                            panel,
+                            *inv_scale,
+                            biases[i],
+                            relu,
+                            &row,
+                            &mut s.z,
+                            dst,
+                        );
+                    } else {
+                        gemm::decode_panel_q(panel, *w_scale, &mut s.wpanel);
+                        gemm::pack_a_rows(src, b, di, &mut s.apack);
+                        gemm::gemm_quant_into(
+                            pool, b, do_, di, &s.apack, &s.wpanel, biases[i], relu, &row,
+                            &mut s.z, dst, None,
+                        );
+                    }
+                }
                 SnapKernel::Csr { row_ptr, col_idx, vals } => {
                     gemm::sparse_forward_quant_into(
                         pool, src, b, di, do_, row_ptr, col_idx, vals, biases[i], relu, &row,
@@ -363,48 +595,44 @@ impl ModelSnapshot {
 }
 
 /// The arena-resident cross-call cache entry: a snapshot plus the exact
-/// bits it was built from (crossover, weight qparams rows, kernels — in
-/// that order). A cache hit requires every bit to match, so serving stale
+/// bits it was built from, keyed PER LAYER so a partial match can rebuild
+/// only the changed layers ([`ModelSnapshot::build_reusing`]). A layer hit
+/// requires every bit of that layer's inputs to match, so serving stale
 /// packs after a weight update or precision switch is impossible by
 /// construction.
 pub(crate) struct PackCacheEntry {
-    key: Vec<u32>,
+    crossover: u32,
+    /// One key per layer, see [`layer_cache_key`].
+    layer_keys: Vec<Vec<u32>>,
     snap: ModelSnapshot,
 }
 
-fn cache_key_build(crossover: f32, kernels: &[&[f32]], qparams: &[f32], l: usize) -> Vec<u32> {
-    let n: usize = 1 + 5 * l + kernels.iter().map(|k| k.len()).sum::<usize>();
-    let mut key = Vec::with_capacity(n);
-    key.push(crossover.to_bits());
-    for i in 0..l {
-        for v in &qparams[i * 5..(i + 1) * 5] {
-            key.push(v.to_bits());
-        }
-        for v in kernels[i] {
-            key.push(v.to_bits());
-        }
+/// Everything layer `i`'s pack depends on, as exact bits: its weight
+/// qparams row, its input activation row (zeros for layer 0, whose input is
+/// the raw batch), then the kernel values. The crossover is global and kept
+/// on [`PackCacheEntry`] instead.
+fn layer_cache_key(kernels: &[&[f32]], qparams: &[f32], l: usize, i: usize) -> Vec<u32> {
+    let mut key = Vec::with_capacity(10 + kernels[i].len());
+    key.extend(row_bits(qparams, i));
+    key.extend(if i >= 1 { row_bits(qparams, l + i - 1) } else { [0u32; 5] });
+    for v in kernels[i] {
+        key.push(v.to_bits());
     }
     key
 }
 
-fn cache_key_matches(key: &[u32], crossover: f32, kernels: &[&[f32]], qparams: &[f32], l: usize) -> bool {
-    let mut it = key.iter();
-    if it.next().copied() != Some(crossover.to_bits()) {
+fn layer_key_matches(key: &[u32], kernels: &[&[f32]], qparams: &[f32], l: usize, i: usize) -> bool {
+    if key.len() != 10 + kernels[i].len() {
         return false;
     }
-    for i in 0..l {
-        for v in &qparams[i * 5..(i + 1) * 5] {
-            if it.next().copied() != Some(v.to_bits()) {
-                return false;
-            }
-        }
-        for v in kernels[i] {
-            if it.next().copied() != Some(v.to_bits()) {
-                return false;
-            }
-        }
+    if key[..5] != row_bits(qparams, i) {
+        return false;
     }
-    it.next().is_none()
+    let in_bits = if i >= 1 { row_bits(qparams, l + i - 1) } else { [0u32; 5] };
+    if key[5..10] != in_bits {
+        return false;
+    }
+    key[10..].iter().zip(kernels[i]).all(|(k, v)| *k == v.to_bits())
 }
 
 /// Reusable per-model scratch: all intermediate tensors of the train/infer
@@ -775,18 +1003,29 @@ impl ExecModule for NativeInfer {
         let mut guard = m.scratch.lock().unwrap_or_else(|p| p.into_inner());
         let ar = &mut *guard;
 
-        // cross-call pack/CSR cache: hit only on bit-identical
-        // (crossover, weight rows, kernels) — see the module docs
-        let hit = matches!(
-            &ar.cache,
-            Some(entry) if cache_key_matches(&entry.key, crossover, &kernels, &qparams, l)
-        );
+        // cross-call pack/CSR cache, keyed per layer: a full hit reuses the
+        // snapshot as-is; a partial hit (same crossover, some layer bits
+        // changed) MOVES the untouched layers' packs into a rebuilt
+        // snapshot and re-packs only the changed ones — see the module docs
+        let crossover_bits = crossover.to_bits();
+        let keep: Option<Vec<bool>> = ar.cache.as_ref().and_then(|e| {
+            (e.crossover == crossover_bits && e.layer_keys.len() == l).then(|| {
+                (0..l)
+                    .map(|i| layer_key_matches(&e.layer_keys[i], &kernels, &qparams, l, i))
+                    .collect()
+            })
+        });
+        let hit = keep.as_ref().is_some_and(|k| k.iter().all(|&m| m));
         if !hit {
-            let snap = ModelSnapshot::build(&m.dims, &kernels, &qparams, crossover)?;
-            ar.cache = Some(PackCacheEntry {
-                key: cache_key_build(crossover, &kernels, &qparams, l),
-                snap,
-            });
+            let layer_keys: Vec<Vec<u32>> =
+                (0..l).map(|i| layer_cache_key(&kernels, &qparams, l, i)).collect();
+            let snap = match (ar.cache.take(), keep) {
+                (Some(entry), Some(keep)) => ModelSnapshot::build_reusing(
+                    &m.dims, &kernels, &qparams, crossover, entry.snap, &keep,
+                )?,
+                _ => ModelSnapshot::build(&m.dims, &kernels, &qparams, crossover)?,
+            };
+            ar.cache = Some(PackCacheEntry { crossover: crossover_bits, layer_keys, snap });
         }
         let StepArena { cache, infer, .. } = ar;
         let entry = cache.as_ref().expect("cache populated above");
@@ -975,6 +1214,8 @@ mod tests {
             let guard = m.scratch.lock().unwrap_or_else(|p| p.into_inner());
             guard.cache.as_ref().map(|e| match &e.snap.kernels[0] {
                 SnapKernel::Dense { panel } => panel.as_ptr() as usize,
+                SnapKernel::Int8 { panel, .. } => panel.as_ptr() as usize,
+                SnapKernel::Int16 { panel, .. } => panel.as_ptr() as usize,
                 SnapKernel::Csr { vals, .. } => vals.as_ptr() as usize,
             })
         };
@@ -1044,6 +1285,119 @@ mod tests {
         let iin2 = pack_infer_inputs(&man, &new_params, &bn, &x, &qp).unwrap();
         let l2 = infer.execute_f32(&iin2, &man.infer_outputs).unwrap();
         assert!(l2[0].iter().all(|v| v.is_finite()));
+    }
+
+    /// The snapshot dispatch picks storage width from the wider of the
+    /// weight and input-activation word lengths, never packs layer 0
+    /// integer (raw f32 input) and never packs integer when the activation
+    /// grid is disabled (protects the bit-exact f32 parity contract).
+    #[test]
+    fn snapshot_int_dispatch_follows_format_widths() {
+        if std::env::var_os("ADAPT_SPARSE_CROSSOVER").is_some() {
+            eprintln!("SKIP: ADAPT_SPARSE_CROSSOVER preset by the environment");
+            return;
+        }
+        let (model, man) = tiny_model();
+        let l = man.num_layers;
+        let params = crate::init::init_params(&man, crate::init::Initializer::Tnvs, 1.0, 29);
+        let kernels: Vec<&[f32]> = (0..l).map(|i| params[2 * i].as_slice()).collect();
+        let build = |qp: &[f32]| {
+            ModelSnapshot::build(&model.dims, &kernels, qp, sparse_crossover()).unwrap()
+        };
+
+        // <8,4> everywhere: layer 0 stays dense, layer 1 packs i8
+        let qp8 = qp_uniform(l, FixedPointFormat::new(8, 4), 1.0);
+        let snap = build(&qp8);
+        assert!(!snap.layer_is_int(0), "layer 0 input is the raw f32 batch");
+        assert_eq!(snap.layer_bits(0), 32);
+        assert!(snap.layer_is_int(1));
+        assert_eq!(snap.layer_bits(1), 8);
+
+        // <12,8>: past 8 bits, within 16 -> i16
+        let qp12 = qp_uniform(l, FixedPointFormat::new(12, 8), 1.0);
+        assert_eq!(build(&qp12).layer_bits(1), 16);
+
+        // disabled activation rows: no integer packing anywhere
+        let fmt = FixedPointFormat::new(8, 4);
+        let qp_no_act: Vec<f32> = (0..2 * l)
+            .flat_map(|r| fmt.qparams_row(if r < l { 1.0 } else { 0.0 }))
+            .collect();
+        let snap = build(&qp_no_act);
+        for i in 0..l {
+            assert!(!snap.layer_is_int(i), "layer {i} must stay f32");
+        }
+    }
+
+    /// A precision switch that crosses a storage-width boundary on ONE
+    /// layer re-packs that layer alone: the other layers' packs are MOVED
+    /// into the rebuilt snapshot (same heap allocations), and the logits
+    /// still bit-match a cache-cold model.
+    #[test]
+    fn width_boundary_switch_repacks_only_crossed_layers() {
+        if std::env::var_os("ADAPT_SPARSE_CROSSOVER").is_some() {
+            eprintln!("SKIP: ADAPT_SPARSE_CROSSOVER preset by the environment");
+            return;
+        }
+        let man = Manifest::synthetic_mlp("t3", [2, 2, 1], 3, &[6, 5], 4);
+        let fresh = || {
+            Arc::new(
+                NativeModel::from_manifest(man.clone(), Arc::new(QuantPool::new(2))).unwrap(),
+            )
+        };
+        let model = fresh();
+        let l = man.num_layers;
+        let params = crate::init::init_params(&man, crate::init::Initializer::Tnvs, 1.0, 31);
+        let bn: Vec<Vec<f32>> = Vec::new();
+        let x: Vec<f32> = (0..16).map(|i| (i as f32 * 0.17).sin()).collect();
+
+        let kern_ptrs = |m: &NativeModel| -> Vec<usize> {
+            let guard = m.scratch.lock().unwrap_or_else(|p| p.into_inner());
+            let e = guard.cache.as_ref().expect("cache populated");
+            e.snap
+                .kernels
+                .iter()
+                .map(|k| match k {
+                    SnapKernel::Dense { panel } => panel.as_ptr() as usize,
+                    SnapKernel::Int8 { panel, .. } => panel.as_ptr() as usize,
+                    SnapKernel::Int16 { panel, .. } => panel.as_ptr() as usize,
+                    SnapKernel::Csr { vals, .. } => vals.as_ptr() as usize,
+                })
+                .collect()
+        };
+        let bits_of = |m: &NativeModel, i: usize| -> u8 {
+            let guard = m.scratch.lock().unwrap_or_else(|p| p.into_inner());
+            guard.cache.as_ref().expect("cache populated").snap.layer_bits(i)
+        };
+
+        // all rows <12,8>: layers 1 and 2 pack i16
+        let qp1 = qp_uniform(l, FixedPointFormat::new(12, 8), 1.0);
+        // switch ONLY layer 1's inputs — its weight row (1) and its input
+        // activation row (l + 0) — down to <8,4>: an i16 -> i8 boundary
+        let mut qp2 = qp1.clone();
+        let narrow = FixedPointFormat::new(8, 4).qparams_row(1.0);
+        qp2[5..10].copy_from_slice(&narrow);
+        qp2[l * 5..l * 5 + 5].copy_from_slice(&narrow);
+
+        let infer = NativeInfer(Arc::clone(&model));
+        let iin1 = pack_infer_inputs(&man, &params, &bn, &x, &qp1).unwrap();
+        infer.execute_f32(&iin1, &man.infer_outputs).unwrap();
+        let before = kern_ptrs(&model);
+        assert_eq!(bits_of(&model, 1), 16);
+
+        let iin2 = pack_infer_inputs(&man, &params, &bn, &x, &qp2).unwrap();
+        let logits = infer.execute_f32(&iin2, &man.infer_outputs).unwrap();
+        let after = kern_ptrs(&model);
+        assert_eq!(bits_of(&model, 1), 8, "layer 1 crossed into i8");
+        assert_eq!(before[0], after[0], "layer 0 pack must be moved, not rebuilt");
+        assert_eq!(before[2], after[2], "layer 2 pack must be moved, not rebuilt");
+        assert_ne!(before[1], after[1], "layer 1 must re-pack");
+
+        // granular reuse must not change results: cache-cold parity
+        let cold = NativeInfer(fresh())
+            .execute_f32(&iin2, &man.infer_outputs)
+            .unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&logits[0]), bits(&cold[0]));
     }
 
     /// The snapshot forward is bit-identical to the ExecModule infer for

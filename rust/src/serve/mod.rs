@@ -42,7 +42,7 @@ pub mod worker;
 
 pub use queue::{Response, ServeError, Ticket};
 pub use registry::{ModelRegistry, ServedModel};
-pub use stats::{LatencySummary, ServeStats, ServeStatsSnapshot};
+pub use stats::{LatencyHistogram, LatencySummary, ServeStats, ServeStatsSnapshot, HIST_BUCKETS};
 
 use std::sync::mpsc::channel;
 use std::sync::Arc;

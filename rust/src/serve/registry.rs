@@ -2,7 +2,10 @@
 //!
 //! A [`ServedModel`] is an immutable, compute-ready snapshot of a trained
 //! model: every quantized kernel pre-packed ONCE — into the blocked-GEMM
-//! panel layout, or CSR when its measured density sits at or below the
+//! panel layout, raw `i8`/`i16` integer codes when the layer's weight and
+//! input-activation formats both fit the width (the real integer GEMM
+//! path, run on widening exact micro-kernels), or CSR when its measured
+//! density sits at or below the
 //! [`sparse_crossover`](crate::runtime::native::sparse_crossover) — plus
 //! the biases and the qparams tensor the fused epilogues read. Freezing
 //! makes the ROADMAP's "persistent cross-call CSR cache for the serving
@@ -38,9 +41,11 @@ pub struct ServedModel {
 impl ServedModel {
     /// Validate `man` (same [`mlp_dims`] contract as the native backend),
     /// quantize every kernel under its qparams row and pack each layer
-    /// once, choosing panel vs CSR from the measured density and the
-    /// active crossover. `params` is the full (kernel, bias) interleaving;
-    /// `qparams` the `[2L, 5]` runtime tensor of the finished run.
+    /// once, choosing f32 panel vs integer codes vs CSR from the frozen
+    /// formats, the measured density and the active crossover (the
+    /// `ModelSnapshot::build` dispatch order). `params` is the full
+    /// (kernel, bias) interleaving; `qparams` the `[2L, 5]` runtime tensor
+    /// of the finished run.
     pub fn freeze(
         name: &str,
         man: &Manifest,

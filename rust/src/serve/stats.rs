@@ -14,10 +14,75 @@
 //! * `wall_samples_per_ms` — samples over wall time since the recorder
 //!   started: the externally observable throughput including queueing and
 //!   idle gaps.
+//!
+//! Both latency populations are additionally folded into fixed
+//! [`LatencyHistogram`]s (log2-width buckets from 2^-6 ms up, last bucket
+//! overflow), and [`ServeStatsSnapshot::to_json`] dumps the whole snapshot
+//! — counters, summaries and histograms — as JSON; `benches/serve.rs`
+//! embeds that dump in `BENCH_serve.json` so a latency-distribution
+//! regression is diffable from CI artifacts alone.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
+
+use crate::util::json::{num, obj, Json};
+
+/// Bucket count of [`LatencyHistogram`] (15 finite log2 buckets plus one
+/// overflow bucket).
+pub const HIST_BUCKETS: usize = 16;
+
+/// A fixed-bucket latency histogram in milliseconds: bucket `i < 15` counts
+/// latencies in `[edge(i-1), edge(i))` with `edge(i) = 2^(i-6)` ms (so the
+/// finite range spans 2^-6 ms ≈ 16 µs to 2^8 ms ≈ 0.26 s); the last bucket
+/// counts everything at or above the top edge. Log2 widths match how
+/// serving latency degrades (doubling batch ≈ doubling service time), and
+/// fixed buckets make two dumps diffable bucket-by-bucket.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencyHistogram {
+    pub counts: [u64; HIST_BUCKETS],
+}
+
+impl LatencyHistogram {
+    /// Count one latency observation.
+    pub fn record(&mut self, ms: f64) {
+        self.counts[Self::bucket_of(ms)] += 1;
+    }
+
+    fn bucket_of(ms: f64) -> usize {
+        let mut edge = 1.0 / 64.0;
+        for i in 0..HIST_BUCKETS - 1 {
+            if ms < edge {
+                return i;
+            }
+            edge *= 2.0;
+        }
+        HIST_BUCKETS - 1
+    }
+
+    /// The 15 finite upper bucket edges, in ms (the last bucket has none).
+    pub fn upper_edges() -> [f64; HIST_BUCKETS - 1] {
+        let mut out = [0.0; HIST_BUCKETS - 1];
+        let mut edge = 1.0 / 64.0;
+        for o in out.iter_mut() {
+            *o = edge;
+            edge *= 2.0;
+        }
+        out
+    }
+
+    /// Total observations across all buckets.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("upper_ms", Json::Arr(Self::upper_edges().iter().map(|&e| num(e)).collect())),
+            ("counts", Json::Arr(self.counts.iter().map(|&c| num(c as f64)).collect())),
+        ])
+    }
+}
 
 /// Order statistics of one latency population, in milliseconds.
 #[derive(Debug, Clone, Copy, Default)]
@@ -69,13 +134,52 @@ pub struct ServeStatsSnapshot {
     pub queue: LatencySummary,
     /// Per-micro-batch forward-pass service time.
     pub service: LatencySummary,
+    /// Bucketed queue-wait distribution (same population as `queue`).
+    pub queue_hist: LatencyHistogram,
+    /// Bucketed service-time distribution (same population as `service`).
+    pub service_hist: LatencyHistogram,
     pub busy_samples_per_ms: f64,
     pub wall_samples_per_ms: f64,
+}
+
+impl ServeStatsSnapshot {
+    fn summary_json(s: &LatencySummary) -> Json {
+        obj(vec![
+            ("count", num(s.count as f64)),
+            ("mean_ms", num(s.mean_ms)),
+            ("p50_ms", num(s.p50_ms)),
+            ("p95_ms", num(s.p95_ms)),
+            ("max_ms", num(s.max_ms)),
+        ])
+    }
+
+    /// The whole snapshot as a JSON object string: counters, both latency
+    /// summaries and both fixed-bucket histograms (module docs).
+    pub fn to_json(&self) -> String {
+        obj(vec![
+            ("requests", num(self.requests as f64)),
+            ("samples", num(self.samples as f64)),
+            ("micro_batches", num(self.micro_batches as f64)),
+            ("rejected", num(self.rejected as f64)),
+            ("failed", num(self.failed as f64)),
+            ("mean_batch", num(self.mean_batch)),
+            ("occupancy", num(self.occupancy)),
+            ("queue", Self::summary_json(&self.queue)),
+            ("service", Self::summary_json(&self.service)),
+            ("queue_hist", self.queue_hist.to_json()),
+            ("service_hist", self.service_hist.to_json()),
+            ("busy_samples_per_ms", num(self.busy_samples_per_ms)),
+            ("wall_samples_per_ms", num(self.wall_samples_per_ms)),
+        ])
+        .to_string_pretty()
+    }
 }
 
 struct StatsInner {
     queue_ms: Vec<f64>,
     service_ms: Vec<f64>,
+    queue_hist: LatencyHistogram,
+    service_hist: LatencyHistogram,
     last_record: Option<Instant>,
 }
 
@@ -105,6 +209,8 @@ impl ServeStats {
             inner: Mutex::new(StatsInner {
                 queue_ms: Vec::new(),
                 service_ms: Vec::new(),
+                queue_hist: LatencyHistogram::default(),
+                service_hist: LatencyHistogram::default(),
                 last_record: None,
             }),
         }
@@ -125,6 +231,10 @@ impl ServeStats {
         let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
         inner.queue_ms.extend_from_slice(queue_ms);
         inner.service_ms.push(service_ms);
+        for &q in queue_ms {
+            inner.queue_hist.record(q);
+        }
+        inner.service_hist.record(service_ms);
         inner.last_record = Some(Instant::now());
     }
 
@@ -136,6 +246,11 @@ impl ServeStats {
     /// failed and contribute to NO served count or rate.
     pub(crate) fn record_failed(&self, requests: usize) {
         self.failed.fetch_add(requests as u64, Ordering::Relaxed);
+    }
+
+    /// [`ServeStatsSnapshot::to_json`] of a fresh snapshot.
+    pub fn to_json(&self) -> String {
+        self.snapshot().to_json()
     }
 
     pub fn snapshot(&self) -> ServeStatsSnapshot {
@@ -165,6 +280,8 @@ impl ServeStats {
             },
             queue: LatencySummary::from_values(&inner.queue_ms),
             service: LatencySummary::from_values(&inner.service_ms),
+            queue_hist: inner.queue_hist,
+            service_hist: inner.service_hist,
             busy_samples_per_ms: if busy_ms > 0.0 {
                 samples as f64 / busy_ms
             } else {
@@ -204,6 +321,49 @@ mod tests {
         assert!((snap.busy_samples_per_ms - 3.0).abs() < 1e-12);
         assert!(snap.wall_samples_per_ms > 0.0);
         assert!(snap.queue.max_ms >= snap.queue.p50_ms);
+    }
+
+    #[test]
+    fn histograms_cover_every_observation() {
+        // buckets: [0, 2^-6), [2^-6, 2^-5), … — exercise under, mid, over
+        assert_eq!(LatencyHistogram::bucket_of(0.0), 0);
+        assert_eq!(LatencyHistogram::bucket_of(1.0 / 64.0), 1);
+        assert_eq!(LatencyHistogram::bucket_of(1e9), HIST_BUCKETS - 1);
+        let edges = LatencyHistogram::upper_edges();
+        assert_eq!(edges[0], 1.0 / 64.0);
+        assert_eq!(edges[HIST_BUCKETS - 2], 256.0);
+
+        let s = ServeStats::new(8);
+        s.record_batch(8, 3, 2.0, &[0.001, 1.0, 500.0]);
+        s.record_batch(4, 1, 0.03, &[0.25]);
+        let snap = s.snapshot();
+        assert_eq!(snap.queue_hist.total(), snap.queue.count);
+        assert_eq!(snap.service_hist.total(), snap.service.count);
+        // 500 ms queue wait lands in the overflow bucket
+        assert_eq!(snap.queue_hist.counts[HIST_BUCKETS - 1], 1);
+    }
+
+    #[test]
+    fn json_dump_parses_back() {
+        let s = ServeStats::new(8);
+        s.record_batch(8, 3, 2.0, &[0.5, 1.0, 1.5]);
+        s.record_rejected();
+        let j = Json::parse(&s.to_json()).unwrap();
+        assert_eq!(j.req("samples").unwrap().as_f64(), Some(8.0));
+        assert_eq!(j.req("rejected").unwrap().as_f64(), Some(1.0));
+        assert_eq!(
+            j.req("queue").unwrap().req("count").unwrap().as_f64(),
+            Some(3.0)
+        );
+        let hist = j.req("service_hist").unwrap();
+        let counts = hist.req("counts").unwrap().as_arr().unwrap();
+        assert_eq!(counts.len(), HIST_BUCKETS);
+        let total: f64 = counts.iter().filter_map(|c| c.as_f64()).sum();
+        assert_eq!(total, 1.0);
+        assert_eq!(
+            hist.req("upper_ms").unwrap().as_arr().unwrap().len(),
+            HIST_BUCKETS - 1
+        );
     }
 
     #[test]

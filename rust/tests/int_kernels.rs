@@ -1,0 +1,266 @@
+//! Property tests of the real integer GEMM path: SIMD-vs-scalar bit parity
+//! across shapes × pool sizes, epilogue requant agreement with the f32
+//! path and the STE quantizer on exactly-representable inputs, and the
+//! snapshot's width-boundary re-pack behaviour (granular cache, stale-row
+//! fallback, cache-cold parity through the public engine API).
+//!
+//! CI runs this suite twice: once as-is and once with `ADAPT_NO_SIMD=1`,
+//! which forces [`IntSimd::detect`] to the scalar oracle so the scalar
+//! integer kernel stays gated even on AVX2/NEON runners.
+
+use adapt::fixedpoint::{quantize_nr_slice, quantize_nr_ste, FixedPointFormat};
+use adapt::quant::QuantPool;
+use adapt::runtime::native::gemm::{self, IntSimd};
+use adapt::runtime::native::{mlp_dims, InferScratch, ModelSnapshot, QRow};
+use adapt::runtime::{Engine, Manifest};
+use adapt::util::rng::Rng;
+
+fn randv(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Rng::seed_from(seed);
+    (0..n).map(|_| r.normal() as f32).collect()
+}
+
+/// Random values snapped onto the `fmt` grid (exactly representable codes).
+fn gridv(n: usize, seed: u64, fmt: FixedPointFormat) -> Vec<f32> {
+    quantize_nr_slice(&randv(n, seed), fmt)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Shape sweep covering MR/NR remainders, single elements and a multi-tile
+/// interior.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (2, 3, 2),
+    (3, 5, 7),
+    (5, 9, 1),
+    (7, 64, 9),
+    (13, 37, 17),
+    (33, 21, 65),
+];
+
+/// Every supported SIMD backend and every pool size must reproduce the
+/// single-threaded scalar oracle bit for bit — z, q, the zero count and
+/// the absmax alike.
+fn driver_parity_case<T: gemm::IntKernel>(fmt_a: FixedPointFormat, fmt_w: FixedPointFormat) {
+    let fmt_out = FixedPointFormat::new(12, 8);
+    let row = QRow::parse(&fmt_out.qparams_row(1.0), 0).unwrap();
+    let inv = 1.0 / (fmt_a.scale() * fmt_w.scale());
+    let p1 = QuantPool::new(1);
+    for (si, &(m, k, n)) in SHAPES.iter().enumerate() {
+        let seed = 9000 + 10 * si as u64;
+        let a = gridv(m * k, seed, fmt_a);
+        let w = gridv(k * n, seed + 1, fmt_w);
+        let bias = gridv(n, seed + 2, fmt_out);
+        let (mut ap, mut bp) = (Vec::new(), Vec::new());
+        gemm::pack_a_rows_q::<T>(&a, fmt_a.scale(), m, k, &mut ap);
+        gemm::pack_b_cols_q::<T>(&w, fmt_w.scale(), k, n, &mut bp);
+        let (mut z_ref, mut q_ref) = (vec![0.0f32; m * n], vec![0.0f32; m * n]);
+        let (zeros_ref, mx_ref) = gemm::gemm_int_quant_into::<T>(
+            &p1, IntSimd::Scalar, m, n, k, &ap, &bp, inv, &bias, true, &row, &mut z_ref,
+            &mut q_ref,
+        );
+        for threads in [1usize, 2, 3, 8] {
+            let p = QuantPool::new(threads);
+            for &simd in &IntSimd::supported() {
+                let (mut z, mut q) = (vec![0.0f32; m * n], vec![0.0f32; m * n]);
+                let (zeros, mx) = gemm::gemm_int_quant_into::<T>(
+                    &p, simd, m, n, k, &ap, &bp, inv, &bias, true, &row, &mut z, &mut q,
+                );
+                let tag = format!("{m}x{k}x{n} t={threads} {simd:?}");
+                assert_eq!(bits(&z), bits(&z_ref), "z diverged: {tag}");
+                assert_eq!(bits(&q), bits(&q_ref), "q diverged: {tag}");
+                assert_eq!(zeros, zeros_ref, "zero count diverged: {tag}");
+                assert_eq!(mx.to_bits(), mx_ref.to_bits(), "absmax diverged: {tag}");
+            }
+        }
+    }
+}
+
+#[test]
+fn i8_driver_bit_matches_the_scalar_oracle_for_all_shapes_and_pools() {
+    driver_parity_case::<i8>(FixedPointFormat::new(8, 4), FixedPointFormat::new(8, 5));
+}
+
+#[test]
+fn i16_driver_bit_matches_the_scalar_oracle_for_all_shapes_and_pools() {
+    // coarse scales push single products past 2^26 — exercises the i64
+    // accumulator, not just the i16 storage
+    driver_parity_case::<i16>(FixedPointFormat::new(14, 9), FixedPointFormat::new(16, 10));
+}
+
+/// On inputs whose products and partial sums are exactly representable in
+/// f32, the integer path must agree bit-for-bit with the f32 dense path
+/// AND its fused requant must equal a manual `quantize_nr_ste` sweep over
+/// z — the epilogue is the same quantizer, just fused.
+#[test]
+fn int_epilogue_matches_f32_path_and_ste_quantizer_in_the_exact_regime() {
+    let fmt = FixedPointFormat::new(8, 4);
+    let row = QRow::parse(&fmt.qparams_row(1.0), 0).unwrap();
+    let inv = 1.0 / (fmt.scale() * fmt.scale());
+    let pool = QuantPool::new(2);
+    for (ci, &(m, k, n)) in [(4usize, 8usize, 5usize), (3, 16, 7), (8, 32, 6)]
+        .iter()
+        .enumerate()
+    {
+        let seed = 500 + 10 * ci as u64;
+        // codes ≤ ~2^7 and k ≤ 32: every partial sum is an integer below
+        // 2^24 on the 2^-8 product grid, so the f32 fold rounds nowhere
+        let a = gridv(m * k, seed, fmt);
+        let w = gridv(k * n, seed + 1, fmt);
+        let bias = gridv(n, seed + 2, FixedPointFormat::new(12, 8));
+        for relu in [true, false] {
+            let (mut af, mut bf) = (Vec::new(), Vec::new());
+            gemm::pack_a_rows(&a, m, k, &mut af);
+            gemm::pack_b_cols(&w, k, n, &mut bf);
+            let (mut zf, mut qf) = (vec![0.0f32; m * n], vec![0.0f32; m * n]);
+            gemm::gemm_quant_into(
+                &pool, m, n, k, &af, &bf, &bias, relu, &row, &mut zf, &mut qf, None,
+            );
+            let (mut ap, mut bp) = (Vec::new(), Vec::new());
+            gemm::pack_a_rows_q::<i8>(&a, fmt.scale(), m, k, &mut ap);
+            gemm::pack_b_cols_q::<i8>(&w, fmt.scale(), k, n, &mut bp);
+            for &simd in &IntSimd::supported() {
+                let (mut z, mut q) = (vec![0.0f32; m * n], vec![0.0f32; m * n]);
+                gemm::gemm_int_quant_into::<i8>(
+                    &pool, simd, m, n, k, &ap, &bp, inv, &bias, relu, &row, &mut z, &mut q,
+                );
+                let tag = format!("{m}x{k}x{n} relu={relu} {simd:?}");
+                assert_eq!(bits(&z), bits(&zf), "int z != f32 z: {tag}");
+                assert_eq!(bits(&q), bits(&qf), "int q != f32 q: {tag}");
+                let (mut q_manual, mut mask) = (vec![0.0f32; m * n], vec![0.0f32; m * n]);
+                quantize_nr_ste(&z, row.scale, row.qmin, row.qmax, &mut q_manual, &mut mask);
+                assert_eq!(bits(&q), bits(&q_manual), "fused requant != STE sweep: {tag}");
+            }
+        }
+    }
+}
+
+/// Integer-dispatched snapshot inference is bit-deterministic across pool
+/// sizes (one accumulator per output element, ascending depth — same
+/// argument as the f32 suite, now for the widened integer fold).
+#[test]
+fn int_inference_is_bit_deterministic_across_pool_sizes() {
+    let man = Manifest::synthetic_mlp("int-pools", [2, 2, 1], 3, &[6, 5], 4);
+    let dims = mlp_dims(&man).unwrap();
+    let l = dims.len();
+    let params = adapt::init::init_params(&man, adapt::init::Initializer::Tnvs, 1.0, 47);
+    let kernels: Vec<&[f32]> = (0..l).map(|i| params[2 * i].as_slice()).collect();
+    let biases: Vec<&[f32]> = (0..l).map(|i| params[2 * i + 1].as_slice()).collect();
+    let qp: Vec<f32> = (0..2 * l)
+        .flat_map(|_| FixedPointFormat::new(8, 4).qparams_row(1.0))
+        .collect();
+    // crossover 0: CSR off, the non-input layers must all dispatch integer
+    let snap = ModelSnapshot::build(&dims, &kernels, &qp, 0.0).unwrap();
+    assert!(!snap.layer_is_int(0), "layer 0 input is the raw f32 batch");
+    assert!(snap.layer_is_int(1) && snap.layer_is_int(2), "hidden/output layers pack i8");
+    let b = 5usize;
+    let x: Vec<f32> = (0..b * 4).map(|i| (i as f32 * 0.23).sin()).collect();
+    let mut reference: Option<Vec<u32>> = None;
+    for threads in [1usize, 2, 3, 8] {
+        let pool = QuantPool::new(threads);
+        let mut s = InferScratch::default();
+        let mut out = Vec::new();
+        snap.infer_into(&pool, &biases, &qp, &x, b, &mut s, &mut out).unwrap();
+        let got = bits(&out);
+        match &reference {
+            Some(r) => assert_eq!(&got, r, "pool size {threads} diverged"),
+            None => reference = Some(got),
+        }
+    }
+}
+
+/// Calling an integer-packed snapshot with a DIFFERENT activation row than
+/// it froze must fall back to the exact dense path: bit-identical to a
+/// snapshot that packed the same quantized weights as f32 panels.
+#[test]
+fn stale_activation_row_falls_back_to_the_exact_dense_path() {
+    let man = Manifest::synthetic_mlp("int-stale", [2, 2, 1], 3, &[5], 4);
+    let dims = mlp_dims(&man).unwrap();
+    let l = dims.len();
+    let params = adapt::init::init_params(&man, adapt::init::Initializer::Tnvs, 1.0, 43);
+    let kernels: Vec<&[f32]> = (0..l).map(|i| params[2 * i].as_slice()).collect();
+    let biases: Vec<&[f32]> = (0..l).map(|i| params[2 * i + 1].as_slice()).collect();
+    let w_row = FixedPointFormat::new(8, 4).qparams_row(1.0);
+    let with_act = |act: [f32; 5]| -> Vec<f32> {
+        let mut qp: Vec<f32> = Vec::new();
+        for _ in 0..l {
+            qp.extend_from_slice(&w_row);
+        }
+        for _ in 0..l {
+            qp.extend_from_slice(&act);
+        }
+        qp
+    };
+    let qp_int = with_act(FixedPointFormat::new(8, 4).qparams_row(1.0));
+    let qp_dense = with_act(FixedPointFormat::new(8, 4).qparams_row(0.0));
+    // the grid the CALL uses — one the integer packs were NOT built for
+    let qp_call = with_act(FixedPointFormat::new(10, 4).qparams_row(1.0));
+
+    let pool = QuantPool::new(2);
+    let int_snap = ModelSnapshot::build(&dims, &kernels, &qp_int, 0.0).unwrap();
+    assert!(int_snap.layer_is_int(1), "layer 1 should pack i8");
+    let dense_snap = ModelSnapshot::build(&dims, &kernels, &qp_dense, 0.0).unwrap();
+    assert!(!dense_snap.layer_is_int(1), "disabled act rows must stay dense");
+
+    let b = 3usize;
+    let x: Vec<f32> = (0..b * 4).map(|i| (i as f32 * 0.29).cos()).collect();
+    let mut s = InferScratch::default();
+    let (mut got, mut want) = (Vec::new(), Vec::new());
+    int_snap.infer_into(&pool, &biases, &qp_call, &x, b, &mut s, &mut got).unwrap();
+    dense_snap.infer_into(&pool, &biases, &qp_call, &x, b, &mut s, &mut want).unwrap();
+    assert_eq!(bits(&got), bits(&want), "stale-row fallback must equal the dense path");
+}
+
+/// A width-boundary precision switch (i16 → i8) through the public engine
+/// API: the warmed pack cache must answer exactly like a model that never
+/// saw the wide formats.
+#[test]
+fn width_boundary_precision_switch_matches_a_cache_cold_model() {
+    let man = Manifest::synthetic_mlp("int-switch", [2, 2, 1], 3, &[6, 5], 4);
+    let model = Engine::native().compile_manifest(man.clone()).expect("native compile");
+    let l = man.num_layers;
+    let params = adapt::init::init_params(&man, adapt::init::Initializer::Tnvs, 1.0, 41);
+    let bn = adapt::init::init_bn(&man);
+    let x: Vec<f32> = (0..man.batch * 4).map(|i| (i as f32 * 0.19).cos()).collect();
+    let qp_wide: Vec<f32> = (0..2 * l)
+        .flat_map(|_| FixedPointFormat::new(12, 8).qparams_row(1.0))
+        .collect();
+    let qp_narrow: Vec<f32> = (0..2 * l)
+        .flat_map(|_| FixedPointFormat::new(8, 4).qparams_row(1.0))
+        .collect();
+
+    // warm the cache at <12,8> (i16 packs), then cross the width boundary
+    model.infer(&params, &bn, &x, &qp_wide).expect("warm infer");
+    let switched = model.infer(&params, &bn, &x, &qp_narrow).expect("switched infer");
+    let cold = Engine::native()
+        .compile_manifest(man.clone())
+        .expect("cold compile")
+        .infer(&params, &bn, &x, &qp_narrow)
+        .expect("cold infer");
+    assert_eq!(bits(&switched), bits(&cold), "stale pack served after a width switch");
+
+    // and back up: the re-widened packs must match a cold wide model too
+    let widened = model.infer(&params, &bn, &x, &qp_wide).expect("re-widened infer");
+    let cold_wide = Engine::native()
+        .compile_manifest(man)
+        .expect("cold wide compile")
+        .infer(&params, &bn, &x, &qp_wide)
+        .expect("cold wide infer");
+    assert_eq!(bits(&widened), bits(&cold_wide), "stale pack after switching back");
+}
+
+/// `ADAPT_NO_SIMD=1` must force the scalar backend (CI runs this suite
+/// under that env to keep the oracle gated); without the env the test
+/// self-skips instead of racing other tests on env mutation.
+#[test]
+fn no_simd_env_forces_the_scalar_backend() {
+    if std::env::var_os("ADAPT_NO_SIMD").is_none() {
+        eprintln!("SKIP: run with ADAPT_NO_SIMD=1 to pin the SIMD kill-switch");
+        return;
+    }
+    assert_eq!(IntSimd::detect(), IntSimd::Scalar);
+    assert_eq!(IntSimd::supported(), vec![IntSimd::Scalar]);
+}
