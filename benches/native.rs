@@ -295,6 +295,54 @@ fn main() {
         }
     }
 
+    // ---- conv path: im2col + packed GEMM over the LeNet grid ------------
+    // Times the exact conv forward the interpreter runs (im2col into the
+    // arena, pack A, fused bias+ReLU GEMM, maxpool when pool > 1) for each
+    // conv layer of `synthetic_lenet` at its golden batch. The aggregate
+    // madds/ms rate feeds `KernelCalibration::conv_madds_per_ms` (eq. 8's
+    // conv-layer term); per-shape rows are kept for inspection.
+    println!("-- conv: im2col + packed GEMM (LeNet grid) ----------");
+    {
+        let lenet = adapt::runtime::Manifest::synthetic_lenet("bench-lenet", 16);
+        let plan = adapt::runtime::native::lower_manifest(&lenet).expect("lenet lowers");
+        let bsz = lenet.batch;
+        let (mut conv_madds, mut conv_ms) = (0.0f64, 0.0f64);
+        for i in 0..plan.num_layers() {
+            let Some(geom) = plan.conv(i) else { continue };
+            let (m, k, n) = (geom.conv_rows(bsz), geom.gemm_k(), geom.co);
+            let x = gaussian(bsz * geom.in_elems(), 0.5, 60 + i as u64);
+            let w = quantize_nr_slice(&gaussian(k * n, 0.5, 70 + i as u64), fmt);
+            let bias = gaussian(n, 0.1, 80 + i as u64);
+            let mut cols = vec![0.0f32; m * k];
+            let mut z = vec![0.0f32; m * n];
+            let mut pooled = vec![0.0f32; bsz * geom.out_elems()];
+            gemm::pack_b_cols(&w, k, n, &mut pack.b);
+            let madds = (m * k * n) as f64;
+            let tag = format!("c{}x{}k{}", geom.ih, geom.iw, geom.kh);
+            let name =
+                format!("conv im2col+gemm l{i} {tag} co{n} pool{} (batch {bsz})", geom.pool);
+            let med = bench(&name, 200, || {
+                adapt::runtime::native::conv::im2col(geom, &x, bsz, &mut cols);
+                gemm::pack_a_rows(&cols, m, k, &mut pack.a);
+                gemm::gemm_packed_into(
+                    &pool, m, n, k, &pack.a, &pack.b, Some(&bias), true, &mut z,
+                );
+                if geom.pool > 1 {
+                    adapt::runtime::native::conv::maxpool_forward(geom, &z, bsz, &mut pooled);
+                }
+                std::hint::black_box(&z);
+            });
+            tracked(&mut entries, &name, med);
+            derived.push((format!("calibration_conv_madds_per_ms_{tag}"), madds / med));
+            conv_madds += madds;
+            conv_ms += med;
+        }
+        derived.push((
+            "calibration_conv_madds_per_ms".to_string(),
+            conv_madds / conv_ms,
+        ));
+    }
+
     // ---- end-to-end native step/infer on the golden MLP config ----------
     println!("-- e2e native step (golden MLP config) --------------");
     let engine = adapt::runtime::Engine::native();
@@ -319,6 +367,33 @@ fn main() {
     });
     tracked(&mut entries, name, med);
     let name = "native infer mlp (batch 16)";
+    let med = bench(name, 50, || {
+        std::hint::black_box(model.infer(&state.params, &state.bn, &xb, &qp).unwrap());
+    });
+    tracked(&mut entries, name, med);
+
+    // ---- end-to-end native step/infer on the golden LeNet config --------
+    println!("-- e2e native step (golden LeNet config) ------------");
+    let man = adapt::runtime::Manifest::synthetic_lenet("bench-lenet-e2e", 16);
+    let model = engine.compile_manifest(man).expect("native conv compile");
+    let man = &model.manifest;
+    let mut state = adapt::runtime::TrainState {
+        params: adapt::init::init_params(man, adapt::init::Initializer::Tnvs, 1.0, 0),
+        gsum: adapt::init::init_gsum(man),
+        bn: adapt::init::init_bn(man),
+        step: 0,
+    };
+    let xb: Vec<f32> = gaussian(man.batch * 144, 0.5, 22);
+    let yb: Vec<i32> = (0..man.batch as i32).map(|i| i % man.classes as i32).collect();
+    let qp: Vec<f32> = (0..2 * man.num_layers)
+        .flat_map(|_| fmt.qparams_row(1.0))
+        .collect();
+    let name = "native train_step lenet (batch 16)";
+    let med = bench(name, 50, || {
+        std::hint::black_box(model.train_step(&mut state, &xb, &yb, &qp, &hyper).unwrap());
+    });
+    tracked(&mut entries, name, med);
+    let name = "native infer lenet (batch 16)";
     let med = bench(name, 50, || {
         std::hint::black_box(model.infer(&state.params, &state.bn, &xb, &qp).unwrap());
     });

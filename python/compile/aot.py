@@ -64,6 +64,14 @@ def build_manifest(cfg: M.Config, model, batch: int):
             "madds": li.madds,
             "weight_elems": li.weight_elems,
             "fan_in": li.fan_in,
+            # conv geometry keys (dense layers carry the defaults; the
+            # native backend's lowerer reads them, old manifests without
+            # them parse with the same defaults)
+            "stride": li.stride,
+            "padding": li.padding,
+            "pool": li.pool,
+            "pool_kind": li.pool_kind,
+            "residual_from": li.residual_from,
         }
         for li in model.layer_infos
     ]

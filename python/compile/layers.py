@@ -39,13 +39,21 @@ class ParamSpec:
 
 @dataclass
 class LayerInfo:
-    """One quantizable layer: input to the analytical performance model."""
+    """One quantizable layer: input to the analytical performance model and
+    (since the conv interpreter) carrier of the geometry keys the native
+    backend lowers conv layers from. The geometry fields default to the
+    values a dense layer implies, so dense LayerInfos need not set them."""
 
     name: str
     kind: str  # 'conv' | 'dense' | 'downsample'
     madds: int  # multiply-accumulates per sample (perf model `ops^l`)
     weight_elems: int  # prod(dim in l) for eqs (6), (7)
     fan_in: int
+    stride: int = 1  # conv stride (symmetric)
+    padding: str = "same"  # 'same' | 'valid' (lower-case in the manifest)
+    pool: int = 1  # pool window == stride after the ReLU; 1 = no pool
+    pool_kind: str = "max"  # 'max' | 'avg'
+    residual_from: int = -1  # skip-add source layer index; -1 = none
 
 
 @dataclass

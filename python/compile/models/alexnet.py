@@ -33,7 +33,12 @@ def build(input_shape, num_classes):
         specs.append(L.ParamSpec(f"{name}.kernel", (3, 3, ci, co), "kernel", li, 9 * ci, True))
         specs.append(L.ParamSpec(f"{name}.bias", (co,), "bias", -1, 9 * ci, False))
         madds, (oh, ow) = L.conv_madds(hh, ww, 3, ci, co)
-        infos.append(L.LayerInfo(name, "conv", madds, 9 * ci * co, 9 * ci))
+        infos.append(
+            L.LayerInfo(
+                name, "conv", madds, 9 * ci * co, 9 * ci,
+                padding="same", pool=2 if pool else 1,
+            )
+        )
         hh, ww, ci = oh, ow, co
         if pool:
             hh, ww = hh // 2, ww // 2

@@ -16,22 +16,25 @@ def build(input_shape, num_classes):
     h, w, cin = input_shape
     specs, infos = [], []
 
-    def add_conv(name, li, k, ci, co, pad, hh, ww, stride=1):
+    def add_conv(name, li, k, ci, co, pad, hh, ww, stride=1, pool=1):
         specs.append(L.ParamSpec(f"{name}.kernel", (k, k, ci, co), "kernel", li, k * k * ci, True))
         specs.append(L.ParamSpec(f"{name}.bias", (co,), "bias", -1, k * k * ci, False))
         madds, (oh, ow) = L.conv_madds(hh, ww, k, ci, co, stride, pad)
-        infos.append(L.LayerInfo(name, "conv", madds, k * k * ci * co, k * k * ci))
-        return oh, ow
+        infos.append(
+            L.LayerInfo(
+                name, "conv", madds, k * k * ci * co, k * k * ci,
+                stride=stride, padding=pad.lower(), pool=pool,
+            )
+        )
+        return oh // pool, ow // pool
 
     def add_dense(name, li, fi, fo):
         specs.append(L.ParamSpec(f"{name}.kernel", (fi, fo), "kernel", li, fi, True))
         specs.append(L.ParamSpec(f"{name}.bias", (fo,), "bias", -1, fi, False))
         infos.append(L.LayerInfo(name, "dense", L.dense_madds(fi, fo), fi * fo, fi))
 
-    oh, ow = add_conv("conv0", 0, 5, cin, 6, "SAME", h, w)
-    oh, ow = oh // 2, ow // 2  # pool
-    oh, ow = add_conv("conv1", 1, 5, 6, 16, "VALID", oh, ow)
-    oh, ow = oh // 2, ow // 2  # pool
+    oh, ow = add_conv("conv0", 0, 5, cin, 6, "SAME", h, w, pool=2)
+    oh, ow = add_conv("conv1", 1, 5, 6, 16, "VALID", oh, ow, pool=2)
     flat = oh * ow * 16
     add_dense("fc0", 2, flat, 120)
     add_dense("fc1", 3, 120, 84)

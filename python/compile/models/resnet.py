@@ -29,7 +29,9 @@ def build(input_shape, num_classes):
         nonlocal li
         specs.append(L.ParamSpec(f"{name}.kernel", (k, k, ci, co), "kernel", li, k * k * ci, True))
         madds, (oh, ow) = L.conv_madds(hh, ww, k, ci, co, stride, "SAME")
-        infos.append(L.LayerInfo(name, kind, madds, k * k * ci * co, k * k * ci))
+        infos.append(
+            L.LayerInfo(name, kind, madds, k * k * ci * co, k * k * ci, stride=stride, padding="same")
+        )
         li += 1
         return oh, ow
 

@@ -11,18 +11,26 @@ The first precision switch cannot fire before the 5th step (lookback lower
 bound), so the first four CEs are exactly the constant-<8,4> trajectory and
 this script regenerates the committed golden values:
 
-    python3 python/tools/native_golden.py golden
+    python3 python/tools/native_golden.py golden         # MLP golden
+    python3 python/tools/native_golden.py lenet-golden   # conv/pool golden
+
+The lenet mode mirrors the conv interpreter (runtime/native/{conv,step}.rs)
+on ``Manifest::synthetic_lenet``: im2col with ``(ky, kx, ci)`` tap order onto
+the same ascending-k GEMM folds, fused bias+ReLU, strict-``>`` first-win
+2x2 maxpool, col2im with the interpreter's ``(oy, ox, ky, kx)`` per-element
+fold order, and backward through the recomputed pool argmax and the clipped
+STE. It regenerates ``rust/tests/golden/lenet_native_ce.json``.
 
 f32 arithmetic is mirrored with numpy float32 in the same operation order;
 the only expected deviations from the Rust binary are 1-ULP differences in
 libm transcendentals (sin/cos/exp/log), far below the golden tolerance.
 
     python3 python/tools/native_golden.py learncheck
+    python3 python/tools/native_golden.py lenet-learncheck
 
-runs the fast e2e profile (4 epochs x 512 samples) without precision
-switching (constant <8,4> — a lower bound on what AdaPT achieves, since
-switches only ever ADD precision) and reports the CE trend and held-out
-accuracy backing the e2e test thresholds.
+run longer profiles without precision switching (constant <8,4> — a lower
+bound on what AdaPT achieves, since switches only ever ADD precision) and
+report the CE trend and held-out accuracy backing the e2e test thresholds.
 """
 
 import math
@@ -316,13 +324,106 @@ def matmul_a_bt_seq(g, w):
     return acc
 
 
-def native_step(params, gsum, x, y, fmt, enable, hyper):
-    """runtime/native/step.rs train step; fmt = (scale, qmin, qmax)."""
+class Geom:
+    """runtime/native/plan.rs ConvGeom (max-pool only; the lenet zoo)."""
+
+    def __init__(self, ih, iw, ci, k, co, padding, pool):
+        self.ih, self.iw, self.ci, self.k, self.co = ih, iw, ci, k, co
+        self.stride = 1
+        if padding == "same":
+            self.oh, self.ow = ih, iw
+            pad_h = max(self.oh - 1 + k - ih, 0)
+            pad_w = max(self.ow - 1 + k - iw, 0)
+            self.pad_top, self.pad_left = pad_h // 2, pad_w // 2
+        else:  # valid
+            self.oh, self.ow = ih - k + 1, iw - k + 1
+            self.pad_top = self.pad_left = 0
+        self.pool = pool
+        self.ph, self.pw = self.oh // pool, self.ow // pool
+        self.di = k * k * ci  # im2col row length == GEMM depth
+        self.in_elems = ih * iw * ci
+        self.out_elems = self.ph * self.pw * co
+
+
+def im2col(g, x):
+    """conv.rs im2col: (b, ih*iw*ci) -> (b*oh*ow, kh*kw*ci), taps (ky,kx,ci).
+
+    Pure gather (padded taps are exact 0.0), so vectorization is fold-free.
+    """
+    b = x.shape[0]
+    xs = x.reshape(b, g.ih, g.iw, g.ci)
+    pb = max(g.oh - 1 + g.k - g.ih - g.pad_top, 0)
+    pr = max(g.ow - 1 + g.k - g.iw - g.pad_left, 0)
+    xp = np.pad(xs, ((0, 0), (g.pad_top, pb), (g.pad_left, pr), (0, 0)))
+    cols = np.empty((b, g.oh, g.ow, g.k, g.k, g.ci), dtype=np.float32)
+    for ky in range(g.k):
+        for kx in range(g.k):
+            cols[:, :, :, ky, kx, :] = xp[:, ky : ky + g.oh, kx : kx + g.ow, :]
+    return cols.reshape(b * g.oh * g.ow, g.di)
+
+
+def col2im(g, dcols, b):
+    """conv.rs col2im: scatter-add back to (b, ih*iw*ci).
+
+    Loop order (oy, ox) outer / (ky, kx) inner reproduces the interpreter's
+    per-element accumulation order exactly (batch/channel lanes are disjoint).
+    """
+    dc = dcols.reshape(b, g.oh, g.ow, g.k, g.k, g.ci)
+    dx = np.zeros((b, g.ih, g.iw, g.ci), dtype=np.float32)
+    for oy in range(g.oh):
+        for ox in range(g.ow):
+            for ky in range(g.k):
+                iy = oy + ky - g.pad_top
+                if iy < 0 or iy >= g.ih:
+                    continue
+                for kx in range(g.k):
+                    ix = ox + kx - g.pad_left
+                    if 0 <= ix < g.iw:
+                        dx[:, iy, ix, :] = (
+                            dx[:, iy, ix, :] + dc[:, oy, ox, ky, kx, :]
+                        ).astype(np.float32)
+    return dx.reshape(b, g.in_elems)
+
+
+def _pool_windows(g, z, b):
+    """(b*oh*ow, co) -> (b, ph, pw, p*p, co) with the window axis in
+    ascending (ky, kx) order — np.argmax's first-max then equals the
+    interpreter's strict-> first-win scan."""
+    p = g.pool
+    w = z.reshape(b, g.ph, p, g.pw, p, g.co).transpose(0, 1, 3, 2, 4, 5)
+    return w.reshape(b, g.ph, g.pw, p * p, g.co)
+
+
+def maxpool_fwd(g, z, b):
+    """conv.rs maxpool_forward on the (b*oh*ow, co) conv output."""
+    win = _pool_windows(g, z, b)
+    return win.max(axis=3).reshape(b, g.out_elems)
+
+
+def maxpool_bwd(g, z, gpool, b):
+    """conv.rs maxpool_backward: route to the recomputed first-win argmax."""
+    win = _pool_windows(g, z, b)
+    idx = np.argmax(win, axis=3)  # first occurrence of the max
+    dwin = np.zeros_like(win)
+    np.put_along_axis(dwin, idx[:, :, :, None, :], gpool.reshape(b, g.ph, g.pw, 1, g.co), axis=3)
+    p = g.pool
+    dwin = dwin.reshape(b, g.ph, g.pw, p, p, g.co).transpose(0, 1, 3, 2, 4, 5)
+    return dwin.reshape(b * g.oh * g.ow, g.co)
+
+
+def native_step(params, gsum, x, y, fmt, enable, hyper, layers=None):
+    """runtime/native/step.rs train step; fmt = (scale, qmin, qmax).
+
+    ``layers`` lists one entry per layer: ``None`` for dense, a :class:`Geom`
+    for conv (conv layers are always ReLU'd; pool sits between the ReLU and
+    the activation quantizer, exactly as the interpreter orders them)."""
     lr, l1, l2, pen, gnorm = hyper
     L = len(params) // 2
     scale, qmin, qmax = fmt
     b = len(y)
     c = params[2 * (L - 1)].shape[1]
+    if layers is None:
+        layers = [None] * L
 
     wq, mask_w, sparsity = [], [], []
     for i in range(L):
@@ -338,19 +439,29 @@ def native_step(params, gsum, x, y, fmt, enable, hyper):
         sparsity.append(F32(zeros) / F32(w.size))
 
     acts = [x.reshape(b, -1).astype(np.float32)]
-    pre_q, mask_a = [], []
-    for i in range(L):
-        z = matmul_seq(acts[i], wq[i])
-        z = (z + params[2 * i + 1]).astype(np.float32)
-        if i + 1 < L:
-            z = np.maximum(z, F32(0.0))
-        if enable:
-            q, mk = quant_ste(z, scale, qmin, qmax)
+    pre_q, mask_a, cols_of = [], [], []
+    for i, g in enumerate(layers):
+        if g is None:
+            cols_of.append(None)
+            z = matmul_seq(acts[i], wq[i])
+            z = (z + params[2 * i + 1]).astype(np.float32)
+            if i + 1 < L:
+                z = np.maximum(z, F32(0.0))
+            pre_quant = z
         else:
-            q, mk = z.copy(), np.ones_like(z)
+            cols = im2col(g, acts[i])
+            cols_of.append(cols)
+            z = matmul_seq(cols, wq[i])  # (b*oh*ow, co)
+            z = (z + params[2 * i + 1]).astype(np.float32)
+            z = np.maximum(z, F32(0.0))  # conv layers are always ReLU'd
+            pre_quant = maxpool_fwd(g, z, b) if g.pool > 1 else z.reshape(b, -1)
+        if enable:
+            q, mk = quant_ste(pre_quant, scale, qmin, qmax)
+        else:
+            q, mk = pre_quant.copy(), np.ones_like(pre_quant)
         pre_q.append(z)
         mask_a.append(mk)
-        acts.append(q)
+        acts.append(q.reshape(b, -1))
 
     logits = acts[L]
     g = np.zeros((b, c), dtype=np.float32)
@@ -390,20 +501,32 @@ def native_step(params, gsum, x, y, fmt, enable, hyper):
     grad_norm = [None] * L
     gsum_norm = [None] * L
     for i in range(L - 1, -1, -1):
-        g = (g * mask_a[i]).astype(np.float32)
-        if i + 1 < L:
-            g = np.where(pre_q[i] > 0.0, g, F32(0.0)).astype(np.float32)
-        db = np.zeros(g.shape[1], dtype=np.float32)
-        for r in range(b):
-            db = (db + g[r]).astype(np.float32)
-        dw = matmul_at_b_seq(acts[i], g)
+        geom = layers[i]
+        g = (g.reshape(mask_a[i].shape) * mask_a[i]).astype(np.float32)
+        if geom is None:
+            if i + 1 < L:
+                g = np.where(pre_q[i] > 0.0, g, F32(0.0)).astype(np.float32)
+            gemm_in, g_full = acts[i], g
+        else:
+            if geom.pool > 1:
+                g_full = maxpool_bwd(geom, pre_q[i], g, b)
+            else:
+                g_full = g.reshape(-1, geom.co).copy()
+            g_full = np.where(pre_q[i] > 0.0, g_full, F32(0.0)).astype(np.float32)
+            gemm_in = cols_of[i]
+        db = np.zeros(g_full.shape[1], dtype=np.float32)
+        for r in range(g_full.shape[0]):
+            db = (db + g_full[r]).astype(np.float32)
+        dw = matmul_at_b_seq(gemm_in, g_full)
         dw = (dw * mask_w[i]).astype(np.float32)
         w = params[2 * i]
         dw = (dw + (F32(l1) * np.sign(w) + F32(l2) * w).astype(np.float32)).astype(
             np.float32
         )
         if i > 0:
-            g = matmul_a_bt_seq(g, wq[i])
+            g = matmul_a_bt_seq(g_full, wq[i])
+            if geom is not None:
+                g = col2im(geom, g, b)
         gn = F32(math.sqrt(float(np.sum(dw.astype(np.float64) ** 2))))
         grad_norm[i] = gn
         gsum[i] = (gsum[i] + dw).astype(np.float32)
@@ -419,9 +542,11 @@ def native_step(params, gsum, x, y, fmt, enable, hyper):
     return loss, ce, acc
 
 
-def infer_accuracy(params, data, fmt, enable, batch, n_batches):
+def infer_accuracy(params, data, fmt, enable, batch, n_batches, layers=None):
     L = len(params) // 2
     scale, qmin, qmax = fmt
+    if layers is None:
+        layers = [None] * L
     wq = []
     for i in range(L):
         if enable:
@@ -438,15 +563,22 @@ def infer_accuracy(params, data, fmt, enable, batch, n_batches):
             xs.append(x)
             ys.append(y)
         h = np.stack(xs).reshape(batch, -1).astype(np.float32)
-        for i in range(L):
-            z = matmul_seq(h, wq[i])
-            z = (z + params[2 * i + 1]).astype(np.float32)
-            if i + 1 < L:
+        for i, g in enumerate(layers):
+            if g is None:
+                z = matmul_seq(h, wq[i])
+                z = (z + params[2 * i + 1]).astype(np.float32)
+                if i + 1 < L:
+                    z = np.maximum(z, F32(0.0))
+            else:
+                z = matmul_seq(im2col(g, h), wq[i])
+                z = (z + params[2 * i + 1]).astype(np.float32)
                 z = np.maximum(z, F32(0.0))
+                z = maxpool_fwd(g, z, batch) if g.pool > 1 else z.reshape(batch, -1)
             if enable:
                 h, _ = quant_ste(z, scale, qmin, qmax)
             else:
                 h = z
+            h = h.reshape(batch, -1)
         accs.append(float(np.mean(np.argmax(h, axis=1) == ys)))
     return sum(accs) / len(accs)
 
@@ -456,36 +588,61 @@ FMT_8_4 = (16.0, -128.0, 127.0)
 HYPER = (0.05, 2e-4, 1e-4, 1e-3, True)  # lr, l1, l2, pen, gnorm
 SEED = 42
 
+# Manifest::synthetic_lenet("lenet-native", 16): 12x12x1 -> conv 5x5 SAME x6
+# maxpool2 -> conv 5x5 VALID x16 -> flatten 64 -> 32 -> 16 -> 10. The 2-D
+# kernel view is (kh*kw*ci, co), whose first dim IS the TNVS fan-in, so
+# init_params works unchanged on these dims.
+LENET_GEOMS = [
+    Geom(12, 12, 1, 5, 6, "same", 2),
+    Geom(6, 6, 6, 5, 16, "valid", 1),
+    None,
+    None,
+    None,
+]
+LENET_DIMS = [(25, 6), (150, 16), (64, 32), (32, 16), (16, 10)]
 
-def run(train_size, eval_size, steps, enable=True, report_every=0):
-    data = SyntheticVision(8, 8, 1, 10, train_size, SEED, 0.25)
-    evald = SyntheticVision(8, 8, 1, 10, train_size, SEED, 0.25).heldout(
+
+def run(train_size, eval_size, steps, enable=True, report_every=0, lenet=False):
+    hw = 12 if lenet else 8
+    layers = LENET_GEOMS if lenet else None
+    dims = LENET_DIMS if lenet else DIMS
+    data = SyntheticVision(hw, hw, 1, 10, train_size, SEED, 0.25)
+    evald = SyntheticVision(hw, hw, 1, 10, train_size, SEED, 0.25).heldout(
         train_size, eval_size
     )
-    params = init_params(DIMS, SEED)
-    gsum = [np.zeros(d, dtype=np.float32) for d in [(64, 32), (32, 16), (16, 10)]]
+    params = init_params(dims, SEED)
+    gsum = [np.zeros(d, dtype=np.float32) for d in dims]
     batcher = Batcher(data, 16, SEED ^ 0xBA7C4)
     ces = []
     for t in range(steps):
         x, y = batcher.next_batch()
-        loss, ce, acc = native_step(params, gsum, x, y, FMT_8_4, enable, HYPER)
+        loss, ce, acc = native_step(params, gsum, x, y, FMT_8_4, enable, HYPER, layers)
         ces.append(float(ce))
         if report_every and (t + 1) % report_every == 0:
             print(f"  step {t + 1:4d}: ce {ce:.6f} acc {acc:.3f}")
-    ev = infer_accuracy(params, evald, FMT_8_4, enable, 16, max(eval_size // 16, 1))
+    ev = infer_accuracy(
+        params, evald, FMT_8_4, enable, 16, max(eval_size // 16, 1), layers
+    )
     return ces, ev
 
 
 def main():
     mode = sys.argv[1] if len(sys.argv) > 1 else "golden"
-    if mode == "golden":
+    if mode in ("golden", "lenet-golden"):
         # the golden-test config: epochs=1, train_size=128 -> 8 steps; the
         # first 4 CEs are switch-free by the lookback lower bound
-        ces, _ = run(128, 32, 8)
+        ces, _ = run(128, 32, 8, lenet=mode.startswith("lenet"))
         print("first 8 CE values (golden = first 4):")
         for i, ce in enumerate(ces):
             print(f"  step {i}: {ce:.6f}")
         print("golden json snippet:", [round(c, 6) for c in ces[:4]])
+    elif mode == "lenet-learncheck":
+        # a longer constant-<8,4> lenet run backing the conv e2e thresholds
+        print("quantized <8,4> lenet, 2 epochs x 256 samples (32 steps):")
+        ces, ev = run(256, 64, 32, lenet=True, report_every=8)
+        first = sum(ces[:4]) / 4.0
+        last = sum(ces[-4:]) / 4.0
+        print(f"  CE {first:.4f} -> {last:.4f}; held-out acc {ev:.4f}")
     elif mode == "learncheck":
         # the fast e2e profile at constant <8,4> — a lower bound on AdaPT
         print("quantized <8,4>, 4 epochs x 512 samples (128 steps):")

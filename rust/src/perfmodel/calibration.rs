@@ -27,6 +27,13 @@
 //!   panels stored at width `WL` (the i8/i16 paths; optional — dumps from
 //!   before the integer path carry none, and the model then charges every
 //!   dense layer the f32 rate);
+//! * `calibration_conv_madds_per_ms` — conv-layer rate measured through
+//!   the full im2col + packed-GEMM lowering on the LeNet-shape grid
+//!   (optional; per-shape `calibration_conv_madds_per_ms_<shape>` rows
+//!   ride along for inspection but only the aggregate is consumed).
+//!   Conv MAdds are the eq. 8/9 `oh·ow·kh·kw·ci·co` counts the manifests
+//!   carry, so the rate folds in the column-gather overhead — that is
+//!   exactly the gap between it and the dense rate;
 //! * `sparse_crossover_density` — highest measured density where the
 //!   sparse kernel still beats the dense one.
 //!
@@ -79,6 +86,11 @@ pub struct KernelCalibration {
     /// case [`dense_rate_for_wl`](Self::dense_rate_for_wl) always answers
     /// the f32 rate.
     pub int_rates: Vec<(u32, f64)>,
+    /// MAdds/ms through the im2col + packed-GEMM conv lowering (the
+    /// `calibration_conv_madds_per_ms` entry). Optional: `None` for dumps
+    /// that predate the conv interpreter, in which case conv layers are
+    /// charged the dense f32 rate.
+    pub conv_madds_per_ms: Option<f64>,
 }
 
 impl KernelCalibration {
@@ -129,12 +141,26 @@ impl KernelCalibration {
             .get("sparse_crossover_density")
             .and_then(|v| v.as_f64())
             .ok_or_else(|| anyhow!("sparse_crossover_density missing"))?;
+        let conv_madds_per_ms = map
+            .get("calibration_conv_madds_per_ms")
+            .and_then(|v| v.as_f64());
         Ok(KernelCalibration {
             dense_madds_per_ms: dense,
             sparse_rates,
             crossover_density,
             int_rates,
+            conv_madds_per_ms,
         })
+    }
+
+    /// f32 rate for a layer of `kind`: conv layers run through im2col, so
+    /// they earn the measured conv rate when the bench recorded one.
+    fn f32_rate_for_kind(&self, kind: &str) -> f64 {
+        if kind == "conv" {
+            self.conv_madds_per_ms.unwrap_or(self.dense_madds_per_ms)
+        } else {
+            self.dense_madds_per_ms
+        }
     }
 
     /// Dense-path rate for a layer whose AdaPT word length is `wl`: the
@@ -196,13 +222,20 @@ impl KernelCalibration {
         let mut t_q = 0.0f64;
         for (l, desc) in layers.iter().enumerate() {
             let madds = desc.madds as f64;
-            t_f32 += madds / self.dense_madds_per_ms;
+            let f32_rate = self.f32_rate_for_kind(&desc.kind);
+            if f32_rate <= 0.0 {
+                return None;
+            }
+            t_f32 += madds / f32_rate;
             let density = nz[l] as f64;
             let wl = wls.and_then(|w| w.get(l)).map(|&w| w as u32).unwrap_or(32);
             let rate = if density <= self.crossover_density {
                 self.sparse_rate_at(density)?
             } else {
-                self.dense_rate_for_wl(wl)
+                let r = self.dense_rate_for_wl(wl);
+                // the wl-fitting int rate wins; a plain-f32 fallback keeps
+                // the im2col-aware conv rate instead
+                if r == self.dense_madds_per_ms { f32_rate } else { r }
             };
             if rate <= 0.0 {
                 return None;
@@ -377,6 +410,7 @@ mod tests {
                 madds: 100_000,
                 weight_elems: 100_000,
                 fan_in: 100,
+                ..LayerDesc::default()
             },
             LayerDesc {
                 name: "fc2".into(),
@@ -384,6 +418,7 @@ mod tests {
                 madds: 50_000,
                 weight_elems: 50_000,
                 fan_in: 100,
+                ..LayerDesc::default()
             },
         ]
     }
@@ -401,6 +436,57 @@ mod tests {
         // midpoint of (0.10, 4000) .. (0.30, 1500)
         let mid = cal.sparse_rate_at(0.20).unwrap();
         assert!((mid - 2750.0).abs() < 1e-9, "{mid}");
+        // pre-conv dumps carry no conv rate: conv layers charge f32 dense
+        assert!(cal.conv_madds_per_ms.is_none());
+        assert_eq!(cal.f32_rate_for_kind("conv"), cal.dense_madds_per_ms);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn conv_rate_changes_the_conv_layers_charge_only() {
+        let dir = std::env::temp_dir().join("adapt_test_calibration_conv");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_native.json");
+        let text = r#"{
+  "derived": {
+    "calibration_dense_madds_per_ms": 1000.0,
+    "calibration_conv_madds_per_ms": 600.0,
+    "calibration_conv_madds_per_ms_c12x12k5": 580.0,
+    "calibration_sparse_madds_per_ms_d10": 4000.0,
+    "sparse_crossover_density": 0.05
+  },
+  "results": {},
+  "unit": "ms_per_iter"
+}"#;
+        std::fs::write(&path, text).unwrap();
+        let cal = KernelCalibration::from_bench_json(&path).unwrap();
+        assert_eq!(cal.conv_madds_per_ms, Some(600.0));
+        // only the exact aggregate key is consumed
+        assert_eq!(cal.f32_rate_for_kind("conv"), 600.0);
+        assert_eq!(cal.f32_rate_for_kind("dense"), 1000.0);
+        // dense-everywhere run: conv layer costs the conv rate on BOTH
+        // sides of the ratio, so an all-dense-path speedup stays 1.0
+        let layers = vec![
+            LayerDesc {
+                name: "conv".into(),
+                kind: "conv".into(),
+                madds: 100_000,
+                weight_elems: 1000,
+                fan_in: 9,
+                ..LayerDesc::default()
+            },
+            LayerDesc {
+                name: "fc".into(),
+                kind: "dense".into(),
+                madds: 50_000,
+                weight_elems: 50_000,
+                fan_in: 100,
+                ..LayerDesc::default()
+            },
+        ];
+        let run = run_with_density(0.9); // above crossover: dense path
+        let s = cal.measured_inference_speedup(&layers, &run).unwrap();
+        assert!((s - 1.0).abs() < 1e-9, "{s}");
         std::fs::remove_file(&path).ok();
     }
 

@@ -261,6 +261,7 @@ mod tests {
                 madds: 1_024_000, // 1024 output px * 1000 weights
                 weight_elems: 1000,
                 fan_in: 9,
+                ..LayerDesc::default()
             },
             LayerDesc {
                 name: "fc".into(),
@@ -268,6 +269,7 @@ mod tests {
                 madds: 50_000,
                 weight_elems: 50_000,
                 fan_in: 100,
+                ..LayerDesc::default()
             },
         ]
     }

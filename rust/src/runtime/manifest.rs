@@ -43,7 +43,11 @@ impl ParamInfo {
 }
 
 /// One quantizable layer — the unit the precision-switching mechanism and
-/// the analytical performance model operate on.
+/// the analytical performance model operate on. Conv layers additionally
+/// carry the geometry keys the native lowerer needs (`stride`, `padding`,
+/// `pool`, `pool_kind`, `residual_from`); they are optional in the JSON
+/// and default to the dense-layer no-ops, so pre-conv manifests parse
+/// unchanged.
 #[derive(Debug, Clone)]
 pub struct LayerDesc {
     pub name: String,
@@ -51,6 +55,29 @@ pub struct LayerDesc {
     pub madds: u64,   // per-sample multiply-accumulates (perf model ops^l)
     pub weight_elems: u64,
     pub fan_in: usize,
+    pub stride: usize,
+    pub padding: String,   // same | valid
+    pub pool: usize,       // pool window == stride; 1 = no pooling
+    pub pool_kind: String, // max | avg
+    /// Earlier layer whose output is skip-added pre-ReLU; -1 = none.
+    pub residual_from: i64,
+}
+
+impl Default for LayerDesc {
+    fn default() -> Self {
+        LayerDesc {
+            name: String::new(),
+            kind: "dense".into(),
+            madds: 0,
+            weight_elems: 0,
+            fan_in: 1,
+            stride: 1,
+            padding: "same".into(),
+            pool: 1,
+            pool_kind: "max".into(),
+            residual_from: -1,
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -148,6 +175,13 @@ impl Manifest {
                     madds: e.req("madds").map_err(|e| anyhow!("{e}"))?.as_i64().unwrap_or(0) as u64,
                     weight_elems: e.req("weight_elems").map_err(|e| anyhow!("{e}"))?.as_i64().unwrap_or(0) as u64,
                     fan_in: e.req("fan_in").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap_or(1),
+                    // geometry keys are optional: absent in pre-conv
+                    // manifests, which must keep parsing byte-identically
+                    stride: e.get("stride").and_then(|v| v.as_usize()).unwrap_or(1),
+                    padding: e.get("padding").and_then(|v| v.as_str()).unwrap_or("same").into(),
+                    pool: e.get("pool").and_then(|v| v.as_usize()).unwrap_or(1),
+                    pool_kind: e.get("pool_kind").and_then(|v| v.as_str()).unwrap_or("max").into(),
+                    residual_from: e.get("residual_from").and_then(|v| v.as_i64()).unwrap_or(-1),
                 })
             })
             .collect::<Result<Vec<_>>>()?;
@@ -244,10 +278,10 @@ impl Manifest {
             .enumerate()
             .map(|(i, &(fan_in, fan_out))| LayerDesc {
                 name: format!("dense{i}"),
-                kind: "dense".into(),
                 madds: (fan_in * fan_out) as u64,
                 weight_elems: (fan_in * fan_out) as u64,
                 fan_in,
+                ..LayerDesc::default()
             })
             .collect();
         Manifest {
@@ -304,7 +338,18 @@ impl Manifest {
         man.batch = batch;
         man.input_shape = vec![h, w, c];
         man.classes = classes;
-        let l = dims.len();
+        man.fill_executable_io();
+        man.validate()
+            .expect("synthetic_mlp construction satisfies the manifest invariants");
+        man
+    }
+
+    /// Assemble the complete train/infer I/O contract (the aot.py emission
+    /// order) from `params` + the scalar fields. Shared by every
+    /// fully-executable synthetic constructor.
+    fn fill_executable_io(&mut self) {
+        let l = self.num_layers;
+        let batch = self.batch;
         let f32_spec = |name: String, shape: Vec<usize>| IoSpec {
             name,
             shape,
@@ -319,16 +364,22 @@ impl Manifest {
                 });
             }
         };
-        let gsum_specs = |out: &mut Vec<IoSpec>| {
-            for (i, &(di, do_)) in dims.iter().enumerate() {
-                out.push(f32_spec(format!("gsum.dense{i}.kernel"), vec![di, do_]));
+        let gsum_specs = |out: &mut Vec<IoSpec>, params: &[ParamInfo]| {
+            for p in params.iter().filter(|p| p.quantizable) {
+                out.push(IoSpec {
+                    name: format!("gsum.{}", p.name),
+                    shape: p.shape.clone(),
+                    dtype: Dtype::F32,
+                });
             }
         };
+        let mut x_shape = vec![batch];
+        x_shape.extend_from_slice(&self.input_shape);
 
         let mut train_inputs = Vec::with_capacity(3 * l + 4);
-        param_specs(&mut train_inputs, &man.params);
-        gsum_specs(&mut train_inputs);
-        train_inputs.push(f32_spec("x".into(), vec![batch, h, w, c]));
+        param_specs(&mut train_inputs, &self.params);
+        gsum_specs(&mut train_inputs, &self.params);
+        train_inputs.push(f32_spec("x".into(), x_shape.clone()));
         train_inputs.push(IoSpec {
             name: "y".into(),
             shape: vec![batch],
@@ -338,8 +389,8 @@ impl Manifest {
         train_inputs.push(f32_spec("hyper".into(), vec![8]));
 
         let mut train_outputs = Vec::with_capacity(3 * l + 7);
-        param_specs(&mut train_outputs, &man.params);
-        gsum_specs(&mut train_outputs);
+        param_specs(&mut train_outputs, &self.params);
+        gsum_specs(&mut train_outputs, &self.params);
         train_outputs.push(f32_spec("loss".into(), vec![]));
         train_outputs.push(f32_spec("ce".into(), vec![]));
         train_outputs.push(f32_spec("acc".into(), vec![]));
@@ -349,17 +400,100 @@ impl Manifest {
         train_outputs.push(f32_spec("act_absmax".into(), vec![l]));
 
         let mut infer_inputs = Vec::with_capacity(2 * l + 2);
-        param_specs(&mut infer_inputs, &man.params);
-        infer_inputs.push(f32_spec("x".into(), vec![batch, h, w, c]));
+        param_specs(&mut infer_inputs, &self.params);
+        infer_inputs.push(f32_spec("x".into(), x_shape));
         infer_inputs.push(f32_spec("qparams".into(), vec![2 * l, 5]));
-        let infer_outputs = vec![f32_spec("logits".into(), vec![batch, classes])];
+        let infer_outputs = vec![f32_spec("logits".into(), vec![batch, self.classes])];
 
-        man.train_inputs = train_inputs;
-        man.train_outputs = train_outputs;
-        man.infer_inputs = infer_inputs;
-        man.infer_outputs = infer_outputs;
+        self.train_inputs = train_inputs;
+        self.train_outputs = train_outputs;
+        self.infer_inputs = infer_inputs;
+        self.infer_outputs = infer_outputs;
+    }
+
+    /// A fully-executable synthetic LeNet: the five-layer conv/pool/dense
+    /// topology of `python/compile/models/lenet.py` shrunk to a 12×12×1
+    /// input so e2e tests train in milliseconds, with the complete I/O
+    /// contract — conv runs need **no artifacts directory**.
+    ///
+    /// Chain: `12×12×1 → conv 5×5 SAME ×6 → maxpool2 → 6×6×6 →
+    /// conv 5×5 VALID ×16 → 2×2×16 → flatten 64 → 32 → 16 → 10`.
+    ///
+    /// ```
+    /// use adapt::runtime::{Engine, Manifest};
+    ///
+    /// let man = Manifest::synthetic_lenet("lenet-native", 16);
+    /// assert_eq!(man.num_layers, 5);
+    /// assert_eq!(man.layers[0].kind, "conv");
+    /// assert_eq!(man.layers[0].pool, 2);
+    /// assert_eq!(man.params[0].shape, vec![5, 5, 1, 6]); // HWIO kernel
+    /// assert!(man.validate().is_ok());
+    /// // compiles straight onto the native interpreter
+    /// let model = Engine::native().compile_manifest(man).unwrap();
+    /// assert_eq!(model.manifest.classes, 10);
+    /// ```
+    pub fn synthetic_lenet(name: &str, batch: usize) -> Manifest {
+        let mut params = Vec::new();
+        let mut layers = Vec::new();
+        let hw = push_conv(&mut params, &mut layers, 0, "conv0", (12, 12), 1, 5, 6, "same", 2, "max", -1);
+        push_conv(&mut params, &mut layers, 1, "conv1", hw, 6, 5, 16, "valid", 1, "max", -1);
+        // flatten (no-op in NHWC row-major): 2*2*16 = 64
+        push_dense(&mut params, &mut layers, 2, "fc0", 64, 32);
+        push_dense(&mut params, &mut layers, 3, "fc1", 32, 16);
+        push_dense(&mut params, &mut layers, 4, "fc2", 16, 10);
+        let mut man = Manifest {
+            name: name.to_string(),
+            model: "lenet".into(),
+            batch,
+            input_shape: vec![12, 12, 1],
+            classes: 10,
+            num_layers: layers.len(),
+            params,
+            bn_state: Vec::new(),
+            layers,
+            train_inputs: Vec::new(),
+            train_outputs: Vec::new(),
+            infer_inputs: Vec::new(),
+            infer_outputs: Vec::new(),
+        };
+        man.fill_executable_io();
         man.validate()
-            .expect("synthetic_mlp construction satisfies the manifest invariants");
+            .expect("synthetic_lenet construction satisfies the manifest invariants");
+        man
+    }
+
+    /// A fully-executable synthetic residual block (the BN-free ResNet
+    /// skip-add shape): a stem conv, then a two-conv block whose second
+    /// conv adds the stem output pre-ReLU (`residual_from = 0`) and
+    /// average-pools, then a dense head.
+    ///
+    /// Chain: `8×8×1 → conv 3×3 SAME ×8 (stem) → conv 3×3 SAME ×8 →
+    /// conv 3×3 SAME ×8 (+stem, avgpool2) → 4×4×8 → flatten 128 → 10`.
+    pub fn synthetic_residual(name: &str, batch: usize) -> Manifest {
+        let mut params = Vec::new();
+        let mut layers = Vec::new();
+        let hw = push_conv(&mut params, &mut layers, 0, "stem", (8, 8), 1, 3, 8, "same", 1, "max", -1);
+        let hw = push_conv(&mut params, &mut layers, 1, "conv1", hw, 8, 3, 8, "same", 1, "max", -1);
+        push_conv(&mut params, &mut layers, 2, "conv2", hw, 8, 3, 8, "same", 2, "avg", 0);
+        push_dense(&mut params, &mut layers, 3, "fc", 128, 10);
+        let mut man = Manifest {
+            name: name.to_string(),
+            model: "residual".into(),
+            batch,
+            input_shape: vec![8, 8, 1],
+            classes: 10,
+            num_layers: layers.len(),
+            params,
+            bn_state: Vec::new(),
+            layers,
+            train_inputs: Vec::new(),
+            train_outputs: Vec::new(),
+            infer_inputs: Vec::new(),
+            infer_outputs: Vec::new(),
+        };
+        man.fill_executable_io();
+        man.validate()
+            .expect("synthetic_residual construction satisfies the manifest invariants");
         man
     }
 
@@ -372,6 +506,91 @@ impl Manifest {
             .map(|(i, _)| i)
             .collect()
     }
+}
+
+/// Append one conv layer's (kernel, bias) params and descriptor. Stride is
+/// always 1 in the synthetic zoo; returns the post-pool `(h, w)` feeding
+/// the next layer. `k` is the square kernel side, `pad` "same"/"valid".
+#[allow(clippy::too_many_arguments)]
+fn push_conv(
+    params: &mut Vec<ParamInfo>,
+    layers: &mut Vec<LayerDesc>,
+    li: usize,
+    name: &str,
+    (ih, iw): (usize, usize),
+    ci: usize,
+    k: usize,
+    co: usize,
+    pad: &str,
+    pool: usize,
+    pool_kind: &str,
+    residual_from: i64,
+) -> (usize, usize) {
+    let (oh, ow) = if pad == "same" { (ih, iw) } else { (ih - k + 1, iw - k + 1) };
+    let fan_in = k * k * ci;
+    params.push(ParamInfo {
+        name: format!("{name}.kernel"),
+        shape: vec![k, k, ci, co],
+        kind: "kernel".into(),
+        layer: li as i64,
+        fan_in,
+        quantizable: true,
+    });
+    params.push(ParamInfo {
+        name: format!("{name}.bias"),
+        shape: vec![co],
+        kind: "bias".into(),
+        layer: -1,
+        fan_in,
+        quantizable: false,
+    });
+    layers.push(LayerDesc {
+        name: name.into(),
+        kind: "conv".into(),
+        madds: (oh * ow * fan_in * co) as u64,
+        weight_elems: (fan_in * co) as u64,
+        fan_in,
+        padding: pad.into(),
+        pool,
+        pool_kind: pool_kind.into(),
+        residual_from,
+        ..LayerDesc::default()
+    });
+    (oh / pool, ow / pool)
+}
+
+/// Append one dense layer's (kernel, bias) params and descriptor.
+fn push_dense(
+    params: &mut Vec<ParamInfo>,
+    layers: &mut Vec<LayerDesc>,
+    li: usize,
+    name: &str,
+    fan_in: usize,
+    fan_out: usize,
+) {
+    params.push(ParamInfo {
+        name: format!("{name}.kernel"),
+        shape: vec![fan_in, fan_out],
+        kind: "kernel".into(),
+        layer: li as i64,
+        fan_in,
+        quantizable: true,
+    });
+    params.push(ParamInfo {
+        name: format!("{name}.bias"),
+        shape: vec![fan_out],
+        kind: "bias".into(),
+        layer: -1,
+        fan_in,
+        quantizable: false,
+    });
+    layers.push(LayerDesc {
+        name: name.into(),
+        madds: (fan_in * fan_out) as u64,
+        weight_elems: (fan_in * fan_out) as u64,
+        fan_in,
+        ..LayerDesc::default()
+    });
 }
 
 /// Unit-test support shared by the controller test suites (qmap, muppet):
@@ -421,6 +640,27 @@ mod tests {
         assert_eq!(m.num_layers, 1);
         assert_eq!(m.total_params(), 10);
         assert_eq!(m.kernel_indices(), vec![0]);
+        // geometry keys absent from the JSON default to the dense no-ops
+        assert_eq!(m.layers[0].stride, 1);
+        assert_eq!(m.layers[0].padding, "same");
+        assert_eq!(m.layers[0].pool, 1);
+        assert_eq!(m.layers[0].pool_kind, "max");
+        assert_eq!(m.layers[0].residual_from, -1);
+    }
+
+    #[test]
+    fn parses_conv_geometry_keys() {
+        let with_geom = tiny_manifest().replace(
+            r#"{"name":"fc","kind":"dense","madds":8,"weight_elems":8,"fan_in":4}"#,
+            r#"{"name":"fc","kind":"dense","madds":8,"weight_elems":8,"fan_in":4,
+                "stride":2,"padding":"valid","pool":2,"pool_kind":"avg","residual_from":0}"#,
+        );
+        let m = Manifest::parse(&with_geom).unwrap();
+        assert_eq!(m.layers[0].stride, 2);
+        assert_eq!(m.layers[0].padding, "valid");
+        assert_eq!(m.layers[0].pool, 2);
+        assert_eq!(m.layers[0].pool_kind, "avg");
+        assert_eq!(m.layers[0].residual_from, 0);
     }
 
     #[test]
@@ -445,6 +685,39 @@ mod tests {
         let y = &m.train_inputs[m.train_inputs.len() - 3];
         assert_eq!(y.dtype, Dtype::I32);
         assert_eq!(y.shape, vec![16]);
+    }
+
+    #[test]
+    fn synthetic_lenet_is_fully_executable() {
+        let m = Manifest::synthetic_lenet("lenet-native", 16);
+        m.validate().expect("full I/O contract");
+        assert_eq!(m.num_layers, 5);
+        assert_eq!(m.kernel_indices(), vec![0, 2, 4, 6, 8]);
+        // HWIO conv kernels, then the dense head
+        assert_eq!(m.params[0].shape, vec![5, 5, 1, 6]);
+        assert_eq!(m.params[0].fan_in, 25);
+        assert_eq!(m.params[2].shape, vec![5, 5, 6, 16]);
+        assert_eq!(m.params[4].shape, vec![64, 32]);
+        assert_eq!(m.layers[0].madds, 12 * 12 * 5 * 5 * 6);
+        assert_eq!(m.layers[1].madds, 2 * 2 * 5 * 5 * 6 * 16);
+        assert_eq!(m.layers[1].padding, "valid");
+        // initializer plumbing accepts 4-D kernels
+        let params = crate::init::init_params(&m, crate::init::Initializer::Tnvs, 1.0, 0);
+        assert_eq!(params[0].len(), 5 * 5 * 6);
+        let gsum = crate::init::init_gsum(&m);
+        assert_eq!(gsum[0].len(), 5 * 5 * 6);
+        assert_eq!(gsum[1].len(), 5 * 5 * 6 * 16);
+    }
+
+    #[test]
+    fn synthetic_residual_carries_the_skip_edge() {
+        let m = Manifest::synthetic_residual("res-native", 16);
+        m.validate().expect("full I/O contract");
+        assert_eq!(m.num_layers, 4);
+        assert_eq!(m.layers[2].residual_from, 0);
+        assert_eq!(m.layers[2].pool_kind, "avg");
+        assert_eq!(m.layers[2].pool, 2);
+        assert_eq!(m.params[6].shape, vec![128, 10]);
     }
 
     #[test]

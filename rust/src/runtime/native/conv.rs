@@ -1,0 +1,311 @@
+//! Data-movement kernels for the conv lowering: im2col / col2im and the
+//! max/avg pooling pair. All four are serial, fixed-order loops — the
+//! parallelism (and the bit-determinism argument) lives entirely in the
+//! packed GEMM the columns feed, which partitions output rows exactly as
+//! it does for dense layers. Padded taps contribute literal `0.0` terms
+//! inside the GEMM's ascending-k fold, so SAME and VALID convs share one
+//! code path and one determinism story.
+//!
+//! Layout contract (shared with `python/tools/native_golden.py`'s mirror):
+//! activations are NHWC row-major, kernels HWIO row-major, and an im2col
+//! row holds the `(ky, kx, ci)` taps in that order — which makes the
+//! row-major 2-D view of the HWIO kernel the GEMM B matrix with no
+//! reshuffle.
+
+use super::plan::ConvGeom;
+
+/// Gather the conv input `x` (NHWC, `b` samples of `ih·iw·ci`) into the
+/// column matrix `cols` (`b·oh·ow` rows × `kh·kw·ci`), zero-filling
+/// out-of-bounds (padding) taps. `cols` must already have the exact length.
+pub fn im2col(g: &ConvGeom, x: &[f32], b: usize, cols: &mut [f32]) {
+    let k = g.gemm_k();
+    debug_assert_eq!(x.len(), b * g.in_elems());
+    debug_assert_eq!(cols.len(), g.conv_rows(b) * k);
+    let mut row = 0usize;
+    for s in 0..b {
+        let xs = &x[s * g.in_elems()..(s + 1) * g.in_elems()];
+        for oy in 0..g.oh {
+            for ox in 0..g.ow {
+                let dst = &mut cols[row * k..(row + 1) * k];
+                let mut t = 0usize;
+                for ky in 0..g.kh {
+                    // signed intermediate: pad offsets may underflow usize
+                    let iy = (oy * g.stride + ky) as isize - g.pad_top as isize;
+                    for kx in 0..g.kw {
+                        let ix = (ox * g.stride + kx) as isize - g.pad_left as isize;
+                        if iy >= 0 && (iy as usize) < g.ih && ix >= 0 && (ix as usize) < g.iw {
+                            let base = ((iy as usize) * g.iw + ix as usize) * g.ci;
+                            dst[t..t + g.ci].copy_from_slice(&xs[base..base + g.ci]);
+                        } else {
+                            dst[t..t + g.ci].fill(0.0);
+                        }
+                        t += g.ci;
+                    }
+                }
+                row += 1;
+            }
+        }
+    }
+}
+
+/// Scatter-add the column-space gradient `dcols` (`b·oh·ow × kh·kw·ci`)
+/// back to input space, OVERWRITING `dx` (`b × ih·iw·ci`). Loop order is
+/// `(s, oy, ox, ky, kx, c)`, so each `dx` element accumulates its
+/// overlapping taps in lexicographic `(oy, ox, ky, kx)` order — the same
+/// per-element fold the numpy mirror produces, and independent of any
+/// worker-pool size because this runs serially.
+pub fn col2im(g: &ConvGeom, dcols: &[f32], b: usize, dx: &mut [f32]) {
+    let k = g.gemm_k();
+    debug_assert_eq!(dcols.len(), g.conv_rows(b) * k);
+    debug_assert_eq!(dx.len(), b * g.in_elems());
+    dx.fill(0.0);
+    let mut row = 0usize;
+    for s in 0..b {
+        let xs = &mut dx[s * g.in_elems()..(s + 1) * g.in_elems()];
+        for oy in 0..g.oh {
+            for ox in 0..g.ow {
+                let src = &dcols[row * k..(row + 1) * k];
+                let mut t = 0usize;
+                for ky in 0..g.kh {
+                    let iy = (oy * g.stride + ky) as isize - g.pad_top as isize;
+                    for kx in 0..g.kw {
+                        let ix = (ox * g.stride + kx) as isize - g.pad_left as isize;
+                        if iy >= 0 && (iy as usize) < g.ih && ix >= 0 && (ix as usize) < g.iw {
+                            let base = ((iy as usize) * g.iw + ix as usize) * g.ci;
+                            for c in 0..g.ci {
+                                xs[base + c] += src[t + c];
+                            }
+                        }
+                        t += g.ci;
+                    }
+                }
+                row += 1;
+            }
+        }
+    }
+}
+
+/// `p×p` max-pool (stride `p`) over NHWC `src` (`b × oh·ow·co`) into `dst`
+/// (`b × ph·pw·co`). The window scan is seeded with the first element and
+/// updates on strict `>` in ascending `(ky, kx)` order, so ties resolve to
+/// the first occurrence — the convention [`maxpool_backward`] re-derives.
+pub fn maxpool_forward(g: &ConvGeom, src: &[f32], b: usize, dst: &mut [f32]) {
+    let p = g.pool;
+    debug_assert_eq!(src.len(), b * g.conv_elems());
+    debug_assert_eq!(dst.len(), b * g.out_elems());
+    for s in 0..b {
+        let xs = &src[s * g.conv_elems()..(s + 1) * g.conv_elems()];
+        let ys = &mut dst[s * g.out_elems()..(s + 1) * g.out_elems()];
+        for py in 0..g.ph {
+            for px in 0..g.pw {
+                for c in 0..g.co {
+                    let mut best = xs[((py * p) * g.ow + px * p) * g.co + c];
+                    for ky in 0..p {
+                        for kx in 0..p {
+                            let v = xs[((py * p + ky) * g.ow + px * p + kx) * g.co + c];
+                            if v > best {
+                                best = v;
+                            }
+                        }
+                    }
+                    ys[(py * g.pw + px) * g.co + c] = best;
+                }
+            }
+        }
+    }
+}
+
+/// Route the pooled gradient back to each window's argmax, OVERWRITING
+/// `dsrc`. The argmax is recomputed from `src` (the stored forward input)
+/// with the identical first-win scan, so forward and backward always agree
+/// on the winner even under exact ties.
+pub fn maxpool_backward(g: &ConvGeom, src: &[f32], dpool: &[f32], b: usize, dsrc: &mut [f32]) {
+    let p = g.pool;
+    debug_assert_eq!(dsrc.len(), b * g.conv_elems());
+    debug_assert_eq!(dpool.len(), b * g.out_elems());
+    dsrc.fill(0.0);
+    for s in 0..b {
+        let xs = &src[s * g.conv_elems()..(s + 1) * g.conv_elems()];
+        let gs = &dpool[s * g.out_elems()..(s + 1) * g.out_elems()];
+        let ds = &mut dsrc[s * g.conv_elems()..(s + 1) * g.conv_elems()];
+        for py in 0..g.ph {
+            for px in 0..g.pw {
+                for c in 0..g.co {
+                    let mut best_idx = ((py * p) * g.ow + px * p) * g.co + c;
+                    let mut best = xs[best_idx];
+                    for ky in 0..p {
+                        for kx in 0..p {
+                            let idx = ((py * p + ky) * g.ow + px * p + kx) * g.co + c;
+                            if xs[idx] > best {
+                                best = xs[idx];
+                                best_idx = idx;
+                            }
+                        }
+                    }
+                    ds[best_idx] = gs[(py * g.pw + px) * g.co + c];
+                }
+            }
+        }
+    }
+}
+
+/// `p×p` average-pool: ascending `(ky, kx)` sum fold, then one multiply by
+/// `1/p²` (exact for the power-of-two windows the model zoo uses).
+pub fn avgpool_forward(g: &ConvGeom, src: &[f32], b: usize, dst: &mut [f32]) {
+    let p = g.pool;
+    let inv = 1.0f32 / (p * p) as f32;
+    debug_assert_eq!(src.len(), b * g.conv_elems());
+    debug_assert_eq!(dst.len(), b * g.out_elems());
+    for s in 0..b {
+        let xs = &src[s * g.conv_elems()..(s + 1) * g.conv_elems()];
+        let ys = &mut dst[s * g.out_elems()..(s + 1) * g.out_elems()];
+        for py in 0..g.ph {
+            for px in 0..g.pw {
+                for c in 0..g.co {
+                    let mut acc = 0.0f32;
+                    for ky in 0..p {
+                        for kx in 0..p {
+                            acc += xs[((py * p + ky) * g.ow + px * p + kx) * g.co + c];
+                        }
+                    }
+                    ys[(py * g.pw + px) * g.co + c] = acc * inv;
+                }
+            }
+        }
+    }
+}
+
+/// Average-pool backward: every window element receives `g/p²`,
+/// OVERWRITING `dsrc`.
+pub fn avgpool_backward(g: &ConvGeom, dpool: &[f32], b: usize, dsrc: &mut [f32]) {
+    let p = g.pool;
+    let inv = 1.0f32 / (p * p) as f32;
+    debug_assert_eq!(dsrc.len(), b * g.conv_elems());
+    debug_assert_eq!(dpool.len(), b * g.out_elems());
+    for s in 0..b {
+        let gs = &dpool[s * g.out_elems()..(s + 1) * g.out_elems()];
+        let ds = &mut dsrc[s * g.conv_elems()..(s + 1) * g.conv_elems()];
+        for py in 0..g.ph {
+            for px in 0..g.pw {
+                for c in 0..g.co {
+                    let gv = gs[(py * g.pw + px) * g.co + c] * inv;
+                    for ky in 0..p {
+                        for kx in 0..p {
+                            ds[((py * p + ky) * g.ow + px * p + kx) * g.co + c] = gv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::plan::PoolKind;
+    use super::*;
+
+    fn geom(ih: usize, iw: usize, ci: usize, kh: usize, co: usize, stride: usize, same: bool, pool: usize) -> ConvGeom {
+        let (oh, ow, pad_top, pad_left) = if same {
+            let oh = ih.div_ceil(stride);
+            let ow = iw.div_ceil(stride);
+            let ph = ((oh - 1) * stride + kh).saturating_sub(ih);
+            let pw = ((ow - 1) * stride + kh).saturating_sub(iw);
+            (oh, ow, ph / 2, pw / 2)
+        } else {
+            ((ih - kh) / stride + 1, (iw - kh) / stride + 1, 0, 0)
+        };
+        ConvGeom {
+            ih,
+            iw,
+            ci,
+            kh,
+            kw: kh,
+            co,
+            stride,
+            pad_top,
+            pad_left,
+            oh,
+            ow,
+            pool,
+            pool_kind: PoolKind::Max,
+            ph: oh / pool,
+            pw: ow / pool,
+            residual_from: None,
+        }
+    }
+
+    fn ramp(n: usize) -> Vec<f32> {
+        (0..n).map(|i| ((i * 37 % 23) as f32) - 11.0).collect()
+    }
+
+    #[test]
+    fn im2col_identity_kernel_is_a_copy() {
+        // 1x1 kernel, stride 1, no padding: cols must equal x verbatim
+        let g = geom(4, 3, 2, 1, 5, 1, false, 1);
+        let x = ramp(2 * g.in_elems());
+        let mut cols = vec![9.0; g.conv_rows(2) * g.gemm_k()];
+        im2col(&g, &x, 2, &mut cols);
+        assert_eq!(cols, x);
+    }
+
+    #[test]
+    fn im2col_zero_fills_padding_taps() {
+        let g = geom(3, 3, 1, 3, 2, 1, true, 1);
+        assert_eq!((g.pad_top, g.pad_left), (1, 1));
+        let x = vec![1.0; g.in_elems()];
+        let mut cols = vec![7.0; g.conv_rows(1) * g.gemm_k()];
+        im2col(&g, &x, 1, &mut cols);
+        // corner output (0,0): taps with ky=0 or kx=0 fall off the input
+        let first = &cols[..g.gemm_k()];
+        assert_eq!(&first[..4], &[0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(first[4], 1.0, "center tap is in-bounds");
+        // interior output (1,1) has no padded taps
+        let mid = &cols[4 * g.gemm_k()..5 * g.gemm_k()];
+        assert!(mid.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn col2im_transposes_im2col_on_a_delta() {
+        // scattering the columns of a one-hot input must reproduce the
+        // tap-multiplicity at that position (gather/scatter adjointness)
+        let g = geom(5, 5, 1, 3, 1, 1, true, 1);
+        let mut x = vec![0.0; g.in_elems()];
+        x[12] = 1.0; // center pixel (2,2)
+        let mut cols = vec![0.0; g.conv_rows(1) * g.gemm_k()];
+        im2col(&g, &x, 1, &mut cols);
+        let mut back = vec![5.0; g.in_elems()];
+        col2im(&g, &cols, 1, &mut back);
+        // the center of a 5x5 input is covered by all 9 windows
+        assert_eq!(back[12], 9.0);
+        assert_eq!(back[0], 0.0, "col2im overwrites stale buffer contents");
+    }
+
+    #[test]
+    fn maxpool_first_win_ties_and_backward_agree() {
+        let mut g = geom(2, 2, 1, 1, 1, 1, false, 2);
+        g.pool_kind = PoolKind::Max;
+        let src = vec![3.0, 3.0, 1.0, 3.0]; // three-way tie on the max
+        let mut dst = vec![0.0; 1];
+        maxpool_forward(&g, &src, 1, &mut dst);
+        assert_eq!(dst[0], 3.0);
+        let mut dsrc = vec![1.0; 4];
+        maxpool_backward(&g, &src, &[7.0], 1, &mut dsrc);
+        assert_eq!(dsrc, vec![7.0, 0.0, 0.0, 0.0], "first occurrence wins");
+    }
+
+    #[test]
+    fn avgpool_roundtrip_is_exact_for_pow2_windows() {
+        let mut g = geom(4, 4, 3, 1, 3, 1, false, 4);
+        g.pool_kind = PoolKind::Avg;
+        let src = ramp(g.conv_elems());
+        let mut dst = vec![0.0; g.out_elems()];
+        avgpool_forward(&g, &src, 1, &mut dst);
+        let mut dsrc = vec![9.0; g.conv_elems()];
+        avgpool_backward(&g, &dst, 1, &mut dsrc);
+        // backward spreads mean/16; summing a window recovers the mean
+        let manual: f32 = src.iter().step_by(3).sum::<f32>() / 16.0;
+        assert_eq!(dst[0], manual);
+        assert_eq!(dsrc[0], dst[0] / 16.0);
+    }
+}

@@ -1,6 +1,7 @@
 //! The native CPU execution backend: a pure-Rust interpreter for the
-//! all-dense MLP manifests, behind the same [`ExecBackend`]/[`ExecModule`]
-//! contract as the PJRT path.
+//! paper's model-zoo manifests (dense MLPs and BN-free conv/pool/residual
+//! nets), behind the same [`ExecBackend`]/[`ExecModule`] contract as the
+//! PJRT path.
 //!
 //! # Why it exists
 //!
@@ -52,11 +53,22 @@
 //!
 //! # Scope
 //!
-//! Dense-only, BN-free models (the `mlp-*` artifacts and
-//! [`Manifest::synthetic_mlp`](crate::runtime::Manifest::synthetic_mlp)).
-//! Conv models (LeNet/AlexNet/ResNet) still need a PJRT binding —
-//! `NativeModel::from_manifest` rejects their manifests with a clear error
-//! rather than silently mis-executing them.
+//! BN-free models built from dense, conv2d (stride ≥ 1, SAME/VALID
+//! padding), max/avg pooling, flatten and pre-ReLU residual-add layers:
+//! the `mlp-*` artifacts plus
+//! [`Manifest::synthetic_mlp`](crate::runtime::Manifest::synthetic_mlp),
+//! [`Manifest::synthetic_lenet`](crate::runtime::Manifest::synthetic_lenet)
+//! and
+//! [`Manifest::synthetic_residual`](crate::runtime::Manifest::synthetic_residual).
+//! The [`plan`] lowerer maps each manifest onto this op set up front;
+//! anything else (batch-norm state, unknown layer kinds, conv logits
+//! heads) makes `NativeModel::from_manifest` fail with a typed
+//! [`UnsupportedOp`] error rather than silently mis-executing. Conv layers
+//! run as im2col onto the same packed-GEMM panels the dense layers use
+//! (per-layer column buffers in the step arena), so the snapshot cache,
+//! the int8/int16/CSR dispatch and the serving freeze path apply to them
+//! unchanged — see the `step` module docs for the lowering and the
+//! determinism argument.
 //!
 //! ```
 //! use adapt::runtime::{Engine, Manifest};
@@ -82,12 +94,15 @@
 //! assert!(metrics.loss.is_finite());
 //! ```
 
+pub mod conv;
 pub mod gemm;
 pub mod ops;
+pub mod plan;
 mod step;
 
 pub use gemm::IntSimd;
 pub use ops::{fake_quant, fake_quant_ste, QRow};
+pub use plan::{lower_manifest, ConvGeom, LayerPlan, ModelPlan, PoolKind, UnsupportedOp};
 pub use step::{
     mlp_dims, sparse_crossover, InferScratch, ModelSnapshot, NativeModel,
     SPARSE_CROSSOVER_DEFAULT,

@@ -58,6 +58,14 @@ impl QRow {
             wl: s[4],
         })
     }
+
+    /// A disabled row: [`fake_quant`] under it is a pure copy. The conv
+    /// path hands this to the fused GEMM epilogues to get the raw
+    /// post-bias/ReLU values out (pooling must run before the real
+    /// activation quantizer).
+    pub fn passthrough() -> QRow {
+        QRow { scale: 1.0, qmin: 0.0, qmax: 0.0, enable: false, wl: 0.0 }
+    }
 }
 
 /// Fake-quant one tensor under a runtime qparams row: quantized values into

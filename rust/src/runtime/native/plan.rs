@@ -1,0 +1,419 @@
+//! Manifest lowering for the native interpreter: from the aot.py layer
+//! descriptors (kinds, kernel shapes, conv geometry keys) to the typed
+//! per-layer execution plan the train/infer interpreters and the snapshot
+//! packer run over.
+//!
+//! Every layer lowers to ONE GEMM: dense layers verbatim, conv layers via
+//! im2col — the column matrix `[b·oh·ow, kh·kw·ci]` times the HWIO kernel
+//! viewed row-major as `[kh·kw·ci, co]` (the natural 2-D view of the 4-D
+//! tensor, no reshuffle needed). Pooling, the residual skip-add and the
+//! activation fake-quant are separate post-GEMM ops ordered exactly as the
+//! L2 model functions apply them: conv+bias → (+skip) → ReLU → pool →
+//! quantize (`python/compile/models/lenet.py`, `resnet.py`).
+//!
+//! Manifests the interpreter cannot execute are rejected with a typed
+//! [`UnsupportedOp`] (downcastable from the `anyhow` chain) instead of a
+//! panic or a silent mis-execution — asserted in
+//! `rust/tests/parity_and_failures.rs`.
+
+use std::fmt;
+
+use anyhow::{anyhow, Result};
+
+use super::super::manifest::Manifest;
+
+/// A manifest op the native interpreter does not implement (e.g. the
+/// ResNet `downsample` 1×1 projection, batchnorm, or an unknown layer
+/// kind). Carried as the error source so callers can distinguish
+/// "unsupported model" from "malformed manifest".
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UnsupportedOp {
+    /// The offending op/kind (e.g. `"downsample"`, `"batchnorm"`).
+    pub op: String,
+    /// Quantizable-layer index the op appeared at.
+    pub layer: usize,
+}
+
+impl fmt::Display for UnsupportedOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "native backend does not support op {:?} (layer {})",
+            self.op, self.layer
+        )
+    }
+}
+
+impl std::error::Error for UnsupportedOp {}
+
+fn unsupported(op: impl Into<String>, layer: usize) -> anyhow::Error {
+    anyhow::Error::new(UnsupportedOp { op: op.into(), layer })
+}
+
+/// Pooling reduction applied after a conv layer's ReLU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+/// Fully-resolved geometry of one conv layer (NHWC activations, HWIO
+/// kernel). `oh × ow` is the conv output (pre-pool); `ph × pw` the layer
+/// output after the `pool × pool` window (stride = window, the only form
+/// the model zoo uses). `pool == 1` means no pooling.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConvGeom {
+    pub ih: usize,
+    pub iw: usize,
+    pub ci: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub co: usize,
+    pub stride: usize,
+    /// Zero-padding rows/cols added on top/left (JAX SAME convention:
+    /// `pad_total = max((o-1)·s + k - i, 0)`, top gets `pad_total / 2`).
+    pub pad_top: usize,
+    pub pad_left: usize,
+    pub oh: usize,
+    pub ow: usize,
+    pub pool: usize,
+    pub pool_kind: PoolKind,
+    pub ph: usize,
+    pub pw: usize,
+    /// `Some(j)`: layer j's output (`acts[j+1]`, shape `oh × ow × co`) is
+    /// added to the conv result BEFORE the ReLU — the BN-free residual
+    /// skip-add.
+    pub residual_from: Option<usize>,
+}
+
+impl ConvGeom {
+    /// GEMM depth: one im2col column per (ky, kx, ci) tap.
+    pub fn gemm_k(&self) -> usize {
+        self.kh * self.kw * self.ci
+    }
+
+    /// GEMM rows for a batch of `b` samples (one row per output pixel).
+    pub fn conv_rows(&self, b: usize) -> usize {
+        b * self.oh * self.ow
+    }
+
+    /// Per-sample conv-output (pre-pool) element count.
+    pub fn conv_elems(&self) -> usize {
+        self.oh * self.ow * self.co
+    }
+
+    /// Per-sample layer-output (post-pool) element count.
+    pub fn out_elems(&self) -> usize {
+        self.ph * self.pw * self.co
+    }
+
+    /// Per-sample input element count.
+    pub fn in_elems(&self) -> usize {
+        self.ih * self.iw * self.ci
+    }
+}
+
+/// One lowered layer: the GEMM view plus (for conv) the full geometry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LayerPlan {
+    Dense { di: usize, do_: usize },
+    Conv(ConvGeom),
+}
+
+/// The lowered model: what [`super::NativeModel`] interprets and
+/// [`super::ModelSnapshot`] packs. Produced by [`lower_manifest`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelPlan {
+    pub layers: Vec<LayerPlan>,
+}
+
+impl ModelPlan {
+    /// An all-dense plan from explicit `(fan_in, fan_out)` pairs — the MLP
+    /// shape, used by kernel-level tests and benches that bypass manifests.
+    pub fn all_dense(dims: &[(usize, usize)]) -> ModelPlan {
+        ModelPlan {
+            layers: dims
+                .iter()
+                .map(|&(di, do_)| LayerPlan::Dense { di, do_ })
+                .collect(),
+        }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Per-layer GEMM `(depth, width)`: dense `(fan_in, fan_out)`, conv
+    /// `(kh·kw·ci, co)`. This is the shape the packers, the snapshot cache
+    /// keys and the gsum buffers all share (a conv kernel's element count
+    /// is exactly `depth · width`).
+    pub fn gemm_dims(&self) -> Vec<(usize, usize)> {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                LayerPlan::Dense { di, do_ } => (*di, *do_),
+                LayerPlan::Conv(g) => (g.gemm_k(), g.co),
+            })
+            .collect()
+    }
+
+    /// Per-sample input width of layer `i` (flatten is a no-op in the
+    /// NHWC row-major layout, so this is always a flat element count).
+    pub fn in_elems(&self, i: usize) -> usize {
+        match &self.layers[i] {
+            LayerPlan::Dense { di, .. } => *di,
+            LayerPlan::Conv(g) => g.in_elems(),
+        }
+    }
+
+    /// Per-sample output width of layer `i` (post-pool for conv).
+    pub fn out_elems(&self, i: usize) -> usize {
+        match &self.layers[i] {
+            LayerPlan::Dense { do_, .. } => *do_,
+            LayerPlan::Conv(g) => g.out_elems(),
+        }
+    }
+
+    pub fn conv(&self, i: usize) -> Option<&ConvGeom> {
+        match &self.layers[i] {
+            LayerPlan::Conv(g) => Some(g),
+            LayerPlan::Dense { .. } => None,
+        }
+    }
+
+    pub fn has_conv(&self) -> bool {
+        self.layers.iter().any(|l| matches!(l, LayerPlan::Conv(_)))
+    }
+}
+
+/// Validate `man` and lower it to a [`ModelPlan`]: an MLP/LeNet-style chain
+/// of conv (with optional pool / residual skip-add) and dense layers with
+/// the canonical (kernel, bias) parameter interleaving, BN-free, ending in
+/// a dense logits layer. Unsupported ops reject with a typed
+/// [`UnsupportedOp`]; shape inconsistencies with a plain error.
+///
+/// Shared by `NativeModel::from_manifest` and the serving registry's
+/// [`freeze`](crate::serve::ServedModel::freeze), which snapshots models
+/// without instantiating an interpreter.
+pub fn lower_manifest(man: &Manifest) -> Result<ModelPlan> {
+    let l = man.num_layers;
+    if l == 0 {
+        return Err(anyhow!("manifest {} has no quantizable layers", man.name));
+    }
+    if !man.bn_state.is_empty() {
+        return Err(unsupported("batchnorm", 0)
+            .context(format!("{} bn tensors in {}", man.bn_state.len(), man.name)));
+    }
+    if man.params.len() != 2 * l {
+        return Err(anyhow!(
+            "native backend expects (kernel, bias) per layer: {} params for {l} layers",
+            man.params.len()
+        ));
+    }
+    let mut layers: Vec<LayerPlan> = Vec::with_capacity(l);
+    // spatial shape while it exists (lost at the first dense layer) plus
+    // the flat width, which is what dense fan-in checks against
+    let mut hwc: Option<(usize, usize, usize)> = match man.input_shape[..] {
+        [h, w, c] => Some((h, w, c)),
+        _ => None,
+    };
+    let mut d_in = man.input_shape.iter().product::<usize>();
+    for i in 0..l {
+        let desc = &man.layers[i];
+        let kernel = &man.params[2 * i];
+        let bias = &man.params[2 * i + 1];
+        if !kernel.quantizable || kernel.layer != i as i64 {
+            return Err(anyhow!("param {} is not the layer-{i} kernel", kernel.name));
+        }
+        match desc.kind.as_str() {
+            "dense" => {
+                if kernel.shape.len() != 2 {
+                    return Err(anyhow!(
+                        "param {} is not the layer-{i} dense kernel",
+                        kernel.name
+                    ));
+                }
+                let (fan_in, fan_out) = (kernel.shape[0], kernel.shape[1]);
+                if fan_in != d_in {
+                    return Err(anyhow!("layer {i} fan_in {fan_in} != upstream width {d_in}"));
+                }
+                if bias.quantizable || bias.shape != vec![fan_out] {
+                    return Err(anyhow!("param {} is not the layer-{i} bias", bias.name));
+                }
+                layers.push(LayerPlan::Dense { di: fan_in, do_: fan_out });
+                d_in = fan_out;
+                hwc = None;
+            }
+            "conv" => {
+                let (ih, iw, ci) = hwc.ok_or_else(|| unsupported("conv-after-dense", i))?;
+                let [kh, kw, kci, co] = kernel.shape[..] else {
+                    return Err(anyhow!(
+                        "param {} is not the layer-{i} HWIO conv kernel",
+                        kernel.name
+                    ));
+                };
+                if kci != ci {
+                    return Err(anyhow!(
+                        "layer {i} kernel expects {kci} input channels, upstream has {ci}"
+                    ));
+                }
+                if bias.quantizable || bias.shape != vec![co] {
+                    return Err(anyhow!("param {} is not the layer-{i} bias", bias.name));
+                }
+                let stride = desc.stride;
+                if stride == 0 {
+                    return Err(anyhow!("layer {i} stride 0"));
+                }
+                let (oh, ow, pad_top, pad_left) = match desc.padding.as_str() {
+                    "same" => {
+                        let oh = ih.div_ceil(stride);
+                        let ow = iw.div_ceil(stride);
+                        let pad_h = ((oh - 1) * stride + kh).saturating_sub(ih);
+                        let pad_w = ((ow - 1) * stride + kw).saturating_sub(iw);
+                        (oh, ow, pad_h / 2, pad_w / 2)
+                    }
+                    "valid" => {
+                        if kh > ih || kw > iw {
+                            return Err(anyhow!(
+                                "layer {i}: {kh}x{kw} VALID kernel exceeds {ih}x{iw} input"
+                            ));
+                        }
+                        ((ih - kh) / stride + 1, (iw - kw) / stride + 1, 0, 0)
+                    }
+                    other => return Err(unsupported(format!("padding:{other}"), i)),
+                };
+                let pool = desc.pool;
+                if pool == 0 {
+                    return Err(anyhow!("layer {i} pool window 0"));
+                }
+                let pool_kind = match desc.pool_kind.as_str() {
+                    "max" => PoolKind::Max,
+                    "avg" => PoolKind::Avg,
+                    other => return Err(unsupported(format!("pool:{other}"), i)),
+                };
+                if oh % pool != 0 || ow % pool != 0 {
+                    return Err(anyhow!(
+                        "layer {i}: pool {pool} does not tile the {oh}x{ow} conv output"
+                    ));
+                }
+                let (ph, pw) = (oh / pool, ow / pool);
+                let residual_from = if desc.residual_from >= 0 {
+                    let j = desc.residual_from as usize;
+                    if j >= i {
+                        return Err(anyhow!("layer {i} residual_from {j} is not an earlier layer"));
+                    }
+                    // the skip tensor is layer j's OUTPUT, added to this
+                    // layer's conv result pre-ReLU: shapes must agree
+                    match &layers[j] {
+                        LayerPlan::Conv(gj) if (gj.ph, gj.pw, gj.co) == (oh, ow, co) => {}
+                        _ => {
+                            return Err(anyhow!(
+                                "layer {i} residual_from {j}: skip shape != {oh}x{ow}x{co}"
+                            ))
+                        }
+                    }
+                    Some(j)
+                } else {
+                    None
+                };
+                layers.push(LayerPlan::Conv(ConvGeom {
+                    ih,
+                    iw,
+                    ci,
+                    kh,
+                    kw,
+                    co,
+                    stride,
+                    pad_top,
+                    pad_left,
+                    oh,
+                    ow,
+                    pool,
+                    pool_kind,
+                    ph,
+                    pw,
+                    residual_from,
+                }));
+                hwc = Some((ph, pw, co));
+                d_in = ph * pw * co;
+            }
+            other => return Err(unsupported(other, i)),
+        }
+    }
+    if !matches!(layers[l - 1], LayerPlan::Dense { .. }) {
+        // logits come from a dense head everywhere in the model zoo; a
+        // trailing conv would need a global-pool lowering we don't have
+        return Err(unsupported("conv-logits", l - 1));
+    }
+    if d_in != man.classes {
+        return Err(anyhow!("final layer width {d_in} != {} classes", man.classes));
+    }
+    Ok(ModelPlan { layers })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lowers_the_synthetic_lenet() {
+        let man = Manifest::synthetic_lenet("pl", 16);
+        let plan = lower_manifest(&man).unwrap();
+        assert_eq!(plan.num_layers(), 5);
+        assert!(plan.has_conv());
+        let g0 = plan.conv(0).expect("layer 0 is conv");
+        assert_eq!((g0.ih, g0.iw, g0.ci), (12, 12, 1));
+        assert_eq!((g0.oh, g0.ow), (12, 12), "SAME conv preserves 12x12");
+        assert_eq!((g0.pad_top, g0.pad_left), (2, 2));
+        assert_eq!((g0.pool, g0.ph, g0.pw), (2, 6, 6));
+        assert_eq!(g0.pool_kind, PoolKind::Max);
+        let g1 = plan.conv(1).expect("layer 1 is conv");
+        assert_eq!((g1.oh, g1.ow), (2, 2), "5x5 VALID on 6x6");
+        assert_eq!((g1.pad_top, g1.pool), (0, 1));
+        assert_eq!(plan.gemm_dims()[1], (5 * 5 * 6, 16));
+        assert_eq!(plan.in_elems(2), 2 * 2 * 16, "flatten is a no-op");
+        assert!(plan.conv(2).is_none());
+        assert_eq!(plan.out_elems(4), 10);
+    }
+
+    #[test]
+    fn lowers_the_synthetic_residual_block() {
+        let man = Manifest::synthetic_residual("pr", 16);
+        let plan = lower_manifest(&man).unwrap();
+        assert_eq!(plan.num_layers(), 4);
+        let g2 = plan.conv(2).expect("layer 2 is conv");
+        assert_eq!(g2.residual_from, Some(0), "skip from the stem output");
+        assert_eq!(g2.pool_kind, PoolKind::Avg);
+        assert_eq!((g2.pool, g2.ph, g2.pw), (2, 4, 4));
+        assert_eq!(plan.in_elems(3), 4 * 4 * 8);
+    }
+
+    #[test]
+    fn rejects_unsupported_ops_with_typed_error() {
+        let mut man = Manifest::synthetic_lenet("px", 16);
+        man.layers[1].kind = "downsample".into();
+        let err = lower_manifest(&man).unwrap_err();
+        let op = err
+            .downcast_ref::<UnsupportedOp>()
+            .expect("typed UnsupportedOp");
+        assert_eq!(op.op, "downsample");
+        assert_eq!(op.layer, 1);
+
+        let mut man2 = Manifest::synthetic_lenet("py", 16);
+        man2.layers[0].padding = "reflect".into();
+        let err2 = lower_manifest(&man2).unwrap_err();
+        assert!(err2.downcast_ref::<UnsupportedOp>().is_some());
+    }
+
+    #[test]
+    fn rejects_geometry_inconsistencies() {
+        // pool window that does not tile the conv output
+        let mut man = Manifest::synthetic_lenet("pz", 16);
+        man.layers[0].pool = 5;
+        assert!(lower_manifest(&man).is_err());
+        // residual pointing at a later layer
+        let mut man2 = Manifest::synthetic_residual("pw", 16);
+        man2.layers[1].residual_from = 2;
+        assert!(lower_manifest(&man2).is_err());
+    }
+}

@@ -24,7 +24,7 @@ use anyhow::{anyhow, Result};
 
 use crate::coordinator::ServableModel;
 use crate::quant::QuantPool;
-use crate::runtime::native::{mlp_dims, sparse_crossover, InferScratch, ModelSnapshot};
+use crate::runtime::native::{lower_manifest, sparse_crossover, InferScratch, ModelSnapshot};
 use crate::runtime::Manifest;
 
 /// A frozen, immutable served model (module docs). Built once with
@@ -39,10 +39,11 @@ pub struct ServedModel {
 }
 
 impl ServedModel {
-    /// Validate `man` (same [`mlp_dims`] contract as the native backend),
-    /// quantize every kernel under its qparams row and pack each layer
-    /// once, choosing f32 panel vs integer codes vs CSR from the frozen
-    /// formats, the measured density and the active crossover (the
+    /// Validate and lower `man` (same [`lower_manifest`] contract as the
+    /// native backend — dense AND conv/pool/residual layers), quantize
+    /// every kernel under its qparams row and pack each layer once,
+    /// choosing f32 panel vs integer codes vs CSR from the frozen formats,
+    /// the measured density and the active crossover (the
     /// `ModelSnapshot::build` dispatch order). `params` is the full
     /// (kernel, bias) interleaving; `qparams` the `[2L, 5]` runtime tensor
     /// of the finished run.
@@ -52,8 +53,8 @@ impl ServedModel {
         params: &[Vec<f32>],
         qparams: &[f32],
     ) -> Result<ServedModel> {
-        let dims = mlp_dims(man)?;
-        let l = dims.len();
+        let plan = lower_manifest(man)?;
+        let l = plan.num_layers();
         if params.len() != 2 * l {
             return Err(anyhow!(
                 "freeze {name}: {} params for {l} layers (want kernel+bias each)",
@@ -73,7 +74,7 @@ impl ServedModel {
             }
         }
         let kernels: Vec<&[f32]> = (0..l).map(|i| params[2 * i].as_slice()).collect();
-        let snap = ModelSnapshot::build(&dims, &kernels, qparams, sparse_crossover())?;
+        let snap = ModelSnapshot::build(&plan, &kernels, qparams, sparse_crossover())?;
         let biases: Vec<Vec<f32>> = (0..l).map(|i| params[2 * i + 1].clone()).collect();
         Ok(ServedModel {
             name: name.to_string(),
@@ -94,7 +95,8 @@ impl ServedModel {
         &self.name
     }
 
-    /// Input width one sample occupies (layer-0 fan-in).
+    /// Input width one sample occupies (layer-0 per-sample input size;
+    /// `ih·iw·ci` when the first layer is conv).
     pub fn d_in(&self) -> usize {
         self.snap.d_in()
     }

@@ -23,6 +23,20 @@ pub fn native_mlp_model() -> LoadedModel {
         .expect("native backend compiles the synthetic MLP")
 }
 
+/// The fast conv golden config: `Manifest::synthetic_lenet` at batch 16
+/// (`rust/tests/golden/lenet_native_ce.json` and the `lenet-golden` mode of
+/// `python/tools/native_golden.py` restate it — change all three or none).
+pub fn native_lenet_manifest() -> Manifest {
+    Manifest::synthetic_lenet("lenet-native", 16)
+}
+
+/// The lenet manifest compiled on the native backend.
+pub fn native_lenet_model() -> LoadedModel {
+    Engine::native()
+        .compile_manifest(native_lenet_manifest())
+        .expect("native backend compiles the synthetic LeNet")
+}
+
 /// Uniform qparams tensor: every weight/activation row at `fmt`.
 pub fn qparams_uniform(l: usize, fmt: FixedPointFormat, enable: f32) -> Vec<f32> {
     let row = fmt.qparams_row(enable);

@@ -1,0 +1,317 @@
+//! Property tests of the conv lowering: the im2col + packed-GEMM pipeline
+//! against a naive direct-convolution oracle written in-test (bit parity —
+//! both sides fold the `(ky, kx, ci)` taps in the same ascending order),
+//! fused-epilogue parity on conv-shaped GEMMs, the integer conv dispatch
+//! against the scalar oracle, and pool-size bit-determinism of the
+//! snapshot's conv inference.
+//!
+//! CI runs this suite twice: once as-is and once with `ADAPT_NO_SIMD=1`,
+//! like `int_kernels.rs`.
+
+use adapt::fixedpoint::{quantize_nr_slice, FixedPointFormat};
+use adapt::quant::QuantPool;
+use adapt::runtime::native::conv;
+use adapt::runtime::native::gemm::{self, IntSimd};
+use adapt::runtime::native::{fake_quant, lower_manifest, ConvGeom, InferScratch, ModelSnapshot, PoolKind, QRow};
+use adapt::runtime::Manifest;
+use adapt::util::rng::Rng;
+
+fn randv(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Rng::seed_from(seed);
+    (0..n).map(|_| r.normal() as f32).collect()
+}
+
+fn gridv(n: usize, seed: u64, fmt: FixedPointFormat) -> Vec<f32> {
+    quantize_nr_slice(&randv(n, seed), fmt)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Resolve a [`ConvGeom`] the way the lowerer does (square kernel).
+fn geom(ih: usize, iw: usize, ci: usize, k: usize, co: usize, stride: usize, same: bool, pool: usize) -> ConvGeom {
+    let (oh, ow, pad_top, pad_left) = if same {
+        let oh = ih.div_ceil(stride);
+        let ow = iw.div_ceil(stride);
+        let ph = ((oh - 1) * stride + k).saturating_sub(ih);
+        let pw = ((ow - 1) * stride + k).saturating_sub(iw);
+        (oh, ow, ph / 2, pw / 2)
+    } else {
+        ((ih - k) / stride + 1, (iw - k) / stride + 1, 0, 0)
+    };
+    ConvGeom {
+        ih,
+        iw,
+        ci,
+        kh: k,
+        kw: k,
+        co,
+        stride,
+        pad_top,
+        pad_left,
+        oh,
+        ow,
+        pool,
+        pool_kind: PoolKind::Max,
+        ph: oh / pool,
+        pw: ow / pool,
+        residual_from: None,
+    }
+}
+
+/// Naive direct convolution + bias + optional ReLU, accumulating each output
+/// element's taps in ascending `(ky, kx, ci)` order — exactly the fold the
+/// im2col GEMM performs, so agreement must be bit-exact, not approximate.
+/// Out-of-bounds (padding) taps contribute literal `0.0` terms.
+fn naive_conv(g: &ConvGeom, x: &[f32], w: &[f32], bias: &[f32], relu: bool, b: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; g.conv_rows(b) * g.co];
+    let mut row = 0usize;
+    for s in 0..b {
+        let xs = &x[s * g.in_elems()..(s + 1) * g.in_elems()];
+        for oy in 0..g.oh {
+            for ox in 0..g.ow {
+                for n in 0..g.co {
+                    let mut acc = 0.0f32;
+                    for ky in 0..g.kh {
+                        let iy = (oy * g.stride + ky) as isize - g.pad_top as isize;
+                        for kx in 0..g.kw {
+                            let ix = (ox * g.stride + kx) as isize - g.pad_left as isize;
+                            for c in 0..g.ci {
+                                let tap = if iy >= 0
+                                    && (iy as usize) < g.ih
+                                    && ix >= 0
+                                    && (ix as usize) < g.iw
+                                {
+                                    xs[((iy as usize) * g.iw + ix as usize) * g.ci + c]
+                                } else {
+                                    0.0
+                                };
+                                let wv = w[((ky * g.kw + kx) * g.ci + c) * g.co + n];
+                                acc += tap * wv;
+                            }
+                        }
+                    }
+                    let mut v = acc + bias[n];
+                    if relu {
+                        v = v.max(0.0);
+                    }
+                    out[row * g.co + n] = v;
+                }
+                row += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Shape sweep: stride, SAME/VALID, channel and kernel mixes, including the
+/// two real lenet conv layers.
+fn shape_sweep() -> Vec<ConvGeom> {
+    vec![
+        geom(5, 5, 1, 3, 4, 1, true, 1),    // minimal SAME
+        geom(8, 7, 2, 5, 3, 1, false, 1),   // non-square input, VALID
+        geom(9, 9, 4, 3, 6, 3, true, 1),    // stride 3
+        geom(6, 6, 3, 3, 8, 1, true, 2),    // multi-channel + pool window
+        geom(12, 12, 1, 5, 6, 1, true, 2),  // lenet conv0
+        geom(6, 6, 6, 5, 16, 1, false, 1),  // lenet conv1
+    ]
+}
+
+/// Tentpole invariant: im2col onto the packed f32 GEMM is bit-identical to
+/// the naive direct conv for every shape and every `QuantPool` size — the
+/// parallel fan-out partitions output rows only, it never splits a fold.
+#[test]
+fn im2col_gemm_bit_matches_naive_direct_conv_across_shapes_and_pools() {
+    for (si, g) in shape_sweep().iter().enumerate() {
+        let b = 3usize;
+        let seed = 4000 + 10 * si as u64;
+        let x = randv(b * g.in_elems(), seed);
+        let w = randv(g.gemm_k() * g.co, seed + 1);
+        let bias = randv(g.co, seed + 2);
+        for relu in [false, true] {
+            let want = naive_conv(g, &x, &w, &bias, relu, b);
+            let mrows = g.conv_rows(b);
+            let mut cols = vec![0.0f32; mrows * g.gemm_k()];
+            conv::im2col(g, &x, b, &mut cols);
+            let (mut ap, mut bp) = (Vec::new(), Vec::new());
+            gemm::pack_a_rows(&cols, mrows, g.gemm_k(), &mut ap);
+            gemm::pack_b_cols(&w, g.gemm_k(), g.co, &mut bp);
+            for threads in [1usize, 2, 4] {
+                let pool = QuantPool::new(threads);
+                let mut got = vec![0.0f32; mrows * g.co];
+                gemm::gemm_packed_into(&pool, mrows, g.co, g.gemm_k(), &ap, &bp, Some(&bias), relu, &mut got);
+                assert_eq!(
+                    bits(&got),
+                    bits(&want),
+                    "shape {si} ({}x{}x{} k{} s{} pad{}) relu={relu} t={threads}",
+                    g.ih, g.iw, g.ci, g.kh, g.stride, g.pad_top
+                );
+            }
+        }
+    }
+}
+
+/// The inference path runs conv GEMMs through the fused quant epilogue with
+/// a passthrough row, then fake-quants after the pool. For pool-free layers
+/// the two orders must coincide: fused epilogue with the real row ==
+/// packed GEMM + a separate `fake_quant` sweep, bit for bit.
+#[test]
+fn fused_epilogue_equals_separate_fake_quant_on_conv_shapes() {
+    let fmt = FixedPointFormat::new(8, 4);
+    let row = QRow::parse(&fmt.qparams_row(1.0), 0).unwrap();
+    let pool = QuantPool::new(2);
+    for (si, g) in shape_sweep().iter().enumerate() {
+        let b = 2usize;
+        let seed = 6000 + 10 * si as u64;
+        let x = randv(b * g.in_elems(), seed);
+        let w = randv(g.gemm_k() * g.co, seed + 1);
+        let bias = randv(g.co, seed + 2);
+        let mrows = g.conv_rows(b);
+        let mut cols = vec![0.0f32; mrows * g.gemm_k()];
+        conv::im2col(g, &x, b, &mut cols);
+        let (mut ap, mut bp) = (Vec::new(), Vec::new());
+        gemm::pack_a_rows(&cols, mrows, g.gemm_k(), &mut ap);
+        gemm::pack_b_cols(&w, g.gemm_k(), g.co, &mut bp);
+
+        let mut z = vec![0.0f32; mrows * g.co];
+        gemm::gemm_packed_into(&pool, mrows, g.co, g.gemm_k(), &ap, &bp, Some(&bias), true, &mut z);
+        let mut q_sep = vec![0.0f32; mrows * g.co];
+        let zeros_sep = fake_quant(&z, &row, &mut q_sep);
+
+        let (mut z_f, mut q_f) = (vec![0.0f32; mrows * g.co], vec![0.0f32; mrows * g.co]);
+        let (zeros_f, _) = gemm::gemm_quant_into(
+            &pool, mrows, g.co, g.gemm_k(), &ap, &bp, &bias, true, &row, &mut z_f, &mut q_f, None,
+        );
+        assert_eq!(bits(&z_f), bits(&z), "pre-quant z diverged: shape {si}");
+        assert_eq!(bits(&q_f), bits(&q_sep), "fused != separate quant: shape {si}");
+        assert_eq!(zeros_f, zeros_sep, "zero counts diverged: shape {si}");
+    }
+}
+
+/// Integer conv dispatch: im2col columns of on-grid activations (padding
+/// taps are exact 0.0 == code 0) through the i8/i16 drivers must reproduce
+/// the single-threaded scalar oracle bit for bit on every SIMD backend and
+/// pool size.
+fn int_conv_parity_case<T: gemm::IntKernel>(fmt_a: FixedPointFormat, fmt_w: FixedPointFormat) {
+    let fmt_out = FixedPointFormat::new(12, 8);
+    let row = QRow::parse(&fmt_out.qparams_row(1.0), 0).unwrap();
+    let inv = 1.0 / (fmt_a.scale() * fmt_w.scale());
+    let p1 = QuantPool::new(1);
+    for (si, g) in shape_sweep().iter().enumerate() {
+        let b = 2usize;
+        let seed = 7000 + 10 * si as u64;
+        let x = gridv(b * g.in_elems(), seed, fmt_a);
+        let w = gridv(g.gemm_k() * g.co, seed + 1, fmt_w);
+        let bias = gridv(g.co, seed + 2, fmt_out);
+        let mrows = g.conv_rows(b);
+        let mut cols = vec![0.0f32; mrows * g.gemm_k()];
+        conv::im2col(g, &x, b, &mut cols);
+        let (mut ap, mut bp) = (Vec::new(), Vec::new());
+        gemm::pack_a_rows_q::<T>(&cols, fmt_a.scale(), mrows, g.gemm_k(), &mut ap);
+        gemm::pack_b_cols_q::<T>(&w, fmt_w.scale(), g.gemm_k(), g.co, &mut bp);
+        let (mut z_ref, mut q_ref) = (vec![0.0f32; mrows * g.co], vec![0.0f32; mrows * g.co]);
+        let (zeros_ref, mx_ref) = gemm::gemm_int_quant_into::<T>(
+            &p1, IntSimd::Scalar, mrows, g.co, g.gemm_k(), &ap, &bp, inv, &bias, true, &row,
+            &mut z_ref, &mut q_ref,
+        );
+        for threads in [1usize, 2, 4] {
+            let pool = QuantPool::new(threads);
+            for &simd in &IntSimd::supported() {
+                let (mut z, mut q) = (vec![0.0f32; mrows * g.co], vec![0.0f32; mrows * g.co]);
+                let (zeros, mx) = gemm::gemm_int_quant_into::<T>(
+                    &pool, simd, mrows, g.co, g.gemm_k(), &ap, &bp, inv, &bias, true, &row,
+                    &mut z, &mut q,
+                );
+                let tag = format!("shape {si} t={threads} {simd:?}");
+                assert_eq!(bits(&z), bits(&z_ref), "z diverged: {tag}");
+                assert_eq!(bits(&q), bits(&q_ref), "q diverged: {tag}");
+                assert_eq!(zeros, zeros_ref, "zero count diverged: {tag}");
+                assert_eq!(mx.to_bits(), mx_ref.to_bits(), "absmax diverged: {tag}");
+            }
+        }
+    }
+}
+
+#[test]
+fn i8_conv_dispatch_bit_matches_the_scalar_oracle() {
+    int_conv_parity_case::<i8>(FixedPointFormat::new(8, 4), FixedPointFormat::new(8, 5));
+}
+
+#[test]
+fn i16_conv_dispatch_bit_matches_the_scalar_oracle() {
+    int_conv_parity_case::<i16>(FixedPointFormat::new(14, 9), FixedPointFormat::new(16, 10));
+}
+
+/// Pooling layers compose with the GEMM without breaking determinism: the
+/// full conv → ReLU → maxpool chain is identical across `QuantPool` sizes,
+/// and the pooled output agrees with a per-window scan of the naive conv.
+#[test]
+fn conv_relu_maxpool_chain_matches_naive_reference() {
+    for (si, g) in shape_sweep().iter().enumerate().filter(|(_, g)| g.pool > 1) {
+        let b = 3usize;
+        let seed = 8000 + 10 * si as u64;
+        let x = randv(b * g.in_elems(), seed);
+        let w = randv(g.gemm_k() * g.co, seed + 1);
+        let bias = randv(g.co, seed + 2);
+        let pre = naive_conv(g, &x, &w, &bias, true, b);
+        // naive per-window first-win max
+        let mut want = vec![0.0f32; b * g.out_elems()];
+        conv::maxpool_forward(g, &pre, b, &mut want);
+
+        let mrows = g.conv_rows(b);
+        let mut cols = vec![0.0f32; mrows * g.gemm_k()];
+        conv::im2col(g, &x, b, &mut cols);
+        let (mut ap, mut bp) = (Vec::new(), Vec::new());
+        gemm::pack_a_rows(&cols, mrows, g.gemm_k(), &mut ap);
+        gemm::pack_b_cols(&w, g.gemm_k(), g.co, &mut bp);
+        let mut reference: Option<Vec<u32>> = None;
+        for threads in [1usize, 2, 4] {
+            let pool = QuantPool::new(threads);
+            let mut z = vec![0.0f32; mrows * g.co];
+            gemm::gemm_packed_into(&pool, mrows, g.co, g.gemm_k(), &ap, &bp, Some(&bias), true, &mut z);
+            let mut pooled = vec![0.0f32; b * g.out_elems()];
+            conv::maxpool_forward(g, &z, b, &mut pooled);
+            assert_eq!(bits(&pooled), bits(&want), "shape {si} t={threads}");
+            let got = bits(&pooled);
+            match &reference {
+                Some(r) => assert_eq!(&got, r, "pool size {threads} diverged: shape {si}"),
+                None => reference = Some(got),
+            }
+        }
+    }
+}
+
+/// Snapshot-level conv inference: the lenet snapshot int-dispatches its
+/// deeper layers (crossover 0 ⇒ CSR off) and stays bit-identical across
+/// `QuantPool` sizes {1, 2, 4}.
+#[test]
+fn lenet_snapshot_conv_inference_is_bit_deterministic_across_pool_sizes() {
+    let man = Manifest::synthetic_lenet("conv-pools", 16);
+    let plan = lower_manifest(&man).unwrap();
+    let l = plan.num_layers();
+    let params = adapt::init::init_params(&man, adapt::init::Initializer::Tnvs, 1.0, 53);
+    let kernels: Vec<&[f32]> = (0..l).map(|i| params[2 * i].as_slice()).collect();
+    let biases: Vec<&[f32]> = (0..l).map(|i| params[2 * i + 1].as_slice()).collect();
+    let qp: Vec<f32> = (0..2 * l)
+        .flat_map(|_| FixedPointFormat::new(8, 4).qparams_row(1.0))
+        .collect();
+    let snap = ModelSnapshot::build(&plan, &kernels, &qp, 0.0).unwrap();
+    assert!(!snap.layer_is_int(0), "layer 0 eats the raw f32 batch");
+    assert!(snap.layer_is_int(1), "conv1's quantized columns admit int packing");
+    let b = 4usize;
+    let x: Vec<f32> = (0..b * 144).map(|i| (i as f32 * 0.17).sin()).collect();
+    let mut reference: Option<Vec<u32>> = None;
+    for threads in [1usize, 2, 4] {
+        let pool = QuantPool::new(threads);
+        let mut s = InferScratch::default();
+        let mut out = Vec::new();
+        snap.infer_into(&pool, &biases, &qp, &x, b, &mut s, &mut out).unwrap();
+        assert_eq!(out.len(), b * 10);
+        let got = bits(&out);
+        match &reference {
+            Some(r) => assert_eq!(&got, r, "pool size {threads} diverged"),
+            None => reference = Some(got),
+        }
+    }
+}

@@ -11,7 +11,7 @@
 use adapt::fixedpoint::{quantize_nr_slice, quantize_nr_ste, FixedPointFormat};
 use adapt::quant::QuantPool;
 use adapt::runtime::native::gemm::{self, IntSimd};
-use adapt::runtime::native::{mlp_dims, InferScratch, ModelSnapshot, QRow};
+use adapt::runtime::native::{lower_manifest, InferScratch, ModelSnapshot, QRow};
 use adapt::runtime::{Engine, Manifest};
 use adapt::util::rng::Rng;
 
@@ -144,8 +144,8 @@ fn int_epilogue_matches_f32_path_and_ste_quantizer_in_the_exact_regime() {
 #[test]
 fn int_inference_is_bit_deterministic_across_pool_sizes() {
     let man = Manifest::synthetic_mlp("int-pools", [2, 2, 1], 3, &[6, 5], 4);
-    let dims = mlp_dims(&man).unwrap();
-    let l = dims.len();
+    let plan = lower_manifest(&man).unwrap();
+    let l = plan.num_layers();
     let params = adapt::init::init_params(&man, adapt::init::Initializer::Tnvs, 1.0, 47);
     let kernels: Vec<&[f32]> = (0..l).map(|i| params[2 * i].as_slice()).collect();
     let biases: Vec<&[f32]> = (0..l).map(|i| params[2 * i + 1].as_slice()).collect();
@@ -153,7 +153,7 @@ fn int_inference_is_bit_deterministic_across_pool_sizes() {
         .flat_map(|_| FixedPointFormat::new(8, 4).qparams_row(1.0))
         .collect();
     // crossover 0: CSR off, the non-input layers must all dispatch integer
-    let snap = ModelSnapshot::build(&dims, &kernels, &qp, 0.0).unwrap();
+    let snap = ModelSnapshot::build(&plan, &kernels, &qp, 0.0).unwrap();
     assert!(!snap.layer_is_int(0), "layer 0 input is the raw f32 batch");
     assert!(snap.layer_is_int(1) && snap.layer_is_int(2), "hidden/output layers pack i8");
     let b = 5usize;
@@ -178,8 +178,8 @@ fn int_inference_is_bit_deterministic_across_pool_sizes() {
 #[test]
 fn stale_activation_row_falls_back_to_the_exact_dense_path() {
     let man = Manifest::synthetic_mlp("int-stale", [2, 2, 1], 3, &[5], 4);
-    let dims = mlp_dims(&man).unwrap();
-    let l = dims.len();
+    let plan = lower_manifest(&man).unwrap();
+    let l = plan.num_layers();
     let params = adapt::init::init_params(&man, adapt::init::Initializer::Tnvs, 1.0, 43);
     let kernels: Vec<&[f32]> = (0..l).map(|i| params[2 * i].as_slice()).collect();
     let biases: Vec<&[f32]> = (0..l).map(|i| params[2 * i + 1].as_slice()).collect();
@@ -200,9 +200,9 @@ fn stale_activation_row_falls_back_to_the_exact_dense_path() {
     let qp_call = with_act(FixedPointFormat::new(10, 4).qparams_row(1.0));
 
     let pool = QuantPool::new(2);
-    let int_snap = ModelSnapshot::build(&dims, &kernels, &qp_int, 0.0).unwrap();
+    let int_snap = ModelSnapshot::build(&plan, &kernels, &qp_int, 0.0).unwrap();
     assert!(int_snap.layer_is_int(1), "layer 1 should pack i8");
-    let dense_snap = ModelSnapshot::build(&dims, &kernels, &qp_dense, 0.0).unwrap();
+    let dense_snap = ModelSnapshot::build(&plan, &kernels, &qp_dense, 0.0).unwrap();
     assert!(!dense_snap.layer_is_int(1), "disabled act rows must stay dense");
 
     let b = 3usize;

@@ -7,7 +7,7 @@ use adapt::coordinator::{train_via_model, Policy, TrainConfig};
 use adapt::fixedpoint::format::round_half_even_fast;
 use adapt::fixedpoint::{quantize_bin_scalar, FixedPointFormat, Histogram};
 use adapt::quant::{quantized_zero_count, QuantHyper};
-use adapt::runtime::native::{fake_quant, fake_quant_ste, QRow};
+use adapt::runtime::native::{fake_quant, fake_quant_ste, QRow, UnsupportedOp};
 use adapt::runtime::{Engine, LoadedModel, Manifest};
 use adapt::util::rng::Rng;
 
@@ -88,17 +88,13 @@ fn parse_row(row: &[f32; 5]) -> Option<(QRow, bool)> {
 // golden: deterministic seeds + committed CE values
 // ---------------------------------------------------------------------------
 
-fn golden_path() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden/mlp_native_ce.json")
+fn golden_path(file: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden").join(file)
 }
 
-fn golden_model() -> LoadedModel {
-    common::native_mlp_model()
-}
-
-fn golden_cfg() -> TrainConfig {
+fn golden_cfg(artifact: &str) -> TrainConfig {
     let mut cfg = TrainConfig::fast(
-        "mlp-native",
+        artifact,
         Policy::Adapt(QuantHyper::default().scaled(0.15)),
     );
     cfg.epochs = 1;
@@ -118,8 +114,21 @@ fn golden_cfg() -> TrainConfig {
 /// `python3 python/tools/native_golden.py golden`.
 #[test]
 fn determinism_golden() {
-    let model = golden_model();
-    let cfg = golden_cfg();
+    run_golden(common::native_mlp_model(), golden_cfg("mlp-native"), "mlp_native_ce.json");
+}
+
+/// The conv-stack twin of [`determinism_golden`]: `synthetic_lenet` under
+/// the identical config pins the im2col + packed-GEMM + first-win-maxpool +
+/// clipped-STE trajectory against `rust/tests/golden/lenet_native_ce.json`,
+/// whose committed values come from the INDEPENDENT numpy mirror
+/// (`python3 python/tools/native_golden.py lenet-golden`) — so this is a
+/// cross-implementation parity check, not a self-consistency check.
+#[test]
+fn lenet_determinism_golden() {
+    run_golden(common::native_lenet_model(), golden_cfg("lenet-native"), "lenet_native_ce.json");
+}
+
+fn run_golden(model: LoadedModel, cfg: TrainConfig, golden_file: &str) {
     let a = train_via_model(&model, &cfg).expect("run a");
     let b = train_via_model(&model, &cfg).expect("run b");
 
@@ -146,7 +155,7 @@ fn determinism_golden() {
     assert_eq!(sw_a, sw_b, "switch sequences must be identical");
 
     // committed goldens
-    let path = golden_path();
+    let path = golden_path(golden_file);
     if std::env::var_os("ADAPT_UPDATE_GOLDEN").is_some() {
         let vals: Vec<String> = ces_a[..4].iter().map(|c| format!("{c:.6}")).collect();
         let text = std::fs::read_to_string(&path).expect("golden file");
@@ -223,12 +232,24 @@ fn cpu_engine_falls_back_to_native_without_xla_flags_leak() {
     }
 }
 
-/// The native backend refuses manifests it cannot faithfully execute.
+/// Conv manifests now compile onto the interpreter, but manifests it cannot
+/// faithfully execute still refuse with a typed [`UnsupportedOp`] — here a
+/// conv layer downstream of a dense layer, whose flatten discarded the
+/// spatial shape the conv would need.
 #[test]
-fn native_backend_rejects_conv_manifests() {
+fn native_backend_compiles_conv_and_rejects_conv_after_dense() {
+    let model = Engine::native()
+        .compile_manifest(common::native_lenet_manifest())
+        .expect("conv manifests compile since the conv lowering");
+    assert_eq!(model.manifest.num_layers, 5);
+
     let mut man = Manifest::synthetic_mlp("not-mlp", [4, 4, 1], 4, &[6], 8);
     man.layers[1].kind = "conv".into();
     let err = Engine::native().compile_manifest(man).unwrap_err();
-    let msg = format!("{err:#}");
-    assert!(msg.contains("dense"), "unhelpful error: {msg}");
+    let op = err
+        .chain()
+        .find_map(|c| c.downcast_ref::<UnsupportedOp>())
+        .unwrap_or_else(|| panic!("typed UnsupportedOp, got: {err:#}"));
+    assert_eq!(op.op, "conv-after-dense");
+    assert_eq!(op.layer, 1);
 }

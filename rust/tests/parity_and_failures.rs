@@ -136,6 +136,72 @@ fn single_class_dataset_is_stable() {
     assert!(out.record.final_eval().unwrap() > 0.99);
 }
 
+/// Manifests the conv lowering cannot execute must reject with a typed
+/// [`UnsupportedOp`] through the public engine API — never a panic from a
+/// latent MLP-shape assumption (the `mlp_dims`/`ModelSnapshot` audit
+/// satellite). Covers unknown kinds, exotic padding/pooling, conv-after-
+/// dense, batchnorm state, and the serving freeze path.
+#[test]
+fn native_engine_rejects_unsupported_ops_with_typed_errors() {
+    use adapt::runtime::native::UnsupportedOp;
+    use adapt::runtime::Manifest;
+
+    fn expect_unsupported(man: Manifest, want_op: &str, want_layer: usize) {
+        let err = Engine::native()
+            .compile_manifest(man)
+            .expect_err("lowering must refuse");
+        let op = err
+            .chain()
+            .find_map(|c| c.downcast_ref::<UnsupportedOp>())
+            .unwrap_or_else(|| panic!("untyped rejection for {want_op:?}: {err:#}"));
+        assert_eq!(op.op, want_op);
+        assert_eq!(op.layer, want_layer);
+    }
+
+    let mut m = Manifest::synthetic_lenet("uo-kind", 8);
+    m.layers[1].kind = "downsample".into();
+    expect_unsupported(m, "downsample", 1);
+
+    let mut m = Manifest::synthetic_lenet("uo-pad", 8);
+    m.layers[0].padding = "reflect".into();
+    expect_unsupported(m, "padding:reflect", 0);
+
+    let mut m = Manifest::synthetic_lenet("uo-pool", 8);
+    m.layers[0].pool_kind = "l2".into();
+    expect_unsupported(m, "pool:l2", 0);
+
+    let mut m = Manifest::synthetic_mlp("uo-order", [4, 4, 1], 4, &[6], 8);
+    m.layers[1].kind = "conv".into();
+    expect_unsupported(m, "conv-after-dense", 1);
+
+    let mut m = Manifest::synthetic_lenet("uo-bn", 8);
+    m.bn_state.push(adapt::runtime::IoSpec {
+        name: "bn0.mean".into(),
+        shape: vec![6],
+        dtype: adapt::runtime::Dtype::F32,
+    });
+    expect_unsupported(m, "batchnorm", 0);
+
+    // the serving freeze shares the lowerer: same typed rejection, no panic
+    let mut m = Manifest::synthetic_lenet("uo-freeze", 8);
+    m.layers[0].kind = "downsample".into();
+    let params = init::init_params(&m, init::Initializer::Tnvs, 1.0, 3);
+    let qp: Vec<f32> = (0..2 * m.num_layers)
+        .flat_map(|_| FixedPointFormat::initial().qparams_row(1.0))
+        .collect();
+    let err = adapt::serve::ServedModel::freeze("uo-freeze", &m, &params, &qp)
+        .expect_err("freeze must refuse");
+    assert!(
+        err.chain().any(|c| c.downcast_ref::<UnsupportedOp>().is_some()),
+        "freeze rejection is untyped: {err:#}"
+    );
+
+    // geometry inconsistencies are plain (non-op) errors, still no panic
+    let mut m = Manifest::synthetic_lenet("uo-tile", 8);
+    m.layers[0].pool = 5;
+    assert!(Engine::native().compile_manifest(m).is_err());
+}
+
 /// Evaluation on a held-out split must generalize (same templates, unseen
 /// samples) — the regression test for the train/eval split contract.
 #[test]

@@ -21,7 +21,10 @@ use adapt::quant::QuantPool;
 use adapt::runtime::Manifest;
 use adapt::serve::{ModelRegistry, ServeConfig, ServeError, ServeServer, ServedModel};
 
-use common::{native_mlp_manifest, native_mlp_model, qparams_uniform};
+use common::{
+    native_lenet_manifest, native_lenet_model, native_mlp_manifest, native_mlp_model,
+    qparams_uniform,
+};
 
 /// Per-sample input width of the golden MLP config (8×8×1).
 const D: usize = 64;
@@ -132,6 +135,106 @@ fn served_bits_match_direct_infer_across_coalescing_and_workers() {
             assert!(stats.occupancy > 0.0);
         }
     }
+}
+
+/// Conv serving parity: a frozen `synthetic_lenet` answered through the
+/// `BatchQueue`'s coalescing — single-sample flood and ragged requests, 1
+/// and 3 workers — is bit-identical to direct `NativeModel::infer`, with
+/// the stem conv layer CSR-dispatched (freeze lowers conv layers onto the
+/// same panel geometry as the interpreter). A width-boundary precision
+/// switch on the live conv model must then equal a cache-cold model at the
+/// new format (warm-vs-cold snapshot equality for conv panels).
+#[test]
+fn served_conv_bits_match_direct_infer_with_csr_and_width_switch() {
+    let man = native_lenet_manifest();
+    let model = native_lenet_model();
+    let d = 12 * 12; // lenet per-sample input width (12×12×1)
+    let l = man.num_layers;
+    let batch = man.batch;
+    let c = man.classes;
+    // sparsify the stem conv kernel to ~10% density → CSR-dispatched conv
+    let params = test_params(&man, 17);
+    let qp = qparams_uniform(l, FixedPointFormat::initial(), 1.0);
+    let bn: Vec<Vec<f32>> = Vec::new();
+    let total = 2 * batch;
+    let x: Vec<f32> = (0..total * d).map(|i| (i as f32 * 0.013).sin()).collect();
+
+    let mut want = Vec::new();
+    for k in 0..2 {
+        let logits = model
+            .infer(&params, &bn, &x[k * batch * d..(k + 1) * batch * d], &qp)
+            .expect("direct conv infer");
+        want.extend(logits);
+    }
+    let want_bits = bits(&want);
+
+    let served = ServedModel::freeze("lenet-native", &man, &params, &qp).expect("freeze conv");
+    if std::env::var_os("ADAPT_SPARSE_CROSSOVER").is_none() {
+        assert!(
+            served.snapshot().layer_is_sparse(0),
+            "stem conv must exercise the CSR path (density {:?})",
+            served.snapshot().layer_density()
+        );
+    }
+    let registry = Arc::new(ModelRegistry::new());
+    registry.publish(served);
+
+    let patterns: Vec<(&str, Vec<usize>, usize)> = vec![
+        ("single-sample", vec![1; total], batch),
+        ("ragged", vec![3, 5, 7, 1, 12, 4], 8),
+    ];
+    for workers in [1usize, 3] {
+        for (name, sizes, max_batch) in &patterns {
+            assert_eq!(sizes.iter().sum::<usize>(), total, "pattern {name}");
+            let server = ServeServer::start(
+                Arc::clone(&registry),
+                Arc::new(QuantPool::new(2)),
+                ServeConfig {
+                    max_batch: *max_batch,
+                    max_wait: Duration::from_millis(2),
+                    queue_capacity: 1024,
+                    workers,
+                },
+            );
+            let handle = server.handle();
+            let mut tickets = Vec::new();
+            let mut off = 0usize;
+            for &n in sizes {
+                let xs = x[off * d..(off + n) * d].to_vec();
+                let t = handle.submit("lenet-native", xs, n).expect("submit");
+                tickets.push((off, n, t));
+                off += n;
+            }
+            let mut got_bits = vec![0u32; total * c];
+            for (off, n, t) in tickets {
+                let resp = t.wait().expect("response");
+                assert_eq!(resp.logits.len(), n * c);
+                for (i, v) in resp.logits.iter().enumerate() {
+                    got_bits[off * c + i] = v.to_bits();
+                }
+            }
+            assert_eq!(
+                got_bits, want_bits,
+                "served conv bits diverge: pattern {name}, {workers} workers"
+            );
+            server.shutdown();
+        }
+    }
+
+    // width-boundary switch on the live conv model: warm packs must answer
+    // exactly like a model that never saw the wide format
+    let qp_wide = qparams_uniform(l, FixedPointFormat::new(12, 8), 1.0);
+    let qp_narrow = qparams_uniform(l, FixedPointFormat::new(8, 4), 1.0);
+    let xb = &x[..batch * d];
+    model.infer(&params, &bn, xb, &qp_wide).expect("warm wide");
+    let switched = model.infer(&params, &bn, xb, &qp_narrow).expect("switched");
+    let cold = native_lenet_model().infer(&params, &bn, xb, &qp_narrow).expect("cold");
+    assert_eq!(bits(&switched), bits(&cold), "stale conv packs after a width switch");
+    assert_ne!(
+        bits(&model.infer(&params, &bn, xb, &qp_wide).expect("re-widened")),
+        bits(&switched),
+        "formats <12,8> and <8,4> must disagree somewhere"
+    );
 }
 
 #[test]
