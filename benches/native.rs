@@ -295,47 +295,78 @@ fn main() {
         }
     }
 
-    // ---- conv path: im2col + packed GEMM over the LeNet grid ------------
+    // ---- conv path: im2col + packed GEMM over the model-zoo grids -------
     // Times the exact conv forward the interpreter runs (im2col into the
-    // arena, pack A, fused bias+ReLU GEMM, maxpool when pool > 1) for each
-    // conv layer of `synthetic_lenet` at its golden batch. The aggregate
+    // arena, pack A, fused bias+ReLU GEMM, max/avg pool when pool > 1) for
+    // each conv layer of `synthetic_lenet` AND `synthetic_resnet` at their
+    // golden batch — the resnet rows add the strided-SAME 3×3, the strided
+    // 1×1 downsample and the global-average-pool head shapes. The aggregate
     // madds/ms rate feeds `KernelCalibration::conv_madds_per_ms` (eq. 8's
-    // conv-layer term); per-shape rows are kept for inspection.
-    println!("-- conv: im2col + packed GEMM (LeNet grid) ----------");
+    // conv-layer term); per-shape rows are kept for inspection. LeNet tags
+    // keep their historical `c{ih}x{iw}k{kh}` form; resnet tags append
+    // stride and output channels so no derived key collides.
+    println!("-- conv: im2col + packed GEMM (LeNet + ResNet grids) ----------");
     {
-        let lenet = adapt::runtime::Manifest::synthetic_lenet("bench-lenet", 16);
-        let plan = adapt::runtime::native::lower_manifest(&lenet).expect("lenet lowers");
-        let bsz = lenet.batch;
         let (mut conv_madds, mut conv_ms) = (0.0f64, 0.0f64);
-        for i in 0..plan.num_layers() {
-            let Some(geom) = plan.conv(i) else { continue };
-            let (m, k, n) = (geom.conv_rows(bsz), geom.gemm_k(), geom.co);
-            let x = gaussian(bsz * geom.in_elems(), 0.5, 60 + i as u64);
-            let w = quantize_nr_slice(&gaussian(k * n, 0.5, 70 + i as u64), fmt);
-            let bias = gaussian(n, 0.1, 80 + i as u64);
-            let mut cols = vec![0.0f32; m * k];
-            let mut z = vec![0.0f32; m * n];
-            let mut pooled = vec![0.0f32; bsz * geom.out_elems()];
-            gemm::pack_b_cols(&w, k, n, &mut pack.b);
-            let madds = (m * k * n) as f64;
-            let tag = format!("c{}x{}k{}", geom.ih, geom.iw, geom.kh);
-            let name =
-                format!("conv im2col+gemm l{i} {tag} co{n} pool{} (batch {bsz})", geom.pool);
-            let med = bench(&name, 200, || {
-                adapt::runtime::native::conv::im2col(geom, &x, bsz, &mut cols);
-                gemm::pack_a_rows(&cols, m, k, &mut pack.a);
-                gemm::gemm_packed_into(
-                    &pool, m, n, k, &pack.a, &pack.b, Some(&bias), true, &mut z,
+        let zoo = [
+            ("lenet", adapt::runtime::Manifest::synthetic_lenet("bench-lenet", 16)),
+            ("resnet", adapt::runtime::Manifest::synthetic_resnet("bench-resnet", 16)),
+        ];
+        for (zi, (zoo_name, man)) in zoo.iter().enumerate() {
+            let plan = adapt::runtime::native::lower_manifest(man)
+                .unwrap_or_else(|e| panic!("{zoo_name} lowers: {e:#}"));
+            let bsz = man.batch;
+            for i in 0..plan.num_layers() {
+                let Some(geom) = plan.conv(i) else { continue };
+                let (m, k, n) = (geom.conv_rows(bsz), geom.gemm_k(), geom.co);
+                let seed = (100 * zi + i) as u64;
+                let x = gaussian(bsz * geom.in_elems(), 0.5, 60 + seed);
+                let w = quantize_nr_slice(&gaussian(k * n, 0.5, 70 + seed), fmt);
+                let bias = gaussian(n, 0.1, 80 + seed);
+                let mut cols = vec![0.0f32; m * k];
+                let mut z = vec![0.0f32; m * n];
+                let mut pooled = vec![0.0f32; bsz * geom.out_elems()];
+                gemm::pack_b_cols(&w, k, n, &mut pack.b);
+                let madds = (m * k * n) as f64;
+                let tag = if *zoo_name == "lenet" {
+                    format!("c{}x{}k{}", geom.ih, geom.iw, geom.kh)
+                } else {
+                    format!(
+                        "c{}x{}k{}s{}co{}",
+                        geom.ih, geom.iw, geom.kh, geom.stride, geom.co
+                    )
+                };
+                let name = format!(
+                    "conv im2col+gemm {zoo_name} l{i} {tag} co{n} pool{} (batch {bsz})",
+                    geom.pool
                 );
-                if geom.pool > 1 {
-                    adapt::runtime::native::conv::maxpool_forward(geom, &z, bsz, &mut pooled);
-                }
-                std::hint::black_box(&z);
-            });
-            tracked(&mut entries, &name, med);
-            derived.push((format!("calibration_conv_madds_per_ms_{tag}"), madds / med));
-            conv_madds += madds;
-            conv_ms += med;
+                let med = bench(&name, 200, || {
+                    adapt::runtime::native::conv::im2col(geom, &x, bsz, &mut cols);
+                    gemm::pack_a_rows(&cols, m, k, &mut pack.a);
+                    gemm::gemm_packed_into(
+                        &pool, m, n, k, &pack.a, &pack.b, Some(&bias), geom.relu, &mut z,
+                    );
+                    if geom.pool > 1 {
+                        match geom.pool_kind {
+                            adapt::runtime::native::PoolKind::Max => {
+                                adapt::runtime::native::conv::maxpool_forward(
+                                    geom, &z, bsz, &mut pooled,
+                                )
+                            }
+                            adapt::runtime::native::PoolKind::Avg => {
+                                adapt::runtime::native::conv::avgpool_forward(
+                                    geom, &z, bsz, &mut pooled,
+                                )
+                            }
+                        }
+                    }
+                    std::hint::black_box(&z);
+                });
+                tracked(&mut entries, &name, med);
+                derived.push((format!("calibration_conv_madds_per_ms_{tag}"), madds / med));
+                conv_madds += madds;
+                conv_ms += med;
+            }
         }
         derived.push((
             "calibration_conv_madds_per_ms".to_string(),

@@ -57,7 +57,7 @@ fn main() {
         for &workers in &[1usize, 2, 4] {
             let registry = Arc::new(ModelRegistry::new());
             registry.publish(
-                ServedModel::freeze("serve-bench", &man, &params, &qp).expect("freeze"),
+                ServedModel::freeze("serve-bench", &man, &params, &[], &qp).expect("freeze"),
             );
             let mut samples_ms: Vec<f64> = (0..3)
                 .map(|_| {
@@ -110,7 +110,7 @@ fn main() {
     // the "before" shape packed every layer on every call. Same forward,
     // same pool — the delta is pure pack/CSR construction.
     println!("-- pack cache ablation (batch 32 forward) -----------");
-    let served = ServedModel::freeze("serve-bench", &man, &params, &qp).expect("freeze");
+    let served = ServedModel::freeze("serve-bench", &man, &params, &[], &qp).expect("freeze");
     let b = man.batch;
     let xb: Vec<f32> = (0..b * d_in).map(|i| (i as f32 * 0.013).sin()).collect();
     let mut scratch = InferScratch::default();
@@ -142,7 +142,7 @@ fn main() {
         ms_per_iter: cached,
     });
     let rebuilt = bench("serve infer rebuilt packs b32", 50, &mut || {
-        let fresh = ServedModel::freeze("serve-bench", &man, &params, &qp).expect("freeze");
+        let fresh = ServedModel::freeze("serve-bench", &man, &params, &[], &qp).expect("freeze");
         fresh
             .infer_into(&pool, &xb, b, &mut scratch, &mut out)
             .expect("rebuilt infer");
@@ -163,7 +163,7 @@ fn main() {
     let stats = {
         let registry = Arc::new(ModelRegistry::new());
         registry
-            .publish(ServedModel::freeze("serve-bench", &man, &params, &qp).expect("freeze"));
+            .publish(ServedModel::freeze("serve-bench", &man, &params, &[], &qp).expect("freeze"));
         let server = ServeServer::start(
             Arc::clone(&registry),
             Arc::clone(&pool),

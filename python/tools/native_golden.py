@@ -13,6 +13,7 @@ this script regenerates the committed golden values:
 
     python3 python/tools/native_golden.py golden         # MLP golden
     python3 python/tools/native_golden.py lenet-golden   # conv/pool golden
+    python3 python/tools/native_golden.py resnet-golden  # BN/branch golden
 
 The lenet mode mirrors the conv interpreter (runtime/native/{conv,step}.rs)
 on ``Manifest::synthetic_lenet``: im2col with ``(ky, kx, ci)`` tap order onto
@@ -20,6 +21,14 @@ the same ascending-k GEMM folds, fused bias+ReLU, strict-``>`` first-win
 2x2 maxpool, col2im with the interpreter's ``(oy, ox, ky, kx)`` per-element
 fold order, and backward through the recomputed pool argmax and the clipped
 STE. It regenerates ``rust/tests/golden/lenet_native_ce.json``.
+
+The resnet mode mirrors the batchnorm/downsample/global-avgpool lowerings
+on ``Manifest::synthetic_resnet``: bias-free GEMMs into training-mode
+batchnorm (serial row-ascending batch stats, running-average fold with
+momentum 0.1), a linear strided 1x1 ``downsample`` branch whose successor
+reads the same input slot, the pre-ReLU skip-adds, and the global average
+pool feeding the dense head. It regenerates
+``rust/tests/golden/resnet_native_ce.json``.
 
 f32 arithmetic is mirrored with numpy float32 in the same operation order;
 the only expected deviations from the Rust binary are 1-ULP differences in
@@ -325,20 +334,30 @@ def matmul_a_bt_seq(g, w):
 
 
 class Geom:
-    """runtime/native/plan.rs ConvGeom (max-pool only; the lenet zoo)."""
+    """runtime/native/plan.rs ConvGeom.
 
-    def __init__(self, ih, iw, ci, k, co, padding, pool):
+    SAME output is ``ceil(i/s)`` with ``pad_total = max((o-1)s + k - i, 0)``
+    split top/left = ``pad_total // 2`` (the extra row/col lands
+    bottom/right — the JAX convention the AOT defs assume). ``relu=False``
+    marks a linear ``downsample`` branch; ``residual_from=j`` adds layer
+    j's quantized output before the ReLU."""
+
+    def __init__(self, ih, iw, ci, k, co, padding, pool, stride=1,
+                 pool_kind="max", relu=True, residual_from=None):
         self.ih, self.iw, self.ci, self.k, self.co = ih, iw, ci, k, co
-        self.stride = 1
+        self.stride = stride
         if padding == "same":
-            self.oh, self.ow = ih, iw
-            pad_h = max(self.oh - 1 + k - ih, 0)
-            pad_w = max(self.ow - 1 + k - iw, 0)
+            self.oh, self.ow = -(-ih // stride), -(-iw // stride)
+            pad_h = max((self.oh - 1) * stride + k - ih, 0)
+            pad_w = max((self.ow - 1) * stride + k - iw, 0)
             self.pad_top, self.pad_left = pad_h // 2, pad_w // 2
         else:  # valid
-            self.oh, self.ow = ih - k + 1, iw - k + 1
+            self.oh, self.ow = (ih - k) // stride + 1, (iw - k) // stride + 1
             self.pad_top = self.pad_left = 0
         self.pool = pool
+        self.pool_kind = pool_kind
+        self.relu = relu
+        self.residual_from = residual_from
         self.ph, self.pw = self.oh // pool, self.ow // pool
         self.di = k * k * ci  # im2col row length == GEMM depth
         self.in_elems = ih * iw * ci
@@ -351,14 +370,17 @@ def im2col(g, x):
     Pure gather (padded taps are exact 0.0), so vectorization is fold-free.
     """
     b = x.shape[0]
+    s = g.stride
     xs = x.reshape(b, g.ih, g.iw, g.ci)
-    pb = max(g.oh - 1 + g.k - g.ih - g.pad_top, 0)
-    pr = max(g.ow - 1 + g.k - g.iw - g.pad_left, 0)
+    pb = max((g.oh - 1) * s + g.k - g.ih - g.pad_top, 0)
+    pr = max((g.ow - 1) * s + g.k - g.iw - g.pad_left, 0)
     xp = np.pad(xs, ((0, 0), (g.pad_top, pb), (g.pad_left, pr), (0, 0)))
     cols = np.empty((b, g.oh, g.ow, g.k, g.k, g.ci), dtype=np.float32)
     for ky in range(g.k):
         for kx in range(g.k):
-            cols[:, :, :, ky, kx, :] = xp[:, ky : ky + g.oh, kx : kx + g.ow, :]
+            cols[:, :, :, ky, kx, :] = xp[
+                :, ky : ky + (g.oh - 1) * s + 1 : s, kx : kx + (g.ow - 1) * s + 1 : s, :
+            ]
     return cols.reshape(b * g.oh * g.ow, g.di)
 
 
@@ -373,11 +395,11 @@ def col2im(g, dcols, b):
     for oy in range(g.oh):
         for ox in range(g.ow):
             for ky in range(g.k):
-                iy = oy + ky - g.pad_top
+                iy = oy * g.stride + ky - g.pad_top
                 if iy < 0 or iy >= g.ih:
                     continue
                 for kx in range(g.k):
-                    ix = ox + kx - g.pad_left
+                    ix = ox * g.stride + kx - g.pad_left
                     if 0 <= ix < g.iw:
                         dx[:, iy, ix, :] = (
                             dx[:, iy, ix, :] + dc[:, oy, ox, ky, kx, :]
@@ -409,6 +431,86 @@ def maxpool_bwd(g, z, gpool, b):
     p = g.pool
     dwin = dwin.reshape(b, g.ph, g.pw, p, p, g.co).transpose(0, 1, 3, 2, 4, 5)
     return dwin.reshape(b * g.oh * g.ow, g.co)
+
+
+def avgpool_fwd(g, z, b):
+    """conv.rs avgpool_forward: zero-seeded ascending (ky,kx) sum fold,
+    then one multiply by 1/p² (exact for the power-of-two windows)."""
+    win = _pool_windows(g, z, b)
+    inv = F32(1.0 / (g.pool * g.pool))
+    acc = np.zeros((b, g.ph, g.pw, g.co), dtype=np.float32)
+    for t in range(g.pool * g.pool):
+        acc = (acc + win[:, :, :, t, :]).astype(np.float32)
+    return (acc * inv).astype(np.float32).reshape(b, g.out_elems)
+
+
+def avgpool_bwd(g, gpool, b):
+    """conv.rs avgpool_backward: every window element receives g·(1/p²)."""
+    p = g.pool
+    inv = F32(1.0 / (p * p))
+    gv = (gpool.reshape(b, g.ph, g.pw, 1, g.co) * inv).astype(np.float32)
+    dwin = np.broadcast_to(gv, (b, g.ph, g.pw, p * p, g.co))
+    dwin = dwin.reshape(b, g.ph, g.pw, p, p, g.co).transpose(0, 1, 3, 2, 4, 5)
+    return np.ascontiguousarray(dwin).reshape(b * g.oh * g.ow, g.co)
+
+
+BN_EPS = F32(1e-5)
+
+
+def bn_fwd_train(z, gamma, beta):
+    """ops.rs bn_forward_train: biased batch stats via two serial
+    row-ascending passes, every op a separate f32 rounding.
+
+    Returns (y, xhat, k, mean, var) — the transformed activations, the
+    normalized pre-scale values and ``k = gamma·inv_std`` for backward,
+    and the batch stats for the running-average fold."""
+    rows = z.shape[0]
+    inv_n = F32(1.0 / rows)
+    mean = np.zeros(z.shape[1], dtype=np.float32)
+    for r in range(rows):
+        mean = (mean + z[r]).astype(np.float32)
+    mean = (mean * inv_n).astype(np.float32)
+    var = np.zeros(z.shape[1], dtype=np.float32)
+    for r in range(rows):
+        d = (z[r] - mean).astype(np.float32)
+        var = (var + (d * d).astype(np.float32)).astype(np.float32)
+    var = (var * inv_n).astype(np.float32)
+    s = np.sqrt((var + BN_EPS).astype(np.float32)).astype(np.float32)
+    inv_std = (F32(1.0) / s).astype(np.float32)
+    k = (gamma * inv_std).astype(np.float32)
+    xhat = ((z - mean).astype(np.float32) * inv_std).astype(np.float32)
+    y = ((xhat * gamma).astype(np.float32) + beta).astype(np.float32)
+    return y, xhat, k, mean, var
+
+
+def bn_bwd(g, xhat, k):
+    """ops.rs bn_backward: g enters as dL/dy, returns (dz, dgamma, dbeta).
+
+    ``dz = (g - mean(g) - xhat·mean(g·xhat)) · k`` with the interpreter's
+    exact fold order: serial row-ascending sums, then per-element
+    ``t1 = g - c1; t2 = xhat·c2; dz = (t1 - t2)·k``."""
+    rows = g.shape[0]
+    inv_n = F32(1.0 / rows)
+    sdy = np.zeros(g.shape[1], dtype=np.float32)
+    sdyx = np.zeros(g.shape[1], dtype=np.float32)
+    for r in range(rows):
+        sdy = (sdy + g[r]).astype(np.float32)
+        sdyx = (sdyx + (g[r] * xhat[r]).astype(np.float32)).astype(np.float32)
+    c1 = (sdy * inv_n).astype(np.float32)
+    c2 = (sdyx * inv_n).astype(np.float32)
+    t1 = (g - c1).astype(np.float32)
+    t2 = (xhat * c2).astype(np.float32)
+    dz = ((t1 - t2).astype(np.float32) * k).astype(np.float32)
+    return dz, sdyx, sdy
+
+
+def bn_fold(w, gamma, beta, mean, var):
+    """ops.rs bn_fold: W' = W·s, b' = beta − mean·s, s = gamma/sqrt(var+eps)."""
+    inv = (F32(1.0) / np.sqrt((var + BN_EPS).astype(np.float32)).astype(np.float32)).astype(np.float32)
+    s = (gamma * inv).astype(np.float32)
+    wf = (w * s).astype(np.float32)
+    bf = (beta - (mean * s).astype(np.float32)).astype(np.float32)
+    return wf, bf
 
 
 def native_step(params, gsum, x, y, fmt, enable, hyper, layers=None):
@@ -601,6 +703,335 @@ LENET_GEOMS = [
 ]
 LENET_DIMS = [(25, 6), (150, 16), (64, 32), (32, 16), (16, 10)]
 
+# ---------------------------------------------------------------------------
+# Manifest::synthetic_resnet("resnet-native", 16): 8x8x1 -> conv 3x3 SAME x8
+# BN (stem) -> conv 3x3 x8 BN -> conv 3x3 x8 BN (+stem) -> [downsample 1x1
+# s2 x16 BN] -> conv 3x3 s2 x16 BN -> conv 3x3 x16 BN (+downsample, global
+# avgpool4) -> 1x1x16 -> flatten 16 -> 10. Params in manifest order are
+# (kernel, gamma, beta) per BN conv then (kernel, bias) for the fc head;
+# bn_state is (mean, var) per BN conv. The downsample branch (layer 3) is
+# LINEAR (no ReLU) and its successor (layer 4) reads the SAME input slot.
+# ---------------------------------------------------------------------------
+
+RESNET_GEOMS = [
+    Geom(8, 8, 1, 3, 8, "same", 1),
+    Geom(8, 8, 8, 3, 8, "same", 1),
+    Geom(8, 8, 8, 3, 8, "same", 1, residual_from=0),
+    Geom(8, 8, 8, 1, 16, "same", 1, stride=2, relu=False),  # downsample branch
+    Geom(8, 8, 8, 3, 16, "same", 1, stride=2),
+    Geom(4, 4, 16, 3, 16, "same", 4, pool_kind="avg", residual_from=3),
+    None,  # fc 16 -> 10
+]
+# (kernel, gamma, beta, mean, var, bias) param/bn indices per layer
+RESNET_WIRING = [
+    (0, 1, 2, 0, 1, None),
+    (3, 4, 5, 2, 3, None),
+    (6, 7, 8, 4, 5, None),
+    (9, 10, 11, 6, 7, None),
+    (12, 13, 14, 8, 9, None),
+    (15, 16, 17, 10, 11, None),
+    (18, None, None, None, None, 19),
+]
+# input slot per layer: a downsample successor reads the branch's own input
+RESNET_SRC = [0, 1, 2, 3, 3, 5, 6]
+RESNET_KDIMS = [(9, 8), (72, 8), (72, 8), (8, 16), (72, 16), (144, 16), (16, 10)]
+RESNET_CHANNELS = [8, 8, 8, 16, 16, 16]
+
+
+def init_params_resnet(seed):
+    """init/mod.rs init_params on the synthetic_resnet param layout: the
+    fold salt is the ACTUAL manifest param index + 1 (kernels sit at
+    0,3,6,9,12,15,18), gammas are ones, betas/biases zeros."""
+    base = Rng(seed=seed)
+    params = []
+    for li, (fi, fo) in enumerate(RESNET_KDIMS):
+        ki = RESNET_WIRING[li][0]
+        rng = base.fold(ki + 1)
+        sigma = math.sqrt(1.0 / fi)
+        a = math.sqrt(3.0 / fi)
+        k = np.array(
+            [F32(rng.truncated_normal(0.0, sigma, a)) for _ in range(fi * fo)],
+            dtype=np.float32,
+        ).reshape(fi, fo)
+        params.append(k)
+        if RESNET_WIRING[li][1] is not None:
+            co = RESNET_CHANNELS[li]
+            params.append(np.ones(co, dtype=np.float32))  # gamma
+            params.append(np.zeros(co, dtype=np.float32))  # beta
+        else:
+            params.append(np.zeros(fo, dtype=np.float32))  # fc bias
+    return params
+
+
+def init_bn_resnet():
+    """init/mod.rs init_bn: running means zero, running vars one."""
+    bn = []
+    for co in RESNET_CHANNELS:
+        bn.append(np.zeros(co, dtype=np.float32))
+        bn.append(np.ones(co, dtype=np.float32))
+    return bn
+
+
+def resnet_step(params, bn, gsum, x, y, fmt, enable, hyper, momentum=0.1):
+    """runtime/native/step.rs train step on the resnet plan: BN convs run
+    the GEMM bias-free, then batchnorm (batch stats + running-average
+    fold), then the pre-ReLU skip-add, ReLU, pool, STE quantizer. The
+    backward sweep parks residual/branch gradients exactly like the
+    interpreter: a residual consumer parks into the skip slot of the
+    output it read; a branch successor parks its input gradient into the
+    shared input slot and takes the parked branch-output gradient as its
+    hand-off. Returns (loss, ce, acc) and updates params/bn/gsum."""
+    lr, l1, l2, pen, gnorm = hyper
+    L = len(RESNET_GEOMS)
+    scale, qmin, qmax = fmt
+    b = len(y)
+    c = RESNET_KDIMS[-1][1]
+    mom = F32(momentum)
+    keep = F32(F32(1.0) - mom)
+
+    wq, mask_w, sparsity = [], [], []
+    for i in range(L):
+        w = params[RESNET_WIRING[i][0]]
+        if enable:
+            q, mk = quant_ste(w, scale, qmin, qmax)
+            zeros = int(np.count_nonzero(q == 0.0))
+        else:
+            q, mk = w.copy(), np.ones_like(w)
+            zeros = int(np.count_nonzero(w == 0.0))
+        wq.append(q)
+        mask_w.append(mk)
+        sparsity.append(F32(zeros) / F32(w.size))
+
+    bn_new = [v.copy() for v in bn]
+    acts = [x.reshape(b, -1).astype(np.float32)]
+    pre_q, mask_a, cols_of = [], [], []
+    xhat_of, k_of = [None] * L, [None] * L
+    for i, g in enumerate(RESNET_GEOMS):
+        ki, gi, bti, mi, vi, bi = RESNET_WIRING[i]
+        x_in = acts[RESNET_SRC[i]]
+        if g is None:
+            cols_of.append(None)
+            z = matmul_seq(x_in, wq[i])
+            z = (z + params[bi]).astype(np.float32)
+            if i + 1 < L:
+                z = np.maximum(z, F32(0.0))
+            pre_quant = z
+        else:
+            cols = im2col(g, x_in)
+            cols_of.append(cols)
+            z = matmul_seq(cols, wq[i])  # bias-free: BN supplies the shift
+            z, xh, kk, mu, var = bn_fwd_train(z, params[gi], params[bti])
+            xhat_of[i], k_of[i] = xh, kk
+            bn_new[mi] = (
+                (keep * bn[mi]).astype(np.float32) + (mom * mu).astype(np.float32)
+            ).astype(np.float32)
+            bn_new[vi] = (
+                (keep * bn[vi]).astype(np.float32) + (mom * var).astype(np.float32)
+            ).astype(np.float32)
+            if g.residual_from is not None:
+                skip = acts[g.residual_from + 1].reshape(z.shape)
+                z = (z + skip).astype(np.float32)
+            if g.relu:
+                z = np.maximum(z, F32(0.0))
+            if g.pool > 1:
+                pooled = (
+                    avgpool_fwd(g, z, b) if g.pool_kind == "avg" else maxpool_fwd(g, z, b)
+                )
+                pre_quant = pooled
+            else:
+                pre_quant = z.reshape(b, -1)
+        if enable:
+            q, mk = quant_ste(pre_quant, scale, qmin, qmax)
+        else:
+            q, mk = pre_quant.copy(), np.ones_like(pre_quant)
+        pre_q.append(z)
+        mask_a.append(mk)
+        acts.append(q.reshape(b, -1))
+
+    logits = acts[L]
+    g = np.zeros((b, c), dtype=np.float32)
+    ce_sum = 0.0
+    correct = 0
+    inv_b = F32(1.0 / b)
+    for r in range(b):
+        row = logits[r]
+        mx = F32(np.max(row))
+        se = F32(0.0)
+        for j in range(c):
+            se = F32(se + F32(np.exp(F32(row[j] - mx))))
+        lse = F32(mx + F32(np.log(se)))
+        ce_sum += float(F32(lse - row[y[r]]))
+        if int(np.argmax(row)) == y[r]:
+            correct += 1
+        for j in range(c):
+            p = F32(np.exp(F32(row[j] - lse)))
+            oh = F32(1.0) if j == y[r] else F32(0.0)
+            g[r, j] = F32(F32(p - oh) * inv_b)
+    ce = F32(ce_sum / b)
+    acc = correct / b
+
+    reg = F32(0.0)
+    for i in range(L):
+        w = params[RESNET_WIRING[i][0]].astype(np.float64)
+        s1 = float(np.sum(np.abs(w)))
+        s2 = float(np.sum(w * w))
+        reg = F32(reg + F32(F32(F32(l1) * F32(s1)) + F32(F32(0.5) * F32(F32(l2) * F32(s2)))))
+    wl32 = F32(8.0 / 32.0) if enable else F32(32.0 / 32.0)
+    penalty = F32(0.0)
+    for i in range(L):
+        penalty = F32(penalty + F32(F32(pen) * F32(wl32 * F32(F32(1.0) - sparsity[i]))))
+    loss = F32(F32(ce + reg) + penalty)
+
+    skip_g = {}
+    for i in range(L - 1, -1, -1):
+        geom = RESNET_GEOMS[i]
+        ki, gi, bti, mi, vi, bi = RESNET_WIRING[i]
+        g = (g.reshape(mask_a[i].shape) * mask_a[i]).astype(np.float32)
+        db = None
+        dgamma = dbeta = None
+        if geom is None:
+            if i + 1 < L:
+                g = np.where(pre_q[i] > 0.0, g, F32(0.0)).astype(np.float32)
+            g_full = g
+            db = np.zeros(g_full.shape[1], dtype=np.float32)
+            for r in range(g_full.shape[0]):
+                db = (db + g_full[r]).astype(np.float32)
+            dw = matmul_at_b_seq(acts[RESNET_SRC[i]], g_full)
+            if i > 0:
+                gp = matmul_a_bt_seq(g_full, wq[i]).reshape(b, -1)
+        else:
+            if geom.pool > 1:
+                if geom.pool_kind == "avg":
+                    g_full = avgpool_bwd(geom, g, b)
+                else:
+                    g_full = maxpool_bwd(geom, pre_q[i], g, b)
+            else:
+                g_full = g.reshape(-1, geom.co).copy()
+            if geom.relu:
+                g_full = np.where(pre_q[i] > 0.0, g_full, F32(0.0)).astype(np.float32)
+            if geom.residual_from is not None:
+                t = geom.residual_from + 1
+                flat = g_full.reshape(b, -1)
+                if t in skip_g:
+                    skip_g[t] = (skip_g[t] + flat).astype(np.float32)
+                else:
+                    skip_g[t] = flat.copy()
+            g_full, dgamma, dbeta = bn_bwd(g_full, xhat_of[i], k_of[i])
+            dw = matmul_at_b_seq(cols_of[i], g_full)
+            if i > 0:
+                gp = matmul_a_bt_seq(g_full, wq[i])
+                gp = col2im(geom, gp, b)
+        src = RESNET_SRC[i]
+        if src == i:
+            if i > 0 and i in skip_g:
+                gp = (gp + skip_g.pop(i)).astype(np.float32)
+        else:
+            # branch successor: its input gradient parks on the shared
+            # slot; the parked branch-output gradient becomes the hand-off
+            if src in skip_g:
+                skip_g[src] = (skip_g[src] + gp).astype(np.float32)
+            else:
+                skip_g[src] = gp.copy()
+            gp = skip_g.pop(i)
+        dw = (dw * mask_w[i]).astype(np.float32)
+        w = params[ki]
+        dw = (dw + (F32(l1) * np.sign(w) + F32(l2) * w).astype(np.float32)).astype(
+            np.float32
+        )
+        gn = F32(math.sqrt(float(np.sum(dw.astype(np.float64) ** 2))))
+        gsum[i] = (gsum[i] + dw).astype(np.float32)
+        denom = F32(gn + F32(1e-12))
+        if gnorm:
+            params[ki] = (w - F32(lr) * (dw / denom).astype(np.float32)).astype(np.float32)
+        else:
+            params[ki] = (w - F32(lr) * dw).astype(np.float32)
+        if bi is not None:
+            params[bi] = (params[bi] - F32(lr) * db).astype(np.float32)
+        if gi is not None:
+            params[gi] = (params[gi] - F32(lr) * dgamma).astype(np.float32)
+            params[bti] = (params[bti] - F32(lr) * dbeta).astype(np.float32)
+        if i > 0:
+            g = gp
+    for i, v in enumerate(bn_new):
+        bn[i] = v
+    return loss, ce, acc
+
+
+def resnet_infer_accuracy(params, bn, data, fmt, enable, batch, n_batches):
+    """The NativeInfer path: frozen running stats fold into each conv's
+    kernel+bias (fold-before-quantize), then the plain quantized forward."""
+    L = len(RESNET_GEOMS)
+    scale, qmin, qmax = fmt
+    wq, biases = [], []
+    for i in range(L):
+        ki, gi, bti, mi, vi, bi = RESNET_WIRING[i]
+        if gi is not None:
+            wf, bf = bn_fold(params[ki], params[gi], params[bti], bn[mi], bn[vi])
+        else:
+            wf, bf = params[ki], params[bi]
+        if enable:
+            q, _ = quant_ste(wf, scale, qmin, qmax)
+        else:
+            q = wf
+        wq.append(q)
+        biases.append(bf)
+    accs = []
+    for kb in range(n_batches):
+        xs, ys = [], []
+        for j in range(batch):
+            idx = (kb * batch + j) % data.len
+            xv, yv = data.fill(idx)
+            xs.append(xv)
+            ys.append(yv)
+        acts = [np.stack(xs).reshape(batch, -1).astype(np.float32)]
+        for i, g in enumerate(RESNET_GEOMS):
+            h = acts[RESNET_SRC[i]]
+            if g is None:
+                z = matmul_seq(h, wq[i])
+                z = (z + biases[i]).astype(np.float32)
+                if i + 1 < L:
+                    z = np.maximum(z, F32(0.0))
+            else:
+                z = matmul_seq(im2col(g, h), wq[i])
+                z = (z + biases[i]).astype(np.float32)
+                if g.residual_from is not None:
+                    z = (z + acts[g.residual_from + 1].reshape(z.shape)).astype(np.float32)
+                if g.relu:
+                    z = np.maximum(z, F32(0.0))
+                if g.pool > 1:
+                    z = avgpool_fwd(g, z, batch) if g.pool_kind == "avg" else maxpool_fwd(g, z, batch)
+            if enable:
+                h, _ = quant_ste(z, scale, qmin, qmax)
+            else:
+                h = z
+            acts.append(h.reshape(batch, -1))
+        accs.append(float(np.mean(np.argmax(acts[L], axis=1) == ys)))
+    return sum(accs) / len(accs)
+
+
+def resnet_run(train_size, eval_size, steps, enable=True, report_every=0):
+    """The resnet golden/learncheck driver: identical data/batcher/init
+    seeding to the mlp/lenet runs (8x8x1 SyntheticVision, batch 16)."""
+    data = SyntheticVision(8, 8, 1, 10, train_size, SEED, 0.25)
+    evald = SyntheticVision(8, 8, 1, 10, train_size, SEED, 0.25).heldout(
+        train_size, eval_size
+    )
+    params = init_params_resnet(SEED)
+    bn = init_bn_resnet()
+    gsum = [np.zeros(d, dtype=np.float32) for d in RESNET_KDIMS]
+    batcher = Batcher(data, 16, SEED ^ 0xBA7C4)
+    ces = []
+    for t in range(steps):
+        x, y = batcher.next_batch()
+        loss, ce, acc = resnet_step(params, bn, gsum, x, y, FMT_8_4, enable, HYPER)
+        ces.append(float(ce))
+        if report_every and (t + 1) % report_every == 0:
+            print(f"  step {t + 1:4d}: ce {ce:.6f} acc {acc:.3f}")
+    ev = resnet_infer_accuracy(
+        params, bn, evald, FMT_8_4, enable, 16, max(eval_size // 16, 1)
+    )
+    return ces, ev
+
 
 def run(train_size, eval_size, steps, enable=True, report_every=0, lenet=False):
     hw = 12 if lenet else 8
@@ -628,14 +1059,25 @@ def run(train_size, eval_size, steps, enable=True, report_every=0, lenet=False):
 
 def main():
     mode = sys.argv[1] if len(sys.argv) > 1 else "golden"
-    if mode in ("golden", "lenet-golden"):
+    if mode in ("golden", "lenet-golden", "resnet-golden"):
         # the golden-test config: epochs=1, train_size=128 -> 8 steps; the
         # first 4 CEs are switch-free by the lookback lower bound
-        ces, _ = run(128, 32, 8, lenet=mode.startswith("lenet"))
+        if mode == "resnet-golden":
+            ces, _ = resnet_run(128, 32, 8)
+        else:
+            ces, _ = run(128, 32, 8, lenet=mode.startswith("lenet"))
         print("first 8 CE values (golden = first 4):")
         for i, ce in enumerate(ces):
             print(f"  step {i}: {ce:.6f}")
         print("golden json snippet:", [round(c, 6) for c in ces[:4]])
+    elif mode == "resnet-learncheck":
+        # a longer constant-<8,4> resnet run (downsample branch + BN +
+        # global avgpool) backing the resnet e2e thresholds
+        print("quantized <8,4> resnet, 2 epochs x 256 samples (32 steps):")
+        ces, ev = resnet_run(256, 64, 32, report_every=8)
+        first = sum(ces[:4]) / 4.0
+        last = sum(ces[-4:]) / 4.0
+        print(f"  CE {first:.4f} -> {last:.4f}; held-out acc {ev:.4f}")
     elif mode == "lenet-learncheck":
         # a longer constant-<8,4> lenet run backing the conv e2e thresholds
         print("quantized <8,4> lenet, 2 epochs x 256 samples (32 steps):")

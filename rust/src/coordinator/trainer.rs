@@ -119,8 +119,12 @@ pub struct ServableModel {
     /// Serving name (defaults to the run's artifact name).
     pub name: String,
     pub manifest: crate::runtime::Manifest,
-    /// Full (kernel, bias) parameter interleaving, trained.
+    /// Full manifest parameter stream (kernel+bias, or kernel+gamma+beta
+    /// for batchnorm layers), trained.
     pub params: Vec<Vec<f32>>,
+    /// Running batchnorm (mean, var) tensors at the end of the run (empty
+    /// for BN-free models).
+    pub bn: Vec<Vec<f32>>,
     /// The `[2L, 5]` runtime qparams tensor at the end of the run.
     pub qparams: Vec<f32>,
     /// Final per-layer word lengths (reporting/size accounting).
@@ -136,6 +140,7 @@ impl TrainOutcome {
             name: self.record.name.clone(),
             manifest: manifest.clone(),
             params: self.state.params.clone(),
+            bn: self.state.bn.clone(),
             qparams: self.final_qparams.clone(),
             wordlengths: self.final_wordlengths.clone(),
         }

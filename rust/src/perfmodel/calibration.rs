@@ -153,10 +153,11 @@ impl KernelCalibration {
         })
     }
 
-    /// f32 rate for a layer of `kind`: conv layers run through im2col, so
-    /// they earn the measured conv rate when the bench recorded one.
+    /// f32 rate for a layer of `kind`: conv layers (including the strided
+    /// 1×1 `downsample` residual projections) run through im2col, so they
+    /// earn the measured conv rate when the bench recorded one.
     fn f32_rate_for_kind(&self, kind: &str) -> f64 {
-        if kind == "conv" {
+        if kind == "conv" || kind == "downsample" {
             self.conv_madds_per_ms.unwrap_or(self.dense_madds_per_ms)
         } else {
             self.dense_madds_per_ms
@@ -463,6 +464,8 @@ mod tests {
         assert_eq!(cal.conv_madds_per_ms, Some(600.0));
         // only the exact aggregate key is consumed
         assert_eq!(cal.f32_rate_for_kind("conv"), 600.0);
+        // downsample branches are strided 1×1 convs: same im2col rate
+        assert_eq!(cal.f32_rate_for_kind("downsample"), 600.0);
         assert_eq!(cal.f32_rate_for_kind("dense"), 1000.0);
         // dense-everywhere run: conv layer costs the conv rate on BOTH
         // sides of the ratio, so an all-dense-path speedup stays 1.0

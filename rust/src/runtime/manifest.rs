@@ -373,12 +373,16 @@ impl Manifest {
                 });
             }
         };
+        let bn_specs = |out: &mut Vec<IoSpec>, bns: &[IoSpec]| {
+            out.extend(bns.iter().cloned());
+        };
         let mut x_shape = vec![batch];
         x_shape.extend_from_slice(&self.input_shape);
 
-        let mut train_inputs = Vec::with_capacity(3 * l + 4);
+        let mut train_inputs = Vec::with_capacity(3 * l + self.bn_state.len() + 4);
         param_specs(&mut train_inputs, &self.params);
         gsum_specs(&mut train_inputs, &self.params);
+        bn_specs(&mut train_inputs, &self.bn_state);
         train_inputs.push(f32_spec("x".into(), x_shape.clone()));
         train_inputs.push(IoSpec {
             name: "y".into(),
@@ -388,9 +392,10 @@ impl Manifest {
         train_inputs.push(f32_spec("qparams".into(), vec![2 * l, 5]));
         train_inputs.push(f32_spec("hyper".into(), vec![8]));
 
-        let mut train_outputs = Vec::with_capacity(3 * l + 7);
+        let mut train_outputs = Vec::with_capacity(3 * l + self.bn_state.len() + 7);
         param_specs(&mut train_outputs, &self.params);
         gsum_specs(&mut train_outputs, &self.params);
+        bn_specs(&mut train_outputs, &self.bn_state);
         train_outputs.push(f32_spec("loss".into(), vec![]));
         train_outputs.push(f32_spec("ce".into(), vec![]));
         train_outputs.push(f32_spec("acc".into(), vec![]));
@@ -399,8 +404,9 @@ impl Manifest {
         train_outputs.push(f32_spec("sparsity".into(), vec![l]));
         train_outputs.push(f32_spec("act_absmax".into(), vec![l]));
 
-        let mut infer_inputs = Vec::with_capacity(2 * l + 2);
+        let mut infer_inputs = Vec::with_capacity(2 * l + self.bn_state.len() + 2);
         param_specs(&mut infer_inputs, &self.params);
+        bn_specs(&mut infer_inputs, &self.bn_state);
         infer_inputs.push(f32_spec("x".into(), x_shape));
         infer_inputs.push(f32_spec("qparams".into(), vec![2 * l, 5]));
         let infer_outputs = vec![f32_spec("logits".into(), vec![batch, self.classes])];
@@ -497,6 +503,101 @@ impl Manifest {
         man
     }
 
+    /// A fully-executable synthetic ResNet: the downsample/batchnorm
+    /// topology of `python/compile/models/resnet.py` shrunk to an 8×8×1
+    /// input. Every conv carries batchnorm — `(kernel, gamma, beta)`
+    /// params plus `(mean, var)` running-stat tensors — block 2 halves
+    /// the spatial extent with a strided conv shadowed by a 1×1
+    /// `downsample` projection on the skip edge, and the head is a
+    /// global average pool (`pool == oh`, 1×1 output) into dense logits.
+    ///
+    /// Chain: `8×8×1 → conv 3×3 SAME ×8 BN (stem) → conv 3×3 ×8 BN →
+    /// conv 3×3 ×8 BN (+stem) → [downsample 1×1 s2 ×16 BN] →
+    /// conv 3×3 s2 ×16 BN → conv 3×3 ×16 BN (+downsample, global
+    /// avgpool4) → 1×1×16 → flatten 16 → 10`.
+    ///
+    /// ```
+    /// use adapt::runtime::Manifest;
+    ///
+    /// let man = Manifest::synthetic_resnet("resnet-native", 16);
+    /// assert_eq!(man.num_layers, 7);
+    /// assert_eq!(man.layers[3].kind, "downsample");
+    /// assert_eq!(man.bn_state.len(), 12); // (mean, var) per bn conv
+    /// assert!(man.validate().is_ok());
+    /// ```
+    pub fn synthetic_resnet(name: &str, batch: usize) -> Manifest {
+        let mut params = Vec::new();
+        let mut layers = Vec::new();
+        let mut bns = Vec::new();
+        let hw = push_conv_bn(&mut params, &mut bns, &mut layers, 0, "stem", "conv", (8, 8), 1, 3, 8, 1, "same", 1, "max", -1);
+        let hw = push_conv_bn(&mut params, &mut bns, &mut layers, 1, "b1c1", "conv", hw, 8, 3, 8, 1, "same", 1, "max", -1);
+        let hw = push_conv_bn(&mut params, &mut bns, &mut layers, 2, "b1c2", "conv", hw, 8, 3, 8, 1, "same", 1, "max", 0);
+        // the branch projects the SAME 8x8x8 input the strided conv reads;
+        // its 4x4x16 output feeds only the block-2 skip-add
+        push_conv_bn(&mut params, &mut bns, &mut layers, 3, "b2down", "downsample", hw, 8, 1, 16, 2, "same", 1, "max", -1);
+        let hw = push_conv_bn(&mut params, &mut bns, &mut layers, 4, "b2c1", "conv", hw, 8, 3, 16, 2, "same", 1, "max", -1);
+        push_conv_bn(&mut params, &mut bns, &mut layers, 5, "b2c2", "conv", hw, 16, 3, 16, 1, "same", 4, "avg", 3);
+        push_dense(&mut params, &mut layers, 6, "fc", 16, 10);
+        let mut man = Manifest {
+            name: name.to_string(),
+            model: "resnet".into(),
+            batch,
+            input_shape: vec![8, 8, 1],
+            classes: 10,
+            num_layers: layers.len(),
+            params,
+            bn_state: bns,
+            layers,
+            train_inputs: Vec::new(),
+            train_outputs: Vec::new(),
+            infer_inputs: Vec::new(),
+            infer_outputs: Vec::new(),
+        };
+        man.fill_executable_io();
+        man.validate()
+            .expect("synthetic_resnet construction satisfies the manifest invariants");
+        man
+    }
+
+    /// A fully-executable synthetic AlexNet: the five-conv / three-dense
+    /// topology of `python/compile/models/alexnet.py` shrunk to a 16×16×3
+    /// input. Plain `(kernel, bias)` layers throughout — no batchnorm.
+    ///
+    /// Chain: `16×16×3 → conv 3×3 ×8 maxpool2 → conv 3×3 ×12 maxpool2 →
+    /// conv 3×3 ×16 → conv 3×3 ×16 → conv 3×3 ×16 maxpool2 → 2×2×16 →
+    /// flatten 64 → 32 → 16 → 10`.
+    pub fn synthetic_alexnet(name: &str, batch: usize) -> Manifest {
+        let mut params = Vec::new();
+        let mut layers = Vec::new();
+        let hw = push_conv(&mut params, &mut layers, 0, "conv0", (16, 16), 3, 3, 8, "same", 2, "max", -1);
+        let hw = push_conv(&mut params, &mut layers, 1, "conv1", hw, 8, 3, 12, "same", 2, "max", -1);
+        let hw = push_conv(&mut params, &mut layers, 2, "conv2", hw, 12, 3, 16, "same", 1, "max", -1);
+        let hw = push_conv(&mut params, &mut layers, 3, "conv3", hw, 16, 3, 16, "same", 1, "max", -1);
+        push_conv(&mut params, &mut layers, 4, "conv4", hw, 16, 3, 16, "same", 2, "max", -1);
+        push_dense(&mut params, &mut layers, 5, "fc0", 64, 32);
+        push_dense(&mut params, &mut layers, 6, "fc1", 32, 16);
+        push_dense(&mut params, &mut layers, 7, "fc2", 16, 10);
+        let mut man = Manifest {
+            name: name.to_string(),
+            model: "alexnet".into(),
+            batch,
+            input_shape: vec![16, 16, 3],
+            classes: 10,
+            num_layers: layers.len(),
+            params,
+            bn_state: Vec::new(),
+            layers,
+            train_inputs: Vec::new(),
+            train_outputs: Vec::new(),
+            infer_inputs: Vec::new(),
+            infer_outputs: Vec::new(),
+        };
+        man.fill_executable_io();
+        man.validate()
+            .expect("synthetic_alexnet construction satisfies the manifest invariants");
+        man
+    }
+
     /// Indices (into `params`) of the quantizable kernels, layer order.
     pub fn kernel_indices(&self) -> Vec<usize> {
         self.params
@@ -555,6 +656,76 @@ fn push_conv(
         pool_kind: pool_kind.into(),
         residual_from,
         ..LayerDesc::default()
+    });
+    (oh / pool, ow / pool)
+}
+
+/// Append one batchnorm conv (or `downsample`) layer: `(kernel, gamma,
+/// beta)` params, `(mean, var)` running-stat tensors, and the descriptor.
+/// Supports stride (SAME output `ceil(i/s)`, VALID `(i-k)/s + 1`); returns
+/// the post-pool `(h, w)` of THIS layer's output — for a `downsample`
+/// branch the caller keeps feeding the branch's own input shape to the
+/// next layer.
+#[allow(clippy::too_many_arguments)]
+fn push_conv_bn(
+    params: &mut Vec<ParamInfo>,
+    bns: &mut Vec<IoSpec>,
+    layers: &mut Vec<LayerDesc>,
+    li: usize,
+    name: &str,
+    kind: &str,
+    (ih, iw): (usize, usize),
+    ci: usize,
+    k: usize,
+    co: usize,
+    stride: usize,
+    pad: &str,
+    pool: usize,
+    pool_kind: &str,
+    residual_from: i64,
+) -> (usize, usize) {
+    let (oh, ow) = if pad == "same" {
+        (ih.div_ceil(stride), iw.div_ceil(stride))
+    } else {
+        ((ih - k) / stride + 1, (iw - k) / stride + 1)
+    };
+    let fan_in = k * k * ci;
+    params.push(ParamInfo {
+        name: format!("{name}.kernel"),
+        shape: vec![k, k, ci, co],
+        kind: "kernel".into(),
+        layer: li as i64,
+        fan_in,
+        quantizable: true,
+    });
+    for gb in ["gamma", "beta"] {
+        params.push(ParamInfo {
+            name: format!("{name}.{gb}"),
+            shape: vec![co],
+            kind: gb.into(),
+            layer: -1,
+            fan_in,
+            quantizable: false,
+        });
+    }
+    for mv in ["mean", "var"] {
+        bns.push(IoSpec {
+            name: format!("{name}.{mv}"),
+            shape: vec![co],
+            dtype: Dtype::F32,
+        });
+    }
+    layers.push(LayerDesc {
+        name: name.into(),
+        kind: kind.into(),
+        madds: (oh * ow * fan_in * co) as u64,
+        weight_elems: (fan_in * co) as u64,
+        fan_in,
+        stride,
+        padding: pad.into(),
+        pool,
+        pool_kind: pool_kind.into(),
+        residual_from,
     });
     (oh / pool, ow / pool)
 }
@@ -718,6 +889,60 @@ mod tests {
         assert_eq!(m.layers[2].pool_kind, "avg");
         assert_eq!(m.layers[2].pool, 2);
         assert_eq!(m.params[6].shape, vec![128, 10]);
+    }
+
+    #[test]
+    fn synthetic_resnet_is_fully_executable() {
+        let m = Manifest::synthetic_resnet("res", 16);
+        m.validate().expect("full I/O contract");
+        assert_eq!(m.num_layers, 7);
+        // (kernel, gamma, beta) per bn conv, (kernel, bias) for the head
+        assert_eq!(m.params.len(), 20);
+        assert_eq!(m.kernel_indices(), vec![0, 3, 6, 9, 12, 15, 18]);
+        assert_eq!(m.params[1].kind, "gamma");
+        assert_eq!(m.params[2].kind, "beta");
+        assert_eq!(m.bn_state.len(), 12);
+        assert_eq!(m.bn_state[0].name, "stem.mean");
+        assert_eq!(m.bn_state[1].name, "stem.var");
+        // downsample branch: 1x1 stride-2 projection, no pool
+        assert_eq!(m.layers[3].kind, "downsample");
+        assert_eq!(m.layers[3].stride, 2);
+        assert_eq!(m.params[9].shape, vec![1, 1, 8, 16]);
+        assert_eq!(m.layers[3].madds, 4 * 4 * 8 * 16);
+        // strided conv madds use the halved output extent
+        assert_eq!(m.layers[4].madds, 4 * 4 * 3 * 3 * 8 * 16);
+        // global-average-pool head
+        assert_eq!(m.layers[5].pool, 4);
+        assert_eq!(m.layers[5].pool_kind, "avg");
+        assert_eq!(m.layers[5].residual_from, 3);
+        assert_eq!(m.params[18].shape, vec![16, 10]);
+        // I/O counts include the bn running state on both directions
+        assert_eq!(m.train_inputs.len(), 20 + 7 + 12 + 4);
+        assert_eq!(m.train_outputs.len(), 20 + 7 + 12 + 7);
+        assert_eq!(m.infer_inputs.len(), 20 + 12 + 2);
+        assert_eq!(m.train_inputs[27].name, "stem.mean");
+        // initializer plumbing: gamma = 1, beta = 0, var = 1, mean = 0
+        let params = crate::init::init_params(&m, crate::init::Initializer::Tnvs, 1.0, 0);
+        assert_eq!(params[1], vec![1.0f32; 8]);
+        assert_eq!(params[2], vec![0.0f32; 8]);
+        let bn = crate::init::init_bn(&m);
+        assert_eq!(bn.len(), 12);
+        assert_eq!(bn[0], vec![0.0f32; 8]);
+        assert_eq!(bn[1], vec![1.0f32; 8]);
+    }
+
+    #[test]
+    fn synthetic_alexnet_is_fully_executable() {
+        let m = Manifest::synthetic_alexnet("alex", 16);
+        m.validate().expect("full I/O contract");
+        assert_eq!(m.num_layers, 8);
+        assert_eq!(m.kernel_indices(), vec![0, 2, 4, 6, 8, 10, 12, 14]);
+        assert!(m.bn_state.is_empty());
+        assert_eq!(m.params[0].shape, vec![3, 3, 3, 8]);
+        assert_eq!(m.params[8].shape, vec![3, 3, 16, 16]);
+        assert_eq!(m.params[10].shape, vec![64, 32]);
+        assert_eq!(m.layers[0].madds, 16 * 16 * 3 * 3 * 3 * 8);
+        assert_eq!(m.layers[4].pool, 2);
     }
 
     #[test]

@@ -232,6 +232,8 @@ mod tests {
             ph: oh / pool,
             pw: ow / pool,
             residual_from: None,
+            relu: true,
+            branch: false,
         }
     }
 

@@ -1,7 +1,7 @@
 //! The native CPU execution backend: a pure-Rust interpreter for the
-//! paper's model-zoo manifests (dense MLPs and BN-free conv/pool/residual
-//! nets), behind the same [`ExecBackend`]/[`ExecModule`] contract as the
-//! PJRT path.
+//! paper's model-zoo manifests (dense MLPs and conv/batchnorm/pool/residual
+//! nets up to the AlexNet/ResNet twins), behind the same
+//! [`ExecBackend`]/[`ExecModule`] contract as the PJRT path.
 //!
 //! # Why it exists
 //!
@@ -53,17 +53,23 @@
 //!
 //! # Scope
 //!
-//! BN-free models built from dense, conv2d (stride ≥ 1, SAME/VALID
-//! padding), max/avg pooling, flatten and pre-ReLU residual-add layers:
-//! the `mlp-*` artifacts plus
+//! Models built from dense, conv2d (stride ≥ 1, SAME/VALID padding),
+//! batchnorm (folded into the conv for inference, batch-statistics
+//! normalization with running-stat tracking for training), strided 1×1
+//! `downsample` residual branches, max/avg pooling (including the
+//! global-average-pool head, `pool == oh`), flatten and pre-ReLU
+//! residual-add layers: the `mlp-*` artifacts plus
 //! [`Manifest::synthetic_mlp`](crate::runtime::Manifest::synthetic_mlp),
-//! [`Manifest::synthetic_lenet`](crate::runtime::Manifest::synthetic_lenet)
+//! [`Manifest::synthetic_lenet`](crate::runtime::Manifest::synthetic_lenet),
+//! [`Manifest::synthetic_residual`](crate::runtime::Manifest::synthetic_residual),
+//! [`Manifest::synthetic_alexnet`](crate::runtime::Manifest::synthetic_alexnet)
 //! and
-//! [`Manifest::synthetic_residual`](crate::runtime::Manifest::synthetic_residual).
+//! [`Manifest::synthetic_resnet`](crate::runtime::Manifest::synthetic_resnet).
 //! The [`plan`] lowerer maps each manifest onto this op set up front;
-//! anything else (batch-norm state, unknown layer kinds, conv logits
-//! heads) makes `NativeModel::from_manifest` fail with a typed
-//! [`UnsupportedOp`] error rather than silently mis-executing. Conv layers
+//! anything else (unknown layer kinds, exotic padding/pool modes, conv
+//! logits heads, malformed batchnorm wiring) makes
+//! `NativeModel::from_manifest` fail with a typed [`UnsupportedOp`] or
+//! descriptive error rather than silently mis-executing. Conv layers
 //! run as im2col onto the same packed-GEMM panels the dense layers use
 //! (per-layer column buffers in the step arena), so the snapshot cache,
 //! the int8/int16/CSR dispatch and the serving freeze path apply to them
@@ -101,8 +107,10 @@ pub mod plan;
 mod step;
 
 pub use gemm::IntSimd;
-pub use ops::{fake_quant, fake_quant_ste, QRow};
-pub use plan::{lower_manifest, ConvGeom, LayerPlan, ModelPlan, PoolKind, UnsupportedOp};
+pub use ops::{bn_fold, fake_quant, fake_quant_ste, QRow, BN_EPS};
+pub use plan::{
+    lower_manifest, ConvGeom, LayerParams, LayerPlan, ModelPlan, PoolKind, UnsupportedOp,
+};
 pub use step::{
     mlp_dims, sparse_crossover, InferScratch, ModelSnapshot, NativeModel,
     SPARSE_CROSSOVER_DEFAULT,

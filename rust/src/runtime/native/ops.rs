@@ -335,6 +335,154 @@ pub fn sign(x: f32) -> f32 {
     }
 }
 
+/// Batchnorm epsilon (matches the Python AOT defs: `eps = 1e-5`).
+pub const BN_EPS: f32 = 1e-5;
+
+/// Training-mode batchnorm over the channel-minor `rows × co` GEMM output,
+/// in place: biased batch statistics (two serial row-ascending passes —
+/// bit-deterministic for any worker count because it never fans out),
+/// normalized activations scaled by gamma and shifted by beta. Stores
+/// `xhat` (normalized pre-scale values) and `k = gamma·inv_std` for the
+/// backward pass, and returns `(batch_mean, batch_var)` so the caller can
+/// fold them into the running statistics. Every operation is a separate
+/// f32 rounding (multiply then add, no FMA) so the numpy golden mirror can
+/// reproduce the trajectory bit for bit.
+pub fn bn_forward_train(
+    z: &mut [f32],
+    rows: usize,
+    co: usize,
+    gamma: &[f32],
+    beta: &[f32],
+    xhat: &mut Vec<f32>,
+    k: &mut Vec<f32>,
+) -> (Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(z.len(), rows * co);
+    debug_assert_eq!(gamma.len(), co);
+    debug_assert_eq!(beta.len(), co);
+    let inv_n = 1.0f32 / rows as f32;
+    let mut mean = vec![0.0f32; co];
+    for r in 0..rows {
+        for (m, &v) in mean.iter_mut().zip(&z[r * co..(r + 1) * co]) {
+            *m += v;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m *= inv_n;
+    }
+    let mut var = vec![0.0f32; co];
+    for r in 0..rows {
+        let row = &z[r * co..(r + 1) * co];
+        for c in 0..co {
+            let d = row[c] - mean[c];
+            var[c] += d * d;
+        }
+    }
+    for v in var.iter_mut() {
+        *v *= inv_n;
+    }
+    let mut inv_std = vec![0.0f32; co];
+    k.clear();
+    k.resize(co, 0.0);
+    for c in 0..co {
+        let s = (var[c] + BN_EPS).sqrt();
+        inv_std[c] = 1.0 / s;
+        k[c] = gamma[c] * inv_std[c];
+    }
+    xhat.clear();
+    xhat.resize(rows * co, 0.0);
+    for r in 0..rows {
+        for c in 0..co {
+            let i = r * co + c;
+            let xh = (z[i] - mean[c]) * inv_std[c];
+            xhat[i] = xh;
+            let t = xh * gamma[c];
+            z[i] = t + beta[c];
+        }
+    }
+    (mean, var)
+}
+
+/// Batchnorm backward over the channel-minor `rows × co` gradient, in
+/// place: `g` enters as dL/dy and leaves as dL/dz (the pre-BN GEMM
+/// output). Uses the stored `xhat` / `k = gamma·inv_std` from
+/// [`bn_forward_train`]; returns `(dgamma, dbeta)`. Serial row-ascending
+/// folds, no FMA — same mirrorability contract as the forward pass.
+pub fn bn_backward(
+    g: &mut [f32],
+    rows: usize,
+    co: usize,
+    xhat: &[f32],
+    k: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(g.len(), rows * co);
+    debug_assert_eq!(xhat.len(), rows * co);
+    debug_assert_eq!(k.len(), co);
+    let inv_n = 1.0f32 / rows as f32;
+    let mut sdy = vec![0.0f32; co];
+    let mut sdyx = vec![0.0f32; co];
+    for r in 0..rows {
+        for c in 0..co {
+            let i = r * co + c;
+            let dy = g[i];
+            sdy[c] += dy;
+            sdyx[c] += dy * xhat[i];
+        }
+    }
+    let mut c1 = vec![0.0f32; co];
+    let mut c2 = vec![0.0f32; co];
+    for c in 0..co {
+        c1[c] = sdy[c] * inv_n;
+        c2[c] = sdyx[c] * inv_n;
+    }
+    for r in 0..rows {
+        for c in 0..co {
+            let i = r * co + c;
+            let t1 = g[i] - c1[c];
+            let t2 = xhat[i] * c2[c];
+            g[i] = (t1 - t2) * k[c];
+        }
+    }
+    (sdyx, sdy)
+}
+
+/// Fold frozen batchnorm statistics into a conv kernel + bias for
+/// inference/serving: `W'[d,c] = W[d,c]·s[c]`, `b'[c] = beta[c] −
+/// mean[c]·s[c]` with `s = gamma / sqrt(var + eps)`. The folded kernel
+/// then flows through the unchanged quantize/pack/CSR dispatch — the
+/// snapshot cache keys on the folded bits, so any gamma/beta/stat change
+/// re-packs exactly the layers it touched.
+#[allow(clippy::too_many_arguments)]
+pub fn bn_fold(
+    kernel: &[f32],
+    depth: usize,
+    co: usize,
+    gamma: &[f32],
+    beta: &[f32],
+    mean: &[f32],
+    var: &[f32],
+    out_w: &mut Vec<f32>,
+    out_b: &mut Vec<f32>,
+) {
+    debug_assert_eq!(kernel.len(), depth * co);
+    let mut s = vec![0.0f32; co];
+    for c in 0..co {
+        let inv = 1.0 / (var[c] + BN_EPS).sqrt();
+        s[c] = gamma[c] * inv;
+    }
+    out_w.clear();
+    out_w.resize(depth * co, 0.0);
+    for d in 0..depth {
+        for c in 0..co {
+            out_w[d * co + c] = kernel[d * co + c] * s[c];
+        }
+    }
+    out_b.clear();
+    out_b.resize(co, 0.0);
+    for c in 0..co {
+        out_b[c] = beta[c] - mean[c] * s[c];
+    }
+}
+
 /// Softmax cross-entropy with logits: returns (mean CE, top-1 accuracy,
 /// dCE/dlogits). The gradient is `(softmax - onehot) / batch`, i.e. the
 /// gradient of the MEAN cross-entropy, matching the compiled L2 step.
@@ -538,5 +686,106 @@ mod tests {
         let mut zb = vec![0.0f32; 4];
         add_bias_inplace(&mut zb, &[1.0, 2.0], 2, 2);
         assert_eq!(zb, vec![1.0, 2.0, 1.0, 2.0]);
+    }
+
+    /// bn_forward_train normalizes each channel to (near) zero mean / unit
+    /// variance before gamma/beta, returns the biased batch statistics, and
+    /// the identity transform (gamma=1, beta=0) leaves standardized data
+    /// almost unchanged.
+    #[test]
+    fn bn_forward_statistics() {
+        // 4 rows × 2 channels; channel 0 has mean 2.5, channel 1 mean -1.0
+        let mut z = vec![1.0f32, -1.0, 2.0, -3.0, 3.0, 1.0, 4.0, -1.0];
+        let gamma = [2.0f32, 1.0];
+        let beta = [0.5f32, 0.0];
+        let (mut xhat, mut k) = (Vec::new(), Vec::new());
+        let (mean, var) = bn_forward_train(&mut z, 4, 2, &gamma, &beta, &mut xhat, &mut k);
+        assert_eq!(mean, vec![2.5, -1.0]);
+        assert_eq!(var, vec![1.25, 2.0]);
+        // out = gamma·xhat + beta, with xhat standardized per channel
+        for c in 0..2 {
+            let (mut s, mut sq) = (0.0f64, 0.0f64);
+            for r in 0..4 {
+                let xh = xhat[r * 2 + c] as f64;
+                s += xh;
+                sq += xh * xh;
+                let want = xhat[r * 2 + c] * gamma[c] + beta[c];
+                assert!((z[r * 2 + c] - want).abs() < 1e-6);
+            }
+            assert!(s.abs() < 1e-5, "channel {c} xhat mean {s}");
+            assert!((sq / 4.0 - 1.0).abs() < 1e-3, "channel {c} xhat var {sq}");
+        }
+        assert!((k[0] - 2.0 / (1.25f32 + BN_EPS).sqrt()).abs() < 1e-6);
+    }
+
+    /// bn_backward against central finite differences of the full
+    /// forward: dL/dz, dgamma and dbeta for L = Σ w·bn(z) all match.
+    #[test]
+    fn bn_backward_matches_finite_differences() {
+        let rows = 3;
+        let co = 2;
+        let z0 = vec![0.3f32, -1.2, 1.7, 0.4, -0.6, 2.2];
+        let gamma = [1.3f32, 0.7];
+        let beta = [0.1f32, -0.2];
+        // loss = Σ w[i]·y[i] with fixed weights => dL/dy = w
+        let w: Vec<f32> = (0..rows * co).map(|i| 0.3 + 0.1 * i as f32).collect();
+        let fwd = |z: &[f32], gamma: &[f32], beta: &[f32]| -> f32 {
+            let mut zz = z.to_vec();
+            let (mut xh, mut kk) = (Vec::new(), Vec::new());
+            bn_forward_train(&mut zz, rows, co, gamma, beta, &mut xh, &mut kk);
+            zz.iter().zip(&w).map(|(&y, &wi)| y * wi).sum()
+        };
+        let mut z = z0.clone();
+        let (mut xhat, mut k) = (Vec::new(), Vec::new());
+        bn_forward_train(&mut z, rows, co, &gamma, &beta, &mut xhat, &mut k);
+        let mut g = w.clone();
+        let (dgamma, dbeta) = bn_backward(&mut g, rows, co, &xhat, &k);
+        let h = 1e-3f32;
+        for i in 0..rows * co {
+            let mut zp = z0.clone();
+            let mut zm = z0.clone();
+            zp[i] += h;
+            zm[i] -= h;
+            let num = (fwd(&zp, &gamma, &beta) - fwd(&zm, &gamma, &beta)) / (2.0 * h);
+            assert!((g[i] - num).abs() < 2e-2, "dz[{i}]: {} vs {num}", g[i]);
+        }
+        for c in 0..co {
+            let mut gp = gamma;
+            let mut gm = gamma;
+            gp[c] += h;
+            gm[c] -= h;
+            let num = (fwd(&z0, &gp, &beta) - fwd(&z0, &gm, &beta)) / (2.0 * h);
+            assert!((dgamma[c] - num).abs() < 2e-2, "dgamma[{c}]");
+            let mut bp = beta;
+            let mut bm = beta;
+            bp[c] += h;
+            bm[c] -= h;
+            let num = (fwd(&z0, &gamma, &bp) - fwd(&z0, &gamma, &bm)) / (2.0 * h);
+            assert!((dbeta[c] - num).abs() < 2e-2, "dbeta[{c}]");
+        }
+    }
+
+    /// Folding frozen stats into the kernel+bias reproduces the explicit
+    /// inference-mode BN: conv(x)·s + (beta − mean·s) == bn(conv(x)).
+    #[test]
+    fn bn_fold_matches_explicit_normalization() {
+        let depth = 3;
+        let co = 2;
+        let kernel: Vec<f32> = (0..depth * co).map(|i| (i as f32 * 0.37).sin()).collect();
+        let gamma = [1.5f32, 0.8];
+        let beta = [0.2f32, -0.4];
+        let mean = [0.6f32, -0.3];
+        let var = [2.0f32, 0.5];
+        let (mut fw, mut fb) = (Vec::new(), Vec::new());
+        bn_fold(&kernel, depth, co, &gamma, &beta, &mean, &var, &mut fw, &mut fb);
+        // one input column; z = x·W, then inference BN vs folded conv
+        let x = [0.9f32, -1.1, 0.4];
+        for c in 0..co {
+            let z: f32 = (0..depth).map(|d| x[d] * kernel[d * co + c]).sum();
+            let zf: f32 = (0..depth).map(|d| x[d] * fw[d * co + c]).sum::<f32>() + fb[c];
+            let s = gamma[c] / (var[c] + BN_EPS).sqrt();
+            let want = (z - mean[c]) * s + beta[c];
+            assert!((zf - want).abs() < 1e-5, "channel {c}: {zf} vs {want}");
+        }
     }
 }

@@ -6,10 +6,16 @@
 //! Every layer lowers to ONE GEMM: dense layers verbatim, conv layers via
 //! im2col — the column matrix `[b·oh·ow, kh·kw·ci]` times the HWIO kernel
 //! viewed row-major as `[kh·kw·ci, co]` (the natural 2-D view of the 4-D
-//! tensor, no reshuffle needed). Pooling, the residual skip-add and the
-//! activation fake-quant are separate post-GEMM ops ordered exactly as the
-//! L2 model functions apply them: conv+bias → (+skip) → ReLU → pool →
-//! quantize (`python/compile/models/lenet.py`, `resnet.py`).
+//! tensor, no reshuffle needed). The per-layer epilogue is ordered exactly
+//! as the L2 model functions apply it: conv → bias-or-batchnorm → (+skip)
+//! → ReLU → pool → quantize (`python/compile/models/lenet.py`,
+//! `resnet.py`). The ResNet `downsample` kind lowers to a strided 1×1
+//! conv marked as a *branch*: its output feeds only the later residual
+//! skip-add, and the following layer reads the branch's own input slot
+//! (see [`ModelPlan::src`]). A global-average-pool head is just `pool ==
+//! oh` with `ph = pw = 1`. Parameter interleaving — `(kernel, bias)` or
+//! `(kernel, gamma, beta)` + two running-stat tensors per batchnorm layer
+//! — is resolved once here into [`LayerParams`] index wiring.
 //!
 //! Manifests the interpreter cannot execute are rejected with a typed
 //! [`UnsupportedOp`] (downcastable from the `anyhow` chain) instead of a
@@ -22,10 +28,10 @@ use anyhow::{anyhow, Result};
 
 use super::super::manifest::Manifest;
 
-/// A manifest op the native interpreter does not implement (e.g. the
-/// ResNet `downsample` 1×1 projection, batchnorm, or an unknown layer
-/// kind). Carried as the error source so callers can distinguish
-/// "unsupported model" from "malformed manifest".
+/// A manifest op the native interpreter does not implement (an unknown
+/// layer kind, an exotic padding or pool mode, conv after flatten).
+/// Carried as the error source so callers can distinguish "unsupported
+/// model" from "malformed manifest".
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct UnsupportedOp {
     /// The offending op/kind (e.g. `"downsample"`, `"batchnorm"`).
@@ -81,9 +87,15 @@ pub struct ConvGeom {
     pub ph: usize,
     pub pw: usize,
     /// `Some(j)`: layer j's output (`acts[j+1]`, shape `oh × ow × co`) is
-    /// added to the conv result BEFORE the ReLU — the BN-free residual
-    /// skip-add.
+    /// added to the conv result BEFORE the ReLU — the residual skip-add.
     pub residual_from: Option<usize>,
+    /// Apply ReLU after the (bias-or-BN + skip) epilogue. False only for
+    /// the `downsample` 1×1 residual projection, which is linear.
+    pub relu: bool,
+    /// This layer is a residual *branch* (`downsample`): its output feeds
+    /// only later `residual_from` skip-adds, and the next layer reads this
+    /// layer's own input slot instead of its output.
+    pub branch: bool,
 }
 
 impl ConvGeom {
@@ -120,23 +132,77 @@ pub enum LayerPlan {
     Conv(ConvGeom),
 }
 
+/// Parameter/state wiring of one lowered layer: indices into
+/// `man.params` (kernel, optional bias, optional batchnorm gamma/beta)
+/// and into `man.bn_state` (running mean/var), resolved once at lowering
+/// time so the interpreters, the snapshot packer and the serving freeze
+/// never re-derive the interleaving.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerParams {
+    /// Index of the quantizable kernel in `man.params`.
+    pub kernel: usize,
+    /// Index of the additive bias in `man.params` (absent on BN layers).
+    pub bias: Option<usize>,
+    /// `(gamma, beta)` indices in `man.params` for batchnorm layers.
+    pub bn_gb: Option<(usize, usize)>,
+    /// `(mean, var)` indices in `man.bn_state` for batchnorm layers.
+    pub bn_mv: Option<(usize, usize)>,
+}
+
+impl LayerParams {
+    pub fn has_bn(&self) -> bool {
+        self.bn_gb.is_some()
+    }
+}
+
 /// The lowered model: what [`super::NativeModel`] interprets and
 /// [`super::ModelSnapshot`] packs. Produced by [`lower_manifest`].
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ModelPlan {
     pub layers: Vec<LayerPlan>,
+    /// Per-layer parameter wiring, same length as `layers`.
+    pub params: Vec<LayerParams>,
 }
 
 impl ModelPlan {
     /// An all-dense plan from explicit `(fan_in, fan_out)` pairs — the MLP
     /// shape, used by kernel-level tests and benches that bypass manifests.
+    /// Uses the canonical `(kernel, bias)` interleaving.
     pub fn all_dense(dims: &[(usize, usize)]) -> ModelPlan {
         ModelPlan {
             layers: dims
                 .iter()
                 .map(|&(di, do_)| LayerPlan::Dense { di, do_ })
                 .collect(),
+            params: (0..dims.len())
+                .map(|i| LayerParams {
+                    kernel: 2 * i,
+                    bias: Some(2 * i + 1),
+                    bn_gb: None,
+                    bn_mv: None,
+                })
+                .collect(),
         }
+    }
+
+    /// Activation slot read by layer `i` (slot `s` holds the output of
+    /// layer `s-1`; slot 0 is the input batch). Normally `i`; when layer
+    /// `i-1` is a downsample branch, its output feeds only the skip edge,
+    /// so layer `i` reads the branch's own input slot `i-1`.
+    pub fn src(&self, i: usize) -> usize {
+        if i > 0 {
+            if let LayerPlan::Conv(g) = &self.layers[i - 1] {
+                if g.branch {
+                    return i - 1;
+                }
+            }
+        }
+        i
+    }
+
+    /// Whether any lowered layer carries batchnorm state.
+    pub fn has_bn(&self) -> bool {
+        self.params.iter().any(|p| p.has_bn())
     }
 
     pub fn num_layers(&self) -> usize {
@@ -186,11 +252,13 @@ impl ModelPlan {
     }
 }
 
-/// Validate `man` and lower it to a [`ModelPlan`]: an MLP/LeNet-style chain
-/// of conv (with optional pool / residual skip-add) and dense layers with
-/// the canonical (kernel, bias) parameter interleaving, BN-free, ending in
-/// a dense logits layer. Unsupported ops reject with a typed
-/// [`UnsupportedOp`]; shape inconsistencies with a plain error.
+/// Validate `man` and lower it to a [`ModelPlan`]: a chain of conv (with
+/// optional pool / residual skip-add / batchnorm), `downsample` residual
+/// branches and dense layers, ending in a dense logits layer. Each layer's
+/// kernel is followed in the param stream either by a bias or by a
+/// batchnorm `(gamma, beta)` pair with two matching running-stat tensors
+/// in `bn_state`. Unsupported ops reject with a typed [`UnsupportedOp`];
+/// shape inconsistencies with a plain error.
 ///
 /// Shared by `NativeModel::from_manifest` and the serving registry's
 /// [`freeze`](crate::serve::ServedModel::freeze), which snapshots models
@@ -200,17 +268,21 @@ pub fn lower_manifest(man: &Manifest) -> Result<ModelPlan> {
     if l == 0 {
         return Err(anyhow!("manifest {} has no quantizable layers", man.name));
     }
-    if !man.bn_state.is_empty() {
-        return Err(unsupported("batchnorm", 0)
-            .context(format!("{} bn tensors in {}", man.bn_state.len(), man.name)));
-    }
-    if man.params.len() != 2 * l {
+    if man.layers.len() != l {
         return Err(anyhow!(
-            "native backend expects (kernel, bias) per layer: {} params for {l} layers",
-            man.params.len()
+            "manifest {}: {} layer descriptors for {l} layers",
+            man.name,
+            man.layers.len()
         ));
     }
     let mut layers: Vec<LayerPlan> = Vec::with_capacity(l);
+    let mut lparams: Vec<LayerParams> = Vec::with_capacity(l);
+    // cursors into the param stream and the bn running-state stream; the
+    // per-layer wiring is whatever the streams say, validated as we walk
+    let mut pc = 0usize;
+    let mut bc = 0usize;
+    // downsample branches whose output no residual_from has consumed yet
+    let mut open_branches: Vec<usize> = Vec::new();
     // spatial shape while it exists (lost at the first dense layer) plus
     // the flat width, which is what dense fan-in checks against
     let mut hwc: Option<(usize, usize, usize)> = match man.input_shape[..] {
@@ -220,11 +292,71 @@ pub fn lower_manifest(man: &Manifest) -> Result<ModelPlan> {
     let mut d_in = man.input_shape.iter().product::<usize>();
     for i in 0..l {
         let desc = &man.layers[i];
-        let kernel = &man.params[2 * i];
-        let bias = &man.params[2 * i + 1];
+        let kernel = man
+            .params
+            .get(pc)
+            .ok_or_else(|| anyhow!("layer {i}: param stream exhausted before kernel"))?;
         if !kernel.quantizable || kernel.layer != i as i64 {
             return Err(anyhow!("param {} is not the layer-{i} kernel", kernel.name));
         }
+        let ki = pc;
+        pc += 1;
+        // epilogue params: a bias, or a batchnorm (gamma, beta) pair that
+        // claims the next two running-stat tensors (mean, var)
+        let (bias_idx, bn_gb, bn_mv) = match man.params.get(pc).map(|p| p.kind.as_str()) {
+            Some("bias") => {
+                pc += 1;
+                (Some(pc - 1), None, None)
+            }
+            Some("gamma") => {
+                let gi = pc;
+                if man.params.get(pc + 1).map(|p| p.kind.as_str()) != Some("beta") {
+                    return Err(anyhow!("layer {i}: gamma param without a beta param"));
+                }
+                pc += 2;
+                if bc + 2 > man.bn_state.len() {
+                    return Err(anyhow!(
+                        "layer {i}: batchnorm without running (mean, var) bn_state tensors"
+                    ));
+                }
+                bc += 2;
+                (None, Some((gi, gi + 1)), Some((bc - 2, bc - 1)))
+            }
+            _ => {
+                return Err(anyhow!(
+                    "layer {i}: kernel {} not followed by a bias or gamma param",
+                    kernel.name
+                ))
+            }
+        };
+        // per-channel epilogue tensors must all be f32[width]; checked
+        // once the layer width is known below
+        let check_epilogue = |width: usize| -> Result<()> {
+            if let Some(bi) = bias_idx {
+                let b = &man.params[bi];
+                if b.quantizable || b.shape != vec![width] {
+                    return Err(anyhow!("param {} is not the layer-{i} bias", b.name));
+                }
+            }
+            if let Some((gi, bi)) = bn_gb {
+                for p in [&man.params[gi], &man.params[bi]] {
+                    if p.quantizable || p.shape != vec![width] {
+                        return Err(anyhow!("param {} is not a layer-{i} bn scale/shift", p.name));
+                    }
+                }
+            }
+            if let Some((mi, vi)) = bn_mv {
+                for s in [&man.bn_state[mi], &man.bn_state[vi]] {
+                    if s.shape != vec![width] {
+                        return Err(anyhow!(
+                            "bn_state {} is not the layer-{i} running stat",
+                            s.name
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        };
         match desc.kind.as_str() {
             "dense" => {
                 if kernel.shape.len() != 2 {
@@ -237,14 +369,16 @@ pub fn lower_manifest(man: &Manifest) -> Result<ModelPlan> {
                 if fan_in != d_in {
                     return Err(anyhow!("layer {i} fan_in {fan_in} != upstream width {d_in}"));
                 }
-                if bias.quantizable || bias.shape != vec![fan_out] {
-                    return Err(anyhow!("param {} is not the layer-{i} bias", bias.name));
+                if bias_idx.is_none() {
+                    return Err(anyhow!("layer {i}: dense layers take a bias, not batchnorm"));
                 }
+                check_epilogue(fan_out)?;
                 layers.push(LayerPlan::Dense { di: fan_in, do_: fan_out });
                 d_in = fan_out;
                 hwc = None;
             }
-            "conv" => {
+            kind @ ("conv" | "downsample") => {
+                let is_branch = kind == "downsample";
                 let (ih, iw, ci) = hwc.ok_or_else(|| unsupported("conv-after-dense", i))?;
                 let [kh, kw, kci, co] = kernel.shape[..] else {
                     return Err(anyhow!(
@@ -257,9 +391,12 @@ pub fn lower_manifest(man: &Manifest) -> Result<ModelPlan> {
                         "layer {i} kernel expects {kci} input channels, upstream has {ci}"
                     ));
                 }
-                if bias.quantizable || bias.shape != vec![co] {
-                    return Err(anyhow!("param {} is not the layer-{i} bias", bias.name));
+                if is_branch && (kh, kw) != (1, 1) {
+                    return Err(anyhow!(
+                        "layer {i}: downsample must be a 1x1 projection, got {kh}x{kw}"
+                    ));
                 }
+                check_epilogue(co)?;
                 let stride = desc.stride;
                 if stride == 0 {
                     return Err(anyhow!("layer {i} stride 0"));
@@ -296,8 +433,16 @@ pub fn lower_manifest(man: &Manifest) -> Result<ModelPlan> {
                         "layer {i}: pool {pool} does not tile the {oh}x{ow} conv output"
                     ));
                 }
+                if is_branch && pool != 1 {
+                    return Err(anyhow!("layer {i}: downsample cannot pool"));
+                }
                 let (ph, pw) = (oh / pool, ow / pool);
                 let residual_from = if desc.residual_from >= 0 {
+                    if is_branch {
+                        return Err(anyhow!(
+                            "layer {i}: downsample is a residual branch; it cannot consume a skip"
+                        ));
+                    }
                     let j = desc.residual_from as usize;
                     if j >= i {
                         return Err(anyhow!("layer {i} residual_from {j} is not an earlier layer"));
@@ -312,10 +457,19 @@ pub fn lower_manifest(man: &Manifest) -> Result<ModelPlan> {
                             ))
                         }
                     }
+                    open_branches.retain(|&b| b != j);
                     Some(j)
                 } else {
                     None
                 };
+                if is_branch {
+                    if i + 1 >= l || man.layers[i + 1].kind != "conv" {
+                        return Err(anyhow!(
+                            "layer {i}: downsample branch must be followed by the conv it shadows"
+                        ));
+                    }
+                    open_branches.push(i);
+                }
                 layers.push(LayerPlan::Conv(ConvGeom {
                     ih,
                     iw,
@@ -333,12 +487,36 @@ pub fn lower_manifest(man: &Manifest) -> Result<ModelPlan> {
                     ph,
                     pw,
                     residual_from,
+                    relu: !is_branch,
+                    branch: is_branch,
                 }));
-                hwc = Some((ph, pw, co));
-                d_in = ph * pw * co;
+                if !is_branch {
+                    // a branch's output feeds only skip edges: the next
+                    // layer keeps reading the branch's own input shape
+                    hwc = Some((ph, pw, co));
+                    d_in = ph * pw * co;
+                }
             }
             other => return Err(unsupported(other, i)),
         }
+        lparams.push(LayerParams { kernel: ki, bias: bias_idx, bn_gb, bn_mv });
+    }
+    if pc != man.params.len() {
+        return Err(anyhow!(
+            "{} trailing params not consumed by any layer",
+            man.params.len() - pc
+        ));
+    }
+    if bc != man.bn_state.len() {
+        return Err(anyhow!(
+            "{} dangling bn_state tensors not claimed by any batchnorm layer",
+            man.bn_state.len() - bc
+        ));
+    }
+    if let Some(&b) = open_branches.first() {
+        return Err(anyhow!(
+            "downsample branch at layer {b} has no residual consumer"
+        ));
     }
     if !matches!(layers[l - 1], LayerPlan::Dense { .. }) {
         // logits come from a dense head everywhere in the model zoo; a
@@ -348,7 +526,7 @@ pub fn lower_manifest(man: &Manifest) -> Result<ModelPlan> {
     if d_in != man.classes {
         return Err(anyhow!("final layer width {d_in} != {} classes", man.classes));
     }
-    Ok(ModelPlan { layers })
+    Ok(ModelPlan { layers, params: lparams })
 }
 
 #[cfg(test)]
@@ -389,14 +567,71 @@ mod tests {
     }
 
     #[test]
+    fn lowers_the_synthetic_resnet() {
+        let man = Manifest::synthetic_resnet("prn", 16);
+        let plan = lower_manifest(&man).unwrap();
+        assert_eq!(plan.num_layers(), 7);
+        assert!(plan.has_bn());
+        // stem + block 1: 8x8 SAME convs, skip into layer 2
+        let g2 = plan.conv(2).expect("layer 2 is conv");
+        assert_eq!(g2.residual_from, Some(0));
+        assert!(g2.relu && !g2.branch);
+        // downsample branch: strided 1x1 projection, linear, no pool
+        let g3 = plan.conv(3).expect("layer 3 is the downsample");
+        assert!(g3.branch && !g3.relu);
+        assert_eq!((g3.kh, g3.kw, g3.stride), (1, 1, 2));
+        assert_eq!((g3.oh, g3.ow, g3.co), (4, 4, 16));
+        assert_eq!((g3.pad_top, g3.pad_left), (0, 0), "1x1 stride-2 SAME on 8x8 pads nothing");
+        // the conv the branch shadows reads the branch's own input slot
+        assert_eq!(plan.src(4), 3);
+        assert_eq!(plan.src(3), 3);
+        assert_eq!(plan.src(5), 5);
+        let g4 = plan.conv(4).expect("layer 4 is conv");
+        assert_eq!((g4.ih, g4.stride, g4.oh), (8, 2, 4));
+        assert_eq!(
+            (g4.pad_top, g4.pad_left),
+            (0, 0),
+            "odd pad_total puts the extra row bottom/right"
+        );
+        // global-average-pool head: pool == oh, 1x1 output
+        let g5 = plan.conv(5).expect("layer 5 is conv");
+        assert_eq!(g5.residual_from, Some(3), "skip from the downsample output");
+        assert_eq!((g5.pool, g5.ph, g5.pw), (4, 1, 1));
+        assert_eq!(g5.pool_kind, PoolKind::Avg);
+        assert_eq!(plan.in_elems(6), 16);
+        // param wiring: (kernel, gamma, beta) per bn conv, (kernel, bias) fc
+        let p0 = &plan.params[0];
+        assert_eq!((p0.kernel, p0.bias, p0.bn_gb, p0.bn_mv), (0, None, Some((1, 2)), Some((0, 1))));
+        let p5 = &plan.params[5];
+        assert_eq!((p5.kernel, p5.bn_mv), (15, Some((10, 11))));
+        let p6 = &plan.params[6];
+        assert_eq!((p6.kernel, p6.bias, p6.bn_gb), (18, Some(19), None));
+    }
+
+    #[test]
+    fn lowers_the_synthetic_alexnet() {
+        let man = Manifest::synthetic_alexnet("pa", 16);
+        let plan = lower_manifest(&man).unwrap();
+        assert_eq!(plan.num_layers(), 8);
+        assert!(!plan.has_bn());
+        let g4 = plan.conv(4).expect("layer 4 is conv");
+        assert_eq!((g4.pool, g4.ph, g4.pw, g4.co), (2, 2, 2, 16));
+        assert_eq!(plan.in_elems(5), 64, "flatten into the fc stack");
+        assert_eq!(plan.out_elems(7), 10);
+        for i in 0..8 {
+            assert_eq!(plan.src(i), i, "no branches in the alexnet");
+        }
+    }
+
+    #[test]
     fn rejects_unsupported_ops_with_typed_error() {
         let mut man = Manifest::synthetic_lenet("px", 16);
-        man.layers[1].kind = "downsample".into();
+        man.layers[1].kind = "attention".into();
         let err = lower_manifest(&man).unwrap_err();
         let op = err
             .downcast_ref::<UnsupportedOp>()
             .expect("typed UnsupportedOp");
-        assert_eq!(op.op, "downsample");
+        assert_eq!(op.op, "attention");
         assert_eq!(op.layer, 1);
 
         let mut man2 = Manifest::synthetic_lenet("py", 16);
@@ -415,5 +650,30 @@ mod tests {
         let mut man2 = Manifest::synthetic_residual("pw", 16);
         man2.layers[1].residual_from = 2;
         assert!(lower_manifest(&man2).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_bn_and_branch_wiring() {
+        // bn_state tensors no batchnorm layer claims -> plain error, not typed
+        let mut man = Manifest::synthetic_lenet("pb", 16);
+        man.bn_state.push(crate::runtime::manifest::IoSpec {
+            name: "bn0.mean".into(),
+            shape: vec![6],
+            dtype: crate::runtime::manifest::Dtype::F32,
+        });
+        let err = lower_manifest(&man).unwrap_err();
+        assert!(err.downcast_ref::<UnsupportedOp>().is_none());
+        assert!(err.to_string().contains("dangling bn_state"));
+
+        // a downsample branch nothing consumes
+        let mut man2 = Manifest::synthetic_resnet("pc", 16);
+        man2.layers[5].residual_from = -1;
+        let err2 = lower_manifest(&man2).unwrap_err();
+        assert!(err2.to_string().contains("no residual consumer"));
+
+        // downsample must sit directly before the conv it shadows
+        let mut man3 = Manifest::synthetic_resnet("pd", 16);
+        man3.layers[4].kind = "attention".into();
+        assert!(lower_manifest(&man3).is_err());
     }
 }

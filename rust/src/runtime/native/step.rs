@@ -3,8 +3,9 @@
 //! `models/` zoo), driven directly by the manifest. Layers execute over the
 //! [`super::plan::ModelPlan`] lowering: dense layers as one GEMM, conv
 //! layers as im2col → the SAME packed GEMM (the HWIO kernel's row-major 2-D
-//! view is the B panel) → skip-add/ReLU/pool/fake-quant, with backward
-//! through col2im and the pooling adjoints ([`super::conv`]).
+//! view is the B panel) → batchnorm/skip-add/ReLU/pool/fake-quant, with
+//! backward through col2im, the pooling adjoints ([`super::conv`]) and the
+//! batchnorm adjoint ([`super::ops::bn_backward`]).
 //!
 //! Per step (alg. 1 ln. 5-11):
 //!
@@ -13,10 +14,16 @@
 //!    last layer; activations — logits included — are quantized), run on
 //!    the blocked+packed GEMM suite ([`super::gemm`]) with the bias/ReLU/
 //!    fake-quant epilogue fused into the same parallel tasks for dense
-//!    layers. Conv layers fuse bias/ReLU into the GEMM and apply pooling
-//!    and the activation fake-quant as separate deterministic passes
-//!    (`h = Q_a(pool(relu(conv(h) [+ skip])))`), because the pool sits
-//!    between the ReLU and the quantizer;
+//!    layers. Conv layers fuse bias/ReLU into the GEMM (when no batchnorm
+//!    or skip intervenes) and apply batchnorm, pooling and the activation
+//!    fake-quant as separate deterministic passes
+//!    (`h = Q_a(pool(relu(bn?(conv(h)) [+ skip])))`), because those sit
+//!    between the GEMM and the quantizer. Batchnorm layers normalize with
+//!    batch statistics and fold them into the manifest's running
+//!    (mean, var) `bn_state` tensors with momentum `hyper[6]`; downsample
+//!    branch layers are linear (no ReLU, no pool) strided 1×1 convs whose
+//!    successor reads the SAME input slot, feeding the pre-ReLU skip-add
+//!    of a later residual consumer;
 //! 3. loss = CE + α‖W‖₁ + β/2‖W‖₂² + P (P is the stop-gradient WL/32·sp
 //!    penalty of sec. 3.4);
 //! 4. backward through the STE masks and ReLU;
@@ -69,7 +76,15 @@
 //!   never pays the O(model) key comparison for a doomed match.
 //!
 //! Biases are never baked into the snapshot: bias-only changes reuse every
-//! pack. Activation rows enter the fused epilogues from each call's
+//! pack. Batchnorm layers are the one nuance: their gamma/beta/running
+//! stats fold into the kernel+bias BEFORE quantize/pack
+//! ([`super::ops::bn_fold`]), so the cache key — which hashes the FOLDED
+//! kernel bits — re-packs a layer whenever any of its BN parameters move,
+//! and the i8/i16/CSR dispatch below sees an ordinary conv. (Fold-before-
+//! quantize is the standard deployment transform; it means BN layers'
+//! infer path is not bit-identical to their training forward, which
+//! normalizes the f32 GEMM output directly.) Activation rows enter the
+//! fused epilogues from each call's
 //! inputs, but a layer's INPUT activation row is additionally frozen into
 //! its integer pack (the stored codes assume that row's `2^FL_a` grid), so
 //! changing activation row `l+i-1` re-packs downstream layer `i` — and
@@ -542,7 +557,10 @@ impl ModelSnapshot {
             // the input activation row an integer pack would have frozen
             let in_row_idx = if i >= 1 { Some(l + i - 1) } else { None };
             let (head, tail) = acts.split_at_mut(i);
-            let src: &[f32] = if i == 0 { x } else { &head[i - 1] };
+            // input slot via the plan (a downsample branch's successor
+            // reads the branch's own input, not its output)
+            let s_idx = self.plan.src(i);
+            let src: &[f32] = if s_idx == 0 { x } else { &head[s_idx - 1] };
             match &self.plan.layers[i] {
                 LayerPlan::Dense { .. } => {
                     let relu = i + 1 < l;
@@ -561,11 +579,14 @@ impl ModelSnapshot {
                     reuse(conv_out, m * do_);
                     reuse(z, m * do_);
                     // bias + ReLU fuse into the GEMM exactly as on the
-                    // training path; the fake-quant epilogue is disarmed
+                    // training path (for batchnorm layers the caller hands
+                    // in the FOLDED kernel/bias, so the pack/dispatch is
+                    // oblivious to BN); the fake-quant epilogue is disarmed
                     // with a passthrough row (disabled -> pure copy into
                     // `conv_out`) because pooling must happen pre-quant. A
-                    // residual layer defers the ReLU past the skip-add.
-                    let fused_relu = g.residual_from.is_none();
+                    // residual layer defers the ReLU past the skip-add; a
+                    // downsample branch is linear (`relu == false`).
+                    let fused_relu = g.relu && g.residual_from.is_none();
                     let pass = ops::QRow::passthrough();
                     snap_gemm(
                         pool, &self.kernels[i], qparams, in_row_idx, m, di, do_, cols,
@@ -576,7 +597,9 @@ impl ModelSnapshot {
                         for (v, &sk) in conv_out.iter_mut().zip(head[j].iter()) {
                             *v += sk;
                         }
-                        ops::relu_inplace(conv_out);
+                        if g.relu {
+                            ops::relu_inplace(conv_out);
+                        }
                     }
                     let pre_quant: &[f32] = if g.pool > 1 {
                         reuse(pooled, b * g.out_elems());
@@ -780,6 +803,14 @@ pub(crate) struct StepArena {
     /// Weight/bias gradient buffers.
     dw: Vec<f32>,
     db: Vec<f32>,
+    /// Batchnorm backward state, BN layers only: the normalized
+    /// activations `xhat` and the per-channel `k = gamma·inv_std` of the
+    /// forward pass.
+    bn_xhat: Vec<Vec<f32>>,
+    bn_k: Vec<Vec<f32>>,
+    /// BN-folded kernel/bias per layer (inference; empty on non-BN layers).
+    fold_w: Vec<Vec<f32>>,
+    fold_b: Vec<Vec<f32>>,
     /// Snapshot forward scratch (inference).
     infer: InferScratch,
     /// The persistent cross-call pack/CSR cache (module docs). `None`
@@ -838,13 +869,20 @@ impl NativeModel {
     /// Training forward pass, entirely on arena buffers: expects `ar.wq`
     /// filled per layer and `ar.acts[0]` holding the input batch; leaves
     /// `ar.acts[i+1]` holding layer i's quantized output and
-    /// `ar.pre_q`/`ar.mask_a`/`ar.cols` the backward state. Appends the
-    /// pre-quant max |·| per layer to `act_absmax`.
+    /// `ar.pre_q`/`ar.mask_a`/`ar.cols`/`ar.bn_xhat` the backward state.
+    /// Batchnorm layers normalize the GEMM output in place with batch
+    /// statistics and fold them into `bn_out` running stats (`new = (1−m)·
+    /// old + m·batch`, `m = momentum`). Appends the pre-quant max |·| per
+    /// layer to `act_absmax`.
+    #[allow(clippy::too_many_arguments)]
     fn forward_train_arena(
         &self,
         ar: &mut StepArena,
-        biases: &[&[f32]],
+        params: &[Vec<f32>],
+        bn_in: &[Vec<f32>],
+        bn_out: &mut [Vec<f32>],
         qparams: &[f32],
+        momentum: f32,
         b: usize,
         act_absmax: &mut Vec<f32>,
     ) -> Result<()> {
@@ -852,11 +890,17 @@ impl NativeModel {
         ensure_slots(&mut ar.pre_q, l);
         ensure_slots(&mut ar.mask_a, l);
         ensure_slots(&mut ar.cols, l);
+        ensure_slots(&mut ar.bn_xhat, l);
+        ensure_slots(&mut ar.bn_k, l);
         for i in 0..l {
             let (di, do_) = self.dims[i];
+            let pm = &self.plan.params[i];
+            let bias: Option<&[f32]> = pm.bias.map(|bi| params[bi].as_slice());
             let row = ops::QRow::parse(qparams, l + i)?;
             let (head, tail) = ar.acts.split_at_mut(i + 1);
-            let x_in: &[f32] = &head[i];
+            // slot src(i): a downsample branch's successor reads the
+            // branch's own input, not its output
+            let x_in: &[f32] = &head[self.plan.src(i)];
             let out = &mut tail[0];
             match &self.plan.layers[i] {
                 LayerPlan::Dense { .. } => {
@@ -873,7 +917,7 @@ impl NativeModel {
                         di,
                         &ar.pack.a,
                         &ar.pack.b,
-                        biases[i],
+                        bias.expect("dense layers carry a bias"),
                         relu,
                         &row,
                         &mut ar.pre_q[i],
@@ -883,19 +927,20 @@ impl NativeModel {
                     act_absmax.push(mx);
                 }
                 LayerPlan::Conv(g) => {
-                    // h = Q_a(pool(relu(conv(h) [+ skip]))): the GEMM runs
-                    // over the im2col columns with bias (+ ReLU when no
-                    // skip) fused; pooling and the STE quantizer follow as
-                    // separate passes. `pre_q[i]` keeps the FULL pre-pool
-                    // post-ReLU output — backward re-derives pool argmaxes
-                    // and the ReLU mask from it.
+                    // h = Q_a(pool(relu(bn?(conv(h)) [+ skip]))): the GEMM
+                    // runs over the im2col columns with bias (+ ReLU when
+                    // no BN/skip) fused; batchnorm, pooling and the STE
+                    // quantizer follow as separate passes. `pre_q[i]`
+                    // keeps the FULL pre-pool post-ReLU output — backward
+                    // re-derives pool argmaxes and the ReLU mask from it.
                     let mrows = g.conv_rows(b);
                     reuse(&mut ar.cols[i], mrows * di);
                     conv::im2col(g, x_in, b, &mut ar.cols[i]);
                     gemm::pack_a_rows(&ar.cols[i], mrows, di, &mut ar.pack.a);
                     gemm::pack_b_cols(&ar.wq[i], di, do_, &mut ar.pack.b);
                     reuse(&mut ar.pre_q[i], mrows * do_);
-                    let fused_relu = g.residual_from.is_none();
+                    let has_bn = pm.has_bn();
+                    let fused_relu = g.relu && g.residual_from.is_none() && !has_bn;
                     gemm::gemm_packed_into(
                         &self.pool,
                         mrows,
@@ -903,16 +948,48 @@ impl NativeModel {
                         di,
                         &ar.pack.a,
                         &ar.pack.b,
-                        Some(biases[i]),
+                        bias,
                         fused_relu,
                         &mut ar.pre_q[i],
                     );
+                    if has_bn {
+                        let (gi, bti) = pm.bn_gb.expect("bn wiring");
+                        let (mi, vi) = pm.bn_mv.expect("bn wiring");
+                        let (mu, var) = ops::bn_forward_train(
+                            &mut ar.pre_q[i],
+                            mrows,
+                            do_,
+                            &params[gi],
+                            &params[bti],
+                            &mut ar.bn_xhat[i],
+                            &mut ar.bn_k[i],
+                        );
+                        // running stats: new = (1 − m)·old + m·batch, each
+                        // op a separate f32 rounding (mirrorability)
+                        let keep = 1.0f32 - momentum;
+                        for (o, (&old, &new)) in
+                            bn_out[mi].iter_mut().zip(bn_in[mi].iter().zip(&mu))
+                        {
+                            let a = keep * old;
+                            let t = momentum * new;
+                            *o = a + t;
+                        }
+                        for (o, (&old, &new)) in
+                            bn_out[vi].iter_mut().zip(bn_in[vi].iter().zip(&var))
+                        {
+                            let a = keep * old;
+                            let t = momentum * new;
+                            *o = a + t;
+                        }
+                    }
                     if let Some(j) = g.residual_from {
-                        // skip-add BEFORE the ReLU (BN-free residual)
+                        // skip-add BEFORE the ReLU
                         let skip = &head[j + 1];
                         for (v, &sk) in ar.pre_q[i].iter_mut().zip(skip.iter()) {
                             *v += sk;
                         }
+                    }
+                    if g.relu && !fused_relu {
                         ops::relu_inplace(&mut ar.pre_q[i]);
                     }
                     let n_out = b * g.out_elems();
@@ -975,28 +1052,35 @@ impl ExecModule for NativeTrainStep {
     fn execute_f32(&self, inputs: &[xla::Literal], out_specs: &[IoSpec]) -> Result<Vec<Vec<f32>>> {
         let m = &*self.0;
         let l = m.dims.len();
-        if inputs.len() != 3 * l + 4 {
+        let p_n = m.man.params.len();
+        let nb = m.man.bn_state.len();
+        if inputs.len() != p_n + l + nb + 4 {
             return Err(anyhow!(
                 "native train step: {} inputs, expected {}",
                 inputs.len(),
-                3 * l + 4
+                p_n + l + nb + 4
             ));
         }
-        // unpack in manifest order: params (2L), gsum (L), x, y, qparams, hyper
-        let mut params: Vec<Vec<f32>> = Vec::with_capacity(2 * l);
-        for (i, lit) in inputs[..2 * l].iter().enumerate() {
+        // unpack in manifest order: params, gsum (L), bn_state, x, y,
+        // qparams, hyper
+        let mut params: Vec<Vec<f32>> = Vec::with_capacity(p_n);
+        for (i, lit) in inputs[..p_n].iter().enumerate() {
             params.push(f32_input(lit, &m.man.params[i].name)?);
         }
         let mut gsum: Vec<Vec<f32>> = Vec::with_capacity(l);
-        for lit in &inputs[2 * l..3 * l] {
+        for lit in &inputs[p_n..p_n + l] {
             gsum.push(f32_input(lit, "gsum")?);
         }
-        let x = f32_input(&inputs[3 * l], "x")?;
-        let y = inputs[3 * l + 1]
+        let mut bn: Vec<Vec<f32>> = Vec::with_capacity(nb);
+        for (i, lit) in inputs[p_n + l..p_n + l + nb].iter().enumerate() {
+            bn.push(f32_input(lit, &m.man.bn_state[i].name)?);
+        }
+        let x = f32_input(&inputs[p_n + l + nb], "x")?;
+        let y = inputs[p_n + l + nb + 1]
             .to_vec::<i32>()
             .map_err(|e| anyhow!("y: {e:?}"))?;
-        let qparams = f32_input(&inputs[3 * l + 2], "qparams")?;
-        let hyper = f32_input(&inputs[3 * l + 3], "hyper")?;
+        let qparams = f32_input(&inputs[p_n + l + nb + 2], "qparams")?;
+        let hyper = f32_input(&inputs[p_n + l + nb + 3], "hyper")?;
         if qparams.len() != 2 * l * 5 {
             return Err(anyhow!("qparams len {} != {}", qparams.len(), 2 * l * 5));
         }
@@ -1022,9 +1106,15 @@ impl ExecModule for NativeTrainStep {
                 return Err(anyhow!("gsum {i} size mismatch"));
             }
         }
+        for (i, s) in bn.iter().enumerate() {
+            if s.len() != m.man.bn_state[i].elems() {
+                return Err(anyhow!("bn_state {} size mismatch", m.man.bn_state[i].name));
+            }
+        }
 
         let (lr, l1, l2, pen) = (hyper[0], hyper[1], hyper[2], hyper[3]);
         let gnorm_on = hyper[5] > 0.5;
+        let momentum = hyper[6];
 
         let mut guard = m.scratch.lock().unwrap_or_else(|p| p.into_inner());
         let ar = &mut *guard;
@@ -1036,7 +1126,7 @@ impl ExecModule for NativeTrainStep {
         let mut sparsity = Vec::with_capacity(l);
         for i in 0..l {
             let row = ops::QRow::parse(&qparams, i)?;
-            let w = &params[2 * i];
+            let w = &params[m.plan.params[i].kernel];
             reuse(&mut ar.wq[i], w.len());
             reuse(&mut ar.mask_w[i], w.len());
             let zeros = ops::fake_quant_ste(w, &row, &mut ar.wq[i], &mut ar.mask_w[i]);
@@ -1044,21 +1134,21 @@ impl ExecModule for NativeTrainStep {
         }
 
         // -- 2. forward (fused bias/ReLU/fake-quant epilogues) ------------
-        let biases: Vec<&[f32]> = (0..l).map(|i| params[2 * i + 1].as_slice()).collect();
+        let mut bn_new = bn.clone();
         {
             let a0 = &mut ar.acts[0];
             a0.clear();
             a0.extend_from_slice(&x);
         }
         let mut act_absmax = Vec::with_capacity(l);
-        m.forward_train_arena(ar, &biases, &qparams, b, &mut act_absmax)?;
+        m.forward_train_arena(ar, &params, &bn, &mut bn_new, &qparams, momentum, b, &mut act_absmax)?;
 
         // -- 3. loss ------------------------------------------------------
         let c = m.man.classes;
         let (ce, acc) = ops::softmax_ce_grad_into(&ar.acts[l], &y, b, c, &mut ar.g)?;
         let mut reg = 0.0f32;
         for i in 0..l {
-            let (s_abs, s_sq) = ops::abs_and_sq_sums(&params[2 * i]);
+            let (s_abs, s_sq) = ops::abs_and_sq_sums(&params[m.plan.params[i].kernel]);
             reg += l1 * s_abs as f32 + 0.5 * l2 * s_sq as f32;
         }
         let mut penalty = 0.0f32;
@@ -1076,6 +1166,9 @@ impl ExecModule for NativeTrainStep {
         ar.skip_active.resize(l, false);
         for i in (0..l).rev() {
             let (di, do_) = m.dims[i];
+            let pm = &m.plan.params[i];
+            // batchnorm layers surface (dgamma, dbeta) out of the conv arm
+            let mut dgb: Option<(Vec<f32>, Vec<f32>)> = None;
             // through the activation quantizer first (every layer's forward
             // ended with the STE fake-quant)
             ops::mul_inplace(&mut ar.g, &ar.mask_a[i]);
@@ -1114,9 +1207,11 @@ impl ExecModule for NativeTrainStep {
                     } else {
                         ar.g_full.copy_from_slice(&ar.g);
                     }
-                    // conv layers always ReLU (pre-pool buffer is post-ReLU,
-                    // which preserves the ≤0 mask)
-                    ops::relu_backward_inplace(&mut ar.g_full, &ar.pre_q[i]);
+                    // the pre-pool buffer is post-ReLU, which preserves the
+                    // ≤0 mask; downsample branches are linear (no ReLU)
+                    if g.relu {
+                        ops::relu_backward_inplace(&mut ar.g_full, &ar.pre_q[i]);
+                    }
                     if let Some(j) = g.residual_from {
                         // the skip read layer j's output: park the gradient
                         // until the sweep computes dL/d acts[j+1] as g_prev
@@ -1132,7 +1227,19 @@ impl ExecModule for NativeTrainStep {
                             ar.skip_active[t] = true;
                         }
                     }
-                    ops::col_sums_into(&ar.g_full, mrows, do_, &mut ar.db);
+                    if pm.has_bn() {
+                        // back through y = gamma·x̂ + beta to the conv
+                        // output; (dgamma, dbeta) fall out of the same folds
+                        dgb = Some(ops::bn_backward(
+                            &mut ar.g_full,
+                            mrows,
+                            do_,
+                            &ar.bn_xhat[i],
+                            &ar.bn_k[i],
+                        ));
+                    } else {
+                        ops::col_sums_into(&ar.g_full, mrows, do_, &mut ar.db);
+                    }
                     reuse(&mut ar.dw, di * do_);
                     gemm::matmul_at_b_into(
                         &m.pool,
@@ -1161,17 +1268,44 @@ impl ExecModule for NativeTrainStep {
                     }
                 }
             }
-            // a later residual layer borrowed this layer's INPUT (= layer
-            // i-1's output): fold its parked gradient into g_prev now
-            if i > 0 && ar.skip_active[i] {
-                for (gp, &s) in ar.g_prev.iter_mut().zip(&ar.skip_g[i]) {
-                    *gp += s;
+            let src = m.plan.src(i);
+            if src == i {
+                // a later residual layer borrowed this layer's INPUT (=
+                // layer i-1's output): fold its parked gradient into g_prev
+                if i > 0 && ar.skip_active[i] {
+                    for (gp, &s) in ar.g_prev.iter_mut().zip(&ar.skip_g[i]) {
+                        *gp += s;
+                    }
+                    ar.skip_active[i] = false;
                 }
+            } else {
+                // layer i follows a downsample branch: it read slot i-1, so
+                // its input gradient parks there (folded at iteration i-1,
+                // whose input is the same slot), and the branch OUTPUT
+                // gradient — parked by the residual consumer — becomes this
+                // iteration's hand-off instead
+                debug_assert_eq!(src, i - 1);
+                if ar.skip_active[src] {
+                    for (s, &v) in ar.skip_g[src].iter_mut().zip(&ar.g_prev) {
+                        *s += v;
+                    }
+                } else {
+                    reuse(&mut ar.skip_g[src], ar.g_prev.len());
+                    ar.skip_g[src].copy_from_slice(&ar.g_prev);
+                    ar.skip_active[src] = true;
+                }
+                if !ar.skip_active[i] {
+                    return Err(anyhow!(
+                        "downsample branch output at layer {} has no gradient",
+                        i - 1
+                    ));
+                }
+                std::mem::swap(&mut ar.g_prev, &mut ar.skip_g[i]);
                 ar.skip_active[i] = false;
             }
             ops::mul_inplace(&mut ar.dw, &ar.mask_w[i]);
             // L1/L2 regularizer gradients act on the raw master weights
-            for (d, &wv) in ar.dw.iter_mut().zip(&params[2 * i]) {
+            for (d, &wv) in ar.dw.iter_mut().zip(&params[pm.kernel]) {
                 *d += l1 * ops::sign(wv) + l2 * wv;
             }
             // gradient-diversity state uses the RAW gradient (eq. 3)
@@ -1181,13 +1315,24 @@ impl ExecModule for NativeTrainStep {
                 *s += d;
             }
             gsum_norm[i] = ops::l2_norm(&gsum[i]);
-            // ASGD update: kernels optionally normalized, biases plain
+            // ASGD update: kernels optionally normalized, bias/gamma/beta
+            // plain
             let denom = gn + ops::UPDATE_EPS;
-            for (wv, &d) in params[2 * i].iter_mut().zip(&ar.dw) {
+            for (wv, &d) in params[pm.kernel].iter_mut().zip(&ar.dw) {
                 *wv -= lr * if gnorm_on { d / denom } else { d };
             }
-            for (bv, &d) in params[2 * i + 1].iter_mut().zip(&ar.db) {
-                *bv -= lr * d;
+            if let Some(bi) = pm.bias {
+                for (bv, &d) in params[bi].iter_mut().zip(&ar.db) {
+                    *bv -= lr * d;
+                }
+            }
+            if let (Some((gi, bti)), Some((dgamma, dbeta))) = (pm.bn_gb, dgb.as_ref()) {
+                for (gv, &d) in params[gi].iter_mut().zip(dgamma) {
+                    *gv -= lr * d;
+                }
+                for (bv, &d) in params[bti].iter_mut().zip(dbeta) {
+                    *bv -= lr * d;
+                }
             }
             if i > 0 {
                 std::mem::swap(&mut ar.g, &mut ar.g_prev);
@@ -1200,9 +1345,10 @@ impl ExecModule for NativeTrainStep {
         ar.cache = None;
 
         // -- 6. outputs in manifest order ---------------------------------
-        let mut outs: Vec<Vec<f32>> = Vec::with_capacity(3 * l + 7);
+        let mut outs: Vec<Vec<f32>> = Vec::with_capacity(p_n + l + nb + 7);
         outs.extend(params);
         outs.extend(gsum);
+        outs.extend(bn_new);
         outs.push(vec![loss]);
         outs.push(vec![ce]);
         outs.push(vec![acc]);
@@ -1226,19 +1372,25 @@ impl ExecModule for NativeInfer {
     fn execute_f32(&self, inputs: &[xla::Literal], out_specs: &[IoSpec]) -> Result<Vec<Vec<f32>>> {
         let m = &*self.0;
         let l = m.dims.len();
-        if inputs.len() != 2 * l + 2 {
+        let p_n = m.man.params.len();
+        let nb = m.man.bn_state.len();
+        if inputs.len() != p_n + nb + 2 {
             return Err(anyhow!(
                 "native infer: {} inputs, expected {}",
                 inputs.len(),
-                2 * l + 2
+                p_n + nb + 2
             ));
         }
-        let mut params: Vec<Vec<f32>> = Vec::with_capacity(2 * l);
-        for (i, lit) in inputs[..2 * l].iter().enumerate() {
+        let mut params: Vec<Vec<f32>> = Vec::with_capacity(p_n);
+        for (i, lit) in inputs[..p_n].iter().enumerate() {
             params.push(f32_input(lit, &m.man.params[i].name)?);
         }
-        let x = f32_input(&inputs[2 * l], "x")?;
-        let qparams = f32_input(&inputs[2 * l + 1], "qparams")?;
+        let mut bn: Vec<Vec<f32>> = Vec::with_capacity(nb);
+        for (i, lit) in inputs[p_n..p_n + nb].iter().enumerate() {
+            bn.push(f32_input(lit, &m.man.bn_state[i].name)?);
+        }
+        let x = f32_input(&inputs[p_n + nb], "x")?;
+        let qparams = f32_input(&inputs[p_n + nb + 1], "qparams")?;
         if qparams.len() != 2 * l * 5 {
             return Err(anyhow!("qparams len {} != {}", qparams.len(), 2 * l * 5));
         }
@@ -1259,20 +1411,63 @@ impl ExecModule for NativeInfer {
                 return Err(anyhow!("param {} size mismatch", m.man.params[i].name));
             }
         }
+        for (i, s) in bn.iter().enumerate() {
+            if s.len() != m.man.bn_state[i].elems() {
+                return Err(anyhow!("bn_state {} size mismatch", m.man.bn_state[i].name));
+            }
+        }
         let b = m.man.batch;
         let crossover = sparse_crossover();
-        let kernels: Vec<&[f32]> = (0..l).map(|i| params[2 * i].as_slice()).collect();
-        let biases: Vec<&[f32]> = (0..l).map(|i| params[2 * i + 1].as_slice()).collect();
 
         let mut guard = m.scratch.lock().unwrap_or_else(|p| p.into_inner());
         let ar = &mut *guard;
+
+        // batchnorm folds into the preceding conv's kernel + bias BEFORE
+        // quantize/pack, so the i8/i16/CSR dispatch (and the cache keys,
+        // which hash the folded kernel bits — any gamma/beta/stat change
+        // re-packs that layer) run unchanged
+        let StepArena { fold_w, fold_b, cache, infer, .. } = ar;
+        ensure_slots(fold_w, l);
+        ensure_slots(fold_b, l);
+        for i in 0..l {
+            let pm = &m.plan.params[i];
+            if !pm.has_bn() {
+                continue;
+            }
+            let (di, do_) = m.dims[i];
+            let (gi, bti) = pm.bn_gb.expect("bn wiring");
+            let (mi, vi) = pm.bn_mv.expect("bn wiring");
+            ops::bn_fold(
+                &params[pm.kernel],
+                di,
+                do_,
+                &params[gi],
+                &params[bti],
+                &bn[mi],
+                &bn[vi],
+                &mut fold_w[i],
+                &mut fold_b[i],
+            );
+        }
+        let kernels: Vec<&[f32]> = (0..l)
+            .map(|i| {
+                let pm = &m.plan.params[i];
+                if pm.has_bn() { fold_w[i].as_slice() } else { params[pm.kernel].as_slice() }
+            })
+            .collect();
+        let biases: Vec<&[f32]> = (0..l)
+            .map(|i| {
+                let pm = &m.plan.params[i];
+                pm.bias.map(|bi| params[bi].as_slice()).unwrap_or(fold_b[i].as_slice())
+            })
+            .collect();
 
         // cross-call pack/CSR cache, keyed per layer: a full hit reuses the
         // snapshot as-is; a partial hit (same crossover, some layer bits
         // changed) MOVES the untouched layers' packs into a rebuilt
         // snapshot and re-packs only the changed ones — see the module docs
         let crossover_bits = crossover.to_bits();
-        let keep: Option<Vec<bool>> = ar.cache.as_ref().and_then(|e| {
+        let keep: Option<Vec<bool>> = cache.as_ref().and_then(|e| {
             (e.crossover == crossover_bits && e.layer_keys.len() == l).then(|| {
                 (0..l)
                     .map(|i| layer_key_matches(&e.layer_keys[i], &kernels, &qparams, l, i))
@@ -1283,15 +1478,14 @@ impl ExecModule for NativeInfer {
         if !hit {
             let layer_keys: Vec<Vec<u32>> =
                 (0..l).map(|i| layer_cache_key(&kernels, &qparams, l, i)).collect();
-            let snap = match (ar.cache.take(), keep) {
+            let snap = match (cache.take(), keep) {
                 (Some(entry), Some(keep)) => ModelSnapshot::build_reusing(
                     &m.plan, &kernels, &qparams, crossover, entry.snap, &keep,
                 )?,
                 _ => ModelSnapshot::build(&m.plan, &kernels, &qparams, crossover)?,
             };
-            ar.cache = Some(PackCacheEntry { crossover: crossover_bits, layer_keys, snap });
+            *cache = Some(PackCacheEntry { crossover: crossover_bits, layer_keys, snap });
         }
-        let StepArena { cache, infer, .. } = ar;
         let entry = cache.as_ref().expect("cache populated above");
         let mut logits: Vec<f32> = Vec::new();
         entry
@@ -1327,13 +1521,13 @@ mod tests {
         // an op the lowerer has never heard of carries a typed error so
         // callers can branch on (op, layer) instead of string-matching
         let mut man = Manifest::synthetic_mlp("bad", [2, 2, 1], 3, &[5], 4);
-        man.layers[0].kind = "downsample".into();
+        man.layers[0].kind = "attention".into();
         let err = NativeModel::from_manifest(man, Arc::new(QuantPool::new(1))).unwrap_err();
         let typed = err
             .chain()
             .find_map(|c| c.downcast_ref::<super::super::plan::UnsupportedOp>())
             .expect("UnsupportedOp in the chain");
-        assert_eq!(typed.op, "downsample");
+        assert_eq!(typed.op, "attention");
         assert_eq!(typed.layer, 0);
         let mut man2 = Manifest::synthetic_mlp("bad2", [2, 2, 1], 3, &[5], 4);
         man2.bn_state.push(crate::runtime::manifest::IoSpec {
@@ -1380,6 +1574,55 @@ mod tests {
             last_ce < first_ce * 0.5,
             "conv step is not learning: ce {first_ce} -> {last_ce}"
         );
+        let infer = NativeInfer(model);
+        let iin = pack_infer_inputs(&man, &p, &bn, &x, &qp).unwrap();
+        let logits = infer.execute_f32(&iin, &man.infer_outputs).unwrap();
+        assert_eq!(logits[0].len(), 4 * man.classes);
+        assert!(logits[0].iter().all(|v| v.is_finite()));
+    }
+
+    /// The full resnet block stack — batchnorm, a strided downsample
+    /// branch, and the global-average-pool head — trains (CE drops on a
+    /// memorized batch, running stats move off their init) and the
+    /// BN-folded infer path serves finite logits.
+    #[test]
+    fn resnet_train_step_learns_and_folded_infer_runs() {
+        let man = Manifest::synthetic_resnet("resnet-tiny", 4);
+        let model = Arc::new(
+            NativeModel::from_manifest(man.clone(), Arc::new(QuantPool::new(2))).unwrap(),
+        );
+        let l = man.num_layers;
+        let p_n = man.params.len();
+        let nb = man.bn_state.len();
+        let mut p = crate::init::init_params(&man, crate::init::Initializer::Tnvs, 1.0, 23);
+        let mut gs = crate::init::init_gsum(&man);
+        let mut bn = crate::init::init_bn(&man);
+        let x: Vec<f32> = (0..4 * 64).map(|i| (i as f32 * 0.137).sin()).collect();
+        let y = vec![2i32, 4, 6, 8];
+        let qp = qp_uniform(l, FixedPointFormat::initial(), 1.0);
+        let hyper = [0.05f32, 0.0, 0.0, 0.0, 0.0, 1.0, 0.1, 0.0];
+        let step = NativeTrainStep(Arc::clone(&model));
+        let mut first_ce = 0.0f32;
+        let mut last_ce = f32::INFINITY;
+        for it in 0..60 {
+            let inputs = pack_train_inputs(&man, &p, &gs, &bn, &x, &y, &qp, &hyper).unwrap();
+            let outs = step.execute_f32(&inputs, &man.train_outputs).unwrap();
+            p = outs[..p_n].to_vec();
+            gs = outs[p_n..p_n + l].to_vec();
+            bn = outs[p_n + l..p_n + l + nb].to_vec();
+            last_ce = outs[p_n + l + nb + 1][0];
+            assert!(last_ce.is_finite(), "iter {it}: ce {last_ce}");
+            if it == 0 {
+                first_ce = last_ce;
+            }
+        }
+        assert!(
+            last_ce < first_ce * 0.5,
+            "resnet step is not learning: ce {first_ce} -> {last_ce}"
+        );
+        // the running stats tracked the batch statistics (init: mean 0/var 1)
+        assert!(bn[0].iter().any(|&v| v != 0.0), "stem running mean never moved");
+        assert!(bn[1].iter().any(|&v| v != 1.0), "stem running var never moved");
         let infer = NativeInfer(model);
         let iin = pack_infer_inputs(&man, &p, &bn, &x, &qp).unwrap();
         let logits = infer.execute_f32(&iin, &man.infer_outputs).unwrap();

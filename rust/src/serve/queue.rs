@@ -294,7 +294,7 @@ mod tests {
         let qp: Vec<f32> = (0..2 * man.num_layers)
             .flat_map(|_| crate::fixedpoint::FixedPointFormat::initial().qparams_row(1.0))
             .collect();
-        Arc::new(ServedModel::freeze("q-test", &man, &params, &qp).unwrap())
+        Arc::new(ServedModel::freeze("q-test", &man, &params, &[], &qp).unwrap())
     }
 
     fn req(model: &Arc<ServedModel>, n: usize) -> (Request, Receiver<Result<Response, ServeError>>) {

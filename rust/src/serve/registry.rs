@@ -24,7 +24,9 @@ use anyhow::{anyhow, Result};
 
 use crate::coordinator::ServableModel;
 use crate::quant::QuantPool;
-use crate::runtime::native::{lower_manifest, sparse_crossover, InferScratch, ModelSnapshot};
+use crate::runtime::native::{
+    bn_fold, lower_manifest, sparse_crossover, InferScratch, ModelSnapshot,
+};
 use crate::runtime::Manifest;
 
 /// A frozen, immutable served model (module docs). Built once with
@@ -40,25 +42,38 @@ pub struct ServedModel {
 
 impl ServedModel {
     /// Validate and lower `man` (same [`lower_manifest`] contract as the
-    /// native backend — dense AND conv/pool/residual layers), quantize
-    /// every kernel under its qparams row and pack each layer once,
-    /// choosing f32 panel vs integer codes vs CSR from the frozen formats,
-    /// the measured density and the active crossover (the
-    /// `ModelSnapshot::build` dispatch order). `params` is the full
-    /// (kernel, bias) interleaving; `qparams` the `[2L, 5]` runtime tensor
-    /// of the finished run.
+    /// native backend — dense AND conv/batchnorm/pool/residual layers),
+    /// quantize every kernel under its qparams row and pack each layer
+    /// once, choosing f32 panel vs integer codes vs CSR from the frozen
+    /// formats, the measured density and the active crossover (the
+    /// `ModelSnapshot::build` dispatch order). `params` is the manifest's
+    /// full parameter stream (kernel+bias, or kernel+gamma+beta for
+    /// batchnorm layers); `bn` the running (mean, var) `bn_state` tensors
+    /// (empty for BN-free models); `qparams` the `[2L, 5]` runtime tensor
+    /// of the finished run. Batchnorm folds into the preceding conv's
+    /// kernel+bias before packing, so the snapshot dispatch is oblivious to
+    /// it.
     pub fn freeze(
         name: &str,
         man: &Manifest,
         params: &[Vec<f32>],
+        bn: &[Vec<f32>],
         qparams: &[f32],
     ) -> Result<ServedModel> {
         let plan = lower_manifest(man)?;
         let l = plan.num_layers();
-        if params.len() != 2 * l {
+        if params.len() != man.params.len() {
             return Err(anyhow!(
-                "freeze {name}: {} params for {l} layers (want kernel+bias each)",
-                params.len()
+                "freeze {name}: {} params for a manifest with {}",
+                params.len(),
+                man.params.len()
+            ));
+        }
+        if bn.len() != man.bn_state.len() {
+            return Err(anyhow!(
+                "freeze {name}: {} bn_state tensors for a manifest with {}",
+                bn.len(),
+                man.bn_state.len()
             ));
         }
         if qparams.len() != 2 * l * 5 {
@@ -73,9 +88,48 @@ impl ServedModel {
                 return Err(anyhow!("freeze {name}: param {} size mismatch", man.params[i].name));
             }
         }
-        let kernels: Vec<&[f32]> = (0..l).map(|i| params[2 * i].as_slice()).collect();
+        for (i, s) in bn.iter().enumerate() {
+            if s.len() != man.bn_state[i].elems() {
+                return Err(anyhow!(
+                    "freeze {name}: bn_state {} size mismatch",
+                    man.bn_state[i].name
+                ));
+            }
+        }
+        let dims = plan.gemm_dims();
+        let mut folded_w: Vec<Option<Vec<f32>>> = vec![None; l];
+        let mut biases: Vec<Vec<f32>> = Vec::with_capacity(l);
+        for i in 0..l {
+            let pm = &plan.params[i];
+            if pm.has_bn() {
+                let (gi, bti) = pm.bn_gb.expect("bn wiring");
+                let (mi, vi) = pm.bn_mv.expect("bn wiring");
+                let (mut fw, mut fb) = (Vec::new(), Vec::new());
+                bn_fold(
+                    &params[pm.kernel],
+                    dims[i].0,
+                    dims[i].1,
+                    &params[gi],
+                    &params[bti],
+                    &bn[mi],
+                    &bn[vi],
+                    &mut fw,
+                    &mut fb,
+                );
+                folded_w[i] = Some(fw);
+                biases.push(fb);
+            } else {
+                biases.push(params[pm.bias.expect("non-BN layers carry a bias")].clone());
+            }
+        }
+        let kernels: Vec<&[f32]> = (0..l)
+            .map(|i| {
+                folded_w[i]
+                    .as_deref()
+                    .unwrap_or_else(|| params[plan.params[i].kernel].as_slice())
+            })
+            .collect();
         let snap = ModelSnapshot::build(&plan, &kernels, qparams, sparse_crossover())?;
-        let biases: Vec<Vec<f32>> = (0..l).map(|i| params[2 * i + 1].clone()).collect();
         Ok(ServedModel {
             name: name.to_string(),
             classes: man.classes,
@@ -88,7 +142,7 @@ impl ServedModel {
     /// Freeze the export of a finished training run
     /// ([`TrainOutcome::servable`](crate::coordinator::TrainOutcome::servable)).
     pub fn from_servable(s: &ServableModel) -> Result<ServedModel> {
-        ServedModel::freeze(&s.name, &s.manifest, &s.params, &s.qparams)
+        ServedModel::freeze(&s.name, &s.manifest, &s.params, &s.bn, &s.qparams)
     }
 
     pub fn name(&self) -> &str {
@@ -145,7 +199,7 @@ impl ServedModel {
 ///     .flat_map(|_| FixedPointFormat::initial().qparams_row(1.0))
 ///     .collect();
 /// let registry = Arc::new(ModelRegistry::new());
-/// registry.publish(ServedModel::freeze("doc-serve", &man, &params, &qp).unwrap());
+/// registry.publish(ServedModel::freeze("doc-serve", &man, &params, &[], &qp).unwrap());
 ///
 /// // serve one single-sample request through the batching pipeline
 /// let cfg = ServeConfig { workers: 1, max_wait: Duration::ZERO, ..ServeConfig::default() };
@@ -228,7 +282,7 @@ mod tests {
         let qp: Vec<f32> = (0..2 * man.num_layers)
             .flat_map(|_| FixedPointFormat::initial().qparams_row(1.0))
             .collect();
-        ServedModel::freeze(name, &man, &params, &qp).unwrap()
+        ServedModel::freeze(name, &man, &params, &[], &qp).unwrap()
     }
 
     #[test]
@@ -256,9 +310,11 @@ mod tests {
         let qp: Vec<f32> = (0..2 * man.num_layers)
             .flat_map(|_| FixedPointFormat::initial().qparams_row(1.0))
             .collect();
-        assert!(ServedModel::freeze("v", &man, &params[..1], &qp).is_err());
-        assert!(ServedModel::freeze("v", &man, &params, &qp[..5]).is_err());
-        let m = ServedModel::freeze("v", &man, &params, &qp).unwrap();
+        assert!(ServedModel::freeze("v", &man, &params[..1], &[], &qp).is_err());
+        assert!(ServedModel::freeze("v", &man, &params, &[], &qp[..5]).is_err());
+        // a bn_state tensor the manifest doesn't declare is rejected
+        assert!(ServedModel::freeze("v", &man, &params, &[vec![0.0; 5]], &qp).is_err());
+        let m = ServedModel::freeze("v", &man, &params, &[], &qp).unwrap();
         assert_eq!(m.d_in(), 4);
         assert_eq!(m.classes(), 3);
         assert_eq!(m.snapshot().num_layers(), 2);

@@ -44,12 +44,21 @@ pub struct LatencyHistogram {
 }
 
 impl LatencyHistogram {
-    /// Count one latency observation.
+    /// Count one latency observation. Non-finite samples are skipped (with
+    /// a debug assertion): a NaN fails every `< edge` comparison, so it
+    /// would silently land in the overflow bucket and poison [`total`]
+    /// against the summary `count` — and the summary sort would panic on it.
+    ///
+    /// [`total`]: LatencyHistogram::total
     pub fn record(&mut self, ms: f64) {
+        if !finite_sample(ms, "histogram") {
+            return;
+        }
         self.counts[Self::bucket_of(ms)] += 1;
     }
 
     fn bucket_of(ms: f64) -> usize {
+        debug_assert!(ms.is_finite());
         let mut edge = 1.0 / 64.0;
         for i in 0..HIST_BUCKETS - 1 {
             if ms < edge {
@@ -105,11 +114,31 @@ impl LatencySummary {
         LatencySummary {
             count: n as u64,
             mean_ms: v.iter().sum::<f64>() / n as f64,
-            p50_ms: v[n / 2],
-            p95_ms: v[(n * 95) / 100],
+            p50_ms: v[nearest_rank(50, n)],
+            p95_ms: v[nearest_rank(95, n)],
             max_ms: v[n - 1],
         }
     }
+}
+
+/// Nearest-rank percentile index into an ascending-sorted population of
+/// `n > 0` values: `ceil(p/100 · n) − 1`. The previous `v[n/2]` /
+/// `v[(n·95)/100]` indexing was biased one rank high — at `n = 20` it
+/// reported p50 as the 11th value and p95 as the 20th (the MAX), so a
+/// single outlier inflated the reported p95 of otherwise uniform
+/// populations.
+fn nearest_rank(p: usize, n: usize) -> usize {
+    debug_assert!(n > 0 && p > 0 && p <= 100);
+    (n * p).div_ceil(100) - 1
+}
+
+/// True when the sample is finite. Non-finite samples trip a debug
+/// assertion (a recording bug upstream) and are dropped from the telemetry
+/// in release builds rather than poisoning the summaries.
+fn finite_sample(ms: f64, what: &str) -> bool {
+    let ok = ms.is_finite();
+    debug_assert!(ok, "{what}: non-finite latency sample {ms}");
+    ok
 }
 
 /// One folded view of everything recorded so far (field docs in the module
@@ -229,12 +258,18 @@ impl ServeStats {
         self.samples.fetch_add(samples as u64, Ordering::Relaxed);
         self.batches.fetch_add(1, Ordering::Relaxed);
         let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
-        inner.queue_ms.extend_from_slice(queue_ms);
-        inner.service_ms.push(service_ms);
+        // non-finite samples (a timing bug upstream) are dropped from BOTH
+        // the vectors and the histograms, keeping their counts in lockstep
         for &q in queue_ms {
-            inner.queue_hist.record(q);
+            if finite_sample(q, "queue wait") {
+                inner.queue_ms.push(q);
+                inner.queue_hist.record(q);
+            }
         }
-        inner.service_hist.record(service_ms);
+        if finite_sample(service_ms, "service time") {
+            inner.service_ms.push(service_ms);
+            inner.service_hist.record(service_ms);
+        }
         inner.last_record = Some(Instant::now());
     }
 
@@ -364,6 +399,62 @@ mod tests {
             hist.req("upper_ms").unwrap().as_arr().unwrap().len(),
             HIST_BUCKETS - 1
         );
+    }
+
+    /// Nearest-rank percentiles at the sizes where the old `v[n/2]` /
+    /// `v[(n·95)/100]` indexing was off by one rank: at n = 20 the old code
+    /// returned the 11th value for p50 and the maximum for p95.
+    #[test]
+    fn percentiles_use_nearest_rank() {
+        // n = 1: both percentiles are the single value
+        assert_eq!(nearest_rank(50, 1), 0);
+        assert_eq!(nearest_rank(95, 1), 0);
+        // n = 19: ceil(9.5) = 10th value, ceil(18.05) = 19th value
+        assert_eq!(nearest_rank(50, 19), 9);
+        assert_eq!(nearest_rank(95, 19), 18);
+        // n = 20: ceil(10) = 10th value (old code: 11th), ceil(19) = 19th
+        // value (old code: 20th — the max)
+        assert_eq!(nearest_rank(50, 20), 9);
+        assert_eq!(nearest_rank(95, 20), 18);
+        // n = 100: the canonical case
+        assert_eq!(nearest_rank(50, 100), 49);
+        assert_eq!(nearest_rank(95, 100), 94);
+
+        // end to end: 19 equal waits + 1 outlier must NOT report the
+        // outlier as p95
+        let s = ServeStats::new(8);
+        let mut waits = vec![1.0; 19];
+        waits.push(1000.0);
+        s.record_batch(20, 20, 1.0, &waits);
+        let snap = s.snapshot();
+        assert_eq!(snap.queue.p50_ms, 1.0);
+        assert_eq!(snap.queue.p95_ms, 1.0, "p95 must not be the single outlier");
+        assert_eq!(snap.queue.max_ms, 1000.0);
+        // single-element population: p50 == p95 == max
+        let one = LatencySummary::from_values(&[3.5]);
+        assert_eq!(one.p50_ms, 3.5);
+        assert_eq!(one.p95_ms, 3.5);
+    }
+
+    /// Non-finite latency samples must not reach the histograms or the
+    /// summary sort. In debug builds they trip the assertion (upstream
+    /// bug); in release they are dropped with counts kept in lockstep.
+    #[test]
+    #[cfg_attr(debug_assertions, should_panic(expected = "non-finite latency sample"))]
+    fn non_finite_samples_are_rejected() {
+        let s = ServeStats::new(8);
+        s.record_batch(8, 3, f64::NAN, &[0.5, f64::INFINITY, 1.5]);
+        // release builds reach here: the finite samples survived, the
+        // non-finite ones are in neither the vectors nor the histograms
+        let snap = s.snapshot();
+        assert_eq!(snap.queue.count, 2);
+        assert_eq!(snap.queue_hist.total(), 2);
+        assert_eq!(snap.service.count, 0);
+        assert_eq!(snap.service_hist.total(), 0);
+        assert_eq!(snap.queue.max_ms, 1.5);
+        if cfg!(debug_assertions) {
+            unreachable!("debug builds assert on the first non-finite sample");
+        }
     }
 
     #[test]

@@ -303,15 +303,31 @@ impl<'a> Parser<'a> {
                         Some(b'b') => s.push('\u{8}'),
                         Some(b'f') => s.push('\u{c}'),
                         Some(b'u') => {
-                            if self.i + 4 >= self.b.len() {
-                                return Err(self.err("bad \\u escape"));
+                            let cp = self.hex4(self.i + 1)?;
+                            if (0xD800..=0xDBFF).contains(&cp)
+                                && self.i + 10 < self.b.len()
+                                && self.b[self.i + 5] == b'\\'
+                                && self.b[self.i + 6] == b'u'
+                            {
+                                // High surrogate followed by another \u escape:
+                                // combine the pair into one supplementary-plane
+                                // scalar. A second unit that is not a low
+                                // surrogate leaves U+FFFD here and re-parses on
+                                // its own next iteration.
+                                let lo = self.hex4(self.i + 7)?;
+                                if (0xDC00..=0xDFFF).contains(&lo) {
+                                    let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                    s.push(char::from_u32(c).unwrap_or('\u{fffd}'));
+                                    self.i += 10;
+                                } else {
+                                    s.push('\u{fffd}');
+                                    self.i += 4;
+                                }
+                            } else {
+                                // Lone surrogates hit the None arm of from_u32.
+                                s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                                self.i += 4;
                             }
-                            let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
-                            self.i += 4;
                         }
                         _ => return Err(self.err("bad escape")),
                     }
@@ -328,6 +344,18 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Four hex digits starting at byte offset `at`.
+    fn hex4(&self, at: usize) -> Result<u32, JsonError> {
+        if at + 4 > self.b.len() {
+            return Err(self.err("bad \\u escape"));
+        }
+        let hex = std::str::from_utf8(&self.b[at..at + 4]).map_err(|_| self.err("bad \\u escape"))?;
+        if !hex.bytes().all(|c| c.is_ascii_hexdigit()) {
+            return Err(self.err("bad \\u escape"));
+        }
+        u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u escape"))
     }
 
     fn number(&mut self) -> Result<Json, JsonError> {
@@ -358,6 +386,51 @@ mod tests {
         assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
         assert_eq!(Json::parse("-12.5e2").unwrap(), Json::Num(-1250.0));
         assert_eq!(Json::parse("\"a\\nb\"").unwrap(), Json::Str("a\nb".into()));
+    }
+
+    #[test]
+    fn combines_surrogate_pairs() {
+        // U+1F600 spelled as a high/low pair, the only JSON escape
+        // spelling of an astral scalar.
+        let j = Json::parse(r#""\uD83D\uDE00""#).unwrap();
+        assert_eq!(j.as_str(), Some("\u{1F600}"));
+        // Pairs embedded mid-string, twice in a row.
+        let j = Json::parse(r#""a\uD83D\uDE00b\uD83D\uDCA9c""#).unwrap();
+        assert_eq!(j.as_str(), Some("a\u{1F600}b\u{1F4A9}c"));
+        // Serialize -> parse round-trips the raw astral scalar.
+        let src = Json::Str("pair \u{1F600} survives".into());
+        let round = Json::parse(&src.to_string_pretty()).unwrap();
+        assert_eq!(round, src);
+    }
+
+    #[test]
+    fn lone_surrogates_become_replacement_chars() {
+        // Unpaired high, unpaired low, and high-followed-by-BMP all decode
+        // to U+FFFD (never a panic); the trailing escape still parses.
+        assert_eq!(
+            Json::parse(r#""\uD800""#).unwrap().as_str(),
+            Some("\u{fffd}")
+        );
+        assert_eq!(
+            Json::parse(r#""\uDC00""#).unwrap().as_str(),
+            Some("\u{fffd}")
+        );
+        assert_eq!(
+            Json::parse(r#""\uD83Dx""#).unwrap().as_str(),
+            Some("\u{fffd}x")
+        );
+        assert_eq!(
+            Json::parse(r#""\uD83DA""#).unwrap().as_str(),
+            Some("\u{fffd}A")
+        );
+        // High surrogate followed by a BMP escape: replacement char, then
+        // the second escape decodes independently.
+        assert_eq!(
+            Json::parse(r#""\uD83D\u0041""#).unwrap().as_str(),
+            Some("\u{fffd}A")
+        );
+        // Truncated hex is still a hard parse error.
+        assert!(Json::parse(r#""\uD8""#).is_err());
     }
 
     #[test]

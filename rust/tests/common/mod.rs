@@ -37,6 +37,34 @@ pub fn native_lenet_model() -> LoadedModel {
         .expect("native backend compiles the synthetic LeNet")
 }
 
+/// The resnet golden config: `Manifest::synthetic_resnet` at batch 16 —
+/// batchnorm convs, a strided 1×1 downsample branch, pre-ReLU skip-adds
+/// and a global-average-pool head (`rust/tests/golden/resnet_native_ce.json`
+/// and the `resnet-golden` mode of `python/tools/native_golden.py` restate
+/// it — change all three or none).
+pub fn native_resnet_manifest() -> Manifest {
+    Manifest::synthetic_resnet("resnet-native", 16)
+}
+
+/// The resnet manifest compiled on the native backend.
+pub fn native_resnet_model() -> LoadedModel {
+    Engine::native()
+        .compile_manifest(native_resnet_manifest())
+        .expect("native backend compiles the synthetic ResNet")
+}
+
+/// The alexnet twin (five convs + three dense, no batchnorm) at batch 16.
+pub fn native_alexnet_manifest() -> Manifest {
+    Manifest::synthetic_alexnet("alexnet-native", 16)
+}
+
+/// The alexnet manifest compiled on the native backend.
+pub fn native_alexnet_model() -> LoadedModel {
+    Engine::native()
+        .compile_manifest(native_alexnet_manifest())
+        .expect("native backend compiles the synthetic AlexNet")
+}
+
 /// Uniform qparams tensor: every weight/activation row at `fmt`.
 pub fn qparams_uniform(l: usize, fmt: FixedPointFormat, enable: f32) -> Vec<f32> {
     let row = fmt.qparams_row(enable);

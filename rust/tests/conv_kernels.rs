@@ -57,6 +57,8 @@ fn geom(ih: usize, iw: usize, ci: usize, k: usize, co: usize, stride: usize, sam
         ph: oh / pool,
         pw: ow / pool,
         residual_from: None,
+        relu: true,
+        branch: false,
     }
 }
 
@@ -146,6 +148,62 @@ fn im2col_gemm_bit_matches_naive_direct_conv_across_shapes_and_pools() {
                     bits(&want),
                     "shape {si} ({}x{}x{} k{} s{} pad{}) relu={relu} t={threads}",
                     g.ih, g.iw, g.ci, g.kh, g.stride, g.pad_top
+                );
+            }
+        }
+    }
+}
+
+/// SAME padding with stride > 1 is asymmetric whenever the total padding is
+/// odd: the JAX/TF convention puts `pad_total / 2` on top/left (floor) and
+/// the extra row/column on the bottom/right. The lowerer resolves only
+/// `pad_top`/`pad_left`; the bottom/right overhang is implicit in the
+/// `(oy * stride + ky) - pad_top` tap arithmetic, so a sign slip there
+/// would shift every strided window. Each case pins the resolved padding
+/// and then demands bit parity between im2col + packed GEMM and the naive
+/// direct-conv oracle across `QuantPool` sizes.
+#[test]
+fn strided_same_padding_is_bottom_right_heavy_and_bit_exact() {
+    // (geom, expected pad_top/pad_left, expected bottom/right overhang)
+    let cases = [
+        // 7x7, k=2, s=2: oh=4, pad_total = 3*2+2-7 = 1 -> top 0, bottom 1.
+        (geom(7, 7, 2, 2, 3, 2, true, 1), 0usize, 1usize),
+        // 7x7, k=4, s=2: oh=4, pad_total = 3*2+4-7 = 3 -> top 1, bottom 2.
+        (geom(7, 7, 1, 4, 5, 2, true, 1), 1, 2),
+        // 8x8, k=4, s=2: oh=4, pad_total = 3*2+4-8 = 2 -> symmetric 1/1.
+        (geom(8, 8, 1, 4, 5, 2, true, 1), 1, 1),
+        // 8x8, k=1, s=2: the resnet downsample shape — no padding at all,
+        // pure strided subsampling.
+        (geom(8, 8, 4, 1, 8, 2, true, 1), 0, 0),
+    ];
+    for (ci, (g, want_top, want_bottom)) in cases.iter().enumerate() {
+        assert_eq!(g.pad_top, *want_top, "case {ci}: pad_top");
+        assert_eq!(g.pad_left, *want_top, "case {ci}: pad_left");
+        let pad_total = ((g.oh - 1) * g.stride + g.kh).saturating_sub(g.ih);
+        assert_eq!(pad_total - g.pad_top, *want_bottom, "case {ci}: pad_bottom");
+
+        let b = 3usize;
+        let seed = 9000 + 10 * ci as u64;
+        let x = randv(b * g.in_elems(), seed);
+        let w = randv(g.gemm_k() * g.co, seed + 1);
+        let bias = randv(g.co, seed + 2);
+        for relu in [false, true] {
+            let want = naive_conv(g, &x, &w, &bias, relu, b);
+            let mrows = g.conv_rows(b);
+            let mut cols = vec![0.0f32; mrows * g.gemm_k()];
+            conv::im2col(g, &x, b, &mut cols);
+            let (mut ap, mut bp) = (Vec::new(), Vec::new());
+            gemm::pack_a_rows(&cols, mrows, g.gemm_k(), &mut ap);
+            gemm::pack_b_cols(&w, g.gemm_k(), g.co, &mut bp);
+            for threads in [1usize, 2, 4] {
+                let pool = QuantPool::new(threads);
+                let mut got = vec![0.0f32; mrows * g.co];
+                gemm::gemm_packed_into(&pool, mrows, g.co, g.gemm_k(), &ap, &bp, Some(&bias), relu, &mut got);
+                assert_eq!(
+                    bits(&got),
+                    bits(&want),
+                    "case {ci} ({}x{} k{} s{}) relu={relu} t={threads}",
+                    g.ih, g.iw, g.kh, g.stride
                 );
             }
         }

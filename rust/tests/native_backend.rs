@@ -128,6 +128,18 @@ fn lenet_determinism_golden() {
     run_golden(common::native_lenet_model(), golden_cfg("lenet-native"), "lenet_native_ce.json");
 }
 
+/// The batchnorm/branch twin: `synthetic_resnet` under the identical config
+/// pins the PR-8 lowerings — bias-free GEMM into training-mode batchnorm,
+/// the strided 1×1 downsample branch and its gradient routing, the pre-ReLU
+/// skip-adds and the global-average-pool head — against
+/// `rust/tests/golden/resnet_native_ce.json`, whose committed values come
+/// from the INDEPENDENT numpy mirror
+/// (`python3 python/tools/native_golden.py resnet-golden`).
+#[test]
+fn resnet_determinism_golden() {
+    run_golden(common::native_resnet_model(), golden_cfg("resnet-native"), "resnet_native_ce.json");
+}
+
 fn run_golden(model: LoadedModel, cfg: TrainConfig, golden_file: &str) {
     let a = train_via_model(&model, &cfg).expect("run a");
     let b = train_via_model(&model, &cfg).expect("run b");

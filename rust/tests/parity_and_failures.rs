@@ -159,8 +159,8 @@ fn native_engine_rejects_unsupported_ops_with_typed_errors() {
     }
 
     let mut m = Manifest::synthetic_lenet("uo-kind", 8);
-    m.layers[1].kind = "downsample".into();
-    expect_unsupported(m, "downsample", 1);
+    m.layers[1].kind = "attention".into();
+    expect_unsupported(m, "attention", 1);
 
     let mut m = Manifest::synthetic_lenet("uo-pad", 8);
     m.layers[0].padding = "reflect".into();
@@ -174,27 +174,40 @@ fn native_engine_rejects_unsupported_ops_with_typed_errors() {
     m.layers[1].kind = "conv".into();
     expect_unsupported(m, "conv-after-dense", 1);
 
+    // batchnorm is supported now, but bn_state tensors no layer claims are
+    // still rejected — with a descriptive plain error, not a panic
     let mut m = Manifest::synthetic_lenet("uo-bn", 8);
     m.bn_state.push(adapt::runtime::IoSpec {
         name: "bn0.mean".into(),
         shape: vec![6],
         dtype: adapt::runtime::Dtype::F32,
     });
-    expect_unsupported(m, "batchnorm", 0);
+    let err = Engine::native().compile_manifest(m).expect_err("dangling bn_state");
+    assert!(format!("{err:#}").contains("bn_state"), "{err:#}");
 
     // the serving freeze shares the lowerer: same typed rejection, no panic
     let mut m = Manifest::synthetic_lenet("uo-freeze", 8);
-    m.layers[0].kind = "downsample".into();
+    m.layers[0].kind = "attention".into();
     let params = init::init_params(&m, init::Initializer::Tnvs, 1.0, 3);
     let qp: Vec<f32> = (0..2 * m.num_layers)
         .flat_map(|_| FixedPointFormat::initial().qparams_row(1.0))
         .collect();
-    let err = adapt::serve::ServedModel::freeze("uo-freeze", &m, &params, &qp)
+    let err = adapt::serve::ServedModel::freeze("uo-freeze", &m, &params, &[], &qp)
         .expect_err("freeze must refuse");
     assert!(
         err.chain().any(|c| c.downcast_ref::<UnsupportedOp>().is_some()),
         "freeze rejection is untyped: {err:#}"
     );
+
+    // the three PR-8 lowerings no longer reject: the resnet twin (strided
+    // downsample branch + batchnorm + global-average-pool head) and the
+    // alexnet twin both compile through the public engine API
+    Engine::native()
+        .compile_manifest(Manifest::synthetic_resnet("uo-resnet-ok", 4))
+        .expect("resnet twin must lower");
+    Engine::native()
+        .compile_manifest(Manifest::synthetic_alexnet("uo-alexnet-ok", 4))
+        .expect("alexnet twin must lower");
 
     // geometry inconsistencies are plain (non-op) errors, still no panic
     let mut m = Manifest::synthetic_lenet("uo-tile", 8);

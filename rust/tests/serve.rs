@@ -68,7 +68,7 @@ fn served_bits_match_direct_infer_across_coalescing_and_workers() {
     }
     let want_bits = bits(&want);
 
-    let served = ServedModel::freeze("mlp-native", &man, &params, &qp).expect("freeze");
+    let served = ServedModel::freeze("mlp-native", &man, &params, &[], &qp).expect("freeze");
     // parity must hold for ANY crossover; the dispatch-shape asserts assume
     // the shipped default, so only check them when the env leaves it alone
     if std::env::var_os("ADAPT_SPARSE_CROSSOVER").is_none() {
@@ -168,7 +168,7 @@ fn served_conv_bits_match_direct_infer_with_csr_and_width_switch() {
     }
     let want_bits = bits(&want);
 
-    let served = ServedModel::freeze("lenet-native", &man, &params, &qp).expect("freeze conv");
+    let served = ServedModel::freeze("lenet-native", &man, &params, &[], &qp).expect("freeze conv");
     if std::env::var_os("ADAPT_SPARSE_CROSSOVER").is_none() {
         assert!(
             served.snapshot().layer_is_sparse(0),
@@ -244,7 +244,7 @@ fn shutdown_drains_accepted_requests_then_rejects() {
     let params = test_params(&man, 9);
     let qp = qparams_uniform(l, FixedPointFormat::initial(), 1.0);
     let registry = Arc::new(ModelRegistry::new());
-    registry.publish(ServedModel::freeze("mlp-native", &man, &params, &qp).unwrap());
+    registry.publish(ServedModel::freeze("mlp-native", &man, &params, &[], &qp).unwrap());
     let server = ServeServer::start(
         Arc::clone(&registry),
         Arc::new(QuantPool::new(2)),
@@ -282,7 +282,7 @@ fn bounded_queue_backpressure_and_submit_validation() {
     let params = test_params(&man, 13);
     let qp = qparams_uniform(l, FixedPointFormat::initial(), 1.0);
     let registry = Arc::new(ModelRegistry::new());
-    registry.publish(ServedModel::freeze("mlp-native", &man, &params, &qp).unwrap());
+    registry.publish(ServedModel::freeze("mlp-native", &man, &params, &[], &qp).unwrap());
     // zero workers: nothing drains, so capacity is observable
     let server = ServeServer::start(
         Arc::clone(&registry),
@@ -353,7 +353,7 @@ fn precision_switch_and_weight_edit_invalidate_the_pack_cache() {
 
     // a frozen served model is immutable: it keeps answering at its freeze
     // formats regardless of what the live model switched to since
-    let served = ServedModel::freeze("frozen-a", &man, &params, &qp_a).unwrap();
+    let served = ServedModel::freeze("frozen-a", &man, &params, &[], &qp_a).unwrap();
     let registry = Arc::new(ModelRegistry::new());
     registry.publish(served);
     let server = ServeServer::start(
