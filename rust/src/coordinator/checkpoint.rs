@@ -1,23 +1,117 @@
-//! Checkpointing: binary snapshots of the full training state (master
-//! weights, gradient accumulators, BN stats, step counter) so long runs
+//! Checkpointing: binary snapshots of the full training state so long runs
 //! survive interruption and poisoned steps can be rolled back.
 //!
-//! Format (little-endian, versioned):
-//!   magic "ADPT" | u32 version | u64 step | u32 n_sections
-//!   per section: u32 n_tensors, per tensor: u64 len, f32 data...
-//! Sections are (params, gsum, bn). A trailing CRC-like xor checksum guards
-//! against truncation (no external hashing crates offline).
+//! v2 format (little-endian):
+//!
+//! ```text
+//! offset 0   magic "ADPT"
+//! offset 4   u32 version = 2
+//! offset 8   u64 body_len          (size of everything before the checksum)
+//! offset 16  u64 step              (TrainState::step)
+//! offset 24  u32 n_sections = 4
+//!            section params | gsum | bn:
+//!              u32 n_tensors; per tensor: u64 elems, raw f32 LE bits
+//!            section aux: u64 byte_len, raw bytes (supervisor blob;
+//!              empty when saved via `save`)
+//! offset body_len   u64 FNV-1a checksum of bytes[0..body_len]
+//! ```
+//!
+//! The explicit `body_len` header pins both integrity checks to fixed byte
+//! ranges *before* any structural parsing, which is what makes the fuzz
+//! guarantees deterministic: any truncation changes the length equation,
+//! any appended garbage is `TrailingGarbage`, and any single bit flip in
+//! the body lands inside the checksummed range (FNV-1a's per-byte
+//! xor-multiply chain is a bijection of the accumulator, so a flipped byte
+//! can never cancel out). v1 files (xor-of-f32-bits checksum, no aux
+//! section) remain readable. Writes are atomic (tmp + rename).
+//!
+//! The `aux` section is opaque bytes at this layer; `coordinator::
+//! supervisor` packs the full AdaPT run state into it (controller formats
+//! and PushUp windows, data-order RNG, scheduler state, epoch/step cursors,
+//! the `RunRecord` prefix) so a resumed run is bit-identical to an
+//! uninterrupted one.
 
-use std::io::{Read, Write};
+use std::fmt;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
 
 use crate::runtime::TrainState;
+use crate::util::blob::BlobReader;
 
 const MAGIC: &[u8; 4] = b"ADPT";
-const VERSION: u32 = 1;
+/// Current write-side format version.
+pub const VERSION: u32 = 2;
+/// Fixed v2 header size: magic + version + body_len + step + n_sections.
+const V2_HEADER: usize = 4 + 4 + 8 + 8 + 4;
 
+/// Typed load/save failures, so callers (and tests) can distinguish "newer
+/// format than this binary" from genuine corruption.
+#[derive(Debug)]
+pub enum CheckpointError {
+    Io(std::io::Error),
+    BadMagic([u8; 4]),
+    /// Valid magic but a version this binary does not know how to parse.
+    FutureVersion { found: u32, supported: u32 },
+    /// Structurally complete checkpoint followed by extra bytes.
+    TrailingGarbage { extra: u64 },
+    /// Truncation, checksum mismatch, or implausible structure.
+    Corrupt(String),
+}
+
+impl fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CheckpointError::Io(e) => write!(f, "checkpoint io: {e}"),
+            CheckpointError::BadMagic(m) => write!(f, "bad checkpoint magic {m:?}"),
+            CheckpointError::FutureVersion { found, supported } => {
+                write!(f, "checkpoint version {found} is newer than supported {supported}")
+            }
+            CheckpointError::TrailingGarbage { extra } => {
+                write!(f, "{extra} trailing bytes after checkpoint checksum")
+            }
+            CheckpointError::Corrupt(msg) => write!(f, "corrupt checkpoint: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CheckpointError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CheckpointError {
+    fn from(e: std::io::Error) -> Self {
+        CheckpointError::Io(e)
+    }
+}
+
+/// A fully parsed checkpoint: tensor state plus the opaque aux blob.
+#[derive(Debug)]
+pub struct Checkpoint {
+    pub state: TrainState,
+    /// Supervisor-owned run state; empty for v1 files and plain `save`s.
+    pub aux: Vec<u8>,
+    pub version: u32,
+}
+
+/// FNV-1a over raw bytes. Every step is `acc = (acc ^ b) * prime` — a
+/// bijection of `acc` for fixed input — so any single corrupted byte in
+/// the hashed range is guaranteed to change the final value.
+fn byte_checksum(data: &[u8]) -> u64 {
+    let mut acc = 0xCBF2_9CE4_8422_2325u64;
+    for &b in data {
+        acc ^= b as u64;
+        acc = acc.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    acc
+}
+
+/// v1's checksum: xor of rotated f32 bit patterns, tensor data only.
 fn xor_checksum(data: &[f32]) -> u64 {
     let mut acc = 0xA5A5_5A5A_DEAD_BEEFu64;
     for (i, &v) in data.iter().enumerate() {
@@ -26,107 +120,215 @@ fn xor_checksum(data: &[f32]) -> u64 {
     acc
 }
 
-fn write_section<W: Write>(w: &mut W, tensors: &[Vec<f32>], sum: &mut u64) -> Result<()> {
-    w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+fn tensor_bytes(t: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(t.as_ptr() as *const u8, t.len() * 4) }
+}
+
+fn push_section(out: &mut Vec<u8>, tensors: &[Vec<f32>]) {
+    out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
     for t in tensors {
-        w.write_all(&(t.len() as u64).to_le_bytes())?;
-        let bytes: &[u8] =
-            unsafe { std::slice::from_raw_parts(t.as_ptr() as *const u8, t.len() * 4) };
-        w.write_all(bytes)?;
-        *sum ^= xor_checksum(t);
+        out.extend_from_slice(&(t.len() as u64).to_le_bytes());
+        out.extend_from_slice(tensor_bytes(t));
     }
+}
+
+/// Serialize a complete v2 checkpoint image (header + sections + checksum).
+/// Pure in-memory: the supervisor calls this on the hot path and hands the
+/// buffer to its background writer thread.
+pub fn encode(state: &TrainState, aux: &[u8]) -> Vec<u8> {
+    let tensor_elems: usize = state
+        .params
+        .iter()
+        .chain(&state.gsum)
+        .chain(&state.bn)
+        .map(Vec::len)
+        .sum();
+    let n_tensors = state.params.len() + state.gsum.len() + state.bn.len();
+    let body_len = V2_HEADER + 3 * 4 + n_tensors * 8 + tensor_elems * 4 + 8 + aux.len();
+    let mut out = Vec::with_capacity(body_len + 8);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(body_len as u64).to_le_bytes());
+    out.extend_from_slice(&state.step.to_le_bytes());
+    out.extend_from_slice(&4u32.to_le_bytes());
+    push_section(&mut out, &state.params);
+    push_section(&mut out, &state.gsum);
+    push_section(&mut out, &state.bn);
+    out.extend_from_slice(&(aux.len() as u64).to_le_bytes());
+    out.extend_from_slice(aux);
+    debug_assert_eq!(out.len(), body_len);
+    let sum = byte_checksum(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Write a pre-serialized checkpoint image atomically (tmp + rename).
+pub fn write_atomic(bytes: &[u8], path: &Path) -> Result<(), CheckpointError> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, bytes)?;
+    std::fs::rename(&tmp, path)?;
     Ok(())
 }
 
-fn read_section<R: Read>(r: &mut R, sum: &mut u64) -> Result<Vec<Vec<f32>>> {
-    let mut b4 = [0u8; 4];
-    r.read_exact(&mut b4)?;
-    let n = u32::from_le_bytes(b4) as usize;
+/// Write a v2 checkpoint with an aux blob, atomically.
+pub fn save_with_aux(state: &TrainState, aux: &[u8], path: &Path) -> Result<(), CheckpointError> {
+    write_atomic(&encode(state, aux), path)
+}
+
+/// Write a checkpoint atomically (tmp + rename). Tensor state only; the
+/// supervisor uses [`save_with_aux`] to carry the full run state.
+pub fn save(state: &TrainState, path: &Path) -> Result<(), CheckpointError> {
+    save_with_aux(state, &[], path)
+}
+
+/// Write a legacy v1 checkpoint. Kept so back-compat reads stay testable.
+pub fn save_v1(state: &TrainState, path: &Path) -> Result<(), CheckpointError> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&1u32.to_le_bytes());
+    out.extend_from_slice(&state.step.to_le_bytes());
+    out.extend_from_slice(&3u32.to_le_bytes());
+    let mut sum = 0u64;
+    for sec in [&state.params, &state.gsum, &state.bn] {
+        push_section(&mut out, sec);
+        for t in sec.iter() {
+            sum ^= xor_checksum(t);
+        }
+    }
+    out.extend_from_slice(&sum.to_le_bytes());
+    write_atomic(&out, path)
+}
+
+fn corrupt(e: anyhow::Error) -> CheckpointError {
+    CheckpointError::Corrupt(e.to_string())
+}
+
+fn read_tensors(r: &mut BlobReader<'_>) -> Result<Vec<Vec<f32>>> {
+    let n = r.u32()? as usize;
     if n > 1_000_000 {
         return Err(anyhow!("implausible tensor count {n}"));
     }
     let mut out = Vec::with_capacity(n);
-    let mut b8 = [0u8; 8];
     for _ in 0..n {
-        r.read_exact(&mut b8)?;
-        let len = u64::from_le_bytes(b8) as usize;
+        let len = r.u64()? as usize;
         if len > 1 << 30 {
             return Err(anyhow!("implausible tensor len {len}"));
         }
-        let mut t = vec![0f32; len];
-        let bytes: &mut [u8] =
-            unsafe { std::slice::from_raw_parts_mut(t.as_mut_ptr() as *mut u8, len * 4) };
-        r.read_exact(bytes)?;
-        *sum ^= xor_checksum(&t);
+        let bytes = r.take(len * 4)?;
+        let mut t = Vec::with_capacity(len);
+        for c in bytes.chunks_exact(4) {
+            t.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
         out.push(t);
     }
     Ok(out)
 }
 
-/// Write a checkpoint atomically (tmp + rename).
-pub fn save(state: &TrainState, path: &Path) -> Result<()> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
+fn load_v2(bytes: &[u8]) -> Result<Checkpoint, CheckpointError> {
+    if bytes.len() < V2_HEADER + 8 {
+        return Err(CheckpointError::Corrupt(format!(
+            "{} bytes is too short for a v2 checkpoint",
+            bytes.len()
+        )));
     }
-    let tmp = path.with_extension("tmp");
-    {
-        let mut f = std::io::BufWriter::new(
-            std::fs::File::create(&tmp).with_context(|| format!("create {}", tmp.display()))?,
-        );
-        f.write_all(MAGIC)?;
-        f.write_all(&VERSION.to_le_bytes())?;
-        f.write_all(&state.step.to_le_bytes())?;
-        f.write_all(&3u32.to_le_bytes())?;
-        let mut sum = 0u64;
-        write_section(&mut f, &state.params, &mut sum)?;
-        write_section(&mut f, &state.gsum, &mut sum)?;
-        write_section(&mut f, &state.bn, &mut sum)?;
-        f.write_all(&sum.to_le_bytes())?;
-        f.flush()?;
+    let body_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    let file_len = bytes.len() as u64;
+    // integrity first, against fixed ranges derived from the header alone
+    if body_len < (V2_HEADER as u64) || body_len + 8 > file_len {
+        return Err(CheckpointError::Corrupt(format!(
+            "body length {body_len} inconsistent with file length {file_len} (truncated?)"
+        )));
     }
-    std::fs::rename(&tmp, path).with_context(|| format!("rename to {}", path.display()))?;
-    Ok(())
+    if body_len + 8 < file_len {
+        return Err(CheckpointError::TrailingGarbage { extra: file_len - (body_len + 8) });
+    }
+    let body = &bytes[..body_len as usize];
+    let want = u64::from_le_bytes(bytes[body_len as usize..].try_into().unwrap());
+    if byte_checksum(body) != want {
+        return Err(CheckpointError::Corrupt("checksum mismatch".into()));
+    }
+    // the body is now known intact; structural parse cannot mis-frame
+    let mut r = BlobReader::new(&body[16..]); // past magic/version/body_len
+    let parse = |r: &mut BlobReader<'_>| -> Result<Checkpoint> {
+        let step = r.u64()?;
+        let n_sections = r.u32()?;
+        if n_sections != 4 {
+            return Err(anyhow!("expected 4 sections, got {n_sections}"));
+        }
+        let params = read_tensors(r)?;
+        let gsum = read_tensors(r)?;
+        let bn = read_tensors(r)?;
+        let aux_len = r.u64()? as usize;
+        if aux_len != r.remaining() {
+            return Err(anyhow!(
+                "aux length {aux_len} != {} remaining body bytes",
+                r.remaining()
+            ));
+        }
+        let aux = r.take(aux_len)?.to_vec();
+        Ok(Checkpoint {
+            state: TrainState { params, gsum, bn, step },
+            aux,
+            version: 2,
+        })
+    };
+    parse(&mut r).map_err(corrupt)
+}
+
+fn load_v1(bytes: &[u8]) -> Result<Checkpoint, CheckpointError> {
+    let mut r = BlobReader::new(&bytes[8..]); // past magic/version
+    let parse = |r: &mut BlobReader<'_>| -> Result<(TrainState, u64)> {
+        let step = r.u64()?;
+        let n_sections = r.u32()?;
+        if n_sections != 3 {
+            return Err(anyhow!("expected 3 sections, got {n_sections}"));
+        }
+        let params = read_tensors(r)?;
+        let gsum = read_tensors(r)?;
+        let bn = read_tensors(r)?;
+        let want = r.u64()?;
+        Ok((TrainState { params, gsum, bn, step }, want))
+    };
+    let (state, want) = parse(&mut r).map_err(corrupt)?;
+    if !r.is_empty() {
+        return Err(CheckpointError::TrailingGarbage { extra: r.remaining() as u64 });
+    }
+    let mut sum = 0u64;
+    for sec in [&state.params, &state.gsum, &state.bn] {
+        for t in sec.iter() {
+            sum ^= xor_checksum(t);
+        }
+    }
+    if sum != want {
+        return Err(CheckpointError::Corrupt("v1 checksum mismatch".into()));
+    }
+    Ok(Checkpoint { state, aux: Vec::new(), version: 1 })
+}
+
+/// Load and fully verify a checkpoint (v1 or v2), returning the aux blob.
+pub fn load_full(path: &Path) -> Result<Checkpoint, CheckpointError> {
+    let bytes = std::fs::read(path)?;
+    if bytes.len() < 8 {
+        return Err(CheckpointError::Corrupt(format!("{} bytes is not a checkpoint", bytes.len())));
+    }
+    let magic: [u8; 4] = bytes[..4].try_into().unwrap();
+    if &magic != MAGIC {
+        return Err(CheckpointError::BadMagic(magic));
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    match version {
+        1 => load_v1(&bytes),
+        2 => load_v2(&bytes),
+        v => Err(CheckpointError::FutureVersion { found: v, supported: VERSION }),
+    }
 }
 
 /// Load a checkpoint, verifying magic/version/checksum.
-pub fn load(path: &Path) -> Result<TrainState> {
-    let mut f = std::io::BufReader::new(
-        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
-    );
-    let mut magic = [0u8; 4];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        return Err(anyhow!("bad magic {:?}", magic));
-    }
-    let mut b4 = [0u8; 4];
-    f.read_exact(&mut b4)?;
-    let version = u32::from_le_bytes(b4);
-    if version != VERSION {
-        return Err(anyhow!("unsupported checkpoint version {version}"));
-    }
-    let mut b8 = [0u8; 8];
-    f.read_exact(&mut b8)?;
-    let step = u64::from_le_bytes(b8);
-    f.read_exact(&mut b4)?;
-    let n_sections = u32::from_le_bytes(b4);
-    if n_sections != 3 {
-        return Err(anyhow!("expected 3 sections, got {n_sections}"));
-    }
-    let mut sum = 0u64;
-    let params = read_section(&mut f, &mut sum)?;
-    let gsum = read_section(&mut f, &mut sum)?;
-    let bn = read_section(&mut f, &mut sum)?;
-    f.read_exact(&mut b8)?;
-    let want = u64::from_le_bytes(b8);
-    if want != sum {
-        return Err(anyhow!("checksum mismatch: file corrupt/truncated"));
-    }
-    Ok(TrainState {
-        params,
-        gsum,
-        bn,
-        step,
-    })
+pub fn load(path: &Path) -> Result<TrainState, CheckpointError> {
+    Ok(load_full(path)?.state)
 }
 
 /// Verify a checkpoint matches a manifest's shapes (guards against loading
@@ -190,13 +392,26 @@ mod tests {
     }
 
     #[test]
+    fn aux_round_trip() {
+        let s = sample_state();
+        let p = tmpfile("aux");
+        let aux: Vec<u8> = (0..=255).collect();
+        save_with_aux(&s, &aux, &p).unwrap();
+        let ck = load_full(&p).unwrap();
+        assert_eq!(ck.version, 2);
+        assert_eq!(ck.aux, aux);
+        assert_eq!(ck.state.params, s.params);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
     fn detects_truncation() {
         let s = sample_state();
         let p = tmpfile("trunc");
         save(&s, &p).unwrap();
         let bytes = std::fs::read(&p).unwrap();
         std::fs::write(&p, &bytes[..bytes.len() - 3]).unwrap();
-        assert!(load(&p).is_err());
+        assert!(matches!(load(&p), Err(CheckpointError::Corrupt(_))));
         std::fs::remove_file(&p).ok();
     }
 
@@ -217,7 +432,61 @@ mod tests {
     fn rejects_bad_magic() {
         let p = tmpfile("magic");
         std::fs::write(&p, b"NOPE12345678").unwrap();
-        assert!(load(&p).is_err());
+        assert!(matches!(load(&p), Err(CheckpointError::BadMagic(_))));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_future_version_typed() {
+        let s = sample_state();
+        let p = tmpfile("future");
+        save(&s, &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[4..8].copy_from_slice(&(VERSION + 1).to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        match load(&p) {
+            Err(CheckpointError::FutureVersion { found, supported }) => {
+                assert_eq!(found, VERSION + 1);
+                assert_eq!(supported, VERSION);
+            }
+            other => panic!("want FutureVersion, got {other:?}"),
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_trailing_garbage_typed() {
+        let s = sample_state();
+        let p = tmpfile("trail");
+        save(&s, &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes.extend_from_slice(b"junk!");
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(matches!(
+            load(&p),
+            Err(CheckpointError::TrailingGarbage { extra: 5 })
+        ));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn reads_legacy_v1_files() {
+        let s = sample_state();
+        let p = tmpfile("v1");
+        save_v1(&s, &p).unwrap();
+        let ck = load_full(&p).unwrap();
+        assert_eq!(ck.version, 1);
+        assert!(ck.aux.is_empty());
+        assert_eq!(ck.state.params, s.params);
+        assert_eq!(ck.state.step, s.step);
+        // v1 trailing garbage is rejected too
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes.push(0);
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(matches!(
+            load(&p),
+            Err(CheckpointError::TrailingGarbage { extra: 1 })
+        ));
         std::fs::remove_file(&p).ok();
     }
 

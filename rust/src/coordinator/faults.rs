@@ -1,0 +1,276 @@
+//! Deterministic fault injection for the robustness drills.
+//!
+//! A [`FaultPlan`] is a set of (kind, trigger-index) pairs with bounded
+//! fire counts. Sites poll the plan at exact, deterministic indices (the
+//! global training step, the per-process checkpoint write ordinal, the
+//! serve batch sequence number), so a drill replays identically run after
+//! run — the property every resume-parity test leans on.
+//!
+//! Plans come from code (tests) or from the `ADAPT_FAULTS` environment
+//! variable, e.g.:
+//!
+//! ```text
+//! ADAPT_FAULTS=step:17=nan_loss,ckpt:2=truncate,step:40=crash
+//! ```
+//!
+//! Grammar: comma-separated `site:index=action[@times]` clauses where
+//! `site` is `step` (actions `nan_loss`, `crash`), `ckpt` (actions
+//! `truncate`, `bitflip`; index = checkpoint write ordinal) or `serve`
+//! (action `panic`; index = worker batch sequence). `times` is a decimal
+//! count or `inf` (default 1).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+/// What to break, at which site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Replace the step's loss/CE/grad norms with NaN before the
+    /// divergence guard sees them (`step:N=nan_loss`).
+    NanLoss,
+    /// Abort the run right after step N's bookkeeping, as a process kill
+    /// would (`step:N=crash`).
+    Crash,
+    /// Truncate the Nth checkpoint image before it hits disk
+    /// (`ckpt:N=truncate`).
+    CkptTruncate,
+    /// Flip one bit in the Nth checkpoint image (`ckpt:N=bitflip`).
+    CkptBitFlip,
+    /// Panic inside the serve worker on batch N (`serve:N=panic`).
+    ServePanic,
+}
+
+/// Checkpoint-image corruption mode, derived from a fired [`FaultKind`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CkptFault {
+    Truncate,
+    BitFlip,
+}
+
+#[derive(Debug)]
+struct FaultSpec {
+    kind: FaultKind,
+    at: u64,
+    /// remaining fire budget; `u64::MAX` means unlimited
+    remaining: AtomicU64,
+}
+
+/// A deterministic set of injected faults. Cheap to share (`Arc`), safe to
+/// poll from worker threads.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    faults: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// The empty plan: nothing ever fires.
+    pub fn none() -> Arc<FaultPlan> {
+        Arc::new(FaultPlan::default())
+    }
+
+    /// Parse the `ADAPT_FAULTS` grammar (see module docs).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for clause in spec.split(',') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let (site_idx, action) = clause
+                .split_once('=')
+                .with_context(|| format!("fault clause `{clause}` missing `=`"))?;
+            let (site, idx) = site_idx
+                .split_once(':')
+                .with_context(|| format!("fault site `{site_idx}` missing `:index`"))?;
+            let at: u64 = idx
+                .trim()
+                .parse()
+                .with_context(|| format!("bad fault index `{idx}`"))?;
+            let (action, times) = match action.split_once('@') {
+                Some((a, t)) => {
+                    let times = if t.trim() == "inf" {
+                        u64::MAX
+                    } else {
+                        t.trim()
+                            .parse()
+                            .with_context(|| format!("bad fault count `{t}`"))?
+                    };
+                    (a.trim(), times)
+                }
+                None => (action.trim(), 1),
+            };
+            let kind = match (site.trim(), action) {
+                ("step", "nan_loss") => FaultKind::NanLoss,
+                ("step", "crash") => FaultKind::Crash,
+                ("ckpt", "truncate") => FaultKind::CkptTruncate,
+                ("ckpt", "bitflip") => FaultKind::CkptBitFlip,
+                ("serve", "panic") => FaultKind::ServePanic,
+                (s, a) => bail!("unknown fault `{s}:{a}` in clause `{clause}`"),
+            };
+            plan = plan.with(kind, at, times);
+        }
+        Ok(plan)
+    }
+
+    /// Build a plan from `ADAPT_FAULTS` (empty plan when unset).
+    pub fn from_env() -> Result<Arc<FaultPlan>> {
+        match std::env::var("ADAPT_FAULTS") {
+            Ok(spec) => Ok(Arc::new(FaultPlan::parse(&spec)?)),
+            Err(_) => Ok(FaultPlan::none()),
+        }
+    }
+
+    /// Add a fault firing up to `times` times (`u64::MAX` = unlimited)
+    /// when its site reaches index `at`.
+    pub fn with(mut self, kind: FaultKind, at: u64, times: u64) -> FaultPlan {
+        self.faults.push(FaultSpec {
+            kind,
+            at,
+            remaining: AtomicU64::new(times),
+        });
+        self
+    }
+
+    /// NaN-poison the metrics of global step `at` (once).
+    pub fn nan_loss_at(self, at: u64) -> FaultPlan {
+        self.with(FaultKind::NanLoss, at, 1)
+    }
+
+    /// Kill the run right after global step `at` (once).
+    pub fn crash_at(self, at: u64) -> FaultPlan {
+        self.with(FaultKind::Crash, at, 1)
+    }
+
+    /// Truncate the `at`-th checkpoint image written by this process.
+    pub fn ckpt_truncate(self, at: u64) -> FaultPlan {
+        self.with(FaultKind::CkptTruncate, at, 1)
+    }
+
+    /// Bit-flip the `at`-th checkpoint image written by this process.
+    pub fn ckpt_bitflip(self, at: u64) -> FaultPlan {
+        self.with(FaultKind::CkptBitFlip, at, 1)
+    }
+
+    /// Panic the serve worker handling batch sequence number `at`.
+    pub fn serve_panic_at(self, at: u64) -> FaultPlan {
+        self.with(FaultKind::ServePanic, at, 1)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Poll the plan: does a fault of `kind` fire at site index `at`?
+    /// Consumes one unit of the fault's budget when it does (unlimited
+    /// budgets are never decremented), so `@1` faults fire exactly once
+    /// even when several threads race on the same index.
+    pub fn fire(&self, kind: FaultKind, at: u64) -> bool {
+        for f in &self.faults {
+            if f.kind != kind || f.at != at {
+                continue;
+            }
+            let took = f
+                .remaining
+                .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |r| match r {
+                    0 => None,
+                    u64::MAX => Some(u64::MAX),
+                    n => Some(n - 1),
+                })
+                .is_ok();
+            if took {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Checkpoint-site convenience: which corruption (if any) fires for
+    /// checkpoint write ordinal `k`?
+    pub fn ckpt_fault(&self, k: u64) -> Option<CkptFault> {
+        if self.fire(FaultKind::CkptTruncate, k) {
+            Some(CkptFault::Truncate)
+        } else if self.fire(FaultKind::CkptBitFlip, k) {
+            Some(CkptFault::BitFlip)
+        } else {
+            None
+        }
+    }
+}
+
+/// Apply a checkpoint corruption to an encoded image, deterministically:
+/// truncation cuts to half length, the bit flip lands at offset len/3.
+pub fn corrupt_image(bytes: &mut Vec<u8>, f: CkptFault) {
+    match f {
+        CkptFault::Truncate => {
+            let keep = bytes.len() / 2;
+            bytes.truncate(keep);
+        }
+        CkptFault::BitFlip => {
+            let i = bytes.len() / 3;
+            if i < bytes.len() {
+                bytes[i] ^= 0x10;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let p = FaultPlan::parse("step:17=nan_loss, ckpt:2=truncate, step:40=crash@3, serve:0=panic, ckpt:5=bitflip@inf").unwrap();
+        assert!(p.fire(FaultKind::NanLoss, 17));
+        assert!(!p.fire(FaultKind::NanLoss, 17), "@1 fires once");
+        assert!(!p.fire(FaultKind::NanLoss, 18));
+        assert_eq!(p.ckpt_fault(2), Some(CkptFault::Truncate));
+        assert_eq!(p.ckpt_fault(2), None);
+        for _ in 0..3 {
+            assert!(p.fire(FaultKind::Crash, 40));
+        }
+        assert!(!p.fire(FaultKind::Crash, 40), "@3 exhausted");
+        assert!(p.fire(FaultKind::ServePanic, 0));
+        for _ in 0..10 {
+            assert_eq!(p.ckpt_fault(5), Some(CkptFault::BitFlip), "@inf never drains");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_clauses() {
+        assert!(FaultPlan::parse("step:17").is_err(), "missing action");
+        assert!(FaultPlan::parse("step=nan_loss").is_err(), "missing index");
+        assert!(FaultPlan::parse("step:x=nan_loss").is_err(), "bad index");
+        assert!(FaultPlan::parse("step:1=explode").is_err(), "unknown action");
+        assert!(FaultPlan::parse("disk:1=truncate").is_err(), "unknown site");
+        assert!(FaultPlan::parse("step:1=crash@z").is_err(), "bad count");
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn empty_plan_never_fires() {
+        let p = FaultPlan::none();
+        for at in 0..100 {
+            assert!(!p.fire(FaultKind::NanLoss, at));
+            assert!(p.ckpt_fault(at).is_none());
+        }
+    }
+
+    #[test]
+    fn corrupt_image_is_deterministic() {
+        let img: Vec<u8> = (0..=255u8).collect();
+        let mut a = img.clone();
+        let mut b = img.clone();
+        corrupt_image(&mut a, CkptFault::Truncate);
+        corrupt_image(&mut b, CkptFault::Truncate);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 128);
+        let mut c = img.clone();
+        corrupt_image(&mut c, CkptFault::BitFlip);
+        let diff: Vec<usize> = (0..img.len()).filter(|&i| img[i] != c[i]).collect();
+        assert_eq!(diff, vec![img.len() / 3]);
+        assert_eq!(img[diff[0]] ^ c[diff[0]], 0x10);
+    }
+}

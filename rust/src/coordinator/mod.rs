@@ -1,11 +1,20 @@
 //! The L3 training coordinator: AdaPT-SGD (alg. 1) driving the compiled L2
 //! train-step through PJRT, with the precision policy fully host-side.
+//! `supervisor` wraps the same loop with full-state checkpoints, divergence
+//! rollback and deterministic fault injection.
 
 pub mod checkpoint;
+pub mod faults;
 pub mod scheduler;
+pub mod supervisor;
 pub mod trainer;
 
+pub use faults::{CkptFault, FaultKind, FaultPlan};
 pub use scheduler::LrSchedule;
+pub use supervisor::{
+    supervise, supervise_via_model, RunAborted, SupervisedOutcome, SupervisorConfig,
+    SupervisorError,
+};
 pub use trainer::{
     train, train_via_model, train_with_data, Policy, ServableModel, TrainConfig, TrainOutcome,
 };

@@ -3,6 +3,10 @@
 //! decreased for a given number of epochs"); step decay and cosine are
 //! provided for the hp-search harness.
 
+use anyhow::{bail, Result};
+
+use crate::util::blob::{BlobReader, BlobWriter};
+
 /// Scheduler state machine; `on_epoch(loss)` returns the lr for the next
 /// epoch.
 #[derive(Debug, Clone)]
@@ -110,6 +114,89 @@ impl LrSchedule {
             }
         }
     }
+
+    /// Serialize the full scheduler state for checkpointing. Floats travel
+    /// as raw bits so ROP's `best`/`lr` resume exactly (a decimal round
+    /// trip would perturb the plateau comparisons).
+    pub fn save_state(&self, w: &mut BlobWriter) {
+        match self {
+            LrSchedule::Constant { lr } => {
+                w.u8(0);
+                w.f32_bits(*lr);
+            }
+            LrSchedule::ReduceOnPlateau {
+                lr,
+                factor,
+                patience,
+                threshold,
+                min_lr,
+                best,
+                bad_epochs,
+            } => {
+                w.u8(1);
+                w.f32_bits(*lr);
+                w.f32_bits(*factor);
+                w.u32(*patience);
+                w.f32_bits(*threshold);
+                w.f32_bits(*min_lr);
+                w.f32_bits(*best);
+                w.u32(*bad_epochs);
+            }
+            LrSchedule::StepDecay {
+                lr0,
+                gamma,
+                every,
+                epoch,
+            } => {
+                w.u8(2);
+                w.f32_bits(*lr0);
+                w.f32_bits(*gamma);
+                w.u32(*every);
+                w.u32(*epoch);
+            }
+            LrSchedule::Cosine {
+                lr0,
+                min_lr,
+                total,
+                epoch,
+            } => {
+                w.u8(3);
+                w.f32_bits(*lr0);
+                w.f32_bits(*min_lr);
+                w.u32(*total);
+                w.u32(*epoch);
+            }
+        }
+    }
+
+    /// Inverse of [`save_state`](Self::save_state).
+    pub fn load_state(r: &mut BlobReader<'_>) -> Result<LrSchedule> {
+        Ok(match r.u8()? {
+            0 => LrSchedule::Constant { lr: r.f32_bits()? },
+            1 => LrSchedule::ReduceOnPlateau {
+                lr: r.f32_bits()?,
+                factor: r.f32_bits()?,
+                patience: r.u32()?,
+                threshold: r.f32_bits()?,
+                min_lr: r.f32_bits()?,
+                best: r.f32_bits()?,
+                bad_epochs: r.u32()?,
+            },
+            2 => LrSchedule::StepDecay {
+                lr0: r.f32_bits()?,
+                gamma: r.f32_bits()?,
+                every: r.u32()?,
+                epoch: r.u32()?,
+            },
+            3 => LrSchedule::Cosine {
+                lr0: r.f32_bits()?,
+                min_lr: r.f32_bits()?,
+                total: r.u32()?,
+                epoch: r.u32()?,
+            },
+            t => bail!("unknown LrSchedule tag {t}"),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -155,6 +242,58 @@ mod tests {
         let mut s = LrSchedule::rop(0.1, 0.5, 0, 1e-3);
         let lr = s.on_epoch(f32::NAN);
         assert_eq!(lr, 0.05);
+    }
+
+    /// The resume contract: a mid-run ROP snapshot must restore `best`,
+    /// `bad_epochs` and `lr` exactly, so the restored scheduler makes the
+    /// same reduce decisions on the same future losses, bit for bit.
+    #[test]
+    fn rop_snapshot_restore_round_trip_is_exact() {
+        let mut a = LrSchedule::rop(0.1, 0.5, 2, 1e-3);
+        // drive into a mid-plateau state: best set, bad_epochs == 1
+        a.on_epoch(1.0);
+        a.on_epoch(0.9);
+        a.on_epoch(0.9);
+
+        let mut w = BlobWriter::new();
+        a.save_state(&mut w);
+        let buf = w.into_vec();
+        let mut r = BlobReader::new(&buf);
+        let mut b = LrSchedule::load_state(&mut r).unwrap();
+        assert!(r.is_empty(), "blob fully consumed");
+
+        // internal state restored exactly
+        match (&a, &b) {
+            (
+                LrSchedule::ReduceOnPlateau { lr, best, bad_epochs, .. },
+                LrSchedule::ReduceOnPlateau { lr: lr2, best: best2, bad_epochs: bad2, .. },
+            ) => {
+                assert_eq!(lr.to_bits(), lr2.to_bits());
+                assert_eq!(best.to_bits(), best2.to_bits());
+                assert_eq!(bad_epochs, bad2);
+            }
+            _ => panic!("variant changed across round trip"),
+        }
+        // and future decisions agree bit for bit, including the reduce edge
+        for l in [0.9f32, 0.9, 0.9, 0.85, f32::NAN, 0.2] {
+            assert_eq!(a.on_epoch(l).to_bits(), b.on_epoch(l).to_bits());
+        }
+    }
+
+    #[test]
+    fn all_variants_round_trip() {
+        let scheds = [
+            LrSchedule::Constant { lr: 0.025 },
+            LrSchedule::StepDecay { lr0: 1.0, gamma: 0.1, every: 2, epoch: 3 },
+            LrSchedule::Cosine { lr0: 1.0, min_lr: 0.01, total: 10, epoch: 7 },
+        ];
+        for s in scheds {
+            let mut w = BlobWriter::new();
+            s.save_state(&mut w);
+            let buf = w.into_vec();
+            let back = LrSchedule::load_state(&mut BlobReader::new(&buf)).unwrap();
+            assert_eq!(s.current().to_bits(), back.current().to_bits());
+        }
     }
 
     #[test]

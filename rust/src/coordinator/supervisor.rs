@@ -1,0 +1,900 @@
+//! Crash-resumable, self-healing training runs.
+//!
+//! The supervisor owns the train loop (same semantics as
+//! `trainer::train_with_data`, verified bit-identical by
+//! `trainer_e2e::supervisor_matches_plain_trainer_bitwise`) and layers three
+//! robustness mechanisms on top:
+//!
+//! 1. **Full-state checkpoints.** Every `every_steps` steps (plus a step-0
+//!    baseline) the complete run state — master tensors, controller formats
+//!    and PushUp windows, pending switch events, data-order RNG, LR
+//!    scheduler, epoch/step cursors and the `RunRecord` prefix — is
+//!    serialized into the v2 `ADPT` aux section and written atomically by a
+//!    background thread. A ring of the newest `keep` checkpoints is
+//!    retained. Killing the process after step N and re-running with the
+//!    same config resumes from the newest loadable checkpoint and produces
+//!    a bit-identical trajectory to an uninterrupted run.
+//!
+//! 2. **Divergence rollback.** When a step reports a non-finite (or
+//!    over-threshold) loss/CE/gradient norm, the supervisor restores the
+//!    newest loadable checkpoint and applies a forced whole-net PushUp —
+//!    the paper's vanishing-gradient guard (sec. 3.3) used as a repair:
+//!    replayed steps get more fractional bits, so gradients that underflowed
+//!    to garbage at the old format survive at the new one. The recovered
+//!    state is immediately re-checkpointed under the same tag so repeated
+//!    rollbacks escalate precision instead of replaying one image. After
+//!    `max_rollbacks` recoveries the run fails with a typed
+//!    [`RunAborted`] — never a panic, never a silently wrong result.
+//!
+//! 3. **Deterministic fault injection.** A [`FaultPlan`] (env:
+//!    `ADAPT_FAULTS`) fires NaN losses, checkpoint corruption and simulated
+//!    crashes at exact step / write-ordinal indices, so every recovery path
+//!    above is exercised by deterministic tests rather than luck.
+//!
+//! The loop batches with the synchronous `Batcher` (bit-identical to the
+//! `PrefetchLoader`, pinned by `data::loader::tests::prefetch_matches_sync`)
+//! because resume needs a snapshotable data-order cursor.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::data::{Batcher, Dataset};
+use crate::init;
+use crate::metrics::{RunRecord, StepRow, SwitchEventLite};
+use crate::quant::{QuantController, QuantPool};
+use crate::runtime::{LoadedModel, Manifest, TrainState};
+use crate::util::blob::{BlobReader, BlobWriter};
+
+use super::checkpoint;
+use super::faults::{corrupt_image, FaultKind, FaultPlan};
+use super::scheduler::LrSchedule;
+use super::trainer::{datasets_for, evaluate, make_controller, Policy, TrainConfig, TrainOutcome};
+
+/// Version tag of the supervisor's aux-section layout.
+const AUX_VERSION: u32 = 1;
+
+/// Supervision knobs; everything has a production-sane default.
+#[derive(Debug, Clone)]
+pub struct SupervisorConfig {
+    /// Directory holding the checkpoint ring (`ckpt_<step>.adpt`).
+    pub ckpt_dir: PathBuf,
+    /// Checkpoint every n global steps; 0 disables periodic checkpoints
+    /// (the step-0 baseline is still written so rollback has a target).
+    pub every_steps: u64,
+    /// Number of newest checkpoints retained in the ring.
+    pub keep: usize,
+    /// Divergence recoveries allowed before the run aborts.
+    pub max_rollbacks: u32,
+    /// CE above this value counts as divergence even when finite
+    /// (default: infinity — only non-finite metrics trigger).
+    pub divergence_ce: f32,
+    /// Word-length bits added by the forced recovery PushUp.
+    pub push_up_bump: u8,
+    /// Injected faults (empty in production).
+    pub faults: Arc<FaultPlan>,
+}
+
+impl SupervisorConfig {
+    pub fn new(ckpt_dir: impl Into<PathBuf>) -> Self {
+        SupervisorConfig {
+            ckpt_dir: ckpt_dir.into(),
+            every_steps: 25,
+            keep: 3,
+            max_rollbacks: 3,
+            divergence_ce: f32::INFINITY,
+            push_up_bump: 4,
+            faults: FaultPlan::none(),
+        }
+    }
+
+    /// Defaults, with the fault plan (`ADAPT_FAULTS`), checkpoint cadence
+    /// (`ADAPT_CKPT_EVERY`) and rollback budget (`ADAPT_MAX_ROLLBACKS`)
+    /// taken from the environment when set.
+    pub fn from_env(ckpt_dir: impl Into<PathBuf>) -> Result<Self> {
+        let mut cfg = SupervisorConfig::new(ckpt_dir);
+        cfg.faults = FaultPlan::from_env()?;
+        if let Ok(v) = std::env::var("ADAPT_CKPT_EVERY") {
+            cfg.every_steps = v.parse().context("bad ADAPT_CKPT_EVERY")?;
+        }
+        if let Ok(v) = std::env::var("ADAPT_MAX_ROLLBACKS") {
+            cfg.max_rollbacks = v.parse().context("bad ADAPT_MAX_ROLLBACKS")?;
+        }
+        Ok(cfg)
+    }
+}
+
+/// Terminal outcome of an exhausted rollback budget.
+#[derive(Debug, Clone)]
+pub struct RunAborted {
+    /// Global step (1-based) whose metrics diverged last.
+    pub step: u64,
+    /// Recoveries performed before giving up.
+    pub rollbacks: u32,
+    /// The CE that triggered the final abort (typically NaN).
+    pub last_ce: f32,
+}
+
+/// Typed supervisor failures.
+#[derive(Debug)]
+pub enum SupervisorError {
+    /// Divergence persisted through every allowed rollback.
+    Aborted(RunAborted),
+    /// A `step:N=crash` fault fired — the simulated process kill. The
+    /// checkpoint ring on disk is synced before this returns, so a
+    /// follow-up run resumes exactly.
+    InjectedCrash { step: u64 },
+    /// Underlying training/runtime failure.
+    Train(anyhow::Error),
+}
+
+impl fmt::Display for SupervisorError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SupervisorError::Aborted(a) => write!(
+                f,
+                "run aborted: step {} still diverged (ce {}) after {} rollbacks",
+                a.step, a.last_ce, a.rollbacks
+            ),
+            SupervisorError::InjectedCrash { step } => {
+                write!(f, "injected crash after step {step}")
+            }
+            SupervisorError::Train(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for SupervisorError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SupervisorError::Train(e) => Some(e.as_ref()),
+            _ => None,
+        }
+    }
+}
+
+impl From<anyhow::Error> for SupervisorError {
+    fn from(e: anyhow::Error) -> Self {
+        SupervisorError::Train(e)
+    }
+}
+
+/// A finished supervised run plus its recovery telemetry.
+pub struct SupervisedOutcome {
+    pub outcome: TrainOutcome,
+    /// Divergence recoveries performed.
+    pub rollbacks: u32,
+    /// Checkpoint images written (including the step-0 baseline).
+    pub checkpoints: u64,
+    /// Step tag of the checkpoint this run resumed from, if any.
+    pub resumed_from: Option<u64>,
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint ring + background writer
+
+/// On-disk ring of `ckpt_<step>.adpt` files, newest `keep` retained.
+struct CkptRing {
+    dir: PathBuf,
+    keep: usize,
+    /// (step tag, path), sorted ascending by tag.
+    entries: Vec<(u64, PathBuf)>,
+    /// Write ordinal — the `ckpt:` fault-injection site.
+    writes: u64,
+}
+
+impl CkptRing {
+    fn scan(dir: &Path, keep: usize) -> CkptRing {
+        let mut entries = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(dir) {
+            for e in rd.flatten() {
+                let name = e.file_name();
+                let name = name.to_string_lossy();
+                if let Some(tag) = name
+                    .strip_prefix("ckpt_")
+                    .and_then(|s| s.strip_suffix(".adpt"))
+                    .and_then(|s| s.parse::<u64>().ok())
+                {
+                    entries.push((tag, e.path()));
+                }
+            }
+        }
+        entries.sort_by_key(|(t, _)| *t);
+        CkptRing {
+            dir: dir.to_path_buf(),
+            keep: keep.max(1),
+            entries,
+            writes: 0,
+        }
+    }
+
+    fn path_for(&self, tag: u64) -> PathBuf {
+        self.dir.join(format!("ckpt_{tag:012}.adpt"))
+    }
+
+    /// Register a write of `tag`; returns its path plus the paths evicted
+    /// from the ring (oldest first). Re-writing an existing tag (the
+    /// post-rollback escalation) evicts nothing.
+    fn record(&mut self, tag: u64) -> (PathBuf, Vec<PathBuf>) {
+        let path = self.path_for(tag);
+        if !self.entries.iter().any(|(t, _)| *t == tag) {
+            self.entries.push((tag, path.clone()));
+            self.entries.sort_by_key(|(t, _)| *t);
+        }
+        let mut evict = Vec::new();
+        while self.entries.len() > self.keep {
+            let (_, p) = self.entries.remove(0);
+            if p != path {
+                evict.push(p);
+            }
+        }
+        (path, evict)
+    }
+}
+
+enum WriterCmd {
+    Write {
+        bytes: Vec<u8>,
+        path: PathBuf,
+        evict: Vec<PathBuf>,
+    },
+    Sync(mpsc::Sender<()>),
+}
+
+/// Dedicated checkpoint-writer thread: the hot path serializes into a
+/// buffer and hands it off; disk latency never stalls a training step.
+struct CkptWriter {
+    tx: Option<mpsc::Sender<WriterCmd>>,
+    handle: Option<thread::JoinHandle<()>>,
+    errors: Arc<Mutex<Vec<String>>>,
+}
+
+impl CkptWriter {
+    fn spawn() -> CkptWriter {
+        let (tx, rx) = mpsc::channel::<WriterCmd>();
+        let errors = Arc::new(Mutex::new(Vec::new()));
+        let errs = errors.clone();
+        let handle = thread::spawn(move || {
+            for cmd in rx {
+                match cmd {
+                    WriterCmd::Write { bytes, path, evict } => {
+                        if let Err(e) = checkpoint::write_atomic(&bytes, &path) {
+                            errs.lock().unwrap().push(format!("{}: {e}", path.display()));
+                        }
+                        for p in evict {
+                            let _ = std::fs::remove_file(p);
+                        }
+                    }
+                    WriterCmd::Sync(done) => {
+                        let _ = done.send(());
+                    }
+                }
+            }
+        });
+        CkptWriter {
+            tx: Some(tx),
+            handle: Some(handle),
+            errors,
+        }
+    }
+
+    fn write(&self, bytes: Vec<u8>, path: PathBuf, evict: Vec<PathBuf>) {
+        let _ = self
+            .tx
+            .as_ref()
+            .expect("writer alive")
+            .send(WriterCmd::Write { bytes, path, evict });
+    }
+
+    /// Block until every enqueued write hit disk; drain accumulated errors.
+    fn sync(&self) -> Vec<String> {
+        let (dtx, drx) = mpsc::channel();
+        if self
+            .tx
+            .as_ref()
+            .expect("writer alive")
+            .send(WriterCmd::Sync(dtx))
+            .is_ok()
+        {
+            let _ = drx.recv();
+        }
+        std::mem::take(&mut *self.errors.lock().unwrap())
+    }
+}
+
+impl Drop for CkptWriter {
+    fn drop(&mut self) {
+        self.tx.take(); // close the channel so the thread drains and exits
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Aux blob: the full run state beyond the tensors
+
+/// Run state restored from a checkpoint's aux section.
+struct AuxState {
+    rec: RunRecord,
+    schedule: Option<LrSchedule>,
+    lr: f32,
+    global_step: u64,
+    epoch: usize,
+    done: usize,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn encode_aux(
+    controller: &dyn QuantController,
+    schedule: &Option<LrSchedule>,
+    lr: f32,
+    batcher: &Batcher,
+    rec: &RunRecord,
+    global_step: u64,
+    epoch: usize,
+    done: usize,
+) -> Vec<u8> {
+    let mut w = BlobWriter::new();
+    w.u32(AUX_VERSION);
+    w.str_lp(controller.name());
+    w.u64(global_step);
+    w.u64(epoch as u64);
+    w.u64(done as u64);
+    w.f32_bits(lr);
+    match schedule {
+        Some(s) => {
+            w.u8(1);
+            s.save_state(&mut w);
+        }
+        None => w.u8(0),
+    }
+    batcher.save_state(&mut w);
+    let mut cw = BlobWriter::new();
+    controller.save_state(&mut cw);
+    w.bytes_lp(&cw.into_vec());
+    let mut rw = BlobWriter::new();
+    rec.save_state(&mut rw);
+    w.bytes_lp(&rw.into_vec());
+    w.into_vec()
+}
+
+fn decode_aux(
+    aux: &[u8],
+    expect_schedule: bool,
+    controller: &mut dyn QuantController,
+    batcher: &mut Batcher,
+) -> Result<AuxState> {
+    let mut r = BlobReader::new(aux);
+    let v = r.u32()?;
+    ensure!(v == AUX_VERSION, "unknown supervisor aux version {v}");
+    let name = r.str_lp()?;
+    ensure!(
+        name == controller.name(),
+        "checkpoint was written by the `{name}` policy, this run uses `{}`",
+        controller.name()
+    );
+    let global_step = r.u64()?;
+    let epoch = r.u64()? as usize;
+    let done = r.u64()? as usize;
+    let lr = r.f32_bits()?;
+    let schedule = match r.u8()? {
+        0 => None,
+        1 => Some(LrSchedule::load_state(&mut r)?),
+        t => bail!("bad schedule presence byte {t}"),
+    };
+    ensure!(
+        schedule.is_some() == expect_schedule,
+        "checkpoint lr-schedule presence does not match the run config"
+    );
+    batcher.load_state(&mut r)?;
+    let cb = r.bytes_lp()?;
+    let mut cr = BlobReader::new(cb);
+    controller.load_state(&mut cr)?;
+    ensure!(
+        cr.is_empty(),
+        "controller snapshot has {} trailing bytes",
+        cr.remaining()
+    );
+    let rb = r.bytes_lp()?;
+    let mut rr = BlobReader::new(rb);
+    let rec = RunRecord::load_state(&mut rr)?;
+    ensure!(
+        rr.is_empty(),
+        "run-record snapshot has {} trailing bytes",
+        rr.remaining()
+    );
+    ensure!(r.is_empty(), "supervisor aux has {} trailing bytes", r.remaining());
+    Ok(AuxState {
+        rec,
+        schedule,
+        lr,
+        global_step,
+        epoch,
+        done,
+    })
+}
+
+/// Load + fully validate one checkpoint into a fresh controller/batcher.
+fn try_restore(
+    path: &Path,
+    man: &Manifest,
+    expect_schedule: bool,
+    controller: &mut dyn QuantController,
+    batcher: &mut Batcher,
+) -> Result<(TrainState, AuxState)> {
+    let ck = checkpoint::load_full(path).map_err(|e| anyhow!("{e}"))?;
+    ensure!(
+        ck.version >= 2,
+        "v{} checkpoints carry no run state to resume from",
+        ck.version
+    );
+    checkpoint::validate_against(&ck.state, man)?;
+    let aux = decode_aux(&ck.aux, expect_schedule, controller, batcher)?;
+    Ok((ck.state, aux))
+}
+
+/// Walk the ring newest-first and restore the first checkpoint that loads
+/// and validates end to end. Each attempt gets a *fresh* controller and
+/// batcher so a half-applied failure cannot leak into the next attempt; on
+/// success they replace the caller's.
+fn restore_latest(
+    entries: &[(u64, PathBuf)],
+    man: &Manifest,
+    cfg: &TrainConfig,
+    pool: &Option<Arc<QuantPool>>,
+    data: &Arc<dyn Dataset>,
+    controller: &mut Box<dyn QuantController>,
+    batcher: &mut Batcher,
+) -> Option<(u64, TrainState, AuxState)> {
+    for (tag, path) in entries.iter().rev() {
+        let mut c = make_controller(&cfg.policy, man, pool);
+        let mut b = Batcher::new(data.clone(), man.batch, cfg.seed ^ 0xBA7C4);
+        match try_restore(path, man, cfg.lr_schedule.is_some(), &mut *c, &mut b) {
+            Ok((state, aux)) => {
+                *controller = c;
+                *batcher = b;
+                return Some((*tag, state, aux));
+            }
+            Err(e) => {
+                eprintln!(
+                    "[supervisor] checkpoint {} unusable ({e}); trying older",
+                    path.display()
+                );
+            }
+        }
+    }
+    None
+}
+
+fn enqueue_checkpoint(
+    writer: &CkptWriter,
+    ring: &mut CkptRing,
+    faults: &FaultPlan,
+    state: &TrainState,
+    aux: &[u8],
+    tag: u64,
+) {
+    let mut bytes = checkpoint::encode(state, aux);
+    if let Some(f) = faults.ckpt_fault(ring.writes) {
+        eprintln!(
+            "[supervisor] injecting checkpoint fault {f:?} at write ordinal {}",
+            ring.writes
+        );
+        corrupt_image(&mut bytes, f);
+    }
+    ring.writes += 1;
+    let (path, evict) = ring.record(tag);
+    writer.write(bytes, path, evict);
+}
+
+// ---------------------------------------------------------------------------
+// The supervised loop
+
+/// [`supervise`] with datasets derived from the manifest, mirroring
+/// `train_via_model`.
+pub fn supervise_via_model(
+    model: &LoadedModel,
+    cfg: &TrainConfig,
+    sup: &SupervisorConfig,
+) -> Result<SupervisedOutcome, SupervisorError> {
+    let (data, eval) = datasets_for(&model.manifest, cfg.train_size, cfg.eval_size, cfg.seed)?;
+    supervise(model, cfg, sup, data, eval)
+}
+
+/// Run a crash-resumable, self-healing training loop. Without faults and
+/// without pre-existing checkpoints this produces a trajectory bit-identical
+/// to `train_with_data`; with a populated `ckpt_dir` it resumes the run
+/// from the newest loadable checkpoint.
+pub fn supervise(
+    model: &LoadedModel,
+    cfg: &TrainConfig,
+    sup: &SupervisorConfig,
+    data: Arc<dyn Dataset>,
+    eval: Arc<dyn Dataset>,
+) -> Result<SupervisedOutcome, SupervisorError> {
+    let man = &model.manifest;
+    if data.input_shape() != (man.input_shape[0], man.input_shape[1], man.input_shape[2]) {
+        return Err(anyhow!("dataset shape mismatch with artifact").into());
+    }
+    let batch = man.batch;
+    let steps_per_epoch = (data.len() / batch).max(1);
+    // Same pool policy as the trainer: reuse the backend's team for AdaPT.
+    let pool: Option<Arc<QuantPool>> = match &cfg.policy {
+        Policy::Adapt(_) => Some(
+            model
+                .pool
+                .clone()
+                .unwrap_or_else(|| Arc::new(QuantPool::with_default_threads())),
+        ),
+        _ => None,
+    };
+    let mut controller = make_controller(&cfg.policy, man, &pool);
+
+    let mut state = TrainState {
+        params: init::init_params(man, cfg.init, cfg.init_scale, cfg.seed),
+        gsum: init::init_gsum(man),
+        bn: init::init_bn(man),
+        step: cfg.seed.wrapping_mul(7919) % (1 << 20), // decorrelate PRNG streams
+    };
+    let mut batcher = Batcher::new(data.clone(), batch, cfg.seed ^ 0xBA7C4);
+    let mut hyper = cfg.hyper;
+    let mut schedule = cfg.lr_schedule.clone();
+    if let Some(sch) = &schedule {
+        hyper.lr = sch.current();
+    }
+    let mut rec = RunRecord {
+        name: cfg.artifact.clone(),
+        mode: cfg.policy.mode_name().to_string(),
+        batch,
+        accs: cfg.accs,
+        epochs: cfg.epochs,
+        steps_per_epoch,
+        num_layers: man.num_layers,
+        ..Default::default()
+    };
+    let mut global_step = 0u64;
+    let mut epoch = 0usize;
+    let mut done = 0usize; // steps completed within the current epoch
+
+    let mut ring = CkptRing::scan(&sup.ckpt_dir, sup.keep);
+    let writer = CkptWriter::spawn();
+    let mut rollbacks = 0u32;
+    let mut resumed_from = None;
+
+    if let Some((tag, st, aux)) = restore_latest(
+        &ring.entries,
+        man,
+        cfg,
+        &pool,
+        &data,
+        &mut controller,
+        &mut batcher,
+    ) {
+        state = st;
+        rec = aux.rec;
+        hyper.lr = aux.lr;
+        schedule = aux.schedule;
+        global_step = aux.global_step;
+        epoch = aux.epoch;
+        done = aux.done;
+        resumed_from = Some(tag);
+        eprintln!(
+            "[supervisor] resumed {} from checkpoint step {tag} (epoch {epoch}, {done}/{steps_per_epoch})",
+            cfg.artifact
+        );
+    } else if !ring.entries.is_empty() {
+        eprintln!(
+            "[supervisor] no loadable checkpoint in {}; starting fresh",
+            sup.ckpt_dir.display()
+        );
+    }
+
+    if resumed_from.is_none() {
+        // Step-0 baseline: the first rollback always has a target, even
+        // before the first periodic checkpoint (or with every_steps = 0).
+        let aux = encode_aux(
+            &*controller,
+            &schedule,
+            hyper.lr,
+            &batcher,
+            &rec,
+            global_step,
+            epoch,
+            done,
+        );
+        enqueue_checkpoint(&writer, &mut ring, &sup.faults, &state, &aux, global_step);
+    }
+
+    let t0 = Instant::now();
+    'outer: while epoch < cfg.epochs {
+        while done < steps_per_epoch {
+            let b = batcher.next_batch();
+            let qp = controller.qparams();
+            let mut m = model.train_step(&mut state, &b.x, &b.y, &qp, &hyper)?;
+            let this_step = global_step + 1;
+            if sup.faults.fire(FaultKind::NanLoss, this_step) {
+                eprintln!("[supervisor] injecting NaN loss at step {this_step}");
+                m.loss = f32::NAN;
+                m.ce = f32::NAN;
+                m.grad_norm.iter_mut().for_each(|g| *g = f32::NAN);
+            }
+            let diverged = !m.loss.is_finite()
+                || !m.ce.is_finite()
+                || m.ce > sup.divergence_ce
+                || m.grad_norm
+                    .iter()
+                    .chain(m.gsum_norm.iter())
+                    .any(|v| !v.is_finite());
+            if diverged {
+                if rollbacks >= sup.max_rollbacks {
+                    return Err(SupervisorError::Aborted(RunAborted {
+                        step: this_step,
+                        rollbacks,
+                        last_ce: m.ce,
+                    }));
+                }
+                rollbacks += 1;
+                for e in writer.sync() {
+                    eprintln!("[supervisor] checkpoint write failed: {e}");
+                }
+                let Some((tag, st, aux)) = restore_latest(
+                    &ring.entries,
+                    man,
+                    cfg,
+                    &pool,
+                    &data,
+                    &mut controller,
+                    &mut batcher,
+                ) else {
+                    return Err(SupervisorError::Aborted(RunAborted {
+                        step: this_step,
+                        rollbacks,
+                        last_ce: m.ce,
+                    }));
+                };
+                state = st;
+                rec = aux.rec;
+                hyper.lr = aux.lr;
+                schedule = aux.schedule;
+                global_step = aux.global_step;
+                epoch = aux.epoch;
+                done = aux.done;
+                let raised = controller.force_push_up(&mut state, sup.push_up_bump);
+                eprintln!(
+                    "[supervisor] step {this_step} diverged (ce {}): rolled back to step {tag} \
+                     (rollback {rollbacks}/{}), precision {}",
+                    m.ce,
+                    sup.max_rollbacks,
+                    if raised { "raised" } else { "unchanged" }
+                );
+                // Persist the recovered+raised state under the same tag so
+                // the next rollback escalates instead of replaying this image.
+                let aux2 = encode_aux(
+                    &*controller,
+                    &schedule,
+                    hyper.lr,
+                    &batcher,
+                    &rec,
+                    global_step,
+                    epoch,
+                    done,
+                );
+                enqueue_checkpoint(&writer, &mut ring, &sup.faults, &state, &aux2, global_step);
+                continue 'outer;
+            }
+
+            controller.on_step(&mut state, &m);
+            global_step += 1;
+            done += 1;
+            rec.steps.push(StepRow {
+                loss: m.loss,
+                ce: m.ce,
+                acc: m.acc,
+            });
+            rec.layer_wl.push(controller.wordlengths());
+            rec.layer_nz
+                .push(m.sparsity.iter().map(|&s| 1.0 - s).collect());
+            let lb = controller.lookbacks();
+            if !lb.is_empty() {
+                rec.layer_lb.push(lb);
+                rec.layer_res.push(controller.resolutions());
+            }
+            let wnz = controller.weight_nz();
+            if !wnz.is_empty() {
+                rec.layer_wnz.push(wnz);
+                rec.layer_wmax.push(controller.weight_max_abs());
+            }
+            if cfg.log_every > 0 && global_step % cfg.log_every as u64 == 0 {
+                eprintln!(
+                    "[{}/{}] epoch {epoch} step {global_step}: loss {:.4} acc {:.3} wl {:?}",
+                    cfg.artifact,
+                    controller.name(),
+                    m.loss,
+                    m.acc,
+                    controller.wordlengths()
+                );
+            }
+            if sup.every_steps > 0 && global_step % sup.every_steps == 0 {
+                let aux = encode_aux(
+                    &*controller,
+                    &schedule,
+                    hyper.lr,
+                    &batcher,
+                    &rec,
+                    global_step,
+                    epoch,
+                    done,
+                );
+                enqueue_checkpoint(&writer, &mut ring, &sup.faults, &state, &aux, global_step);
+            }
+            if sup.faults.fire(FaultKind::Crash, global_step) {
+                for e in writer.sync() {
+                    eprintln!("[supervisor] checkpoint write failed: {e}");
+                }
+                return Err(SupervisorError::InjectedCrash { step: global_step });
+            }
+        }
+        let t_sync = Instant::now();
+        controller.on_epoch_end(&mut state, epoch);
+        rec.switch_secs += t_sync.elapsed().as_secs_f64();
+        if let Some(sch) = &mut schedule {
+            let tail = &rec.steps[rec.steps.len() - steps_per_epoch..];
+            let mean_loss = tail.iter().map(|s| s.loss).sum::<f32>() / tail.len() as f32;
+            hyper.lr = sch.on_epoch(mean_loss);
+        }
+        let last = epoch + 1 == cfg.epochs;
+        if last || (cfg.eval_every > 0 && (epoch + 1) % cfg.eval_every == 0) {
+            let acc = evaluate(model, &state, &controller.qparams(), eval.as_ref())?;
+            rec.evals.push((global_step, acc));
+            if cfg.log_every > 0 {
+                eprintln!(
+                    "[{}/{}] epoch {epoch}: EVAL acc {acc:.4}",
+                    cfg.artifact,
+                    controller.name()
+                );
+            }
+        }
+        epoch += 1;
+        done = 0;
+    }
+
+    for e in writer.sync() {
+        eprintln!("[supervisor] checkpoint write failed: {e}");
+    }
+    rec.switches = controller
+        .take_events()
+        .iter()
+        .map(SwitchEventLite::from)
+        .collect();
+    rec.wall_secs += t0.elapsed().as_secs_f64();
+    let final_qparams = controller.qparams();
+    let final_wordlengths = controller.wordlengths();
+    Ok(SupervisedOutcome {
+        outcome: TrainOutcome {
+            record: rec,
+            state,
+            final_qparams,
+            final_wordlengths,
+        },
+        rollbacks,
+        checkpoints: ring.writes,
+        resumed_from,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticVision;
+    use crate::runtime::manifest::test_mlp_manifest;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("adapt_sup_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn aux_round_trip_restores_every_cursor() {
+        let man = test_mlp_manifest();
+        let data: Arc<dyn Dataset> = Arc::new(SyntheticVision::mnist_like(64, 0));
+        let cfg = TrainConfig::fast("mlp", Policy::Float32);
+        let controller = make_controller(&cfg.policy, &man, &None);
+        let mut batcher = Batcher::new(data.clone(), 8, 42);
+        for _ in 0..5 {
+            batcher.next_batch();
+        }
+        let schedule = Some(LrSchedule::rop(0.05, 0.5, 2, 1e-3));
+        let mut rec = RunRecord {
+            name: "mlp".into(),
+            mode: "float32".into(),
+            ..Default::default()
+        };
+        rec.steps.push(StepRow {
+            loss: 1.5,
+            ce: 1.25,
+            acc: 0.5,
+        });
+        let aux = encode_aux(&*controller, &schedule, 0.025, &batcher, &rec, 17, 2, 3);
+
+        let mut c2 = make_controller(&cfg.policy, &man, &None);
+        let mut b2 = Batcher::new(data.clone(), 8, 999);
+        let st = decode_aux(&aux, true, &mut *c2, &mut b2).unwrap();
+        assert_eq!(st.global_step, 17);
+        assert_eq!(st.epoch, 2);
+        assert_eq!(st.done, 3);
+        assert_eq!(st.lr.to_bits(), 0.025f32.to_bits());
+        assert!(st.schedule.is_some());
+        assert_eq!(st.rec.steps.len(), 1);
+        assert_eq!(st.rec.steps[0].ce.to_bits(), 1.25f32.to_bits());
+        // restored batcher continues the original stream
+        let mut b3 = Batcher::new(data, 8, 42);
+        for _ in 0..5 {
+            b3.next_batch();
+        }
+        let a = b3.next_batch();
+        let b = b2.next_batch();
+        assert_eq!(a.y, b.y);
+
+        // policy mismatch is a typed refusal, not garbage state
+        let man2 = test_mlp_manifest();
+        let mut wrong = make_controller(
+            &Policy::Muppet(crate::muppet::MuppetHyper::default()),
+            &man2,
+            &None,
+        );
+        let mut b4 = Batcher::new(Arc::new(SyntheticVision::mnist_like(64, 0)), 8, 1);
+        assert!(decode_aux(&aux, true, &mut *wrong, &mut b4).is_err());
+        // schedule presence mismatch likewise
+        let mut c3 = make_controller(&cfg.policy, &man, &None);
+        let mut b5 = Batcher::new(Arc::new(SyntheticVision::mnist_like(64, 0)), 8, 1);
+        assert!(decode_aux(&aux, false, &mut *c3, &mut b5).is_err());
+    }
+
+    #[test]
+    fn ring_scans_sorted_and_evicts_oldest() {
+        let dir = tmpdir("ring");
+        std::fs::create_dir_all(&dir).unwrap();
+        for tag in [30u64, 10, 20] {
+            std::fs::write(dir.join(format!("ckpt_{tag:012}.adpt")), b"x").unwrap();
+        }
+        std::fs::write(dir.join("not_a_ckpt.txt"), b"x").unwrap();
+        let mut ring = CkptRing::scan(&dir, 3);
+        assert_eq!(
+            ring.entries.iter().map(|(t, _)| *t).collect::<Vec<_>>(),
+            vec![10, 20, 30]
+        );
+        let (_, evict) = ring.record(40);
+        assert_eq!(evict, vec![ring.path_for(10)]);
+        // overwriting an existing tag neither duplicates nor evicts
+        let (_, evict) = ring.record(40);
+        assert!(evict.is_empty());
+        assert_eq!(ring.entries.len(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn writer_thread_lands_atomic_checkpoints() {
+        let dir = tmpdir("writer");
+        let writer = CkptWriter::spawn();
+        let state = TrainState {
+            params: vec![vec![1.0, 2.0]],
+            gsum: vec![vec![0.0, 0.0]],
+            bn: vec![],
+            step: 5,
+        };
+        let bytes = checkpoint::encode(&state, b"aux");
+        let path = dir.join("ckpt_000000000005.adpt");
+        writer.write(bytes, path.clone(), Vec::new());
+        assert!(writer.sync().is_empty());
+        let ck = checkpoint::load_full(&path).unwrap();
+        assert_eq!(ck.aux, b"aux");
+        assert_eq!(ck.state.step, 5);
+        drop(writer);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

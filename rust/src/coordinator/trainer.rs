@@ -152,7 +152,7 @@ impl TrainOutcome {
 /// train split but uses disjoint samples. Real CIFAR is used when
 /// $ADAPT_DATA contains the binaries; otherwise the synthetic substitute
 /// (DESIGN.md #Substitutions).
-fn datasets_for(
+pub(crate) fn datasets_for(
     man: &crate::runtime::Manifest,
     train_len: usize,
     eval_len: usize,
@@ -190,7 +190,7 @@ fn datasets_for(
     Ok((Arc::new(train), Arc::new(eval)))
 }
 
-fn make_controller(
+pub(crate) fn make_controller(
     policy: &Policy,
     man: &crate::runtime::Manifest,
     pool: &Option<Arc<QuantPool>>,
@@ -208,7 +208,7 @@ fn make_controller(
 }
 
 /// Evaluate quantized top-1 accuracy over the held-out set.
-fn evaluate(
+pub(crate) fn evaluate(
     model: &LoadedModel,
     state: &TrainState,
     qparams: &[f32],

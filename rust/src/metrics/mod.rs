@@ -4,9 +4,10 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::quant::SwitchEvent;
+use crate::util::blob::{BlobReader, BlobWriter};
 use crate::util::json::{arr_f32, num, Json};
 
 /// Per-training-step scalars.
@@ -335,6 +336,180 @@ impl RunRecord {
         })
     }
 
+    /// Serialize the record into a checkpoint blob, bit-exactly. Unlike
+    /// [`to_json`](Self::to_json) (which renders floats as decimal text),
+    /// every float travels as raw IEEE bits, so a resumed run's record is
+    /// indistinguishable from an uninterrupted one — including NaN
+    /// payloads and signed zeros.
+    pub fn save_state(&self, w: &mut BlobWriter) {
+        w.str_lp(&self.name);
+        w.str_lp(&self.mode);
+        w.u64(self.batch as u64);
+        w.u32(self.accs);
+        w.u64(self.epochs as u64);
+        w.u64(self.steps_per_epoch as u64);
+        w.u64(self.num_layers as u64);
+        w.u64(self.steps.len() as u64);
+        for s in &self.steps {
+            w.f32_bits(s.loss);
+            w.f32_bits(s.ce);
+            w.f32_bits(s.acc);
+        }
+        w.u64(self.layer_wl.len() as u64);
+        for row in &self.layer_wl {
+            w.bytes_lp(row);
+        }
+        w.u64(self.layer_nz.len() as u64);
+        for row in &self.layer_nz {
+            w.f32_vec(row);
+        }
+        w.u64(self.layer_lb.len() as u64);
+        for row in &self.layer_lb {
+            w.u64(row.len() as u64);
+            for &v in row {
+                w.u32(v);
+            }
+        }
+        w.u64(self.layer_res.len() as u64);
+        for row in &self.layer_res {
+            w.u64(row.len() as u64);
+            for &v in row {
+                w.u32(v);
+            }
+        }
+        w.u64(self.layer_wnz.len() as u64);
+        for row in &self.layer_wnz {
+            w.f32_vec(row);
+        }
+        w.u64(self.layer_wmax.len() as u64);
+        for row in &self.layer_wmax {
+            w.f32_vec(row);
+        }
+        w.u64(self.evals.len() as u64);
+        for &(s, a) in &self.evals {
+            w.u64(s);
+            w.f32_bits(a);
+        }
+        w.u64(self.switches.len() as u64);
+        for e in &self.switches {
+            w.u64(e.step);
+            w.u64(e.layer as u64); // two's complement round-trips -1
+            w.u8(e.old_wl);
+            w.u8(e.old_fl);
+            w.u8(e.new_wl);
+            w.u8(e.new_fl);
+            w.f64_bits(e.diversity);
+        }
+        w.f64_bits(self.wall_secs);
+        w.f64_bits(self.switch_secs);
+    }
+
+    /// Inverse of [`save_state`](Self::save_state).
+    pub fn load_state(r: &mut BlobReader<'_>) -> Result<RunRecord> {
+        // every counted element occupies >= 1 byte, so a count can never
+        // legitimately exceed what's left in the buffer
+        fn counted(r: &BlobReader<'_>, n: u64, what: &str) -> Result<usize> {
+            ensure!(
+                n as usize <= r.remaining(),
+                "run record claims {n} {what} with {} bytes left",
+                r.remaining()
+            );
+            Ok(n as usize)
+        }
+        let name = r.str_lp()?;
+        let mode = r.str_lp()?;
+        let batch = r.u64()? as usize;
+        let accs = r.u32()?;
+        let epochs = r.u64()? as usize;
+        let steps_per_epoch = r.u64()? as usize;
+        let num_layers = r.u64()? as usize;
+        let n = counted(r, r.u64()?, "steps")?;
+        let mut steps = Vec::with_capacity(n);
+        for _ in 0..n {
+            steps.push(StepRow {
+                loss: r.f32_bits()?,
+                ce: r.f32_bits()?,
+                acc: r.f32_bits()?,
+            });
+        }
+        let n = counted(r, r.u64()?, "wl rows")?;
+        let mut layer_wl = Vec::with_capacity(n);
+        for _ in 0..n {
+            layer_wl.push(r.bytes_lp()?.to_vec());
+        }
+        let n = counted(r, r.u64()?, "nz rows")?;
+        let mut layer_nz = Vec::with_capacity(n);
+        for _ in 0..n {
+            layer_nz.push(r.f32_vec()?);
+        }
+        let mut u32_rows = |r: &mut BlobReader<'_>, what| -> Result<Vec<Vec<u32>>> {
+            let n = counted(r, r.u64()?, what)?;
+            let mut rows = Vec::with_capacity(n);
+            for _ in 0..n {
+                let m = counted(r, r.u64()?, what)?;
+                let mut row = Vec::with_capacity(m);
+                for _ in 0..m {
+                    row.push(r.u32()?);
+                }
+                rows.push(row);
+            }
+            Ok(rows)
+        };
+        let layer_lb = u32_rows(r, "lb rows")?;
+        let layer_res = u32_rows(r, "res rows")?;
+        let n = counted(r, r.u64()?, "wnz rows")?;
+        let mut layer_wnz = Vec::with_capacity(n);
+        for _ in 0..n {
+            layer_wnz.push(r.f32_vec()?);
+        }
+        let n = counted(r, r.u64()?, "wmax rows")?;
+        let mut layer_wmax = Vec::with_capacity(n);
+        for _ in 0..n {
+            layer_wmax.push(r.f32_vec()?);
+        }
+        let n = counted(r, r.u64()?, "evals")?;
+        let mut evals = Vec::with_capacity(n);
+        for _ in 0..n {
+            let s = r.u64()?;
+            evals.push((s, r.f32_bits()?));
+        }
+        let n = counted(r, r.u64()?, "switches")?;
+        let mut switches = Vec::with_capacity(n);
+        for _ in 0..n {
+            switches.push(SwitchEventLite {
+                step: r.u64()?,
+                layer: r.u64()? as i64,
+                old_wl: r.u8()?,
+                old_fl: r.u8()?,
+                new_wl: r.u8()?,
+                new_fl: r.u8()?,
+                diversity: r.f64_bits()?,
+            });
+        }
+        let wall_secs = r.f64_bits()?;
+        let switch_secs = r.f64_bits()?;
+        Ok(RunRecord {
+            name,
+            mode,
+            batch,
+            accs,
+            epochs,
+            steps_per_epoch,
+            num_layers,
+            steps,
+            layer_wl,
+            layer_nz,
+            layer_wnz,
+            layer_wmax,
+            layer_lb,
+            layer_res,
+            evals,
+            switches,
+            wall_secs,
+            switch_secs,
+        })
+    }
+
     pub fn save(&self, path: &Path) -> Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
@@ -432,6 +607,65 @@ mod tests {
         let back = RunRecord::from_json(&j).unwrap();
         assert!(back.layer_wnz.is_empty());
         assert!(back.layer_wmax.is_empty());
+    }
+
+    #[test]
+    fn blob_round_trip_is_bit_exact_including_nan() {
+        let mut r = sample_record();
+        // hostile values JSON cannot round-trip exactly
+        r.steps.push(StepRow {
+            loss: f32::NAN,
+            ce: f32::from_bits(0x7fc0_1234), // NaN with payload
+            acc: -0.0,
+        });
+        r.switches.push(SwitchEventLite {
+            step: 9,
+            layer: -1, // MuPPET global switch
+            old_wl: 8,
+            old_fl: 0,
+            new_wl: 12,
+            new_fl: 0,
+            diversity: f64::INFINITY,
+        });
+        let mut w = BlobWriter::new();
+        r.save_state(&mut w);
+        let buf = w.into_vec();
+        let mut rd = BlobReader::new(&buf);
+        let back = RunRecord::load_state(&mut rd).unwrap();
+        assert!(rd.is_empty());
+        assert_eq!(back.name, r.name);
+        assert_eq!(back.mode, r.mode);
+        assert_eq!(back.batch, r.batch);
+        assert_eq!(back.steps.len(), r.steps.len());
+        for (a, b) in back.steps.iter().zip(&r.steps) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.ce.to_bits(), b.ce.to_bits());
+            assert_eq!(a.acc.to_bits(), b.acc.to_bits());
+        }
+        assert_eq!(back.layer_wl, r.layer_wl);
+        assert_eq!(back.layer_nz, r.layer_nz);
+        assert_eq!(back.layer_lb, r.layer_lb);
+        assert_eq!(back.layer_res, r.layer_res);
+        assert_eq!(back.layer_wnz, r.layer_wnz);
+        assert_eq!(back.layer_wmax, r.layer_wmax);
+        assert_eq!(back.evals, r.evals);
+        assert_eq!(back.switches.len(), r.switches.len());
+        let last = back.switches.last().unwrap();
+        assert_eq!(last.layer, -1, "negative layer survives the u64 cast");
+        assert!(last.diversity.is_infinite());
+        assert_eq!(back.wall_secs.to_bits(), r.wall_secs.to_bits());
+    }
+
+    #[test]
+    fn blob_load_rejects_truncation_without_panic() {
+        let r = sample_record();
+        let mut w = BlobWriter::new();
+        r.save_state(&mut w);
+        let buf = w.into_vec();
+        for cut in [0, 1, buf.len() / 2, buf.len() - 1] {
+            let mut rd = BlobReader::new(&buf[..cut]);
+            assert!(RunRecord::load_state(&mut rd).is_err(), "cut={cut}");
+        }
     }
 
     #[test]

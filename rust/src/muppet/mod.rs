@@ -9,12 +9,15 @@
 //!  * switches only at epoch boundaries, only upward,
 //!  * final epochs in float32 (so the output model is NOT quantized).
 
+use anyhow::{ensure, Result};
+
 use crate::fixedpoint::quantize::max_abs;
-use crate::quant::qmap::{QuantController, SwitchEvent};
+use crate::quant::qmap::{read_events, write_events, QuantController, SwitchEvent};
 use crate::quant::Strategy;
 use crate::fixedpoint::format::FixedPointFormat;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::step::{StepMetrics, TrainState};
+use crate::util::blob::{BlobReader, BlobWriter};
 
 /// MuPPET hyperparameters (defaults follow Rajagopal et al. 2020).
 #[derive(Debug, Clone)]
@@ -258,6 +261,98 @@ impl QuantController for MuppetController {
     fn take_events(&mut self) -> Vec<SwitchEvent> {
         std::mem::take(&mut self.events)
     }
+
+    fn save_state(&self, w: &mut BlobWriter) {
+        w.u32(1); // muppet snapshot schema
+        w.u64(self.step);
+        w.u32(self.rung as u32);
+        w.u32(self.violations);
+        w.u32(self.num_layers as u32);
+        for ls in &self.scales {
+            w.u32(ls.s_weights as u32);
+            w.u32(ls.s_act as u32);
+        }
+        for &v in &self.sq_norm_sum {
+            w.f64_bits(v);
+        }
+        for &v in &self.last_gsum_norm {
+            w.f32_bits(v);
+        }
+        w.u32(self.diversity_history.len() as u32);
+        for &d in &self.diversity_history {
+            w.f64_bits(d);
+        }
+        write_events(w, &self.events);
+    }
+
+    fn load_state(&mut self, r: &mut BlobReader<'_>) -> Result<()> {
+        let schema = r.u32()?;
+        ensure!(schema == 1, "unknown muppet snapshot schema {schema}");
+        let step = r.u64()?;
+        let rung = r.u32()? as usize;
+        ensure!(rung <= self.hyper.ladder.len(), "snapshot rung {rung} beyond ladder");
+        let violations = r.u32()?;
+        let n = r.u32()? as usize;
+        ensure!(n == self.num_layers, "snapshot has {n} layers, model has {}", self.num_layers);
+        let mut scales = Vec::with_capacity(n);
+        for _ in 0..n {
+            scales.push(LayerScale {
+                s_weights: r.u32()? as i32,
+                s_act: r.u32()? as i32,
+            });
+        }
+        let mut sq_norm_sum = Vec::with_capacity(n);
+        for _ in 0..n {
+            sq_norm_sum.push(r.f64_bits()?);
+        }
+        let mut last_gsum_norm = Vec::with_capacity(n);
+        for _ in 0..n {
+            last_gsum_norm.push(r.f32_bits()?);
+        }
+        let h = r.u32()? as usize;
+        ensure!(h <= 1_000_000, "implausible diversity history {h}");
+        let mut diversity_history = Vec::with_capacity(h);
+        for _ in 0..h {
+            diversity_history.push(r.f64_bits()?);
+        }
+        let events = read_events(r)?;
+        self.step = step;
+        self.rung = rung;
+        self.violations = violations;
+        self.scales = scales;
+        self.sq_norm_sum = sq_norm_sum;
+        self.last_gsum_norm = last_gsum_norm;
+        self.diversity_history = diversity_history;
+        self.events = events;
+        Ok(())
+    }
+
+    /// MuPPET's precision axis is its global ladder: a forced recovery
+    /// climbs one rung (the last rung hands over to float32), resetting the
+    /// violation state exactly as a diversity-triggered switch would.
+    fn force_push_up(&mut self, state: &mut TrainState, _bump: u8) -> bool {
+        let Some(old_wl) = self.wl() else {
+            return false; // already in the float32 refinement phase
+        };
+        self.rung += 1;
+        self.violations = 0;
+        self.diversity_history.clear();
+        let new_wl = self.wl().unwrap_or(32);
+        self.events.push(SwitchEvent {
+            step: self.step,
+            layer: usize::MAX,
+            old: FixedPointFormat::new(old_wl, 0),
+            new: FixedPointFormat::new(new_wl, 0),
+            min_fmt: FixedPointFormat::new(new_wl, 0),
+            diversity: f64::INFINITY,
+            kl: 0.0,
+            lookback: 0,
+            resolution: 0,
+            strategy: Strategy::Max,
+        });
+        self.refresh_weight_scales(state);
+        true
+    }
 }
 
 #[cfg(test)]
@@ -305,6 +400,79 @@ mod tests {
             c.on_epoch_end(&mut st, epoch);
         }
         assert!(c.rung > 0, "MuPPET never climbed the ladder");
+    }
+
+    #[test]
+    fn snapshot_restore_continues_identically() {
+        let man = mlp_manifest();
+        let mut a = MuppetController::new(&man, MuppetHyper::default());
+        let mut sa = TrainState {
+            params: crate::init::init_params(&man, crate::init::Initializer::Tnvs, 1.0, 0),
+            gsum: crate::init::init_gsum(&man),
+            bn: crate::init::init_bn(&man),
+            step: 0,
+        };
+        let mk = |epoch: usize| StepMetrics {
+            loss: 1.0,
+            ce: 1.0,
+            acc: 0.5,
+            grad_norm: vec![1.0; man.num_layers],
+            gsum_norm: vec![2.0 * (1.0 + epoch as f32); man.num_layers],
+            sparsity: vec![0.0; man.num_layers],
+            act_absmax: vec![1.0; man.num_layers],
+        };
+        for epoch in 0..3 {
+            for _ in 0..5 {
+                a.on_step(&mut sa, &mk(epoch));
+            }
+            a.on_epoch_end(&mut sa, epoch);
+        }
+        let mut w = BlobWriter::new();
+        a.save_state(&mut w);
+        let buf = w.into_vec();
+
+        let mut b = MuppetController::new(&man, MuppetHyper::default());
+        let mut sb = TrainState {
+            params: sa.params.clone(),
+            gsum: sa.gsum.clone(),
+            bn: sa.bn.clone(),
+            step: sa.step,
+        };
+        let mut r = BlobReader::new(&buf);
+        b.load_state(&mut r).unwrap();
+        assert!(r.is_empty());
+        assert_eq!(a.rung, b.rung);
+        assert_eq!(a.qparams(), b.qparams());
+        for epoch in 3..8 {
+            for _ in 0..5 {
+                a.on_step(&mut sa, &mk(epoch));
+                b.on_step(&mut sb, &mk(epoch));
+            }
+            a.on_epoch_end(&mut sa, epoch);
+            b.on_epoch_end(&mut sb, epoch);
+        }
+        assert_eq!(a.rung, b.rung);
+        assert_eq!(a.wordlengths(), b.wordlengths());
+        assert_eq!(a.qparams(), b.qparams());
+    }
+
+    #[test]
+    fn force_push_up_climbs_one_rung() {
+        let man = mlp_manifest();
+        let mut c = MuppetController::new(&man, MuppetHyper::default());
+        let mut st = TrainState {
+            params: crate::init::init_params(&man, crate::init::Initializer::Tnvs, 1.0, 0),
+            gsum: crate::init::init_gsum(&man),
+            bn: crate::init::init_bn(&man),
+            step: 0,
+        };
+        assert_eq!(c.wordlengths()[0], 8);
+        assert!(c.force_push_up(&mut st, 4));
+        assert_eq!(c.wordlengths()[0], 12, "one rung per recovery");
+        // exhaust the ladder: ends in float32, then nothing left to raise
+        while c.force_push_up(&mut st, 4) {}
+        assert_eq!(c.wordlengths()[0], 32);
+        assert!(!c.force_push_up(&mut st, 4));
     }
 
     #[test]

@@ -28,6 +28,25 @@ impl Strategy {
             Strategy::Max => "max",
         }
     }
+
+    /// Stable wire tag for checkpoint snapshots.
+    pub fn tag(self) -> u8 {
+        match self {
+            Strategy::Min => 0,
+            Strategy::Mean => 1,
+            Strategy::Max => 2,
+        }
+    }
+
+    /// Inverse of [`tag`](Self::tag).
+    pub fn from_tag(t: u8) -> Option<Strategy> {
+        match t {
+            0 => Some(Strategy::Min),
+            1 => Some(Strategy::Mean),
+            2 => Some(Strategy::Max),
+            _ => None,
+        }
+    }
 }
 
 /// Gradient diversity (eq. 3): sum of per-batch gradient L2 norms over the

@@ -17,9 +17,12 @@
 
 use std::sync::Arc;
 
+use anyhow::{anyhow, ensure, Result};
+
 use crate::fixedpoint::format::FixedPointFormat;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::step::{StepMetrics, TrainState};
+use crate::util::blob::{BlobReader, BlobWriter};
 
 use super::parallel::PushDownJob;
 use super::pool::QuantPool;
@@ -79,6 +82,75 @@ pub trait QuantController: Send {
     }
     /// Drain recorded switch events.
     fn take_events(&mut self) -> Vec<SwitchEvent>;
+    /// Serialize the policy's full adaptive state (formats, windows,
+    /// strategy, pending events) for checkpointing. Stateless policies
+    /// write nothing. The blob must restore bit-exactly via
+    /// [`load_state`](Self::load_state) — the supervisor's
+    /// resume-determinism anchor depends on it.
+    fn save_state(&self, _w: &mut BlobWriter) {}
+    /// Restore a snapshot taken by [`save_state`](Self::save_state) on a
+    /// freshly built controller over the same manifest + hyper.
+    fn load_state(&mut self, _r: &mut BlobReader<'_>) -> Result<()> {
+        Ok(())
+    }
+    /// Divergence recovery (the supervisor's rollback policy): raise the
+    /// whole net's precision so replayed steps keep enough gradient signal
+    /// — the paper's vanishing-gradient guard applied as a repair. Returns
+    /// false for policies with nothing to raise (e.g. the f32 baseline).
+    fn force_push_up(&mut self, _state: &mut TrainState, _bump: u8) -> bool {
+        false
+    }
+}
+
+/// Shared wire encoding of pending [`SwitchEvent`]s (used by the AdaPT and
+/// MuPPET controller snapshots).
+pub(crate) fn write_events(w: &mut BlobWriter, events: &[SwitchEvent]) {
+    w.u32(events.len() as u32);
+    for e in events {
+        w.u64(e.step);
+        w.u64(e.layer as u64);
+        for f in [e.old, e.new, e.min_fmt] {
+            w.u8(f.wl);
+            w.u8(f.fl);
+        }
+        w.f64_bits(e.diversity);
+        w.f64_bits(e.kl);
+        w.u32(e.lookback);
+        w.u32(e.resolution);
+        w.u8(e.strategy.tag());
+    }
+}
+
+/// Inverse of [`write_events`].
+pub(crate) fn read_events(r: &mut BlobReader<'_>) -> Result<Vec<SwitchEvent>> {
+    let n = r.u32()? as usize;
+    ensure!(n <= 10_000_000, "implausible event count {n}");
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let step = r.u64()?;
+        let layer = r.u64()? as usize;
+        let mut fmts = [FixedPointFormat::initial(); 3];
+        for f in &mut fmts {
+            let wl = r.u8()?;
+            let fl = r.u8()?;
+            // `new` clamps; saved formats were produced by `new`, so this
+            // is a no-op round trip for any well-formed snapshot
+            *f = FixedPointFormat::new(wl, fl);
+        }
+        out.push(SwitchEvent {
+            step,
+            layer,
+            old: fmts[0],
+            new: fmts[1],
+            min_fmt: fmts[2],
+            diversity: r.f64_bits()?,
+            kl: r.f64_bits()?,
+            lookback: r.u32()?,
+            resolution: r.u32()?,
+            strategy: Strategy::from_tag(r.u8()?).ok_or_else(|| anyhow!("bad strategy tag"))?,
+        });
+    }
+    Ok(out)
 }
 
 // ---------------------------------------------------------------------------
@@ -382,6 +454,92 @@ impl QuantController for AdaptController {
     fn take_events(&mut self) -> Vec<SwitchEvent> {
         std::mem::take(&mut self.events)
     }
+
+    fn save_state(&self, w: &mut BlobWriter) {
+        w.u32(1); // adapt snapshot schema
+        w.u64(self.step);
+        self.strategy.save_state(w);
+        w.u32(self.layers.len() as u32);
+        for ls in &self.layers {
+            w.u8(ls.fmt.wl);
+            w.u8(ls.fmt.fl);
+            w.u32(ls.lb);
+            w.u32(ls.res);
+            w.f32_bits(ls.grad_norm_sum);
+            w.u32(ls.batches);
+            w.f32_bits(ls.sp);
+            w.f32_bits(ls.mabs);
+        }
+        write_events(w, &self.events);
+    }
+
+    fn load_state(&mut self, r: &mut BlobReader<'_>) -> Result<()> {
+        let schema = r.u32()?;
+        ensure!(schema == 1, "unknown adapt snapshot schema {schema}");
+        let step = r.u64()?;
+        let strategy = StrategyCtl::load_state(r)?;
+        let n = r.u32()? as usize;
+        ensure!(
+            n == self.layers.len(),
+            "snapshot has {n} layers, controller has {}",
+            self.layers.len()
+        );
+        let mut layers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let wl = r.u8()?;
+            let fl = r.u8()?;
+            layers.push(LayerState {
+                fmt: FixedPointFormat::new(wl, fl),
+                lb: r.u32()?,
+                res: r.u32()?,
+                grad_norm_sum: r.f32_bits()?,
+                batches: r.u32()?,
+                sp: r.f32_bits()?,
+                mabs: r.f32_bits()?,
+            });
+        }
+        let events = read_events(r)?;
+        self.step = step;
+        self.strategy = strategy;
+        self.layers = layers;
+        self.events = events;
+        Ok(())
+    }
+
+    /// Whole-net forced PushUp: every layer's format gains `bump` WL bits
+    /// (FL alongside, preserving the integer range), windows reset, gsum
+    /// zeroed so replayed steps accumulate clean statistics, and the
+    /// strategy escalates to Max — the same posture the controller takes on
+    /// an observed poisoned batch, but applied to formats as well.
+    fn force_push_up(&mut self, state: &mut TrainState, bump: u8) -> bool {
+        self.strategy.st = Strategy::Max;
+        for (l, ls) in self.layers.iter_mut().enumerate() {
+            let old = ls.fmt;
+            let new = FixedPointFormat::new(
+                old.wl.saturating_add(bump),
+                old.fl.saturating_add(bump),
+            );
+            ls.fmt = new;
+            ls.grad_norm_sum = 0.0;
+            ls.batches = 0;
+            state.zero_gsum_layer(l);
+            if new != old {
+                self.events.push(SwitchEvent {
+                    step: self.step,
+                    layer: l,
+                    old,
+                    new,
+                    min_fmt: old,
+                    diversity: f64::INFINITY,
+                    kl: 0.0,
+                    lookback: ls.lb,
+                    resolution: ls.res,
+                    strategy: Strategy::Max,
+                });
+            }
+        }
+        true
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -625,6 +783,104 @@ mod tests {
         assert_eq!(a.fraclengths(), b.fraclengths());
         assert_eq!(a.weight_nz(), b.weight_nz());
         assert_eq!(a.weight_max_abs(), b.weight_max_abs());
+    }
+
+    #[test]
+    fn snapshot_restore_continues_identically() {
+        let man = mlp_manifest();
+        let h = QuantHyper::default().scaled(0.1);
+        let mut a = AdaptController::new(&man, h);
+        let mut sa = fake_state(&man);
+        // run mid-window so formats, partial windows AND strategy all matter
+        for i in 0..17 {
+            let m = fake_metrics(man.num_layers, 2.0 - 0.01 * i as f32, 1.0, 3.0);
+            a.on_step(&mut sa, &m);
+        }
+        let mut w = BlobWriter::new();
+        a.save_state(&mut w);
+        let buf = w.into_vec();
+
+        let mut b = AdaptController::new(&man, h);
+        let mut sb = fake_state(&man);
+        sb.params = sa.params.clone();
+        sb.gsum = sa.gsum.clone();
+        sb.bn = sa.bn.clone();
+        let mut r = BlobReader::new(&buf);
+        b.load_state(&mut r).unwrap();
+        assert!(r.is_empty(), "snapshot fully consumed");
+        assert_eq!(a.wordlengths(), b.wordlengths());
+        assert_eq!(a.lookbacks(), b.lookbacks());
+
+        // identical futures, including switch decisions and epoch sync
+        for i in 0..20 {
+            let m = fake_metrics(man.num_layers, 1.8 - 0.01 * i as f32, 1.0, 2.5);
+            a.on_step(&mut sa, &m);
+            b.on_step(&mut sb, &m);
+        }
+        a.on_epoch_end(&mut sa, 0);
+        b.on_epoch_end(&mut sb, 0);
+        assert_eq!(a.wordlengths(), b.wordlengths());
+        assert_eq!(a.fraclengths(), b.fraclengths());
+        assert_eq!(a.weight_nz(), b.weight_nz());
+        let (ea, eb) = (a.take_events(), b.take_events());
+        assert_eq!(ea.len(), eb.len(), "pending events must survive the snapshot");
+        for (x, y) in ea.iter().zip(&eb) {
+            assert_eq!((x.step, x.layer, x.old, x.new), (y.step, y.layer, y.old, y.new));
+            assert_eq!(x.diversity.to_bits(), y.diversity.to_bits());
+        }
+    }
+
+    #[test]
+    fn load_state_rejects_layer_count_mismatch() {
+        let man = mlp_manifest();
+        // hand-build a snapshot claiming one layer fewer than the model has
+        let mut w = BlobWriter::new();
+        w.u32(1);
+        w.u64(0);
+        StrategyCtl::new(Strategy::Mean, 4).save_state(&mut w);
+        w.u32((man.num_layers - 1) as u32);
+        let buf = w.into_vec();
+        let mut c = AdaptController::new(&man, QuantHyper::default());
+        assert!(c.load_state(&mut BlobReader::new(&buf)).is_err());
+    }
+
+    #[test]
+    fn force_push_up_raises_every_layer_and_resets_windows() {
+        let man = mlp_manifest();
+        let mut c = AdaptController::new(&man, QuantHyper::default().scaled(0.1));
+        let mut st = fake_state(&man);
+        for i in 0..5 {
+            let m = fake_metrics(man.num_layers, 2.0 - 0.01 * i as f32, 1.0, 3.0);
+            c.on_step(&mut st, &m);
+        }
+        st.gsum[0].iter_mut().for_each(|v| *v = 1.0);
+        let wl_before = c.wordlengths();
+        assert!(c.force_push_up(&mut st, 4));
+        for (l, (&before, &after)) in wl_before.iter().zip(&c.wordlengths()).enumerate() {
+            assert!(after >= before, "layer {l}: {before} -> {after}");
+            assert_eq!(after, (before + 4).min(32), "layer {l}");
+        }
+        assert!(c.layers.iter().all(|l| l.batches == 0));
+        assert!(st.gsum[0].iter().all(|&v| v == 0.0), "gsum must reset");
+        assert_eq!(c.strategy.st, Strategy::Max);
+        // recovery switches are recorded with the infinite-diversity marker
+        let ev = c.take_events();
+        let forced = ev.iter().filter(|e| e.diversity.is_infinite() && e.kl == 0.0).count();
+        assert!(forced >= 1, "forced push-up must record switch events");
+        assert!(ev.last().unwrap().diversity.is_infinite());
+    }
+
+    #[test]
+    fn float32_controller_has_trivially_empty_snapshot() {
+        let man = mlp_manifest();
+        let mut c = Float32Controller::new(&man);
+        let mut w = BlobWriter::new();
+        QuantController::save_state(&c, &mut w);
+        let buf = w.into_vec();
+        assert!(buf.is_empty());
+        assert!(c.load_state(&mut BlobReader::new(&buf)).is_ok());
+        let mut st = fake_state(&man);
+        assert!(!c.force_push_up(&mut st, 4), "nothing to raise at f32");
     }
 
     #[test]

@@ -1,7 +1,10 @@
 //! Runtime adaptation of strategy, lookback and resolution (sec. 3.3,
 //! "Strategy, Resolution and Lookback").
 
+use anyhow::{anyhow, ensure, Result};
+
 use super::pushup::Strategy;
+use crate::util::blob::{BlobReader, BlobWriter};
 
 /// Hyperparameters of the precision-switching mechanism (sec. 4.1.1 values
 /// as defaults).
@@ -147,6 +150,30 @@ impl StrategyCtl {
         };
         self.st
     }
+
+    /// Serialize strategy + loss ring for checkpointing (bit-exact).
+    pub fn save_state(&self, w: &mut BlobWriter) {
+        w.u8(self.st.tag());
+        w.u64(self.cap as u64);
+        w.u64(self.losses.len() as u64);
+        for &l in &self.losses {
+            w.f32_bits(l);
+        }
+    }
+
+    /// Inverse of [`save_state`](Self::save_state).
+    pub fn load_state(r: &mut BlobReader<'_>) -> Result<StrategyCtl> {
+        let st = Strategy::from_tag(r.u8()?).ok_or_else(|| anyhow!("bad strategy tag"))?;
+        let cap = r.u64()? as usize;
+        ensure!(cap >= 2, "strategy window cap {cap} < 2");
+        let n = r.u64()? as usize;
+        ensure!(n <= cap, "strategy loss ring {n} exceeds cap {cap}");
+        let mut losses = Vec::with_capacity(n);
+        for _ in 0..n {
+            losses.push(r.f32_bits()?);
+        }
+        Ok(StrategyCtl { st, losses, cap })
+    }
 }
 
 #[cfg(test)]
@@ -211,6 +238,23 @@ mod tests {
         let mut ctl = StrategyCtl::new(Strategy::Min, 4);
         ctl.observe(f32::NAN);
         assert_eq!(ctl.st, Strategy::Max);
+    }
+
+    #[test]
+    fn strategy_ctl_snapshot_round_trip_is_exact() {
+        let mut a = StrategyCtl::new(Strategy::Min, 4);
+        for l in [3.0f32, 2.5, 2.5, 2.4, 2.4] {
+            a.observe(l);
+        }
+        let mut w = BlobWriter::new();
+        a.save_state(&mut w);
+        let buf = w.into_vec();
+        let mut b = StrategyCtl::load_state(&mut BlobReader::new(&buf)).unwrap();
+        assert_eq!(a.st, b.st);
+        // future decisions agree exactly (the ring drives eq. 5)
+        for l in [2.4f32, 2.4, 1.0, 0.9, f32::NAN, 0.8] {
+            assert_eq!(a.observe(l), b.observe(l));
+        }
     }
 
     #[test]

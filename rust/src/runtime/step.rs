@@ -25,6 +25,24 @@ impl TrainState {
     pub fn zero_gsum_layer(&mut self, layer: usize) {
         self.gsum[layer].iter_mut().for_each(|v| *v = 0.0);
     }
+
+    /// Bit-exact equality of two states: every tensor compared on raw IEEE
+    /// bits (so `NaN == NaN` and `0.0 != -0.0`), plus the step cursor. This
+    /// is the resume-determinism yardstick — float `==` would both accept
+    /// sign-of-zero drift and reject legitimately identical NaNs.
+    pub fn bits_eq(&self, other: &TrainState) -> bool {
+        fn tensors_eq(a: &[Vec<f32>], b: &[Vec<f32>]) -> bool {
+            a.len() == b.len()
+                && a.iter().zip(b).all(|(x, y)| {
+                    x.len() == y.len()
+                        && x.iter().zip(y).all(|(u, v)| u.to_bits() == v.to_bits())
+                })
+        }
+        self.step == other.step
+            && tensors_eq(&self.params, &other.params)
+            && tensors_eq(&self.gsum, &other.gsum)
+            && tensors_eq(&self.bn, &other.bn)
+    }
 }
 
 /// Per-step metrics returned by the train executable (manifest tail).
@@ -162,5 +180,38 @@ impl LoadedModel {
             }
         }
         Ok(correct as f32 / y.len() as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state() -> TrainState {
+        TrainState {
+            params: vec![vec![1.0, f32::NAN], vec![0.0]],
+            gsum: vec![vec![2.0]],
+            bn: vec![],
+            step: 7,
+        }
+    }
+
+    #[test]
+    fn bits_eq_accepts_identical_nans() {
+        assert!(state().bits_eq(&state()));
+    }
+
+    #[test]
+    fn bits_eq_rejects_any_single_bit_difference() {
+        let a = state();
+        let mut b = state();
+        b.params[1][0] = -0.0; // same value under ==, different bits
+        assert!(!a.bits_eq(&b));
+        let mut c = state();
+        c.step += 1;
+        assert!(!a.bits_eq(&c));
+        let mut d = state();
+        d.gsum[0][0] = f32::from_bits(d.gsum[0][0].to_bits() ^ 1);
+        assert!(!a.bits_eq(&d));
     }
 }

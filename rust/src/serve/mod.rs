@@ -44,14 +44,26 @@ pub use queue::{Response, ServeError, Ticket};
 pub use registry::{ModelRegistry, ServedModel};
 pub use stats::{LatencyHistogram, LatencySummary, ServeStats, ServeStatsSnapshot, HIST_BUCKETS};
 
+use std::sync::atomic::AtomicU64;
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::faults::FaultPlan;
 use crate::quant::QuantPool;
 
 use queue::{BatchQueue, Request};
+
+/// How a submission behaves when the queue is at capacity.
+enum SubmitMode {
+    /// Reject immediately with [`ServeError::QueueFull`].
+    Reject,
+    /// Park until space frees up.
+    Block,
+    /// Park at most this long, then fail with [`ServeError::Timeout`].
+    Deadline(Duration),
+}
 
 /// Tunables of one serving instance.
 #[derive(Debug, Clone)]
@@ -96,16 +108,34 @@ impl ServeServer {
     /// `pool` — pass the backend's pool to keep one thread team per
     /// process.
     pub fn start(registry: Arc<ModelRegistry>, pool: Arc<QuantPool>, cfg: ServeConfig) -> ServeServer {
+        Self::start_with_faults(registry, pool, cfg, FaultPlan::none())
+    }
+
+    /// [`start`](Self::start) with a deterministic [`FaultPlan`] wired into
+    /// the worker team (`serve:k=panic` fires on the k-th dispatched
+    /// micro-batch). Production callers use [`start`](Self::start); this
+    /// exists for the fault-injection drills.
+    pub fn start_with_faults(
+        registry: Arc<ModelRegistry>,
+        pool: Arc<QuantPool>,
+        cfg: ServeConfig,
+        faults: Arc<FaultPlan>,
+    ) -> ServeServer {
         let queue = Arc::new(BatchQueue::new(cfg.max_batch, cfg.max_wait, cfg.queue_capacity));
         let stats = Arc::new(ServeStats::new(cfg.max_batch));
+        // one dispatch counter shared by the whole team, so fault indices
+        // name batch ordinals independent of which worker picks one up
+        let batch_seq = Arc::new(AtomicU64::new(0));
         let workers = (0..cfg.workers)
             .map(|i| {
                 let q = Arc::clone(&queue);
                 let p = Arc::clone(&pool);
                 let s = Arc::clone(&stats);
+                let f = Arc::clone(&faults);
+                let seq = Arc::clone(&batch_seq);
                 std::thread::Builder::new()
                     .name(format!("adapt-serve-{i}"))
-                    .spawn(move || worker::worker_loop(q, p, s))
+                    .spawn(move || worker::worker_loop(q, p, s, f, seq))
                     .expect("spawning serve worker")
             })
             .collect();
@@ -174,13 +204,27 @@ impl ServeHandle {
     /// [`Ticket`] to wait on. Non-blocking: a full queue rejects with
     /// [`ServeError::QueueFull`].
     pub fn submit(&self, model: &str, x: Vec<f32>, n: usize) -> Result<Ticket, ServeError> {
-        self.submit_inner(model, x, n, false)
+        self.submit_inner(model, x, n, SubmitMode::Reject)
     }
 
     /// [`submit`](Self::submit), but parking the caller while the queue is
     /// at capacity instead of rejecting.
     pub fn submit_blocking(&self, model: &str, x: Vec<f32>, n: usize) -> Result<Ticket, ServeError> {
-        self.submit_inner(model, x, n, true)
+        self.submit_inner(model, x, n, SubmitMode::Block)
+    }
+
+    /// [`submit_blocking`](Self::submit_blocking) with a deadline: parks at
+    /// most `timeout` for queue space, then fails with
+    /// [`ServeError::Timeout`] (counted in the stats) instead of blocking
+    /// forever on a wedged server.
+    pub fn submit_blocking_deadline(
+        &self,
+        model: &str,
+        x: Vec<f32>,
+        n: usize,
+        timeout: Duration,
+    ) -> Result<Ticket, ServeError> {
+        self.submit_inner(model, x, n, SubmitMode::Deadline(timeout))
     }
 
     /// Convenience round-trip: blocking submit + wait.
@@ -188,12 +232,27 @@ impl ServeHandle {
         self.submit_blocking(model, x, n)?.wait()
     }
 
+    /// [`infer_blocking`](Self::infer_blocking) under one shared `timeout`
+    /// budget covering both the submit and the wait: however long the
+    /// submit parks for space is subtracted from the wait's allowance.
+    pub fn infer_deadline(
+        &self,
+        model: &str,
+        x: Vec<f32>,
+        n: usize,
+        timeout: Duration,
+    ) -> Result<Response, ServeError> {
+        let t0 = Instant::now();
+        let ticket = self.submit_blocking_deadline(model, x, n, timeout)?;
+        ticket.wait_deadline(timeout.saturating_sub(t0.elapsed()))
+    }
+
     fn submit_inner(
         &self,
         model: &str,
         x: Vec<f32>,
         n: usize,
-        blocking: bool,
+        mode: SubmitMode,
     ) -> Result<Ticket, ServeError> {
         let m = self
             .registry
@@ -217,16 +276,23 @@ impl ServeHandle {
             tx,
             enqueued: Instant::now(),
         };
-        let pushed = if blocking {
-            self.queue.push_blocking(req)
-        } else {
-            self.queue.push(req)
+        let pushed = match mode {
+            SubmitMode::Reject => self.queue.push(req),
+            SubmitMode::Block => self.queue.push_blocking(req),
+            SubmitMode::Deadline(t) => self.queue.push_blocking_deadline(req, t),
         };
         if let Err(e) = pushed {
-            self.stats.record_rejected();
+            if e == ServeError::Timeout {
+                self.stats.record_timeout();
+            } else {
+                self.stats.record_rejected();
+            }
             return Err(e);
         }
-        Ok(Ticket { rx })
+        Ok(Ticket {
+            rx,
+            stats: Some(Arc::clone(&self.stats)),
+        })
     }
 
     /// Live stats of the server this handle feeds.

@@ -24,11 +24,12 @@
 //! drained and answered by the workers — a graceful drain, not a drop.
 
 use std::collections::VecDeque;
-use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use super::registry::ServedModel;
+use super::stats::ServeStats;
 
 /// Why a serving call failed. Carried on tickets and returned from
 /// submission; `Failed` wraps an execution error message (the original
@@ -47,8 +48,14 @@ pub enum ServeError {
     BadRequest(String),
     /// The forward pass itself errored.
     Failed(String),
-    /// The worker side disappeared without answering (a worker panic).
+    /// The worker side disappeared without answering.
     Canceled,
+    /// A deadline-bounded wait or submit ran out of time; the request may
+    /// still complete (a timed-out ticket's response is simply dropped).
+    Timeout,
+    /// The worker thread panicked while executing this request's
+    /// micro-batch; the panic was contained and the worker keeps serving.
+    WorkerPanicked(String),
 }
 
 impl std::fmt::Display for ServeError {
@@ -60,6 +67,8 @@ impl std::fmt::Display for ServeError {
             ServeError::BadRequest(why) => write!(f, "bad request: {why}"),
             ServeError::Failed(why) => write!(f, "inference failed: {why}"),
             ServeError::Canceled => write!(f, "request canceled"),
+            ServeError::Timeout => write!(f, "serve deadline exceeded"),
+            ServeError::WorkerPanicked(why) => write!(f, "serve worker panicked: {why}"),
         }
     }
 }
@@ -94,9 +103,16 @@ pub(crate) struct Request {
 
 /// The caller's side of a submitted request. [`wait`](Ticket::wait) blocks
 /// until the response arrives (or the server is torn down).
-#[derive(Debug)]
 pub struct Ticket {
     pub(crate) rx: Receiver<Result<Response, ServeError>>,
+    /// Recorder for deadline telemetry (`None` in bare queue tests).
+    pub(crate) stats: Option<Arc<ServeStats>>,
+}
+
+impl std::fmt::Debug for Ticket {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Ticket").finish_non_exhaustive()
+    }
 }
 
 impl Ticket {
@@ -105,6 +121,23 @@ impl Ticket {
         match self.rx.recv() {
             Ok(r) => r,
             Err(_) => Err(ServeError::Canceled),
+        }
+    }
+
+    /// [`wait`](Ticket::wait) with a deadline: gives up with
+    /// [`ServeError::Timeout`] (counted in the server's stats) when the
+    /// response does not arrive within `timeout`. The request itself is not
+    /// canceled — its eventual response is dropped with the ticket.
+    pub fn wait_deadline(self, timeout: Duration) -> Result<Response, ServeError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => r,
+            Err(RecvTimeoutError::Timeout) => {
+                if let Some(s) = &self.stats {
+                    s.record_timeout();
+                }
+                Err(ServeError::Timeout)
+            }
+            Err(RecvTimeoutError::Disconnected) => Err(ServeError::Canceled),
         }
     }
 
@@ -183,6 +216,41 @@ impl BatchQueue {
                     break;
                 }
                 st = self.space.wait(st).unwrap_or_else(|p| p.into_inner());
+            }
+            st.q.push_back(req);
+        }
+        self.work.notify_one();
+        Ok(())
+    }
+
+    /// [`push_blocking`](Self::push_blocking) with a deadline: parks at
+    /// most `timeout` for space, then gives up with
+    /// [`ServeError::Timeout`] instead of waiting forever on a wedged
+    /// queue.
+    pub(crate) fn push_blocking_deadline(
+        &self,
+        req: Request,
+        timeout: Duration,
+    ) -> Result<(), ServeError> {
+        let deadline = Instant::now() + timeout;
+        {
+            let mut st = self.lock();
+            loop {
+                if !st.open {
+                    return Err(ServeError::ShutDown);
+                }
+                if st.q.len() < self.capacity {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    return Err(ServeError::Timeout);
+                }
+                let (guard, _) = self
+                    .space
+                    .wait_timeout(st, deadline - now)
+                    .unwrap_or_else(|p| p.into_inner());
+                st = guard;
             }
             st.q.push_back(req);
         }

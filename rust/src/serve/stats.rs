@@ -155,6 +155,11 @@ pub struct ServeStatsSnapshot {
     /// Requests answered with an execution error (their batches are
     /// excluded from every served count and rate).
     pub failed: u64,
+    /// Deadline-bounded waits or submits that expired.
+    pub timeouts: u64,
+    /// Requests answered with `WorkerPanicked` after a contained worker
+    /// panic (excluded from every served count and rate, like `failed`).
+    pub panicked: u64,
     /// Mean samples per executed micro-batch.
     pub mean_batch: f64,
     /// `mean_batch / max_batch`: 1.0 means every batch dispatched full.
@@ -191,6 +196,8 @@ impl ServeStatsSnapshot {
             ("micro_batches", num(self.micro_batches as f64)),
             ("rejected", num(self.rejected as f64)),
             ("failed", num(self.failed as f64)),
+            ("timeouts", num(self.timeouts as f64)),
+            ("panicked", num(self.panicked as f64)),
             ("mean_batch", num(self.mean_batch)),
             ("occupancy", num(self.occupancy)),
             ("queue", Self::summary_json(&self.queue)),
@@ -222,6 +229,8 @@ pub struct ServeStats {
     batches: AtomicU64,
     rejected: AtomicU64,
     failed: AtomicU64,
+    timeouts: AtomicU64,
+    panicked: AtomicU64,
     inner: Mutex<StatsInner>,
 }
 
@@ -235,6 +244,8 @@ impl ServeStats {
             batches: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             failed: AtomicU64::new(0),
+            timeouts: AtomicU64::new(0),
+            panicked: AtomicU64::new(0),
             inner: Mutex::new(StatsInner {
                 queue_ms: Vec::new(),
                 service_ms: Vec::new(),
@@ -283,6 +294,18 @@ impl ServeStats {
         self.failed.fetch_add(requests as u64, Ordering::Relaxed);
     }
 
+    /// One deadline-bounded wait or submit that expired before completing.
+    pub(crate) fn record_timeout(&self) {
+        self.timeouts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One micro-batch whose worker panicked mid-forward: its `requests`
+    /// were answered with [`WorkerPanicked`](super::ServeError) and count
+    /// here, never under the served counts.
+    pub(crate) fn record_panicked(&self, requests: usize) {
+        self.panicked.fetch_add(requests as u64, Ordering::Relaxed);
+    }
+
     /// [`ServeStatsSnapshot::to_json`] of a fresh snapshot.
     pub fn to_json(&self) -> String {
         self.snapshot().to_json()
@@ -303,6 +326,8 @@ impl ServeStats {
             micro_batches: batches,
             rejected: self.rejected.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
+            timeouts: self.timeouts.load(Ordering::Relaxed),
+            panicked: self.panicked.load(Ordering::Relaxed),
             mean_batch: if batches > 0 {
                 samples as f64 / batches as f64
             } else {
@@ -341,14 +366,19 @@ mod tests {
         s.record_batch(8, 3, 2.0, &[0.5, 1.0, 1.5]);
         s.record_batch(4, 1, 2.0, &[0.25]);
         s.record_rejected();
-        // failed batches must not leak into the served counts or rates
+        // failed/panicked batches must not leak into the served counts or
+        // rates
         s.record_failed(2);
+        s.record_timeout();
+        s.record_panicked(3);
         let snap = s.snapshot();
         assert_eq!(snap.requests, 4);
         assert_eq!(snap.samples, 12);
         assert_eq!(snap.micro_batches, 2);
         assert_eq!(snap.rejected, 1);
         assert_eq!(snap.failed, 2);
+        assert_eq!(snap.timeouts, 1);
+        assert_eq!(snap.panicked, 3);
         assert!((snap.mean_batch - 6.0).abs() < 1e-12);
         assert!((snap.occupancy - 0.75).abs() < 1e-12);
         assert_eq!(snap.queue.count, 4);
@@ -386,6 +416,8 @@ mod tests {
         let j = Json::parse(&s.to_json()).unwrap();
         assert_eq!(j.req("samples").unwrap().as_f64(), Some(8.0));
         assert_eq!(j.req("rejected").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.req("timeouts").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.req("panicked").unwrap().as_f64(), Some(0.0));
         assert_eq!(
             j.req("queue").unwrap().req("count").unwrap().as_f64(),
             Some(3.0)

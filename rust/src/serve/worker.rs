@@ -13,27 +13,55 @@
 //! request r's logits are the same bits whether it rode alone or coalesced
 //! with neighbours (the determinism invariant `rust/tests/serve.rs` pins).
 //! A failed forward fans the error out to every request of the batch; the
-//! worker itself survives and keeps serving.
+//! worker itself survives and keeps serving. A *panicking* forward is
+//! contained the same way: the unwind is caught at the batch boundary, the
+//! batch's requests are answered with [`ServeError::WorkerPanicked`], and
+//! the worker keeps serving — the per-worker buffers are plain `Vec`s and
+//! scratch arenas that every batch overwrites from scratch, so reusing
+//! them after an unwind cannot leak one batch's rows into the next.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::coordinator::faults::{FaultKind, FaultPlan};
 use crate::quant::QuantPool;
 use crate::runtime::native::InferScratch;
 
 use super::queue::{BatchQueue, Request, Response, ServeError};
 use super::stats::ServeStats;
 
-pub(crate) fn worker_loop(queue: Arc<BatchQueue>, pool: Arc<QuantPool>, stats: Arc<ServeStats>) {
+pub(crate) fn worker_loop(
+    queue: Arc<BatchQueue>,
+    pool: Arc<QuantPool>,
+    stats: Arc<ServeStats>,
+    faults: Arc<FaultPlan>,
+    batch_seq: Arc<AtomicU64>,
+) {
     let mut scratch = InferScratch::default();
     let mut xbuf: Vec<f32> = Vec::new();
     let mut logits: Vec<f32> = Vec::new();
     while let Some(batch) = queue.next_batch() {
-        serve_batch(&pool, &stats, batch, &mut scratch, &mut xbuf, &mut logits);
+        // the sequence number is claimed per dispatched batch (shared
+        // across the worker team) so an injected `serve:k=panic` fault
+        // names a deterministic dispatch ordinal, not a wall-clock race
+        let seq = batch_seq.fetch_add(1, Ordering::SeqCst);
+        serve_batch(
+            &pool,
+            &stats,
+            batch,
+            &mut scratch,
+            &mut xbuf,
+            &mut logits,
+            &faults,
+            seq,
+        );
     }
 }
 
 /// Execute one coalesced micro-batch and answer its requests.
+#[allow(clippy::too_many_arguments)]
 fn serve_batch(
     pool: &QuantPool,
     stats: &ServeStats,
@@ -41,6 +69,8 @@ fn serve_batch(
     scratch: &mut InferScratch,
     xbuf: &mut Vec<f32>,
     logits: &mut Vec<f32>,
+    faults: &FaultPlan,
+    seq: u64,
 ) {
     debug_assert!(!batch.is_empty(), "queue yields non-empty batches");
     let model = Arc::clone(&batch[0].model);
@@ -56,7 +86,15 @@ fn serve_batch(
     }
 
     let t0 = Instant::now();
-    let result = model.infer_into(pool, xbuf, total, scratch, logits);
+    // AssertUnwindSafe: everything the closure touches is either overwritten
+    // from scratch by the next batch (xbuf/logits/scratch) or read-only
+    // shared state (model/pool) that infer_into does not mutate
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        if faults.fire(FaultKind::ServePanic, seq) {
+            panic!("injected serve worker panic at batch {seq}");
+        }
+        model.infer_into(pool, xbuf, total, scratch, logits)
+    }));
     let service_ms = t0.elapsed().as_secs_f64() * 1e3;
     let queue_ms: Vec<f64> = batch
         .iter()
@@ -66,7 +104,7 @@ fn serve_batch(
     // scatter: row-disjoint slices back to the submitters (a dropped
     // receiver just means the client stopped waiting; ignore)
     match result {
-        Ok(()) => {
+        Ok(Ok(())) => {
             let mut row0 = 0usize;
             for (r, &qms) in batch.into_iter().zip(queue_ms.iter()) {
                 let rows = logits[row0 * c..(row0 + r.n) * c].to_vec();
@@ -80,7 +118,7 @@ fn serve_batch(
             }
             stats.record_batch(total, n_requests, service_ms, &queue_ms);
         }
-        Err(e) => {
+        Ok(Err(e)) => {
             // a failed batch is NOT served work: it must not inflate the
             // throughput/latency numbers the calibration consumes
             let msg = e.to_string();
@@ -88,6 +126,17 @@ fn serve_batch(
                 let _ = r.tx.send(Err(ServeError::Failed(msg.clone())));
             }
             stats.record_failed(n_requests);
+        }
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "worker panicked".to_string());
+            for r in batch {
+                let _ = r.tx.send(Err(ServeError::WorkerPanicked(msg.clone())));
+            }
+            stats.record_panicked(n_requests);
         }
     }
 }

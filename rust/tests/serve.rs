@@ -16,6 +16,7 @@ mod common;
 use std::sync::Arc;
 use std::time::Duration;
 
+use adapt::coordinator::FaultPlan;
 use adapt::fixedpoint::FixedPointFormat;
 use adapt::quant::QuantPool;
 use adapt::runtime::Manifest;
@@ -372,4 +373,102 @@ fn precision_switch_and_weight_edit_invalidate_the_pack_cache() {
         .expect("served");
     assert_eq!(bits(&resp.logits), bits(&cold_a), "frozen model drifted");
     server.shutdown();
+}
+
+/// Worker panic containment (ISSUE 9 satellite): a panic inside the
+/// forward pass answers that batch's tickets with a typed
+/// `WorkerPanicked` and the SAME worker thread keeps serving the next
+/// request — one poisoned batch must never take the team down or leave
+/// tickets hanging.
+#[test]
+fn worker_panic_is_contained_and_the_team_keeps_serving() {
+    let man = native_mlp_manifest();
+    let l = man.num_layers;
+    let params = test_params(&man, 19);
+    let qp = qparams_uniform(l, FixedPointFormat::initial(), 1.0);
+    let registry = Arc::new(ModelRegistry::new());
+    registry.publish(ServedModel::freeze("mlp-native", &man, &params, &[], &qp).unwrap());
+    // one worker: surviving the panic is only provable if the panicking
+    // thread itself must answer the follow-up request
+    let server = ServeServer::start_with_faults(
+        Arc::clone(&registry),
+        Arc::new(QuantPool::new(2)),
+        ServeConfig {
+            max_batch: 4,
+            max_wait: Duration::ZERO,
+            queue_capacity: 64,
+            workers: 1,
+        },
+        Arc::new(FaultPlan::default().serve_panic_at(0)),
+    );
+    let handle = server.handle();
+    let xs: Vec<f32> = (0..D).map(|j| (j as f32 * 0.05).sin()).collect();
+
+    match handle.infer_blocking("mlp-native", xs.clone(), 1) {
+        Err(ServeError::WorkerPanicked(msg)) => {
+            assert!(msg.contains("injected"), "panic payload lost: {msg}")
+        }
+        other => panic!("expected WorkerPanicked, got {other:?}"),
+    }
+    let resp = handle
+        .infer_blocking("mlp-native", xs, 1)
+        .expect("the worker must keep serving after a contained panic");
+    assert!(resp.logits.iter().all(|v| v.is_finite()));
+
+    let stats = server.shutdown();
+    assert_eq!(stats.panicked, 1, "panicked requests counted separately");
+    assert_eq!(stats.requests, 1, "only the served request counts as served");
+    assert_eq!(stats.failed, 0);
+}
+
+/// Deadline-bounded waits (ISSUE 9 satellite): a ticket wait and a
+/// blocking submit against a wedged server both give up with a typed
+/// `Timeout` — counted in the stats — instead of parking forever.
+#[test]
+fn deadline_waits_and_submits_time_out_typed_and_counted() {
+    let man = native_mlp_manifest();
+    let l = man.num_layers;
+    let params = test_params(&man, 23);
+    let qp = qparams_uniform(l, FixedPointFormat::initial(), 1.0);
+    let registry = Arc::new(ModelRegistry::new());
+    registry.publish(ServedModel::freeze("mlp-native", &man, &params, &[], &qp).unwrap());
+    // zero workers: nothing ever drains, so both timeout paths are forced
+    let server = ServeServer::start(
+        Arc::clone(&registry),
+        Arc::new(QuantPool::new(1)),
+        ServeConfig {
+            max_batch: 4,
+            max_wait: Duration::ZERO,
+            queue_capacity: 2,
+            workers: 0,
+        },
+    );
+    let handle = server.handle();
+    let xs = vec![0.1f32; D];
+
+    // ticket-side deadline
+    let t = handle.submit("mlp-native", xs.clone(), 1).expect("first fits");
+    match t.wait_deadline(Duration::from_millis(20)) {
+        Err(ServeError::Timeout) => {}
+        other => panic!("expected Timeout, got {other:?}"),
+    }
+    assert_eq!(handle.stats().timeouts, 1);
+
+    // submit-side deadline: the queue is full and never drains
+    let _t2 = handle.submit("mlp-native", xs.clone(), 1).expect("second fits");
+    match handle.submit_blocking_deadline("mlp-native", xs.clone(), 1, Duration::from_millis(20)) {
+        Err(ServeError::Timeout) => {}
+        other => panic!("expected submit Timeout, got {other:?}"),
+    }
+    assert_eq!(handle.stats().timeouts, 2);
+
+    // the combined round-trip times out in its submit phase the same way
+    match handle.infer_deadline("mlp-native", xs, 1, Duration::from_millis(20)) {
+        Err(ServeError::Timeout) => {}
+        other => panic!("expected infer_deadline Timeout, got {other:?}"),
+    }
+    assert_eq!(handle.stats().timeouts, 3);
+    // timed-out submissions are not double-counted as rejected
+    assert_eq!(handle.stats().rejected, 0);
+    drop(server);
 }
