@@ -69,6 +69,7 @@ fn main() {
                             max_wait: Duration::from_millis(1),
                             queue_capacity: REQUESTS + 1,
                             workers,
+                            ..ServeConfig::default()
                         },
                     );
                     let handle = server.handle();
@@ -172,6 +173,7 @@ fn main() {
                 max_wait: Duration::from_millis(1),
                 queue_capacity: REQUESTS + 1,
                 workers: 2,
+                ..ServeConfig::default()
             },
         );
         let handle = server.handle();

@@ -107,6 +107,7 @@ fn main() -> anyhow::Result<()> {
             max_wait: Duration::from_millis(1),
             queue_capacity: 4096,
             workers: 2,
+            ..ServeConfig::default()
         },
     );
     let handle = server.handle();

@@ -1,14 +1,19 @@
 #!/usr/bin/env python3
-"""Offline plotting for the figure TSVs emitted by `adapt figure --id N`.
+"""Offline plotting for the figure TSVs emitted by `adapt figure --id N`
+and the JSONL run-event logs emitted by `--telemetry` / the supervisor.
 
 Build-time / analysis tooling only (never on the training path). Renders
-the paper's figures 3-8 from runs/<profile>/figures/*.tsv into PNGs.
+the paper's figures 3-8 from runs/<profile>/figures/*.tsv into PNGs, or —
+with `--events` — the per-layer `<WL>` precision timeline and the CE
+trajectory straight from an event log (`telemetry::Event` lines).
 
 Usage:  python python/plot.py [runs/fast/figures] [out_dir]
+        python python/plot.py --events runs/events.jsonl [out_dir]
 """
 
 from __future__ import annotations
 
+import json
 import pathlib
 import sys
 
@@ -16,6 +21,8 @@ import matplotlib
 
 matplotlib.use("Agg")
 import matplotlib.pyplot as plt  # noqa: E402
+
+SCHEMA_VERSION = 1
 
 
 def load_tsv(path: pathlib.Path):
@@ -66,7 +73,104 @@ def plot_tsv(path: pathlib.Path, out_dir: pathlib.Path):
     print(f"wrote {out}")
 
 
+def load_events(path: pathlib.Path):
+    """Parse a telemetry JSONL log the way `telemetry::read_log` does:
+    complete lines parse independently, garbage/unknown-version lines are
+    skipped, an unterminated tail is tolerated."""
+    events = []
+    skipped = 0
+    data = path.read_bytes()
+    for raw in data.split(b"\n"):
+        if not raw:
+            continue
+        try:
+            ev = json.loads(raw)
+        except ValueError:
+            skipped += 1
+            continue
+        if not isinstance(ev, dict) or ev.get("v") != SCHEMA_VERSION:
+            skipped += 1
+            continue
+        events.append(ev)
+    if skipped:
+        print(f"({skipped} unparseable lines skipped)", file=sys.stderr)
+    return events
+
+
+def replay_trajectory(events):
+    """Mirror `telemetry::replay`: fold Step/Switch rows, truncating to the
+    carried lengths on rollback/resume so rewound steps drop out."""
+    name, mode = "run", ""
+    ce, wl_rows, switches = [], [], []
+    for ev in events:
+        t = ev.get("t")
+        if t == "run_start":
+            name, mode = ev.get("name", name), ev.get("mode", mode)
+        elif t == "step":
+            ce.append(ev["ce"])
+            wl_rows.append(ev.get("wl", []))
+        elif t == "switch":
+            switches.append(ev)
+        elif t in ("rollback", "resume"):
+            keep = ev["steps"]
+            del ce[keep:], wl_rows[keep:]
+            del switches[ev["switches"]:]
+    return name, mode, ce, wl_rows, switches
+
+
+def plot_events(log_path: pathlib.Path, out_dir: pathlib.Path):
+    name, mode, ce, wl_rows, switches = replay_trajectory(load_events(log_path))
+    if not ce:
+        print(f"no step events in {log_path}", file=sys.stderr)
+        return False
+    stem = log_path.stem
+    xs = list(range(1, len(ce) + 1))
+
+    # per-layer <WL> precision timeline (the fig. 3/4 view, from the log)
+    fig, ax = plt.subplots(figsize=(8, 4.5))
+    layers = max((len(r) for r in wl_rows), default=0)
+    for l in range(layers):
+        ax.step(xs, [r[l] if l < len(r) else None for r in wl_rows],
+                where="post", label=f"layer {l}", linewidth=1.1)
+    ax.set_xlabel("training step")
+    ax.set_ylabel("word length (bit)")
+    ax.set_ylim(0, 33)
+    ax.set_title(f"{name} {mode}: precision timeline ({len(switches)} switches)")
+    ax.legend(fontsize=6, ncol=2 if layers > 12 else 1, loc="best")
+    fig.tight_layout()
+    out = out_dir / f"{stem}_wl_timeline.png"
+    fig.savefig(out, dpi=140)
+    plt.close(fig)
+    print(f"wrote {out}")
+
+    # CE trajectory
+    fig, ax = plt.subplots(figsize=(8, 4.5))
+    ax.plot(xs, ce, linewidth=1.1, label="train CE")
+    ax.set_xlabel("training step")
+    ax.set_ylabel("cross-entropy")
+    ax.set_title(f"{name} {mode}: CE trajectory")
+    ax.legend(fontsize=8, loc="best")
+    fig.tight_layout()
+    out = out_dir / f"{stem}_ce.png"
+    fig.savefig(out, dpi=140)
+    plt.close(fig)
+    print(f"wrote {out}")
+    return True
+
+
 def main() -> int:
+    if len(sys.argv) > 1 and sys.argv[1] == "--events":
+        if len(sys.argv) < 3:
+            print("usage: python python/plot.py --events <events.jsonl> [out_dir]",
+                  file=sys.stderr)
+            return 2
+        log = pathlib.Path(sys.argv[2])
+        if not log.exists():
+            print(f"no event log at {log}", file=sys.stderr)
+            return 1
+        out = pathlib.Path(sys.argv[3] if len(sys.argv) > 3 else log.parent)
+        out.mkdir(parents=True, exist_ok=True)
+        return 0 if plot_events(log, out) else 1
     src = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else "runs/fast/figures")
     out = pathlib.Path(sys.argv[2] if len(sys.argv) > 2 else src)
     if not src.exists():

@@ -202,6 +202,13 @@ pub fn write_bench_json(
 /// pair is parsed and embedded verbatim under `key` — e.g. the serving
 /// bench attaches the full `ServeStatsSnapshot::to_json` dump (latency
 /// histograms included) next to its timing results.
+///
+/// **Byte stability is pinned**: every map below is a `BTreeMap`, so two
+/// writes of the same measurements produce identical bytes regardless of
+/// the caller's insertion order, and the file ends in exactly one trailing
+/// newline. `crate::telemetry::gate` and committed `benches/reference/`
+/// files diff these dumps byte-for-byte; do not swap in an order-sensitive
+/// map or drop the newline.
 pub fn write_bench_json_sections(
     path: &Path,
     entries: &[BenchEntry],
@@ -227,7 +234,11 @@ pub fn write_bench_json_sections(
             .map_err(|e| anyhow!("bench section '{k}' is not valid JSON: {e:?}"))?;
         top.insert(k.clone(), parsed);
     }
-    std::fs::write(path, Json::Obj(top).to_string_pretty())
+    let mut body = Json::Obj(top).to_string_pretty();
+    if !body.ends_with('\n') {
+        body.push('\n');
+    }
+    std::fs::write(path, body)
         .with_context(|| format!("writing bench results {}", path.display()))
 }
 
@@ -643,6 +654,30 @@ mod tests {
         // invalid sections are rejected, not silently dropped
         let bad = write_bench_json_sections(&path, &entries, &[], &[("x".into(), "nope".into())]);
         assert!(bad.is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bench_json_bytes_are_insertion_order_independent() {
+        let dir = std::env::temp_dir().join("adapt_test_bench_json_stable");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p1 = dir.join("BENCH_a.json");
+        let p2 = dir.join("BENCH_b.json");
+        let fwd = vec![
+            BenchEntry { name: "alpha".into(), ms_per_iter: 1.0 },
+            BenchEntry { name: "beta".into(), ms_per_iter: 2.0 },
+            BenchEntry { name: "gamma".into(), ms_per_iter: 3.0 },
+        ];
+        let rev: Vec<BenchEntry> = fwd.iter().rev().cloned().collect();
+        let d_fwd = vec![("r1".to_string(), 0.5), ("r2".to_string(), 1.5)];
+        let d_rev: Vec<(String, f64)> = d_fwd.iter().rev().cloned().collect();
+        write_bench_json(&p1, &fwd, &d_fwd).unwrap();
+        write_bench_json(&p2, &rev, &d_rev).unwrap();
+        let b1 = std::fs::read(&p1).unwrap();
+        let b2 = std::fs::read(&p2).unwrap();
+        assert_eq!(b1, b2, "permuted insertion order must not change bytes");
+        assert!(b1.ends_with(b"\n"), "bench dump must end in a newline");
+        assert!(!b1.ends_with(b"\n\n"), "exactly one trailing newline");
         std::fs::remove_dir_all(&dir).ok();
     }
 

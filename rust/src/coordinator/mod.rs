@@ -12,9 +12,10 @@ pub mod trainer;
 pub use faults::{CkptFault, FaultKind, FaultPlan};
 pub use scheduler::LrSchedule;
 pub use supervisor::{
-    supervise, supervise_via_model, RunAborted, SupervisedOutcome, SupervisorConfig,
-    SupervisorError,
+    supervise, supervise_via_model, supervise_via_model_telemetry, supervise_with_telemetry,
+    RunAborted, SupervisedOutcome, SupervisorConfig, SupervisorError,
 };
 pub use trainer::{
-    train, train_via_model, train_with_data, Policy, ServableModel, TrainConfig, TrainOutcome,
+    train, train_via_model, train_via_model_telemetry, train_with_data,
+    train_with_data_telemetry, Policy, ServableModel, TrainConfig, TrainOutcome,
 };

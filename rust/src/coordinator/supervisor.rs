@@ -49,12 +49,15 @@ use crate::init;
 use crate::metrics::{RunRecord, StepRow, SwitchEventLite};
 use crate::quant::{QuantController, QuantPool};
 use crate::runtime::{LoadedModel, Manifest, TrainState};
+use crate::telemetry::{spans, Event, TelemetrySink};
 use crate::util::blob::{BlobReader, BlobWriter};
 
 use super::checkpoint;
 use super::faults::{corrupt_image, FaultKind, FaultPlan};
 use super::scheduler::LrSchedule;
-use super::trainer::{datasets_for, evaluate, make_controller, Policy, TrainConfig, TrainOutcome};
+use super::trainer::{
+    datasets_for, emit_new_switches, evaluate, make_controller, Policy, TrainConfig, TrainOutcome,
+};
 
 /// Version tag of the supervisor's aux-section layout.
 const AUX_VERSION: u32 = 1;
@@ -476,6 +479,7 @@ fn enqueue_checkpoint(
     writer: &CkptWriter,
     ring: &mut CkptRing,
     faults: &FaultPlan,
+    sink: &TelemetrySink,
     state: &TrainState,
     aux: &[u8],
     tag: u64,
@@ -486,11 +490,16 @@ fn enqueue_checkpoint(
             "[supervisor] injecting checkpoint fault {f:?} at write ordinal {}",
             ring.writes
         );
+        sink.emit(&Event::Fault {
+            step: tag,
+            kind: format!("{f:?}"),
+        });
         corrupt_image(&mut bytes, f);
     }
     ring.writes += 1;
     let (path, evict) = ring.record(tag);
     writer.write(bytes, path, evict);
+    sink.emit(&Event::Checkpoint { step: tag });
 }
 
 // ---------------------------------------------------------------------------
@@ -507,6 +516,17 @@ pub fn supervise_via_model(
     supervise(model, cfg, sup, data, eval)
 }
 
+/// [`supervise_with_telemetry`] with datasets derived from the manifest.
+pub fn supervise_via_model_telemetry(
+    model: &LoadedModel,
+    cfg: &TrainConfig,
+    sup: &SupervisorConfig,
+    sink: &TelemetrySink,
+) -> Result<SupervisedOutcome, SupervisorError> {
+    let (data, eval) = datasets_for(&model.manifest, cfg.train_size, cfg.eval_size, cfg.seed)?;
+    supervise_with_telemetry(model, cfg, sup, data, eval, sink)
+}
+
 /// Run a crash-resumable, self-healing training loop. Without faults and
 /// without pre-existing checkpoints this produces a trajectory bit-identical
 /// to `train_with_data`; with a populated `ckpt_dir` it resumes the run
@@ -517,6 +537,21 @@ pub fn supervise(
     sup: &SupervisorConfig,
     data: Arc<dyn Dataset>,
     eval: Arc<dyn Dataset>,
+) -> Result<SupervisedOutcome, SupervisorError> {
+    supervise_with_telemetry(model, cfg, sup, data, eval, &TelemetrySink::disabled())
+}
+
+/// [`supervise`] with the full recovery story mirrored into the event log:
+/// fault injections, checkpoint enqueues, rollbacks (with the restored
+/// trajectory lengths, so [`crate::telemetry::replay`] can rewind exactly
+/// the way the in-memory `RunRecord` did) and resumes.
+pub fn supervise_with_telemetry(
+    model: &LoadedModel,
+    cfg: &TrainConfig,
+    sup: &SupervisorConfig,
+    data: Arc<dyn Dataset>,
+    eval: Arc<dyn Dataset>,
+    sink: &TelemetrySink,
 ) -> Result<SupervisedOutcome, SupervisorError> {
     let man = &model.manifest;
     if data.input_shape() != (man.input_shape[0], man.input_shape[1], man.input_shape[2]) {
@@ -595,6 +630,32 @@ pub fn supervise(
         );
     }
 
+    let telemetry = sink.is_enabled();
+    let mut emitted_switches = 0usize;
+    if telemetry {
+        sink.emit(&Event::RunStart {
+            name: rec.name.clone(),
+            mode: rec.mode.clone(),
+            batch,
+            accs: cfg.accs,
+            epochs: cfg.epochs,
+            steps_per_epoch,
+            num_layers: man.num_layers,
+        });
+        if let Some(tag) = resumed_from {
+            // The restored pending events were already logged by the run
+            // that wrote the checkpoint — start the high-water mark there.
+            emitted_switches = controller.pending_events().len();
+            sink.emit(&Event::Resume {
+                from_step: tag,
+                steps: rec.steps.len(),
+                evals: rec.evals.len(),
+                switches: emitted_switches,
+            });
+        }
+    }
+    spans::set_enabled(telemetry);
+
     if resumed_from.is_none() {
         // Step-0 baseline: the first rollback always has a target, even
         // before the first periodic checkpoint (or with every_steps = 0).
@@ -608,7 +669,7 @@ pub fn supervise(
             epoch,
             done,
         );
-        enqueue_checkpoint(&writer, &mut ring, &sup.faults, &state, &aux, global_step);
+        enqueue_checkpoint(&writer, &mut ring, &sup.faults, sink, &state, &aux, global_step);
     }
 
     let t0 = Instant::now();
@@ -620,6 +681,10 @@ pub fn supervise(
             let this_step = global_step + 1;
             if sup.faults.fire(FaultKind::NanLoss, this_step) {
                 eprintln!("[supervisor] injecting NaN loss at step {this_step}");
+                sink.emit(&Event::Fault {
+                    step: this_step,
+                    kind: format!("{:?}", FaultKind::NanLoss),
+                });
                 m.loss = f32::NAN;
                 m.ce = f32::NAN;
                 m.grad_norm.iter_mut().for_each(|g| *g = f32::NAN);
@@ -665,6 +730,22 @@ pub fn supervise(
                 global_step = aux.global_step;
                 epoch = aux.epoch;
                 done = aux.done;
+                if telemetry {
+                    // Rewind the switch high-water mark to what the restored
+                    // checkpoint carries; the forced PushUp below then logs
+                    // as a fresh Switch AFTER the Rollback marker.
+                    emitted_switches = controller.pending_events().len();
+                    sink.emit(&Event::Rollback {
+                        step: this_step,
+                        to_step: tag,
+                        rollbacks: rollbacks as u64,
+                        steps: rec.steps.len(),
+                        evals: rec.evals.len(),
+                        switches: emitted_switches,
+                    });
+                    // diverged-step span residue must not leak into replays
+                    spans::take();
+                }
                 let raised = controller.force_push_up(&mut state, sup.push_up_bump);
                 eprintln!(
                     "[supervisor] step {this_step} diverged (ce {}): rolled back to step {tag} \
@@ -685,7 +766,14 @@ pub fn supervise(
                     epoch,
                     done,
                 );
-                enqueue_checkpoint(&writer, &mut ring, &sup.faults, &state, &aux2, global_step);
+                enqueue_checkpoint(&writer, &mut ring, &sup.faults, sink, &state, &aux2, global_step);
+                if telemetry {
+                    emit_new_switches(sink, controller.pending_events(), &mut emitted_switches);
+                    // make the recovery durable in the log before replaying
+                    for e in sink.sync() {
+                        eprintln!("[telemetry] write error: {e}");
+                    }
+                }
                 continue 'outer;
             }
 
@@ -710,6 +798,31 @@ pub fn supervise(
                 rec.layer_wnz.push(wnz);
                 rec.layer_wmax.push(controller.weight_max_abs());
             }
+            if telemetry {
+                let timing = spans::take();
+                sink.emit(&Event::Step {
+                    step: global_step,
+                    epoch,
+                    loss: m.loss,
+                    ce: m.ce,
+                    acc: m.acc,
+                    gnorm: m.grad_norm.iter().cloned().fold(0.0, f32::max),
+                    wl: controller.wordlengths(),
+                    nz: m.sparsity.iter().map(|&s| 1.0 - s).collect(),
+                    lb: controller.lookbacks(),
+                    res: controller.resolutions(),
+                    wnz: controller.weight_nz(),
+                    wmax: controller.weight_max_abs(),
+                });
+                emit_new_switches(sink, controller.pending_events(), &mut emitted_switches);
+                sink.emit(&Event::StepTiming {
+                    step: global_step,
+                    quant_ms: timing[spans::Phase::Quant as usize],
+                    gemm_ms: timing[spans::Phase::Gemm as usize],
+                    pack_ms: timing[spans::Phase::Pack as usize],
+                    epilogue_ms: timing[spans::Phase::Epilogue as usize],
+                });
+            }
             if cfg.log_every > 0 && global_step % cfg.log_every as u64 == 0 {
                 eprintln!(
                     "[{}/{}] epoch {epoch} step {global_step}: loss {:.4} acc {:.3} wl {:?}",
@@ -731,18 +844,33 @@ pub fn supervise(
                     epoch,
                     done,
                 );
-                enqueue_checkpoint(&writer, &mut ring, &sup.faults, &state, &aux, global_step);
+                enqueue_checkpoint(&writer, &mut ring, &sup.faults, sink, &state, &aux, global_step);
             }
             if sup.faults.fire(FaultKind::Crash, global_step) {
                 for e in writer.sync() {
                     eprintln!("[supervisor] checkpoint write failed: {e}");
+                }
+                if telemetry {
+                    sink.emit(&Event::Fault {
+                        step: global_step,
+                        kind: format!("{:?}", FaultKind::Crash),
+                    });
+                    for e in sink.sync() {
+                        eprintln!("[telemetry] write error: {e}");
+                    }
+                    spans::set_enabled(false);
                 }
                 return Err(SupervisorError::InjectedCrash { step: global_step });
             }
         }
         let t_sync = Instant::now();
         controller.on_epoch_end(&mut state, epoch);
-        rec.switch_secs += t_sync.elapsed().as_secs_f64();
+        let sync_secs = t_sync.elapsed().as_secs_f64();
+        rec.switch_secs += sync_secs;
+        if telemetry {
+            sink.emit(&Event::EpochEnd { epoch, sync_secs });
+            emit_new_switches(sink, controller.pending_events(), &mut emitted_switches);
+        }
         if let Some(sch) = &mut schedule {
             let tail = &rec.steps[rec.steps.len() - steps_per_epoch..];
             let mean_loss = tail.iter().map(|s| s.loss).sum::<f32>() / tail.len() as f32;
@@ -752,6 +880,14 @@ pub fn supervise(
         if last || (cfg.eval_every > 0 && (epoch + 1) % cfg.eval_every == 0) {
             let acc = evaluate(model, &state, &controller.qparams(), eval.as_ref())?;
             rec.evals.push((global_step, acc));
+            if telemetry {
+                // eval inference spans are not training step time
+                spans::take();
+                sink.emit(&Event::Eval {
+                    step: global_step,
+                    acc,
+                });
+            }
             if cfg.log_every > 0 {
                 eprintln!(
                     "[{}/{}] epoch {epoch}: EVAL acc {acc:.4}",
@@ -773,6 +909,18 @@ pub fn supervise(
         .map(SwitchEventLite::from)
         .collect();
     rec.wall_secs += t0.elapsed().as_secs_f64();
+    if telemetry {
+        sink.emit(&Event::RunEnd {
+            steps: rec.steps.len(),
+            wall_secs: rec.wall_secs,
+            switch_secs: rec.switch_secs,
+            final_ce: rec.steps.last().map(|s| s.ce).unwrap_or(0.0),
+        });
+        for e in sink.sync() {
+            eprintln!("[telemetry] write error: {e}");
+        }
+        spans::set_enabled(false);
+    }
     let final_qparams = controller.qparams();
     let final_wordlengths = controller.wordlengths();
     Ok(SupervisedOutcome {

@@ -11,8 +11,10 @@ use crate::data::{Dataset, PrefetchLoader, SyntheticVision};
 use crate::init::{self, Initializer};
 use crate::metrics::{RunRecord, StepRow, SwitchEventLite};
 use crate::muppet::{MuppetController, MuppetHyper};
+use crate::quant::qmap::SwitchEvent;
 use crate::quant::{AdaptController, Float32Controller, QuantController, QuantHyper, QuantPool};
 use crate::runtime::{Engine, Hyper, LoadedModel, TrainState};
+use crate::telemetry::{spans, Event, TelemetrySink};
 
 use super::scheduler::LrSchedule;
 
@@ -257,6 +259,41 @@ pub fn train_with_data(
     data: Arc<dyn Dataset>,
     eval: Arc<dyn Dataset>,
 ) -> Result<TrainOutcome> {
+    train_with_data_telemetry(model, cfg, data, eval, &TelemetrySink::disabled())
+}
+
+/// [`train_via_model`] with every step/switch/eval mirrored into `sink`
+/// (see [`crate::telemetry`]). With a disabled sink this is exactly the
+/// plain entry point — all emission is guarded, and the determinism test
+/// pins that the trained bits do not depend on the sink.
+pub fn train_via_model_telemetry(
+    model: &LoadedModel,
+    cfg: &TrainConfig,
+    sink: &TelemetrySink,
+) -> Result<TrainOutcome> {
+    let (data, eval) = datasets_for(&model.manifest, cfg.train_size, cfg.eval_size, cfg.seed)?;
+    train_with_data_telemetry(model, cfg, data, eval, sink)
+}
+
+/// Emit any switch events the controller recorded since the last call,
+/// advancing the high-water mark. The pending list survives untouched for
+/// the end-of-run [`RunRecord`] drain (and for checkpointing, which is how
+/// a rollback rewinds the emitted counter too).
+pub(crate) fn emit_new_switches(sink: &TelemetrySink, pending: &[SwitchEvent], emitted: &mut usize) {
+    for ev in &pending[(*emitted).min(pending.len())..] {
+        sink.emit(&Event::Switch(SwitchEventLite::from(ev)));
+    }
+    *emitted = pending.len();
+}
+
+/// Core loop with a telemetry sink threaded through.
+pub fn train_with_data_telemetry(
+    model: &LoadedModel,
+    cfg: &TrainConfig,
+    data: Arc<dyn Dataset>,
+    eval: Arc<dyn Dataset>,
+    sink: &TelemetrySink,
+) -> Result<TrainOutcome> {
     let man = &model.manifest;
     if data.input_shape() != (man.input_shape[0], man.input_shape[1], man.input_shape[2]) {
         return Err(anyhow!("dataset shape mismatch with artifact"));
@@ -307,6 +344,23 @@ pub fn train_with_data(
         ..Default::default()
     };
 
+    let telemetry = sink.is_enabled();
+    if telemetry {
+        sink.emit(&Event::RunStart {
+            name: rec.name.clone(),
+            mode: rec.mode.clone(),
+            batch,
+            accs: cfg.accs,
+            epochs: cfg.epochs,
+            steps_per_epoch,
+            num_layers: man.num_layers,
+        });
+    }
+    // Timing spans are thread-local and off by default; the native step
+    // only pays an Instant read per phase when this run asked for them.
+    spans::set_enabled(telemetry);
+    let mut emitted_switches = 0usize;
+
     let mut global_step = 0u64;
     for epoch in 0..cfg.epochs {
         for _ in 0..steps_per_epoch {
@@ -337,6 +391,31 @@ pub fn train_with_data(
                 rec.layer_wnz.push(wnz);
                 rec.layer_wmax.push(controller.weight_max_abs());
             }
+            if telemetry {
+                let timing = spans::take();
+                sink.emit(&Event::Step {
+                    step: global_step,
+                    epoch,
+                    loss: m.loss,
+                    ce: m.ce,
+                    acc: m.acc,
+                    gnorm: m.grad_norm.iter().cloned().fold(0.0, f32::max),
+                    wl: controller.wordlengths(),
+                    nz: m.sparsity.iter().map(|&s| 1.0 - s).collect(),
+                    lb: controller.lookbacks(),
+                    res: controller.resolutions(),
+                    wnz: controller.weight_nz(),
+                    wmax: controller.weight_max_abs(),
+                });
+                emit_new_switches(sink, controller.pending_events(), &mut emitted_switches);
+                sink.emit(&Event::StepTiming {
+                    step: global_step,
+                    quant_ms: timing[spans::Phase::Quant as usize],
+                    gemm_ms: timing[spans::Phase::Gemm as usize],
+                    pack_ms: timing[spans::Phase::Pack as usize],
+                    epilogue_ms: timing[spans::Phase::Epilogue as usize],
+                });
+            }
             if cfg.log_every > 0 && global_step % cfg.log_every as u64 == 0 {
                 eprintln!(
                     "[{}/{}] epoch {epoch} step {global_step}: loss {:.4} acc {:.3} wl {:?}",
@@ -355,6 +434,10 @@ pub fn train_with_data(
         controller.on_epoch_end(&mut state, epoch);
         let sync_secs = t_sync.elapsed().as_secs_f64();
         rec.switch_secs += sync_secs;
+        if telemetry {
+            sink.emit(&Event::EpochEnd { epoch, sync_secs });
+            emit_new_switches(sink, controller.pending_events(), &mut emitted_switches);
+        }
         // only policies with PushDown overhead (non-empty lookbacks) have a
         // meaningful sync cost to report
         if cfg.log_every > 0 && !controller.lookbacks().is_empty() {
@@ -376,6 +459,14 @@ pub fn train_with_data(
         if last || (cfg.eval_every > 0 && (epoch + 1) % cfg.eval_every == 0) {
             let acc = evaluate(model, &state, &controller.qparams(), eval.as_ref())?;
             rec.evals.push((global_step, acc));
+            if telemetry {
+                // eval inference spans are not training step time
+                spans::take();
+                sink.emit(&Event::Eval {
+                    step: global_step,
+                    acc,
+                });
+            }
             if cfg.log_every > 0 {
                 eprintln!(
                     "[{}/{}] epoch {epoch}: EVAL acc {acc:.4}",
@@ -392,6 +483,19 @@ pub fn train_with_data(
         .map(SwitchEventLite::from)
         .collect();
     rec.wall_secs = t0.elapsed().as_secs_f64();
+
+    if telemetry {
+        sink.emit(&Event::RunEnd {
+            steps: rec.steps.len(),
+            wall_secs: rec.wall_secs,
+            switch_secs: rec.switch_secs,
+            final_ce: rec.steps.last().map(|s| s.ce).unwrap_or(0.0),
+        });
+        for e in sink.sync() {
+            eprintln!("[telemetry] write error: {e}");
+        }
+        spans::set_enabled(false);
+    }
 
     let final_qparams = controller.qparams();
     let final_wordlengths = controller.wordlengths();

@@ -33,4 +33,5 @@ pub mod perfmodel;
 pub mod quant;
 pub mod runtime;
 pub mod serve;
+pub mod telemetry;
 pub mod util;

@@ -9,6 +9,7 @@
 //! adapt figure --id 3..8 [--profile P]     regenerate a paper figure (TSV)
 //! adapt run-all [--profile P]              the full experiment suite
 //! adapt bench-step --artifact A            per-step latency probe
+//! adapt metrics tail|summary|diff ...      inspect/diff run-event logs
 //! ```
 
 use std::collections::BTreeMap;
@@ -16,10 +17,11 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, Result};
 
 use adapt::bench_support as hs;
-use adapt::coordinator::{train, TrainConfig};
+use adapt::coordinator::{train, train_via_model_telemetry, TrainConfig};
 use adapt::metrics::RunRecord;
 use adapt::perfmodel as pm;
 use adapt::runtime::{artifacts_dir, Engine};
+use adapt::telemetry::{self, gate, replay, TelemetrySink};
 
 /// Minimal flag parser: --key value pairs after the subcommand.
 struct Args {
@@ -116,7 +118,15 @@ fn cmd_train(args: &Args) -> Result<()> {
 
     let dir = artifacts_dir()?;
     let engine = Engine::cpu()?;
-    let out = train(&engine, &dir, &cfg)?;
+    let out = if let Some(log) = args.get("telemetry") {
+        let sink = TelemetrySink::to_file(std::path::Path::new(log))?;
+        let model = engine.load_model(&dir, &cfg.artifact)?;
+        let out = train_via_model_telemetry(&model, &cfg, &sink)?;
+        println!("event log: {log}");
+        out
+    } else {
+        train(&engine, &dir, &cfg)?
+    };
     let rec = &out.record;
     println!(
         "run complete: {} steps, wall {:.1}s, final eval acc {:.4}",
@@ -304,12 +314,165 @@ fn cmd_bench_step(args: &Args) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: adapt <info|train|table|figure|run-all|bench-step> [--flags]
+/// `adapt metrics <tail|summary|diff>` — inspect and gate run-event logs.
+fn cmd_metrics(argv: &[String]) -> Result<()> {
+    let action = argv.first().map(|s| s.as_str()).unwrap_or("");
+    let args = Args::parse(argv.get(1..).unwrap_or(&[]))?;
+    let log_path = |args: &Args| -> Result<std::path::PathBuf> {
+        Ok(std::path::PathBuf::from(
+            args.get("log").ok_or_else(|| anyhow!("--log required"))?,
+        ))
+    };
+    match action {
+        "tail" => {
+            let n = args.usize_or("n", 20);
+            let log = telemetry::read_log(&log_path(&args)?)?;
+            let start = log.events.len().saturating_sub(n);
+            for e in &log.events[start..] {
+                println!("{}", e.to_json().to_string_compact());
+            }
+            if log.skipped > 0 || log.truncated {
+                eprintln!(
+                    "({} events; {} unparseable lines skipped; truncated tail: {})",
+                    log.events.len(),
+                    log.skipped,
+                    log.truncated
+                );
+            }
+            Ok(())
+        }
+        "summary" => {
+            let (rec, log) = replay::replay_log(&log_path(&args)?)?;
+            println!("run      : {} / {}", rec.name, rec.mode);
+            println!(
+                "steps    : {} (batch {}, {} epochs x {} steps)",
+                rec.steps.len(),
+                rec.batch,
+                rec.epochs,
+                rec.steps_per_epoch
+            );
+            println!(
+                "final    : ce {:.4}  eval acc {:.4}",
+                rec.steps.last().map(|s| s.ce).unwrap_or(f32::NAN),
+                rec.final_eval().unwrap_or(f32::NAN)
+            );
+            println!(
+                "switches : {}   evals: {}   wall {:.1}s (switch {:.2}s)",
+                rec.switches.len(),
+                rec.evals.len(),
+                rec.wall_secs,
+                rec.switch_secs
+            );
+            let measured = pm::drift::measured_step_ms(&log.events);
+            if !measured.is_empty() {
+                let n = measured.len() as f64;
+                let mut sums = [0.0f64; 4];
+                for e in &log.events {
+                    if let telemetry::Event::StepTiming {
+                        quant_ms,
+                        gemm_ms,
+                        pack_ms,
+                        epilogue_ms,
+                        ..
+                    } = e
+                    {
+                        sums[0] += quant_ms;
+                        sums[1] += gemm_ms;
+                        sums[2] += pack_ms;
+                        sums[3] += epilogue_ms;
+                    }
+                }
+                println!(
+                    "timing   : {:.2} ms/step over {} steps (quant {:.2} gemm {:.2} pack {:.2} epilogue {:.2})",
+                    measured.iter().map(|&(_, ms)| ms).sum::<f64>() / n,
+                    measured.len(),
+                    sums[0] / n,
+                    sums[1] / n,
+                    sums[2] / n,
+                    sums[3] / n
+                );
+            }
+            if log.skipped > 0 || log.truncated {
+                println!(
+                    "log      : {} lines skipped, truncated tail: {}",
+                    log.skipped, log.truncated
+                );
+            }
+            // modelled-vs-measured drift when the kernel calibration and
+            // the model's layer shapes are both at hand
+            if let Some(bench) = args.get("bench") {
+                let artifact = args
+                    .get("artifact")
+                    .ok_or_else(|| anyhow!("--artifact required with --bench"))?;
+                let calib = pm::KernelCalibration::from_bench_json(std::path::Path::new(bench))?;
+                let man = hs::manifest_for(&artifacts_dir()?, artifact)?;
+                match pm::drift::step_time_drift(&calib, &man.layers, &rec, &measured) {
+                    Some(d) => {
+                        println!(
+                            "drift    : {} paired steps, time_scale {:.2}x, shape drift mean {:.1}% max {:.1}%",
+                            d.steps,
+                            d.time_scale,
+                            d.mean_abs_rel_drift * 100.0,
+                            d.max_abs_rel_drift * 100.0
+                        );
+                        println!(
+                            "inference: modelled SU {:.2}  measured SU {}  drift {}",
+                            d.modelled_inference_speedup,
+                            d.measured_inference_speedup
+                                .map(|v| format!("{v:.2}"))
+                                .unwrap_or_else(|| "n/a".into()),
+                            d.inference_drift
+                                .map(|v| format!("{:+.1}%", v * 100.0))
+                                .unwrap_or_else(|| "n/a".into())
+                        );
+                    }
+                    None => println!("drift    : no pairable StepTiming samples"),
+                }
+            }
+            Ok(())
+        }
+        "diff" => {
+            let current = args
+                .get("current")
+                .ok_or_else(|| anyhow!("--current required"))?;
+            let reference = args
+                .get("reference")
+                .ok_or_else(|| anyhow!("--reference required"))?;
+            let mut cfg = gate::GateConfig::default();
+            if let Some(t) = args.get("tol") {
+                cfg.default_tol = t.parse()?;
+            }
+            let rep = gate::check_files(
+                std::path::Path::new(current),
+                std::path::Path::new(reference),
+                &cfg,
+            )?;
+            print!("{}", rep.render());
+            if rep.failed() {
+                return Err(anyhow!(
+                    "bench gate failed: {} regressions, {} missing keys",
+                    rep.regressions(),
+                    rep.missing.len()
+                ));
+            }
+            Ok(())
+        }
+        _ => Err(anyhow!(
+            "usage: adapt metrics <tail|summary|diff> [--flags] (see --help text)"
+        )),
+    }
+}
+
+const USAGE: &str = "usage: adapt <info|train|table|figure|run-all|bench-step|metrics> [--flags]
   adapt train --artifact resnet20-c10 --mode adapt|muppet|float32 [--profile tiny|fast|paper]
+              [--telemetry runs/events.jsonl]
   adapt table --id 1..6 [--profile fast]
   adapt figure --id 3..8 [--profile fast]
   adapt run-all [--profile fast]
-  adapt bench-step --artifact alexnet-c10 [--steps 20]";
+  adapt bench-step --artifact alexnet-c10 [--steps 20]
+  adapt metrics tail    --log events.jsonl [--n 20]
+  adapt metrics summary --log events.jsonl [--bench BENCH_native.json --artifact mlp-mnist]
+  adapt metrics diff    --current BENCH_native.json --reference benches/reference/BENCH_native.json [--tol 0.3]";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -317,6 +480,14 @@ fn main() {
         eprintln!("{USAGE}");
         std::process::exit(2);
     };
+    // `metrics` takes a positional action before its flags
+    if cmd == "metrics" {
+        if let Err(e) = cmd_metrics(&argv[1..]) {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+        return;
+    }
     let args = match Args::parse(&argv[1..]) {
         Ok(a) => a,
         Err(e) => {

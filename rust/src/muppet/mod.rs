@@ -262,6 +262,10 @@ impl QuantController for MuppetController {
         std::mem::take(&mut self.events)
     }
 
+    fn pending_events(&self) -> &[SwitchEvent] {
+        &self.events
+    }
+
     fn save_state(&self, w: &mut BlobWriter) {
         w.u32(1); // muppet snapshot schema
         w.u64(self.step);

@@ -156,7 +156,8 @@ impl KernelCalibration {
     /// f32 rate for a layer of `kind`: conv layers (including the strided
     /// 1×1 `downsample` residual projections) run through im2col, so they
     /// earn the measured conv rate when the bench recorded one.
-    fn f32_rate_for_kind(&self, kind: &str) -> f64 {
+    /// (`pub(crate)`: the drift pass routes through the same table.)
+    pub(crate) fn f32_rate_for_kind(&self, kind: &str) -> f64 {
         if kind == "conv" || kind == "downsample" {
             self.conv_madds_per_ms.unwrap_or(self.dense_madds_per_ms)
         } else {

@@ -1,0 +1,311 @@
+//! Modelled-vs-measured drift: does the paper's analytic perf model
+//! (eq. 8/9) still describe what the kernels actually did?
+//!
+//! Two trajectories are diffed, both per-step:
+//!
+//! * **modelled**: the run's recorded `<WL, sp>` rows pushed through the
+//!   measured kernel rates ([`KernelCalibration`]) — each layer charges
+//!   `madds / rate(WL, density)` with the same sparse-vs-dense-vs-integer
+//!   routing the serving snapshot applies, times 3 for the
+//!   forward + grad-input + grad-weight passes of a training step (the
+//!   same 3x eq. 6 uses for its backward accounting);
+//! * **measured**: the per-step wall totals from the telemetry
+//!   `StepTiming` events (pack + GEMM + quant + epilogue spans).
+//!
+//! An absolute match is not expected — the analytic model prices MAdds
+//! only, so a constant [`time_scale`](DriftReport::time_scale) factor is
+//! normal. What IS a contract is the *shape*: after normalizing both
+//! trajectories to mean 1, the per-step deviation
+//! ([`mean_abs_rel_drift`](DriftReport::mean_abs_rel_drift)) measures
+//! whether precision switches move measured time the way eq. 8 says they
+//! should. The same report carries the modelled (eq. 8/9 style) vs
+//! measured inference speedups so the abstract's 2.33x claim is checked
+//! against delivered kernel throughput, not just against itself.
+
+use crate::metrics::RunRecord;
+use crate::runtime::manifest::LayerDesc;
+use crate::telemetry::Event;
+
+use super::calibration::KernelCalibration;
+use super::sp_rows;
+
+/// Rate for one layer at (density, wl): sparse below the measured
+/// crossover, otherwise the width-fitting integer rate, otherwise the
+/// layer-kind f32 rate — mirroring
+/// [`KernelCalibration::measured_inference_speedup`]'s routing.
+fn rate_for(calib: &KernelCalibration, desc: &LayerDesc, density: f64, wl: u32) -> Option<f64> {
+    let f32_rate = calib.f32_rate_for_kind(&desc.kind);
+    if f32_rate <= 0.0 {
+        return None;
+    }
+    let rate = if density <= calib.crossover_density {
+        calib.sparse_rate_at(density)?
+    } else {
+        let r = calib.dense_rate_for_wl(wl);
+        // the wl-fitting int rate wins; a plain-f32 fallback keeps the
+        // im2col-aware conv rate instead
+        if r == calib.dense_madds_per_ms {
+            f32_rate
+        } else {
+            r
+        }
+    };
+    if rate > 0.0 {
+        Some(rate)
+    } else {
+        None
+    }
+}
+
+/// Modelled wall-clock (ms) for ONE training step at the given per-layer
+/// word lengths and non-zero fractions.
+pub fn modelled_step_ms(
+    calib: &KernelCalibration,
+    layers: &[LayerDesc],
+    wl_row: &[u8],
+    nz_row: &[f32],
+) -> Option<f64> {
+    let mut ms = 0.0f64;
+    for (l, desc) in layers.iter().enumerate() {
+        // forward + grad-input + grad-weight
+        let madds = desc.madds as f64 * 3.0;
+        let density = nz_row.get(l).copied().unwrap_or(1.0) as f64;
+        let wl = wl_row.get(l).copied().unwrap_or(32) as u32;
+        ms += madds / rate_for(calib, desc, density, wl)?;
+    }
+    Some(ms)
+}
+
+/// The modelled per-step series over a whole recorded run.
+pub fn modelled_step_series(
+    calib: &KernelCalibration,
+    layers: &[LayerDesc],
+    run: &RunRecord,
+) -> Vec<f64> {
+    run.layer_wl
+        .iter()
+        .zip(sp_rows(run))
+        .filter_map(|(wl, nz)| modelled_step_ms(calib, layers, wl, nz))
+        .collect()
+}
+
+/// Extract the measured `(step, total_ms)` series from telemetry events
+/// (`StepTiming` phase sums). Steps re-run after a rollback appear once
+/// per execution, which is what a wall-clock series should show.
+pub fn measured_step_ms(events: &[Event]) -> Vec<(u64, f64)> {
+    events
+        .iter()
+        .filter_map(|e| match e {
+            Event::StepTiming {
+                step,
+                quant_ms,
+                gemm_ms,
+                pack_ms,
+                epilogue_ms,
+            } => Some((*step, quant_ms + gemm_ms + pack_ms + epilogue_ms)),
+            _ => None,
+        })
+        .collect()
+}
+
+/// Modelled-vs-measured comparison over the steps both sides cover.
+#[derive(Debug, Clone)]
+pub struct DriftReport {
+    /// Paired samples compared.
+    pub steps: usize,
+    pub modelled_mean_ms: f64,
+    pub measured_mean_ms: f64,
+    /// measured / modelled mean: the constant the MAdds-only model is off
+    /// by on this host (absolute scale is not a contract).
+    pub time_scale: f64,
+    /// Mean |relative deviation| between the two mean-normalized
+    /// trajectories — the SHAPE drift (0 = the model tracks every
+    /// precision switch perfectly).
+    pub mean_abs_rel_drift: f64,
+    /// Worst single-step shape deviation.
+    pub max_abs_rel_drift: f64,
+    /// Eq. 8/9-style modelled inference speedup
+    /// ([`crate::perfmodel::inference_speedup`]).
+    pub modelled_inference_speedup: f64,
+    /// What the measured kernel rates deliver
+    /// ([`KernelCalibration::measured_inference_speedup`]).
+    pub measured_inference_speedup: Option<f64>,
+    /// `modelled/measured - 1`: how much of the modelled speedup needs
+    /// hardware the CPU does not have.
+    pub inference_drift: Option<f64>,
+}
+
+/// Diff the modelled step-time trajectory against measured `(step,
+/// total_ms)` samples (1-based global steps, as telemetry records them).
+/// `None` when nothing could be paired.
+pub fn step_time_drift(
+    calib: &KernelCalibration,
+    layers: &[LayerDesc],
+    run: &RunRecord,
+    measured: &[(u64, f64)],
+) -> Option<DriftReport> {
+    let mut pairs: Vec<(f64, f64)> = Vec::new();
+    for &(step, ms) in measured {
+        if step == 0 || ms <= 0.0 {
+            continue;
+        }
+        let i = (step - 1) as usize;
+        let (Some(wl_row), Some(nz_row)) = (run.layer_wl.get(i), sp_rows(run).get(i)) else {
+            continue;
+        };
+        let Some(modelled) = modelled_step_ms(calib, layers, wl_row, nz_row) else {
+            continue;
+        };
+        if modelled > 0.0 {
+            pairs.push((modelled, ms));
+        }
+    }
+    if pairs.is_empty() {
+        return None;
+    }
+    let n = pairs.len() as f64;
+    let modelled_mean = pairs.iter().map(|p| p.0).sum::<f64>() / n;
+    let measured_mean = pairs.iter().map(|p| p.1).sum::<f64>() / n;
+    let mut acc = 0.0f64;
+    let mut worst = 0.0f64;
+    for &(m, w) in &pairs {
+        let rel = ((w / measured_mean) / (m / modelled_mean) - 1.0).abs();
+        acc += rel;
+        if rel > worst {
+            worst = rel;
+        }
+    }
+    let modelled_su = super::inference_speedup(layers, run);
+    let measured_su = calib.measured_inference_speedup(layers, run);
+    let inference_drift = measured_su.map(|m| modelled_su / m - 1.0);
+    Some(DriftReport {
+        steps: pairs.len(),
+        modelled_mean_ms: modelled_mean,
+        measured_mean_ms: measured_mean,
+        time_scale: measured_mean / modelled_mean,
+        mean_abs_rel_drift: acc / n,
+        max_abs_rel_drift: worst,
+        modelled_inference_speedup: modelled_su,
+        measured_inference_speedup: measured_su,
+        inference_drift,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::StepRow;
+
+    fn calib() -> KernelCalibration {
+        KernelCalibration {
+            dense_madds_per_ms: 1000.0,
+            sparse_rates: vec![(0.1, 4000.0), (0.3, 1500.0)],
+            crossover_density: 0.3,
+            int_rates: vec![(8, 3000.0)],
+            conv_madds_per_ms: None,
+        }
+    }
+
+    fn layers() -> Vec<LayerDesc> {
+        vec![LayerDesc {
+            name: "fc".into(),
+            kind: "dense".into(),
+            madds: 1_000_000,
+            weight_elems: 1_000_000,
+            fan_in: 1000,
+            ..LayerDesc::default()
+        }]
+    }
+
+    fn run(rows: &[(u8, f32)]) -> RunRecord {
+        RunRecord {
+            name: "t".into(),
+            mode: "adapt".into(),
+            batch: 32,
+            accs: 1,
+            epochs: 1,
+            steps_per_epoch: rows.len(),
+            num_layers: 1,
+            steps: rows
+                .iter()
+                .map(|_| StepRow {
+                    loss: 1.0,
+                    ce: 1.0,
+                    acc: 0.5,
+                })
+                .collect(),
+            layer_wl: rows.iter().map(|&(w, _)| vec![w]).collect(),
+            layer_nz: rows.iter().map(|&(_, d)| vec![d]).collect(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn modelled_step_routes_by_density_and_wl() {
+        let c = calib();
+        let l = layers();
+        // dense f32 territory: 3e6 madds / 1000 = 3 ms
+        assert_eq!(modelled_step_ms(&c, &l, &[32], &[0.9]), Some(3.0));
+        // WL 8 routes to the int rate: 3e6 / 3000 = 1 ms
+        assert_eq!(modelled_step_ms(&c, &l, &[8], &[0.9]), Some(1.0));
+        // density 0.1 routes sparse: 3e6 / 4000 = 0.75 ms
+        assert_eq!(modelled_step_ms(&c, &l, &[8], &[0.1]), Some(0.75));
+    }
+
+    #[test]
+    fn perfect_shape_match_has_zero_drift_whatever_the_scale() {
+        let c = calib();
+        let l = layers();
+        let r = run(&[(32, 0.9), (32, 0.9), (8, 0.9), (8, 0.9)]);
+        // measured = modelled * 7 (constant host factor)
+        let measured: Vec<(u64, f64)> = modelled_step_series(&c, &l, &r)
+            .iter()
+            .enumerate()
+            .map(|(i, m)| (i as u64 + 1, m * 7.0))
+            .collect();
+        let rep = step_time_drift(&c, &l, &r, &measured).unwrap();
+        assert_eq!(rep.steps, 4);
+        assert!((rep.time_scale - 7.0).abs() < 1e-9, "{}", rep.time_scale);
+        assert!(rep.mean_abs_rel_drift < 1e-9, "{}", rep.mean_abs_rel_drift);
+        assert!(rep.max_abs_rel_drift < 1e-9);
+    }
+
+    #[test]
+    fn shape_divergence_is_reported() {
+        let c = calib();
+        let l = layers();
+        let r = run(&[(32, 0.9), (8, 0.9)]);
+        // the model predicts step 2 gets 3x faster; pretend it didn't
+        let measured = vec![(1u64, 3.0), (2u64, 3.0)];
+        let rep = step_time_drift(&c, &l, &r, &measured).unwrap();
+        assert!(rep.mean_abs_rel_drift > 0.3, "{}", rep.mean_abs_rel_drift);
+        // inference side rides along
+        assert!(rep.modelled_inference_speedup > 1.0);
+        assert!(rep.measured_inference_speedup.is_some());
+    }
+
+    #[test]
+    fn unpaired_or_empty_measurements_yield_none() {
+        let c = calib();
+        let l = layers();
+        let r = run(&[(32, 0.9)]);
+        assert!(step_time_drift(&c, &l, &r, &[]).is_none());
+        // step numbers beyond the recorded trajectory pair with nothing
+        assert!(step_time_drift(&c, &l, &r, &[(99, 1.0)]).is_none());
+    }
+
+    #[test]
+    fn measured_series_sums_phases() {
+        let events = vec![
+            Event::StepTiming {
+                step: 1,
+                quant_ms: 0.5,
+                gemm_ms: 2.0,
+                pack_ms: 0.25,
+                epilogue_ms: 0.25,
+            },
+            Event::Checkpoint { step: 1 },
+        ];
+        assert_eq!(measured_step_ms(&events), vec![(1, 3.0)]);
+    }
+}

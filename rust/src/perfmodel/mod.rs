@@ -33,8 +33,10 @@
 //! ```
 
 pub mod calibration;
+pub mod drift;
 
 pub use calibration::{KernelCalibration, ServeCalibration, ServeRate};
+pub use drift::DriftReport;
 
 use crate::metrics::RunRecord;
 use crate::runtime::manifest::LayerDesc;

@@ -82,6 +82,14 @@ pub trait QuantController: Send {
     }
     /// Drain recorded switch events.
     fn take_events(&mut self) -> Vec<SwitchEvent>;
+    /// Peek at the events recorded so far WITHOUT draining them — the
+    /// telemetry layer emits each event incrementally (tracking how many
+    /// it has already written) while [`take_events`](Self::take_events)
+    /// keeps feeding the end-of-run record untouched. Empty for policies
+    /// that never switch.
+    fn pending_events(&self) -> &[SwitchEvent] {
+        &[]
+    }
     /// Serialize the policy's full adaptive state (formats, windows,
     /// strategy, pending events) for checkpointing. Stateless policies
     /// write nothing. The blob must restore bit-exactly via
@@ -453,6 +461,10 @@ impl QuantController for AdaptController {
 
     fn take_events(&mut self) -> Vec<SwitchEvent> {
         std::mem::take(&mut self.events)
+    }
+
+    fn pending_events(&self) -> &[SwitchEvent] {
+        &self.events
     }
 
     fn save_state(&self, w: &mut BlobWriter) {

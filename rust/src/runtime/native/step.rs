@@ -117,6 +117,7 @@ use super::ops;
 use super::plan::{lower_manifest, ConvGeom, LayerPlan, ModelPlan, PoolKind};
 use crate::fixedpoint::{max_abs, FixedPointFormat, SparseFixedTensor};
 use crate::quant::QuantPool;
+use crate::telemetry::spans;
 
 /// Default sparse-dispatch crossover: the quantized-kernel non-zero
 /// fraction (density) at or below which the sparse inference path beats the
@@ -1123,6 +1124,7 @@ impl ExecModule for NativeTrainStep {
         ensure_slots(&mut ar.acts, l + 1);
 
         // -- 1. weight fake-quant (STE) into the arena --------------------
+        let t_quant = spans::SpanTimer::start(spans::Phase::Quant);
         let mut sparsity = Vec::with_capacity(l);
         for i in 0..l {
             let row = ops::QRow::parse(&qparams, i)?;
@@ -1132,8 +1134,10 @@ impl ExecModule for NativeTrainStep {
             let zeros = ops::fake_quant_ste(w, &row, &mut ar.wq[i], &mut ar.mask_w[i]);
             sparsity.push(zeros as f32 / w.len().max(1) as f32);
         }
+        t_quant.stop();
 
         // -- 2. forward (fused bias/ReLU/fake-quant epilogues) ------------
+        let t_fwd = spans::SpanTimer::start(spans::Phase::Gemm);
         let mut bn_new = bn.clone();
         {
             let a0 = &mut ar.acts[0];
@@ -1142,8 +1146,10 @@ impl ExecModule for NativeTrainStep {
         }
         let mut act_absmax = Vec::with_capacity(l);
         m.forward_train_arena(ar, &params, &bn, &mut bn_new, &qparams, momentum, b, &mut act_absmax)?;
+        t_fwd.stop();
 
         // -- 3. loss ------------------------------------------------------
+        let t_loss = spans::SpanTimer::start(spans::Phase::Epilogue);
         let c = m.man.classes;
         let (ce, acc) = ops::softmax_ce_grad_into(&ar.acts[l], &y, b, c, &mut ar.g)?;
         let mut reg = 0.0f32;
@@ -1157,8 +1163,10 @@ impl ExecModule for NativeTrainStep {
             penalty += pen * (row.wl / 32.0) * (1.0 - sp);
         }
         let loss = ce + reg + penalty;
+        t_loss.stop();
 
         // -- 4./5. backward + ASGD update ---------------------------------
+        let t_bwd = spans::SpanTimer::start(spans::Phase::Gemm);
         let mut grad_norm = vec![0.0f32; l];
         let mut gsum_norm = vec![0.0f32; l];
         ensure_slots(&mut ar.skip_g, l);
@@ -1338,6 +1346,7 @@ impl ExecModule for NativeTrainStep {
                 std::mem::swap(&mut ar.g, &mut ar.g_prev);
             }
         }
+        t_bwd.stop();
 
         // the step's whole purpose is to move the weights: drop the infer
         // pack cache now so the next infer rebuilds without first paying a
@@ -1345,6 +1354,7 @@ impl ExecModule for NativeTrainStep {
         ar.cache = None;
 
         // -- 6. outputs in manifest order ---------------------------------
+        let t_out = spans::SpanTimer::start(spans::Phase::Epilogue);
         let mut outs: Vec<Vec<f32>> = Vec::with_capacity(p_n + l + nb + 7);
         outs.extend(params);
         outs.extend(gsum);
@@ -1357,6 +1367,7 @@ impl ExecModule for NativeTrainStep {
         outs.push(sparsity);
         outs.push(act_absmax);
         check_outputs(&outs, out_specs)?;
+        t_out.stop();
         Ok(outs)
     }
 }
@@ -1466,6 +1477,7 @@ impl ExecModule for NativeInfer {
         // snapshot as-is; a partial hit (same crossover, some layer bits
         // changed) MOVES the untouched layers' packs into a rebuilt
         // snapshot and re-packs only the changed ones — see the module docs
+        let t_pack = spans::SpanTimer::start(spans::Phase::Pack);
         let crossover_bits = crossover.to_bits();
         let keep: Option<Vec<bool>> = cache.as_ref().and_then(|e| {
             (e.crossover == crossover_bits && e.layer_keys.len() == l).then(|| {
@@ -1486,11 +1498,14 @@ impl ExecModule for NativeInfer {
             };
             *cache = Some(PackCacheEntry { crossover: crossover_bits, layer_keys, snap });
         }
+        t_pack.stop();
         let entry = cache.as_ref().expect("cache populated above");
+        let t_inf = spans::SpanTimer::start(spans::Phase::Gemm);
         let mut logits: Vec<f32> = Vec::new();
         entry
             .snap
             .infer_into(&m.pool, &biases, &qparams, &x, b, infer, &mut logits)?;
+        t_inf.stop();
         let outs = vec![logits];
         check_outputs(&outs, out_specs)?;
         Ok(outs)

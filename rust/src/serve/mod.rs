@@ -52,6 +52,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::faults::FaultPlan;
 use crate::quant::QuantPool;
+use crate::telemetry::TelemetrySink;
 
 use queue::{BatchQueue, Request};
 
@@ -79,6 +80,14 @@ pub struct ServeConfig {
     /// Worker threads. Zero is allowed (nothing is served until shutdown
     /// cancels the queue) but only useful in tests.
     pub workers: usize,
+    /// Event-log sink the worker team mirrors periodic
+    /// [`ServeStatsSnapshot`]s into (disabled by default — serving then
+    /// does no telemetry work at all).
+    pub telemetry: TelemetrySink,
+    /// Emit one snapshot every this many dispatched micro-batches
+    /// (team-wide ordinals); 0 disables periodic snapshots even with an
+    /// enabled sink.
+    pub telemetry_every: u64,
 }
 
 impl Default for ServeConfig {
@@ -88,6 +97,8 @@ impl Default for ServeConfig {
             max_wait: Duration::from_millis(2),
             queue_capacity: 1024,
             workers: 2,
+            telemetry: TelemetrySink::disabled(),
+            telemetry_every: 64,
         }
     }
 }
@@ -101,6 +112,7 @@ pub struct ServeServer {
     queue: Arc<BatchQueue>,
     stats: Arc<ServeStats>,
     workers: Vec<JoinHandle<()>>,
+    telemetry: TelemetrySink,
 }
 
 impl ServeServer {
@@ -133,9 +145,11 @@ impl ServeServer {
                 let s = Arc::clone(&stats);
                 let f = Arc::clone(&faults);
                 let seq = Arc::clone(&batch_seq);
+                let sink = cfg.telemetry.clone();
+                let every = cfg.telemetry_every;
                 std::thread::Builder::new()
                     .name(format!("adapt-serve-{i}"))
-                    .spawn(move || worker::worker_loop(q, p, s, f, seq))
+                    .spawn(move || worker::worker_loop(q, p, s, f, seq, sink, every))
                     .expect("spawning serve worker")
             })
             .collect();
@@ -144,6 +158,7 @@ impl ServeServer {
             queue,
             stats,
             workers,
+            telemetry: cfg.telemetry,
         }
     }
 
@@ -182,6 +197,11 @@ impl ServeServer {
         // with a zero-worker config (or a panicked team) requests may
         // remain: answer them rather than leaving tickets hanging
         self.queue.drain_cancel();
+        // the final stats report the sink's drop total even if no periodic
+        // snapshot ever fired
+        if self.telemetry.is_enabled() {
+            self.stats.set_dropped_events(self.telemetry.dropped_events());
+        }
     }
 }
 

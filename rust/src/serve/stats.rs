@@ -160,6 +160,12 @@ pub struct ServeStatsSnapshot {
     /// Requests answered with `WorkerPanicked` after a contained worker
     /// panic (excluded from every served count and rate, like `failed`).
     pub panicked: u64,
+    /// Telemetry events the attached [`TelemetrySink`] dropped on channel
+    /// overflow (0 when serving runs without a sink). Surfaced here so a
+    /// lossy event log is visible in the same dump it would have fed.
+    ///
+    /// [`TelemetrySink`]: crate::telemetry::TelemetrySink
+    pub dropped_events: u64,
     /// Mean samples per executed micro-batch.
     pub mean_batch: f64,
     /// `mean_batch / max_batch`: 1.0 means every batch dispatched full.
@@ -198,6 +204,7 @@ impl ServeStatsSnapshot {
             ("failed", num(self.failed as f64)),
             ("timeouts", num(self.timeouts as f64)),
             ("panicked", num(self.panicked as f64)),
+            ("dropped_events", num(self.dropped_events as f64)),
             ("mean_batch", num(self.mean_batch)),
             ("occupancy", num(self.occupancy)),
             ("queue", Self::summary_json(&self.queue)),
@@ -231,6 +238,7 @@ pub struct ServeStats {
     failed: AtomicU64,
     timeouts: AtomicU64,
     panicked: AtomicU64,
+    dropped_events: AtomicU64,
     inner: Mutex<StatsInner>,
 }
 
@@ -246,6 +254,7 @@ impl ServeStats {
             failed: AtomicU64::new(0),
             timeouts: AtomicU64::new(0),
             panicked: AtomicU64::new(0),
+            dropped_events: AtomicU64::new(0),
             inner: Mutex::new(StatsInner {
                 queue_ms: Vec::new(),
                 service_ms: Vec::new(),
@@ -306,6 +315,12 @@ impl ServeStats {
         self.panicked.fetch_add(requests as u64, Ordering::Relaxed);
     }
 
+    /// Mirror the telemetry sink's running drop counter into the stats (a
+    /// level, not an increment — workers store the latest total).
+    pub(crate) fn set_dropped_events(&self, total: u64) {
+        self.dropped_events.store(total, Ordering::Relaxed);
+    }
+
     /// [`ServeStatsSnapshot::to_json`] of a fresh snapshot.
     pub fn to_json(&self) -> String {
         self.snapshot().to_json()
@@ -328,6 +343,7 @@ impl ServeStats {
             failed: self.failed.load(Ordering::Relaxed),
             timeouts: self.timeouts.load(Ordering::Relaxed),
             panicked: self.panicked.load(Ordering::Relaxed),
+            dropped_events: self.dropped_events.load(Ordering::Relaxed),
             mean_batch: if batches > 0 {
                 samples as f64 / batches as f64
             } else {
@@ -371,7 +387,10 @@ mod tests {
         s.record_failed(2);
         s.record_timeout();
         s.record_panicked(3);
+        s.set_dropped_events(7);
+        s.set_dropped_events(9); // a level: later stores win
         let snap = s.snapshot();
+        assert_eq!(snap.dropped_events, 9);
         assert_eq!(snap.requests, 4);
         assert_eq!(snap.samples, 12);
         assert_eq!(snap.micro_batches, 2);
@@ -418,6 +437,7 @@ mod tests {
         assert_eq!(j.req("rejected").unwrap().as_f64(), Some(1.0));
         assert_eq!(j.req("timeouts").unwrap().as_f64(), Some(0.0));
         assert_eq!(j.req("panicked").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.req("dropped_events").unwrap().as_f64(), Some(0.0));
         assert_eq!(
             j.req("queue").unwrap().req("count").unwrap().as_f64(),
             Some(3.0)

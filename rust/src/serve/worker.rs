@@ -28,6 +28,8 @@ use std::time::Instant;
 use crate::coordinator::faults::{FaultKind, FaultPlan};
 use crate::quant::QuantPool;
 use crate::runtime::native::InferScratch;
+use crate::telemetry::{Event, TelemetrySink};
+use crate::util::json::Json;
 
 use super::queue::{BatchQueue, Request, Response, ServeError};
 use super::stats::ServeStats;
@@ -38,6 +40,8 @@ pub(crate) fn worker_loop(
     stats: Arc<ServeStats>,
     faults: Arc<FaultPlan>,
     batch_seq: Arc<AtomicU64>,
+    sink: TelemetrySink,
+    telemetry_every: u64,
 ) {
     let mut scratch = InferScratch::default();
     let mut xbuf: Vec<f32> = Vec::new();
@@ -57,6 +61,15 @@ pub(crate) fn worker_loop(
             &faults,
             seq,
         );
+        // periodic stats snapshot into the event log, on team-wide batch
+        // ordinals so the cadence is stable under any worker count; the
+        // sink's own drop total rides along in the same dump
+        if sink.is_enabled() && telemetry_every > 0 && (seq + 1) % telemetry_every == 0 {
+            stats.set_dropped_events(sink.dropped_events());
+            if let Ok(j) = Json::parse(&stats.snapshot().to_json()) {
+                sink.emit(&Event::ServeSnapshot { stats: j });
+            }
+        }
     }
 }
 

@@ -1,0 +1,313 @@
+//! `BENCH_*.json` regression gate: the perf model as a CI contract.
+//!
+//! `benches/{micro,native,serve}.rs` dump `{unit, results, derived}` JSON
+//! (see [`bench_support`](crate::bench_support)); committed copies under
+//! `benches/reference/` become the contract this gate checks every run
+//! against:
+//!
+//! * `results.*` entries are **ms timings** — a regression is the current
+//!   value exceeding the reference by more than the key's relative
+//!   tolerance;
+//! * `derived` rate entries (`calibration_*`, `serve_samples_per_ms_*`,
+//!   `*_speedup`) are **throughputs** — a regression is the current value
+//!   falling short of the reference by more than the tolerance. Other
+//!   derived entries (densities, crossovers) are environment descriptors,
+//!   not performance, and are not gated;
+//! * a key present in the reference but missing from the current dump
+//!   fails (a silently-dropped bench is a regression in coverage);
+//!   extra current keys are fine (new benches precede new references).
+//!
+//! The default tolerance is deliberately loose (30%): shared CI runners
+//! jitter, and the gate exists to catch kernel-rate collapses (a sparse
+//! path going dense, a SIMD path going scalar — integer factors), not 5%
+//! noise. When no reference file exists the gate runs **report-only**
+//! ([`GateReport::enforced`] = false) and always passes — committing the
+//! reference files flips it to enforcing with no workflow change.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Per-key relative tolerances.
+#[derive(Debug, Clone)]
+pub struct GateConfig {
+    /// Applied to every key without an override.
+    pub default_tol: f64,
+    /// `(key, tolerance)` overrides.
+    pub overrides: Vec<(String, f64)>,
+}
+
+impl Default for GateConfig {
+    fn default() -> Self {
+        GateConfig {
+            default_tol: 0.30,
+            overrides: Vec::new(),
+        }
+    }
+}
+
+impl GateConfig {
+    fn tol_for(&self, key: &str) -> f64 {
+        self.overrides
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, t)| *t)
+            .unwrap_or(self.default_tol)
+    }
+}
+
+/// One compared key.
+#[derive(Debug, Clone)]
+pub struct GateFinding {
+    /// `"results"` or `"derived"`.
+    pub section: String,
+    pub key: String,
+    pub reference: f64,
+    pub current: f64,
+    /// Relative change in the direction that hurts (positive = worse):
+    /// `(current-ref)/ref` for timings, `(ref-current)/ref` for rates.
+    pub rel_change: f64,
+    pub tol: f64,
+    pub regressed: bool,
+}
+
+/// Outcome of one gate check.
+#[derive(Debug, Clone, Default)]
+pub struct GateReport {
+    /// False when no reference existed (report-only mode: never fails).
+    pub enforced: bool,
+    pub findings: Vec<GateFinding>,
+    /// Reference keys absent from the current dump.
+    pub missing: Vec<String>,
+}
+
+impl GateReport {
+    pub fn regressions(&self) -> usize {
+        self.findings.iter().filter(|f| f.regressed).count()
+    }
+
+    /// True only when enforcing AND something regressed or went missing.
+    pub fn failed(&self) -> bool {
+        self.enforced && (self.regressions() > 0 || !self.missing.is_empty())
+    }
+
+    /// Human-readable summary (one line per problem, or an all-clear).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if !self.enforced {
+            out.push_str("gate: no reference committed — report-only, passing\n");
+            return out;
+        }
+        for m in &self.missing {
+            out.push_str(&format!("MISSING  {m} (in reference, not in current)\n"));
+        }
+        for f in &self.findings {
+            if f.regressed {
+                out.push_str(&format!(
+                    "REGRESSED {}.{}: {:.4} -> {:.4} ({:+.1}% worse, tol {:.0}%)\n",
+                    f.section,
+                    f.key,
+                    f.reference,
+                    f.current,
+                    f.rel_change * 100.0,
+                    f.tol * 100.0
+                ));
+            }
+        }
+        if self.regressions() == 0 && self.missing.is_empty() {
+            out.push_str(&format!(
+                "gate: {} keys within tolerance\n",
+                self.findings.len()
+            ));
+        }
+        out
+    }
+}
+
+/// Is this `derived` key a gated throughput (higher = better)?
+fn rate_key(k: &str) -> bool {
+    k.starts_with("calibration_")
+        || k.starts_with("serve_samples_per_ms")
+        || k.ends_with("_speedup")
+}
+
+fn compare_section(
+    current: &Json,
+    reference: &Json,
+    name: &str,
+    rates: bool,
+    cfg: &GateConfig,
+    rep: &mut GateReport,
+) {
+    let Some(Json::Obj(refm)) = reference.get(name) else {
+        return;
+    };
+    for (k, rv) in refm {
+        let Some(r) = rv.as_f64() else { continue };
+        if rates && !rate_key(k) {
+            continue;
+        }
+        if r <= 0.0 {
+            continue;
+        }
+        let Some(c) = current.get(name).and_then(|m| m.get(k)).and_then(|v| v.as_f64()) else {
+            rep.missing.push(format!("{name}.{k}"));
+            continue;
+        };
+        let tol = cfg.tol_for(k);
+        let rel = if rates { (r - c) / r } else { (c - r) / r };
+        rep.findings.push(GateFinding {
+            section: name.to_string(),
+            key: k.clone(),
+            reference: r,
+            current: c,
+            rel_change: rel,
+            tol,
+            regressed: rel > tol,
+        });
+    }
+}
+
+/// Compare a current bench dump against a reference (both parsed
+/// `{unit, results, derived}` objects).
+pub fn check(current: &Json, reference: &Json, cfg: &GateConfig) -> GateReport {
+    let mut rep = GateReport {
+        enforced: true,
+        ..Default::default()
+    };
+    compare_section(current, reference, "results", false, cfg, &mut rep);
+    compare_section(current, reference, "derived", true, cfg, &mut rep);
+    rep
+}
+
+fn load(path: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading bench json {}", path.display()))?;
+    Json::parse(&text).map_err(|e| anyhow!("parsing {}: {e}", path.display()))
+}
+
+/// File-level gate: a missing REFERENCE means report-only (pass); once the
+/// reference exists, a missing or unparseable current dump is an error.
+pub fn check_files(current: &Path, reference: &Path, cfg: &GateConfig) -> Result<GateReport> {
+    if !reference.exists() {
+        return Ok(GateReport::default()); // enforced: false
+    }
+    Ok(check(&load(current)?, &load(reference)?, cfg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bench(dense_rate: f64, sparse_ms: f64) -> Json {
+        Json::parse(&format!(
+            r#"{{
+  "unit": "ms_per_iter",
+  "results": {{"sparse_infer_d30": {sparse_ms}, "dense_gemm": 2.0}},
+  "derived": {{
+    "calibration_dense_madds_per_ms": {dense_rate},
+    "sparse_crossover_density": 0.3
+  }}
+}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let rep = check(&bench(950.0, 1.1), &bench(1000.0, 1.0), &GateConfig::default());
+        assert!(rep.enforced);
+        assert_eq!(rep.regressions(), 0, "{:?}", rep.findings);
+        assert!(!rep.failed());
+        assert!(rep.missing.is_empty());
+        // the non-rate derived key is not gated
+        assert!(rep.findings.iter().all(|f| f.key != "sparse_crossover_density"));
+    }
+
+    #[test]
+    fn kernel_rate_collapse_fails() {
+        // dense rate halved: a 50% rate drop over a 30% tolerance
+        let rep = check(&bench(500.0, 1.0), &bench(1000.0, 1.0), &GateConfig::default());
+        assert_eq!(rep.regressions(), 1);
+        assert!(rep.failed());
+        let f = rep
+            .findings
+            .iter()
+            .find(|f| f.key == "calibration_dense_madds_per_ms")
+            .unwrap();
+        assert!(f.regressed);
+        assert!((f.rel_change - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timing_blowup_fails_and_speedup_is_directional() {
+        // 3x slower sparse kernel timing
+        let rep = check(&bench(1000.0, 3.0), &bench(1000.0, 1.0), &GateConfig::default());
+        assert!(rep.failed());
+        let f = rep.findings.iter().find(|f| f.key == "sparse_infer_d30").unwrap();
+        assert!(f.regressed && f.section == "results");
+        // a FASTER timing never regresses, however large the change
+        let rep = check(&bench(1000.0, 0.1), &bench(1000.0, 1.0), &GateConfig::default());
+        assert_eq!(rep.regressions(), 0);
+    }
+
+    #[test]
+    fn missing_reference_key_fails_extra_current_key_does_not() {
+        let mut cur = bench(1000.0, 1.0);
+        if let Json::Obj(m) = &mut cur {
+            if let Some(Json::Obj(res)) = m.get_mut("results") {
+                res.remove("sparse_infer_d30");
+            }
+        }
+        let rep = check(&cur, &bench(1000.0, 1.0), &GateConfig::default());
+        assert_eq!(rep.missing, vec!["results.sparse_infer_d30".to_string()]);
+        assert!(rep.failed());
+        // a current-only key (new bench, no reference yet) is ignored
+        let mut extra = bench(1000.0, 1.0);
+        if let Json::Obj(m) = &mut extra {
+            if let Some(Json::Obj(res)) = m.get_mut("results") {
+                res.insert("brand_new_bench".into(), crate::util::json::num(5.0));
+            }
+        }
+        let rep = check(&extra, &bench(1000.0, 1.0), &GateConfig::default());
+        assert!(rep.missing.is_empty());
+        assert!(!rep.failed());
+    }
+
+    #[test]
+    fn per_key_override_tightens() {
+        let cfg = GateConfig {
+            default_tol: 0.30,
+            overrides: vec![("dense_gemm".to_string(), 0.05)],
+        };
+        let mut cur = bench(1000.0, 1.0);
+        if let Json::Obj(m) = &mut cur {
+            if let Some(Json::Obj(res)) = m.get_mut("results") {
+                res.insert("dense_gemm".into(), crate::util::json::num(2.3)); // +15%
+            }
+        }
+        assert!(check(&cur, &bench(1000.0, 1.0), &cfg).failed());
+        assert!(!check(&cur, &bench(1000.0, 1.0), &GateConfig::default()).failed());
+    }
+
+    #[test]
+    fn missing_reference_file_is_report_only() {
+        let dir = std::env::temp_dir().join(format!("adapt_gate_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cur = dir.join("BENCH_native.json");
+        std::fs::write(&cur, bench(1000.0, 1.0).to_string_pretty()).unwrap();
+        let rep = check_files(&cur, &dir.join("nope.json"), &GateConfig::default()).unwrap();
+        assert!(!rep.enforced);
+        assert!(!rep.failed());
+        assert!(rep.render().contains("report-only"));
+        // once a reference exists the same comparison enforces
+        let reference = dir.join("ref.json");
+        std::fs::write(&reference, bench(2000.0, 0.1).to_string_pretty()).unwrap();
+        let rep = check_files(&cur, &reference, &GateConfig::default()).unwrap();
+        assert!(rep.enforced && rep.failed());
+        assert!(rep.render().contains("REGRESSED"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,858 @@
+//! Run telemetry: a schema-versioned, append-only event log for training
+//! and serving, written off the hot path.
+//!
+//! The ROADMAP calls for "perf telemetry as a first-class time-series":
+//! [`RunRecord`](crate::metrics::RunRecord) only exists in memory until a
+//! run finishes, so a crashed or diverging run leaves nothing to inspect,
+//! and nothing ties the paper's analytic perf model (eq. 8/9) to what the
+//! kernels actually did step by step. This module fixes that with a JSONL
+//! event log:
+//!
+//! * **One event per line**, serialized with the in-tree
+//!   [`util::json`](crate::util::json) writer
+//!   ([`Json::to_string_compact`]); a compact value never contains a raw
+//!   newline, so records are framed by `'\n'` alone.
+//! * **Appends are line-atomic**: a single background thread owns the file
+//!   and writes each framed line with one `write_all`, so concurrent
+//!   emitters (trainer thread + serve workers) never interleave bytes.
+//! * **The hot path never blocks**: [`TelemetrySink::emit`] serializes and
+//!   `try_send`s into a bounded channel. When the writer falls behind, the
+//!   event is dropped and a visible [`dropped_events`]
+//!   (TelemetrySink::dropped_events) counter increments — the same
+//!   contract as the PR 9 async checkpoint writer, degraded observability
+//!   instead of degraded training.
+//! * **The reader is truncation-tolerant** in the style of the checkpoint
+//!   fuzz contract: [`read_log`] recovers every complete line, counts
+//!   unparseable ones, flags a trailing partial line, and never panics —
+//!   pinned at every byte boundary by `rust/tests/telemetry.rs`.
+//!
+//! On top of the log sit [`replay`] (fold the events back into a
+//! `RunRecord`-compatible trajectory), [`spans`] (per-phase step timing
+//! from `runtime::native::step`), [`gate`] (the `BENCH_*.json` regression
+//! gate), and [`crate::perfmodel::drift`] (modelled-vs-measured step-time
+//! diffing). See ARCHITECTURE.md §Observability for the event schema
+//! table and the drop/tolerance policies.
+//!
+//! [`Json::to_string_compact`]: crate::util::json::Json::to_string_compact
+
+pub mod gate;
+pub mod replay;
+pub mod spans;
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::metrics::SwitchEventLite;
+use crate::util::json::{num, obj, Json};
+
+/// Version stamped into every event (`"v"`); readers skip lines whose
+/// version they do not understand instead of failing the whole log.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Bounded-channel capacity between emitters and the writer thread. At one
+/// `Step` + one `StepTiming` event per training step this is ~2000 steps of
+/// slack before anything is dropped.
+const CHANNEL_CAPACITY: usize = 4096;
+
+/// One record in the run-event log.
+///
+/// Every variant serializes to a single-line JSON object carrying
+/// `{"v": SCHEMA_VERSION, "t": "<type>", ...}`. Trajectory-shaping events
+/// (`Step`, `Switch`, `Eval`, `Rollback`, `Resume`, `RunEnd`) carry enough
+/// to reconstruct a [`RunRecord`](crate::metrics::RunRecord) via
+/// [`replay::replay`]; the rest (`Fault`, `Checkpoint`, `StepTiming`,
+/// `ServeSnapshot`) are observability-only.
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// Run header, emitted once per process before the first step.
+    RunStart {
+        name: String,
+        mode: String,
+        batch: usize,
+        accs: u32,
+        epochs: usize,
+        steps_per_epoch: usize,
+        num_layers: usize,
+    },
+    /// One accepted (non-diverged) training step. `step` is the 1-based
+    /// global step; the per-layer rows mirror what the trainer records
+    /// into the `RunRecord` (`lb`/`res`/`wnz`/`wmax` are empty for
+    /// policies that do not measure them).
+    Step {
+        step: u64,
+        epoch: usize,
+        loss: f32,
+        ce: f32,
+        acc: f32,
+        /// Max per-layer gradient norm this step.
+        gnorm: f32,
+        wl: Vec<u8>,
+        nz: Vec<f32>,
+        lb: Vec<u32>,
+        res: Vec<u32>,
+        wnz: Vec<f32>,
+        wmax: Vec<f32>,
+    },
+    /// A PushUp/PushDown precision switch (old -> new `<WL, FL>`).
+    Switch(SwitchEventLite),
+    /// Held-out evaluation at `step`.
+    Eval { step: u64, acc: f32 },
+    /// Epoch boundary; `sync_secs` is the PushDown re-sync wall time.
+    EpochEnd { epoch: usize, sync_secs: f64 },
+    /// A checkpoint was enqueued at `step`.
+    Checkpoint { step: u64 },
+    /// An injected or organic fault observed at `step`.
+    Fault { step: u64, kind: String },
+    /// Divergence rollback: the run rewound from `step` to `to_step`.
+    /// `steps`/`evals`/`switches` are the restored trajectory lengths —
+    /// replay truncates to exactly these, so the reconstruction matches
+    /// the in-memory record without guessing which rows survived.
+    Rollback {
+        step: u64,
+        to_step: u64,
+        rollbacks: u64,
+        steps: usize,
+        evals: usize,
+        switches: usize,
+    },
+    /// Process resumed from a checkpoint at `from_step`; truncation
+    /// lengths as in [`Event::Rollback`] (steps logged by a previous
+    /// process after its last checkpoint are rewound).
+    Resume {
+        from_step: u64,
+        steps: usize,
+        evals: usize,
+        switches: usize,
+    },
+    /// Per-step phase breakdown from [`spans`], in milliseconds.
+    StepTiming {
+        step: u64,
+        quant_ms: f64,
+        gemm_ms: f64,
+        pack_ms: f64,
+        epilogue_ms: f64,
+    },
+    /// Periodic serve-worker stats snapshot
+    /// ([`ServeStatsSnapshot::to_json`](crate::serve::ServeStatsSnapshot::to_json)).
+    ServeSnapshot { stats: Json },
+    /// Run footer: authoritative totals for the finished run.
+    RunEnd {
+        steps: usize,
+        wall_secs: f64,
+        switch_secs: f64,
+        final_ce: f32,
+    },
+}
+
+fn arr_u8(v: &[u8]) -> Json {
+    Json::Arr(v.iter().map(|&x| num(x as f64)).collect())
+}
+
+fn arr_u32(v: &[u32]) -> Json {
+    Json::Arr(v.iter().map(|&x| num(x as f64)).collect())
+}
+
+fn arr_f32(v: &[f32]) -> Json {
+    Json::Arr(v.iter().map(|&x| num(x as f64)).collect())
+}
+
+fn head(t: &str, mut fields: Vec<(&str, Json)>) -> Json {
+    let mut pairs = vec![
+        ("v", num(SCHEMA_VERSION as f64)),
+        ("t", Json::Str(t.to_string())),
+    ];
+    pairs.append(&mut fields);
+    obj(pairs)
+}
+
+fn get_f64(j: &Json, k: &str) -> Option<f64> {
+    j.get(k).and_then(|v| v.as_f64())
+}
+
+fn get_u64(j: &Json, k: &str) -> Option<u64> {
+    get_f64(j, k).map(|n| n as u64)
+}
+
+fn get_usize(j: &Json, k: &str) -> Option<usize> {
+    get_f64(j, k).map(|n| n as usize)
+}
+
+fn vec_f32(j: &Json, k: &str) -> Vec<f32> {
+    j.get(k)
+        .and_then(|v| v.as_arr())
+        .map(|a| a.iter().filter_map(|x| x.as_f64()).map(|x| x as f32).collect())
+        .unwrap_or_default()
+}
+
+fn vec_u8(j: &Json, k: &str) -> Vec<u8> {
+    j.get(k)
+        .and_then(|v| v.as_arr())
+        .map(|a| a.iter().filter_map(|x| x.as_f64()).map(|x| x as u8).collect())
+        .unwrap_or_default()
+}
+
+fn vec_u32(j: &Json, k: &str) -> Vec<u32> {
+    j.get(k)
+        .and_then(|v| v.as_arr())
+        .map(|a| a.iter().filter_map(|x| x.as_f64()).map(|x| x as u32).collect())
+        .unwrap_or_default()
+}
+
+impl Event {
+    /// The `"t"` tag this variant serializes under.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::RunStart { .. } => "run_start",
+            Event::Step { .. } => "step",
+            Event::Switch(_) => "switch",
+            Event::Eval { .. } => "eval",
+            Event::EpochEnd { .. } => "epoch_end",
+            Event::Checkpoint { .. } => "ckpt",
+            Event::Fault { .. } => "fault",
+            Event::Rollback { .. } => "rollback",
+            Event::Resume { .. } => "resume",
+            Event::StepTiming { .. } => "step_timing",
+            Event::ServeSnapshot { .. } => "serve_stats",
+            Event::RunEnd { .. } => "run_end",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Event::RunStart {
+                name,
+                mode,
+                batch,
+                accs,
+                epochs,
+                steps_per_epoch,
+                num_layers,
+            } => head(
+                self.kind(),
+                vec![
+                    ("name", Json::Str(name.clone())),
+                    ("mode", Json::Str(mode.clone())),
+                    ("batch", num(*batch as f64)),
+                    ("accs", num(*accs as f64)),
+                    ("epochs", num(*epochs as f64)),
+                    ("steps_per_epoch", num(*steps_per_epoch as f64)),
+                    ("num_layers", num(*num_layers as f64)),
+                ],
+            ),
+            Event::Step {
+                step,
+                epoch,
+                loss,
+                ce,
+                acc,
+                gnorm,
+                wl,
+                nz,
+                lb,
+                res,
+                wnz,
+                wmax,
+            } => {
+                let mut fields = vec![
+                    ("step", num(*step as f64)),
+                    ("epoch", num(*epoch as f64)),
+                    ("loss", num(*loss as f64)),
+                    ("ce", num(*ce as f64)),
+                    ("acc", num(*acc as f64)),
+                    ("gnorm", num(*gnorm as f64)),
+                    ("wl", arr_u8(wl)),
+                    ("nz", arr_f32(nz)),
+                ];
+                // optional rows stay off the line entirely when unmeasured
+                if !lb.is_empty() {
+                    fields.push(("lb", arr_u32(lb)));
+                    fields.push(("res", arr_u32(res)));
+                }
+                if !wnz.is_empty() {
+                    fields.push(("wnz", arr_f32(wnz)));
+                    fields.push(("wmax", arr_f32(wmax)));
+                }
+                head(self.kind(), fields)
+            }
+            Event::Switch(s) => {
+                // the forced-PushUp sentinel is ±∞, which JSON numbers
+                // cannot carry: non-finite diversities ride as strings
+                // ("inf"/"-inf"/"NaN", Rust's f64 round-trip spellings)
+                let div = if s.diversity.is_finite() {
+                    num(s.diversity)
+                } else {
+                    Json::Str(format!("{}", s.diversity))
+                };
+                head(
+                    self.kind(),
+                    vec![
+                        ("step", num(s.step as f64)),
+                        ("layer", num(s.layer as f64)),
+                        ("old_wl", num(s.old_wl as f64)),
+                        ("old_fl", num(s.old_fl as f64)),
+                        ("new_wl", num(s.new_wl as f64)),
+                        ("new_fl", num(s.new_fl as f64)),
+                        ("div", div),
+                    ],
+                )
+            }
+            Event::Eval { step, acc } => head(
+                self.kind(),
+                vec![("step", num(*step as f64)), ("acc", num(*acc as f64))],
+            ),
+            Event::EpochEnd { epoch, sync_secs } => head(
+                self.kind(),
+                vec![
+                    ("epoch", num(*epoch as f64)),
+                    ("sync_secs", num(*sync_secs)),
+                ],
+            ),
+            Event::Checkpoint { step } => head(self.kind(), vec![("step", num(*step as f64))]),
+            Event::Fault { step, kind } => head(
+                self.kind(),
+                vec![
+                    ("step", num(*step as f64)),
+                    ("kind", Json::Str(kind.clone())),
+                ],
+            ),
+            Event::Rollback {
+                step,
+                to_step,
+                rollbacks,
+                steps,
+                evals,
+                switches,
+            } => head(
+                self.kind(),
+                vec![
+                    ("step", num(*step as f64)),
+                    ("to_step", num(*to_step as f64)),
+                    ("rollbacks", num(*rollbacks as f64)),
+                    ("steps", num(*steps as f64)),
+                    ("evals", num(*evals as f64)),
+                    ("switches", num(*switches as f64)),
+                ],
+            ),
+            Event::Resume {
+                from_step,
+                steps,
+                evals,
+                switches,
+            } => head(
+                self.kind(),
+                vec![
+                    ("from_step", num(*from_step as f64)),
+                    ("steps", num(*steps as f64)),
+                    ("evals", num(*evals as f64)),
+                    ("switches", num(*switches as f64)),
+                ],
+            ),
+            Event::StepTiming {
+                step,
+                quant_ms,
+                gemm_ms,
+                pack_ms,
+                epilogue_ms,
+            } => head(
+                self.kind(),
+                vec![
+                    ("step", num(*step as f64)),
+                    ("quant_ms", num(*quant_ms)),
+                    ("gemm_ms", num(*gemm_ms)),
+                    ("pack_ms", num(*pack_ms)),
+                    ("epilogue_ms", num(*epilogue_ms)),
+                ],
+            ),
+            Event::ServeSnapshot { stats } => {
+                head(self.kind(), vec![("stats", stats.clone())])
+            }
+            Event::RunEnd {
+                steps,
+                wall_secs,
+                switch_secs,
+                final_ce,
+            } => head(
+                self.kind(),
+                vec![
+                    ("steps", num(*steps as f64)),
+                    ("wall_secs", num(*wall_secs)),
+                    ("switch_secs", num(*switch_secs)),
+                    ("final_ce", num(*final_ce as f64)),
+                ],
+            ),
+        }
+    }
+
+    /// Decode one parsed log line. `None` for unknown types or schema
+    /// versions (the reader counts those as skipped, never an error).
+    pub fn from_json(j: &Json) -> Option<Event> {
+        if get_u64(j, "v")? != SCHEMA_VERSION {
+            return None;
+        }
+        let t = j.get("t")?.as_str()?;
+        Some(match t {
+            "run_start" => Event::RunStart {
+                name: j.get("name")?.as_str()?.to_string(),
+                mode: j.get("mode")?.as_str()?.to_string(),
+                batch: get_usize(j, "batch")?,
+                accs: get_u64(j, "accs")? as u32,
+                epochs: get_usize(j, "epochs")?,
+                steps_per_epoch: get_usize(j, "steps_per_epoch")?,
+                num_layers: get_usize(j, "num_layers")?,
+            },
+            "step" => Event::Step {
+                step: get_u64(j, "step")?,
+                epoch: get_usize(j, "epoch")?,
+                loss: get_f64(j, "loss")? as f32,
+                ce: get_f64(j, "ce")? as f32,
+                acc: get_f64(j, "acc")? as f32,
+                gnorm: get_f64(j, "gnorm").unwrap_or(0.0) as f32,
+                wl: vec_u8(j, "wl"),
+                nz: vec_f32(j, "nz"),
+                lb: vec_u32(j, "lb"),
+                res: vec_u32(j, "res"),
+                wnz: vec_f32(j, "wnz"),
+                wmax: vec_f32(j, "wmax"),
+            },
+            "switch" => Event::Switch(SwitchEventLite {
+                step: get_u64(j, "step")?,
+                layer: get_f64(j, "layer")? as i64,
+                old_wl: get_f64(j, "old_wl")? as u8,
+                old_fl: get_f64(j, "old_fl")? as u8,
+                new_wl: get_f64(j, "new_wl")? as u8,
+                new_fl: get_f64(j, "new_fl")? as u8,
+                diversity: {
+                    let v = j.get("div")?;
+                    v.as_f64()
+                        .or_else(|| v.as_str().and_then(|s| s.parse().ok()))?
+                },
+            }),
+            "eval" => Event::Eval {
+                step: get_u64(j, "step")?,
+                acc: get_f64(j, "acc")? as f32,
+            },
+            "epoch_end" => Event::EpochEnd {
+                epoch: get_usize(j, "epoch")?,
+                sync_secs: get_f64(j, "sync_secs")?,
+            },
+            "ckpt" => Event::Checkpoint {
+                step: get_u64(j, "step")?,
+            },
+            "fault" => Event::Fault {
+                step: get_u64(j, "step")?,
+                kind: j.get("kind")?.as_str()?.to_string(),
+            },
+            "rollback" => Event::Rollback {
+                step: get_u64(j, "step")?,
+                to_step: get_u64(j, "to_step")?,
+                rollbacks: get_u64(j, "rollbacks")?,
+                steps: get_usize(j, "steps")?,
+                evals: get_usize(j, "evals")?,
+                switches: get_usize(j, "switches")?,
+            },
+            "resume" => Event::Resume {
+                from_step: get_u64(j, "from_step")?,
+                steps: get_usize(j, "steps")?,
+                evals: get_usize(j, "evals")?,
+                switches: get_usize(j, "switches")?,
+            },
+            "step_timing" => Event::StepTiming {
+                step: get_u64(j, "step")?,
+                quant_ms: get_f64(j, "quant_ms")?,
+                gemm_ms: get_f64(j, "gemm_ms")?,
+                pack_ms: get_f64(j, "pack_ms")?,
+                epilogue_ms: get_f64(j, "epilogue_ms")?,
+            },
+            "serve_stats" => Event::ServeSnapshot {
+                stats: j.get("stats")?.clone(),
+            },
+            "run_end" => Event::RunEnd {
+                steps: get_usize(j, "steps")?,
+                wall_secs: get_f64(j, "wall_secs")?,
+                switch_secs: get_f64(j, "switch_secs")?,
+                final_ce: get_f64(j, "final_ce")? as f32,
+            },
+            _ => return None,
+        })
+    }
+}
+
+enum Cmd {
+    Line(String),
+    Sync(mpsc::Sender<()>),
+}
+
+#[derive(Debug)]
+struct SinkInner {
+    /// `None` once shutdown began; emits after that are counted dropped.
+    tx: Mutex<Option<SyncSender<Cmd>>>,
+    dropped: AtomicU64,
+    errors: Arc<Mutex<Vec<String>>>,
+    worker: Mutex<Option<JoinHandle<()>>>,
+    path: PathBuf,
+}
+
+impl Drop for SinkInner {
+    fn drop(&mut self) {
+        // drop the sender FIRST so the writer's recv loop ends; joining
+        // before that would deadlock against our own channel
+        if let Ok(tx) = self.tx.get_mut() {
+            tx.take();
+        }
+        if let Ok(worker) = self.worker.get_mut() {
+            if let Some(h) = worker.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Handle to the run-event log. Cheap to clone (all clones feed one writer
+/// thread); the disabled sink ([`TelemetrySink::disabled`], also
+/// `Default`) makes every operation a no-op so instrumented code paths
+/// cost nothing when telemetry is off.
+#[derive(Debug, Clone, Default)]
+pub struct TelemetrySink {
+    inner: Option<Arc<SinkInner>>,
+}
+
+impl TelemetrySink {
+    /// The no-op sink: `emit` returns immediately, nothing is written.
+    pub fn disabled() -> TelemetrySink {
+        TelemetrySink { inner: None }
+    }
+
+    /// Open (append-mode, creating parents) `path` and spawn the
+    /// background writer. An existing log is appended to, never truncated
+    /// — a resumed run continues the same file.
+    pub fn to_file(path: &Path) -> Result<TelemetrySink> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening event log {}", path.display()))?;
+        let (tx, rx) = mpsc::sync_channel::<Cmd>(CHANNEL_CAPACITY);
+        let errors: Arc<Mutex<Vec<String>>> = Arc::default();
+        let werr = Arc::clone(&errors);
+        let worker = std::thread::Builder::new()
+            .name("adapt-telemetry".to_string())
+            .spawn(move || writer_loop(file, rx, werr))
+            .context("spawning telemetry writer")?;
+        Ok(TelemetrySink {
+            inner: Some(Arc::new(SinkInner {
+                tx: Mutex::new(Some(tx)),
+                dropped: AtomicU64::new(0),
+                errors,
+                worker: Mutex::new(Some(worker)),
+                path: path.to_path_buf(),
+            })),
+        })
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// The log file this sink appends to (`None` for the disabled sink).
+    pub fn path(&self) -> Option<&Path> {
+        self.inner.as_deref().map(|i| i.path.as_path())
+    }
+
+    /// Serialize `e` and hand it to the writer thread. NEVER blocks: a
+    /// full channel (writer stalled on slow I/O) drops the event and
+    /// increments [`dropped_events`](Self::dropped_events) instead.
+    pub fn emit(&self, e: &Event) {
+        let Some(inner) = &self.inner else { return };
+        let mut line = e.to_json().to_string_compact();
+        line.push('\n');
+        let sent = match inner.tx.lock() {
+            Ok(guard) => match guard.as_ref() {
+                Some(tx) => tx.try_send(Cmd::Line(line)).is_ok(),
+                None => false,
+            },
+            Err(_) => false,
+        };
+        if !sent {
+            inner.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Events discarded because the writer could not keep up.
+    pub fn dropped_events(&self) -> u64 {
+        self.inner
+            .as_deref()
+            .map(|i| i.dropped.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Barrier: wait until everything emitted so far is written and
+    /// fsynced, then drain and return any writer errors. The one
+    /// deliberately-blocking call — used at run end and before rollback
+    /// forensics, never inside the step loop.
+    pub fn sync(&self) -> Vec<String> {
+        let Some(inner) = &self.inner else {
+            return Vec::new();
+        };
+        let (ack_tx, ack_rx) = mpsc::channel();
+        let sent = match inner.tx.lock() {
+            Ok(guard) => match guard.as_ref() {
+                Some(tx) => tx.send(Cmd::Sync(ack_tx)).is_ok(),
+                None => false,
+            },
+            Err(_) => false,
+        };
+        if sent {
+            let _ = ack_rx.recv();
+        }
+        match inner.errors.lock() {
+            Ok(mut e) => std::mem::take(&mut *e),
+            Err(_) => Vec::new(),
+        }
+    }
+}
+
+fn writer_loop(mut file: std::fs::File, rx: Receiver<Cmd>, errors: Arc<Mutex<Vec<String>>>) {
+    use std::io::Write;
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Line(line) => {
+                if let Err(e) = file.write_all(line.as_bytes()) {
+                    if let Ok(mut errs) = errors.lock() {
+                        errs.push(format!("telemetry write: {e}"));
+                    }
+                }
+            }
+            Cmd::Sync(ack) => {
+                if let Err(e) = file.sync_all() {
+                    if let Ok(mut errs) = errors.lock() {
+                        errs.push(format!("telemetry sync: {e}"));
+                    }
+                }
+                let _ = ack.send(());
+            }
+        }
+    }
+    let _ = file.sync_all();
+}
+
+/// What [`read_log`] recovered from an event log.
+#[derive(Debug, Default)]
+pub struct LogContents {
+    /// Every complete, parseable, version-matched event, in file order.
+    pub events: Vec<Event>,
+    /// Complete lines that failed to parse or carried an unknown
+    /// type/version.
+    pub skipped: usize,
+    /// The file ended mid-line (a write was cut by a crash); the partial
+    /// tail is not an event.
+    pub truncated: bool,
+}
+
+/// Parse raw log bytes. Truncation-tolerant and panic-free on ANY input:
+/// complete `'\n'`-framed lines parse independently, garbage lines count
+/// as `skipped`, and an unterminated tail sets `truncated`.
+pub fn parse_log_bytes(bytes: &[u8]) -> LogContents {
+    let mut out = LogContents::default();
+    let mut start = 0usize;
+    for i in 0..bytes.len() {
+        if bytes[i] != b'\n' {
+            continue;
+        }
+        let line = &bytes[start..i];
+        start = i + 1;
+        if line.is_empty() {
+            continue;
+        }
+        let parsed = std::str::from_utf8(line)
+            .ok()
+            .and_then(|s| Json::parse(s).ok())
+            .and_then(|j| Event::from_json(&j));
+        match parsed {
+            Some(e) => out.events.push(e),
+            None => out.skipped += 1,
+        }
+    }
+    if start < bytes.len() {
+        out.truncated = true;
+    }
+    out
+}
+
+/// Read and parse an event log file (see [`parse_log_bytes`]).
+pub fn read_log(path: &Path) -> Result<LogContents> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading event log {}", path.display()))?;
+    Ok(parse_log_bytes(&bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<Event> {
+        vec![
+            Event::RunStart {
+                name: "mlp".into(),
+                mode: "adapt".into(),
+                batch: 16,
+                accs: 1,
+                epochs: 2,
+                steps_per_epoch: 3,
+                num_layers: 2,
+            },
+            Event::Step {
+                step: 1,
+                epoch: 0,
+                loss: 2.25,
+                ce: 2.125,
+                acc: 0.5,
+                gnorm: 1.5,
+                wl: vec![16, 16],
+                nz: vec![0.875, 1.0],
+                lb: vec![50, 50],
+                res: vec![100, 100],
+                wnz: vec![0.75, 1.0],
+                wmax: vec![1.25, 2.0],
+            },
+            Event::Switch(SwitchEventLite {
+                step: 1,
+                layer: 0,
+                old_wl: 16,
+                old_fl: 8,
+                new_wl: 12,
+                new_fl: 6,
+                diversity: 3.5,
+            }),
+            // the rollback-forced PushUp sentinel must survive the log
+            Event::Switch(SwitchEventLite {
+                step: 2,
+                layer: -1,
+                old_wl: 12,
+                old_fl: 6,
+                new_wl: 16,
+                new_fl: 8,
+                diversity: f64::INFINITY,
+            }),
+            Event::Eval { step: 3, acc: 0.625 },
+            Event::EpochEnd {
+                epoch: 0,
+                sync_secs: 0.0625,
+            },
+            Event::Checkpoint { step: 3 },
+            Event::Fault {
+                step: 4,
+                kind: "nan_loss".into(),
+            },
+            Event::Rollback {
+                step: 4,
+                to_step: 3,
+                rollbacks: 1,
+                steps: 3,
+                evals: 1,
+                switches: 1,
+            },
+            Event::Resume {
+                from_step: 3,
+                steps: 3,
+                evals: 1,
+                switches: 1,
+            },
+            Event::StepTiming {
+                step: 1,
+                quant_ms: 0.5,
+                gemm_ms: 4.25,
+                pack_ms: 0.0,
+                epilogue_ms: 0.75,
+            },
+            Event::ServeSnapshot {
+                stats: obj(vec![("requests", num(12.0))]),
+            },
+            Event::RunEnd {
+                steps: 6,
+                wall_secs: 1.5,
+                switch_secs: 0.125,
+                final_ce: 1.0625,
+            },
+        ]
+    }
+
+    #[test]
+    fn every_variant_round_trips() {
+        for e in sample_events() {
+            let line = e.to_json().to_string_compact();
+            assert!(!line.contains('\n'), "{line}");
+            let j = Json::parse(&line).unwrap();
+            let back = Event::from_json(&j).expect(&line);
+            assert_eq!(back.kind(), e.kind());
+            assert_eq!(back.to_json(), e.to_json(), "{line}");
+        }
+    }
+
+    #[test]
+    fn unknown_version_and_type_are_skipped_not_errors() {
+        let mut text = String::new();
+        text.push_str("{\"v\":99,\"t\":\"step\",\"step\":1}\n");
+        text.push_str("{\"v\":1,\"t\":\"mystery\"}\n");
+        text.push_str("not json at all\n");
+        text.push_str(&Event::Checkpoint { step: 7 }.to_json().to_string_compact());
+        text.push('\n');
+        let log = parse_log_bytes(text.as_bytes());
+        assert_eq!(log.events.len(), 1);
+        assert_eq!(log.skipped, 3);
+        assert!(!log.truncated);
+    }
+
+    #[test]
+    fn trailing_partial_line_flags_truncated() {
+        let mut bytes = Event::Checkpoint { step: 7 }.to_json().to_string_compact().into_bytes();
+        bytes.push(b'\n');
+        bytes.extend_from_slice(b"{\"v\":1,\"t\":\"ev");
+        let log = parse_log_bytes(&bytes);
+        assert_eq!(log.events.len(), 1);
+        assert_eq!(log.skipped, 0);
+        assert!(log.truncated);
+    }
+
+    #[test]
+    fn sink_writes_and_reads_back() {
+        let dir = std::env::temp_dir().join(format!("adapt_telemetry_{}", std::process::id()));
+        let path = dir.join("unit.jsonl");
+        std::fs::remove_file(&path).ok();
+        let sink = TelemetrySink::to_file(&path).unwrap();
+        assert!(sink.is_enabled());
+        assert_eq!(sink.path(), Some(path.as_path()));
+        for e in sample_events() {
+            sink.emit(&e);
+        }
+        let errs = sink.sync();
+        assert!(errs.is_empty(), "{errs:?}");
+        assert_eq!(sink.dropped_events(), 0);
+        drop(sink);
+        let log = read_log(&path).unwrap();
+        assert_eq!(log.events.len(), sample_events().len());
+        assert_eq!(log.skipped, 0);
+        assert!(!log.truncated);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn disabled_sink_is_a_no_op() {
+        let sink = TelemetrySink::disabled();
+        assert!(!sink.is_enabled());
+        sink.emit(&Event::Checkpoint { step: 1 });
+        assert_eq!(sink.dropped_events(), 0);
+        assert!(sink.sync().is_empty());
+        assert_eq!(sink.path(), None);
+    }
+}

@@ -1,0 +1,242 @@
+//! Reconstruct a [`RunRecord`]-compatible trajectory from the event log.
+//!
+//! The fold is exact, not approximate: `Step`/`Switch`/`Eval` events carry
+//! the same values the trainer pushes into its in-memory record, and
+//! `Rollback`/`Resume` events carry the restored trajectory LENGTHS (not
+//! step numbers — a controller's internal switch-step counter need not
+//! equal the global step), so rewinds truncate to precisely the rows the
+//! live run kept. `rust/tests/telemetry.rs` pins replay-vs-memory
+//! equality through an injected fault -> rollback.
+
+use std::path::Path;
+
+use crate::metrics::{RunRecord, StepRow};
+
+use super::{Event, LogContents};
+
+/// Fold events (file order) into a [`RunRecord`].
+///
+/// Works on partial logs from crashed runs too: without a `RunEnd` the
+/// record simply carries whatever trajectory was durable, with
+/// `wall_secs` left at 0.
+pub fn replay(events: &[Event]) -> RunRecord {
+    let mut rec = RunRecord::default();
+    for e in events {
+        match e {
+            Event::RunStart {
+                name,
+                mode,
+                batch,
+                accs,
+                epochs,
+                steps_per_epoch,
+                num_layers,
+            } => {
+                // a resumed process re-emits the header; the trajectory
+                // rows accumulated so far stay (the Resume event handles
+                // any rewind)
+                rec.name = name.clone();
+                rec.mode = mode.clone();
+                rec.batch = *batch;
+                rec.accs = *accs;
+                rec.epochs = *epochs;
+                rec.steps_per_epoch = *steps_per_epoch;
+                rec.num_layers = *num_layers;
+            }
+            Event::Step {
+                loss,
+                ce,
+                acc,
+                wl,
+                nz,
+                lb,
+                res,
+                wnz,
+                wmax,
+                ..
+            } => {
+                rec.steps.push(StepRow {
+                    loss: *loss,
+                    ce: *ce,
+                    acc: *acc,
+                });
+                rec.layer_wl.push(wl.clone());
+                rec.layer_nz.push(nz.clone());
+                if !lb.is_empty() {
+                    rec.layer_lb.push(lb.clone());
+                    rec.layer_res.push(res.clone());
+                }
+                if !wnz.is_empty() {
+                    rec.layer_wnz.push(wnz.clone());
+                    rec.layer_wmax.push(wmax.clone());
+                }
+            }
+            Event::Switch(s) => rec.switches.push(s.clone()),
+            Event::Eval { step, acc } => rec.evals.push((*step, *acc)),
+            Event::EpochEnd { sync_secs, .. } => rec.switch_secs += sync_secs,
+            Event::Rollback {
+                steps,
+                evals,
+                switches,
+                ..
+            }
+            | Event::Resume {
+                steps,
+                evals,
+                switches,
+                ..
+            } => truncate_to(&mut rec, *steps, *evals, *switches),
+            Event::RunEnd {
+                wall_secs,
+                switch_secs,
+                ..
+            } => {
+                // authoritative totals (EpochEnd accumulation above is the
+                // best-effort estimate for logs that never reached the end)
+                rec.wall_secs = *wall_secs;
+                rec.switch_secs = *switch_secs;
+            }
+            Event::Checkpoint { .. }
+            | Event::Fault { .. }
+            | Event::StepTiming { .. }
+            | Event::ServeSnapshot { .. } => {}
+        }
+    }
+    rec
+}
+
+fn truncate_to(rec: &mut RunRecord, steps: usize, evals: usize, switches: usize) {
+    rec.steps.truncate(steps);
+    rec.layer_wl.truncate(steps);
+    rec.layer_nz.truncate(steps);
+    rec.layer_lb.truncate(steps);
+    rec.layer_res.truncate(steps);
+    rec.layer_wnz.truncate(steps);
+    rec.layer_wmax.truncate(steps);
+    rec.evals.truncate(evals);
+    rec.switches.truncate(switches);
+}
+
+/// Read + replay a log file in one call.
+pub fn replay_log(path: &Path) -> anyhow::Result<(RunRecord, LogContents)> {
+    let log = super::read_log(path)?;
+    let rec = replay(&log.events);
+    Ok((rec, log))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::SwitchEventLite;
+
+    fn step(n: u64, ce: f32) -> Event {
+        Event::Step {
+            step: n,
+            epoch: 0,
+            loss: ce + 0.125,
+            ce,
+            acc: 0.5,
+            gnorm: 1.0,
+            wl: vec![16, 16],
+            nz: vec![1.0, 0.875],
+            lb: vec![50, 50],
+            res: vec![100, 100],
+            wnz: vec![],
+            wmax: vec![],
+        }
+    }
+
+    fn switch(step: u64, layer: i64) -> Event {
+        Event::Switch(SwitchEventLite {
+            step,
+            layer,
+            old_wl: 16,
+            old_fl: 8,
+            new_wl: 12,
+            new_fl: 6,
+            diversity: 2.0,
+        })
+    }
+
+    #[test]
+    fn rollback_truncates_to_carried_lengths() {
+        let events = vec![
+            Event::RunStart {
+                name: "m".into(),
+                mode: "adapt".into(),
+                batch: 8,
+                accs: 1,
+                epochs: 1,
+                steps_per_epoch: 4,
+                num_layers: 2,
+            },
+            step(1, 2.0),
+            step(2, 1.9),
+            switch(2, 0),
+            Event::Eval { step: 2, acc: 0.5 },
+            // divergence at step 3: the live run restored the step-2
+            // checkpoint, keeping 2 steps / 1 eval / 1 switch
+            step(3, f32::MAX),
+            switch(3, 1),
+            Event::Fault {
+                step: 3,
+                kind: "nan_loss".into(),
+            },
+            Event::Rollback {
+                step: 3,
+                to_step: 2,
+                rollbacks: 1,
+                steps: 2,
+                evals: 1,
+                switches: 1,
+            },
+            step(3, 1.8),
+            step(4, 1.7),
+            Event::RunEnd {
+                steps: 4,
+                wall_secs: 2.5,
+                switch_secs: 0.25,
+                final_ce: 1.7,
+            },
+        ];
+        let rec = replay(&events);
+        assert_eq!(rec.steps.len(), 4);
+        assert_eq!(rec.layer_wl.len(), 4);
+        assert_eq!(rec.layer_lb.len(), 4);
+        assert_eq!(rec.evals, vec![(2, 0.5)]);
+        assert_eq!(rec.switches.len(), 1);
+        assert_eq!(rec.switches[0].step, 2);
+        assert_eq!(rec.steps.last().unwrap().ce, 1.7);
+        assert_eq!(rec.wall_secs, 2.5);
+        assert_eq!(rec.switch_secs, 0.25);
+        assert_eq!(rec.name, "m");
+        assert_eq!(rec.num_layers, 2);
+    }
+
+    #[test]
+    fn partial_log_without_run_end_still_replays() {
+        let events = vec![step(1, 2.0), step(2, 1.5)];
+        let rec = replay(&events);
+        assert_eq!(rec.steps.len(), 2);
+        assert_eq!(rec.wall_secs, 0.0);
+    }
+
+    #[test]
+    fn resume_rewinds_like_rollback() {
+        let events = vec![
+            step(1, 2.0),
+            step(2, 1.9),
+            step(3, 1.8), // logged but lost: past the last checkpoint
+            Event::Resume {
+                from_step: 2,
+                steps: 2,
+                evals: 0,
+                switches: 0,
+            },
+            step(3, 1.85),
+        ];
+        let rec = replay(&events);
+        assert_eq!(rec.steps.len(), 3);
+        assert_eq!(rec.steps[2].ce, 1.85);
+    }
+}

@@ -1,0 +1,154 @@
+//! Lightweight per-phase timing spans for the native step.
+//!
+//! The interpreter's hot sections (`runtime::native::step`) bracket their
+//! work with [`SpanTimer::start`]/[`SpanTimer::stop`]; the trainer drains
+//! the accumulated per-phase totals once per step with [`take`] and emits
+//! them as one `StepTiming` event. The overhead argument:
+//!
+//! * **Disabled** (the default, and whenever the telemetry sink is off):
+//!   `start` reads one thread-local `bool` and captures no clock; `stop`
+//!   is a no-op. Nothing else changes — spans never touch tensor data, so
+//!   they cannot perturb the trained bits either way.
+//! * **Enabled**: exactly one monotonic-clock read at each phase boundary
+//!   (`Instant::now` on start, `elapsed` on stop) plus a thread-local
+//!   float add — per *phase*, not per element, so a step pays ~10 clock
+//!   reads regardless of model size.
+//!
+//! State is thread-local on purpose: the trainer thread owns its step's
+//! accumulator, the pool's fan-out workers (which never call
+//! [`set_enabled`]) stay dark, and serve workers cannot bleed timings
+//! into a concurrent training run.
+
+use std::cell::Cell;
+use std::time::Instant;
+
+/// Number of [`Phase`]s (the length of [`take`]'s array).
+pub const NUM_PHASES: usize = 4;
+
+/// Which hot-path section a span charges.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Weight fake-quantization (the PushDown-format casts).
+    Quant = 0,
+    /// Forward/backward matmul + conv work, including the ASGD update
+    /// fan-out.
+    Gemm = 1,
+    /// Inference snapshot packing (panel/CSR builds on cache miss).
+    Pack = 2,
+    /// Loss/metrics head and output assembly.
+    Epilogue = 3,
+}
+
+thread_local! {
+    static ENABLED: Cell<bool> = Cell::new(false);
+    static ACC_MS: Cell<[f64; NUM_PHASES]> = Cell::new([0.0; NUM_PHASES]);
+}
+
+/// Turn span collection on/off for the CALLING thread and clear the
+/// accumulator.
+pub fn set_enabled(on: bool) {
+    ENABLED.with(|e| e.set(on));
+    ACC_MS.with(|a| a.set([0.0; NUM_PHASES]));
+}
+
+/// Whether the calling thread is collecting spans.
+pub fn enabled() -> bool {
+    ENABLED.with(|e| e.get())
+}
+
+/// Add `ms` to `phase`'s bucket (no-op while disabled).
+pub fn record(phase: Phase, ms: f64) {
+    if !enabled() {
+        return;
+    }
+    ACC_MS.with(|a| {
+        let mut v = a.get();
+        v[phase as usize] += ms;
+        a.set(v);
+    });
+}
+
+/// Drain the per-phase totals (milliseconds, indexed by `Phase as usize`)
+/// accumulated since the last call, resetting them to zero.
+pub fn take() -> [f64; NUM_PHASES] {
+    ACC_MS.with(|a| {
+        let v = a.get();
+        a.set([0.0; NUM_PHASES]);
+        v
+    })
+}
+
+/// One bracketed phase measurement. When spans are disabled the timer
+/// holds nothing and `stop` does nothing.
+#[must_use = "a SpanTimer only records when stop() is called"]
+pub struct SpanTimer {
+    started: Option<(Phase, Instant)>,
+}
+
+impl SpanTimer {
+    #[inline]
+    pub fn start(phase: Phase) -> SpanTimer {
+        SpanTimer {
+            started: if enabled() {
+                Some((phase, Instant::now()))
+            } else {
+                None
+            },
+        }
+    }
+
+    #[inline]
+    pub fn stop(self) {
+        if let Some((phase, t0)) = self.started {
+            record(phase, t0.elapsed().as_secs_f64() * 1e3);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_records_nothing() {
+        set_enabled(false);
+        let t = SpanTimer::start(Phase::Gemm);
+        t.stop();
+        record(Phase::Quant, 5.0);
+        assert_eq!(take(), [0.0; NUM_PHASES]);
+    }
+
+    #[test]
+    fn enabled_accumulates_and_take_resets() {
+        set_enabled(true);
+        record(Phase::Quant, 1.0);
+        record(Phase::Gemm, 2.0);
+        record(Phase::Gemm, 3.0);
+        record(Phase::Pack, 0.25);
+        record(Phase::Epilogue, 0.5);
+        let got = take();
+        assert_eq!(got, [1.0, 5.0, 0.25, 0.5]);
+        assert_eq!(take(), [0.0; NUM_PHASES]);
+        let t = SpanTimer::start(Phase::Epilogue);
+        t.stop();
+        assert!(take()[Phase::Epilogue as usize] >= 0.0);
+        set_enabled(false);
+    }
+
+    #[test]
+    fn state_is_thread_local() {
+        set_enabled(true);
+        record(Phase::Gemm, 7.0);
+        let other = std::thread::spawn(|| {
+            // a fresh thread starts dark and empty
+            assert!(!enabled());
+            record(Phase::Gemm, 100.0);
+            take()
+        })
+        .join()
+        .unwrap();
+        assert_eq!(other, [0.0; NUM_PHASES]);
+        assert_eq!(take()[Phase::Gemm as usize], 7.0);
+        set_enabled(false);
+    }
+}

@@ -84,6 +84,15 @@ impl Json {
         s
     }
 
+    /// Single-line form (no whitespace). One serialized value never
+    /// contains a raw `'\n'` — strings escape control characters — which
+    /// is what lets the telemetry event log frame records by newline.
+    pub fn to_string_compact(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0, false);
+        s
+    }
+
     fn write(&self, out: &mut String, indent: usize, pretty: bool) {
         let pad = |out: &mut String, n: usize| {
             if pretty {

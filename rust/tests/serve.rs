@@ -103,6 +103,7 @@ fn served_bits_match_direct_infer_across_coalescing_and_workers() {
                     max_wait: Duration::from_millis(2),
                     queue_capacity: 1024,
                     workers,
+                    ..ServeConfig::default()
                 },
             );
             let handle = server.handle();
@@ -195,6 +196,7 @@ fn served_conv_bits_match_direct_infer_with_csr_and_width_switch() {
                     max_wait: Duration::from_millis(2),
                     queue_capacity: 1024,
                     workers,
+                    ..ServeConfig::default()
                 },
             );
             let handle = server.handle();
@@ -254,6 +256,7 @@ fn shutdown_drains_accepted_requests_then_rejects() {
             max_wait: Duration::ZERO,
             queue_capacity: 64,
             workers: 1,
+            ..ServeConfig::default()
         },
     );
     let handle = server.handle();
@@ -293,6 +296,7 @@ fn bounded_queue_backpressure_and_submit_validation() {
             max_wait: Duration::ZERO,
             queue_capacity: 2,
             workers: 0,
+            ..ServeConfig::default()
         },
     );
     let handle = server.handle();
@@ -365,6 +369,7 @@ fn precision_switch_and_weight_edit_invalidate_the_pack_cache() {
             max_wait: Duration::ZERO,
             queue_capacity: 64,
             workers: 1,
+            ..ServeConfig::default()
         },
     );
     let resp = server
@@ -398,6 +403,7 @@ fn worker_panic_is_contained_and_the_team_keeps_serving() {
             max_wait: Duration::ZERO,
             queue_capacity: 64,
             workers: 1,
+            ..ServeConfig::default()
         },
         Arc::new(FaultPlan::default().serve_panic_at(0)),
     );
@@ -441,6 +447,7 @@ fn deadline_waits_and_submits_time_out_typed_and_counted() {
             max_wait: Duration::ZERO,
             queue_capacity: 2,
             workers: 0,
+            ..ServeConfig::default()
         },
     );
     let handle = server.handle();

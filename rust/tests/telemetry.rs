@@ -1,0 +1,379 @@
+//! Telemetry integration suite: the acceptance anchors of the
+//! observability PR.
+//!
+//! * **End-to-end log round-trip** — a real training run with an enabled
+//!   sink produces a parseable JSONL log whose replay reconstructs the
+//!   in-memory `RunRecord` exactly (CE bits, per-layer WL rows, evals,
+//!   switches).
+//! * **Every-byte truncation fuzz** — `parse_log_bytes` on every prefix of
+//!   a real log never panics, recovers exactly the complete lines, and
+//!   flags mid-line cuts as truncated (the checkpoint fuzz contract,
+//!   applied to the event log).
+//! * **Bitwise invisibility** — telemetry on vs off produces bit-identical
+//!   final weights and CE trajectories, across `QuantPool` sizes
+//!   {1, 2, 4}: observability must never touch the math.
+//! * **Fault -> rollback replay parity** — a supervised run through an
+//!   injected NaN divergence logs Fault/Rollback events whose replay
+//!   matches the in-memory record, forced PushUp included.
+//! * **Regression gate** — a synthetic kernel-rate collapse fails the
+//!   `BENCH_*.json` gate; a missing reference keeps it report-only.
+//! * **Serve snapshots** — the worker team mirrors periodic
+//!   `ServeStatsSnapshot`s (with the sink's `dropped_events` total) into
+//!   the same log.
+
+mod common;
+
+use std::fs;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use adapt::coordinator::{
+    supervise_via_model_telemetry, train_via_model, train_via_model_telemetry, FaultPlan, Policy,
+    SupervisorConfig, TrainConfig,
+};
+use adapt::fixedpoint::FixedPointFormat;
+use adapt::metrics::RunRecord;
+use adapt::quant::{QuantHyper, QuantPool};
+use adapt::runtime::{Engine, LoadedModel, NativeBackend};
+use adapt::serve::{ModelRegistry, ServeConfig, ServeServer, ServedModel};
+use adapt::telemetry::{self, gate, replay, Event, TelemetrySink};
+
+use common::{native_mlp_manifest, qparams_uniform};
+
+/// Fresh scratch dir per test (process-id suffixed so parallel test
+/// binaries never collide).
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("adapt_tel_{name}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).expect("create scratch dir");
+    d
+}
+
+fn native_mlp_with_pool(threads: usize) -> LoadedModel {
+    Engine::with_backend(Box::new(NativeBackend::new(Arc::new(QuantPool::new(threads)))))
+        .compile_manifest(native_mlp_manifest())
+        .expect("native backend compiles the synthetic MLP")
+}
+
+fn fast_mlp_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::fast(
+        "mlp-native",
+        Policy::Adapt(QuantHyper::default().scaled(0.15)),
+    );
+    cfg.epochs = 2;
+    cfg.train_size = 256; // 16 steps/epoch at batch 16
+    cfg.eval_size = 64;
+    cfg
+}
+
+fn ce_bits(r: &RunRecord) -> Vec<u32> {
+    r.steps.iter().map(|s| s.ce.to_bits()).collect()
+}
+
+/// Field-wise switch equality (`SwitchEventLite` carries no `PartialEq`).
+fn assert_switches_eq(a: &RunRecord, b: &RunRecord) {
+    assert_eq!(a.switches.len(), b.switches.len(), "switch count");
+    for (x, y) in a.switches.iter().zip(&b.switches) {
+        assert_eq!(x.step, y.step);
+        assert_eq!(x.layer, y.layer);
+        assert_eq!((x.old_wl, x.old_fl), (y.old_wl, y.old_fl));
+        assert_eq!((x.new_wl, x.new_fl), (y.new_wl, y.new_fl));
+        assert_eq!(x.diversity.to_bits(), y.diversity.to_bits());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end round-trip + replay parity
+
+#[test]
+fn training_log_replays_to_the_in_memory_record() {
+    let model = native_mlp_with_pool(2);
+    let cfg = fast_mlp_cfg();
+    let path = tmpdir("roundtrip").join("events.jsonl");
+    let sink = TelemetrySink::to_file(&path).expect("open sink");
+    let out = train_via_model_telemetry(&model, &cfg, &sink).expect("train");
+    assert_eq!(sink.dropped_events(), 0, "a 32-step run must not overflow");
+    drop(sink);
+
+    let (rec, log) = replay::replay_log(&path).expect("replay");
+    assert_eq!(log.skipped, 0, "every line must parse");
+    assert!(!log.truncated);
+
+    // header and footer frame the run
+    assert!(matches!(log.events.first(), Some(Event::RunStart { .. })));
+    assert!(matches!(log.events.last(), Some(Event::RunEnd { .. })));
+    // one StepTiming per accepted step, phases non-negative and not all zero
+    let timings: Vec<&Event> = log
+        .events
+        .iter()
+        .filter(|e| matches!(e, Event::StepTiming { .. }))
+        .collect();
+    assert_eq!(timings.len(), out.record.steps.len());
+    assert!(
+        adapt::perfmodel::drift::measured_step_ms(&log.events)
+            .iter()
+            .any(|&(_, ms)| ms > 0.0),
+        "span timings must measure something"
+    );
+
+    // exact trajectory reconstruction
+    let mem = &out.record;
+    assert_eq!(rec.name, mem.name);
+    assert_eq!(rec.mode, mem.mode);
+    assert_eq!((rec.batch, rec.accs), (mem.batch, mem.accs));
+    assert_eq!(rec.steps.len(), mem.steps.len());
+    assert_eq!(ce_bits(&rec), ce_bits(mem), "CE bits");
+    assert_eq!(rec.layer_wl, mem.layer_wl, "per-layer WL timeline");
+    assert_eq!(rec.layer_nz, mem.layer_nz);
+    assert_eq!(rec.layer_lb, mem.layer_lb);
+    assert_eq!(rec.layer_res, mem.layer_res);
+    assert_eq!(rec.evals, mem.evals);
+    assert_switches_eq(&rec, mem);
+    assert_eq!(rec.wall_secs, mem.wall_secs);
+}
+
+// ---------------------------------------------------------------------------
+// Truncation fuzz
+
+#[test]
+fn every_byte_truncation_of_a_real_log_is_tolerated() {
+    let model = native_mlp_with_pool(1);
+    let mut cfg = fast_mlp_cfg();
+    cfg.epochs = 1;
+    cfg.train_size = 64; // 4 steps: keeps the O(n^2) prefix scan cheap
+    cfg.eval_size = 32;
+    let path = tmpdir("fuzz").join("events.jsonl");
+    let sink = TelemetrySink::to_file(&path).expect("open sink");
+    train_via_model_telemetry(&model, &cfg, &sink).expect("train");
+    drop(sink);
+
+    let bytes = fs::read(&path).expect("read log");
+    assert!(!bytes.is_empty());
+    let full = telemetry::parse_log_bytes(&bytes);
+    assert!(full.events.len() >= 7, "header + steps + footer at least");
+    assert_eq!(full.skipped, 0);
+    assert!(!full.truncated);
+
+    let newlines: Vec<usize> = bytes
+        .iter()
+        .enumerate()
+        .filter_map(|(i, &b)| (b == b'\n').then_some(i))
+        .collect();
+    for cut in 0..=bytes.len() {
+        let log = telemetry::parse_log_bytes(&bytes[..cut]);
+        // complete lines strictly before the cut survive, none are invented
+        let complete = newlines.iter().filter(|&&i| i < cut).count();
+        assert_eq!(log.events.len() + log.skipped, complete, "cut at {cut}");
+        assert_eq!(log.skipped, 0, "cut at {cut}: whole lines always parse");
+        // cut mid-line <=> a partial tail remains
+        let mid_line = cut > 0 && bytes[cut - 1] != b'\n';
+        assert_eq!(log.truncated, mid_line, "cut at {cut}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bitwise invisibility
+
+#[test]
+fn telemetry_never_changes_a_bit_across_pool_sizes() {
+    let cfg = fast_mlp_cfg();
+    let dir = tmpdir("invisible");
+    let mut reference_bits: Option<Vec<u32>> = None;
+    for threads in [1usize, 2, 4] {
+        let model = native_mlp_with_pool(threads);
+        let off = train_via_model(&model, &cfg).expect("telemetry-off train");
+        let sink = TelemetrySink::to_file(&dir.join(format!("t{threads}.jsonl"))).expect("sink");
+        let on = train_via_model_telemetry(&model, &cfg, &sink).expect("telemetry-on train");
+        drop(sink);
+
+        assert!(
+            off.state.bits_eq(&on.state),
+            "pool {threads}: telemetry changed the final tensor state"
+        );
+        assert_eq!(
+            ce_bits(&off.record),
+            ce_bits(&on.record),
+            "pool {threads}: telemetry changed the CE trajectory"
+        );
+        assert_eq!(off.record.layer_wl, on.record.layer_wl);
+        assert_eq!(off.record.evals, on.record.evals);
+
+        let bits = ce_bits(&on.record);
+        match &reference_bits {
+            None => reference_bits = Some(bits),
+            Some(want) => assert_eq!(want, &bits, "pool {threads} diverged from pool 1"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault -> rollback replay parity
+
+#[test]
+fn fault_rollback_log_replays_to_the_supervised_record() {
+    let model = native_mlp_with_pool(2);
+    let cfg = fast_mlp_cfg();
+    let mut sup = SupervisorConfig::new(tmpdir("rollback_ckpt"));
+    sup.every_steps = 5;
+    sup.faults = Arc::new(FaultPlan::default().nan_loss_at(13));
+    let path = tmpdir("rollback_log").join("events.jsonl");
+    let sink = TelemetrySink::to_file(&path).expect("open sink");
+    let out = supervise_via_model_telemetry(&model, &cfg, &sup, &sink).expect("supervised train");
+    assert_eq!(out.rollbacks, 1);
+    drop(sink);
+
+    let (rec, log) = replay::replay_log(&path).expect("replay");
+    assert_eq!(log.skipped, 0);
+    assert!(!log.truncated);
+
+    // the incident is on the record: fault, rollback, checkpoints
+    assert!(
+        log.events
+            .iter()
+            .any(|e| matches!(e, Event::Fault { step: 13, .. })),
+        "the injected NaN must be logged"
+    );
+    let rollbacks: Vec<&Event> = log
+        .events
+        .iter()
+        .filter(|e| matches!(e, Event::Rollback { .. }))
+        .collect();
+    assert_eq!(rollbacks.len(), 1);
+    if let Event::Rollback { step, to_step, rollbacks, .. } = rollbacks[0] {
+        assert_eq!(*step, 13);
+        assert_eq!(*to_step, 10, "nearest checkpoint below 13 at every_steps=5");
+        assert_eq!(*rollbacks, 1);
+    }
+    assert!(
+        log.events.iter().any(|e| matches!(e, Event::Checkpoint { .. })),
+        "checkpoint writes must be logged"
+    );
+
+    // replay == memory, through the rewind
+    let mem = &out.outcome.record;
+    assert_eq!(rec.steps.len(), mem.steps.len(), "step count");
+    assert_eq!(ce_bits(&rec), ce_bits(mem), "CE bits after rollback rewind");
+    assert_eq!(rec.layer_wl, mem.layer_wl);
+    assert_eq!(rec.evals, mem.evals);
+    assert_switches_eq(&rec, mem);
+    // the forced whole-net PushUp survives replay (sentinel ∞ diversity)
+    assert!(
+        rec.switches.iter().any(|s| s.diversity.is_infinite()),
+        "replayed log must carry the forced push-up"
+    );
+    let final_mem = mem.steps.last().map(|s| s.ce.to_bits());
+    let final_rep = rec.steps.last().map(|s| s.ce.to_bits());
+    assert_eq!(final_mem, final_rep, "final CE");
+}
+
+// ---------------------------------------------------------------------------
+// Regression gate
+
+#[test]
+fn gate_fails_on_kernel_rate_regression_fixture() {
+    use adapt::bench_support::{write_bench_json, BenchEntry};
+    let dir = tmpdir("gate");
+    let reference = dir.join("BENCH_reference.json");
+    let current = dir.join("BENCH_current.json");
+    let entries = |gemm_ms: f64| vec![BenchEntry { name: "dense_gemm".into(), ms_per_iter: gemm_ms }];
+
+    // healthy reference: dense rate 1000 madds/ms
+    write_bench_json(
+        &reference,
+        &entries(2.0),
+        &[("calibration_dense_madds_per_ms".into(), 1000.0)],
+    )
+    .unwrap();
+
+    // report-only while no reference exists
+    let rep = gate::check_files(&current, &dir.join("missing.json"), &gate::GateConfig::default());
+    assert!(!rep.expect("missing reference is not an error").enforced);
+
+    // kernel-rate collapse: 1000 -> 400 madds/ms (60% drop > 30% tol)
+    write_bench_json(
+        &current,
+        &entries(2.1),
+        &[("calibration_dense_madds_per_ms".into(), 400.0)],
+    )
+    .unwrap();
+    let rep = gate::check_files(&current, &reference, &gate::GateConfig::default()).unwrap();
+    assert!(rep.enforced);
+    assert!(rep.failed(), "a 60% rate collapse must fail the gate:\n{}", rep.render());
+    assert_eq!(rep.regressions(), 1);
+    assert!(rep.render().contains("REGRESSED"));
+
+    // recovered rate passes
+    write_bench_json(
+        &current,
+        &entries(2.1),
+        &[("calibration_dense_madds_per_ms".into(), 980.0)],
+    )
+    .unwrap();
+    let rep = gate::check_files(&current, &reference, &gate::GateConfig::default()).unwrap();
+    assert!(!rep.failed(), "{}", rep.render());
+}
+
+// ---------------------------------------------------------------------------
+// Serve snapshots
+
+#[test]
+fn serve_workers_mirror_periodic_snapshots_into_the_log() {
+    let man = native_mlp_manifest();
+    let l = man.num_layers;
+    let params = adapt::init::init_params(&man, adapt::init::Initializer::Tnvs, 1.0, 3);
+    let qp = qparams_uniform(l, FixedPointFormat::initial(), 1.0);
+    let served = ServedModel::freeze("mlp-native", &man, &params, &[], &qp).expect("freeze");
+    let registry = Arc::new(ModelRegistry::new());
+    registry.publish(served);
+
+    let path = tmpdir("serve").join("events.jsonl");
+    let sink = TelemetrySink::to_file(&path).expect("open sink");
+    let server = ServeServer::start(
+        Arc::clone(&registry),
+        Arc::new(QuantPool::new(2)),
+        ServeConfig {
+            max_batch: 1, // one dispatched batch per request: a known ordinal count
+            max_wait: Duration::from_millis(1),
+            queue_capacity: 64,
+            workers: 2,
+            telemetry: sink.clone(),
+            telemetry_every: 4,
+        },
+    );
+    let handle = server.handle();
+    let d: usize = man.input_shape.iter().product();
+    let x: Vec<f32> = (0..d).map(|i| (i as f32 * 0.013).cos()).collect();
+    for _ in 0..12 {
+        handle
+            .submit_blocking("mlp-native", x.clone(), 1)
+            .expect("submit")
+            .wait()
+            .expect("response");
+    }
+    let snap = server.shutdown();
+    assert_eq!(snap.samples, 12);
+    let errs = sink.sync();
+    assert!(errs.is_empty(), "{errs:?}");
+    drop(sink);
+
+    let log = telemetry::read_log(&path).expect("read log");
+    assert_eq!(log.skipped, 0);
+    let snaps: Vec<&Event> = log
+        .events
+        .iter()
+        .filter(|e| matches!(e, Event::ServeSnapshot { .. }))
+        .collect();
+    // 12 single-sample dispatches at every=4 -> ordinals 3, 7, 11
+    assert_eq!(snaps.len(), 3, "periodic cadence on team-wide ordinals");
+    for e in snaps {
+        if let Event::ServeSnapshot { stats } = e {
+            let samples = stats.get("samples").and_then(|v| v.as_f64()).unwrap();
+            assert!(samples >= 4.0 && samples <= 12.0, "snapshot mid-run: {samples}");
+            assert!(
+                stats.get("dropped_events").and_then(|v| v.as_f64()).is_some(),
+                "snapshot must export the sink's drop counter"
+            );
+        }
+    }
+}
